@@ -1,0 +1,39 @@
+//! Gene-expression analysis example (§V-C of the paper).
+//!
+//! Synthesizes an `individual × tissue × gene` tensor with planted
+//! expression programs, decomposes it with the compressed pipeline, and
+//! reports the paper's metrics (relative error, wall-clock) plus factor
+//! congruence against the planted programs.
+//!
+//! ```sh
+//! cargo run --release --example gene_analysis
+//! ```
+
+use exascale_tensor::apps::{run_gene_analysis, GeneConfig};
+use exascale_tensor::util::logging;
+
+fn main() -> anyhow::Result<()> {
+    logging::init();
+    let cfg = GeneConfig {
+        individuals: 120,
+        tissues: 30,
+        genes: 800,
+        programs: 5,
+        gene_sparsity: 0.05,
+        noise: 0.01,
+        seed: 1,
+        ..Default::default()
+    };
+    println!(
+        "gene tensor: {} individuals × {} tissues × {} genes, {} planted programs",
+        cfg.individuals, cfg.tissues, cfg.genes, cfg.programs
+    );
+    let report = run_gene_analysis(&cfg)?;
+    println!("replicas           : {}", report.replicas);
+    println!("relative error     : {:.3}%  (paper: 1.4%)", 100.0 * report.rel_error);
+    println!("factor congruence  : {:.4}", report.factor_congruence);
+    println!("decomposition time : {:.2} s (paper: 137 s at GTEx scale)", report.decompose_seconds);
+    assert!(report.rel_error < 0.10, "gene analysis failed to recover programs");
+    println!("gene_analysis OK");
+    Ok(())
+}

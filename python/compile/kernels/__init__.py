@@ -1,0 +1,13 @@
+"""Layer-1 Pallas kernels (build-time only; lowered to HLO by aot.py).
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin the rust
+runtime embeds cannot execute Mosaic custom-calls, so interpret-mode
+lowering (plain HLO ops) is the portable interchange.  Real-TPU performance
+is estimated analytically from the BlockSpecs — see DESIGN.md §Perf.
+"""
+
+from .mixed_matmul import compensated_dot, mixed_matmul
+from .mttkrp import mttkrp1
+from .ttm_chain import ttm_chain
+
+__all__ = ["compensated_dot", "mixed_matmul", "mttkrp1", "ttm_chain"]

@@ -1,0 +1,72 @@
+"""Pallas kernel: split-precision (compensated bf16) matmul — §IV-B.
+
+GPU tensor cores take FP16 operands and accumulate in FP32; the TPU MXU
+takes bf16 and accumulates in f32.  Feeding f32 data through either port
+loses mantissa bits; the paper's Eq. (5) recovers first-order accuracy by
+splitting each operand ``x = hi + lo`` (hi = 16-bit rounding, lo = residual)
+and summing the three first-order product terms.
+
+The kernel tiles ``(M, K) @ (K, N)`` over an ``(M/bm, N/bn, K/bk)`` grid:
+each step loads an ``(bm, bk)`` A-tile and ``(bk, bn)`` B-tile into VMEM,
+performs the three bf16 MXU dots, and accumulates into the f32 output tile
+that stays VMEM-resident across the k-steps — the standard MXU matmul
+schedule, with 3× the MMA issue rate of a plain bf16 matmul (the paper
+reports the same 3-term overhead for tensor cores).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def compensated_dot(a, b):
+    """Three-term compensated bf16 dot of f32 operands (used in-kernel)."""
+    a_hi16 = a.astype(jnp.bfloat16)
+    b_hi16 = b.astype(jnp.bfloat16)
+    a_hi = a_hi16.astype(jnp.float32)
+    b_hi = b_hi16.astype(jnp.float32)
+    a_lo = (a - a_hi).astype(jnp.bfloat16)
+    b_lo = (b - b_hi).astype(jnp.bfloat16)
+
+    def mxu(x, y):
+        return jax.lax.dot_general(
+            x, y, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    return mxu(a_hi16, b_hi16) + mxu(a_hi16, b_lo) + mxu(a_lo, b_hi16)
+
+
+def _kernel(a_ref, b_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += compensated_dot(a_ref[...], b_ref[...])
+
+
+def mixed_matmul(a, b, *, bm=None, bn=None, bk=None):
+    """Compensated bf16 matmul ``A (M,K) @ B (K,N) -> f32 (M,N)``.
+
+    Tile sizes default to full dims (single program); pass MXU-shaped tiles
+    (multiples of 128 on real hardware) to exercise the blocked schedule.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims {k} vs {k2}"
+    bm = bm or m
+    bn = bn or n
+    bk = bk or k
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+
+    return pl.pallas_call(
+        _kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,81 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every kernel in this package has its semantics pinned by a function here;
+``python/tests`` asserts ``allclose`` between kernel and oracle across a
+hypothesis-driven sweep of shapes.  The rust crate's ``mixed``/``compress``
+modules implement the same math (tested in rust against small closed forms),
+so the chain rust ⇄ jnp ⇄ pallas is pinned at every joint.
+"""
+
+import jax.numpy as jnp
+
+
+def comp_ref(t, u, v, w):
+    """Eq. (3): ``Y = X x1 U x2 V x3 W`` — direct einsum."""
+    return jnp.einsum("ijk,li,mj,nk->lmn", t, u, v, w)
+
+
+def ttm1_ref(t, u):
+    """Mode-1 tensor-times-matrix."""
+    return jnp.einsum("ijk,li->ljk", t, u)
+
+
+def khatri_rao_ref(slow, fast):
+    """Column-wise Kronecker ``slow ⊙ fast``; row index = fast + slow*J.
+
+    Matches the rust convention in ``linalg::products``: the *first*
+    argument varies slowest.
+    """
+    k, r = slow.shape
+    j, r2 = fast.shape
+    assert r == r2
+    return (slow[:, None, :] * fast[None, :, :]).reshape(k * j, r)
+
+
+def mttkrp1_ref(y, b, c):
+    """Mode-1 MTTKRP: ``Y_(1) · (C ⊙ B)``."""
+    return jnp.einsum("ijk,jr,kr->ir", y, b, c)
+
+
+def split_bf16(x):
+    """First-order bf16 split: ``x = hi + lo`` with hi = bf16(x)."""
+    hi = x.astype(jnp.bfloat16).astype(jnp.float32)
+    lo = x - hi
+    return hi, lo
+
+
+def mixed_matmul_ref(a, b):
+    """Eq. (5) restricted to two operands: compensated bf16 matmul.
+
+    ``A·B ≈ hi(A)hi(B) + hi(A)lo(B) + lo(A)hi(B)`` with every operand fed
+    through bf16 (as the MXU port would) and f32 accumulation.
+    """
+    a_hi, a_lo = split_bf16(a)
+    b_hi, b_lo = split_bf16(b)
+    # Residuals are re-quantized: hardware feeds them through the same port.
+    a_lo = a_lo.astype(jnp.bfloat16).astype(jnp.float32)
+    b_lo = b_lo.astype(jnp.bfloat16).astype(jnp.float32)
+
+    def f(x, y):
+        return jnp.dot(
+            x.astype(jnp.bfloat16),
+            y.astype(jnp.bfloat16),
+            preferred_element_type=jnp.float32,
+        )
+
+    return f(a_hi, b_hi) + f(a_hi, b_lo) + f(a_lo, b_hi)
+
+
+def als_sweep_ref(y, b, c, ridge=1e-8):
+    """One full ALS sweep (Alg. 1 line 3) on a dense proxy tensor."""
+
+    def solve(mttkrp, g1, g2):
+        gram = (g1.T @ g1) * (g2.T @ g2)
+        damp = ridge * jnp.trace(gram) / gram.shape[0]
+        gram = gram + damp * jnp.eye(gram.shape[0], dtype=gram.dtype)
+        return jnp.linalg.solve(gram, mttkrp.T).T
+
+    a = solve(jnp.einsum("ijk,jr,kr->ir", y, b, c), c, b)
+    b = solve(jnp.einsum("ijk,ir,kr->jr", y, a, c), c, a)
+    c = solve(jnp.einsum("ijk,ir,jr->kr", y, a, b), b, a)
+    return a, b, c

@@ -1,0 +1,97 @@
+"""Pallas kernel: blocked TTM chain — the compression hot-spot (Fig. 2b).
+
+Computes ``Y = T x1 U x2 V x3 W`` for one tensor block.  The grid streams
+the block along its third (k) mode: each grid step loads a ``(d0, d1, tk)``
+slab of ``T`` and the matching ``(n, tk)`` slice of ``W`` from HBM into
+VMEM (expressed by the BlockSpec index maps), contracts modes 1 and 2 fully
+and mode 3 partially, and accumulates into the output, which stays resident
+in VMEM across steps.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper tiles the
+matricized block over CUDA threadblocks feeding tensor-core MMAs; here the
+k-mode streaming schedule is the BlockSpec, and the three contractions are
+``dot_general``s that map onto the 128×128 MXU.  ``interpret=True`` because
+the CPU PJRT plugin cannot execute Mosaic custom-calls; the *structure*
+(VMEM working set, MXU-shaped contractions) is what carries to real TPUs.
+
+VMEM working set per step (f32): ``d0·d1·tk + n·tk + l·d1·tk(interm) +
+l·m·n(acc)`` — e.g. d=100, tk=25, l=m=n=50: ~1.6 MB, well under 16 MB.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(t_ref, u_ref, v_ref, w_ref, o_ref, *, mixed):
+    t = t_ref[...]  # (d0, d1, tk)
+    u = u_ref[...]  # (l, d0)
+    v = v_ref[...]  # (m, d1)
+    w = w_ref[...]  # (n, tk)
+
+    if mixed:
+        from .mixed_matmul import compensated_dot
+
+        dot = compensated_dot
+    else:
+        def dot(x, y):
+            return jax.lax.dot_general(
+                x, y, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+
+    d0, d1, tk = t.shape
+    l = u.shape[0]
+    m = v.shape[0]
+    n = w.shape[0]
+
+    # mode 1: (l, d0) @ (d0, d1*tk) -> (l, d1, tk)
+    y1 = dot(u, t.reshape(d0, d1 * tk)).reshape(l, d1, tk)
+    # mode 2: (m, d1) @ (d1, l*tk) -> (m, l, tk) -> (l, m, tk)
+    y1t = jnp.transpose(y1, (1, 0, 2)).reshape(d1, l * tk)
+    y2 = dot(v, y1t).reshape(m, l, tk).transpose(1, 0, 2)
+    # mode 3 (partial over this k-slab): (n, tk) @ (tk, l*m) -> (l, m, n)
+    y2t = jnp.transpose(y2, (2, 0, 1)).reshape(tk, l * m)
+    y3 = dot(w, y2t).reshape(n, l, m).transpose(1, 2, 0)
+
+    # Accumulate across the k-grid.
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += y3
+
+
+def ttm_chain(t, u, v, w, *, k_tile=None, mixed=False):
+    """``Comp(T, U, V, W)`` as a Pallas call.
+
+    Args:
+      t: ``(d0, d1, d2)`` f32 block.
+      u, v, w: ``(l, d0)``, ``(m, d1)``, ``(n, d2)`` f32 maps.
+      k_tile: k-mode slab size (must divide d2); default whole d2.
+      mixed: use the compensated bf16 dot (§IV-B) for every contraction.
+    """
+    d0, d1, d2 = t.shape
+    l, m, n = u.shape[0], v.shape[0], w.shape[0]
+    assert u.shape[1] == d0 and v.shape[1] == d1 and w.shape[1] == d2
+    if k_tile is None:
+        k_tile = d2
+    assert d2 % k_tile == 0, f"k_tile {k_tile} must divide d2 {d2}"
+    steps = d2 // k_tile
+
+    return pl.pallas_call(
+        functools.partial(_kernel, mixed=mixed),
+        grid=(steps,),
+        in_specs=[
+            # Stream T and W along k; U, V stay resident.
+            pl.BlockSpec((d0, d1, k_tile), lambda s: (0, 0, s)),
+            pl.BlockSpec((l, d0), lambda s: (0, 0)),
+            pl.BlockSpec((m, d1), lambda s: (0, 0)),
+            pl.BlockSpec((n, k_tile), lambda s: (0, s)),
+        ],
+        out_specs=pl.BlockSpec((l, m, n), lambda s: (0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((l, m, n), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(t, u, v, w)

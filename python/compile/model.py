@@ -1,0 +1,82 @@
+"""Layer-2 JAX graphs — the functions that get AOT-lowered to artifacts.
+
+Each public function here is a pure jax function over fixed-shape f32
+arrays, calling the Layer-1 Pallas kernels for its compute hot-spots.  It
+is lowered ONCE by ``aot.py``; the rust runtime executes the resulting HLO
+— Python never runs on the request path.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import mixed_matmul as _mixed_matmul_kernel
+from .kernels import mttkrp1, ttm_chain
+
+
+def smoke_add(x, y):
+    """Tiny artifact used by the rust runtime's self-test."""
+    return (x + y,)
+
+
+def compress_block(t, u, v, w, *, k_tile=None, mixed=False):
+    """One block's contribution to a proxy tensor (Eq. 3 / Fig. 2b).
+
+    Inputs: ``t (d,d,d)``, ``u/v/w (L|M|N, d)``.  Output: ``(L, M, N)``.
+    """
+    return (ttm_chain(t, u, v, w, k_tile=k_tile, mixed=mixed),)
+
+
+def mixed_matmul(a, b, *, bm=None, bn=None, bk=None):
+    """Compensated bf16 matmul artifact (§IV-B) for the kernel microbench."""
+    return (_mixed_matmul_kernel(a, b, bm=bm, bn=bn, bk=bk),)
+
+
+def _solve_spd_unrolled(g, rhs):
+    """Gauss-Jordan solve of an SPD ``R×R`` system, unrolled over R.
+
+    ``jnp.linalg.solve`` lowers to a LAPACK *typed-FFI custom-call* that the
+    rust runtime's xla_extension 0.5.1 cannot load, so the artifact path
+    needs a solve made of plain HLO ops.  R ≤ 8 here, and the ridge-damped
+    Gram is diagonally dominant enough that pivoting is unnecessary.
+    """
+    r = g.shape[0]
+    aug = jnp.concatenate([g, rhs], axis=1)
+    for i in range(r):
+        row = aug[i] / aug[i, i]
+        aug = aug.at[i].set(row)
+        factors = aug[:, i].at[i].set(0.0)
+        aug = aug - factors[:, None] * row[None, :]
+    return aug[:, r:]
+
+
+def _gram_solve(mttkrp, g1, g2, ridge):
+    """Solve ``F · ((G1ᵀG1)*(G2ᵀG2)) = MTTKRP`` for F (Alg. 1 line 3)."""
+    gram = (g1.T @ g1) * (g2.T @ g2)
+    # Relative ridge + tiny absolute floor so an all-zero input (e.g. a
+    # padded edge proxy) yields zeros instead of NaNs.
+    damp = ridge * jnp.trace(gram) / gram.shape[0] + 1e-12
+    gram = gram + damp * jnp.eye(gram.shape[0], dtype=gram.dtype)
+    return _solve_spd_unrolled(gram, mttkrp.T).T
+
+
+def als_sweep(y, b, c, *, ridge=1e-8, k_tile=None):
+    """One fused ALS sweep over all three modes (Alg. 1 line 3).
+
+    Takes only ``(y, b, c)``: the sweep recomputes ``a`` first, so an ``a``
+    input would be dead code (XLA prunes the parameter, and then the AOT
+    artifact's buffer count no longer matches the manifest).  The three
+    MTTKRPs run through the Pallas kernel (mode 2/3 via transposes of ``y``
+    — free at the HLO level).  Returns the updated ``(a, b, c)``.
+    """
+    a = _gram_solve(mttkrp1(y, b, c, k_tile=k_tile), c, b, ridge)
+    yt2 = jnp.transpose(y, (1, 0, 2))  # J × I × K
+    b = _gram_solve(mttkrp1(yt2, a, c, k_tile=k_tile), c, a, ridge)
+    yt3 = jnp.transpose(y, (2, 0, 1))  # K × I × J
+    c = _gram_solve(mttkrp1(yt3, a, b, k_tile=None), b, a, ridge)
+    return a, b, c
+
+
+def reconstruct_mse(y, a, b, c):
+    """``mean((Y − [[A,B,C]])²)`` for a proxy-sized tensor."""
+    model = jnp.einsum("ir,jr,kr->ijk", a, b, c)
+    d = y - model
+    return (jnp.mean(d * d),)

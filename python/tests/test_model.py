@@ -1,0 +1,78 @@
+"""L2 model graph tests: als_sweep convergence, reconstruct_mse, shapes."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), dtype=jnp.float32)
+
+
+def planted(rng, dims, r):
+    a, b, c = rand(rng, dims[0], r), rand(rng, dims[1], r), rand(rng, dims[2], r)
+    return jnp.einsum("ir,jr,kr->ijk", a, b, c), (a, b, c)
+
+
+def test_als_sweep_matches_ref_one_step():
+    rng = np.random.default_rng(10)
+    y, _ = planted(rng, (6, 5, 4), 2)
+    b0, c0 = rand(rng, 5, 2), rand(rng, 4, 2)
+    got = model.als_sweep(y, b0, c0)
+    want = ref.als_sweep_ref(y, b0, c0)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=5e-3, atol=5e-3)
+
+
+def test_als_sweep_converges_on_planted():
+    rng = np.random.default_rng(11)
+    y, _ = planted(rng, (10, 10, 10), 3)
+    b, c = rand(rng, 10, 3), rand(rng, 10, 3)
+    for _ in range(60):
+        a, b, c = model.als_sweep(y, b, c)
+    rec = jnp.einsum("ir,jr,kr->ijk", a, b, c)
+    err = float(jnp.linalg.norm(rec - y) / jnp.linalg.norm(y))
+    assert err < 1e-3, err
+
+
+def test_als_sweep_monotone_fit():
+    rng = np.random.default_rng(12)
+    y, _ = planted(rng, (8, 8, 8), 2)
+    b, c = rand(rng, 8, 2), rand(rng, 8, 2)
+    prev = float("inf")
+    for i in range(15):
+        a, b, c = model.als_sweep(y, b, c)
+        resid = float(jnp.linalg.norm(y - jnp.einsum("ir,jr,kr->ijk", a, b, c)))
+        assert resid < prev + 1e-3, (i, resid, prev)
+        prev = resid
+
+
+def test_reconstruct_mse_zero_for_exact():
+    rng = np.random.default_rng(13)
+    y, (a, b, c) = planted(rng, (6, 6, 6), 2)
+    (mse,) = model.reconstruct_mse(y, a, b, c)
+    assert float(mse) < 1e-10
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    l=st.integers(2, 8),
+    r=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_compress_block_shapes(l, r, seed):
+    rng = np.random.default_rng(seed)
+    d = 2 * l
+    t = rand(rng, d, d, d)
+    u, v, w = rand(rng, l, d), rand(rng, l, d), rand(rng, l, d)
+    (y,) = model.compress_block(t, u, v, w)
+    assert y.shape == (l, l, l)
+    np.testing.assert_allclose(y, ref.comp_ref(t, u, v, w), rtol=3e-4, atol=3e-4)
+
+
+def test_smoke_add():
+    (out,) = model.smoke_add(jnp.ones(4), 2 * jnp.ones(4))
+    np.testing.assert_allclose(out, 3 * np.ones(4))

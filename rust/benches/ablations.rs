@@ -1,0 +1,171 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! * anchor rows `S`       — alignment quality vs S (Alg. 2 line 1);
+//! * replica count `P`     — recovery error vs the `(I−S)/(L−S)` bound;
+//! * mixed precision       — error cost of §IV-B on/naive/off;
+//! * block size `d`        — compression throughput vs block size (Fig. 2).
+
+use exascale_tensor::bench_harness::{bench_once, Report};
+use exascale_tensor::compress::{compress_source, ReplicaMaps, RustCompressor};
+use exascale_tensor::coordinator::{MemoryPlanner, Pipeline, PipelineConfig};
+use exascale_tensor::cp::{model_congruence, CpModel};
+use exascale_tensor::mixed::MixedPrecision;
+use exascale_tensor::tensor::{LowRankGenerator, TensorSource};
+use exascale_tensor::util::threadpool::ThreadPool;
+
+const SIZE: usize = 96;
+const RANK: usize = 4;
+
+fn run_with(cfg: PipelineConfig, gen: &LowRankGenerator) -> (f64, f64, f64) {
+    let mut pipe = Pipeline::new(cfg);
+    let (meas, result) = bench_once("run", || pipe.run(gen).expect("run"));
+    let (a, b, c) = gen.factors.clone();
+    let truth = CpModel::new(a, b, c);
+    (
+        meas.mean_s,
+        result.diagnostics.rel_error,
+        model_congruence(&truth, &result.model),
+    )
+}
+
+fn main() {
+    let gen = LowRankGenerator::new(SIZE, SIZE, SIZE, RANK, 777);
+
+    // ── S sweep ──
+    let mut rep = Report::new("ablation_anchors", "anchor rows S vs recovery quality");
+    for s in [RANK, RANK + 2, RANK + 6] {
+        let cfg = PipelineConfig::builder()
+            .reduced_dims(16, 16, 16)
+            .rank(RANK)
+            .anchor_rows(s)
+            .block([32, 32, 32])
+            .seed(1)
+            .build()
+            .expect("cfg");
+        let (t, err, cong) = run_with(cfg, &gen);
+        println!("S={s:<3} time {t:.2}s rel_err {err:.2e} congruence {cong:.4}");
+        rep.push(
+            exascale_tensor::bench_harness::Measurement {
+                name: format!("S={s}"),
+                mean_s: t,
+                p50_s: t,
+                p95_s: t,
+                iters: 1,
+                extra: vec![("rel_error".into(), err), ("congruence".into(), cong)],
+            },
+        );
+    }
+    rep.finish();
+
+    // ── P sweep (relative to the identifiability bound) ──
+    let mut rep = Report::new("ablation_replicas", "replica count P vs recovery error");
+    let min_p = MemoryPlanner::min_replicas_anchored([SIZE; 3], [16; 3], RANK + 2);
+    for p in [min_p, min_p + 2, min_p + 8] {
+        let cfg = PipelineConfig::builder()
+            .reduced_dims(16, 16, 16)
+            .rank(RANK)
+            .replicas(p)
+            .block([32, 32, 32])
+            .seed(2)
+            .build()
+            .expect("cfg");
+        let (t, err, cong) = run_with(cfg, &gen);
+        println!("P={p:<3} (min {min_p}) time {t:.2}s rel_err {err:.2e} congruence {cong:.4}");
+        rep.push(exascale_tensor::bench_harness::Measurement {
+            name: format!("P={p}"),
+            mean_s: t,
+            p50_s: t,
+            p95_s: t,
+            iters: 1,
+            extra: vec![("rel_error".into(), err), ("congruence".into(), cong)],
+        });
+    }
+    rep.finish();
+
+    // ── mixed precision arms (§IV-B): full f32, compensated bf16 split ──
+    let mut rep = Report::new("ablation_mixed", "mixed-precision error cost (§IV-B)");
+    for (name, mixed) in [("f32", false), ("bf16-split", true)] {
+        let cfg = PipelineConfig::builder()
+            .reduced_dims(16, 16, 16)
+            .rank(RANK)
+            .block([32, 32, 32])
+            .mixed_precision(mixed)
+            .seed(3)
+            .build()
+            .expect("cfg");
+        let (t, err, cong) = run_with(cfg, &gen);
+        println!("{name:<10} time {t:.2}s rel_err {err:.2e} congruence {cong:.4}");
+        rep.push(exascale_tensor::bench_harness::Measurement {
+            name: name.to_string(),
+            mean_s: t,
+            p50_s: t,
+            p95_s: t,
+            iters: 1,
+            extra: vec![("rel_error".into(), err), ("congruence".into(), cong)],
+        });
+    }
+    rep.finish();
+
+    // ── CP vs Tucker: reconstruction-per-parameter on the same tensor ──
+    let mut rep = Report::new("ablation_cp_vs_tucker", "CP (ours) vs Tucker (HOSVD/HOOI) baseline");
+    {
+        use exascale_tensor::cp::{hooi, hosvd};
+        let small = LowRankGenerator::new(48, 48, 48, RANK, 778).with_noise(1e-3);
+        let dense = small.corner(48); // full materialization at this size
+        let cfg = PipelineConfig::builder()
+            .reduced_dims(12, 12, 12)
+            .rank(RANK)
+            .block([24, 24, 24])
+            .seed(5)
+            .build()
+            .expect("cfg");
+        let mut pipe = Pipeline::new(cfg);
+        let (meas, res) = bench_once("cp-compressed", || pipe.run(&small).expect("run"));
+        let cp_params = RANK * (48 * 3);
+        println!(
+            "cp-compressed    {:.2}s rel_err {:.2e} params {cp_params}",
+            meas.mean_s, res.diagnostics.rel_error
+        );
+        rep.push(
+            meas.with_extra("rel_error", res.diagnostics.rel_error)
+                .with_extra("params", cp_params as f64),
+        );
+        for (name, ranks, iters) in [("tucker-hosvd", [4usize, 4, 4], 0usize), ("tucker-hooi", [4, 4, 4], 2)] {
+            let (meas, model) = bench_once(name, || {
+                if iters == 0 {
+                    hosvd(&dense, ranks)
+                } else {
+                    hooi(&dense, ranks, iters).expect("hooi")
+                }
+            });
+            let err = model.to_tensor().rel_error(&dense);
+            println!(
+                "{name:<16} {:.2}s rel_err {err:.2e} params {}",
+                meas.mean_s,
+                model.params()
+            );
+            rep.push(
+                meas.with_extra("rel_error", err)
+                    .with_extra("params", model.params() as f64),
+            );
+        }
+    }
+    rep.finish();
+
+    // ── block size d: compression stage throughput only ──
+    let mut rep = Report::new("ablation_blocks", "block size d vs compression throughput");
+    let maps = ReplicaMaps::generate([SIZE; 3], [16; 3], 8, 6, 4);
+    let pool = ThreadPool::default_sized();
+    let comp = RustCompressor {
+        precision: MixedPrecision::Full,
+    };
+    for d in [16usize, 32, 48, 96] {
+        let (meas, _) = bench_once(&format!("d={d}"), || {
+            compress_source(&gen, &maps, [d, d, d], &comp, &pool)
+        });
+        let gflops = 3.0 * (SIZE as f64).powi(3) * 16.0 * 8.0 / meas.mean_s / 1e9;
+        println!("d={d:<3} compress {:.3}s (~{gflops:.2} GF/s effective)", meas.mean_s);
+        rep.push(meas.with_extra("gflops", gflops));
+    }
+    rep.finish();
+}

@@ -1,0 +1,89 @@
+//! Figures 5 & 6 — dense tensor decomposition: time (Fig. 5) and MSE
+//! (Fig. 6) for the three arms of the paper:
+//!
+//! * **Baseline**        — the pipeline single-threaded in pure rust;
+//! * **Parallel on CPU** — the pipeline on the worker pool (the MPI arm);
+//! * **Parallel on GPU** — worker pool + AOT XLA/Pallas artifacts (the
+//!   tensor-core arm, MXU-adapted).
+//!
+//! Sizes are scaled from the paper's 1000–10000 (L=M=N=50) to 96–240
+//! (L=M=N=24) so the sweep completes in minutes on CPU-interpret Pallas;
+//! the *shape* — parallel ≈ 2×, XLA arm fastest, MSE flat and tiny — is
+//! the reproduction target (see EXPERIMENTS.md).
+
+use exascale_tensor::bench_harness::{bench_once, speedup, Report};
+use exascale_tensor::coordinator::{Backend, Pipeline, PipelineConfig};
+use exascale_tensor::runtime::{artifacts_dir, XlaAlsDecomposer, XlaCompressor, XlaRuntime};
+use exascale_tensor::tensor::LowRankGenerator;
+
+const RANK: usize = 5;
+const REDUCED: usize = 24;
+const BLOCK: usize = 60;
+
+fn pipeline(backend: Backend, rt: Option<&XlaRuntime>) -> Pipeline {
+    let cfg = PipelineConfig::builder()
+        .reduced_dims(REDUCED, REDUCED, REDUCED)
+        .rank(RANK)
+        .block([BLOCK, BLOCK, BLOCK])
+        .backend(backend)
+        .als(80, 1e-9)
+        .seed(17)
+        .build()
+        .expect("config");
+    let mut pipe = Pipeline::new(cfg);
+    if let Some(rt) = rt {
+        pipe = pipe
+            .with_compressor(Box::new(
+                XlaCompressor::new(rt.clone(), [REDUCED; 3], BLOCK).expect("compressor artifact"),
+            ))
+            .with_decomposer(Box::new(
+                XlaAlsDecomposer::new(rt.clone(), [REDUCED; 3], RANK, 80, 1e-9)
+                    .expect("als artifact"),
+            ));
+    }
+    pipe
+}
+
+fn main() {
+    let sizes = [96usize, 144, 192, 240];
+    let rt = XlaRuntime::load(artifacts_dir(), 2).ok();
+    if rt.is_none() {
+        eprintln!("WARNING: artifacts missing; GPU arm will be skipped (run `make artifacts`)");
+    }
+
+    let mut fig5 = Report::new("fig5_dense_time", "dense decomposition time by arm");
+    let mut fig6 = Report::new("fig6_dense_mse", "dense reconstruction MSE by arm");
+
+    for &size in &sizes {
+        let gen = LowRankGenerator::new(size, size, size, RANK, 1000 + size as u64);
+        let mut arms: Vec<(&str, Backend, Option<&XlaRuntime>)> = vec![
+            ("baseline", Backend::RustSequential, None),
+            ("parallel-cpu", Backend::RustParallel, None),
+        ];
+        if let Some(rt) = rt.as_ref() {
+            arms.push(("parallel-gpu(xla)", Backend::Xla, Some(rt)));
+        }
+        let mut base_time = None;
+        for (name, backend, rt) in arms {
+            let mut pipe = pipeline(backend, rt);
+            let label = format!("I={size} {name}");
+            let (meas, result) = bench_once(&label, || pipe.run(&gen).expect("run"));
+            let t = meas.mean_s;
+            if name == "baseline" {
+                base_time = Some(t);
+            }
+            let sp = base_time.map(|b| speedup(b, t)).unwrap_or(1.0);
+            println!(
+                "{label:<28} {t:>8.2}s  speedup {sp:>5.2}x  relerr {:.2e}",
+                result.diagnostics.rel_error
+            );
+            fig5.push(meas.clone().with_extra("speedup", sp));
+            fig6.push(meas.with_extra("mse", result.diagnostics.sampled_mse).with_extra(
+                "rel_error",
+                result.diagnostics.rel_error,
+            ));
+        }
+    }
+    fig5.finish();
+    fig6.finish();
+}

@@ -1,0 +1,87 @@
+//! Figures 7 & 8 — "exascale" decomposition across a sparsity sweep: time
+//! (Fig. 7) and MSE (Fig. 8), baseline vs the optimized compressed-sensing
+//! path (§IV-D).
+//!
+//! The paper sweeps the nonzeros of exascale tensors; we fix the (virtual)
+//! size at 240³ and sweep nnz per factor column — the sensing path's
+//! advantage (sparse stage-1 maps + one shared first compression) grows as
+//! the tensor gets sparser, which is the shape to reproduce.
+//!
+//! * **baseline** — standard Alg. 2 pipeline, single-threaded.
+//! * **sensing**  — two-stage compressed-sensing pipeline on the pool.
+
+use exascale_tensor::bench_harness::{bench_once, speedup, Report};
+use exascale_tensor::coordinator::{Backend, Pipeline, PipelineConfig, SensingConfig};
+use exascale_tensor::tensor::SparseLowRankGenerator;
+
+const SIZE: usize = 240;
+const RANK: usize = 3;
+
+fn main() {
+    let sparsities = [8usize, 16, 32];
+    let mut fig7 = Report::new("fig7_exascale_time", "sensing vs baseline time (sparsity sweep)");
+    let mut fig8 = Report::new("fig8_exascale_mse", "sensing vs baseline MSE (sparsity sweep)");
+
+    for &nnz in &sparsities {
+        let gen = SparseLowRankGenerator::new(SIZE, SIZE, SIZE, RANK, nnz, 3000 + nnz as u64);
+
+        // Baseline: plain pipeline, sequential.
+        let cfg = PipelineConfig::builder()
+            .reduced_dims(20, 20, 20)
+            .rank(RANK)
+            .block([60, 60, 60])
+            .backend(Backend::RustSequential)
+            .als(60, 1e-9)
+            .seed(31)
+            .build()
+            .expect("config");
+        let mut pipe = Pipeline::new(cfg);
+        let (base_meas, base_result) = bench_once(&format!("nnz={nnz} baseline"), || {
+            pipe.run(&gen).expect("baseline")
+        });
+        println!(
+            "nnz={nnz:<3} baseline {:>8.2}s relerr {:.2e}",
+            base_meas.mean_s, base_result.diagnostics.rel_error
+        );
+
+        // Optimized: compressed sensing + pool.
+        let cfg = PipelineConfig::builder()
+            .reduced_dims(20, 20, 20)
+            .rank(RANK)
+            .block([60, 60, 60])
+            .backend(Backend::RustParallel)
+            .sensing(SensingConfig {
+                alpha: 2.2,
+                nnz_per_col: 16,
+                lambda: 0.02,
+            })
+            .als(60, 1e-9)
+            .seed(31)
+            .build()
+            .expect("config");
+        let mut pipe = Pipeline::new(cfg);
+        let (opt_meas, opt_result) = bench_once(&format!("nnz={nnz} sensing"), || {
+            pipe.run(&gen).expect("sensing")
+        });
+        let sp = speedup(base_meas.mean_s, opt_meas.mean_s);
+        println!(
+            "nnz={nnz:<3} sensing  {:>8.2}s relerr {:.2e} speedup {sp:.2}x",
+            opt_meas.mean_s, opt_result.diagnostics.rel_error
+        );
+
+        fig7.push(base_meas.clone());
+        fig7.push(opt_meas.clone().with_extra("speedup", sp));
+        fig8.push(
+            base_meas
+                .with_extra("mse", base_result.diagnostics.sampled_mse)
+                .with_extra("rel_error", base_result.diagnostics.rel_error),
+        );
+        fig8.push(
+            opt_meas
+                .with_extra("mse", opt_result.diagnostics.sampled_mse)
+                .with_extra("rel_error", opt_result.diagnostics.rel_error),
+        );
+    }
+    fig7.finish();
+    fig8.finish();
+}

@@ -1,0 +1,44 @@
+//! Gene analysis (§V-C second application): relative error + wall-clock of
+//! the compressed decomposition of the synthetic individual×tissue×gene
+//! tensor, at two scales.
+
+use exascale_tensor::apps::{run_gene_analysis, GeneConfig};
+use exascale_tensor::bench_harness::{Measurement, Report};
+
+fn main() {
+    let mut report = Report::new("gene_analysis", "gene tensor decomposition (§V-C)");
+    let cases = [
+        ("small", GeneConfig {
+            individuals: 60,
+            tissues: 16,
+            genes: 200,
+            programs: 3,
+            ..Default::default()
+        }),
+        ("default", GeneConfig::default()),
+    ];
+    for (name, cfg) in cases {
+        let r = run_gene_analysis(&cfg).expect("gene analysis");
+        println!(
+            "{name:<8} dims {:?} P={} rel_err {:.3}% congruence {:.4} time {:.2}s",
+            r.dims,
+            r.replicas,
+            100.0 * r.rel_error,
+            r.factor_congruence,
+            r.decompose_seconds
+        );
+        report.push(Measurement {
+            name: format!("{name} {:?}", r.dims),
+            mean_s: r.decompose_seconds,
+            p50_s: r.decompose_seconds,
+            p95_s: r.decompose_seconds,
+            iters: 1,
+            extra: vec![
+                ("rel_error_pct".into(), 100.0 * r.rel_error),
+                ("congruence".into(), r.factor_congruence),
+                ("replicas".into(), r.replicas as f64),
+            ],
+        });
+    }
+    report.finish();
+}

@@ -1,0 +1,87 @@
+//! Kernel microbenchmarks: the L1/L3 hot paths in isolation.
+//!
+//! * blocked rust GEMM vs naive (validates the §Perf cache-blocking);
+//! * mixed-precision emulation cost (split + 3 GEMMs vs 1);
+//! * TTM-chain block compression: rust vs the AOT Pallas artifact;
+//! * single `als_sweep` artifact execution latency (the request-path unit).
+
+use exascale_tensor::bench_harness::{bench, Report};
+use exascale_tensor::compress::comp_dense;
+use exascale_tensor::linalg::{matmul, Matrix, Trans};
+use exascale_tensor::mixed::{matmul_mixed, MixedPrecision};
+use exascale_tensor::runtime::{artifacts_dir, HostTensor, XlaRuntime};
+use exascale_tensor::tensor::DenseTensor;
+use exascale_tensor::util::rng::Xoshiro256;
+
+fn main() {
+    let mut rng = Xoshiro256::seed_from_u64(1234);
+    let mut rep = Report::new("kernel_micro", "kernel microbenchmarks");
+
+    // ── GEMM 256³ ──
+    let a = Matrix::random_normal(256, 256, &mut rng);
+    let b = Matrix::random_normal(256, 256, &mut rng);
+    let m = bench("gemm_256_blocked", 5, 1.0, || {
+        matmul(&a, Trans::No, &b, Trans::No)
+    });
+    let gflops = 2.0 * 256f64.powi(3) / m.mean_s / 1e9;
+    println!("gemm 256³ blocked: {:.3} ms ({gflops:.2} GF/s)", m.mean_s * 1e3);
+    rep.push(m.with_extra("gflops", gflops));
+
+    // ── mixed-precision emulation ──
+    let m = bench("mixed_matmul_256_rust", 5, 1.0, || {
+        matmul_mixed(&a, &b, MixedPrecision::Bf16)
+    });
+    println!("mixed (bf16 split) rust: {:.3} ms", m.mean_s * 1e3);
+    rep.push(m);
+
+    // ── TTM block compression, rust ──
+    let t = DenseTensor::random_normal([32, 32, 32], &mut rng);
+    let u = Matrix::random_normal(16, 32, &mut rng);
+    let v = Matrix::random_normal(16, 32, &mut rng);
+    let w = Matrix::random_normal(16, 32, &mut rng);
+    let m = bench("compress_block_rust_d32", 10, 1.0, || {
+        comp_dense(&t, &u, &v, &w, MixedPrecision::Full)
+    });
+    println!("compress block d=32 rust: {:.3} ms", m.mean_s * 1e3);
+    rep.push(m);
+
+    // ── XLA artifacts (if built) ──
+    match XlaRuntime::load(artifacts_dir(), 1) {
+        Ok(rt) => {
+            let th = HostTensor::from_tensor(&t);
+            let uh = HostTensor::from_matrix(&u);
+            let vh = HostTensor::from_matrix(&v);
+            let wh = HostTensor::from_matrix(&w);
+            let m = bench("compress_block_xla_d32", 10, 2.0, || {
+                rt.execute(
+                    "compress_block_l16m16n16_d32",
+                    vec![th.clone(), uh.clone(), vh.clone(), wh.clone()],
+                )
+                .expect("xla compress")
+            });
+            println!("compress block d=32 xla (interpret): {:.3} ms", m.mean_s * 1e3);
+            rep.push(m);
+
+            let y = HostTensor::from_tensor(&DenseTensor::random_normal([16, 16, 16], &mut rng));
+            let fb = HostTensor::from_matrix(&Matrix::random_normal(16, 4, &mut rng));
+            let fc = HostTensor::from_matrix(&Matrix::random_normal(16, 4, &mut rng));
+            let m = bench("als_sweep_xla_l16_r4", 10, 2.0, || {
+                rt.execute("als_sweep_l16m16n16_r4", vec![y.clone(), fb.clone(), fc.clone()])
+                    .expect("xla als")
+            });
+            println!("als sweep l=16 xla: {:.3} ms", m.mean_s * 1e3);
+            rep.push(m);
+
+            let ah = HostTensor::from_matrix(&a);
+            let bh = HostTensor::from_matrix(&b);
+            let m = bench("mixed_matmul_256_xla", 5, 2.0, || {
+                rt.execute("mixed_matmul_256", vec![ah.clone(), bh.clone()])
+                    .expect("xla mixed")
+            });
+            println!("mixed matmul 256 xla (pallas interpret): {:.3} ms", m.mean_s * 1e3);
+            rep.push(m);
+        }
+        Err(e) => eprintln!("(xla arms skipped: {e})"),
+    }
+    rep.finish();
+}

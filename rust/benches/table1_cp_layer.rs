@@ -1,0 +1,67 @@
+//! Table I — CP tensor layer on the CNN: classification accuracy after
+//! fine-tuning and decomposition time for the three CP backends
+//! (Matlab-style hosvd-ALS, TensorLy-style random-ALS, ours).
+
+use exascale_tensor::apps::nn::{train, Network, SyntheticImages, TrainConfig};
+use exascale_tensor::apps::{run_cp_layer_experiment, CpBackend};
+use exascale_tensor::bench_harness::Report;
+use exascale_tensor::bench_harness::Measurement;
+
+fn clone_net(reference: &Network, seed: u64) -> Network {
+    let mut net = Network::new(18, 8, 16, 32, 3, seed);
+    net.conv1.weight = reference.conv1.weight.clone();
+    net.conv1.bias = reference.conv1.bias.clone();
+    net.conv2.weight = reference.conv2.weight.clone();
+    net.conv2.bias = reference.conv2.bias.clone();
+    net.fc1.weight = reference.fc1.weight.clone();
+    net.fc1.bias = reference.fc1.bias.clone();
+    net.fc2.weight = reference.fc2.weight.clone();
+    net.fc2.bias = reference.fc2.bias.clone();
+    net
+}
+
+fn main() {
+    let seed = 42u64;
+    let gen = SyntheticImages::default();
+    let train_ds = gen.generate(240, 1);
+    let test_ds = gen.generate(90, 2);
+
+    println!("training reference CNN…");
+    let mut reference = Network::new(18, 8, 16, 32, 3, seed);
+    train(&mut reference, &train_ds, &TrainConfig { epochs: 3, lr: 0.01, seed });
+
+    let mut table = Report::new("table1_cp_layer", "Table I: CP tensor layer accuracy/time");
+    println!(
+        "{:<26} {:>8} {:>9} {:>9} {:>8} {:>8}",
+        "method", "acc pre", "acc drop", "acc ft", "time(s)", "rel err"
+    );
+    for backend in [CpBackend::Hosvd, CpBackend::Random, CpBackend::Compressed] {
+        let mut net = clone_net(&reference, seed);
+        let r = run_cp_layer_experiment(&mut net, &train_ds, &test_ds, 8, backend, 1, seed)
+            .expect("cp layer experiment");
+        println!(
+            "{:<26} {:>7.1}% {:>8.1}% {:>8.1}% {:>8.2} {:>8.4}",
+            r.backend,
+            100.0 * r.accuracy_before,
+            100.0 * r.accuracy_after_decomp,
+            100.0 * r.accuracy_after_finetune,
+            r.decomp_seconds,
+            r.reconstruction_error
+        );
+        let m = Measurement {
+            name: r.backend.to_string(),
+            mean_s: r.decomp_seconds,
+            p50_s: r.decomp_seconds,
+            p95_s: r.decomp_seconds,
+            iters: 1,
+            extra: vec![
+                ("accuracy_pct".into(), 100.0 * r.accuracy_after_finetune),
+                ("acc_after_decomp_pct".into(), 100.0 * r.accuracy_after_decomp),
+                ("reconstruction_error".into(), r.reconstruction_error),
+                ("compression_ratio".into(), r.compression_ratio),
+            ],
+        };
+        table.push(m);
+    }
+    table.finish();
+}

@@ -1,0 +1,224 @@
+//! CP tensor layer for neural networks — the Table-I experiment.
+//!
+//! Protocol (mirrors the paper's §V-C, scaled per DESIGN.md):
+//!
+//! 1. train the CNN on the synthetic image set;
+//! 2. view `conv2`'s weights as the 3-way tensor `(out_ch, in_ch, k²)`
+//!    [10]'s CP conv factorization, with the two spatial dims grouped;
+//! 3. decompose it with one of three backends —
+//!    * `Hosvd` direct ALS (Matlab Tensor Toolbox's `'nvecs'` init),
+//!    * `Random` direct ALS (TensorLy's default init),
+//!    * `Compressed` — **our** Exascale-Tensor pipeline;
+//! 4. replace the layer with its rank-R reconstruction, measure accuracy,
+//!    fine-tune briefly, measure again.  Report decomposition wall-clock.
+
+use super::nn::{evaluate, train, Dataset, Network, TrainConfig};
+use crate::coordinator::{Pipeline, PipelineConfig};
+use crate::cp::{als_decompose, AlsOptions, CpModel, InitMethod};
+use crate::linalg::Matrix;
+use crate::tensor::{DenseTensor, InMemorySource};
+use crate::util::stats::Timer;
+use anyhow::Result;
+
+/// Which CP backend decomposes the layer (the three Table-I columns).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CpBackend {
+    /// Matlab Tensor Toolbox stand-in: ALS with HOSVD init.
+    Hosvd,
+    /// TensorLy stand-in: ALS with random init.
+    Random,
+    /// Ours: the compressed Exascale-Tensor pipeline.
+    Compressed,
+}
+
+impl CpBackend {
+    pub fn label(&self) -> &'static str {
+        match self {
+            CpBackend::Hosvd => "Matlab (hosvd-ALS)",
+            CpBackend::Random => "TensorLy (random-ALS)",
+            CpBackend::Compressed => "Ours (Exascale-Tensor)",
+        }
+    }
+}
+
+/// One Table-I row.
+#[derive(Clone, Debug)]
+pub struct CpLayerReport {
+    pub backend: &'static str,
+    pub accuracy_before: f64,
+    pub accuracy_after_decomp: f64,
+    pub accuracy_after_finetune: f64,
+    pub decomp_seconds: f64,
+    pub reconstruction_error: f64,
+    pub compression_ratio: f64,
+}
+
+/// Views conv weights `(out_ch × in_ch·k²)` as the 3-way tensor
+/// `(out_ch, in_ch, k²)` — column-major `DenseTensor`.
+pub fn conv_weight_tensor(w: &Matrix, in_ch: usize, k: usize) -> DenseTensor {
+    let out_ch = w.rows();
+    let kk = k * k;
+    assert_eq!(w.cols(), in_ch * kk);
+    DenseTensor::from_fn([out_ch, in_ch, kk], |o, c, s| w.get(o, c * kk + s))
+}
+
+/// Inverse of [`conv_weight_tensor`].
+pub fn tensor_to_conv_weight(t: &DenseTensor) -> Matrix {
+    let [out_ch, in_ch, kk] = t.dims();
+    Matrix::from_fn(out_ch, in_ch * kk, |o, col| {
+        t.get(o, col / kk, col % kk)
+    })
+}
+
+/// Decomposes `w_tensor` at `rank` with the chosen backend; returns the
+/// model and the wall-clock spent in the decomposition.
+pub fn decompose_layer(
+    w_tensor: &DenseTensor,
+    rank: usize,
+    backend: CpBackend,
+    seed: u64,
+) -> Result<(CpModel, f64)> {
+    let timer = Timer::start();
+    let model = match backend {
+        CpBackend::Hosvd | CpBackend::Random => {
+            let init = if backend == CpBackend::Hosvd {
+                InitMethod::Hosvd
+            } else {
+                InitMethod::Random
+            };
+            let (model, _) = als_decompose(
+                w_tensor,
+                &AlsOptions {
+                    rank,
+                    max_iters: 300,
+                    tol: 1e-10,
+                    init,
+                    seed,
+                    ..Default::default()
+                },
+            )?;
+            model
+        }
+        CpBackend::Compressed => {
+            let dims = w_tensor.dims();
+            // Reduced dims: 3/4 of each mode (conv weight tensors are small,
+            // so anchors must leave informative rows on every mode).
+            let red = |d: usize| ((3 * d) / 4).max(rank + 3).min(d);
+            let cfg = PipelineConfig::builder()
+                .reduced_dims(red(dims[0]), red(dims[1]), red(dims[2]))
+                .rank(rank)
+                // anchor rows default: (rank+2) clamped to min reduced dim
+                .block([dims[0], dims[1], dims[2]])
+                .corner(dims[0].min(dims[1]).min(dims[2]))
+                .als(200, 1e-10)
+                .seed(seed)
+                .build()?;
+            let src = InMemorySource::new(w_tensor.clone());
+            let mut pipe = Pipeline::new(cfg);
+            pipe.run(&src)?.model
+        }
+    };
+    Ok((model, timer.elapsed_s()))
+}
+
+/// Full Table-I protocol for one backend.
+#[allow(clippy::too_many_arguments)]
+pub fn run_cp_layer_experiment(
+    net: &mut Network,
+    train_ds: &Dataset,
+    test_ds: &Dataset,
+    rank: usize,
+    backend: CpBackend,
+    finetune_epochs: usize,
+    seed: u64,
+) -> Result<CpLayerReport> {
+    let accuracy_before = evaluate(net, test_ds);
+
+    let w_tensor = conv_weight_tensor(&net.conv2.weight, net.conv2.in_ch, net.conv2.k);
+    let (model, decomp_seconds) = decompose_layer(&w_tensor, rank, backend, seed)?;
+    let recon = model.to_tensor();
+    let reconstruction_error = recon.rel_error(&w_tensor);
+
+    // Replace the layer with the rank-R reconstruction.
+    net.conv2.weight = tensor_to_conv_weight(&recon);
+    let accuracy_after_decomp = evaluate(net, test_ds);
+
+    // Brief fine-tune (whole network; the paper fine-tunes end-to-end).
+    train(
+        net,
+        train_ds,
+        &TrainConfig {
+            epochs: finetune_epochs,
+            lr: 0.005,
+            seed: seed ^ 0xF1,
+        },
+    );
+    let accuracy_after_finetune = evaluate(net, test_ds);
+
+    let dims = w_tensor.dims();
+    let dense_params = (dims[0] * dims[1] * dims[2]) as f64;
+    let cp_params = (rank * (dims[0] + dims[1] + dims[2])) as f64;
+
+    Ok(CpLayerReport {
+        backend: backend.label(),
+        accuracy_before,
+        accuracy_after_decomp,
+        accuracy_after_finetune,
+        decomp_seconds,
+        reconstruction_error,
+        compression_ratio: dense_params / cp_params,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::nn::SyntheticImages;
+
+    #[test]
+    fn weight_tensor_round_trip() {
+        let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(30);
+        let w = Matrix::random_normal(8, 4 * 9, &mut rng);
+        let t = conv_weight_tensor(&w, 4, 3);
+        assert_eq!(t.dims(), [8, 4, 9]);
+        assert_eq!(tensor_to_conv_weight(&t), w);
+    }
+
+    #[test]
+    fn decompose_layer_all_backends_small() {
+        // Low-rank planted weights: every backend should reconstruct well.
+        let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(31);
+        let a = Matrix::random_normal(16, 3, &mut rng);
+        let b = Matrix::random_normal(8, 3, &mut rng);
+        let c = Matrix::random_normal(9, 3, &mut rng);
+        let w = DenseTensor::from_cp_factors(&a, &b, &c);
+        for backend in [CpBackend::Hosvd, CpBackend::Random, CpBackend::Compressed] {
+            let (model, secs) = decompose_layer(&w, 3, backend, 5).unwrap();
+            let err = model.to_tensor().rel_error(&w);
+            assert!(err < 0.05, "{backend:?}: err {err}");
+            assert!(secs >= 0.0);
+        }
+    }
+
+    #[test]
+    #[ignore] // several seconds: full protocol exercised by the bench/example
+    fn full_protocol_smoke() {
+        let gen = SyntheticImages::default();
+        let train_ds = gen.generate(120, 1);
+        let test_ds = gen.generate(45, 2);
+        let mut net = Network::new(18, 4, 16, 24, 3, 42);
+        train(&mut net, &train_ds, &TrainConfig::default());
+        let report = run_cp_layer_experiment(
+            &mut net,
+            &train_ds,
+            &test_ds,
+            6,
+            CpBackend::Random,
+            1,
+            7,
+        )
+        .unwrap();
+        assert!(report.accuracy_before > 0.8);
+        assert!(report.accuracy_after_finetune >= report.accuracy_after_decomp - 0.1);
+    }
+}

@@ -1,0 +1,9 @@
+//! Tensor-learning applications from §V-C of the paper: the CP tensor
+//! layer for neural networks (Table I) and gene-expression analysis.
+
+pub mod cp_layer;
+pub mod gene;
+pub mod nn;
+
+pub use cp_layer::{run_cp_layer_experiment, CpBackend, CpLayerReport};
+pub use gene::{run_gene_analysis, GeneConfig, GeneReport};

@@ -1,0 +1,433 @@
+//! CNN layers over `linalg::Matrix`: im2col conv, ReLU, max-pool, dense.
+//!
+//! The network processes one image at a time (batch = 1) — at 16×16 that
+//! is plenty fast and keeps the backward passes simple and auditable.
+
+use crate::linalg::{matmul, Matrix, Trans};
+use crate::util::rng::Xoshiro256;
+
+/// A 2-D convolution (valid padding, stride 1) via im2col.
+///
+/// Weights: `(out_ch, in_ch·kh·kw)` matrix; the CP-layer experiment views
+/// it as the 3-way tensor `(out_ch, in_ch, kh·kw)`.
+pub struct Conv2d {
+    pub weight: Matrix, // out_ch × (in_ch·kh·kw)
+    pub bias: Vec<f32>,
+    pub in_ch: usize,
+    pub out_ch: usize,
+    pub k: usize,
+    // cached for backward
+    cols: Matrix,
+    in_side: usize,
+}
+
+impl Conv2d {
+    pub fn new(in_ch: usize, out_ch: usize, k: usize, rng: &mut Xoshiro256) -> Self {
+        let fan_in = (in_ch * k * k) as f32;
+        let mut weight = Matrix::random_normal(out_ch, in_ch * k * k, rng);
+        weight.scale((2.0 / fan_in).sqrt()); // He init
+        Self {
+            weight,
+            bias: vec![0.0; out_ch],
+            in_ch,
+            out_ch,
+            k,
+            cols: Matrix::zeros(0, 0),
+            in_side: 0,
+        }
+    }
+
+    pub fn out_side(&self, in_side: usize) -> usize {
+        in_side - self.k + 1
+    }
+
+    /// im2col: column `p` holds the receptive field of output pixel `p`.
+    fn im2col(&self, x: &[f32], in_side: usize) -> Matrix {
+        let out_side = self.out_side(in_side);
+        let krows = self.in_ch * self.k * self.k;
+        let mut cols = Matrix::zeros(krows, out_side * out_side);
+        for oy in 0..out_side {
+            for ox in 0..out_side {
+                let p = oy * out_side + ox;
+                let mut rr = 0;
+                for ch in 0..self.in_ch {
+                    let plane = &x[ch * in_side * in_side..(ch + 1) * in_side * in_side];
+                    for ky in 0..self.k {
+                        for kx in 0..self.k {
+                            cols.set(rr, p, plane[(oy + ky) * in_side + (ox + kx)]);
+                            rr += 1;
+                        }
+                    }
+                }
+            }
+        }
+        cols
+    }
+
+    /// Forward: input `(in_ch · side²)` planes → `(out_ch · out²)` planes.
+    pub fn forward(&mut self, x: &[f32], in_side: usize) -> Vec<f32> {
+        let out_side = self.out_side(in_side);
+        self.cols = self.im2col(x, in_side);
+        self.in_side = in_side;
+        let y = matmul(&self.weight, Trans::No, &self.cols, Trans::No);
+        let mut out = vec![0.0f32; self.out_ch * out_side * out_side];
+        for ch in 0..self.out_ch {
+            for p in 0..out_side * out_side {
+                out[ch * out_side * out_side + p] = y.get(ch, p) + self.bias[ch];
+            }
+        }
+        out
+    }
+
+    /// Backward: given `dy` (out_ch · out²), updates weights with SGD and
+    /// returns `dx` (in_ch · side²).
+    pub fn backward(&mut self, dy: &[f32], lr: f32) -> Vec<f32> {
+        let out_side = self.out_side(self.in_side);
+        let np = out_side * out_side;
+        let dy_m = Matrix::from_fn(self.out_ch, np, |ch, p| dy[ch * np + p]);
+        // dW = dY · colsᵀ ; dcols = Wᵀ · dY
+        let dw = matmul(&dy_m, Trans::No, &self.cols, Trans::Yes);
+        let dcols = matmul(&self.weight, Trans::Yes, &dy_m, Trans::No);
+        // col2im scatter
+        let in_side = self.in_side;
+        let mut dx = vec![0.0f32; self.in_ch * in_side * in_side];
+        for oy in 0..out_side {
+            for ox in 0..out_side {
+                let p = oy * out_side + ox;
+                let mut rr = 0;
+                for ch in 0..self.in_ch {
+                    for ky in 0..self.k {
+                        for kx in 0..self.k {
+                            dx[ch * in_side * in_side + (oy + ky) * in_side + (ox + kx)] +=
+                                dcols.get(rr, p);
+                            rr += 1;
+                        }
+                    }
+                }
+            }
+        }
+        // SGD update
+        for ch in 0..self.out_ch {
+            let mut db = 0.0;
+            for p in 0..np {
+                db += dy_m.get(ch, p);
+            }
+            self.bias[ch] -= lr * db;
+        }
+        for j in 0..self.weight.cols() {
+            for i in 0..self.weight.rows() {
+                let v = self.weight.get(i, j) - lr * dw.get(i, j);
+                self.weight.set(i, j, v);
+            }
+        }
+        dx
+    }
+}
+
+/// Fully-connected layer.
+pub struct Dense {
+    pub weight: Matrix, // out × in
+    pub bias: Vec<f32>,
+    input: Vec<f32>,
+}
+
+impl Dense {
+    pub fn new(inputs: usize, outputs: usize, rng: &mut Xoshiro256) -> Self {
+        let mut weight = Matrix::random_normal(outputs, inputs, rng);
+        weight.scale((2.0 / inputs as f32).sqrt());
+        Self {
+            weight,
+            bias: vec![0.0; outputs],
+            input: Vec::new(),
+        }
+    }
+
+    pub fn forward(&mut self, x: &[f32]) -> Vec<f32> {
+        self.input = x.to_vec();
+        let mut y = crate::linalg::matvec(&self.weight, Trans::No, x);
+        for (o, b) in y.iter_mut().zip(&self.bias) {
+            *o += b;
+        }
+        y
+    }
+
+    pub fn backward(&mut self, dy: &[f32], lr: f32) -> Vec<f32> {
+        let dx = crate::linalg::matvec(&self.weight, Trans::Yes, dy);
+        for (i, &g) in dy.iter().enumerate() {
+            self.bias[i] -= lr * g;
+            for (j, &xj) in self.input.iter().enumerate() {
+                let v = self.weight.get(i, j) - lr * g * xj;
+                self.weight.set(i, j, v);
+            }
+        }
+        dx
+    }
+}
+
+/// ReLU with mask caching.
+#[derive(Default)]
+pub struct Relu {
+    mask: Vec<bool>,
+}
+
+impl Relu {
+    pub fn forward(&mut self, x: &[f32]) -> Vec<f32> {
+        self.mask = x.iter().map(|&v| v > 0.0).collect();
+        x.iter().map(|&v| v.max(0.0)).collect()
+    }
+
+    pub fn backward(&self, dy: &[f32]) -> Vec<f32> {
+        dy.iter()
+            .zip(&self.mask)
+            .map(|(&g, &m)| if m { g } else { 0.0 })
+            .collect()
+    }
+}
+
+/// 2×2 max-pool with argmax caching. Input per-channel planes.
+#[derive(Default)]
+pub struct MaxPool2 {
+    arg: Vec<usize>,
+    in_len: usize,
+}
+
+impl MaxPool2 {
+    pub fn forward(&mut self, x: &[f32], channels: usize, side: usize) -> Vec<f32> {
+        let half = side / 2;
+        let mut out = vec![0.0f32; channels * half * half];
+        self.arg = vec![0; channels * half * half];
+        self.in_len = x.len();
+        for ch in 0..channels {
+            let plane = &x[ch * side * side..(ch + 1) * side * side];
+            for py in 0..half {
+                for px in 0..half {
+                    let mut best = f32::NEG_INFINITY;
+                    let mut best_idx = 0;
+                    for dy in 0..2 {
+                        for dx in 0..2 {
+                            let idx = (2 * py + dy) * side + 2 * px + dx;
+                            if plane[idx] > best {
+                                best = plane[idx];
+                                best_idx = idx;
+                            }
+                        }
+                    }
+                    let o = ch * half * half + py * half + px;
+                    out[o] = best;
+                    self.arg[o] = ch * side * side + best_idx;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn backward(&self, dy: &[f32]) -> Vec<f32> {
+        let mut dx = vec![0.0f32; self.in_len];
+        for (o, &g) in dy.iter().enumerate() {
+            dx[self.arg[o]] += g;
+        }
+        dx
+    }
+}
+
+/// The Table-I CNN: conv(1→C1,3) → relu → pool → conv(C1→C2,3) → relu →
+/// pool → dense → relu → dense(3).
+pub struct Network {
+    pub conv1: Conv2d,
+    pub conv2: Conv2d,
+    relu1: Relu,
+    relu2: Relu,
+    relu3: Relu,
+    pool1: MaxPool2,
+    pool2: MaxPool2,
+    pub fc1: Dense,
+    pub fc2: Dense,
+    pub side: usize,
+}
+
+impl Network {
+    /// Geometry: side → side−2 (conv3) → /2 (pool) → −2 (conv3) → /2
+    /// (pool); all intermediate sides must be even, which requires
+    /// `side ≡ 2 (mod 4)` — e.g. 18 → 16 → 8 → 6 → 3.
+    pub fn new(side: usize, c1: usize, c2: usize, hidden: usize, classes: usize, seed: u64) -> Self {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        // geometry: side -conv3-> s1 -pool-> s1/2 -conv3-> s2 -pool-> s2/2
+        let s1 = side - 2;
+        assert!(s1 % 2 == 0, "side-2 must be even");
+        let s1p = s1 / 2;
+        let s2 = s1p - 2;
+        assert!(s2 % 2 == 0, "pooled conv2 side must be even, got {s2}");
+        let s2p = s2 / 2;
+        let conv1 = Conv2d::new(1, c1, 3, &mut rng);
+        let conv2 = Conv2d::new(c1, c2, 3, &mut rng);
+        let fc1 = Dense::new(c2 * s2p * s2p, hidden, &mut rng);
+        let fc2 = Dense::new(hidden, classes, &mut rng);
+        Self {
+            conv1,
+            conv2,
+            relu1: Relu::default(),
+            relu2: Relu::default(),
+            relu3: Relu::default(),
+            pool1: MaxPool2::default(),
+            pool2: MaxPool2::default(),
+            fc1,
+            fc2,
+            side,
+        }
+    }
+
+    /// Forward to logits.
+    pub fn forward(&mut self, img: &[f32]) -> Vec<f32> {
+        let side = self.side;
+        let s1 = side - 2;
+        let x = self.conv1.forward(img, side);
+        let x = self.relu1.forward(&x);
+        let x = self.pool1.forward(&x, self.conv1.out_ch, s1);
+        let s1p = s1 / 2;
+        let x = self.conv2.forward(&x, s1p);
+        let x = self.relu2.forward(&x);
+        let s2 = s1p - 2;
+        let x = self.pool2.forward(&x, self.conv2.out_ch, s2);
+        let x = self.fc1.forward(&x);
+        let x = self.relu3.forward(&x);
+        self.fc2.forward(&x)
+    }
+
+    /// One SGD step on (img, label) with softmax cross-entropy.
+    /// Returns the loss.
+    pub fn train_step(&mut self, img: &[f32], label: usize, lr: f32) -> f32 {
+        let logits = self.forward(img);
+        let (loss, mut grad) = softmax_xent(&logits, label);
+        grad = self.fc2.backward(&grad, lr);
+        grad = self.relu3.backward(&grad);
+        grad = self.fc1.backward(&grad, lr);
+        grad = self.pool2.backward(&grad);
+        grad = self.relu2.backward(&grad);
+        grad = self.conv2.backward(&grad, lr);
+        grad = self.pool1.backward(&grad);
+        grad = self.relu1.backward(&grad);
+        let _ = self.conv1.backward(&grad, lr);
+        loss
+    }
+
+    pub fn predict(&mut self, img: &[f32]) -> usize {
+        let logits = self.forward(img);
+        logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+/// Softmax cross-entropy: returns (loss, dlogits).
+pub fn softmax_xent(logits: &[f32], label: usize) -> (f32, Vec<f32>) {
+    let max = logits.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+    let exps: Vec<f32> = logits.iter().map(|&x| (x - max).exp()).collect();
+    let z: f32 = exps.iter().sum();
+    let probs: Vec<f32> = exps.iter().map(|&e| e / z).collect();
+    let loss = -probs[label].max(1e-12).ln();
+    let grad = probs
+        .iter()
+        .enumerate()
+        .map(|(i, &p)| p - if i == label { 1.0 } else { 0.0 })
+        .collect();
+    (loss, grad)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_identity_kernel_preserves_center() {
+        let mut rng = Xoshiro256::seed_from_u64(20);
+        let mut conv = Conv2d::new(1, 1, 3, &mut rng);
+        // delta kernel at center
+        for j in 0..9 {
+            conv.weight.set(0, j, if j == 4 { 1.0 } else { 0.0 });
+        }
+        let img: Vec<f32> = (0..36).map(|i| i as f32).collect(); // 6×6
+        let out = conv.forward(&img, 6);
+        // out[p] = center pixel of field = img[(oy+1)*6 + ox+1]
+        assert_eq!(out.len(), 16);
+        assert_eq!(out[0], img[7]);
+        assert_eq!(out[15], img[28]);
+    }
+
+    #[test]
+    fn softmax_xent_gradient_checks() {
+        let logits = vec![0.3f32, -0.7, 1.1];
+        let (loss, grad) = softmax_xent(&logits, 2);
+        assert!(loss > 0.0);
+        // grad sums to 0 and is prob-1 at the label
+        let s: f32 = grad.iter().sum();
+        assert!(s.abs() < 1e-6);
+        assert!(grad[2] < 0.0);
+        // numeric check
+        let eps = 1e-3;
+        for i in 0..3 {
+            let mut lp = logits.clone();
+            lp[i] += eps;
+            let (l2, _) = softmax_xent(&lp, 2);
+            let num = (l2 - loss) / eps;
+            assert!((num - grad[i]).abs() < 1e-2, "i={i} num={num} ana={}", grad[i]);
+        }
+    }
+
+    #[test]
+    fn maxpool_backward_routes_to_argmax() {
+        let mut pool = MaxPool2::default();
+        let x = vec![1.0, 2.0, 3.0, 4.0]; // 2×2 single channel
+        let y = pool.forward(&x, 1, 2);
+        assert_eq!(y, vec![4.0]);
+        let dx = pool.backward(&[5.0]);
+        assert_eq!(dx, vec![0.0, 0.0, 0.0, 5.0]);
+    }
+
+    #[test]
+    fn dense_backward_reduces_loss() {
+        let mut rng = Xoshiro256::seed_from_u64(21);
+        let mut d = Dense::new(4, 2, &mut rng);
+        let x = vec![0.5, -1.0, 0.25, 2.0];
+        for _ in 0..50 {
+            let y = d.forward(&x);
+            let (_, g) = softmax_xent(&y, 0);
+            d.backward(&g, 0.1);
+        }
+        let y = d.forward(&x);
+        assert!(y[0] > y[1], "did not learn: {y:?}");
+    }
+
+    #[test]
+    fn conv_gradient_reduces_loss_single_pixel_task() {
+        let mut rng = Xoshiro256::seed_from_u64(22);
+        let mut conv = Conv2d::new(1, 2, 3, &mut rng);
+        let img: Vec<f32> = (0..25).map(|i| (i % 5) as f32 / 5.0).collect();
+        // learn to make channel 0 output sum big, channel 1 small
+        for _ in 0..60 {
+            let out = conv.forward(&img, 5);
+            let np = 9;
+            let mut dy = vec![0.0f32; 2 * np];
+            for p in 0..np {
+                dy[p] = -1.0; // increase ch0
+                dy[np + p] = 1.0; // decrease ch1
+            }
+            conv.backward(&dy, 0.01);
+        }
+        let out = conv.forward(&img, 5);
+        let s0: f32 = out[..9].iter().sum();
+        let s1: f32 = out[9..].iter().sum();
+        assert!(s0 > s1, "s0={s0} s1={s1}");
+    }
+
+    #[test]
+    fn network_shapes_and_forward() {
+        let mut net = Network::new(18, 4, 8, 16, 3, 23);
+        let img = vec![0.1f32; 324];
+        let logits = net.forward(&img);
+        assert_eq!(logits.len(), 3);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+}

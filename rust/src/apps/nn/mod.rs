@@ -1,0 +1,20 @@
+//! Tiny neural-network substrate for the CP-tensor-layer experiment
+//! (Table I).
+//!
+//! The paper compresses ResNet-34 on CIFAR-10; we scale to a 2-conv-layer
+//! CNN on a synthetic 16×16 3-class image set (DESIGN.md "Substitutions")
+//! — small enough to train in seconds in pure rust, big enough that its
+//! second conv layer's weight tensor `(64, 16, 3×3)` is a meaningful CP
+//! compression target.
+//!
+//! Everything is implemented against the crate's `linalg::Matrix`:
+//! im2col convolution, ReLU, 2×2 max-pool, dense layers, softmax
+//! cross-entropy, and plain SGD.
+
+pub mod data;
+pub mod layers;
+pub mod train;
+
+pub use data::{Dataset, SyntheticImages};
+pub use layers::{Conv2d, Dense, Network};
+pub use train::{evaluate, train, TrainConfig, TrainReport};

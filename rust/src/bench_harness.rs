@@ -1,0 +1,252 @@
+//! Micro/macro benchmark harness (offline substitute for `criterion`).
+//!
+//! Each `rust/benches/*.rs` binary (built with `harness = false`) uses this
+//! to run warmups + timed iterations, print a markdown table matching the
+//! corresponding paper figure, and append machine-readable JSON rows to
+//! `bench_results/` for EXPERIMENTS.md.
+
+use crate::util::json::Json;
+use crate::util::stats::{fmt_duration, Samples, Timer};
+use std::time::Duration;
+
+/// One benchmark case measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub iters: usize,
+    /// Extra columns (e.g. MSE, speedup) keyed by label.
+    pub extra: Vec<(String, f64)>,
+}
+
+/// Runs `f` with warmup and returns timing stats.
+///
+/// `min_iters`/`max_seconds` bound total runtime: at least `min_iters`
+/// iterations, stopping early once the budget is exhausted.
+pub fn bench<T>(name: &str, min_iters: usize, max_seconds: f64, mut f: impl FnMut() -> T) -> Measurement {
+    // Warmup: one run (populates caches, JIT-free in rust but warms allocs).
+    let _ = f();
+    let mut samples = Samples::default();
+    let budget = Timer::start();
+    let mut iters = 0;
+    while iters < min_iters || (budget.elapsed_s() < max_seconds && iters < 1000) {
+        let t = Timer::start();
+        let _ = f();
+        samples.push(t.elapsed_s());
+        iters += 1;
+        if budget.elapsed_s() >= max_seconds && iters >= min_iters {
+            break;
+        }
+    }
+    Measurement {
+        name: name.to_string(),
+        mean_s: samples.mean(),
+        p50_s: samples.median(),
+        p95_s: samples.percentile(0.95),
+        iters,
+        extra: Vec::new(),
+    }
+}
+
+/// Times a single run of `f` (for expensive end-to-end cases where one
+/// iteration is the honest protocol, like the paper's hour-scale runs).
+pub fn bench_once<T>(name: &str, f: impl FnOnce() -> T) -> (Measurement, T) {
+    let t = Timer::start();
+    let out = f();
+    let s = t.elapsed_s();
+    (
+        Measurement {
+            name: name.to_string(),
+            mean_s: s,
+            p50_s: s,
+            p95_s: s,
+            iters: 1,
+            extra: Vec::new(),
+        },
+        out,
+    )
+}
+
+impl Measurement {
+    pub fn with_extra(mut self, key: &str, value: f64) -> Self {
+        self.extra.push((key.to_string(), value));
+        self
+    }
+}
+
+/// A table of measurements that prints like the paper's figures and
+/// persists to `bench_results/<id>.json`.
+pub struct Report {
+    pub id: String,
+    pub title: String,
+    pub rows: Vec<Measurement>,
+}
+
+impl Report {
+    pub fn new(id: &str, title: &str) -> Self {
+        Self {
+            id: id.to_string(),
+            title: title.to_string(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, m: Measurement) {
+        self.rows.push(m);
+    }
+
+    /// Markdown table: name, mean, p50, p95, plus any extra columns.
+    pub fn to_markdown(&self) -> String {
+        let mut extra_keys: Vec<String> = Vec::new();
+        for r in &self.rows {
+            for (k, _) in &r.extra {
+                if !extra_keys.contains(k) {
+                    extra_keys.push(k.clone());
+                }
+            }
+        }
+        let mut s = format!("\n## {} — {}\n\n", self.id, self.title);
+        s.push_str("| case | mean | p50 | p95 | iters |");
+        for k in &extra_keys {
+            s.push_str(&format!(" {k} |"));
+        }
+        s.push('\n');
+        s.push_str("|---|---|---|---|---|");
+        for _ in &extra_keys {
+            s.push_str("---|");
+        }
+        s.push('\n');
+        for r in &self.rows {
+            s.push_str(&format!(
+                "| {} | {} | {} | {} | {} |",
+                r.name,
+                fmt_duration(r.mean_s),
+                fmt_duration(r.p50_s),
+                fmt_duration(r.p95_s),
+                r.iters
+            ));
+            for k in &extra_keys {
+                match r.extra.iter().find(|(key, _)| key == k) {
+                    Some((_, v)) => s.push_str(&format!(" {v:.3e} |")),
+                    None => s.push_str(" — |"),
+                }
+            }
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Writes JSON rows under `bench_results/<id>.json`.
+    pub fn save(&self) -> std::io::Result<std::path::PathBuf> {
+        std::fs::create_dir_all("bench_results")?;
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|r| {
+                let mut pairs = vec![
+                    ("name", Json::str(r.name.clone())),
+                    ("mean_s", Json::num(r.mean_s)),
+                    ("p50_s", Json::num(r.p50_s)),
+                    ("p95_s", Json::num(r.p95_s)),
+                    ("iters", Json::num(r.iters as f64)),
+                ];
+                for (k, v) in &r.extra {
+                    pairs.push((k.as_str(), Json::num(*v)));
+                }
+                Json::Obj(
+                    pairs
+                        .into_iter()
+                        .map(|(k, v)| (k.to_string(), v))
+                        .collect(),
+                )
+            })
+            .collect();
+        let doc = Json::obj(vec![
+            ("id", Json::str(self.id.clone())),
+            ("title", Json::str(self.title.clone())),
+            ("rows", Json::Arr(rows)),
+        ]);
+        let path = std::path::PathBuf::from(format!("bench_results/{}.json", self.id));
+        std::fs::write(&path, doc.to_string_pretty())?;
+        Ok(path)
+    }
+
+    /// Print + save, the standard bench-main tail.
+    pub fn finish(&self) {
+        println!("{}", self.to_markdown());
+        match self.save() {
+            Ok(p) => println!("(saved {})", p.display()),
+            Err(e) => eprintln!("warning: could not save report: {e}"),
+        }
+    }
+}
+
+/// Computes the "speedup" column the paper reports:
+/// `baseline_time / optimized_time`.
+pub fn speedup(baseline_s: f64, optimized_s: f64) -> f64 {
+    if optimized_s <= 0.0 {
+        f64::INFINITY
+    } else {
+        baseline_s / optimized_s
+    }
+}
+
+/// Sleep-free busy-wait used by harness self-tests.
+#[doc(hidden)]
+pub fn spin_for(d: Duration) {
+    let t = Timer::start();
+    while t.elapsed() < d {
+        std::hint::spin_loop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_respects_min_iters() {
+        let m = bench("spin", 3, 0.0, || spin_for(Duration::from_micros(100)));
+        assert!(m.iters >= 3);
+        assert!(m.mean_s >= 50e-6);
+    }
+
+    #[test]
+    fn bench_once_single_iter() {
+        let (m, out) = bench_once("one", || 42);
+        assert_eq!(m.iters, 1);
+        assert_eq!(out, 42);
+    }
+
+    #[test]
+    fn report_markdown_contains_rows_and_extras() {
+        let mut rep = Report::new("figX", "test");
+        rep.push(
+            bench("a", 1, 0.0, || ()).with_extra("mse", 1.5e-7),
+        );
+        rep.push(bench("b", 1, 0.0, || ()));
+        let md = rep.to_markdown();
+        assert!(md.contains("| a |"));
+        assert!(md.contains("mse"));
+        assert!(md.contains("1.500e-7") || md.contains("1.5e-7") || md.contains("1.500e-07"));
+    }
+
+    #[test]
+    fn speedup_math() {
+        assert_eq!(speedup(10.0, 2.0), 5.0);
+        assert!(speedup(1.0, 0.0).is_infinite());
+    }
+
+    #[test]
+    fn save_writes_parseable_json() {
+        let mut rep = Report::new("selftest_harness", "self test");
+        rep.push(bench("x", 1, 0.0, || ()));
+        let path = rep.save().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(parsed.get("id").unwrap().as_str(), Some("selftest_harness"));
+        std::fs::remove_file(path).ok();
+    }
+}

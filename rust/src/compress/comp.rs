@@ -1,0 +1,186 @@
+//! `Comp(X, U, V, W)` — Eq. (3): the three-mode product
+//! `Y = X ×₁ U ×₂ V ×₃ W` computed as a chain of matricized GEMMs.
+//!
+//! §IV-A's column-major layout means the mode-1 product is a single GEMM on
+//! the raw buffer; modes 2 and 3 use the strided unfoldings.  Each GEMM can
+//! run with mixed-precision operands (§IV-B) — that is the code path the
+//! Pallas `ttm_chain` kernel replaces on the accelerator.
+
+use crate::linalg::{gemm, Matrix, Trans};
+use crate::mixed::{matmul_mixed, MixedPrecision};
+use crate::tensor::unfold::{refold_1, refold_2, refold_3, unfold_2, unfold_3};
+use crate::tensor::DenseTensor;
+
+/// Mode-1 tensor-times-matrix: `Y = X ×₁ U`, `U (L×I)`, result `L×J×K`.
+pub fn ttm_mode1(t: &DenseTensor, u: &Matrix, precision: MixedPrecision) -> DenseTensor {
+    let [i, j, k] = t.dims();
+    assert_eq!(u.cols(), i, "ttm1: U cols {} != I {}", u.cols(), i);
+    // X_(1) is the raw buffer: (I × J·K).
+    let x1 = Matrix::from_vec(i, j * k, t.data().to_vec());
+    let y1 = mm(u, &x1, precision);
+    refold_1(&y1, [u.rows(), j, k])
+}
+
+/// Mode-2 TTM: `Y = X ×₂ V`, `V (M×J)`, result `I×M×K`.
+pub fn ttm_mode2(t: &DenseTensor, v: &Matrix, precision: MixedPrecision) -> DenseTensor {
+    let [i, j, k] = t.dims();
+    assert_eq!(v.cols(), j, "ttm2: V cols {} != J {}", v.cols(), j);
+    let x2 = unfold_2(t); // J × (I·K)
+    let y2 = mm(v, &x2, precision); // M × (I·K)
+    refold_2(&y2, [i, v.rows(), k])
+}
+
+/// Mode-3 TTM: `Y = X ×₃ W`, `W (N×K)`, result `I×J×N`.
+pub fn ttm_mode3(t: &DenseTensor, w: &Matrix, precision: MixedPrecision) -> DenseTensor {
+    let [i, j, k] = t.dims();
+    assert_eq!(w.cols(), k, "ttm3: W cols {} != K {}", w.cols(), k);
+    let x3 = unfold_3(t); // K × (I·J)
+    let y3 = mm(w, &x3, precision); // N × (I·J)
+    refold_3(&y3, [i, j, w.rows()])
+}
+
+#[inline]
+fn mm(a: &Matrix, b: &Matrix, precision: MixedPrecision) -> Matrix {
+    match precision {
+        MixedPrecision::Full => {
+            let mut out = Matrix::zeros(a.rows(), b.cols());
+            gemm(1.0, a, Trans::No, b, Trans::No, 0.0, &mut out);
+            out
+        }
+        p => matmul_mixed(a, b, p),
+    }
+}
+
+/// Full compression `Comp(X, U, V, W) = X ×₁U ×₂V ×₃W` (Eq. 3).
+///
+/// Order: smallest intermediate first would be optimal in general; here we
+/// contract mode 1 first (free matricization), then 2, then 3 — for the
+/// paper's shapes (`L=M=N ≪ I=J=K`) mode-1-first already shrinks the
+/// intermediate by `L/I` immediately.
+pub fn comp_dense(
+    t: &DenseTensor,
+    u: &Matrix,
+    v: &Matrix,
+    w: &Matrix,
+    precision: MixedPrecision,
+) -> DenseTensor {
+    let y1 = ttm_mode1(t, u, precision);
+    let y2 = ttm_mode2(&y1, v, precision);
+    ttm_mode3(&y2, w, precision)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Xoshiro256;
+
+    /// Direct elementwise reference of Eq. (3) — O(LMN·IJK), tiny sizes only.
+    fn comp_reference(t: &DenseTensor, u: &Matrix, v: &Matrix, w: &Matrix) -> DenseTensor {
+        let [i_dim, j_dim, k_dim] = t.dims();
+        let (l, m, n) = (u.rows(), v.rows(), w.rows());
+        DenseTensor::from_fn([l, m, n], |ll, mm, nn| {
+            let mut s = 0.0f64;
+            for k in 0..k_dim {
+                for j in 0..j_dim {
+                    for i in 0..i_dim {
+                        s += u.get(ll, i) as f64
+                            * v.get(mm, j) as f64
+                            * w.get(nn, k) as f64
+                            * t.get(i, j, k) as f64;
+                    }
+                }
+            }
+            s as f32
+        })
+    }
+
+    #[test]
+    fn matches_elementwise_reference() {
+        let mut rng = Xoshiro256::seed_from_u64(130);
+        let t = DenseTensor::random_normal([6, 5, 4], &mut rng);
+        let u = Matrix::random_normal(3, 6, &mut rng);
+        let v = Matrix::random_normal(2, 5, &mut rng);
+        let w = Matrix::random_normal(2, 4, &mut rng);
+        let fast = comp_dense(&t, &u, &v, &w, MixedPrecision::Full);
+        let slow = comp_reference(&t, &u, &v, &w);
+        assert!(fast.rel_error(&slow) < 1e-4, "err={}", fast.rel_error(&slow));
+    }
+
+    #[test]
+    fn ttm_identity_is_noop() {
+        let mut rng = Xoshiro256::seed_from_u64(131);
+        let t = DenseTensor::random_normal([4, 4, 4], &mut rng);
+        let i4 = Matrix::identity(4);
+        assert!(ttm_mode1(&t, &i4, MixedPrecision::Full).rel_error(&t) < 1e-6);
+        assert!(ttm_mode2(&t, &i4, MixedPrecision::Full).rel_error(&t) < 1e-6);
+        assert!(ttm_mode3(&t, &i4, MixedPrecision::Full).rel_error(&t) < 1e-6);
+    }
+
+    #[test]
+    fn mode_products_commute_across_modes() {
+        // (X ×₁U) ×₂V == (X ×₂V) ×₁U — standard multilinear identity.
+        prop::check("ttm-commute", 15, |g| {
+            let dims = [g.int(2, 5), g.int(2, 5), g.int(2, 5)];
+            let mut rng = Xoshiro256::seed_from_u64(g.int(0, 1 << 30) as u64);
+            let t = DenseTensor::random_normal(dims, &mut rng);
+            let u = Matrix::random_normal(g.int(1, 4), dims[0], &mut rng);
+            let v = Matrix::random_normal(g.int(1, 4), dims[1], &mut rng);
+            let uv = ttm_mode2(&ttm_mode1(&t, &u, MixedPrecision::Full), &v, MixedPrecision::Full);
+            let vu = ttm_mode1(&ttm_mode2(&t, &v, MixedPrecision::Full), &u, MixedPrecision::Full);
+            assert!(uv.rel_error(&vu) < 1e-4);
+        });
+    }
+
+    #[test]
+    fn compression_of_cp_tensor_compresses_factors() {
+        // Comp(Σ a∘b∘c, U, V, W) = Σ (Ua)∘(Vb)∘(Wc) — the Kronecker identity
+        // behind the whole scheme (A_p = U_p·A·Π·Σ).
+        let mut rng = Xoshiro256::seed_from_u64(132);
+        let a = Matrix::random_normal(8, 2, &mut rng);
+        let b = Matrix::random_normal(7, 2, &mut rng);
+        let c = Matrix::random_normal(6, 2, &mut rng);
+        let t = DenseTensor::from_cp_factors(&a, &b, &c);
+        let u = Matrix::random_normal(3, 8, &mut rng);
+        let v = Matrix::random_normal(3, 7, &mut rng);
+        let w = Matrix::random_normal(3, 6, &mut rng);
+        let y = comp_dense(&t, &u, &v, &w, MixedPrecision::Full);
+        let ua = crate::linalg::matmul(&u, Trans::No, &a, Trans::No);
+        let vb = crate::linalg::matmul(&v, Trans::No, &b, Trans::No);
+        let wc = crate::linalg::matmul(&w, Trans::No, &c, Trans::No);
+        let y_ref = DenseTensor::from_cp_factors(&ua, &vb, &wc);
+        assert!(y.rel_error(&y_ref) < 1e-4, "err={}", y.rel_error(&y_ref));
+    }
+
+    #[test]
+    fn compression_is_linear() {
+        let mut rng = Xoshiro256::seed_from_u64(133);
+        let t1 = DenseTensor::random_normal([5, 5, 5], &mut rng);
+        let t2 = DenseTensor::random_normal([5, 5, 5], &mut rng);
+        let sum = DenseTensor::from_fn([5, 5, 5], |i, j, k| t1.get(i, j, k) + t2.get(i, j, k));
+        let u = Matrix::random_normal(3, 5, &mut rng);
+        let v = Matrix::random_normal(3, 5, &mut rng);
+        let w = Matrix::random_normal(3, 5, &mut rng);
+        let y_sum = comp_dense(&sum, &u, &v, &w, MixedPrecision::Full);
+        let y1 = comp_dense(&t1, &u, &v, &w, MixedPrecision::Full);
+        let y2 = comp_dense(&t2, &u, &v, &w, MixedPrecision::Full);
+        let y12 = DenseTensor::from_fn([3, 3, 3], |i, j, k| y1.get(i, j, k) + y2.get(i, j, k));
+        assert!(y_sum.rel_error(&y12) < 1e-4);
+    }
+
+    #[test]
+    fn mixed_precision_close_to_full() {
+        let mut rng = Xoshiro256::seed_from_u64(134);
+        let t = DenseTensor::random_normal([8, 8, 8], &mut rng);
+        let u = Matrix::random_normal(4, 8, &mut rng);
+        let v = Matrix::random_normal(4, 8, &mut rng);
+        let w = Matrix::random_normal(4, 8, &mut rng);
+        let full = comp_dense(&t, &u, &v, &w, MixedPrecision::Full);
+        let f16 = comp_dense(&t, &u, &v, &w, MixedPrecision::F16);
+        let bf16 = comp_dense(&t, &u, &v, &w, MixedPrecision::Bf16);
+        assert!(f16.rel_error(&full) < 1e-4, "f16 err {}", f16.rel_error(&full));
+        assert!(bf16.rel_error(&full) < 1e-3, "bf16 err {}", bf16.rel_error(&full));
+    }
+
+    use crate::linalg::Trans;
+}

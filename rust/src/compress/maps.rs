@@ -1,0 +1,191 @@
+//! Replica compression-matrix generation — Alg. 2 line 1.
+//!
+//! Each replica `p` gets Gaussian `U_p (L×I)`, `V_p (M×J)`, `W_p (N×K)`.
+//! The first `S` **rows** of every `U_p` (and of `V_p`, `W_p`) are identical
+//! across replicas — the PARACOMP anchor construction: since
+//! `A_p = U_p·A·Π_p·Σ_p`, shared leading rows give every replica the same
+//! leading `S×R` sub-block of `U·A` up to its own `Π_p Σ_p`, which is
+//! exactly what lines 5–7 of Alg. 2 exploit to undo the per-replica
+//! permutation and scaling; Alg. 2 line 5 divides the columns of *all
+//! three* factor matrices by their anchor maxima, which requires anchors in
+//! all three compression matrices.  (The paper's text says "columns"; for
+//! `U_p ∈ R^{L×I}` the anchor must be on the compressed side, i.e. rows —
+//! column anchors would not survive the product `U_p A`.)
+
+use crate::linalg::Matrix;
+use crate::util::rng::Xoshiro256;
+
+/// One replica's compression matrices.
+#[derive(Clone, Debug)]
+pub struct CompressionMaps {
+    pub u: Matrix, // L × I
+    pub v: Matrix, // M × J
+    pub w: Matrix, // N × K
+}
+
+/// The full set of `P` replicas with `S` shared anchor rows in `U_p`.
+#[derive(Clone, Debug)]
+pub struct ReplicaMaps {
+    pub replicas: Vec<CompressionMaps>,
+    pub anchor_rows: usize,
+    pub dims: [usize; 3],
+    pub reduced: [usize; 3],
+}
+
+impl ReplicaMaps {
+    /// Generates `p_count` replicas for compressing `dims = [I,J,K]` down to
+    /// `reduced = [L,M,N]`, with `anchor_rows = S` shared leading rows of
+    /// each `U_p`.  Entries are scaled `N(0, 1/√L)`-style so compressed
+    /// magnitudes stay O(‖X‖) independent of the compression ratio.
+    pub fn generate(
+        dims: [usize; 3],
+        reduced: [usize; 3],
+        p_count: usize,
+        anchor_rows: usize,
+        seed: u64,
+    ) -> Self {
+        let [i, j, k] = dims;
+        let [l, m, n] = reduced;
+        assert!(
+            anchor_rows <= l && anchor_rows <= m && anchor_rows <= n,
+            "anchor rows S={anchor_rows} exceed reduced dims {reduced:?}"
+        );
+        assert!(p_count >= 1, "need at least one replica");
+        let mut anchor_rng = Xoshiro256::seed_from_u64(seed ^ 0xA11C_0000);
+        // Shared anchor blocks (S×dim), common to every replica, per mode.
+        let anchor_u = Matrix::random_normal(anchor_rows, i, &mut anchor_rng);
+        let anchor_v = Matrix::random_normal(anchor_rows, j, &mut anchor_rng);
+        let anchor_w = Matrix::random_normal(anchor_rows, k, &mut anchor_rng);
+
+        let overwrite_anchor = |mat: &mut Matrix, anchor: &Matrix| {
+            for r in 0..anchor.rows() {
+                for c in 0..anchor.cols() {
+                    mat.set(r, c, anchor.get(r, c));
+                }
+            }
+        };
+
+        let base = Xoshiro256::seed_from_u64(seed);
+        let mut replicas = Vec::with_capacity(p_count);
+        for p in 0..p_count {
+            let mut rng = base.stream(p as u64 + 1);
+            let mut u = Matrix::random_normal(l, i, &mut rng);
+            let mut v = Matrix::random_normal(m, j, &mut rng);
+            let mut w = Matrix::random_normal(n, k, &mut rng);
+            overwrite_anchor(&mut u, &anchor_u);
+            overwrite_anchor(&mut v, &anchor_v);
+            overwrite_anchor(&mut w, &anchor_w);
+            // Variance normalization (1/√dim) keeps compressed magnitudes
+            // O(‖X‖) independent of the compression ratio.
+            u.scale(1.0 / (i as f32).sqrt());
+            v.scale(1.0 / (j as f32).sqrt());
+            w.scale(1.0 / (k as f32).sqrt());
+            replicas.push(CompressionMaps { u, v, w });
+        }
+        Self {
+            replicas,
+            anchor_rows,
+            dims,
+            reduced,
+        }
+    }
+
+    pub fn p_count(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Keeps only the replicas at `indices` (used after dropping replicas
+    /// whose proxy decomposition failed to converge — Alg. 2's "drop it
+    /// (them) in time").
+    pub fn subset(&self, indices: &[usize]) -> ReplicaMaps {
+        ReplicaMaps {
+            replicas: indices.iter().map(|&i| self.replicas[i].clone()).collect(),
+            anchor_rows: self.anchor_rows,
+            dims: self.dims,
+            reduced: self.reduced,
+        }
+    }
+
+    /// Stacked `[U_1; …; U_P]` — the LHS of the recovery least squares
+    /// (Eq. 4) for mode 1.
+    pub fn stacked_u(&self) -> Matrix {
+        let refs: Vec<&Matrix> = self.replicas.iter().map(|r| &r.u).collect();
+        Matrix::vstack(&refs)
+    }
+
+    /// Stacked `[V_1; …; V_P]`.
+    pub fn stacked_v(&self) -> Matrix {
+        let refs: Vec<&Matrix> = self.replicas.iter().map(|r| &r.v).collect();
+        Matrix::vstack(&refs)
+    }
+
+    /// Stacked `[W_1; …; W_P]`.
+    pub fn stacked_w(&self) -> Matrix {
+        let refs: Vec<&Matrix> = self.replicas.iter().map(|r| &r.w).collect();
+        Matrix::vstack(&refs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_count() {
+        let maps = ReplicaMaps::generate([40, 30, 20], [8, 6, 4], 7, 3, 1);
+        assert_eq!(maps.p_count(), 7);
+        for r in &maps.replicas {
+            assert_eq!((r.u.rows(), r.u.cols()), (8, 40));
+            assert_eq!((r.v.rows(), r.v.cols()), (6, 30));
+            assert_eq!((r.w.rows(), r.w.cols()), (4, 20));
+        }
+    }
+
+    #[test]
+    fn anchor_rows_shared_rest_distinct() {
+        let maps = ReplicaMaps::generate([20, 20, 20], [6, 6, 6], 4, 2, 2);
+        let u0 = &maps.replicas[0].u;
+        for p in 1..4 {
+            let up = &maps.replicas[p].u;
+            // first S rows identical
+            for r in 0..2 {
+                for c in 0..20 {
+                    assert_eq!(u0.get(r, c), up.get(r, c), "anchor row {r} differs");
+                }
+            }
+            // later rows differ
+            let same = (0..20).filter(|&c| u0.get(3, c) == up.get(3, c)).count();
+            assert!(same < 3, "non-anchor rows should differ");
+        }
+    }
+
+    #[test]
+    fn v_w_fully_distinct_across_replicas() {
+        let maps = ReplicaMaps::generate([15, 15, 15], [5, 5, 5], 3, 2, 3);
+        let v0 = &maps.replicas[0].v;
+        let v1 = &maps.replicas[1].v;
+        assert!(v0.sub(v1).max_abs() > 1e-6);
+    }
+
+    #[test]
+    fn stacked_shapes() {
+        let maps = ReplicaMaps::generate([25, 24, 23], [5, 4, 3], 6, 2, 4);
+        assert_eq!(maps.stacked_u().rows(), 30);
+        assert_eq!(maps.stacked_u().cols(), 25);
+        assert_eq!(maps.stacked_v().rows(), 24);
+        assert_eq!(maps.stacked_w().rows(), 18);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = ReplicaMaps::generate([10, 10, 10], [4, 4, 4], 2, 1, 9);
+        let b = ReplicaMaps::generate([10, 10, 10], [4, 4, 4], 2, 1, 9);
+        assert_eq!(a.replicas[1].u.data(), b.replicas[1].u.data());
+    }
+
+    #[test]
+    #[should_panic(expected = "anchor rows")]
+    fn anchor_larger_than_l_rejected() {
+        let _ = ReplicaMaps::generate([10, 10, 10], [4, 4, 4], 2, 5, 1);
+    }
+}

@@ -1,0 +1,25 @@
+//! The compression stage of Exascale-Tensor (§III "Compression", §IV-C
+//! "Massive Parallel Compression", §IV-D "Efficient Decomposition").
+//!
+//! * [`comp`] — the mode-product chain `Comp(X, U, V, W)` (Eq. 3) for an
+//!   in-memory tensor, with optional mixed-precision operands (§IV-B).
+//! * [`maps`] — replica compression-matrix generation with `S` shared
+//!   anchor rows (Alg. 2 line 1).
+//! * [`sparse_proj`] — sparse ±1 projection matrices for the
+//!   compressed-sensing two-stage construction (§IV-D).
+//! * [`stream`] — blocked, multi-threaded compression of a
+//!   [`crate::tensor::TensorSource`] (Fig. 2), generic over the
+//!   block-compressor backend (pure rust vs AOT XLA kernel).
+
+pub mod comp;
+pub mod maps;
+pub mod sparse_proj;
+pub mod stream;
+
+pub use comp::{comp_dense, ttm_mode1, ttm_mode2, ttm_mode3};
+pub use maps::{CompressionMaps, ReplicaMaps};
+pub use sparse_proj::SparseSignMatrix;
+pub use stream::{
+    compress_source, compress_source_batched, compress_source_sparse, BlockCompressor,
+    RustCompressor,
+};

@@ -1,0 +1,183 @@
+//! Sparse ±1 projection matrices for the compressed-sensing construction of
+//! §IV-D: `U_p = U'_p · U` with `U (αL×I)` **sparse**.
+//!
+//! We use the sparse-embedding construction (Clarkson–Woodruff / Achlioptas
+//! family): each column holds exactly `s` nonzeros at random rows with
+//! values `±1/√s`.  This is a Johnson-Lindenstrauss map that is cheap to
+//! apply (`O(nnz)` per vector) and RIP-friendly, which is what the L1
+//! second-stage recovery needs.
+
+use crate::linalg::Matrix;
+use crate::util::rng::Xoshiro256;
+
+/// Column-sparse sign matrix in CSC-like layout.
+#[derive(Clone, Debug)]
+pub struct SparseSignMatrix {
+    rows: usize,
+    cols: usize,
+    /// per column: `s` (row, value) pairs
+    entries: Vec<Vec<(u32, f32)>>,
+}
+
+impl SparseSignMatrix {
+    /// `rows×cols` with `s` nonzeros per column, values `±1/√s`.
+    pub fn generate(rows: usize, cols: usize, s: usize, seed: u64) -> Self {
+        assert!(s >= 1 && s <= rows, "s={s} out of range 1..={rows}");
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let scale = 1.0 / (s as f32).sqrt();
+        let entries = (0..cols)
+            .map(|_| {
+                rng.sample_indices(rows, s)
+                    .into_iter()
+                    .map(|r| (r as u32, rng.next_sign() * scale))
+                    .collect()
+            })
+            .collect();
+        Self {
+            rows,
+            cols,
+            entries,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.entries.iter().map(|e| e.len()).sum()
+    }
+
+    /// Column slice `self[:, c0..c1]` (cheap: entries are per-column).
+    pub fn slice_cols(&self, c0: usize, c1: usize) -> SparseSignMatrix {
+        assert!(c0 <= c1 && c1 <= self.cols);
+        SparseSignMatrix {
+            rows: self.rows,
+            cols: c1 - c0,
+            entries: self.entries[c0..c1].to_vec(),
+        }
+    }
+
+    /// Densifies (for validation and for the stacked recovery solve).
+    pub fn to_dense(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.rows, self.cols);
+        for (c, col) in self.entries.iter().enumerate() {
+            for &(r, v) in col {
+                m.set(r as usize, c, v);
+            }
+        }
+        m
+    }
+
+    /// `Y = self · X` for dense `X (cols × n)` — O(nnz · n).
+    pub fn mul_dense(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.rows(), self.cols, "sparse mul: dim mismatch");
+        let n = x.cols();
+        let mut y = Matrix::zeros(self.rows, n);
+        for (c, col_entries) in self.entries.iter().enumerate() {
+            for j in 0..n {
+                let xv = x.get(c, j);
+                if xv == 0.0 {
+                    continue;
+                }
+                for &(r, v) in col_entries {
+                    y.add_assign_at(r as usize, j, v * xv);
+                }
+            }
+        }
+        y
+    }
+
+    /// Applies to a mode-unfolded tensor from the left along mode 1:
+    /// `Y_(1) = self · X_(1)` — used by the first-stage streaming compress.
+    pub fn mul_slice(&self, x_cols: &[f32], out: &mut [f32]) {
+        // x_cols: one column of X_(1) (length = self.cols); out: length rows.
+        debug_assert_eq!(x_cols.len(), self.cols);
+        debug_assert_eq!(out.len(), self.rows);
+        for (c, col_entries) in self.entries.iter().enumerate() {
+            let xv = x_cols[c];
+            if xv == 0.0 {
+                continue;
+            }
+            for &(r, v) in col_entries {
+                out[r as usize] += v * xv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul, Trans};
+    use crate::util::prop;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn structure_is_correct() {
+        let m = SparseSignMatrix::generate(20, 50, 4, 1);
+        assert_eq!(m.nnz(), 200);
+        let d = m.to_dense();
+        for c in 0..50 {
+            let nnz = (0..20).filter(|&r| d.get(r, c) != 0.0).count();
+            assert_eq!(nnz, 4, "column {c}");
+            for r in 0..20 {
+                let v = d.get(r, c);
+                assert!(v == 0.0 || (v.abs() - 0.5).abs() < 1e-6); // 1/√4
+            }
+        }
+    }
+
+    #[test]
+    fn mul_matches_dense() {
+        prop::check("sparse-mul-dense", 20, |g| {
+            let rows = g.int(2, 10);
+            let cols = g.int(2, 12);
+            let s = g.int(1, rows);
+            let m = SparseSignMatrix::generate(rows, cols, s, g.int(0, 1 << 30) as u64);
+            let mut rng = Xoshiro256::seed_from_u64(g.int(0, 1 << 30) as u64);
+            let x = Matrix::random_normal(cols, g.int(1, 5), &mut rng);
+            let fast = m.mul_dense(&x);
+            let slow = matmul(&m.to_dense(), Trans::No, &x, Trans::No);
+            assert!(fast.rel_error(&slow) < 1e-5);
+        });
+    }
+
+    #[test]
+    fn norm_preserved_in_expectation() {
+        // JL property sanity: ‖Ux‖ ≈ ‖x‖ on average for tall-enough U.
+        let m = SparseSignMatrix::generate(256, 64, 8, 7);
+        let mut rng = Xoshiro256::seed_from_u64(8);
+        let mut ratios = Vec::new();
+        for _ in 0..20 {
+            let x = Matrix::random_normal(64, 1, &mut rng);
+            let y = m.mul_dense(&x);
+            ratios.push(y.frobenius_norm() / x.frobenius_norm());
+        }
+        let mean: f64 = ratios.iter().sum::<f64>() / ratios.len() as f64;
+        assert!((mean - 1.0).abs() < 0.15, "mean norm ratio {mean}");
+    }
+
+    #[test]
+    fn mul_slice_accumulates() {
+        let m = SparseSignMatrix::generate(5, 8, 2, 3);
+        let x: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let mut out = vec![0.0f32; 5];
+        m.mul_slice(&x, &mut out);
+        let xd = Matrix::from_vec(8, 1, x);
+        let expect = m.mul_dense(&xd);
+        for r in 0..5 {
+            assert!((out[r] - expect.get(r, 0)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn s_zero_rejected() {
+        let _ = SparseSignMatrix::generate(4, 4, 0, 1);
+    }
+}

@@ -1,0 +1,229 @@
+//! Run checkpointing: persist pipeline state after the expensive stages so
+//! an interrupted run resumes without recompressing.
+//!
+//! The compression stage dominates wall-clock (`P` passes over a huge
+//! tensor); a crash afterwards should not force a redo.  A checkpoint
+//! directory holds a JSON header (config fingerprint, dims, seed, replica
+//! count, stage) plus the proxy tensors in the crate's EXT1 binary format.
+//! The maps themselves are *not* stored: they are regenerated
+//! deterministically from the seed, which the header fingerprints.
+
+use crate::tensor::io::{load_tensor, save_tensor};
+use crate::tensor::DenseTensor;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Identifies a compression run; resuming requires an exact match.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Fingerprint {
+    pub dims: [usize; 3],
+    pub reduced: [usize; 3],
+    pub rank: usize,
+    pub replicas: usize,
+    pub anchor_rows: usize,
+    pub seed: u64,
+    pub mixed_precision: bool,
+}
+
+impl Fingerprint {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dims", Json::arr_usize(&self.dims)),
+            ("reduced", Json::arr_usize(&self.reduced)),
+            ("rank", Json::num(self.rank as f64)),
+            ("replicas", Json::num(self.replicas as f64)),
+            ("anchor_rows", Json::num(self.anchor_rows as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("mixed_precision", Json::Bool(self.mixed_precision)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<Fingerprint> {
+        let arr3 = |key: &str| -> Result<[usize; 3]> {
+            let a = v
+                .get(key)
+                .and_then(|x| x.as_arr())
+                .with_context(|| format!("checkpoint missing {key}"))?;
+            if a.len() != 3 {
+                bail!("checkpoint {key}: expected 3 dims");
+            }
+            Ok([
+                a[0].as_usize().context("dim")?,
+                a[1].as_usize().context("dim")?,
+                a[2].as_usize().context("dim")?,
+            ])
+        };
+        let num = |key: &str| -> Result<usize> {
+            v.get(key)
+                .and_then(|x| x.as_usize())
+                .with_context(|| format!("checkpoint missing {key}"))
+        };
+        Ok(Fingerprint {
+            dims: arr3("dims")?,
+            reduced: arr3("reduced")?,
+            rank: num("rank")?,
+            replicas: num("replicas")?,
+            anchor_rows: num("anchor_rows")?,
+            seed: num("seed")? as u64,
+            mixed_precision: v
+                .get("mixed_precision")
+                .and_then(|x| x.as_bool())
+                .unwrap_or(false),
+        })
+    }
+}
+
+/// Writes a post-compression checkpoint: header + one EXT1 file per proxy.
+pub fn save_proxies(
+    dir: impl AsRef<Path>,
+    fp: &Fingerprint,
+    proxies: &[DenseTensor],
+) -> Result<()> {
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir)?;
+    for (p, y) in proxies.iter().enumerate() {
+        save_tensor(y, dir.join(format!("proxy_{p:04}.ext1")))?;
+    }
+    let header = Json::obj(vec![
+        ("version", Json::num(1.0)),
+        ("stage", Json::str("compressed")),
+        ("fingerprint", fp.to_json()),
+        ("proxy_count", Json::num(proxies.len() as f64)),
+    ]);
+    std::fs::write(dir.join("checkpoint.json"), header.to_string_pretty())?;
+    Ok(())
+}
+
+/// Loads a checkpoint if it exists and matches `fp`; `Ok(None)` when absent,
+/// `Err` on mismatch (resuming with different parameters would silently
+/// corrupt results — fail loudly instead).
+pub fn load_proxies(
+    dir: impl AsRef<Path>,
+    fp: &Fingerprint,
+) -> Result<Option<Vec<DenseTensor>>> {
+    let dir = dir.as_ref();
+    let header_path = dir.join("checkpoint.json");
+    if !header_path.exists() {
+        return Ok(None);
+    }
+    let text = std::fs::read_to_string(&header_path)?;
+    let v = Json::parse(&text).context("checkpoint.json parse")?;
+    if v.get("version").and_then(|x| x.as_usize()) != Some(1) {
+        bail!("unsupported checkpoint version");
+    }
+    let stored = Fingerprint::from_json(v.get("fingerprint").context("missing fingerprint")?)?;
+    if &stored != fp {
+        bail!(
+            "checkpoint at {} was created with different parameters \
+             (stored {stored:?}, requested {fp:?}); delete it to recompress",
+            dir.display()
+        );
+    }
+    let count = v
+        .get("proxy_count")
+        .and_then(|x| x.as_usize())
+        .context("missing proxy_count")?;
+    let mut proxies = Vec::with_capacity(count);
+    for p in 0..count {
+        let path = dir.join(format!("proxy_{p:04}.ext1"));
+        proxies.push(load_tensor(&path).with_context(|| format!("loading {}", path.display()))?);
+    }
+    Ok(Some(proxies))
+}
+
+/// Removes a checkpoint directory (after a successful run).
+pub fn clear(dir: impl AsRef<Path>) -> Result<()> {
+    let dir = dir.as_ref();
+    if dir.exists() {
+        std::fs::remove_dir_all(dir)?;
+    }
+    Ok(())
+}
+
+#[doc(hidden)]
+pub fn default_fingerprint(
+    cfg: &super::config::PipelineConfig,
+    dims: [usize; 3],
+    replicas: usize,
+) -> Fingerprint {
+    Fingerprint {
+        dims,
+        reduced: cfg.reduced,
+        rank: cfg.rank,
+        replicas,
+        anchor_rows: cfg.effective_anchor(),
+        seed: cfg.seed,
+        mixed_precision: cfg.mixed_precision,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+    use std::path::PathBuf;
+
+    fn fp() -> Fingerprint {
+        Fingerprint {
+            dims: [40, 40, 40],
+            reduced: [10, 10, 10],
+            rank: 3,
+            replicas: 2,
+            anchor_rows: 5,
+            seed: 7,
+            mixed_precision: false,
+        }
+    }
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("exatensor_ckpt_{name}_{}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn round_trip() {
+        let dir = tmpdir("rt");
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let proxies = vec![
+            DenseTensor::random_normal([10, 10, 10], &mut rng),
+            DenseTensor::random_normal([10, 10, 10], &mut rng),
+        ];
+        save_proxies(&dir, &fp(), &proxies).unwrap();
+        let loaded = load_proxies(&dir, &fp()).unwrap().expect("checkpoint");
+        assert_eq!(loaded.len(), 2);
+        assert_eq!(loaded[0], proxies[0]);
+        assert_eq!(loaded[1], proxies[1]);
+        clear(&dir).unwrap();
+        assert!(load_proxies(&dir, &fp()).unwrap().is_none());
+    }
+
+    #[test]
+    fn mismatched_fingerprint_rejected() {
+        let dir = tmpdir("mismatch");
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let proxies = vec![DenseTensor::random_normal([10, 10, 10], &mut rng)];
+        let mut fp1 = fp();
+        fp1.replicas = 1;
+        save_proxies(&dir, &fp1, &proxies).unwrap();
+        let mut other = fp1.clone();
+        other.seed = 99;
+        assert!(load_proxies(&dir, &other).is_err());
+        clear(&dir).unwrap();
+    }
+
+    #[test]
+    fn absent_checkpoint_is_none() {
+        assert!(load_proxies("/nonexistent/ckpt", &fp()).unwrap().is_none());
+    }
+
+    #[test]
+    fn corrupt_header_rejected() {
+        let dir = tmpdir("corrupt");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("checkpoint.json"), "{not json").unwrap();
+        assert!(load_proxies(&dir, &fp()).is_err());
+        clear(&dir).unwrap();
+    }
+}

@@ -1,0 +1,326 @@
+//! Pipeline configuration: every knob of Alg. 2 plus execution policy.
+
+use anyhow::{bail, Result};
+
+/// Which engine performs block compression and proxy decomposition.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Single-threaded pure rust — the paper's "Baseline".
+    RustSequential,
+    /// Multi-threaded pure rust — "Parallel on CPU" (the MPI arm).
+    RustParallel,
+    /// Worker pool + AOT XLA/Pallas artifacts — "Parallel on GPU"
+    /// (tensor-core arm, adapted to the MXU; see DESIGN.md).
+    Xla,
+}
+
+/// Compressed-sensing two-stage compression options (§IV-D).
+#[derive(Clone, Copy, Debug)]
+pub struct SensingConfig {
+    /// Expansion factors α, β, γ (> 1): stage 1 compresses to
+    /// `αL × βM × γN`.
+    pub alpha: f32,
+    /// Nonzeros per column of the sparse stage-1 maps.
+    pub nnz_per_col: usize,
+    /// L1 penalty for the ISTA second-stage recovery, *relative* to each
+    /// column's `λ_max = ‖Uᵀy‖_∞` (scale-invariant).
+    pub lambda: f32,
+}
+
+impl Default for SensingConfig {
+    fn default() -> Self {
+        Self {
+            alpha: 2.2,
+            nnz_per_col: 8,
+            lambda: 0.02,
+        }
+    }
+}
+
+/// Full pipeline configuration.  Build with [`PipelineConfig::builder`].
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    /// Reduced (proxy) dims `[L, M, N]`.
+    pub reduced: [usize; 3],
+    /// Target CP rank `R` (the paper's `F`).
+    pub rank: usize,
+    /// Number of proxy replicas `P`; `None` → planner default
+    /// `max((I−2)/(L−2), J/M, K/N) + 10` (§V-A).
+    pub replicas: Option<usize>,
+    /// Shared anchor rows `S`; must satisfy `S ≥ rank` for the trace
+    /// matching to be well-posed. Default `rank + 2`.
+    pub anchor_rows: Option<usize>,
+    /// Compression block dims `d` (Fig. 2). Default `[500,500,500]`
+    /// clamped to the tensor dims.
+    pub block: Option<[usize; 3]>,
+    /// Corner sample size `b` for the final disambiguation (Alg. 2 l. 10).
+    pub corner: Option<usize>,
+    /// ALS sweeps per proxy.
+    pub als_iters: usize,
+    /// ALS convergence tolerance.
+    pub als_tol: f64,
+    /// Execution backend.
+    pub backend: Backend,
+    /// Worker threads (ignored for `RustSequential`).
+    pub threads: usize,
+    /// Use mixed-precision (split bf16) block compression — §IV-B.
+    pub mixed_precision: bool,
+    /// Compressed-sensing two-stage mode — §IV-D. `None` = plain Alg. 2.
+    pub sensing: Option<SensingConfig>,
+    /// Memory budget in bytes for the planner (0 = unlimited).
+    pub memory_budget: usize,
+    /// Streaming direct-refinement sweeps after recovery (one extra pass
+    /// over the source per sweep; removes the stacked-solve noise
+    /// amplification). 0 disables.
+    pub refine_sweeps: usize,
+    /// Checkpoint directory: when set, the post-compression state is
+    /// persisted there and reused by matching re-runs (crash resume).
+    pub checkpoint_dir: Option<std::path::PathBuf>,
+    pub seed: u64,
+}
+
+impl PipelineConfig {
+    pub fn builder() -> PipelineConfigBuilder {
+        PipelineConfigBuilder::default()
+    }
+
+    /// Effective anchor rows: `rank + 2` clamped to the smallest reduced
+    /// dim (small modes may have every row anchored — the planner then
+    /// treats them as uncompressed).
+    pub fn effective_anchor(&self) -> usize {
+        let min_red = self.reduced[0].min(self.reduced[1]).min(self.reduced[2]);
+        self.anchor_rows.unwrap_or((self.rank + 2).min(min_red))
+    }
+
+    /// Validates internal consistency (dims-independent checks).
+    pub fn validate(&self) -> Result<()> {
+        if self.rank == 0 {
+            bail!("rank must be ≥ 1");
+        }
+        let [l, m, n] = self.reduced;
+        // Strict `reduced > rank` is only needed on modes that actually
+        // compress — the planner enforces that per mode once dims are
+        // known; here we require the weaker `reduced ≥ rank`.
+        if l < self.rank || m < self.rank || n < self.rank {
+            bail!(
+                "reduced dims {:?} must be ≥ rank {} for proxy CP identifiability",
+                self.reduced,
+                self.rank
+            );
+        }
+        let s = self.effective_anchor();
+        if s < self.rank {
+            bail!("anchor rows S={s} must be ≥ rank R={}", self.rank);
+        }
+        if s > l.min(m).min(n) {
+            bail!("anchor rows S={s} exceed reduced dims {:?}", self.reduced);
+        }
+        if self.als_iters == 0 {
+            bail!("als_iters must be ≥ 1");
+        }
+        if let Some(sc) = &self.sensing {
+            if sc.alpha <= 1.0 {
+                bail!("sensing alpha must be > 1, got {}", sc.alpha);
+            }
+            if sc.nnz_per_col == 0 {
+                bail!("sensing nnz_per_col must be ≥ 1");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Builder for [`PipelineConfig`].
+#[derive(Clone, Debug)]
+pub struct PipelineConfigBuilder {
+    cfg: PipelineConfig,
+}
+
+impl Default for PipelineConfigBuilder {
+    fn default() -> Self {
+        Self {
+            cfg: PipelineConfig {
+                reduced: [50, 50, 50],
+                rank: 5,
+                replicas: None,
+                anchor_rows: None,
+                block: None,
+                corner: None,
+                als_iters: 60,
+                als_tol: 1e-9,
+                backend: Backend::RustParallel,
+                threads: crate::util::default_threads(),
+                mixed_precision: false,
+                sensing: None,
+                memory_budget: 0,
+                refine_sweeps: 1,
+                checkpoint_dir: None,
+                seed: 0,
+            },
+        }
+    }
+}
+
+impl PipelineConfigBuilder {
+    pub fn reduced_dims(mut self, l: usize, m: usize, n: usize) -> Self {
+        self.cfg.reduced = [l, m, n];
+        self
+    }
+
+    pub fn rank(mut self, r: usize) -> Self {
+        self.cfg.rank = r;
+        self
+    }
+
+    pub fn replicas(mut self, p: usize) -> Self {
+        self.cfg.replicas = Some(p);
+        self
+    }
+
+    pub fn anchor_rows(mut self, s: usize) -> Self {
+        self.cfg.anchor_rows = Some(s);
+        self
+    }
+
+    pub fn block(mut self, d: [usize; 3]) -> Self {
+        self.cfg.block = Some(d);
+        self
+    }
+
+    pub fn corner(mut self, b: usize) -> Self {
+        self.cfg.corner = Some(b);
+        self
+    }
+
+    pub fn als(mut self, iters: usize, tol: f64) -> Self {
+        self.cfg.als_iters = iters;
+        self.cfg.als_tol = tol;
+        self
+    }
+
+    pub fn backend(mut self, b: Backend) -> Self {
+        self.cfg.backend = b;
+        self
+    }
+
+    pub fn threads(mut self, t: usize) -> Self {
+        self.cfg.threads = t.max(1);
+        self
+    }
+
+    pub fn mixed_precision(mut self, on: bool) -> Self {
+        self.cfg.mixed_precision = on;
+        self
+    }
+
+    pub fn sensing(mut self, s: SensingConfig) -> Self {
+        self.cfg.sensing = Some(s);
+        self
+    }
+
+    pub fn memory_budget(mut self, bytes: usize) -> Self {
+        self.cfg.memory_budget = bytes;
+        self
+    }
+
+    pub fn refine_sweeps(mut self, n: usize) -> Self {
+        self.cfg.refine_sweeps = n;
+        self
+    }
+
+    pub fn checkpoint_dir(mut self, dir: impl Into<std::path::PathBuf>) -> Self {
+        self.cfg.checkpoint_dir = Some(dir.into());
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.cfg.seed = s;
+        self
+    }
+
+    pub fn build(self) -> Result<PipelineConfig> {
+        self.cfg.validate()?;
+        Ok(self.cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_builder_is_valid() {
+        let cfg = PipelineConfig::builder().build().unwrap();
+        assert_eq!(cfg.reduced, [50, 50, 50]);
+        assert_eq!(cfg.effective_anchor(), 7);
+    }
+
+    #[test]
+    fn rejects_rank_zero() {
+        assert!(PipelineConfig::builder().rank(0).build().is_err());
+    }
+
+    #[test]
+    fn rejects_reduced_below_rank() {
+        assert!(PipelineConfig::builder()
+            .rank(5)
+            .reduced_dims(4, 10, 10)
+            .build()
+            .is_err());
+        // reduced == rank is allowed (treated as an uncompressed mode when
+        // it equals the tensor dim; the planner rejects it otherwise).
+        assert!(PipelineConfig::builder()
+            .rank(5)
+            .reduced_dims(5, 10, 10)
+            .anchor_rows(5)
+            .build()
+            .is_ok());
+    }
+
+    #[test]
+    fn rejects_small_anchor() {
+        assert!(PipelineConfig::builder()
+            .rank(5)
+            .anchor_rows(3)
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn rejects_anchor_exceeding_reduced() {
+        assert!(PipelineConfig::builder()
+            .rank(2)
+            .reduced_dims(6, 6, 6)
+            .anchor_rows(7)
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn rejects_bad_sensing() {
+        assert!(PipelineConfig::builder()
+            .sensing(SensingConfig {
+                alpha: 0.5,
+                ..Default::default()
+            })
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn builder_setters_apply() {
+        let cfg = PipelineConfig::builder()
+            .reduced_dims(20, 21, 22)
+            .rank(3)
+            .replicas(9)
+            .block([100, 100, 100])
+            .threads(0)
+            .seed(42)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.reduced, [20, 21, 22]);
+        assert_eq!(cfg.replicas, Some(9));
+        assert_eq!(cfg.threads, 1); // clamped
+        assert_eq!(cfg.seed, 42);
+    }
+}

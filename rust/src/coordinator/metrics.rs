@@ -1,0 +1,132 @@
+//! Per-stage metrics registry: wall-clock per pipeline stage plus counters.
+//! The bench harness and EXPERIMENTS.md §Perf read these.
+
+use crate::util::stats::Summary;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Timing/counter stats for one named stage.
+#[derive(Clone, Debug, Default)]
+pub struct StageStats {
+    pub seconds: Summary,
+    pub count: u64,
+}
+
+/// Thread-safe metrics registry.
+#[derive(Default)]
+pub struct Metrics {
+    stages: Mutex<BTreeMap<String, StageStats>>,
+    counters: Mutex<BTreeMap<String, u64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Times `f` under stage `name`.
+    pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        let start = Instant::now();
+        let out = f();
+        self.record(name, start.elapsed().as_secs_f64());
+        out
+    }
+
+    /// Records an externally measured duration.
+    pub fn record(&self, name: &str, seconds: f64) {
+        let mut stages = self.stages.lock().unwrap();
+        let e = stages.entry(name.to_string()).or_default();
+        e.seconds.push(seconds);
+        e.count += 1;
+    }
+
+    pub fn incr(&self, name: &str, by: u64) {
+        let mut c = self.counters.lock().unwrap();
+        *c.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    pub fn stage(&self, name: &str) -> Option<StageStats> {
+        self.stages.lock().unwrap().get(name).cloned()
+    }
+
+    /// Total seconds recorded under `name` (0 if absent).
+    pub fn total_seconds(&self, name: &str) -> f64 {
+        self.stage(name)
+            .map(|s| s.seconds.mean() * s.count as f64)
+            .unwrap_or(0.0)
+    }
+
+    /// Formats a stage report table.
+    pub fn report(&self) -> String {
+        let stages = self.stages.lock().unwrap();
+        let counters = self.counters.lock().unwrap();
+        let mut out = String::from(format!(
+            "{:<28} {:>8} {:>12} {:>12}\n",
+            "stage", "calls", "mean", "total"
+        ));
+        for (name, s) in stages.iter() {
+            let total = s.seconds.mean() * s.count as f64;
+            out.push_str(&format!(
+                "{:<28} {:>8} {:>12} {:>12}\n",
+                name,
+                s.count,
+                crate::util::stats::fmt_duration(s.seconds.mean()),
+                crate::util::stats::fmt_duration(total),
+            ));
+        }
+        for (name, v) in counters.iter() {
+            out.push_str(&format!("{name:<28} {v:>8}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_records_stage() {
+        let m = Metrics::new();
+        let v = m.time("compress", || {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            42
+        });
+        assert_eq!(v, 42);
+        let s = m.stage("compress").unwrap();
+        assert_eq!(s.count, 1);
+        assert!(s.seconds.mean() >= 0.001);
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.incr("blocks", 3);
+        m.incr("blocks", 4);
+        assert_eq!(m.counter("blocks"), 7);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn report_mentions_everything() {
+        let m = Metrics::new();
+        m.record("decompose", 0.5);
+        m.incr("replicas", 9);
+        let r = m.report();
+        assert!(r.contains("decompose"));
+        assert!(r.contains("replicas"));
+    }
+
+    #[test]
+    fn total_seconds_sums() {
+        let m = Metrics::new();
+        m.record("x", 1.0);
+        m.record("x", 3.0);
+        assert!((m.total_seconds("x") - 4.0).abs() < 1e-9);
+    }
+}

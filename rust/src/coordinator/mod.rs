@@ -1,0 +1,37 @@
+//! Layer-3 coordinator — the Exascale-Tensor pipeline (Alg. 2).
+//!
+//! This is the paper's *system* contribution: the orchestration that lets a
+//! tensor far larger than memory be CP-decomposed by streaming blocks
+//! through the compression stage, decomposing `P` small proxies in
+//! parallel, undoing the per-replica permutation/scaling ambiguity with
+//! anchor rows + the Hungarian algorithm, and recovering the original
+//! factors with stacked least squares plus a sampled-subtensor
+//! disambiguation.
+//!
+//! Module map (one stage per module):
+//!
+//! * [`config`]   — run configuration + builder, validation.
+//! * [`planner`]  — memory planner: replica count bound `P ≥ (I−2)/(L−2)`,
+//!   proxy/working-set byte accounting against a budget (§IV-D motivation).
+//! * [`matching`] — anchor normalization + Hungarian alignment
+//!   (Alg. 2 lines 5–7).
+//! * [`recovery`] — stacked LSTSQ (Eq. 4), sampled-corner disambiguation
+//!   (Alg. 2 lines 10–13), and the L1/ISTA second stage for the
+//!   compressed-sensing variant (§IV-D).
+//! * [`pipeline`] — the driver tying the stages together over a worker
+//!   pool, with per-stage metrics.
+//! * [`metrics`]  — stage timing/counters registry.
+
+pub mod checkpoint;
+pub mod config;
+pub mod matching;
+pub mod metrics;
+pub mod pipeline;
+pub mod planner;
+pub mod recovery;
+pub mod refine;
+
+pub use config::{Backend, PipelineConfig, PipelineConfigBuilder, SensingConfig};
+pub use metrics::{Metrics, StageStats};
+pub use pipeline::{Pipeline, PipelineResult, ProxyDecomposer, RustAlsDecomposer};
+pub use planner::{MemoryPlan, MemoryPlanner};

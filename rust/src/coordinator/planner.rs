@@ -1,0 +1,249 @@
+//! Memory planner — §IV-D's motivation made executable.
+//!
+//! The recovery least squares needs `P ≥ (I−2)/(L−2)` replicas for
+//! identifiability ([5] as cited by the paper), and the working set of the
+//! pipeline is `P·L·M·N` proxy floats plus one block per worker plus the
+//! stacked LSTSQ operands.  The planner computes the replica count, checks
+//! the total against a byte budget, and — if the budget is tight — shrinks
+//! the block size before giving up.
+
+use super::config::PipelineConfig;
+use anyhow::{bail, Result};
+
+/// The resolved execution plan.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MemoryPlan {
+    pub replicas: usize,
+    pub block: [usize; 3],
+    pub corner: usize,
+    /// Estimated peak bytes (proxies + per-worker blocks + recovery).
+    pub estimated_bytes: usize,
+}
+
+/// Plans replica count / block size / corner size for a concrete tensor.
+pub struct MemoryPlanner;
+
+impl MemoryPlanner {
+    /// Paper §V-A replica rule: `max((I−2)/(L−2), J/M, K/N) + 10`.
+    pub fn default_replicas(dims: [usize; 3], reduced: [usize; 3]) -> usize {
+        let [i, j, k] = dims;
+        let [l, m, n] = reduced;
+        let r1 = (i.saturating_sub(2)).div_ceil(l.saturating_sub(2).max(1));
+        let r2 = j.div_ceil(m.max(1));
+        let r3 = k.div_ceil(n.max(1));
+        r1.max(r2).max(r3) + 10
+    }
+
+    /// Identifiability lower bound: with `S` anchor rows shared across
+    /// replicas, the stacked map `[U_1; …; U_P]` has rank at most
+    /// `S + P·(L−S)`, so solvability of Eq. (4) needs
+    /// `P ≥ (I−S)/(L−S)` per mode — the paper's `(I−2)/(L−2)` is the
+    /// `S = 2` case.
+    pub fn min_replicas_anchored(
+        dims: [usize; 3],
+        reduced: [usize; 3],
+        anchor_rows: usize,
+    ) -> usize {
+        let per_mode = |d: usize, r: usize| {
+            let s = anchor_rows.min(r);
+            if d <= r {
+                1 // no compression on this mode: one replica spans it
+            } else if r == s {
+                // every row anchored ⇒ replicas add no information
+                usize::MAX / 4
+            } else {
+                (d - s).div_ceil(r - s)
+            }
+        };
+        per_mode(dims[0], reduced[0])
+            .max(per_mode(dims[1], reduced[1]))
+            .max(per_mode(dims[2], reduced[2]))
+    }
+
+    /// Paper-literal bound (`S = 2`), kept for the replica-count ablation.
+    pub fn min_replicas(dims: [usize; 3], reduced: [usize; 3]) -> usize {
+        Self::min_replicas_anchored(dims, reduced, 2)
+    }
+
+    /// Byte estimate for a candidate plan.
+    pub fn estimate_bytes(
+        dims: [usize; 3],
+        reduced: [usize; 3],
+        replicas: usize,
+        block: [usize; 3],
+        threads: usize,
+        rank: usize,
+    ) -> usize {
+        let f = std::mem::size_of::<f32>();
+        let [l, m, n] = reduced;
+        let proxies = replicas * l * m * n * f;
+        // Each in-flight worker holds one materialized block + its (L×dj·dk)
+        // intermediate (bounded by block mode-1 product with L).
+        let blk = block[0] * block[1] * block[2];
+        let interm = l * block[1] * block[2];
+        let workers = threads.max(1) * (blk + interm) * f;
+        // Recovery: stacked U (P·L × I) + stacked A (P·L × R) per mode.
+        let recovery = replicas * l * (dims[0] + rank) * f;
+        proxies + workers + recovery
+    }
+
+    /// Resolves the plan for `dims` under `cfg`, shrinking blocks to satisfy
+    /// the budget when necessary.
+    pub fn plan(cfg: &PipelineConfig, dims: [usize; 3]) -> Result<MemoryPlan> {
+        let reduced = cfg.reduced;
+        for (d, r) in dims.iter().zip(&reduced) {
+            if r > d {
+                bail!("reduced dim {r} exceeds tensor dim {d}");
+            }
+            // A mode that actually compresses (r < d) needs r > rank for
+            // proxy CP identifiability; r == d is a pass-through mode.
+            if r < d && *r <= cfg.rank {
+                bail!(
+                    "reduced dim {r} must exceed rank {} on compressed modes (dim {d})",
+                    cfg.rank
+                );
+            }
+        }
+        let min_p = Self::min_replicas_anchored(dims, reduced, cfg.effective_anchor());
+        if min_p > 100_000 {
+            bail!(
+                "infeasible: anchor rows S={} leave no informative rows on some \
+                 compressed mode (reduced {reduced:?}); lower S or raise L/M/N",
+                cfg.effective_anchor()
+            );
+        }
+        let replicas = match cfg.replicas {
+            Some(p) => {
+                if p < min_p {
+                    bail!(
+                        "replicas P={p} below identifiability bound {min_p} \
+                         (P ≥ (I−S)/(L−S) per mode with S={} anchors)",
+                        cfg.effective_anchor()
+                    );
+                }
+                p
+            }
+            None => Self::default_replicas(dims, reduced).max(min_p + 2),
+        };
+
+        let default_block = [
+            500.min(dims[0]).max(1),
+            500.min(dims[1]).max(1),
+            500.min(dims[2]).max(1),
+        ];
+        let mut block = cfg.block.unwrap_or(default_block);
+        for (b, d) in block.iter_mut().zip(&dims) {
+            *b = (*b).min(*d).max(1);
+        }
+
+        // Corner must be large enough to CP-decompose at rank R but stay
+        // cheap: default 4·R clamped to dims.
+        let corner = cfg
+            .corner
+            .unwrap_or(4 * cfg.rank)
+            .min(dims[0])
+            .min(dims[1])
+            .min(dims[2])
+            .max(cfg.rank + 1);
+
+        let mut estimated =
+            Self::estimate_bytes(dims, reduced, replicas, block, cfg.threads, cfg.rank);
+        if cfg.memory_budget > 0 {
+            // Halve block dims until we fit (blocks dominate for big d).
+            while estimated > cfg.memory_budget && block.iter().any(|&b| b > 8) {
+                for b in block.iter_mut() {
+                    *b = (*b / 2).max(8);
+                }
+                estimated =
+                    Self::estimate_bytes(dims, reduced, replicas, block, cfg.threads, cfg.rank);
+            }
+            if estimated > cfg.memory_budget {
+                bail!(
+                    "cannot satisfy memory budget {} bytes: minimum plan needs {estimated}",
+                    cfg.memory_budget
+                );
+            }
+        }
+
+        Ok(MemoryPlan {
+            replicas,
+            block,
+            corner,
+            estimated_bytes: estimated,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::PipelineConfig;
+
+    fn cfg() -> PipelineConfig {
+        PipelineConfig::builder()
+            .reduced_dims(50, 50, 50)
+            .rank(5)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn paper_replica_rule() {
+        // I=J=K=1000, L=M=N=50 → (998/48)=20.79→21, J/M=20, K/N=20 → 21+10.
+        let p = MemoryPlanner::default_replicas([1000, 1000, 1000], [50, 50, 50]);
+        assert_eq!(p, 31);
+    }
+
+    #[test]
+    fn plan_defaults() {
+        let plan = MemoryPlanner::plan(&cfg(), [1000, 1000, 1000]).unwrap();
+        assert_eq!(plan.replicas, 31);
+        assert_eq!(plan.block, [500, 500, 500]);
+        assert_eq!(plan.corner, 20);
+        assert!(plan.estimated_bytes > 0);
+    }
+
+    #[test]
+    fn explicit_replicas_below_bound_rejected() {
+        let mut c = cfg();
+        c.replicas = Some(2);
+        assert!(MemoryPlanner::plan(&c, [1000, 1000, 1000]).is_err());
+    }
+
+    #[test]
+    fn reduced_larger_than_dims_rejected() {
+        assert!(MemoryPlanner::plan(&cfg(), [40, 1000, 1000]).is_err());
+    }
+
+    #[test]
+    fn budget_shrinks_blocks() {
+        let mut c = cfg();
+        c.memory_budget = 200 * 1024 * 1024;
+        let plan_unbounded = MemoryPlanner::plan(&cfg(), [2000, 2000, 2000]).unwrap();
+        let plan_bounded = MemoryPlanner::plan(&c, [2000, 2000, 2000]).unwrap();
+        assert!(plan_bounded.block[0] <= plan_unbounded.block[0]);
+        assert!(plan_bounded.estimated_bytes <= 200 * 1024 * 1024);
+    }
+
+    #[test]
+    fn impossible_budget_rejected() {
+        let mut c = cfg();
+        c.memory_budget = 1024; // 1 KB — absurd
+        assert!(MemoryPlanner::plan(&c, [1000, 1000, 1000]).is_err());
+    }
+
+    #[test]
+    fn block_clamped_to_dims() {
+        let mut c = cfg();
+        c.block = Some([999, 999, 999]);
+        let plan = MemoryPlanner::plan(&c, [100, 80, 60]).unwrap();
+        assert_eq!(plan.block, [100, 80, 60]);
+    }
+
+    #[test]
+    fn corner_respects_dims_and_rank() {
+        let plan = MemoryPlanner::plan(&cfg(), [60, 60, 60]).unwrap();
+        assert!(plan.corner >= 6);
+        assert!(plan.corner <= 60);
+    }
+}

@@ -1,0 +1,582 @@
+//! Factor recovery — Alg. 2 lines 9–13 (+ §IV-D second stage).
+//!
+//! After alignment every replica satisfies `A_p ≈ U_p · (A Π Σ_A)` with a
+//! *common* `Π Σ_A`, so stacking over replicas gives the overdetermined
+//! system of Eq. (4); its least-squares solution is `Ã = A Π Σ_A` (and
+//! likewise `B̃`, `C̃`).  The residual `Π Σ` ambiguity is removed by
+//! CP-decomposing a small sampled corner of the original tensor directly
+//! and matching its factors against the leading rows of the recovered ones
+//! (lines 10–13).
+
+use super::matching::anchor_normalize;
+use crate::compress::{ReplicaMaps, SparseSignMatrix};
+use crate::cp::{als_decompose, AlsOptions, CpModel};
+use crate::linalg::ista::{ista_l1, IstaOptions};
+use crate::linalg::{hungarian_max, lstsq, Matrix};
+use crate::tensor::DenseTensor;
+use anyhow::{bail, Context, Result};
+
+/// Solves the stacked least squares (Eq. 4) for all three modes.
+///
+/// `aligned` are the anchor-normalized, permutation-aligned replica models.
+pub fn stacked_recover(aligned: &[CpModel], maps: &ReplicaMaps) -> Result<CpModel> {
+    if aligned.is_empty() {
+        bail!("no aligned replicas to recover from");
+    }
+    let per_mode = |stack_map: Matrix, factors: Vec<&Matrix>| -> Result<Matrix> {
+        let stacked = Matrix::vstack(&factors);
+        if stack_map.rows() < stack_map.cols() {
+            bail!(
+                "stacked system underdetermined: {}×{} (need P·L ≥ dim)",
+                stack_map.rows(),
+                stack_map.cols()
+            );
+        }
+        lstsq(&stack_map, &stacked).context("stacked least squares")
+    };
+    let a = per_mode(
+        maps.stacked_u(),
+        aligned.iter().map(|m| &m.a).collect(),
+    )?;
+    let b = per_mode(
+        maps.stacked_v(),
+        aligned.iter().map(|m| &m.b).collect(),
+    )?;
+    let c = per_mode(
+        maps.stacked_w(),
+        aligned.iter().map(|m| &m.c).collect(),
+    )?;
+    Ok(CpModel::new(a, b, c))
+}
+
+/// Top-`b` row indices of a factor matrix by row energy (L2), sorted —
+/// the rows where the sampled disambiguation subtensor actually carries
+/// signal (the *leading* corner of a sparse/gene tensor is often ~zero).
+pub fn select_energy_rows(m: &Matrix, b: usize) -> Vec<usize> {
+    let mut scored: Vec<(f64, usize)> = (0..m.rows())
+        .map(|row| {
+            let e: f64 = (0..m.cols())
+                .map(|c| {
+                    let v = m.get(row, c) as f64;
+                    v * v
+                })
+                .sum();
+            (e, row)
+        })
+        .collect();
+    scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let mut rows: Vec<usize> = scored.into_iter().take(b.min(m.rows())).map(|(_, r)| r).collect();
+    rows.sort_unstable();
+    rows
+}
+
+/// Gathers the subtensor `X[rows_i × rows_j × rows_k]` from a source via
+/// singleton block reads (the index sets are small: b ≈ 4·R).
+pub fn gather_subtensor(
+    src: &dyn crate::tensor::TensorSource,
+    rows_i: &[usize],
+    rows_j: &[usize],
+    rows_k: &[usize],
+) -> DenseTensor {
+    use crate::tensor::BlockRange;
+    let mut t = DenseTensor::zeros(rows_i.len(), rows_j.len(), rows_k.len());
+    for (kk, &k) in rows_k.iter().enumerate() {
+        for (jj, &j) in rows_j.iter().enumerate() {
+            // one mode-1 run per (j,k) if rows_i were contiguous; general
+            // case: singleton reads.
+            for (ii, &i) in rows_i.iter().enumerate() {
+                let blk = src.block(&BlockRange {
+                    i0: i,
+                    i1: i + 1,
+                    j0: j,
+                    j1: j + 1,
+                    k0: k,
+                    k1: k + 1,
+                    index: 0,
+                });
+                t.set(ii, jj, kk, blk.get(0, 0, 0));
+            }
+        }
+    }
+    t
+}
+
+/// Joint column matching between the corner decomposition and the
+/// *sampled rows* of the recovered factors: similarity is the product of
+/// per-mode absolute cosines (consistent across modes by construction).
+fn joint_match(tilde: &CpModel, hat: &CpModel, rows: [&[usize]; 3]) -> Vec<usize> {
+    let r = tilde.rank();
+    let cos = |t: &Matrix, h: &Matrix, idx: &[usize], i: usize, j: usize| -> f64 {
+        let (mut dot, mut nt, mut nh) = (0.0f64, 0.0f64, 0.0f64);
+        for (hrow, &trow) in idx.iter().enumerate() {
+            let x = t.get(trow, j) as f64;
+            let y = h.get(hrow, i) as f64;
+            dot += x * y;
+            nt += x * x;
+            nh += y * y;
+        }
+        if nt == 0.0 || nh == 0.0 {
+            0.0
+        } else {
+            (dot / (nt.sqrt() * nh.sqrt())).abs()
+        }
+    };
+    let sim = Matrix::from_fn(r, r, |i, j| {
+        (cos(&tilde.a, &hat.a, rows[0], i, j)
+            * cos(&tilde.b, &hat.b, rows[1], i, j)
+            * cos(&tilde.c, &hat.c, rows[2], i, j)) as f32
+    });
+    // rows = hat columns, cols = tilde columns: perm[hat_col] = tilde_col.
+    hungarian_max(&sim).col_of_row
+}
+
+/// Per-column signed scale `s` minimizing `‖t_lead − s·h‖`:
+/// `s = ⟨h, t_lead⟩ / ⟨h, h⟩`.
+fn lead_scale(tilde_col: &[f32], hat_col: &[f32]) -> f32 {
+    let n = hat_col.len().min(tilde_col.len());
+    let (mut num, mut den) = (0.0f64, 0.0f64);
+    for row in 0..n {
+        num += hat_col[row] as f64 * tilde_col[row] as f64;
+        den += hat_col[row] as f64 * hat_col[row] as f64;
+    }
+    if den == 0.0 {
+        1.0
+    } else {
+        (num / den) as f32
+    }
+}
+
+/// Removes the final `Π Σ` ambiguity (Alg. 2 lines 10–13): decomposes the
+/// sampled subtensor `corner = X[rows_i × rows_j × rows_k]` directly,
+/// matches columns jointly across modes, and rescales each recovered
+/// column so its sampled rows agree with the corner factors.  Returns the
+/// fully disambiguated model (columns in the corner decomposition's
+/// order).  Pass `rows = [0..b)` per mode for the paper-literal leading
+/// corner; the pipeline passes energy-selected rows so sparse tensors
+/// sample signal rather than zeros.
+pub fn corner_disambiguate(
+    tilde: &CpModel,
+    corner: &DenseTensor,
+    rows: [&[usize]; 3],
+    als: &AlsOptions,
+) -> Result<CpModel> {
+    let r = tilde.rank();
+    assert_eq!(corner.dims()[0], rows[0].len());
+    assert_eq!(corner.dims()[1], rows[1].len());
+    assert_eq!(corner.dims()[2], rows[2].len());
+    let (hat, trace) = als_decompose(corner, als).context("corner ALS")?;
+    let fit = trace.fits.last().copied().unwrap_or(0.0);
+    if fit < 0.5 {
+        bail!("corner decomposition failed to converge (fit {fit:.3}); enlarge the corner");
+    }
+    let perm = joint_match(tilde, &hat, rows);
+
+    let rescale = |t: &Matrix, h: &Matrix, idx: &[usize]| -> Matrix {
+        let mut out = Matrix::zeros(t.rows(), r);
+        for hat_col in 0..r {
+            let t_col = perm[hat_col];
+            let lead: Vec<f32> = idx.iter().map(|&row| t.get(row, t_col)).collect();
+            let hvec: Vec<f32> = (0..idx.len()).map(|row| h.get(row, hat_col)).collect();
+            let s = lead_scale(&lead, &hvec);
+            let inv = if s.abs() < 1e-20 { 0.0 } else { 1.0 / s };
+            for row in 0..t.rows() {
+                out.set(row, hat_col, t.get(row, t_col) * inv);
+            }
+        }
+        out
+    };
+    Ok(CpModel::new(
+        rescale(&tilde.a, &hat.a, rows[0]),
+        rescale(&tilde.b, &hat.b, rows[1]),
+        rescale(&tilde.c, &hat.c, rows[2]),
+    ))
+}
+
+/// Entry-sampling scale calibration.
+///
+/// After alignment + stacking, `tilde` has a *consistent* column
+/// correspondence across modes but unknown per-mode diagonal scalings; for
+/// reconstruction only the per-component scale product matters.  We pick,
+/// per component, the largest-|·| rows of each mode factor (plus random
+/// extras for conditioning), read those entries of `X` from the source
+/// (1×1×1 block reads), and solve the linear least squares
+/// `X(i,j,k) ≈ Σ_r λ_r ã_ir b̃_jr c̃_kr` for `λ`, absorbing `λ` into mode 1.
+///
+/// This replaces the corner decomposition (Alg. 2 lines 10–13) when the
+/// sampled corner is degenerate — e.g. *sparse* tensors, whose leading
+/// corner is usually all-zero (documented substitution, DESIGN.md) — and
+/// serves as a cheap polish after it otherwise.
+pub fn entry_calibrate(
+    tilde: &CpModel,
+    src: &dyn crate::tensor::TensorSource,
+    extra_samples: usize,
+    seed: u64,
+) -> Result<CpModel> {
+    use crate::tensor::BlockRange;
+    use crate::util::rng::Xoshiro256;
+    let r = tilde.rank();
+    let [i_dim, j_dim, k_dim] = src.dims();
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+
+    // Candidate rows per mode: per-component argmax + random extras.
+    let top_rows = |m: &Matrix, dim: usize, rng: &mut Xoshiro256| -> Vec<usize> {
+        let mut rows: Vec<usize> = (0..r)
+            .map(|c| {
+                let mut best = (0usize, 0.0f32);
+                for row in 0..m.rows().min(dim) {
+                    let v = m.get(row, c).abs();
+                    if v > best.1 {
+                        best = (row, v);
+                    }
+                }
+                best.0
+            })
+            .collect();
+        for _ in 0..extra_samples {
+            rows.push(rng.next_below(dim as u64) as usize);
+        }
+        rows.sort_unstable();
+        rows.dedup();
+        rows
+    };
+    let ri = top_rows(&tilde.a, i_dim, &mut rng);
+    let rj = top_rows(&tilde.b, j_dim, &mut rng);
+    let rk = top_rows(&tilde.c, k_dim, &mut rng);
+
+    // Assemble the system: one equation per sampled entry.
+    let n_eq = ri.len() * rj.len() * rk.len();
+    let mut design = Matrix::zeros(n_eq, r);
+    let mut rhs = Matrix::zeros(n_eq, 1);
+    let mut e = 0usize;
+    for &i in &ri {
+        for &j in &rj {
+            for &k in &rk {
+                let blk = src.block(&BlockRange {
+                    i0: i,
+                    i1: i + 1,
+                    j0: j,
+                    j1: j + 1,
+                    k0: k,
+                    k1: k + 1,
+                    index: e,
+                });
+                rhs.set(e, 0, blk.get(0, 0, 0));
+                for c in 0..r {
+                    design.set(e, c, tilde.a.get(i, c) * tilde.b.get(j, c) * tilde.c.get(k, c));
+                }
+                e += 1;
+            }
+        }
+    }
+    if n_eq < r {
+        bail!("entry calibration: {n_eq} samples < rank {r}");
+    }
+    let lambda = lstsq(&design, &rhs).context("entry calibration lstsq")?;
+    let scales: Vec<f32> = (0..r).map(|c| lambda.get(c, 0)).collect();
+    Ok(CpModel::new(
+        tilde.a.scale_cols(&scales),
+        tilde.b.clone(),
+        tilde.c.clone(),
+    ))
+}
+
+/// §IV-D second stage: given `Ỹ = U·(AΠΣ)` recovered from the stacked solve
+/// over the *sensing-expanded* space (`U (αL×I)` sparse, so the system per
+/// column is underdetermined), recover `AΠΣ` column-wise with L1-penalized
+/// least squares (ISTA) — the factor columns of sparse tensors are
+/// compressible, which is what makes this well-posed.
+pub fn sensing_recover_mode(
+    u_sparse: &SparseSignMatrix,
+    tilde_compressed: &Matrix,
+    opts: &IstaOptions,
+) -> Matrix {
+    let u_dense = u_sparse.to_dense(); // αL × I
+    let i_dim = u_dense.cols();
+    let mut out = Matrix::zeros(i_dim, tilde_compressed.cols());
+    // Per column: λ is *relative* — `opts.lambda · ‖Uᵀy‖_∞` (λ_max scaling),
+    // so recovery is invariant to the column's unknown Σ scale.
+    for col in 0..tilde_compressed.cols() {
+        let rhs = Matrix::from_fn(tilde_compressed.rows(), 1, |r, _| tilde_compressed.get(r, col));
+        let atb = crate::linalg::matmul(&u_dense, crate::linalg::Trans::Yes, &rhs, crate::linalg::Trans::No);
+        let lam_max = atb.max_abs();
+        if lam_max == 0.0 {
+            continue;
+        }
+        let col_opts = IstaOptions {
+            lambda: opts.lambda * lam_max,
+            ..opts.clone()
+        };
+        let (x, _iters) = ista_l1(&u_dense, &rhs, &col_opts);
+        // Hard-threshold relative to the column max, then debias with an
+        // unregularized least squares on the support (LASSO debiasing).
+        let xmax = x.max_abs();
+        let support: Vec<usize> = (0..i_dim)
+            .filter(|&i| x.get(i, 0).abs() > 0.02 * xmax)
+            .collect();
+        if support.is_empty() || support.len() > u_dense.rows() {
+            for i in 0..i_dim {
+                out.set(i, col, x.get(i, 0));
+            }
+            continue;
+        }
+        let sub = Matrix::from_fn(u_dense.rows(), support.len(), |r, c| {
+            u_dense.get(r, support[c])
+        });
+        match lstsq(&sub, &rhs) {
+            Ok(coef) => {
+                for (c, &i) in support.iter().enumerate() {
+                    out.set(i, col, coef.get(c, 0));
+                }
+            }
+            Err(_) => {
+                for i in 0..i_dim {
+                    out.set(i, col, x.get(i, 0));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Convenience used by the pipeline: normalize + align in one pass,
+/// dropping replicas whose anchor blocks degenerate (paper pads `P` by +10
+/// precisely to tolerate such drops).  Returns the aligned models and the
+/// **kept replica indices** (same order), so callers can subset the
+/// compression maps to match before the stacked solve.
+pub fn normalize_and_align(
+    models: Vec<(usize, CpModel)>,
+    anchor_rows: usize,
+) -> Result<(Vec<CpModel>, Vec<usize>)> {
+    normalize_and_align_min(models, anchor_rows, 0)
+}
+
+/// As [`normalize_and_align`], but guarantees at least `min_keep` replicas
+/// survive (best-scoring first) even when anchor matches are poor — on
+/// tensors that are only *approximately* low rank every replica matches
+/// imperfectly, and dropping below the identifiability bound would kill
+/// the stacked solve entirely.
+pub fn normalize_and_align_min(
+    models: Vec<(usize, CpModel)>,
+    anchor_rows: usize,
+    min_keep: usize,
+) -> Result<(Vec<CpModel>, Vec<usize>)> {
+    use super::matching::align_to_reference;
+    // Normalize all; mark failures.
+    let mut normalized: Vec<(usize, CpModel)> = Vec::with_capacity(models.len());
+    for (idx, mut m) in models {
+        if anchor_normalize(&mut m, anchor_rows).is_ok() {
+            normalized.push((idx, m));
+        }
+    }
+    let reference = normalized
+        .first()
+        .map(|(_, m)| m.clone())
+        .context("every replica failed anchor normalization")?;
+    // Score every replica; a poor anchor match means its components don't
+    // correspond to the reference's (e.g. ALS merged two components).
+    let mut scored: Vec<(f64, usize, CpModel)> = Vec::new();
+    for (idx, m) in normalized {
+        if let Ok((am, report)) = align_to_reference(&reference, &m, anchor_rows) {
+            scored.push((report.match_score, idx, am));
+        }
+    }
+    scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let mut aligned = Vec::new();
+    let mut kept = Vec::new();
+    for (rank_pos, (score, idx, am)) in scored.into_iter().enumerate() {
+        if score > 0.97 || rank_pos < min_keep {
+            aligned.push(am);
+            kept.push(idx);
+        }
+    }
+    Ok((aligned, kept))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    /// Builds the exact compressed models `A_p = U_p A` (no ALS noise) to
+    /// test the algebra of recovery in isolation.
+    fn exact_replica_models(
+        truth: &CpModel,
+        maps: &ReplicaMaps,
+    ) -> Vec<CpModel> {
+        use crate::linalg::{matmul, Trans};
+        maps.replicas
+            .iter()
+            .map(|r| {
+                CpModel::new(
+                    matmul(&r.u, Trans::No, &truth.a, Trans::No),
+                    matmul(&r.v, Trans::No, &truth.b, Trans::No),
+                    matmul(&r.w, Trans::No, &truth.c, Trans::No),
+                )
+            })
+            .collect()
+    }
+
+    fn truth_model(dims: [usize; 3], rank: usize, seed: u64) -> CpModel {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        CpModel::new(
+            Matrix::random_normal(dims[0], rank, &mut rng),
+            Matrix::random_normal(dims[1], rank, &mut rng),
+            Matrix::random_normal(dims[2], rank, &mut rng),
+        )
+    }
+
+    #[test]
+    fn stacked_recovery_inverts_exact_compression() {
+        // Rank of the stacked map is S + P(L−S) = 4 + 8·4 = 36 ≥ 30.
+        let dims = [30, 28, 26];
+        let truth = truth_model(dims, 3, 300);
+        let maps = ReplicaMaps::generate(dims, [8, 8, 8], 8, 4, 301);
+        let models = exact_replica_models(&truth, &maps);
+        // With exact (unpermuted, unscaled) replicas, stacked recovery must
+        // reproduce the factors exactly.
+        let rec = stacked_recover(&models, &maps).unwrap();
+        assert!(rec.a.rel_error(&truth.a) < 1e-3, "A err {}", rec.a.rel_error(&truth.a));
+        assert!(rec.b.rel_error(&truth.b) < 1e-3);
+        assert!(rec.c.rel_error(&truth.c) < 1e-3);
+    }
+
+    #[test]
+    fn stacked_recovery_rejects_underdetermined() {
+        let dims = [100, 10, 10];
+        let truth = truth_model(dims, 2, 302);
+        let maps = ReplicaMaps::generate(dims, [5, 5, 5], 2, 3, 303); // 2·5 < 100
+        let models = exact_replica_models(&truth, &maps);
+        assert!(stacked_recover(&models, &maps).is_err());
+    }
+
+    #[test]
+    fn normalize_and_align_with_planted_perms() {
+        let dims = [24, 24, 24];
+        let truth = truth_model(dims, 3, 304);
+        let maps = ReplicaMaps::generate(dims, [8, 8, 8], 5, 4, 305);
+        let mut models = exact_replica_models(&truth, &maps);
+        // Scramble replicas 1.. with per-replica permutation and scales.
+        let perms = [[1usize, 2, 0], [2, 0, 1], [0, 2, 1], [1, 0, 2]];
+        for (idx, m) in models.iter_mut().enumerate().skip(1) {
+            let perm = &perms[(idx - 1) % perms.len()];
+            let scales = [1.7f32, -0.6, 2.3];
+            m.a = m.a.permute_cols(perm).scale_cols(&scales);
+            m.b = m.b.permute_cols(perm).scale_cols(&scales);
+            m.c = m.c.permute_cols(perm).scale_cols(&scales);
+        }
+        let (aligned, kept) =
+            normalize_and_align(models.into_iter().enumerate().collect(), 4).unwrap();
+        // kept is score-ordered; all five replicas must survive.
+        let mut sorted = kept.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2, 3, 4]);
+        assert_eq!(aligned.len(), 5);
+        // aligned[i] pairs with maps.subset(&kept)[i].
+        let rec = stacked_recover(&aligned, &maps.subset(&kept)).unwrap();
+        // rec = A Π Σ for a common ΠΣ: congruence with truth must be ~1.
+        let c = crate::cp::factor_congruence(&truth.a, &rec.a);
+        assert!(c > 0.999, "congruence {c}");
+    }
+
+    #[test]
+    fn corner_disambiguation_recovers_truth_exactly_scaled() {
+        let dims = [20, 18, 16];
+        let truth = truth_model(dims, 2, 306);
+        // tilde = truth with a hidden permutation+scaling.
+        let tilde = truth.permute_and_scale(&[1, 0], &[2.5, -1.25]);
+        let corner_b = 8;
+        let corner = DenseTensor::from_cp_factors(
+            &truth.a.slice_rows(0, corner_b),
+            &truth.b.slice_rows(0, corner_b),
+            &truth.c.slice_rows(0, corner_b),
+        );
+        let rows: Vec<usize> = (0..corner_b).collect();
+        let rec = corner_disambiguate(
+            &tilde,
+            &corner,
+            [&rows, &rows, &rows],
+            &AlsOptions {
+                rank: 2,
+                max_iters: 300,
+                tol: 1e-13,
+                seed: 7,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        // Reconstruction must match the truth tensor.
+        let t_truth = truth.to_tensor();
+        let t_rec = rec.to_tensor();
+        assert!(
+            t_rec.rel_error(&t_truth) < 1e-2,
+            "err {}",
+            t_rec.rel_error(&t_truth)
+        );
+    }
+
+    #[test]
+    fn sensing_recovery_recovers_sparse_columns() {
+        // Sparse factor column, sensed through a sparse JL map.
+        let mut rng = Xoshiro256::seed_from_u64(307);
+        let i_dim = 60;
+        let u = SparseSignMatrix::generate(30, i_dim, 4, 308);
+        let mut a = Matrix::zeros(i_dim, 2);
+        for (col, rows) in [(0usize, [3usize, 20, 41]), (1usize, [7, 33, 55])].iter() {
+            for &row in rows {
+                a.set(row, *col, 1.0 + rng.next_gaussian().abs() as f32);
+            }
+        }
+        let ua = u.mul_dense(&a);
+        let rec = sensing_recover_mode(
+            &u,
+            &ua,
+            &IstaOptions {
+                lambda: 1e-3,
+                max_iters: 3000,
+                tol: 1e-10,
+            },
+        );
+        assert!(rec.rel_error(&a) < 0.05, "err {}", rec.rel_error(&a));
+    }
+
+    #[test]
+    fn full_pipeline_algebra_end_to_end() {
+        // Exact algebra (no ALS on proxies): compress → scramble → align →
+        // stack → corner-disambiguate must reproduce the planted tensor.
+        let dims = [26, 26, 26];
+        let truth = truth_model(dims, 2, 309);
+        let maps = ReplicaMaps::generate(dims, [9, 9, 9], 4, 3, 310);
+        let mut models = exact_replica_models(&truth, &maps);
+        for (idx, m) in models.iter_mut().enumerate() {
+            let perm = if idx % 2 == 0 { [1usize, 0] } else { [0usize, 1] };
+            let scales = [1.0 + idx as f32, -(1.0 + idx as f32 / 2.0)];
+            m.a = m.a.permute_cols(&perm).scale_cols(&scales);
+            m.b = m.b.permute_cols(&perm).scale_cols(&scales);
+            m.c = m.c.permute_cols(&perm).scale_cols(&scales);
+        }
+        let (aligned, kept) =
+            normalize_and_align(models.into_iter().enumerate().collect(), 3).unwrap();
+        let tilde = stacked_recover(&aligned, &maps.subset(&kept)).unwrap();
+        let corner = DenseTensor::from_cp_factors(
+            &truth.a.slice_rows(0, 8),
+            &truth.b.slice_rows(0, 8),
+            &truth.c.slice_rows(0, 8),
+        );
+        let rows: Vec<usize> = (0..8).collect();
+        let rec = corner_disambiguate(
+            &tilde,
+            &corner,
+            [&rows, &rows, &rows],
+            &AlsOptions {
+                rank: 2,
+                max_iters: 300,
+                tol: 1e-13,
+                seed: 11,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let err = rec.to_tensor().rel_error(&truth.to_tensor());
+        assert!(err < 1e-2, "end-to-end algebra err {err}");
+    }
+}

@@ -1,0 +1,308 @@
+//! Alternating Least Squares CP decomposition — Algorithm 1 of the paper.
+//!
+//! This is the routine the compressed pipeline calls on each (small) proxy
+//! tensor, and — run directly on the full tensor — the "Baseline (CPU)"
+//! variant of every benchmark figure.
+//!
+//! Per sweep, for each mode:
+//! `A ← X_(1)(C ⊙ B) · (CᵀC * BᵀB)⁻¹` (and cyclically for B, C), where the
+//! MTTKRP `X_(1)(C ⊙ B)` is the hot spot and the Gram solve is a tiny `R×R`
+//! ridge-damped Cholesky.
+
+use super::init::{hosvd_init, random_init, InitMethod};
+use super::model::CpModel;
+use crate::linalg::products::{hadamard, khatri_rao};
+use crate::linalg::{matmul, ridge_solve, Matrix, Trans};
+use crate::tensor::unfold::{unfold_1, unfold_2, unfold_3};
+use crate::tensor::{DenseTensor, SparseTensor};
+use crate::util::rng::Xoshiro256;
+use anyhow::Result;
+
+/// ALS configuration.
+#[derive(Clone, Debug)]
+pub struct AlsOptions {
+    pub rank: usize,
+    pub max_iters: usize,
+    /// Stop when the relative fit change between sweeps drops below this.
+    pub tol: f64,
+    pub init: InitMethod,
+    pub seed: u64,
+    /// Ridge damping for the Gram solves (0 disables).
+    pub ridge: f32,
+}
+
+impl Default for AlsOptions {
+    fn default() -> Self {
+        Self {
+            rank: 5,
+            max_iters: 100,
+            tol: 1e-8,
+            init: InitMethod::Random,
+            seed: 0,
+            ridge: 1e-8,
+        }
+    }
+}
+
+/// Convergence trace: relative fit per sweep
+/// (`fit = 1 − ‖X − X̂‖/‖X‖`, the Tensor-Toolbox convention).
+#[derive(Clone, Debug, Default)]
+pub struct AlsTrace {
+    pub fits: Vec<f64>,
+    pub iters: usize,
+    pub converged: bool,
+}
+
+/// Dense direct ALS (Alg. 1).  Returns the model and its trace.
+pub fn als_decompose(t: &DenseTensor, opts: &AlsOptions) -> Result<(CpModel, AlsTrace)> {
+    let mut rng = Xoshiro256::seed_from_u64(opts.seed);
+    let (a0, b0, c0) = match opts.init {
+        InitMethod::Random => random_init(t.dims(), opts.rank, &mut rng),
+        InitMethod::Hosvd => hosvd_init(t, opts.rank, &mut rng),
+    };
+    let x1 = unfold_1(t);
+    let x2 = unfold_2(t);
+    let x3 = unfold_3(t);
+    let norm_x = t.frobenius_norm();
+
+    let mut model = CpModel::new(a0, b0, c0);
+    let mut trace = AlsTrace::default();
+    let mut prev_fit = f64::NEG_INFINITY;
+
+    for it in 0..opts.max_iters {
+        // Mode 1: A ← X₁ (C⊙B) (CᵀC * BᵀB)⁻¹
+        model.a = mode_update(&x1, &model.c, &model.b, opts.ridge)?;
+        // Mode 2: B ← X₂ (C⊙A) (CᵀC * AᵀA)⁻¹
+        model.b = mode_update(&x2, &model.c, &model.a, opts.ridge)?;
+        // Mode 3: C ← X₃ (B⊙A) (BᵀB * AᵀA)⁻¹
+        model.c = mode_update(&x3, &model.b, &model.a, opts.ridge)?;
+
+        let fit = fit_dense(norm_x, &x1, &model);
+        trace.fits.push(fit);
+        trace.iters = it + 1;
+        if (fit - prev_fit).abs() < opts.tol && it > 0 {
+            trace.converged = true;
+            break;
+        }
+        prev_fit = fit;
+    }
+    Ok((model, trace))
+}
+
+/// One ALS mode update given the mode unfolding and the other two factors
+/// (`slow ⊙ fast` ordering must match the unfolding convention).
+fn mode_update(x_n: &Matrix, slow: &Matrix, fast: &Matrix, ridge: f32) -> Result<Matrix> {
+    let kr = khatri_rao(slow, fast);
+    let mttkrp = matmul(x_n, Trans::No, &kr, Trans::No);
+    let gram = hadamard(
+        &matmul(slow, Trans::Yes, slow, Trans::No),
+        &matmul(fast, Trans::Yes, fast, Trans::No),
+    );
+    // Solve gram · Fᵀ = mttkrpᵀ  ⇒  F = mttkrp · gram⁻¹ (gram symmetric).
+    let sol = ridge_solve(&gram, &mttkrp.transpose(), ridge)?;
+    Ok(sol.transpose())
+}
+
+/// Relative fit `1 − ‖X − X̂‖/‖X‖` computed without forming `X̂`:
+/// `‖X − X̂‖² = ‖X‖² − 2⟨X₁, Â(C⊙B)ᵀ⟩ + ‖X̂‖²`, with the inner product as a
+/// trace of small matrices.
+fn fit_dense(norm_x: f64, x1: &Matrix, model: &CpModel) -> f64 {
+    let kr = khatri_rao(&model.c, &model.b);
+    // ⟨X₁, A·KRᵀ⟩ = Tr(Aᵀ·X₁·KR)
+    let x1kr = matmul(x1, Trans::No, &kr, Trans::No); // I×R
+    let mut inner = 0.0f64;
+    for r in 0..model.rank() {
+        for i in 0..model.a.rows() {
+            inner += model.a.get(i, r) as f64 * x1kr.get(i, r) as f64;
+        }
+    }
+    let resid_sq = (norm_x * norm_x - 2.0 * inner + model.norm_sq()).max(0.0);
+    1.0 - resid_sq.sqrt() / norm_x.max(1e-300)
+}
+
+/// Sparse direct ALS: same sweep structure with sparse MTTKRP.
+pub fn als_decompose_sparse(t: &SparseTensor, opts: &AlsOptions) -> Result<(CpModel, AlsTrace)> {
+    let mut rng = Xoshiro256::seed_from_u64(opts.seed);
+    let (a0, b0, c0) = random_init(t.dims(), opts.rank, &mut rng);
+    let norm_x = t.frobenius_norm();
+
+    let mut model = CpModel::new(a0, b0, c0);
+    let mut trace = AlsTrace::default();
+    let mut prev_fit = f64::NEG_INFINITY;
+
+    for it in 0..opts.max_iters {
+        let m1 = t.mttkrp(1, &model.b, &model.c);
+        model.a = gram_solve(&m1, &model.c, &model.b, opts.ridge)?;
+        let m2 = t.mttkrp(2, &model.a, &model.c);
+        model.b = gram_solve(&m2, &model.c, &model.a, opts.ridge)?;
+        let m3 = t.mttkrp(3, &model.a, &model.b);
+        model.c = gram_solve(&m3, &model.b, &model.a, opts.ridge)?;
+
+        let resid_sq = t.residual_sq(&model.a, &model.b, &model.c);
+        let fit = 1.0 - resid_sq.sqrt() / norm_x.max(1e-300);
+        trace.fits.push(fit);
+        trace.iters = it + 1;
+        if (fit - prev_fit).abs() < opts.tol && it > 0 {
+            trace.converged = true;
+            break;
+        }
+        prev_fit = fit;
+    }
+    Ok((model, trace))
+}
+
+fn gram_solve(mttkrp: &Matrix, g1: &Matrix, g2: &Matrix, ridge: f32) -> Result<Matrix> {
+    let gram = hadamard(
+        &matmul(g1, Trans::Yes, g1, Trans::No),
+        &matmul(g2, Trans::Yes, g2, Trans::No),
+    );
+    let sol = ridge_solve(&gram, &mttkrp.transpose(), ridge)?;
+    Ok(sol.transpose())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn planted(dims: [usize; 3], rank: usize, seed: u64) -> (DenseTensor, CpModel) {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let m = CpModel::new(
+            Matrix::random_normal(dims[0], rank, &mut rng),
+            Matrix::random_normal(dims[1], rank, &mut rng),
+            Matrix::random_normal(dims[2], rank, &mut rng),
+        );
+        (m.to_tensor(), m)
+    }
+
+    #[test]
+    fn recovers_exact_low_rank() {
+        let (t, _) = planted([12, 11, 10], 3, 100);
+        let (model, trace) = als_decompose(
+            &t,
+            &AlsOptions {
+                rank: 3,
+                max_iters: 200,
+                tol: 1e-12,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let rec = model.to_tensor();
+        let err = rec.rel_error(&t);
+        assert!(err < 1e-3, "rel error {err}, fits {:?}", trace.fits.last());
+        assert!(trace.fits.last().unwrap() > &0.999);
+    }
+
+    #[test]
+    fn fit_is_monotone_ish() {
+        let (t, _) = planted([10, 10, 10], 2, 101);
+        let (_, trace) = als_decompose(
+            &t,
+            &AlsOptions {
+                rank: 2,
+                max_iters: 30,
+                tol: 0.0,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        // ALS is monotone in exact arithmetic; the fit *estimator* has an
+        // f32 cancellation noise floor (~3e-4 near fit=1), so allow that.
+        for w in trace.fits.windows(2) {
+            assert!(w[1] > w[0] - 1e-3, "fit decreased: {:?}", trace.fits);
+        }
+    }
+
+    #[test]
+    fn hosvd_init_converges_faster_or_equal() {
+        let (t, _) = planted([14, 14, 14], 3, 102);
+        let opts_r = AlsOptions {
+            rank: 3,
+            max_iters: 50,
+            tol: 1e-10,
+            init: InitMethod::Random,
+            ..Default::default()
+        };
+        let opts_h = AlsOptions {
+            init: InitMethod::Hosvd,
+            ..opts_r.clone()
+        };
+        let (_, tr) = als_decompose(&t, &opts_r).unwrap();
+        let (_, th) = als_decompose(&t, &opts_h).unwrap();
+        // HOSVD should reach convergence in no more sweeps (usually fewer).
+        assert!(th.iters <= tr.iters + 2, "hosvd {} vs random {}", th.iters, tr.iters);
+    }
+
+    #[test]
+    fn noisy_tensor_fit_reasonable() {
+        let mut rng = Xoshiro256::seed_from_u64(103);
+        let (clean, _) = planted([10, 10, 10], 2, 104);
+        let mut noisy = clean.clone();
+        for x in noisy.data_mut() {
+            *x += 0.01 * rng.next_gaussian() as f32;
+        }
+        let (model, _) = als_decompose(
+            &noisy,
+            &AlsOptions {
+                rank: 2,
+                max_iters: 60,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        // Should denoise towards the clean tensor.
+        assert!(model.to_tensor().rel_error(&clean) < 0.02);
+    }
+
+    #[test]
+    fn sparse_als_recovers_sparse_planted() {
+        // Sparse factors (few nonzeros per column) → sparse tensor.
+        let gen = crate::tensor::SparseLowRankGenerator::new(20, 20, 20, 2, 4, 105);
+        let (a, b, c) = gen.factors();
+        let dense = DenseTensor::from_cp_factors(a, b, c);
+        let sparse = SparseTensor::from_dense(&dense, 0.0);
+        let (model, trace) = als_decompose_sparse(
+            &sparse,
+            &AlsOptions {
+                rank: 2,
+                max_iters: 200,
+                tol: 1e-12,
+                seed: 1,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let err = model.to_tensor().rel_error(&dense);
+        assert!(err < 1e-2, "err {err}, fit {:?}", trace.fits.last());
+    }
+
+    #[test]
+    fn rank_one_trivial() {
+        let (t, _) = planted([5, 5, 5], 1, 106);
+        let (model, _) = als_decompose(
+            &t,
+            &AlsOptions {
+                rank: 1,
+                max_iters: 50,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(model.to_tensor().rel_error(&t) < 1e-3);
+    }
+
+    #[test]
+    fn overparameterized_rank_still_fits() {
+        let (t, _) = planted([8, 8, 8], 2, 107);
+        let (model, _) = als_decompose(
+            &t,
+            &AlsOptions {
+                rank: 4, // more than true rank
+                max_iters: 80,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(model.to_tensor().rel_error(&t) < 1e-2);
+    }
+}

@@ -1,0 +1,90 @@
+//! Factor initialization for ALS.
+//!
+//! Two strategies, matching the Table-I baselines (DESIGN.md
+//! "Substitutions"): random normal (TensorLy's default) and HOSVD-style
+//! leading eigenvectors of the unfolding Grams (the Matlab Tensor Toolbox
+//! `'nvecs'` option).
+
+use crate::linalg::eig::leading_eigvecs;
+use crate::linalg::{matmul, Matrix, Trans};
+use crate::tensor::unfold::{unfold_1, unfold_2, unfold_3};
+use crate::tensor::DenseTensor;
+use crate::util::rng::Xoshiro256;
+
+/// Initialization strategy selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InitMethod {
+    Random,
+    Hosvd,
+}
+
+/// Random normal factors.
+pub fn random_init(dims: [usize; 3], rank: usize, rng: &mut Xoshiro256) -> (Matrix, Matrix, Matrix) {
+    (
+        Matrix::random_normal(dims[0], rank, rng),
+        Matrix::random_normal(dims[1], rank, rng),
+        Matrix::random_normal(dims[2], rank, rng),
+    )
+}
+
+/// HOSVD init: leading `rank` eigenvectors of `X_(n) X_(n)ᵀ` per mode.
+/// If `rank > dim_n` the remaining columns are filled with random normals
+/// (Tensor Toolbox behaviour).
+pub fn hosvd_init(t: &DenseTensor, rank: usize, rng: &mut Xoshiro256) -> (Matrix, Matrix, Matrix) {
+    let per_mode = |x: &Matrix, dim: usize, rng: &mut Xoshiro256| -> Matrix {
+        let gram = matmul(x, Trans::No, x, Trans::Yes);
+        let v = leading_eigvecs(&gram, rank.min(dim));
+        if v.cols() == rank {
+            v
+        } else {
+            let extra = Matrix::random_normal(dim, rank - v.cols(), rng);
+            let mut out = Matrix::zeros(dim, rank);
+            out.set_block(0, 0, &v);
+            out.set_block(0, v.cols(), &extra);
+            out
+        }
+    };
+    let [i, j, k] = t.dims();
+    let a = per_mode(&unfold_1(t), i, rng);
+    let b = per_mode(&unfold_2(t), j, rng);
+    let c = per_mode(&unfold_3(t), k, rng);
+    (a, b, c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_init_shapes() {
+        let mut rng = Xoshiro256::seed_from_u64(90);
+        let (a, b, c) = random_init([4, 5, 6], 3, &mut rng);
+        assert_eq!((a.rows(), a.cols()), (4, 3));
+        assert_eq!((b.rows(), b.cols()), (5, 3));
+        assert_eq!((c.rows(), c.cols()), (6, 3));
+    }
+
+    #[test]
+    fn hosvd_init_spans_signal_subspace() {
+        // For an exactly rank-2 tensor, the HOSVD factors must span the true
+        // column space of each unfolding.
+        let mut rng = Xoshiro256::seed_from_u64(91);
+        let a_true = Matrix::random_normal(6, 2, &mut rng);
+        let b_true = Matrix::random_normal(7, 2, &mut rng);
+        let c_true = Matrix::random_normal(8, 2, &mut rng);
+        let t = DenseTensor::from_cp_factors(&a_true, &b_true, &c_true);
+        let (a0, _, _) = hosvd_init(&t, 2, &mut rng);
+        // Project a_true onto span(a0): residual should vanish.
+        let proj = matmul(&a0, Trans::No, &matmul(&a0, Trans::Yes, &a_true, Trans::No), Trans::No);
+        assert!(proj.rel_error(&a_true) < 1e-3, "err={}", proj.rel_error(&a_true));
+    }
+
+    #[test]
+    fn hosvd_init_pads_when_rank_exceeds_dim() {
+        let mut rng = Xoshiro256::seed_from_u64(92);
+        let t = DenseTensor::random_normal([2, 8, 8], &mut rng);
+        let (a, _, _) = hosvd_init(&t, 5, &mut rng);
+        assert_eq!((a.rows(), a.cols()), (2, 5));
+        assert!(a.slice_cols(2, 5).max_abs() > 0.0); // padded columns nonzero
+    }
+}

@@ -1,0 +1,15 @@
+//! CP decomposition core: the direct ALS algorithm (Alg. 1 of the paper,
+//! the "Baseline (CPU)" of every benchmark), factor initialization, model
+//! types, and error/congruence diagnostics.
+
+pub mod als;
+pub mod error;
+pub mod init;
+pub mod model;
+pub mod tucker;
+
+pub use als::{als_decompose, als_decompose_sparse, AlsOptions, AlsTrace};
+pub use error::{factor_congruence, model_congruence, sampled_mse, SampledError};
+pub use init::{hosvd_init, random_init, InitMethod};
+pub use model::CpModel;
+pub use tucker::{hooi, hosvd, TuckerModel};

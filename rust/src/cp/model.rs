@@ -1,0 +1,163 @@
+//! The CP model `[[A, B, C]]` and factor-level operations shared by the
+//! direct and compressed paths.
+
+use crate::linalg::{matmul, Matrix, Trans};
+use crate::linalg::products::{hadamard, khatri_rao};
+use crate::tensor::DenseTensor;
+
+/// A rank-R CP model of a third-order tensor: `X ≈ Σ_r a_r ∘ b_r ∘ c_r`.
+#[derive(Clone, Debug)]
+pub struct CpModel {
+    pub a: Matrix,
+    pub b: Matrix,
+    pub c: Matrix,
+}
+
+impl CpModel {
+    pub fn new(a: Matrix, b: Matrix, c: Matrix) -> Self {
+        assert_eq!(a.cols(), b.cols(), "rank mismatch A/B");
+        assert_eq!(b.cols(), c.cols(), "rank mismatch B/C");
+        Self { a, b, c }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.a.cols()
+    }
+
+    pub fn dims(&self) -> [usize; 3] {
+        [self.a.rows(), self.b.rows(), self.c.rows()]
+    }
+
+    /// Materializes the full tensor (small models only).
+    pub fn to_tensor(&self) -> DenseTensor {
+        DenseTensor::from_cp_factors(&self.a, &self.b, &self.c)
+    }
+
+    /// Model value at one index — used for streamed/sampled error.
+    #[inline]
+    pub fn value_at(&self, i: usize, j: usize, k: usize) -> f32 {
+        let mut s = 0.0;
+        for r in 0..self.rank() {
+            s += self.a.get(i, r) * self.b.get(j, r) * self.c.get(k, r);
+        }
+        s
+    }
+
+    /// `‖[[A,B,C]]‖_F²` via the Gram-Hadamard identity (O(R²·dims) not
+    /// O(IJK)).
+    pub fn norm_sq(&self) -> f64 {
+        let g = hadamard(
+            &hadamard(
+                &matmul(&self.a, Trans::Yes, &self.a, Trans::No),
+                &matmul(&self.b, Trans::Yes, &self.b, Trans::No),
+            ),
+            &matmul(&self.c, Trans::Yes, &self.c, Trans::No),
+        );
+        g.data().iter().map(|&x| x as f64).sum()
+    }
+
+    /// Normalizes all factor columns to unit norm, pushing magnitudes into
+    /// per-component weights (returned).  Standard CP normal form.
+    pub fn normalize(&mut self) -> Vec<f32> {
+        let na = self.a.normalize_cols();
+        let nb = self.b.normalize_cols();
+        let nc = self.c.normalize_cols();
+        na.iter()
+            .zip(&nb)
+            .zip(&nc)
+            .map(|((&x, &y), &z)| x * y * z)
+            .collect()
+    }
+
+    /// Applies weights back into the first factor (inverse of a
+    /// `normalize` round-trip when B, C stay unit-norm).
+    pub fn absorb_weights(&mut self, weights: &[f32]) {
+        self.a = self.a.scale_cols(weights);
+    }
+
+    /// Applies a column permutation + per-column scale to all factors:
+    /// the `(Π, Σ)` disambiguation of Alg. 2 (scale applied to A only —
+    /// the convention used throughout the recovery stage).
+    pub fn permute_and_scale(&self, perm: &[usize], scale_a: &[f32]) -> CpModel {
+        CpModel {
+            a: self.a.permute_cols(perm).scale_cols(scale_a),
+            b: self.b.permute_cols(perm),
+            c: self.c.permute_cols(perm),
+        }
+    }
+
+    /// Mode-1 reconstruction `A (C ⊙ B)ᵀ` (for validation on small sizes).
+    pub fn unfold1(&self) -> Matrix {
+        matmul(&self.a, Trans::No, &khatri_rao(&self.c, &self.b), Trans::Yes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn random_model(seed: u64) -> CpModel {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        CpModel::new(
+            Matrix::random_normal(5, 3, &mut rng),
+            Matrix::random_normal(6, 3, &mut rng),
+            Matrix::random_normal(7, 3, &mut rng),
+        )
+    }
+
+    #[test]
+    fn norm_sq_matches_dense() {
+        let m = random_model(80);
+        let dense = m.to_tensor();
+        let direct = dense.frobenius_norm().powi(2);
+        assert!((m.norm_sq() - direct).abs() / direct < 1e-4);
+    }
+
+    #[test]
+    fn value_at_matches_dense() {
+        let m = random_model(81);
+        let dense = m.to_tensor();
+        for (i, j, k) in [(0, 0, 0), (4, 5, 6), (2, 3, 1)] {
+            assert!((m.value_at(i, j, k) - dense.get(i, j, k)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn normalize_preserves_tensor() {
+        let mut m = random_model(82);
+        let before = m.to_tensor();
+        let w = m.normalize();
+        // Unit columns now.
+        for j in 0..3 {
+            let n: f32 = m.a.col(j).iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert!((n - 1.0).abs() < 1e-5);
+        }
+        m.absorb_weights(&w);
+        let after = m.to_tensor();
+        assert!(after.rel_error(&before) < 1e-5);
+    }
+
+    #[test]
+    fn permute_and_scale_preserves_up_to_reorder() {
+        let m = random_model(83);
+        let perm = [2usize, 0, 1];
+        let scale = [1.0f32, 1.0, 1.0];
+        let p = m.permute_and_scale(&perm, &scale);
+        // Same tensor (permutation of rank-1 terms is a no-op on the sum).
+        assert!(p.to_tensor().rel_error(&m.to_tensor()) < 1e-5);
+    }
+
+    #[test]
+    fn unfold1_matches_tensor_unfolding() {
+        let m = random_model(84);
+        let x1 = crate::tensor::unfold::unfold_1(&m.to_tensor());
+        assert!(m.unfold1().rel_error(&x1) < 1e-5);
+    }
+
+    #[test]
+    #[should_panic(expected = "rank mismatch")]
+    fn rank_mismatch_rejected() {
+        let _ = CpModel::new(Matrix::zeros(2, 2), Matrix::zeros(2, 3), Matrix::zeros(2, 3));
+    }
+}

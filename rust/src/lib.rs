@@ -1,0 +1,53 @@
+//! # Exascale-Tensor
+//!
+//! Reproduction of *"Scalable CP Decomposition for Tensor Learning using GPU
+//! Tensor Cores"* (Zhang et al., 2023): a compression-based CP decomposition
+//! framework that trades computation for storage so that tensors far larger
+//! than main memory can be decomposed.
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer stack:
+//!
+//! * **L1** — Pallas kernels (blocked TTM compression, MTTKRP, split-precision
+//!   matmul) authored in `python/compile/kernels/`, lowered ahead of time.
+//! * **L2** — JAX graphs (`python/compile/model.py`) calling the kernels,
+//!   exported once as HLO text into `artifacts/`.
+//! * **L3** — this crate: block streaming, the proxy-tensor pipeline of
+//!   Alg. 2 (compress → decompose → match → recover), memory planning,
+//!   worker pools, and the PJRT runtime that executes the artifacts.
+//!
+//! Python never runs on the request path; after `make artifacts` the
+//! `exatensor` binary is self-contained.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use exascale_tensor::coordinator::{Pipeline, PipelineConfig};
+//! use exascale_tensor::tensor::generator::LowRankGenerator;
+//!
+//! let gen = LowRankGenerator::new(400, 400, 400, 5, 42);
+//! let cfg = PipelineConfig::builder()
+//!     .reduced_dims(50, 50, 50)
+//!     .rank(5)
+//!     .build()
+//!     .unwrap();
+//! let mut pipe = Pipeline::new(cfg);
+//! let result = pipe.run(&gen).unwrap();
+//! println!("relative factor error: {}", result.diagnostics.max_factor_error);
+//! ```
+
+pub mod apps;
+pub mod bench_harness;
+pub mod compress;
+pub mod coordinator;
+pub mod cp;
+pub mod linalg;
+pub mod mixed;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+pub use coordinator::{Pipeline, PipelineConfig, PipelineResult};
+pub use tensor::{DenseTensor, SparseTensor};
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

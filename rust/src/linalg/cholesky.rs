@@ -1,0 +1,161 @@
+//! Cholesky factorization and SPD solves.
+//!
+//! The ALS normal equations (Alg. 1 line 3) solve against Gram-matrix
+//! products `(CᵀC * BᵀB)` which are symmetric positive (semi-)definite of
+//! size `R×R` — tiny — so an unblocked Cholesky with a diagonal-jitter
+//! retry is the right tool.
+
+use super::matrix::Matrix;
+use anyhow::{bail, Result};
+
+/// Lower-triangular Cholesky factor `L` with `A = L·Lᵀ`.
+///
+/// Fails if `A` is not positive definite (after one jitter retry is the
+/// caller's job — see [`cholesky_solve`]).
+pub fn cholesky_factor(a: &Matrix) -> Result<Matrix> {
+    let n = a.rows();
+    if a.cols() != n {
+        bail!("cholesky: matrix must be square, got {}x{}", n, a.cols());
+    }
+    let mut l = Matrix::zeros(n, n);
+    for j in 0..n {
+        // diagonal
+        let mut d = a.get(j, j) as f64;
+        for k in 0..j {
+            let ljk = l.get(j, k) as f64;
+            d -= ljk * ljk;
+        }
+        if d <= 0.0 || !d.is_finite() {
+            bail!("cholesky: not positive definite at pivot {j} (d={d})");
+        }
+        let dj = d.sqrt();
+        l.set(j, j, dj as f32);
+        // below-diagonal column j
+        for i in (j + 1)..n {
+            let mut s = a.get(i, j) as f64;
+            for k in 0..j {
+                s -= l.get(i, k) as f64 * l.get(j, k) as f64;
+            }
+            l.set(i, j, (s / dj) as f32);
+        }
+    }
+    Ok(l)
+}
+
+/// Solves `A·X = B` for SPD `A` via Cholesky with forward/back substitution.
+/// Retries once with diagonal jitter `1e-6·trace/n` if the factorization
+/// fails (rank-deficient Gram matrices appear when ALS collapses columns).
+pub fn cholesky_solve(a: &Matrix, b: &Matrix) -> Result<Matrix> {
+    let l = match cholesky_factor(a) {
+        Ok(l) => l,
+        Err(_) => {
+            let n = a.rows();
+            let tr: f64 = (0..n).map(|i| a.get(i, i) as f64).sum();
+            let jitter = (1e-6 * tr / n as f64).max(1e-10) as f32;
+            let mut aj = a.clone();
+            for i in 0..n {
+                aj.add_assign_at(i, i, jitter);
+            }
+            cholesky_factor(&aj)?
+        }
+    };
+    Ok(solve_with_factor(&l, b))
+}
+
+/// Given the lower factor `L`, solves `L·Lᵀ·X = B`.
+pub fn solve_with_factor(l: &Matrix, b: &Matrix) -> Matrix {
+    let n = l.rows();
+    assert_eq!(b.rows(), n);
+    let mut x = b.clone();
+    for col in 0..x.cols() {
+        // forward: L y = b
+        for i in 0..n {
+            let mut s = x.get(i, col) as f64;
+            for k in 0..i {
+                s -= l.get(i, k) as f64 * x.get(k, col) as f64;
+            }
+            x.set(i, col, (s / l.get(i, i) as f64) as f32);
+        }
+        // backward: Lᵀ x = y
+        for i in (0..n).rev() {
+            let mut s = x.get(i, col) as f64;
+            for k in (i + 1)..n {
+                s -= l.get(k, i) as f64 * x.get(k, col) as f64;
+            }
+            x.set(i, col, (s / l.get(i, i) as f64) as f32);
+        }
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::{matmul, Trans};
+    use crate::util::rng::Xoshiro256;
+
+    fn spd(n: usize, rng: &mut Xoshiro256) -> Matrix {
+        // G = MᵀM + n·I is SPD.
+        let m = Matrix::random_normal(n + 2, n, rng);
+        let mut g = matmul(&m, Trans::Yes, &m, Trans::No);
+        for i in 0..n {
+            g.add_assign_at(i, i, n as f32);
+        }
+        g
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let a = spd(8, &mut rng);
+        let l = cholesky_factor(&a).unwrap();
+        let llt = matmul(&l, Trans::No, &l, Trans::Yes);
+        assert!(llt.rel_error(&a) < 1e-5);
+        // strictly lower-triangular above diagonal is zero
+        for i in 0..8 {
+            for j in (i + 1)..8 {
+                assert_eq!(l.get(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn solve_recovers_known_x() {
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let a = spd(10, &mut rng);
+        let x_true = Matrix::random_normal(10, 3, &mut rng);
+        let b = matmul(&a, Trans::No, &x_true, Trans::No);
+        let x = cholesky_solve(&a, &b).unwrap();
+        assert!(x.rel_error(&x_true) < 1e-4);
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]); // eigenvalues 3, -1
+        assert!(cholesky_factor(&a).is_err());
+    }
+
+    #[test]
+    fn jitter_handles_singular() {
+        // Rank-1 Gram matrix — singular, but solve should still return
+        // something finite via the jitter path.
+        let a = Matrix::from_rows(&[&[1.0, 1.0], &[1.0, 1.0]]);
+        let b = Matrix::from_rows(&[&[1.0], &[1.0]]);
+        let x = cholesky_solve(&a, &b).unwrap();
+        assert!(x.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn identity_solve_is_rhs() {
+        let i = Matrix::identity(5);
+        let b = Matrix::from_fn(5, 2, |r, c| (r + c) as f32);
+        let x = cholesky_solve(&i, &b).unwrap();
+        assert!(x.rel_error(&b) < 1e-6);
+    }
+
+    #[test]
+    fn non_square_rejected() {
+        let a = Matrix::zeros(3, 4);
+        assert!(cholesky_factor(&a).is_err());
+    }
+}

@@ -1,0 +1,158 @@
+//! Symmetric eigendecomposition via the cyclic Jacobi method.
+//!
+//! Needed by the HOSVD initialization (leading eigenvectors of the Gram
+//! matrices of each unfolding) and by the congruence diagnostics.  Gram
+//! matrices here are at most a few hundred square, where Jacobi is simple
+//! and robust.
+
+use super::matrix::Matrix;
+
+/// Eigendecomposition of a symmetric matrix: `A = V·diag(w)·Vᵀ`.
+/// Returns `(w, V)` with eigenvalues sorted **descending** and eigenvectors
+/// in the corresponding columns of `V`.
+pub fn sym_eig(a: &Matrix) -> (Vec<f32>, Matrix) {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "sym_eig: square matrix required");
+    // Work in f64 for stability.
+    let mut m: Vec<f64> = a.data().iter().map(|&x| x as f64).collect();
+    let idx = |i: usize, j: usize| i + j * n;
+    let mut v = vec![0.0f64; n * n];
+    for i in 0..n {
+        v[idx(i, i)] = 1.0;
+    }
+
+    let max_sweeps = 64;
+    for _ in 0..max_sweeps {
+        // Off-diagonal Frobenius norm.
+        let mut off = 0.0;
+        for j in 0..n {
+            for i in 0..j {
+                off += m[idx(i, j)] * m[idx(i, j)];
+            }
+        }
+        if off.sqrt() < 1e-11 {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[idx(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[idx(p, p)];
+                let aqq = m[idx(q, q)];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Rotate rows/cols p and q of M.
+                for k in 0..n {
+                    let mkp = m[idx(k, p)];
+                    let mkq = m[idx(k, q)];
+                    m[idx(k, p)] = c * mkp - s * mkq;
+                    m[idx(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[idx(p, k)];
+                    let mqk = m[idx(q, k)];
+                    m[idx(p, k)] = c * mpk - s * mqk;
+                    m[idx(q, k)] = s * mpk + c * mqk;
+                }
+                // Accumulate eigenvectors.
+                for k in 0..n {
+                    let vkp = v[idx(k, p)];
+                    let vkq = v[idx(k, q)];
+                    v[idx(k, p)] = c * vkp - s * vkq;
+                    v[idx(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    // Extract, sort descending.
+    let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (m[idx(i, i)], i)).collect();
+    pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let w: Vec<f32> = pairs.iter().map(|&(val, _)| val as f32).collect();
+    let mut vm = Matrix::zeros(n, n);
+    for (out_col, &(_, src_col)) in pairs.iter().enumerate() {
+        for i in 0..n {
+            vm.set(i, out_col, v[idx(i, src_col)] as f32);
+        }
+    }
+    (w, vm)
+}
+
+/// Leading `k` eigenvectors of a symmetric matrix (descending eigenvalues).
+pub fn leading_eigvecs(a: &Matrix, k: usize) -> Matrix {
+    let (_, v) = sym_eig(a);
+    v.slice_cols(0, k.min(v.cols()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::{matmul, Trans};
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn diagonal_matrix_eigs() {
+        let a = Matrix::from_rows(&[&[3.0, 0.0], &[0.0, 1.0]]);
+        let (w, v) = sym_eig(&a);
+        assert!((w[0] - 3.0).abs() < 1e-5);
+        assert!((w[1] - 1.0).abs() < 1e-5);
+        assert!(v.get(0, 0).abs() > 0.99);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] has eigenvalues 3 and 1.
+        let a = Matrix::from_rows(&[&[2.0, 1.0], &[1.0, 2.0]]);
+        let (w, _) = sym_eig(&a);
+        assert!((w[0] - 3.0).abs() < 1e-5);
+        assert!((w[1] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn reconstructs_random_symmetric() {
+        let mut rng = Xoshiro256::seed_from_u64(10);
+        let b = Matrix::random_normal(12, 12, &mut rng);
+        let a = matmul(&b, Trans::Yes, &b, Trans::No); // SPD
+        let (w, v) = sym_eig(&a);
+        // A ≈ V diag(w) Vᵀ
+        let vd = v.scale_cols(&w);
+        let rec = matmul(&vd, Trans::No, &v, Trans::Yes);
+        assert!(rec.rel_error(&a) < 1e-4, "err={}", rec.rel_error(&a));
+        // eigenvalues descending and nonnegative for SPD
+        for i in 1..w.len() {
+            assert!(w[i - 1] >= w[i] - 1e-4);
+            assert!(w[i] > -1e-3);
+        }
+    }
+
+    #[test]
+    fn eigenvectors_orthonormal() {
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        let b = Matrix::random_normal(9, 9, &mut rng);
+        let a = matmul(&b, Trans::Yes, &b, Trans::No);
+        let (_, v) = sym_eig(&a);
+        let vtv = matmul(&v, Trans::Yes, &v, Trans::No);
+        assert!(vtv.rel_error(&Matrix::identity(9)) < 1e-4);
+    }
+
+    #[test]
+    fn leading_eigvecs_shape() {
+        let a = Matrix::identity(5);
+        let v = leading_eigvecs(&a, 2);
+        assert_eq!((v.rows(), v.cols()), (5, 2));
+    }
+
+    #[test]
+    fn low_rank_structure_detected() {
+        // Rank-2 Gram matrix: 3rd eigenvalue ≈ 0.
+        let mut rng = Xoshiro256::seed_from_u64(12);
+        let b = Matrix::random_normal(2, 6, &mut rng);
+        let a = matmul(&b, Trans::Yes, &b, Trans::No); // 6×6 rank ≤ 2
+        let (w, _) = sym_eig(&a);
+        assert!(w[2].abs() < 1e-3, "w={w:?}");
+    }
+}

@@ -1,0 +1,187 @@
+//! ISTA — Iterative Shrinkage-Thresholding for `L1`-regularized least
+//! squares: `min_x ½‖A·x − b‖² + λ‖x‖₁`.
+//!
+//! §IV-D of the paper replaces the second recovery stage (`UAΠΣ → AΠΣ`)
+//! with an L1-constrained solve because the compressed-sensing map `U` is
+//! sparse and the factor columns of a CP model are typically compressible.
+//! ISTA with backtracking-free fixed step `1/L` (`L = ‖AᵀA‖₂` upper-bounded
+//! by its Frobenius norm) is simple and adequate at these sizes.
+
+use super::matmul::{matmul, Trans};
+use super::matrix::Matrix;
+
+/// Options for [`ista_l1`].
+#[derive(Clone, Debug)]
+pub struct IstaOptions {
+    pub lambda: f32,
+    pub max_iters: usize,
+    pub tol: f32,
+}
+
+impl Default for IstaOptions {
+    fn default() -> Self {
+        Self {
+            lambda: 1e-3,
+            max_iters: 500,
+            tol: 1e-7,
+        }
+    }
+}
+
+#[inline]
+fn soft_threshold(x: f32, t: f32) -> f32 {
+    if x > t {
+        x - t
+    } else if x < -t {
+        x + t
+    } else {
+        0.0
+    }
+}
+
+/// Solves `min_X ½‖A·X − B‖_F² + λ‖X‖₁` column-wise with FISTA momentum.
+/// Returns the estimate and the iteration count actually used.
+pub fn ista_l1(a: &Matrix, b: &Matrix, opts: &IstaOptions) -> (Matrix, usize) {
+    let n = a.cols();
+    let rhs_cols = b.cols();
+    let ata = matmul(a, Trans::Yes, a, Trans::No);
+    let atb = matmul(a, Trans::Yes, b, Trans::No);
+    // Lipschitz bound: ‖AᵀA‖₂ ≤ ‖AᵀA‖_F.
+    let lip = (ata.frobenius_norm() as f32).max(1e-12);
+    let step = 1.0 / lip;
+
+    let mut x = Matrix::zeros(n, rhs_cols);
+    let mut y = x.clone();
+    let mut t = 1.0f32;
+    let mut iters = 0;
+    for it in 0..opts.max_iters {
+        iters = it + 1;
+        // grad = AᵀA·y − AᵀB
+        let mut grad = atb.clone();
+        gemm_sym(&ata, &y, &mut grad); // grad = AᵀA·y − AᵀB
+        // x_next = soft(y − step·grad, step·λ)
+        let mut x_next = Matrix::zeros(n, rhs_cols);
+        let thresh = step * opts.lambda;
+        let mut max_delta = 0.0f32;
+        for j in 0..rhs_cols {
+            for i in 0..n {
+                let v = soft_threshold(y.get(i, j) - step * grad.get(i, j), thresh);
+                max_delta = max_delta.max((v - x.get(i, j)).abs());
+                x_next.set(i, j, v);
+            }
+        }
+        // FISTA momentum.
+        let t_next = (1.0 + (1.0 + 4.0 * t * t).sqrt()) / 2.0;
+        let beta = (t - 1.0) / t_next;
+        let mut y_next = Matrix::zeros(n, rhs_cols);
+        for j in 0..rhs_cols {
+            for i in 0..n {
+                let xn = x_next.get(i, j);
+                y_next.set(i, j, xn + beta * (xn - x.get(i, j)));
+            }
+        }
+        x = x_next;
+        y = y_next;
+        t = t_next;
+        if max_delta < opts.tol {
+            break;
+        }
+    }
+    (x, iters)
+}
+
+/// `out ← G·y − out` specialized helper (G symmetric): computes the gradient
+/// `G·y − AᵀB` given `out` pre-loaded with `AᵀB`.
+fn gemm_sym(g: &Matrix, y: &Matrix, out: &mut Matrix) {
+    let gy = matmul(g, Trans::No, y, Trans::No);
+    for j in 0..out.cols() {
+        for i in 0..out.rows() {
+            out.set(i, j, gy.get(i, j) - out.get(i, j));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn soft_threshold_cases() {
+        assert_eq!(soft_threshold(3.0, 1.0), 2.0);
+        assert_eq!(soft_threshold(-3.0, 1.0), -2.0);
+        assert_eq!(soft_threshold(0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold(-0.5, 1.0), 0.0);
+    }
+
+    #[test]
+    fn recovers_sparse_signal() {
+        // Compressed sensing: m=40 measurements of an n=80 signal with 5
+        // nonzeros; a Gaussian A satisfies RIP whp at this ratio.
+        let mut rng = Xoshiro256::seed_from_u64(40);
+        let (m, n) = (40, 80);
+        let a = Matrix::random_normal(m, n, &mut rng);
+        let mut x_true = Matrix::zeros(n, 1);
+        for &i in &[3usize, 17, 42, 55, 71] {
+            x_true.set(i, 0, rng.next_gaussian() as f32 * 2.0 + 1.0);
+        }
+        let b = matmul(&a, Trans::No, &x_true, Trans::No);
+        let (x, _) = ista_l1(
+            &a,
+            &b,
+            &IstaOptions {
+                lambda: 1e-3,
+                max_iters: 4000,
+                tol: 1e-9,
+            },
+        );
+        let err = x.rel_error(&x_true);
+        assert!(err < 0.08, "rel err {err}"); // FISTA bias at this lambda
+    }
+
+    #[test]
+    fn zero_rhs_gives_zero() {
+        let mut rng = Xoshiro256::seed_from_u64(41);
+        let a = Matrix::random_normal(10, 6, &mut rng);
+        let b = Matrix::zeros(10, 1);
+        let (x, iters) = ista_l1(&a, &b, &IstaOptions::default());
+        assert!(x.max_abs() < 1e-6);
+        assert!(iters <= 500);
+    }
+
+    #[test]
+    fn large_lambda_kills_solution() {
+        let mut rng = Xoshiro256::seed_from_u64(42);
+        let a = Matrix::random_normal(20, 10, &mut rng);
+        let b = Matrix::random_normal(20, 1, &mut rng);
+        let (x, _) = ista_l1(
+            &a,
+            &b,
+            &IstaOptions {
+                lambda: 1e6,
+                max_iters: 100,
+                tol: 1e-9,
+            },
+        );
+        assert_eq!(x.max_abs(), 0.0);
+    }
+
+    #[test]
+    fn multiple_rhs_columns() {
+        let mut rng = Xoshiro256::seed_from_u64(43);
+        let a = Matrix::random_normal(30, 15, &mut rng);
+        let x_true = Matrix::random_normal(15, 3, &mut rng);
+        let b = matmul(&a, Trans::No, &x_true, Trans::No);
+        let (x, _) = ista_l1(
+            &a,
+            &b,
+            &IstaOptions {
+                lambda: 1e-4,
+                max_iters: 3000,
+                tol: 1e-9,
+            },
+        );
+        // Dense x_true: with tiny lambda this approaches plain LS.
+        assert!(x.rel_error(&x_true) < 0.05, "err={}", x.rel_error(&x_true));
+    }
+}

@@ -1,0 +1,105 @@
+//! Least-squares front door.
+//!
+//! [`lstsq`] solves `min ‖A·X − B‖_F` choosing between the normal equations
+//! (fast: one `n×n` Cholesky — the default for the well-conditioned stacked
+//! recovery solve of Eq. (4)) and a QR fallback when the Gram matrix is
+//! ill-conditioned.  [`ridge_solve`] adds Tikhonov damping for the ALS
+//! updates where factor Grams can be nearly singular.
+
+use super::cholesky::cholesky_solve;
+use super::matmul::{matmul, Trans};
+use super::matrix::Matrix;
+use super::qr::qr_solve;
+use anyhow::Result;
+
+/// Solves `min ‖A·X − B‖_F` for `A (m×n, m ≥ n)`.
+///
+/// Strategy: form the normal equations `AᵀA·X = AᵀB`; if Cholesky reports a
+/// non-PD pivot or the result contains non-finite values, fall back to
+/// Householder QR on the full system.
+pub fn lstsq(a: &Matrix, b: &Matrix) -> Result<Matrix> {
+    let ata = matmul(a, Trans::Yes, a, Trans::No);
+    let atb = matmul(a, Trans::Yes, b, Trans::No);
+    match cholesky_solve(&ata, &atb) {
+        Ok(x) if x.data().iter().all(|v| v.is_finite()) => Ok(x),
+        _ => qr_solve(a, b),
+    }
+}
+
+/// Solves `(G + λ·mean(diag(G))·I)·X = B` for symmetric `G` — the damped
+/// Gram solve used inside ALS (Alg. 1 line 3).
+pub fn ridge_solve(g: &Matrix, b: &Matrix, lambda: f32) -> Result<Matrix> {
+    let n = g.rows();
+    let tr: f32 = (0..n).map(|i| g.get(i, i)).sum();
+    let damp = lambda * tr / n as f32;
+    let mut gd = g.clone();
+    for i in 0..n {
+        gd.add_assign_at(i, i, damp);
+    }
+    cholesky_solve(&gd, b)
+}
+
+/// Pseudo-inverse of a small full-column-rank matrix via `(AᵀA)⁻¹Aᵀ`.
+pub fn pinv(a: &Matrix) -> Result<Matrix> {
+    let ata = matmul(a, Trans::Yes, a, Trans::No);
+    let at = a.transpose();
+    cholesky_solve(&ata, &at)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn lstsq_well_conditioned() {
+        let mut rng = Xoshiro256::seed_from_u64(20);
+        let a = Matrix::random_normal(50, 10, &mut rng);
+        let x_true = Matrix::random_normal(10, 3, &mut rng);
+        let b = matmul(&a, Trans::No, &x_true, Trans::No);
+        let x = lstsq(&a, &b).unwrap();
+        assert!(x.rel_error(&x_true) < 1e-3);
+    }
+
+    #[test]
+    fn lstsq_falls_back_on_rank_deficiency() {
+        // Duplicate columns make AᵀA singular; jittered Cholesky still
+        // produces a finite minimizer, or QR path errors — either way we
+        // must not return NaNs.
+        let a = Matrix::from_rows(&[&[1.0, 1.0], &[2.0, 2.0], &[3.0, 3.0]]);
+        let b = Matrix::from_rows(&[&[1.0], &[2.0], &[3.0]]);
+        if let Ok(x) = lstsq(&a, &b) {
+            assert!(x.data().iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn ridge_solve_damps_singular_gram() {
+        let g = Matrix::from_rows(&[&[1.0, 1.0], &[1.0, 1.0]]);
+        let b = Matrix::from_rows(&[&[2.0], &[2.0]]);
+        let x = ridge_solve(&g, &b, 1e-3).unwrap();
+        assert!(x.data().iter().all(|v| v.is_finite()));
+        // symmetric problem → symmetric solution
+        assert!((x.get(0, 0) - x.get(1, 0)).abs() < 1e-3);
+    }
+
+    #[test]
+    fn pinv_inverts_orthval() {
+        let mut rng = Xoshiro256::seed_from_u64(21);
+        let a = Matrix::random_normal(20, 6, &mut rng);
+        let p = pinv(&a).unwrap();
+        let pa = matmul(&p, Trans::No, &a, Trans::No);
+        assert!(pa.rel_error(&Matrix::identity(6)) < 1e-3);
+    }
+
+    #[test]
+    fn lstsq_multiple_rhs() {
+        let mut rng = Xoshiro256::seed_from_u64(22);
+        let a = Matrix::random_normal(30, 8, &mut rng);
+        let x_true = Matrix::random_normal(8, 5, &mut rng);
+        let b = matmul(&a, Trans::No, &x_true, Trans::No);
+        let x = lstsq(&a, &b).unwrap();
+        assert_eq!((x.rows(), x.cols()), (8, 5));
+        assert!(x.rel_error(&x_true) < 1e-3);
+    }
+}

@@ -1,0 +1,389 @@
+//! Blocked GEMM — the CPU-baseline hot path.
+//!
+//! `gemm(alpha, A, opA, B, opB, beta, C)` computes
+//! `C ← alpha · op(A) · op(B) + beta · C` with cache-blocked loops and a
+//! column-major micro-kernel.  This is the routine the paper's "Baseline
+//! (CPU)" variant spends its time in; the "GPU tensor core" variant replaces
+//! it with the AOT Pallas artifact (see `runtime`).  §Perf iterates on the
+//! block sizes below.
+
+use super::matrix::Matrix;
+
+/// Transpose flag for [`gemm`] operands.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Trans {
+    No,
+    Yes,
+}
+
+// Cache-blocking parameters, tuned in EXPERIMENTS.md §Perf on the benchmark
+// shapes (tall-skinny factors, fat unfoldings). MC×KC panel of A ~128 KB
+// fits L2; KC×NC panel of B streams through L3.
+const MC: usize = 128;
+const KC: usize = 256;
+const NC: usize = 512;
+
+#[inline]
+fn dims(m: &Matrix, t: Trans) -> (usize, usize) {
+    match t {
+        Trans::No => (m.rows(), m.cols()),
+        Trans::Yes => (m.cols(), m.rows()),
+    }
+}
+
+/// `C ← alpha · op(A)·op(B) + beta · C`.
+///
+/// Panics if shapes disagree.
+pub fn gemm(alpha: f32, a: &Matrix, op_a: Trans, b: &Matrix, op_b: Trans, beta: f32, c: &mut Matrix) {
+    let (m, k) = dims(a, op_a);
+    let (k2, n) = dims(b, op_b);
+    assert_eq!(k, k2, "gemm: inner dimension mismatch ({k} vs {k2})");
+    assert_eq!(
+        (c.rows(), c.cols()),
+        (m, n),
+        "gemm: output shape mismatch"
+    );
+
+    if beta != 1.0 {
+        if beta == 0.0 {
+            c.data_mut().fill(0.0);
+        } else {
+            c.scale(beta);
+        }
+    }
+    if alpha == 0.0 || m == 0 || n == 0 || k == 0 {
+        return;
+    }
+
+    // Pack op(A) panels into row-major and op(B) panels into column-major so
+    // the micro-kernel streams both contiguously.  Buffers are sized to the
+    // actual problem (§Perf): fixed MC·KC/KC·NC buffers cost ~640 KB of
+    // zeroing per call, which dominates the thousands of small GEMMs in the
+    // blocked TTM chain.
+    let mut a_pack = vec![0.0f32; MC.min(m) * KC.min(k)];
+    let mut b_pack = vec![0.0f32; KC.min(k) * NC.min(n)];
+
+    let mut jc = 0;
+    while jc < n {
+        let nb = NC.min(n - jc);
+        let mut pc = 0;
+        while pc < k {
+            let kb = KC.min(k - pc);
+            pack_b(b, op_b, pc, jc, kb, nb, &mut b_pack);
+            let mut ic = 0;
+            while ic < m {
+                let mb = MC.min(m - ic);
+                pack_a(a, op_a, ic, pc, mb, kb, &mut a_pack);
+                micro_kernel(alpha, &a_pack, &b_pack, mb, nb, kb, c, ic, jc);
+                ic += MC;
+            }
+            pc += KC;
+        }
+        jc += NC;
+    }
+}
+
+/// Packs `op(A)[ic..ic+mb, pc..pc+kb]` row-major into `out`.
+fn pack_a(a: &Matrix, op: Trans, ic: usize, pc: usize, mb: usize, kb: usize, out: &mut [f32]) {
+    match op {
+        Trans::No => {
+            for p in 0..kb {
+                let col = a.col(pc + p);
+                for i in 0..mb {
+                    out[i * kb + p] = col[ic + i];
+                }
+            }
+        }
+        Trans::Yes => {
+            // op(A)[i,p] = A[p,i]: columns of A become rows of op(A).
+            for i in 0..mb {
+                let col = a.col(ic + i);
+                out[i * kb..i * kb + kb].copy_from_slice(&col[pc..pc + kb]);
+            }
+        }
+    }
+}
+
+/// Packs `op(B)[pc..pc+kb, jc..jc+nb]` column-major into `out`.
+fn pack_b(b: &Matrix, op: Trans, pc: usize, jc: usize, kb: usize, nb: usize, out: &mut [f32]) {
+    match op {
+        Trans::No => {
+            for j in 0..nb {
+                let col = b.col(jc + j);
+                out[j * kb..j * kb + kb].copy_from_slice(&col[pc..pc + kb]);
+            }
+        }
+        Trans::Yes => {
+            for j in 0..nb {
+                let base = j * kb;
+                for p in 0..kb {
+                    out[base + p] = b.get(jc + j, pc + p);
+                }
+            }
+        }
+    }
+}
+
+/// Inner kernel over packed panels: A row-major (mb×kb), B col-major (kb×nb).
+///
+/// Register blocking (§Perf): 4 output columns share each A-row pass, so
+/// every `a` load feeds 4 FMAs — short-`k` GEMMs (the TTM chain's k=d
+/// contractions) are load-bound in the 1-column variant.  Within the pass,
+/// 4-wide `p` unrolling lets LLVM vectorize.
+fn micro_kernel(
+    alpha: f32,
+    a_pack: &[f32],
+    b_pack: &[f32],
+    mb: usize,
+    nb: usize,
+    kb: usize,
+    c: &mut Matrix,
+    ic: usize,
+    jc: usize,
+) {
+    let crows = c.rows();
+    let cdata = c.data_mut();
+    let mut j = 0;
+    // 8-column blocks.
+    while j + 8 <= nb {
+        let bs: [&[f32]; 8] = [
+            &b_pack[j * kb..(j + 1) * kb],
+            &b_pack[(j + 1) * kb..(j + 2) * kb],
+            &b_pack[(j + 2) * kb..(j + 3) * kb],
+            &b_pack[(j + 3) * kb..(j + 4) * kb],
+            &b_pack[(j + 4) * kb..(j + 5) * kb],
+            &b_pack[(j + 5) * kb..(j + 6) * kb],
+            &b_pack[(j + 6) * kb..(j + 7) * kb],
+            &b_pack[(j + 7) * kb..(j + 8) * kb],
+        ];
+        let cb: [usize; 8] = core::array::from_fn(|q| ic + (jc + j + q) * crows);
+        for i in 0..mb {
+            let arow = &a_pack[i * kb..i * kb + kb];
+            let mut d = [0.0f32; 8];
+            for p in 0..kb {
+                let a = arow[p];
+                for q in 0..8 {
+                    d[q] += a * bs[q][p];
+                }
+            }
+            for q in 0..8 {
+                cdata[cb[q] + i] += alpha * d[q];
+            }
+        }
+        j += 8;
+    }
+    // 4-column blocks.
+    while j + 4 <= nb {
+        let b0 = &b_pack[j * kb..(j + 1) * kb];
+        let b1 = &b_pack[(j + 1) * kb..(j + 2) * kb];
+        let b2 = &b_pack[(j + 2) * kb..(j + 3) * kb];
+        let b3 = &b_pack[(j + 3) * kb..(j + 4) * kb];
+        let cb0 = ic + (jc + j) * crows;
+        let cb1 = ic + (jc + j + 1) * crows;
+        let cb2 = ic + (jc + j + 2) * crows;
+        let cb3 = ic + (jc + j + 3) * crows;
+        for i in 0..mb {
+            let arow = &a_pack[i * kb..i * kb + kb];
+            let (mut d0, mut d1, mut d2, mut d3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            for p in 0..kb {
+                let a = arow[p];
+                d0 += a * b0[p];
+                d1 += a * b1[p];
+                d2 += a * b2[p];
+                d3 += a * b3[p];
+            }
+            cdata[cb0 + i] += alpha * d0;
+            cdata[cb1 + i] += alpha * d1;
+            cdata[cb2 + i] += alpha * d2;
+            cdata[cb3 + i] += alpha * d3;
+        }
+        j += 4;
+    }
+    // Remainder columns.
+    while j < nb {
+        let bcol = &b_pack[j * kb..j * kb + kb];
+        let cbase = ic + (jc + j) * crows;
+        for i in 0..mb {
+            let arow = &a_pack[i * kb..i * kb + kb];
+            let mut acc = [0.0f32; 4];
+            let chunks = kb / 4;
+            for q in 0..chunks {
+                let p = q * 4;
+                acc[0] += arow[p] * bcol[p];
+                acc[1] += arow[p + 1] * bcol[p + 1];
+                acc[2] += arow[p + 2] * bcol[p + 2];
+                acc[3] += arow[p + 3] * bcol[p + 3];
+            }
+            let mut dot = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+            for p in chunks * 4..kb {
+                dot += arow[p] * bcol[p];
+            }
+            cdata[cbase + i] += alpha * dot;
+        }
+        j += 1;
+    }
+}
+
+/// Convenience: `op(A)·op(B)` into a fresh matrix.
+pub fn matmul(a: &Matrix, op_a: Trans, b: &Matrix, op_b: Trans) -> Matrix {
+    let (m, _) = dims(a, op_a);
+    let (_, n) = dims(b, op_b);
+    let mut c = Matrix::zeros(m, n);
+    gemm(1.0, a, op_a, b, op_b, 0.0, &mut c);
+    c
+}
+
+/// `y ← op(A)·x`.
+pub fn matvec(a: &Matrix, op: Trans, x: &[f32]) -> Vec<f32> {
+    let (m, k) = dims(a, op);
+    assert_eq!(x.len(), k, "matvec: dimension mismatch");
+    let mut y = vec![0.0f32; m];
+    match op {
+        Trans::No => {
+            for (j, &xj) in x.iter().enumerate() {
+                if xj == 0.0 {
+                    continue;
+                }
+                let col = a.col(j);
+                for i in 0..m {
+                    y[i] += col[i] * xj;
+                }
+            }
+        }
+        Trans::Yes => {
+            for (i, yi) in y.iter_mut().enumerate() {
+                let col = a.col(i);
+                let mut dot = 0.0;
+                for (p, &xp) in x.iter().enumerate() {
+                    dot += col[p] * xp;
+                }
+                *yi = dot;
+            }
+        }
+    }
+    y
+}
+
+/// Naive reference GEMM used to validate the blocked kernel in tests.
+#[doc(hidden)]
+pub fn gemm_naive(a: &Matrix, op_a: Trans, b: &Matrix, op_b: Trans) -> Matrix {
+    let (m, k) = dims(a, op_a);
+    let (_, n) = dims(b, op_b);
+    let fetch_a = |i: usize, p: usize| match op_a {
+        Trans::No => a.get(i, p),
+        Trans::Yes => a.get(p, i),
+    };
+    let fetch_b = |p: usize, j: usize| match op_b {
+        Trans::No => b.get(p, j),
+        Trans::Yes => b.get(j, p),
+    };
+    Matrix::from_fn(m, n, |i, j| {
+        let mut s = 0.0;
+        for p in 0..k {
+            s += fetch_a(i, p) * fetch_b(p, j);
+        }
+        s
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn assert_close(a: &Matrix, b: &Matrix, tol: f64) {
+        assert_eq!((a.rows(), a.cols()), (b.rows(), b.cols()));
+        let err = a.rel_error(b);
+        assert!(err < tol, "rel error {err} > {tol}");
+    }
+
+    #[test]
+    fn small_known_product() {
+        let a = Matrix::from_rows(&[&[1., 2.], &[3., 4.]]);
+        let b = Matrix::from_rows(&[&[5., 6.], &[7., 8.]]);
+        let c = matmul(&a, Trans::No, &b, Trans::No);
+        assert_eq!(c, Matrix::from_rows(&[&[19., 22.], &[43., 50.]]));
+    }
+
+    #[test]
+    fn all_transpose_combinations_match_naive() {
+        let mut rng = Xoshiro256::seed_from_u64(42);
+        for &(m, k, n) in &[(3, 4, 5), (17, 9, 23), (64, 32, 48)] {
+            for &op_a in &[Trans::No, Trans::Yes] {
+                for &op_b in &[Trans::No, Trans::Yes] {
+                    let (ar, ac) = if op_a == Trans::No { (m, k) } else { (k, m) };
+                    let (br, bc) = if op_b == Trans::No { (k, n) } else { (n, k) };
+                    let a = Matrix::random_normal(ar, ac, &mut rng);
+                    let b = Matrix::random_normal(br, bc, &mut rng);
+                    let fast = matmul(&a, op_a, &b, op_b);
+                    let slow = gemm_naive(&a, op_a, &b, op_b);
+                    assert_close(&fast, &slow, 1e-5);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_path_beyond_panel_sizes() {
+        // Exercise multiple MC/KC/NC panels.
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let a = Matrix::random_normal(200, 300, &mut rng);
+        let b = Matrix::random_normal(300, 600, &mut rng);
+        let fast = matmul(&a, Trans::No, &b, Trans::No);
+        let slow = gemm_naive(&a, Trans::No, &b, Trans::No);
+        assert_close(&fast, &slow, 1e-4);
+    }
+
+    #[test]
+    fn alpha_beta_semantics() {
+        let a = Matrix::identity(3);
+        let b = Matrix::from_fn(3, 3, |i, j| (i * 3 + j) as f32);
+        let mut c = Matrix::from_fn(3, 3, |_, _| 1.0);
+        gemm(2.0, &a, Trans::No, &b, Trans::No, 3.0, &mut c);
+        // C = 2*B + 3*ones
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_eq!(c.get(i, j), 2.0 * b.get(i, j) + 3.0);
+            }
+        }
+    }
+
+    #[test]
+    fn beta_zero_clears_nan() {
+        let a = Matrix::identity(2);
+        let mut c = Matrix::from_vec(2, 2, vec![f32::NAN; 4]);
+        gemm(1.0, &a, Trans::No, &a, Trans::No, 0.0, &mut c);
+        assert_eq!(c, Matrix::identity(2));
+    }
+
+    #[test]
+    fn matvec_matches_gemm() {
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        let a = Matrix::random_normal(13, 7, &mut rng);
+        let x: Vec<f32> = rng.gaussian_vec_f32(7);
+        let y = matvec(&a, Trans::No, &x);
+        let xm = Matrix::from_vec(7, 1, x.clone());
+        let ym = matmul(&a, Trans::No, &xm, Trans::No);
+        for i in 0..13 {
+            assert!((y[i] - ym.get(i, 0)).abs() < 1e-5);
+        }
+        let yt = matvec(&a, Trans::Yes, &ym.into_vec());
+        assert_eq!(yt.len(), 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "inner dimension mismatch")]
+    fn shape_mismatch_panics() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(2, 3);
+        let _ = matmul(&a, Trans::No, &b, Trans::No);
+    }
+
+    #[test]
+    fn empty_matrices_ok() {
+        let a = Matrix::zeros(0, 3);
+        let b = Matrix::zeros(3, 4);
+        let c = matmul(&a, Trans::No, &b, Trans::No);
+        assert_eq!((c.rows(), c.cols()), (0, 4));
+    }
+}

@@ -1,0 +1,385 @@
+//! Column-major dense matrix.
+//!
+//! Column-major is deliberate: it matches the paper's §IV-A storage layout
+//! (the mode-1 matricization of a column-major tensor is a no-op view) and
+//! the column-major convention of cuBLAS/XLA literals.
+
+use crate::util::rng::Xoshiro256;
+use std::fmt;
+
+/// Dense `rows × cols` matrix of `f32`, column-major (`data[i + j*rows]`).
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Matrix {
+    // ---------- constructors ----------
+
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.set(i, i, 1.0);
+        }
+        m
+    }
+
+    /// Takes ownership of a column-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer size mismatch");
+        Self { rows, cols, data }
+    }
+
+    /// Builds from a row-major nested-slice literal (test convenience).
+    pub fn from_rows(rows: &[&[f32]]) -> Self {
+        let r = rows.len();
+        let c = if r == 0 { 0 } else { rows[0].len() };
+        let mut m = Self::zeros(r, c);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), c, "ragged rows");
+            for (j, &v) in row.iter().enumerate() {
+                m.set(i, j, v);
+            }
+        }
+        m
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for j in 0..cols {
+            for i in 0..rows {
+                m.set(i, j, f(i, j));
+            }
+        }
+        m
+    }
+
+    /// i.i.d. standard-normal entries.
+    pub fn random_normal(rows: usize, cols: usize, rng: &mut Xoshiro256) -> Self {
+        let mut data = vec![0.0f32; rows * cols];
+        rng.fill_gaussian_f32(&mut data);
+        Self { rows, cols, data }
+    }
+
+    // ---------- shape & element access ----------
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i + j * self.rows]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i + j * self.rows] = v;
+    }
+
+    #[inline]
+    pub fn add_assign_at(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i + j * self.rows] += v;
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Column `j` as a contiguous slice (free in column-major).
+    #[inline]
+    pub fn col(&self, j: usize) -> &[f32] {
+        &self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    #[inline]
+    pub fn col_mut(&mut self, j: usize) -> &mut [f32] {
+        &mut self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    /// Copies row `i` out (strided access).
+    pub fn row(&self, i: usize) -> Vec<f32> {
+        (0..self.cols).map(|j| self.get(i, j)).collect()
+    }
+
+    // ---------- submatrices ----------
+
+    /// Rows `r0..r1` (copy).
+    pub fn slice_rows(&self, r0: usize, r1: usize) -> Matrix {
+        assert!(r0 <= r1 && r1 <= self.rows);
+        Matrix::from_fn(r1 - r0, self.cols, |i, j| self.get(r0 + i, j))
+    }
+
+    /// Columns `c0..c1` (cheap memcpy in column-major).
+    pub fn slice_cols(&self, c0: usize, c1: usize) -> Matrix {
+        assert!(c0 <= c1 && c1 <= self.cols);
+        Matrix {
+            rows: self.rows,
+            cols: c1 - c0,
+            data: self.data[c0 * self.rows..c1 * self.rows].to_vec(),
+        }
+    }
+
+    /// Writes `block` into `self` at row/col offset.
+    pub fn set_block(&mut self, r0: usize, c0: usize, block: &Matrix) {
+        assert!(r0 + block.rows <= self.rows && c0 + block.cols <= self.cols);
+        for j in 0..block.cols {
+            let src = block.col(j);
+            let dst_off = r0 + (c0 + j) * self.rows;
+            self.data[dst_off..dst_off + block.rows].copy_from_slice(src);
+        }
+    }
+
+    /// Stacks matrices vertically (all must share `cols`).
+    pub fn vstack(parts: &[&Matrix]) -> Matrix {
+        assert!(!parts.is_empty());
+        let cols = parts[0].cols;
+        let rows: usize = parts.iter().map(|m| m.rows).sum();
+        let mut out = Matrix::zeros(rows, cols);
+        let mut r = 0;
+        for m in parts {
+            assert_eq!(m.cols, cols, "vstack: column mismatch");
+            out.set_block(r, 0, m);
+            r += m.rows;
+        }
+        out
+    }
+
+    // ---------- elementwise & norms ----------
+
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for j in 0..self.cols {
+            for i in 0..self.rows {
+                t.set(j, i, self.get(i, j));
+            }
+        }
+        t
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a + b)
+            .collect();
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data,
+        }
+    }
+
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a - b)
+            .collect();
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data,
+        }
+    }
+
+    pub fn frobenius_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// `‖self − other‖_F / ‖other‖_F` (0 denominator → absolute norm).
+    pub fn rel_error(&self, other: &Matrix) -> f64 {
+        let denom = other.frobenius_norm();
+        let diff = self.sub(other).frobenius_norm();
+        if denom == 0.0 {
+            diff
+        } else {
+            diff / denom
+        }
+    }
+
+    /// Per-column L2 norms.
+    pub fn col_norms(&self) -> Vec<f32> {
+        (0..self.cols)
+            .map(|j| self.col(j).iter().map(|&x| x * x).sum::<f32>().sqrt())
+            .collect()
+    }
+
+    /// Normalizes each column to unit L2 norm, returning the norms.
+    /// Zero columns are left untouched (norm reported as 0).
+    pub fn normalize_cols(&mut self) -> Vec<f32> {
+        let norms = self.col_norms();
+        for (j, &n) in norms.iter().enumerate() {
+            if n > 0.0 {
+                for x in self.col_mut(j) {
+                    *x /= n;
+                }
+            }
+        }
+        norms
+    }
+
+    /// Applies a column permutation: `out[:, j] = self[:, perm[j]]`.
+    pub fn permute_cols(&self, perm: &[usize]) -> Matrix {
+        assert_eq!(perm.len(), self.cols);
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for (j, &src) in perm.iter().enumerate() {
+            out.col_mut(j).copy_from_slice(self.col(src));
+        }
+        out
+    }
+
+    /// Multiplies column `j` by `scales[j]`.
+    pub fn scale_cols(&self, scales: &[f32]) -> Matrix {
+        assert_eq!(scales.len(), self.cols);
+        let mut out = self.clone();
+        for (j, &s) in scales.iter().enumerate() {
+            for x in out.col_mut(j) {
+                *x *= s;
+            }
+        }
+        out
+    }
+
+    /// Maximum absolute entry.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        let show_r = self.rows.min(6);
+        let show_c = self.cols.min(6);
+        for i in 0..show_r {
+            write!(f, "  ")?;
+            for j in 0..show_c {
+                write!(f, "{:>10.4} ", self.get(i, j))?;
+            }
+            writeln!(f, "{}", if self.cols > show_c { "…" } else { "" })?;
+        }
+        if self.rows > show_r {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_is_column_major() {
+        let m = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        assert_eq!(m.data(), &[1.0, 3.0, 2.0, 4.0]);
+        assert_eq!(m.col(1), &[2.0, 4.0]);
+        assert_eq!(m.row(1), vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let m = Matrix::random_normal(7, 4, &mut rng);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn identity_and_norms() {
+        let i3 = Matrix::identity(3);
+        assert_eq!(i3.get(1, 1), 1.0);
+        assert_eq!(i3.get(0, 2), 0.0);
+        assert!((i3.frobenius_norm() - 3f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slicing_and_stacking() {
+        let m = Matrix::from_rows(&[&[1., 2.], &[3., 4.], &[5., 6.]]);
+        let top = m.slice_rows(0, 1);
+        assert_eq!(top.row(0), vec![1.0, 2.0]);
+        let right = m.slice_cols(1, 2);
+        assert_eq!(right.col(0), &[2.0, 4.0, 6.0]);
+        let stacked = Matrix::vstack(&[&top, &m.slice_rows(1, 3)]);
+        assert_eq!(stacked, m);
+    }
+
+    #[test]
+    fn set_block_roundtrip() {
+        let mut big = Matrix::zeros(4, 4);
+        let small = Matrix::from_rows(&[&[1., 2.], &[3., 4.]]);
+        big.set_block(1, 2, &small);
+        assert_eq!(big.get(1, 2), 1.0);
+        assert_eq!(big.get(2, 3), 4.0);
+        assert_eq!(big.get(0, 0), 0.0);
+    }
+
+    #[test]
+    fn normalize_and_rescale_cols() {
+        let mut m = Matrix::from_rows(&[&[3.0, 0.0], &[4.0, 0.0]]);
+        let norms = m.normalize_cols();
+        assert!((norms[0] - 5.0).abs() < 1e-6);
+        assert_eq!(norms[1], 0.0); // zero column untouched
+        assert!((m.get(0, 0) - 0.6).abs() < 1e-6);
+        let back = m.scale_cols(&norms);
+        assert!((back.get(1, 0) - 4.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn permute_cols_is_permutation() {
+        let m = Matrix::from_rows(&[&[1., 2., 3.], &[4., 5., 6.]]);
+        let p = m.permute_cols(&[2, 0, 1]);
+        assert_eq!(p.col(0), &[3.0, 6.0]);
+        assert_eq!(p.col(1), &[1.0, 4.0]);
+        assert_eq!(p.col(2), &[2.0, 5.0]);
+    }
+
+    #[test]
+    fn rel_error_zero_for_identical() {
+        let m = Matrix::from_rows(&[&[1., 2.], &[3., 4.]]);
+        assert_eq!(m.rel_error(&m), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_rejects_bad_len() {
+        let _ = Matrix::from_vec(2, 2, vec![1.0; 3]);
+    }
+}

@@ -1,0 +1,29 @@
+//! Dense linear-algebra substrate.
+//!
+//! Everything the Exascale-Tensor pipeline needs, written against a
+//! column-major [`Matrix`] type (column-major is the paper's §IV-A storage
+//! choice: mode-1 unfoldings are then free).  No BLAS — the blocked GEMM in
+//! [`matmul`] is the CPU-baseline hot path and is profiled in
+//! EXPERIMENTS.md §Perf.
+
+pub mod cholesky;
+pub mod eig;
+pub mod hungarian;
+pub mod ista;
+pub mod lstsq;
+pub mod matmul;
+pub mod matrix;
+pub mod products;
+pub mod qr;
+pub mod svd;
+
+pub use cholesky::{cholesky_factor, cholesky_solve};
+pub use eig::sym_eig;
+pub use hungarian::{hungarian_max, hungarian_min, Assignment};
+pub use ista::ista_l1;
+pub use lstsq::{lstsq, pinv, ridge_solve};
+pub use matmul::{gemm, matmul, matvec, Trans};
+pub use matrix::Matrix;
+pub use products::{hadamard, khatri_rao, kronecker};
+pub use qr::{qr_decompose, qr_solve};
+pub use svd::{leading_singular_vectors, svd_thin, Svd};

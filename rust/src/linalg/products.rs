@@ -1,0 +1,155 @@
+//! Structured matrix products of CP decomposition: Khatri-Rao (column-wise
+//! Kronecker, `⊙`), Kronecker (`⊗`), and Hadamard (`*`).
+//!
+//! The ALS identity `(C ⊙ B)ᵀ (C ⊙ B) = CᵀC * BᵀB` (Hadamard of Grams) is
+//! what lets Alg. 1 avoid ever forming the `JK × R` Khatri-Rao product for
+//! the Gram side; the MTTKRP side is computed blocked.
+
+use super::matrix::Matrix;
+
+/// Khatri-Rao product `A ⊙ B` for `A (I×R)`, `B (J×R)` → `(I·J) × R`,
+/// with the *column-major / mode-product convention*: row index is
+/// `j·I + i`?  No — we use the convention matching the unfoldings in
+/// `tensor::unfold`: `(A ⊙ B)[i + j*I, r] = A[i,r] · B[j,r]` would pair with
+/// row-major unfoldings; our column-major mode-1 unfolding
+/// `X_(1) (I × J·K)` pairs columns as `j + k·J`, i.e.
+/// `X_(1) ≈ A (C ⊙ B)ᵀ` with `(C ⊙ B)[j + k*J, r] = C[k,r]·B[j,r]`.
+/// So `khatri_rao(C, B)` returns the matrix whose row `j + k·J` is
+/// `C[k,:] * B[j,:]` — the *first* argument varies slowest.
+pub fn khatri_rao(slow: &Matrix, fast: &Matrix) -> Matrix {
+    let r = slow.cols();
+    assert_eq!(fast.cols(), r, "khatri_rao: rank mismatch");
+    let k_dim = slow.rows();
+    let j_dim = fast.rows();
+    let mut out = Matrix::zeros(j_dim * k_dim, r);
+    for c in 0..r {
+        let s_col = slow.col(c);
+        let f_col = fast.col(c);
+        let o_col = out.col_mut(c);
+        for (k, &sv) in s_col.iter().enumerate() {
+            let base = k * j_dim;
+            for (j, &fv) in f_col.iter().enumerate() {
+                o_col[base + j] = sv * fv;
+            }
+        }
+    }
+    out
+}
+
+/// Kronecker product `A ⊗ B` for `A (m×n)`, `B (p×q)` → `(m·p) × (n·q)`,
+/// with block `(i,j)` equal to `A[i,j]·B`.
+pub fn kronecker(a: &Matrix, b: &Matrix) -> Matrix {
+    let (m, n) = (a.rows(), a.cols());
+    let (p, q) = (b.rows(), b.cols());
+    let mut out = Matrix::zeros(m * p, n * q);
+    for j in 0..n {
+        for i in 0..m {
+            let aij = a.get(i, j);
+            if aij == 0.0 {
+                continue;
+            }
+            for jj in 0..q {
+                for ii in 0..p {
+                    out.set(i * p + ii, j * q + jj, aij * b.get(ii, jj));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Elementwise (Hadamard) product `A * B`.
+pub fn hadamard(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!((a.rows(), a.cols()), (b.rows(), b.cols()), "hadamard: shape mismatch");
+    let data = a
+        .data()
+        .iter()
+        .zip(b.data())
+        .map(|(x, y)| x * y)
+        .collect();
+    Matrix::from_vec(a.rows(), a.cols(), data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::{matmul, Trans};
+    use crate::util::prop;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn khatri_rao_small() {
+        let c = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]); // K=2, R=2
+        let b = Matrix::from_rows(&[&[5.0, 6.0], &[7.0, 8.0]]); // J=2
+        let kr = khatri_rao(&c, &b); // rows: j + k*J
+        assert_eq!((kr.rows(), kr.cols()), (4, 2));
+        // row (j=0,k=0) = C[0,:]*B[0,:] = [5, 12]
+        assert_eq!(kr.row(0), vec![5.0, 12.0]);
+        // row (j=1,k=0) = C[0,:]*B[1,:] = [7, 16]
+        assert_eq!(kr.row(1), vec![7.0, 16.0]);
+        // row (j=0,k=1) = C[1,:]*B[0,:] = [15, 24]
+        assert_eq!(kr.row(2), vec![15.0, 24.0]);
+        assert_eq!(kr.row(3), vec![21.0, 32.0]);
+    }
+
+    #[test]
+    fn kronecker_small() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0]]);
+        let b = Matrix::from_rows(&[&[0.0, 3.0], &[4.0, 5.0]]);
+        let k = kronecker(&a, &b);
+        assert_eq!((k.rows(), k.cols()), (2, 4));
+        assert_eq!(k.row(0), vec![0.0, 3.0, 0.0, 6.0]);
+        assert_eq!(k.row(1), vec![4.0, 5.0, 8.0, 10.0]);
+    }
+
+    #[test]
+    fn gram_identity_property() {
+        // (A ⊙ B)ᵀ(A ⊙ B) == (AᵀA) * (BᵀB) — the identity ALS relies on.
+        prop::check("khatri-rao-gram", 25, |g| {
+            let r = g.int(1, 4);
+            let i = g.int(1, 6);
+            let j = g.int(1, 6);
+            let mut rng = Xoshiro256::seed_from_u64(g.int(0, 1_000_000) as u64);
+            let a = Matrix::random_normal(i, r, &mut rng);
+            let b = Matrix::random_normal(j, r, &mut rng);
+            let kr = khatri_rao(&a, &b);
+            let lhs = matmul(&kr, Trans::Yes, &kr, Trans::No);
+            let rhs = hadamard(
+                &matmul(&a, Trans::Yes, &a, Trans::No),
+                &matmul(&b, Trans::Yes, &b, Trans::No),
+            );
+            assert!(lhs.rel_error(&rhs) < 1e-4, "err={}", lhs.rel_error(&rhs));
+        });
+    }
+
+    #[test]
+    fn khatri_rao_is_kron_columns() {
+        // Column r of A ⊙ B equals kron(a_r, b_r).
+        let mut rng = Xoshiro256::seed_from_u64(31);
+        let a = Matrix::random_normal(3, 2, &mut rng);
+        let b = Matrix::random_normal(4, 2, &mut rng);
+        let kr = khatri_rao(&a, &b);
+        for r in 0..2 {
+            let ar = Matrix::from_vec(3, 1, a.col(r).to_vec());
+            let br = Matrix::from_vec(4, 1, b.col(r).to_vec());
+            let k = kronecker(&ar, &br);
+            for idx in 0..12 {
+                assert!((kr.get(idx, r) - k.get(idx, 0)).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn hadamard_commutes() {
+        let mut rng = Xoshiro256::seed_from_u64(32);
+        let a = Matrix::random_normal(5, 5, &mut rng);
+        let b = Matrix::random_normal(5, 5, &mut rng);
+        assert_eq!(hadamard(&a, &b), hadamard(&b, &a));
+    }
+
+    #[test]
+    #[should_panic(expected = "rank mismatch")]
+    fn khatri_rao_rank_mismatch() {
+        let _ = khatri_rao(&Matrix::zeros(2, 2), &Matrix::zeros(2, 3));
+    }
+}

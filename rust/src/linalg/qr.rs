@@ -1,0 +1,224 @@
+//! Householder QR and QR-based least squares.
+//!
+//! Used where the normal equations are too ill-conditioned: the stacked
+//! recovery solve of Eq. (4) when `P·L` barely exceeds `I`, and the HOSVD
+//! init's orthonormalization.
+
+use super::matrix::Matrix;
+use anyhow::{bail, Result};
+
+/// Compact Householder QR of `A (m×n, m ≥ n)`: returns `(qr, tau)` where the
+/// upper triangle of `qr` is `R` and the columns below the diagonal hold the
+/// Householder vectors (LAPACK `geqrf` layout).
+pub fn qr_decompose(a: &Matrix) -> (Matrix, Vec<f32>) {
+    let m = a.rows();
+    let n = a.cols();
+    let mut qr = a.clone();
+    let mut tau = vec![0.0f32; n.min(m)];
+
+    for k in 0..n.min(m) {
+        // Householder vector for column k below row k.
+        let mut norm2 = 0.0f64;
+        for i in k..m {
+            let v = qr.get(i, k) as f64;
+            norm2 += v * v;
+        }
+        let norm = norm2.sqrt();
+        if norm == 0.0 {
+            tau[k] = 0.0;
+            continue;
+        }
+        let akk = qr.get(k, k) as f64;
+        let alpha = if akk >= 0.0 { -norm } else { norm };
+        // v = x − α·e1, normalized so v[k] = 1 (store v_i/v0 below the
+        // diagonal, LAPACK-style); H = I − τ·v·vᵀ with τ = 2·v0²/vᵀv.
+        let v0 = akk - alpha;
+        if v0 == 0.0 {
+            tau[k] = 0.0;
+            continue;
+        }
+        let mut vtv = v0 * v0;
+        for i in (k + 1)..m {
+            let v = qr.get(i, k) as f64;
+            vtv += v * v;
+        }
+        tau[k] = (2.0 * v0 * v0 / vtv) as f32;
+        qr.set(k, k, alpha as f32); // R diagonal
+        for i in (k + 1)..m {
+            let v = qr.get(i, k) as f64 / v0;
+            qr.set(i, k, v as f32);
+        }
+        // Apply H = I - tau v vᵀ to remaining columns.
+        for j in (k + 1)..n {
+            // w = vᵀ A[:, j]
+            let mut w = qr.get(k, j) as f64; // v_k = 1
+            for i in (k + 1)..m {
+                w += qr.get(i, k) as f64 * qr.get(i, j) as f64;
+            }
+            w *= tau[k] as f64;
+            qr.set(k, j, (qr.get(k, j) as f64 - w) as f32);
+            for i in (k + 1)..m {
+                let newv = qr.get(i, j) as f64 - w * qr.get(i, k) as f64;
+                qr.set(i, j, newv as f32);
+            }
+        }
+    }
+    (qr, tau)
+}
+
+/// Applies `Qᵀ` (from [`qr_decompose`]) to `b` in place.
+fn apply_qt(qr: &Matrix, tau: &[f32], b: &mut Matrix) {
+    let m = qr.rows();
+    let n = qr.cols().min(m);
+    for k in 0..n {
+        if tau[k] == 0.0 {
+            continue;
+        }
+        for col in 0..b.cols() {
+            let mut w = b.get(k, col) as f64;
+            for i in (k + 1)..m {
+                w += qr.get(i, k) as f64 * b.get(i, col) as f64;
+            }
+            w *= tau[k] as f64;
+            b.set(k, col, (b.get(k, col) as f64 - w) as f32);
+            for i in (k + 1)..m {
+                let newv = b.get(i, col) as f64 - w * qr.get(i, k) as f64;
+                b.set(i, col, newv as f32);
+            }
+        }
+    }
+}
+
+/// Least-squares solve `min ‖A·X − B‖` via QR for `A (m×n, m ≥ n)` full rank.
+pub fn qr_solve(a: &Matrix, b: &Matrix) -> Result<Matrix> {
+    let m = a.rows();
+    let n = a.cols();
+    if m < n {
+        bail!("qr_solve: underdetermined system ({m} rows < {n} cols)");
+    }
+    if b.rows() != m {
+        bail!("qr_solve: rhs rows {} != {m}", b.rows());
+    }
+    let (qr, tau) = qr_decompose(a);
+    let mut qtb = b.clone();
+    apply_qt(&qr, &tau, &mut qtb);
+    // Back substitution on R (n×n upper-triangular). Rank deficiency is
+    // judged relative to the largest diagonal (f32 inputs: absolute 1e-12
+    // would never trigger).
+    let rmax = (0..n).map(|i| qr.get(i, i).abs()).fold(0.0f32, f32::max) as f64;
+    let mut x = Matrix::zeros(n, b.cols());
+    for col in 0..b.cols() {
+        for i in (0..n).rev() {
+            let mut s = qtb.get(i, col) as f64;
+            for k in (i + 1)..n {
+                s -= qr.get(i, k) as f64 * x.get(k, col) as f64;
+            }
+            let rii = qr.get(i, i) as f64;
+            if rii.abs() < 1e-6 * rmax.max(1e-30) {
+                bail!("qr_solve: rank-deficient (R[{i},{i}] ≈ 0)");
+            }
+            x.set(i, col, (s / rii) as f32);
+        }
+    }
+    Ok(x)
+}
+
+/// Extracts an explicit orthonormal `Q (m×n)` — used by the HOSVD init.
+pub fn qr_q(a: &Matrix) -> Matrix {
+    let m = a.rows();
+    let n = a.cols().min(m);
+    let (qr, tau) = qr_decompose(a);
+    // Q = H_0 H_1 … H_{n-1} applied to the first n columns of I.
+    let mut q = Matrix::from_fn(m, n, |i, j| if i == j { 1.0 } else { 0.0 });
+    for k in (0..n).rev() {
+        if tau[k] == 0.0 {
+            continue;
+        }
+        for col in 0..n {
+            let mut w = q.get(k, col) as f64;
+            for i in (k + 1)..m {
+                w += qr.get(i, k) as f64 * q.get(i, col) as f64;
+            }
+            w *= tau[k] as f64;
+            q.set(k, col, (q.get(k, col) as f64 - w) as f32);
+            for i in (k + 1)..m {
+                let newv = q.get(i, col) as f64 - w * qr.get(i, k) as f64;
+                q.set(i, col, newv as f32);
+            }
+        }
+    }
+    q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::{matmul, Trans};
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn qr_solve_exact_system() {
+        let a = Matrix::from_rows(&[&[2.0, 0.0], &[0.0, 3.0], &[0.0, 0.0]]);
+        let b = Matrix::from_rows(&[&[4.0], &[9.0], &[0.0]]);
+        let x = qr_solve(&a, &b).unwrap();
+        assert!((x.get(0, 0) - 2.0).abs() < 1e-5);
+        assert!((x.get(1, 0) - 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn qr_solve_recovers_planted_solution() {
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let a = Matrix::random_normal(40, 12, &mut rng);
+        let x_true = Matrix::random_normal(12, 4, &mut rng);
+        let b = matmul(&a, Trans::No, &x_true, Trans::No);
+        let x = qr_solve(&a, &b).unwrap();
+        assert!(x.rel_error(&x_true) < 1e-4, "err={}", x.rel_error(&x_true));
+    }
+
+    #[test]
+    fn qr_solve_overdetermined_minimizes_residual() {
+        let mut rng = Xoshiro256::seed_from_u64(6);
+        let a = Matrix::random_normal(30, 5, &mut rng);
+        let b = Matrix::random_normal(30, 1, &mut rng);
+        let x = qr_solve(&a, &b).unwrap();
+        // Residual must be orthogonal to the column space: Aᵀ(Ax − b) ≈ 0.
+        let ax = matmul(&a, Trans::No, &x, Trans::No);
+        let r = ax.sub(&b);
+        let g = matmul(&a, Trans::Yes, &r, Trans::No);
+        assert!(g.max_abs() < 1e-3, "gradient norm {}", g.max_abs());
+    }
+
+    #[test]
+    fn q_is_orthonormal() {
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let a = Matrix::random_normal(20, 8, &mut rng);
+        let q = qr_q(&a);
+        let qtq = matmul(&q, Trans::Yes, &q, Trans::No);
+        assert!(qtq.rel_error(&Matrix::identity(8)) < 1e-4);
+    }
+
+    #[test]
+    fn q_spans_column_space() {
+        let mut rng = Xoshiro256::seed_from_u64(8);
+        let a = Matrix::random_normal(15, 6, &mut rng);
+        let q = qr_q(&a);
+        // A = Q Qᵀ A (projection identity when Q spans col(A)).
+        let qta = matmul(&q, Trans::Yes, &a, Trans::No);
+        let rec = matmul(&q, Trans::No, &qta, Trans::No);
+        assert!(rec.rel_error(&a) < 1e-4);
+    }
+
+    #[test]
+    fn underdetermined_rejected() {
+        let a = Matrix::zeros(3, 5);
+        let b = Matrix::zeros(3, 1);
+        assert!(qr_solve(&a, &b).is_err());
+    }
+
+    #[test]
+    fn rank_deficient_detected() {
+        let a = Matrix::from_rows(&[&[1.0, 1.0], &[1.0, 1.0], &[1.0, 1.0]]);
+        let b = Matrix::from_rows(&[&[1.0], &[2.0], &[3.0]]);
+        assert!(qr_solve(&a, &b).is_err());
+    }
+}

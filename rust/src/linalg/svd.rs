@@ -1,0 +1,174 @@
+//! Thin SVD via one-sided Jacobi (Hestenes) rotations.
+//!
+//! Used by the Tucker/HOSVD comparison baseline (`cp::tucker`) and
+//! available to the HOSVD init.  One-sided Jacobi orthogonalizes the
+//! columns of `A`; the column norms become singular values, `U` the
+//! normalized columns, and `V` accumulates the rotations.  Robust and
+//! simple at the few-hundred-column scale we need.
+
+use super::matrix::Matrix;
+
+/// Thin SVD `A (m×n) = U (m×n) · diag(s) · Vᵀ (n×n)` with singular values
+/// sorted descending. Requires `m ≥ n` (transpose first otherwise).
+pub struct Svd {
+    pub u: Matrix,
+    pub s: Vec<f32>,
+    pub v: Matrix,
+}
+
+/// Computes the thin SVD by one-sided Jacobi sweeps.
+pub fn svd_thin(a: &Matrix) -> Svd {
+    let m = a.rows();
+    let n = a.cols();
+    assert!(m >= n, "svd_thin: need m ≥ n (got {m}×{n}); transpose first");
+    // Work in f64 for the rotations.
+    let mut w: Vec<f64> = a.data().iter().map(|&x| x as f64).collect();
+    let idx = |i: usize, j: usize| i + j * m;
+    let mut v = vec![0.0f64; n * n];
+    for j in 0..n {
+        v[j + j * n] = 1.0;
+    }
+
+    let max_sweeps = 60;
+    let eps = 1e-12;
+    for _ in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // Gram entries of columns p, q.
+                let (mut app, mut aqq, mut apq) = (0.0f64, 0.0f64, 0.0f64);
+                for i in 0..m {
+                    let xp = w[idx(i, p)];
+                    let xq = w[idx(i, q)];
+                    app += xp * xp;
+                    aqq += xq * xq;
+                    apq += xp * xq;
+                }
+                off += apq * apq;
+                if apq.abs() <= eps * (app * aqq).sqrt().max(1e-300) {
+                    continue;
+                }
+                // Jacobi rotation zeroing the (p,q) Gram entry.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let xp = w[idx(i, p)];
+                    let xq = w[idx(i, q)];
+                    w[idx(i, p)] = c * xp - s * xq;
+                    w[idx(i, q)] = s * xp + c * xq;
+                }
+                for j in 0..n {
+                    let vp = v[j + p * n];
+                    let vq = v[j + q * n];
+                    v[j + p * n] = c * vp - s * vq;
+                    v[j + q * n] = s * vp + c * vq;
+                }
+            }
+        }
+        if off.sqrt() < 1e-14 {
+            break;
+        }
+    }
+
+    // Column norms → singular values; normalize U columns.
+    let mut order: Vec<(f64, usize)> = (0..n)
+        .map(|j| {
+            let norm: f64 = (0..m).map(|i| w[idx(i, j)] * w[idx(i, j)]).sum();
+            (norm.sqrt(), j)
+        })
+        .collect();
+    order.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+    let mut u = Matrix::zeros(m, n);
+    let mut vm = Matrix::zeros(n, n);
+    let mut s = Vec::with_capacity(n);
+    for (out_col, &(norm, src)) in order.iter().enumerate() {
+        s.push(norm as f32);
+        if norm > 1e-300 {
+            for i in 0..m {
+                u.set(i, out_col, (w[idx(i, src)] / norm) as f32);
+            }
+        } else if out_col < m {
+            u.set(out_col, out_col, 1.0); // arbitrary orthogonal completion
+        }
+        for j in 0..n {
+            vm.set(j, out_col, v[j + src * n] as f32);
+        }
+    }
+    Svd { u, s, v: vm }
+}
+
+/// Leading `k` left singular vectors of `A` (works for any aspect ratio).
+pub fn leading_singular_vectors(a: &Matrix, k: usize) -> Matrix {
+    if a.rows() >= a.cols() {
+        let svd = svd_thin(a);
+        svd.u.slice_cols(0, k.min(svd.u.cols()))
+    } else {
+        // A = U S Vᵀ ⇔ Aᵀ = V S Uᵀ: take V of the transpose.
+        let svd = svd_thin(&a.transpose());
+        svd.v.slice_cols(0, k.min(svd.v.cols()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::{matmul, Trans};
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn reconstructs_random_matrix() {
+        let mut rng = Xoshiro256::seed_from_u64(700);
+        let a = Matrix::random_normal(15, 8, &mut rng);
+        let svd = svd_thin(&a);
+        // A = U diag(s) Vᵀ
+        let us = svd.u.scale_cols(&svd.s);
+        let rec = matmul(&us, Trans::No, &svd.v, Trans::Yes);
+        assert!(rec.rel_error(&a) < 1e-5, "err {}", rec.rel_error(&a));
+    }
+
+    #[test]
+    fn u_and_v_orthonormal() {
+        let mut rng = Xoshiro256::seed_from_u64(701);
+        let a = Matrix::random_normal(12, 6, &mut rng);
+        let svd = svd_thin(&a);
+        let utu = matmul(&svd.u, Trans::Yes, &svd.u, Trans::No);
+        assert!(utu.rel_error(&Matrix::identity(6)) < 1e-5);
+        let vtv = matmul(&svd.v, Trans::Yes, &svd.v, Trans::No);
+        assert!(vtv.rel_error(&Matrix::identity(6)) < 1e-5);
+    }
+
+    #[test]
+    fn singular_values_sorted_and_match_norm() {
+        let mut rng = Xoshiro256::seed_from_u64(702);
+        let a = Matrix::random_normal(20, 5, &mut rng);
+        let svd = svd_thin(&a);
+        for wpair in svd.s.windows(2) {
+            assert!(wpair[0] >= wpair[1] - 1e-6);
+        }
+        let frob_sq: f64 = svd.s.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        assert!((frob_sq.sqrt() - a.frobenius_norm()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn low_rank_detected() {
+        let mut rng = Xoshiro256::seed_from_u64(703);
+        let b = Matrix::random_normal(10, 2, &mut rng);
+        let c = Matrix::random_normal(2, 6, &mut rng);
+        let a = matmul(&b, Trans::No, &c, Trans::No); // rank ≤ 2
+        let svd = svd_thin(&a);
+        assert!(svd.s[2] < 1e-4 * svd.s[0], "s = {:?}", svd.s);
+    }
+
+    #[test]
+    fn wide_matrix_leading_vectors() {
+        let mut rng = Xoshiro256::seed_from_u64(704);
+        let a = Matrix::random_normal(4, 10, &mut rng);
+        let u = leading_singular_vectors(&a, 3);
+        assert_eq!((u.rows(), u.cols()), (4, 3));
+        let utu = matmul(&u, Trans::Yes, &u, Trans::No);
+        assert!(utu.rel_error(&Matrix::identity(3)) < 1e-4);
+    }
+}

@@ -1,0 +1,293 @@
+//! `exatensor` — the Exascale-Tensor command-line coordinator (Layer 3).
+//!
+//! Subcommands:
+//! * `decompose` — run the compressed CP pipeline on a synthetic implicit
+//!   tensor or a tensor file.
+//! * `gene`      — the gene-expression analysis application (§V-C).
+//! * `cp-layer`  — the CP tensor-layer / CNN compression application
+//!   (Table I).
+//! * `artifacts` — list the AOT artifacts the runtime can execute.
+
+use exascale_tensor::apps::{run_cp_layer_experiment, run_gene_analysis, CpBackend, GeneConfig};
+use exascale_tensor::apps::nn::{train, Network, SyntheticImages, TrainConfig};
+use exascale_tensor::coordinator::{Backend, Pipeline, PipelineConfig};
+use exascale_tensor::runtime::{artifacts_dir, XlaRuntime};
+use exascale_tensor::tensor::{InMemorySource, LowRankGenerator};
+use exascale_tensor::util::cli::Command;
+use exascale_tensor::util::logging;
+
+fn main() {
+    logging::init();
+    let args: Vec<String> = std::env::args().collect();
+    let prog = args.first().map(|s| s.as_str()).unwrap_or("exatensor").to_string();
+    let sub = args.get(1).map(|s| s.as_str()).unwrap_or("help").to_string();
+    let rest: Vec<String> = args.iter().skip(2).cloned().collect();
+    let code = match sub.as_str() {
+        "decompose" => cmd_decompose(&prog, &rest),
+        "gene" => cmd_gene(&prog, &rest),
+        "cp-layer" => cmd_cp_layer(&prog, &rest),
+        "artifacts" => cmd_artifacts(),
+        _ => {
+            print_help(&prog);
+            if sub == "help" || sub == "--help" {
+                0
+            } else {
+                eprintln!("unknown subcommand '{sub}'");
+                2
+            }
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help(prog: &str) {
+    println!(
+        "exatensor — compressed CP tensor decomposition (Exascale-Tensor)\n\n\
+         USAGE: {prog} <decompose|gene|cp-layer|artifacts> [OPTIONS]\n\n\
+         Run `{prog} <subcommand> --help` for options."
+    );
+}
+
+fn decompose_cmd() -> Command {
+    Command::new("decompose", "compressed CP decomposition of a tensor")
+        .opt("size", "synthetic tensor side I=J=K", Some("200"))
+        .opt("rank", "CP rank F", Some("5"))
+        .opt("reduced", "proxy side L=M=N", Some("24"))
+        .opt("block", "compression block side d", Some("60"))
+        .opt("input", "EXT1 tensor file instead of synthetic", None)
+        .opt("backend", "seq | par | xla", Some("par"))
+        .opt("threads", "worker threads (0 = auto)", Some("0"))
+        .opt("seed", "random seed", Some("0"))
+        .switch("mixed", "mixed-precision (split bf16) compression")
+        .switch("help", "show help")
+}
+
+fn cmd_decompose(prog: &str, args: &[String]) -> i32 {
+    let cmd = decompose_cmd();
+    let m = match cmd.parse(args) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}\n{}", cmd.usage(prog));
+            return 2;
+        }
+    };
+    if m.get_bool("help") {
+        println!("{}", cmd.usage(prog));
+        return 0;
+    }
+    let run = || -> anyhow::Result<()> {
+        let size = m.get_usize("size")?;
+        let rank = m.get_usize("rank")?;
+        let reduced = m.get_usize("reduced")?;
+        let block = m.get_usize("block")?;
+        let seed = m.get_u64("seed")?;
+        let threads = match m.get_usize("threads")? {
+            0 => exascale_tensor::util::default_threads(),
+            t => t,
+        };
+        let backend = match m.get("backend").unwrap_or("par") {
+            "seq" => Backend::RustSequential,
+            "xla" => Backend::Xla,
+            _ => Backend::RustParallel,
+        };
+        let cfg = PipelineConfig::builder()
+            .reduced_dims(reduced, reduced, reduced)
+            .rank(rank)
+            .block([block, block, block])
+            .backend(backend)
+            .threads(threads)
+            .mixed_precision(m.get_bool("mixed"))
+            .seed(seed)
+            .build()?;
+        let mut pipe = Pipeline::new(cfg);
+        if backend == Backend::Xla {
+            let rt = XlaRuntime::load(artifacts_dir(), 2)?;
+            pipe = pipe
+                .with_compressor(Box::new(exascale_tensor::runtime::XlaCompressor::new(
+                    rt.clone(),
+                    [reduced, reduced, reduced],
+                    block,
+                )?))
+                .with_decomposer(Box::new(exascale_tensor::runtime::XlaAlsDecomposer::new(
+                    rt,
+                    [reduced, reduced, reduced],
+                    rank,
+                    120,
+                    1e-10,
+                )?));
+        }
+
+        let result = if let Some(path) = m.get("input") {
+            let t = exascale_tensor::tensor::io::load_tensor(path)?;
+            let src = InMemorySource::new(t);
+            pipe.run(&src)?
+        } else {
+            let gen = LowRankGenerator::new(size, size, size, rank, seed);
+            println!(
+                "synthetic implicit tensor {size}³ = {} virtual elements (rank {rank})",
+                size * size * size
+            );
+            pipe.run(&gen)?
+        };
+        println!(
+            "plan: P={} block={:?} est bytes={}",
+            result.plan.replicas, result.plan.block, result.plan.estimated_bytes
+        );
+        println!("sampled MSE      : {:.3e}", result.diagnostics.sampled_mse);
+        println!("sampled rel error: {:.3e}", result.diagnostics.rel_error);
+        println!("dropped replicas : {}", result.diagnostics.dropped_replicas);
+        println!("\nstage timings:\n{}", pipe.metrics.report());
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_gene(prog: &str, args: &[String]) -> i32 {
+    let cmd = Command::new("gene", "gene-expression CP analysis (§V-C)")
+        .opt("individuals", "individuals dim", Some("120"))
+        .opt("tissues", "tissues dim", Some("30"))
+        .opt("genes", "genes dim", Some("800"))
+        .opt("programs", "planted expression programs (rank)", Some("5"))
+        .opt("seed", "random seed", Some("1"))
+        .switch("help", "show help");
+    let m = match cmd.parse(args) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}\n{}", cmd.usage(prog));
+            return 2;
+        }
+    };
+    if m.get_bool("help") {
+        println!("{}", cmd.usage(prog));
+        return 0;
+    }
+    let run = || -> anyhow::Result<()> {
+        let cfg = GeneConfig {
+            individuals: m.get_usize("individuals")?,
+            tissues: m.get_usize("tissues")?,
+            genes: m.get_usize("genes")?,
+            programs: m.get_usize("programs")?,
+            seed: m.get_u64("seed")?,
+            ..Default::default()
+        };
+        let report = run_gene_analysis(&cfg)?;
+        println!("gene tensor {:?} (individual × tissue × gene)", report.dims);
+        println!("replicas          : {}", report.replicas);
+        println!("relative error    : {:.3}%", 100.0 * report.rel_error);
+        println!("factor congruence : {:.4}", report.factor_congruence);
+        println!("decomposition time: {:.2} s", report.decompose_seconds);
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+/// Deep-copies a trained network's parameters into a fresh instance so each
+/// Table-I backend starts from identical weights.
+fn clone_network(reference: &Network, seed: u64) -> Network {
+    let mut net = Network::new(18, 8, 16, 32, 3, seed);
+    net.conv1.weight = reference.conv1.weight.clone();
+    net.conv1.bias = reference.conv1.bias.clone();
+    net.conv2.weight = reference.conv2.weight.clone();
+    net.conv2.bias = reference.conv2.bias.clone();
+    net.fc1.weight = reference.fc1.weight.clone();
+    net.fc1.bias = reference.fc1.bias.clone();
+    net.fc2.weight = reference.fc2.weight.clone();
+    net.fc2.bias = reference.fc2.bias.clone();
+    net
+}
+
+fn cmd_cp_layer(prog: &str, args: &[String]) -> i32 {
+    let cmd = Command::new("cp-layer", "CP tensor layer CNN compression (Table I)")
+        .opt("train", "training images", Some("240"))
+        .opt("test", "test images", Some("90"))
+        .opt("rank", "CP rank for the conv layer", Some("8"))
+        .opt("epochs", "pre-training epochs", Some("3"))
+        .opt("seed", "random seed", Some("42"))
+        .switch("help", "show help");
+    let m = match cmd.parse(args) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}\n{}", cmd.usage(prog));
+            return 2;
+        }
+    };
+    if m.get_bool("help") {
+        println!("{}", cmd.usage(prog));
+        return 0;
+    }
+    let run = || -> anyhow::Result<()> {
+        let gen = SyntheticImages::default();
+        let train_ds = gen.generate(m.get_usize("train")?, 1);
+        let test_ds = gen.generate(m.get_usize("test")?, 2);
+        let seed = m.get_u64("seed")?;
+        let rank = m.get_usize("rank")?;
+        println!("training reference CNN…");
+        let mut reference = Network::new(18, 8, 16, 32, 3, seed);
+        train(
+            &mut reference,
+            &train_ds,
+            &TrainConfig {
+                epochs: m.get_usize("epochs")?,
+                lr: 0.01,
+                seed,
+            },
+        );
+        println!(
+            "{:<26} {:>8} {:>10} {:>10} {:>9} {:>8}",
+            "method", "acc pre", "acc drop", "acc tuned", "time", "rel err"
+        );
+        for backend in [CpBackend::Hosvd, CpBackend::Random, CpBackend::Compressed] {
+            let mut net = clone_network(&reference, seed);
+            let rep =
+                run_cp_layer_experiment(&mut net, &train_ds, &test_ds, rank, backend, 1, seed)?;
+            println!(
+                "{:<26} {:>7.1}% {:>9.1}% {:>9.1}% {:>8.2}s {:>8.4}",
+                rep.backend,
+                100.0 * rep.accuracy_before,
+                100.0 * rep.accuracy_after_decomp,
+                100.0 * rep.accuracy_after_finetune,
+                rep.decomp_seconds,
+                rep.reconstruction_error
+            );
+        }
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_artifacts() -> i32 {
+    match exascale_tensor::runtime::Manifest::load(artifacts_dir()) {
+        Ok(man) => {
+            println!("{} artifacts in {}:", man.artifacts.len(), man.dir.display());
+            for (name, spec) in &man.artifacts {
+                println!(
+                    "  {:<38} kind={:<18} in={:?} out={:?}",
+                    name, spec.kind, spec.inputs, spec.outputs
+                );
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e:#} (run `make artifacts`)");
+            1
+        }
+    }
+}

@@ -1,0 +1,21 @@
+//! Mixed-precision emulation — §IV-B of the paper.
+//!
+//! GPU tensor cores compute `FP16×FP16 + FP32 → FP32`; the TPU MXU computes
+//! `bf16×bf16 → f32` (DESIGN.md §Hardware-Adaptation).  Either way the
+//! operands are lossy 16-bit, and the paper's fix is a first-order residual
+//! expansion (Eq. 5): split every operand `x = hi(x) + lo(x)` with `hi` the
+//! 16-bit rounding and `lo` the exactly-representable residual, then keep
+//! the four first-order product terms
+//! `hi·hi + lo·hi + hi·lo` (and the `lo` of the *tensor* side) while
+//! dropping the quadratic `lo·lo` terms.
+//!
+//! This module provides the bit-faithful **CPU emulation** used by the
+//! rust-only benchmark variants and by tests that validate the Pallas
+//! kernel's numerics; the L1 Pallas kernel (`python/compile/kernels/
+//! mixed_matmul.py`) implements the same scheme on the MXU path.
+
+pub mod split;
+
+pub use split::{
+    matmul_mixed, matmul_mixed_naive, split_matrix, MixedPrecision, SplitMatrix,
+};

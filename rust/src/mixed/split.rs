@@ -1,0 +1,149 @@
+//! Split-precision matrices and the compensated matmul of Eq. (5).
+
+use crate::linalg::{gemm, Matrix, Trans};
+use crate::util::f16::{quantize_bf16_slice, quantize_f16_slice};
+
+/// Which 16-bit format the emulation rounds through.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MixedPrecision {
+    /// IEEE binary16 — GPU tensor-core semantics (the paper's hardware).
+    F16,
+    /// bfloat16 — TPU MXU semantics (our adapted target).
+    Bf16,
+    /// No rounding: plain f32 (the "off" ablation arm).
+    Full,
+}
+
+/// A matrix split into `hi` (16-bit-representable values stored widened to
+/// f32) and `lo = original − hi` residual.
+#[derive(Clone, Debug)]
+pub struct SplitMatrix {
+    pub hi: Matrix,
+    pub lo: Matrix,
+}
+
+/// Splits `m` into 16-bit high part + residual (`hi + lo == m` exactly,
+/// by Sterbenz' lemma, for finite values).
+pub fn split_matrix(m: &Matrix, precision: MixedPrecision) -> SplitMatrix {
+    let hi_data = match precision {
+        MixedPrecision::F16 => quantize_f16_slice(m.data()),
+        MixedPrecision::Bf16 => quantize_bf16_slice(m.data()),
+        MixedPrecision::Full => m.data().to_vec(),
+    };
+    let lo_data: Vec<f32> = m
+        .data()
+        .iter()
+        .zip(&hi_data)
+        .map(|(&orig, &hi)| if hi.is_finite() { orig - hi } else { 0.0 })
+        .collect();
+    SplitMatrix {
+        hi: Matrix::from_vec(m.rows(), m.cols(), hi_data),
+        lo: Matrix::from_vec(m.rows(), m.cols(), lo_data),
+    }
+}
+
+/// First-order compensated mixed-precision matmul (Eq. 5 restricted to two
+/// operands):
+/// `A·B ≈ hi(A)·hi(B) + hi(A)·lo(B) + lo(A)·hi(B)`
+/// where each product term is computed with 16-bit operands accumulated in
+/// f32 (the emulation quantizes the operands; accumulation here is f32 as
+/// on the MXU/tensor cores).
+pub fn matmul_mixed(a: &Matrix, b: &Matrix, precision: MixedPrecision) -> Matrix {
+    if precision == MixedPrecision::Full {
+        return crate::linalg::matmul(a, Trans::No, b, Trans::No);
+    }
+    let sa = split_matrix(a, precision);
+    let sb = split_matrix(b, precision);
+    // The residuals lo(A), lo(B) are themselves quantized before the MMA —
+    // hardware feeds them through the same 16-bit port. Splitting already
+    // leaves lo within 2^-10 (2^-7 for bf16) of hi's magnitude, and one more
+    // rounding is how the real kernel behaves.
+    let lo_a = split_matrix(&sa.lo, precision).hi;
+    let lo_b = split_matrix(&sb.lo, precision).hi;
+
+    let mut out = Matrix::zeros(a.rows(), b.cols());
+    gemm(1.0, &sa.hi, Trans::No, &sb.hi, Trans::No, 0.0, &mut out);
+    gemm(1.0, &sa.hi, Trans::No, &lo_b, Trans::No, 1.0, &mut out);
+    gemm(1.0, &lo_a, Trans::No, &sb.hi, Trans::No, 1.0, &mut out);
+    out
+}
+
+/// Uncompensated 16-bit matmul (`hi·hi` only) — what naive tensor-core use
+/// gives you; the ablation baseline for Eq. (5).
+pub fn matmul_mixed_naive(a: &Matrix, b: &Matrix, precision: MixedPrecision) -> Matrix {
+    if precision == MixedPrecision::Full {
+        return crate::linalg::matmul(a, Trans::No, b, Trans::No);
+    }
+    let sa = split_matrix(a, precision);
+    let sb = split_matrix(b, precision);
+    crate::linalg::matmul(&sa.hi, Trans::No, &sb.hi, Trans::No)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul;
+    use crate::util::rng::Xoshiro256;
+
+    fn rel_err(approx: &Matrix, exact: &Matrix) -> f64 {
+        approx.rel_error(exact)
+    }
+
+    #[test]
+    fn split_reconstructs_exactly() {
+        let mut rng = Xoshiro256::seed_from_u64(120);
+        let m = Matrix::random_normal(20, 20, &mut rng);
+        for p in [MixedPrecision::F16, MixedPrecision::Bf16] {
+            let s = split_matrix(&m, p);
+            let rec = s.hi.add(&s.lo);
+            assert_eq!(rec, m, "{p:?} split not exact");
+        }
+    }
+
+    #[test]
+    fn compensation_beats_naive_f16() {
+        let mut rng = Xoshiro256::seed_from_u64(121);
+        let a = Matrix::random_normal(64, 64, &mut rng);
+        let b = Matrix::random_normal(64, 64, &mut rng);
+        let exact = matmul(&a, Trans::No, &b, Trans::No);
+        let naive = rel_err(&matmul_mixed_naive(&a, &b, MixedPrecision::F16), &exact);
+        let comp = rel_err(&matmul_mixed(&a, &b, MixedPrecision::F16), &exact);
+        assert!(
+            comp < naive / 10.0,
+            "compensated {comp:.2e} should be ≫ better than naive {naive:.2e}"
+        );
+    }
+
+    #[test]
+    fn compensation_beats_naive_bf16() {
+        let mut rng = Xoshiro256::seed_from_u64(122);
+        let a = Matrix::random_normal(48, 48, &mut rng);
+        let b = Matrix::random_normal(48, 48, &mut rng);
+        let exact = matmul(&a, Trans::No, &b, Trans::No);
+        let naive = rel_err(&matmul_mixed_naive(&a, &b, MixedPrecision::Bf16), &exact);
+        let comp = rel_err(&matmul_mixed(&a, &b, MixedPrecision::Bf16), &exact);
+        assert!(comp < naive / 5.0, "comp {comp:.2e} vs naive {naive:.2e}");
+    }
+
+    #[test]
+    fn full_precision_is_exact_passthrough() {
+        let mut rng = Xoshiro256::seed_from_u64(123);
+        let a = Matrix::random_normal(10, 12, &mut rng);
+        let b = Matrix::random_normal(12, 9, &mut rng);
+        let exact = matmul(&a, Trans::No, &b, Trans::No);
+        assert_eq!(matmul_mixed(&a, &b, MixedPrecision::Full), exact);
+        assert_eq!(matmul_mixed_naive(&a, &b, MixedPrecision::Full), exact);
+    }
+
+    #[test]
+    fn error_bound_first_order() {
+        // Compensated error should be O(u²)·cond-ish: for unit-scale
+        // operands and f16 (u ≈ 2^-11), expect ≲ 1e-5 relative error.
+        let mut rng = Xoshiro256::seed_from_u64(124);
+        let a = Matrix::random_normal(32, 32, &mut rng);
+        let b = Matrix::random_normal(32, 32, &mut rng);
+        let exact = matmul(&a, Trans::No, &b, Trans::No);
+        let comp = rel_err(&matmul_mixed(&a, &b, MixedPrecision::F16), &exact);
+        assert!(comp < 5e-5, "comp err {comp:.2e}");
+    }
+}

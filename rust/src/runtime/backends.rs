@@ -1,0 +1,275 @@
+//! Pipeline backends wired to the AOT artifacts — the "GPU tensor cores"
+//! arm of the benchmarks.
+//!
+//! * [`XlaCompressor`] implements [`BlockCompressor`] with the Pallas
+//!   `ttm_chain` kernel artifact (fixed block shape; ragged edge blocks are
+//!   zero-padded — exact, since the op is linear and padding contributes 0).
+//! * [`XlaAlsDecomposer`] implements [`ProxyDecomposer`] with the fused
+//!   `als_sweep` artifact: one call = one full ALS sweep (all three mode
+//!   updates) on the device; rust loops sweeps and checks convergence.
+
+use super::executor::XlaRuntime;
+use super::host::HostTensor;
+use crate::compress::BlockCompressor;
+use crate::coordinator::ProxyDecomposer;
+use crate::cp::CpModel;
+use crate::linalg::Matrix;
+use crate::tensor::DenseTensor;
+use crate::util::rng::Xoshiro256;
+use anyhow::{Context, Result};
+
+/// Block compression via the `compress_block` artifact.
+pub struct XlaCompressor {
+    runtime: XlaRuntime,
+    artifact: String,
+    block_d: [usize; 3],
+    reduced: [usize; 3],
+}
+
+impl XlaCompressor {
+    /// Picks the `compress_block` artifact matching `reduced = [L,M,N]` and
+    /// block size `d` from the manifest.
+    pub fn new(runtime: XlaRuntime, reduced: [usize; 3], d: usize) -> Result<Self> {
+        let spec = runtime
+            .manifest()
+            .find(
+                "compress_block",
+                &[
+                    ("l", reduced[0]),
+                    ("m", reduced[1]),
+                    ("n", reduced[2]),
+                    ("d", d),
+                ],
+            )
+            .with_context(|| {
+                format!("no compress_block artifact for reduced={reduced:?} d={d} (run `make artifacts`)")
+            })?
+            .clone();
+        Ok(Self {
+            runtime,
+            artifact: spec.name,
+            block_d: [d, d, d],
+            reduced,
+        })
+    }
+
+    pub fn block_dims(&self) -> [usize; 3] {
+        self.block_d
+    }
+}
+
+impl BlockCompressor for XlaCompressor {
+    fn compress_block(
+        &self,
+        t: &DenseTensor,
+        u_blk: &Matrix,
+        v_blk: &Matrix,
+        w_blk: &Matrix,
+    ) -> DenseTensor {
+        let [l, m, n] = self.reduced;
+        let [d0, d1, d2] = self.block_d;
+        // Zero-copy layout trick (§Perf): the column-major rust buffer of a
+        // `(di, dj, dk)` tensor IS the row-major buffer of the reversed
+        // `(dk, dj, di)` tensor, and `Comp` over reversed dims is the same
+        // contraction with U and W swapped:
+        //   Comp(T_rev, W, V, U) = Comp(T, U, V, W) reversed.
+        // The output then memcpy-reinterprets back to column-major.  This
+        // removes the two O(d³)/O(LMN) scalar transposes per dispatch that
+        // dominated the request path (requires the symmetric artifact
+        // shapes we compile: d0=d1=d2, l=m=n).
+        debug_assert!(d0 == d1 && d1 == d2 && l == m && m == n);
+        let [di, dj, dk] = t.dims();
+        let th = HostTensor::new(vec![dk, dj, di], t.data().to_vec()).pad_to(&[d2, d1, d0]);
+        let uh = HostTensor::from_matrix(u_blk).pad_to(&[l, d0]);
+        let vh = HostTensor::from_matrix(v_blk).pad_to(&[m, d1]);
+        let wh = HostTensor::from_matrix(w_blk).pad_to(&[n, d2]);
+        let out = self
+            .runtime
+            .execute(&self.artifact, vec![th, wh, vh, uh])
+            .expect("compress_block artifact execution failed");
+        // Row-major (n, m, l) == column-major (l, m, n): reinterpret.
+        DenseTensor::from_vec([l, m, n], out[0].data.clone())
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-pallas-ttm"
+    }
+}
+
+/// Proxy ALS via the fused `als_sweep` artifact.
+pub struct XlaAlsDecomposer {
+    runtime: XlaRuntime,
+    artifact: String,
+    reduced: [usize; 3],
+    rank: usize,
+    pub sweeps: usize,
+    pub tol: f64,
+}
+
+impl XlaAlsDecomposer {
+    pub fn new(
+        runtime: XlaRuntime,
+        reduced: [usize; 3],
+        rank: usize,
+        sweeps: usize,
+        tol: f64,
+    ) -> Result<Self> {
+        let spec = runtime
+            .manifest()
+            .find(
+                "als_sweep",
+                &[
+                    ("l", reduced[0]),
+                    ("m", reduced[1]),
+                    ("n", reduced[2]),
+                    ("r", rank),
+                ],
+            )
+            .with_context(|| {
+                format!("no als_sweep artifact for reduced={reduced:?} rank={rank} (run `make artifacts`)")
+            })?
+            .clone();
+        Ok(Self {
+            runtime,
+            artifact: spec.name,
+            reduced,
+            rank,
+            sweeps,
+            tol,
+        })
+    }
+}
+
+impl ProxyDecomposer for XlaAlsDecomposer {
+    fn decompose(&self, proxy: &DenseTensor, rank: usize, seed: u64) -> Result<(CpModel, f64)> {
+        assert_eq!(rank, self.rank, "decomposer compiled for rank {}", self.rank);
+        assert_eq!(proxy.dims(), self.reduced, "proxy dims mismatch");
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        // The artifact takes (Y, B, C): A is recomputed first inside the
+        // sweep, so it is not an input (see model.als_sweep).
+        let mut a = HostTensor::zeros(vec![self.reduced[0], rank]);
+        let mut b = HostTensor::from_matrix(&Matrix::random_normal(
+            self.reduced[1],
+            rank,
+            &mut rng,
+        ));
+        let mut c = HostTensor::from_matrix(&Matrix::random_normal(
+            self.reduced[2],
+            rank,
+            &mut rng,
+        ));
+        let y = HostTensor::from_tensor(proxy);
+        let norm_y = proxy.frobenius_norm();
+
+        let mut prev_fit = f64::NEG_INFINITY;
+        for sweep in 0..self.sweeps {
+            let out = self
+                .runtime
+                .execute(&self.artifact, vec![y.clone(), b, c])
+                .with_context(|| format!("als_sweep sweep {sweep}"))?;
+            let mut it = out.into_iter();
+            a = it.next().context("missing A output")?;
+            b = it.next().context("missing B output")?;
+            c = it.next().context("missing C output")?;
+            // Convergence check on the host every few sweeps (cheap at L≤50).
+            if sweep % 4 == 3 || sweep + 1 == self.sweeps {
+                let model = CpModel::new(a.to_matrix(), b.to_matrix(), c.to_matrix());
+                let resid = residual_norm(proxy, &model);
+                let fit = 1.0 - resid / norm_y.max(1e-300);
+                if (fit - prev_fit).abs() < self.tol {
+                    return Ok((model, fit));
+                }
+                prev_fit = fit;
+            }
+        }
+        let model = CpModel::new(a.to_matrix(), b.to_matrix(), c.to_matrix());
+        let fit = 1.0 - residual_norm(proxy, &model) / norm_y.max(1e-300);
+        Ok((model, fit))
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-als-sweep"
+    }
+}
+
+fn residual_norm(y: &DenseTensor, model: &CpModel) -> f64 {
+    use crate::linalg::{matmul, Trans};
+    use crate::linalg::products::khatri_rao;
+    let x1 = crate::tensor::unfold::unfold_1(y);
+    let kr = khatri_rao(&model.c, &model.b);
+    let x1kr = matmul(&x1, Trans::No, &kr, Trans::No);
+    let mut inner = 0.0f64;
+    for r in 0..model.rank() {
+        for i in 0..model.a.rows() {
+            inner += model.a.get(i, r) as f64 * x1kr.get(i, r) as f64;
+        }
+    }
+    let ns = y.frobenius_norm();
+    ((ns * ns - 2.0 * inner + model.norm_sq()).max(0.0)).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::comp_dense;
+    use crate::mixed::MixedPrecision;
+
+    fn runtime() -> Option<XlaRuntime> {
+        let dir = crate::runtime::artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("SKIP: no artifacts (run `make artifacts`)");
+            return None;
+        }
+        Some(XlaRuntime::load(dir, 1).expect("runtime"))
+    }
+
+    #[test]
+    fn xla_compress_matches_rust() {
+        let Some(rt) = runtime() else { return };
+        let Ok(comp) = XlaCompressor::new(rt, [16, 16, 16], 32) else {
+            eprintln!("SKIP: no compress_block l16 d32 artifact");
+            return;
+        };
+        let mut rng = Xoshiro256::seed_from_u64(500);
+        let t = DenseTensor::random_normal([32, 32, 32], &mut rng);
+        let u = Matrix::random_normal(16, 32, &mut rng);
+        let v = Matrix::random_normal(16, 32, &mut rng);
+        let w = Matrix::random_normal(16, 32, &mut rng);
+        let got = comp.compress_block(&t, &u, &v, &w);
+        let want = comp_dense(&t, &u, &v, &w, MixedPrecision::Full);
+        let err = got.rel_error(&want);
+        assert!(err < 1e-3, "xla vs rust err {err}");
+    }
+
+    #[test]
+    fn xla_compress_ragged_block_padding_exact() {
+        let Some(rt) = runtime() else { return };
+        let Ok(comp) = XlaCompressor::new(rt, [16, 16, 16], 32) else { return };
+        let mut rng = Xoshiro256::seed_from_u64(501);
+        // Edge block smaller than compiled shape.
+        let t = DenseTensor::random_normal([20, 32, 7], &mut rng);
+        let u = Matrix::random_normal(16, 20, &mut rng);
+        let v = Matrix::random_normal(16, 32, &mut rng);
+        let w = Matrix::random_normal(16, 7, &mut rng);
+        let got = comp.compress_block(&t, &u, &v, &w);
+        let want = comp_dense(&t, &u, &v, &w, MixedPrecision::Full);
+        assert!(got.rel_error(&want) < 1e-3);
+    }
+
+    #[test]
+    fn xla_als_decomposes_planted_proxy() {
+        let Some(rt) = runtime() else { return };
+        let Ok(dec) = XlaAlsDecomposer::new(rt, [16, 16, 16], 4, 120, 1e-10) else {
+            eprintln!("SKIP: no als_sweep l16 r4 artifact");
+            return;
+        };
+        let mut rng = Xoshiro256::seed_from_u64(502);
+        let a = Matrix::random_normal(16, 4, &mut rng);
+        let b = Matrix::random_normal(16, 4, &mut rng);
+        let c = Matrix::random_normal(16, 4, &mut rng);
+        let y = DenseTensor::from_cp_factors(&a, &b, &c);
+        let (model, _fit) = dec.decompose(&y, 4, 77).unwrap();
+        let err = model.to_tensor().rel_error(&y);
+        assert!(err < 1e-2, "xla als err {err}");
+    }
+}

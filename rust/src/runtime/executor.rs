@@ -1,0 +1,270 @@
+//! Executor thread pool owning PJRT clients + compiled artifacts.
+//!
+//! Why threads-with-channels instead of sharing: the `xla` crate's client
+//! and executable types are `Rc`-based (`!Send`), so each executor thread
+//! builds its *own* client and compiles its own copy of every artifact, and
+//! callers (any thread) submit [`Request`]s over an mpsc channel, blocking
+//! on a per-request reply channel.  Compilation happens once per thread at
+//! startup — never on the request path.
+
+use super::host::HostTensor;
+use super::manifest::Manifest;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+struct Request {
+    artifact: String,
+    inputs: Vec<HostTensor>,
+    reply: mpsc::Sender<Result<Vec<HostTensor>>>,
+}
+
+/// Handle to the executor pool.  Cheap to clone; dropping the last handle
+/// shuts the executor threads down.
+#[derive(Clone)]
+pub struct XlaRuntime {
+    inner: Arc<Inner>,
+}
+
+struct Inner {
+    tx: Mutex<mpsc::Sender<Request>>,
+    manifest: Manifest,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl Drop for Inner {
+    fn drop(&mut self) {
+        // Replace the sender to close the channel, then join.
+        let (dummy_tx, _) = mpsc::channel();
+        *self.tx.lock().unwrap() = dummy_tx;
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl XlaRuntime {
+    /// Loads the manifest from `dir` and spins up `threads` executor
+    /// threads, each compiling every artifact on its own PJRT CPU client.
+    pub fn load(dir: impl AsRef<std::path::Path>, threads: usize) -> Result<XlaRuntime> {
+        let manifest = Manifest::load(dir)?;
+        Self::with_manifest(manifest, threads)
+    }
+
+    /// As [`load`], with an already-parsed manifest.
+    pub fn with_manifest(manifest: Manifest, threads: usize) -> Result<XlaRuntime> {
+        let threads = threads.max(1);
+        let (tx, rx) = mpsc::channel::<Request>();
+        let rx = Arc::new(Mutex::new(rx));
+
+        // Each thread reports readiness (or a startup error) once.
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let mut handles = Vec::new();
+        for tid in 0..threads {
+            let rx = Arc::clone(&rx);
+            let ready = ready_tx.clone();
+            let manifest = manifest.clone();
+            handles.push(std::thread::spawn(move || {
+                executor_main(tid, manifest, rx, ready);
+            }));
+        }
+        drop(ready_tx);
+        for _ in 0..threads {
+            ready_rx
+                .recv()
+                .context("executor thread died during startup")??;
+        }
+        log::info!(
+            "xla runtime ready: {} artifacts × {threads} executor threads",
+            manifest.artifacts.len()
+        );
+        Ok(XlaRuntime {
+            inner: Arc::new(Inner {
+                tx: Mutex::new(tx),
+                manifest,
+                threads: handles,
+            }),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.inner.manifest
+    }
+
+    /// Executes `artifact` with `inputs`, blocking for the outputs.
+    /// Validates shapes against the manifest before dispatch.
+    pub fn execute(&self, artifact: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        let spec = self.inner.manifest.get(artifact)?;
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "artifact {artifact}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (idx, (got, want)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            if &got.dims != want {
+                bail!(
+                    "artifact {artifact}: input {idx} shape {:?} != expected {:?}",
+                    got.dims,
+                    want
+                );
+            }
+        }
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.inner
+            .tx
+            .lock()
+            .unwrap()
+            .send(Request {
+                artifact: artifact.to_string(),
+                inputs,
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow!("executor threads are gone"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("executor dropped request"))?
+    }
+}
+
+/// Executor thread body: build client, compile all artifacts, serve.
+fn executor_main(
+    tid: usize,
+    manifest: Manifest,
+    rx: Arc<Mutex<mpsc::Receiver<Request>>>,
+    ready: mpsc::Sender<Result<()>>,
+) {
+    let setup = || -> Result<(xla::PjRtClient, HashMap<String, xla::PjRtLoadedExecutable>)> {
+        let client = xla::PjRtClient::cpu().context("PjRtClient::cpu")?;
+        let mut exes = HashMap::new();
+        for (name, spec) in &manifest.artifacts {
+            let proto = xla::HloModuleProto::from_text_file(&spec.file)
+                .with_context(|| format!("loading {}", spec.file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?;
+            exes.insert(name.clone(), exe);
+        }
+        Ok((client, exes))
+    };
+    let (client, exes) = match setup() {
+        Ok(pair) => {
+            let _ = ready.send(Ok(()));
+            pair
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let _ = &client; // keep alive for executables' lifetime
+    log::debug!("executor {tid}: serving");
+
+    loop {
+        let req = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        let req = match req {
+            Ok(r) => r,
+            Err(_) => break, // channel closed → shutdown
+        };
+        let result = run_one(&exes, &manifest, &req);
+        let _ = req.reply.send(result);
+    }
+}
+
+fn run_one(
+    exes: &HashMap<String, xla::PjRtLoadedExecutable>,
+    manifest: &Manifest,
+    req: &Request,
+) -> Result<Vec<HostTensor>> {
+    let exe = exes
+        .get(&req.artifact)
+        .with_context(|| format!("artifact {} not compiled", req.artifact))?;
+    let spec = manifest.get(&req.artifact)?;
+
+    // Build literals (f32, row-major — jax's default layout).
+    let mut literals = Vec::with_capacity(req.inputs.len());
+    for input in &req.inputs {
+        let dims: Vec<i64> = input.dims.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(&input.data)
+            .reshape(&dims)
+            .with_context(|| format!("reshaping input to {dims:?}"))?;
+        literals.push(lit);
+    }
+
+    let result = exe
+        .execute::<xla::Literal>(&literals)
+        .with_context(|| format!("executing {}", req.artifact))?;
+    // gen-side lowers with return_tuple=True: result[0][0] is a tuple of
+    // spec.outputs.len() elements.
+    let mut tuple = result[0][0]
+        .to_literal_sync()
+        .context("fetching result literal")?;
+    let parts = tuple.decompose_tuple().context("decomposing result tuple")?;
+    if parts.len() != spec.outputs.len() {
+        bail!(
+            "artifact {}: expected {} outputs, got {}",
+            req.artifact,
+            spec.outputs.len(),
+            parts.len()
+        );
+    }
+    let mut outputs = Vec::with_capacity(parts.len());
+    for (part, dims) in parts.into_iter().zip(&spec.outputs) {
+        let data = part
+            .to_vec::<f32>()
+            .context("converting output literal to f32")?;
+        outputs.push(HostTensor::new(dims.clone(), data));
+    }
+    Ok(outputs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// These tests need `make artifacts` to have run; they self-skip (with
+    /// a loud message) otherwise so `cargo test` works in a fresh checkout.
+    fn runtime() -> Option<XlaRuntime> {
+        let dir = crate::runtime::artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
+            return None;
+        }
+        Some(XlaRuntime::load(dir, 2).expect("runtime load"))
+    }
+
+    #[test]
+    fn executes_identity_artifact_if_present() {
+        let Some(rt) = runtime() else { return };
+        // The aot.py manifest always includes a tiny smoke artifact.
+        let Ok(spec) = rt.manifest().get("smoke_add") else {
+            eprintln!("SKIP: smoke_add not in manifest");
+            return;
+        };
+        let x = HostTensor::new(spec.inputs[0].clone(), vec![1.0; spec.inputs[0].iter().product()]);
+        let y = HostTensor::new(spec.inputs[1].clone(), vec![2.0; spec.inputs[1].iter().product()]);
+        let out = rt.execute("smoke_add", vec![x, y]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert!(out[0].data.iter().all(|&v| (v - 3.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn shape_validation_rejects_bad_inputs() {
+        let Some(rt) = runtime() else { return };
+        let err = rt.execute("smoke_add", vec![]).unwrap_err().to_string();
+        assert!(err.contains("expected"), "got: {err}");
+    }
+
+    #[test]
+    fn unknown_artifact_rejected() {
+        let Some(rt) = runtime() else { return };
+        assert!(rt.execute("no_such_artifact", vec![]).is_err());
+    }
+}

@@ -1,0 +1,215 @@
+//! `HostTensor` — the `Send` host-side tensor value that crosses the
+//! channel boundary into the executor threads (raw f32 buffer + dims).
+
+use crate::linalg::Matrix;
+use crate::tensor::DenseTensor;
+
+/// A host-side row-of-floats with logical dims.  Layout convention matches
+/// the artifacts: **row-major** (C order), because jax lowers with default
+/// row-major layouts; conversion helpers below re-order from/to the crate's
+/// column-major types.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len(), "dims/data mismatch");
+        Self { dims, data }
+    }
+
+    pub fn zeros(dims: Vec<usize>) -> Self {
+        let n = dims.iter().product();
+        Self {
+            dims,
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// From a column-major matrix → row-major host buffer.
+    pub fn from_matrix(m: &Matrix) -> Self {
+        let (r, c) = (m.rows(), m.cols());
+        let mut data = vec![0.0f32; r * c];
+        for i in 0..r {
+            for j in 0..c {
+                data[i * c + j] = m.get(i, j);
+            }
+        }
+        Self {
+            dims: vec![r, c],
+            data,
+        }
+    }
+
+    /// Into a column-major matrix (dims must be 2-D).
+    pub fn to_matrix(&self) -> Matrix {
+        assert_eq!(self.dims.len(), 2, "to_matrix on {}-D tensor", self.dims.len());
+        let (r, c) = (self.dims[0], self.dims[1]);
+        Matrix::from_fn(r, c, |i, j| self.data[i * c + j])
+    }
+
+    /// From a column-major dense tensor → row-major host buffer.
+    pub fn from_tensor(t: &DenseTensor) -> Self {
+        let [i_dim, j_dim, k_dim] = t.dims();
+        let mut data = vec![0.0f32; i_dim * j_dim * k_dim];
+        for i in 0..i_dim {
+            for j in 0..j_dim {
+                for k in 0..k_dim {
+                    data[(i * j_dim + j) * k_dim + k] = t.get(i, j, k);
+                }
+            }
+        }
+        Self {
+            dims: vec![i_dim, j_dim, k_dim],
+            data,
+        }
+    }
+
+    /// Into a column-major dense tensor (dims must be 3-D).
+    pub fn to_tensor(&self) -> DenseTensor {
+        assert_eq!(self.dims.len(), 3, "to_tensor on {}-D tensor", self.dims.len());
+        let [i_dim, j_dim, k_dim] = [self.dims[0], self.dims[1], self.dims[2]];
+        DenseTensor::from_fn([i_dim, j_dim, k_dim], |i, j, k| {
+            self.data[(i * j_dim + j) * k_dim + k]
+        })
+    }
+
+    /// Zero-pads to `target` dims (each ≥ current) — used to feed
+    /// fixed-shape artifacts with ragged edge blocks; zero padding is exact
+    /// for the linear ops we compile.
+    pub fn pad_to(&self, target: &[usize]) -> HostTensor {
+        assert_eq!(target.len(), self.dims.len());
+        for (t, d) in target.iter().zip(&self.dims) {
+            assert!(t >= d, "pad_to: target {target:?} smaller than {:?}", self.dims);
+        }
+        if target == self.dims.as_slice() {
+            return self.clone();
+        }
+        let mut out = HostTensor::zeros(target.to_vec());
+        // Generic n-D copy via odometer.
+        let nd = self.dims.len();
+        let mut idx = vec![0usize; nd];
+        let in_strides = row_major_strides(&self.dims);
+        let out_strides = row_major_strides(target);
+        'outer: loop {
+            let src: usize = idx.iter().zip(&in_strides).map(|(i, s)| i * s).sum();
+            let dst: usize = idx.iter().zip(&out_strides).map(|(i, s)| i * s).sum();
+            out.data[dst] = self.data[src];
+            // increment odometer (last dim fastest)
+            for d in (0..nd).rev() {
+                idx[d] += 1;
+                if idx[d] < self.dims[d] {
+                    continue 'outer;
+                }
+                idx[d] = 0;
+            }
+            break;
+        }
+        out
+    }
+
+    /// Crops to `target` dims (each ≤ current) — inverse of [`pad_to`].
+    pub fn crop_to(&self, target: &[usize]) -> HostTensor {
+        assert_eq!(target.len(), self.dims.len());
+        for (t, d) in target.iter().zip(&self.dims) {
+            assert!(t <= d, "crop_to: target {target:?} larger than {:?}", self.dims);
+        }
+        if target == self.dims.as_slice() {
+            return self.clone();
+        }
+        let mut out = HostTensor::zeros(target.to_vec());
+        let nd = target.len();
+        let mut idx = vec![0usize; nd];
+        let in_strides = row_major_strides(&self.dims);
+        let out_strides = row_major_strides(target);
+        'outer: loop {
+            let src: usize = idx.iter().zip(&in_strides).map(|(i, s)| i * s).sum();
+            let dst: usize = idx.iter().zip(&out_strides).map(|(i, s)| i * s).sum();
+            out.data[dst] = self.data[src];
+            for d in (0..nd).rev() {
+                idx[d] += 1;
+                if idx[d] < target[d] {
+                    continue 'outer;
+                }
+                idx[d] = 0;
+            }
+            break;
+        }
+        out
+    }
+}
+
+fn row_major_strides(dims: &[usize]) -> Vec<usize> {
+    let mut strides = vec![1usize; dims.len()];
+    for d in (0..dims.len().saturating_sub(1)).rev() {
+        strides[d] = strides[d + 1] * dims[d + 1];
+    }
+    strides
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn matrix_round_trip() {
+        let mut rng = Xoshiro256::seed_from_u64(400);
+        let m = Matrix::random_normal(5, 7, &mut rng);
+        let h = HostTensor::from_matrix(&m);
+        assert_eq!(h.dims, vec![5, 7]);
+        // row-major check
+        assert_eq!(h.data[1], m.get(0, 1));
+        assert_eq!(h.to_matrix(), m);
+    }
+
+    #[test]
+    fn tensor_round_trip() {
+        let mut rng = Xoshiro256::seed_from_u64(401);
+        let t = DenseTensor::random_normal([3, 4, 5], &mut rng);
+        let h = HostTensor::from_tensor(&t);
+        assert_eq!(h.dims, vec![3, 4, 5]);
+        assert_eq!(h.data[1], t.get(0, 0, 1)); // last dim fastest
+        assert_eq!(h.to_tensor(), t);
+    }
+
+    #[test]
+    fn pad_then_crop_identity() {
+        let mut rng = Xoshiro256::seed_from_u64(402);
+        let t = DenseTensor::random_normal([2, 3, 4], &mut rng);
+        let h = HostTensor::from_tensor(&t);
+        let padded = h.pad_to(&[5, 5, 5]);
+        assert_eq!(padded.dims, vec![5, 5, 5]);
+        // padding area is zero
+        assert_eq!(padded.data[(4 * 5 + 4) * 5 + 4], 0.0);
+        let back = padded.crop_to(&[2, 3, 4]);
+        assert_eq!(back, h);
+    }
+
+    #[test]
+    fn pad_preserves_values() {
+        let m = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let h = HostTensor::from_matrix(&m).pad_to(&[3, 4]);
+        assert_eq!(h.data[0], 1.0);
+        assert_eq!(h.data[1], 2.0);
+        assert_eq!(h.data[4], 3.0); // row 1 starts at 4 in 3×4
+        assert_eq!(h.data[5], 4.0);
+        assert_eq!(h.data[11], 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "dims/data mismatch")]
+    fn bad_dims_rejected() {
+        let _ = HostTensor::new(vec![2, 2], vec![0.0; 3]);
+    }
+}

@@ -1,0 +1,202 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! (writer) and the rust runtime (reader).
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "artifacts": {
+//!     "compress_block_l16m16n16_d32": {
+//!       "file": "compress_block_l16m16n16_d32.hlo.txt",
+//!       "inputs":  [[32,32,32],[16,32],[16,32],[16,32]],
+//!       "outputs": [[16,16,16]],
+//!       "kind": "compress_block",
+//!       "params": {"l":16,"m":16,"n":16,"d":32}
+//!     }, …
+//!   }
+//! }
+//! ```
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One artifact's metadata.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: Vec<Vec<usize>>,
+    pub kind: String,
+    pub params: BTreeMap<String, usize>,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub dir: PathBuf,
+}
+
+fn parse_shapes(v: &Json, what: &str) -> Result<Vec<Vec<usize>>> {
+    let arr = v
+        .as_arr()
+        .with_context(|| format!("{what}: expected array of shapes"))?;
+    arr.iter()
+        .map(|shape| {
+            shape
+                .as_arr()
+                .with_context(|| format!("{what}: expected shape array"))?
+                .iter()
+                .map(|d| d.as_usize().with_context(|| format!("{what}: bad dim")))
+                .collect()
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Loads `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parses manifest text (dir used to resolve artifact files).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let root = Json::parse(text).context("manifest.json parse")?;
+        let version = root.get("version").and_then(|v| v.as_usize()).unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let arts = root
+            .get("artifacts")
+            .and_then(|a| a.as_obj())
+            .context("manifest missing 'artifacts' object")?;
+        let mut artifacts = BTreeMap::new();
+        for (name, spec) in arts {
+            let file = spec
+                .get("file")
+                .and_then(|f| f.as_str())
+                .with_context(|| format!("artifact {name}: missing file"))?;
+            let inputs = parse_shapes(
+                spec.get("inputs").with_context(|| format!("artifact {name}: inputs"))?,
+                name,
+            )?;
+            let outputs = parse_shapes(
+                spec.get("outputs")
+                    .with_context(|| format!("artifact {name}: outputs"))?,
+                name,
+            )?;
+            let kind = spec
+                .get("kind")
+                .and_then(|k| k.as_str())
+                .unwrap_or("generic")
+                .to_string();
+            let mut params = BTreeMap::new();
+            if let Some(pobj) = spec.get("params").and_then(|p| p.as_obj()) {
+                for (k, v) in pobj {
+                    if let Some(n) = v.as_usize() {
+                        params.insert(k.clone(), n);
+                    }
+                }
+            }
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: dir.join(file),
+                    inputs,
+                    outputs,
+                    kind,
+                    params,
+                },
+            );
+        }
+        Ok(Manifest { artifacts, dir })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not in manifest (have: {:?})",
+                self.artifacts.keys().collect::<Vec<_>>()))
+    }
+
+    /// Finds the first artifact of `kind` whose params match all `want`
+    /// pairs.
+    pub fn find(&self, kind: &str, want: &[(&str, usize)]) -> Option<&ArtifactSpec> {
+        self.artifacts.values().find(|a| {
+            a.kind == kind
+                && want
+                    .iter()
+                    .all(|(k, v)| a.params.get(*k).copied() == Some(*v))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": {
+        "compress_block_l4_d8": {
+          "file": "cb.hlo.txt",
+          "inputs": [[8,8,8],[4,8],[4,8],[4,8]],
+          "outputs": [[4,4,4]],
+          "kind": "compress_block",
+          "params": {"l": 4, "m": 4, "n": 4, "d": 8}
+        },
+        "als_sweep_l4_r2": {
+          "file": "als.hlo.txt",
+          "inputs": [[4,4,4],[4,2],[4,2],[4,2]],
+          "outputs": [[4,2],[4,2],[4,2]],
+          "kind": "als_sweep",
+          "params": {"l": 4, "r": 2}
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let cb = m.get("compress_block_l4_d8").unwrap();
+        assert_eq!(cb.inputs.len(), 4);
+        assert_eq!(cb.outputs[0], vec![4, 4, 4]);
+        assert_eq!(cb.file, PathBuf::from("/tmp/a/cb.hlo.txt"));
+        assert_eq!(cb.params["d"], 8);
+    }
+
+    #[test]
+    fn find_by_kind_and_params() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from(".")).unwrap();
+        assert!(m.find("als_sweep", &[("r", 2)]).is_some());
+        assert!(m.find("als_sweep", &[("r", 3)]).is_none());
+        assert!(m.find("compress_block", &[("l", 4), ("d", 8)]).is_some());
+    }
+
+    #[test]
+    fn missing_artifact_error_lists_names() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from(".")).unwrap();
+        let err = m.get("nope").unwrap_err().to_string();
+        assert!(err.contains("nope"));
+    }
+
+    #[test]
+    fn bad_version_rejected() {
+        let bad = r#"{"version": 2, "artifacts": {}}"#;
+        assert!(Manifest::parse(bad, PathBuf::from(".")).is_err());
+    }
+
+    #[test]
+    fn malformed_rejected() {
+        assert!(Manifest::parse("{", PathBuf::from(".")).is_err());
+        assert!(Manifest::parse(r#"{"version":1}"#, PathBuf::from(".")).is_err());
+    }
+}

@@ -1,0 +1,37 @@
+//! PJRT runtime — loads and executes the AOT-compiled JAX/Pallas artifacts
+//! from the rust request path (Python is never invoked here).
+//!
+//! The `xla` crate's `PjRtClient`/`PjRtLoadedExecutable` are `!Send`
+//! (`Rc`-based), so the runtime follows the device-owner pattern: each
+//! executor thread owns its *own* PJRT CPU client plus compiled copies of
+//! every artifact, and callers submit work through channels
+//! ([`executor::XlaRuntime::execute`] blocks on a per-request reply
+//! channel).  This mirrors how a CUDA-stream owner thread is used in the
+//! systems the paper builds on.
+//!
+//! * [`manifest`] — parses `artifacts/manifest.json` (written by
+//!   `python/compile/aot.py`) describing each HLO-text artifact's inputs
+//!   and outputs.
+//! * [`host`]     — `HostTensor`, the `Send` host-side value crossing the
+//!   channel boundary.
+//! * [`executor`] — the executor thread pool.
+//! * [`backends`] — [`crate::compress::BlockCompressor`] and
+//!   [`crate::coordinator::ProxyDecomposer`] implementations backed by the
+//!   artifacts (the "GPU tensor cores" arm of the benchmarks).
+
+pub mod backends;
+pub mod executor;
+pub mod host;
+pub mod manifest;
+
+pub use backends::{XlaAlsDecomposer, XlaCompressor};
+pub use executor::XlaRuntime;
+pub use host::HostTensor;
+pub use manifest::{ArtifactSpec, Manifest};
+
+/// Default artifacts directory, overridable via `EXATENSOR_ARTIFACTS`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("EXATENSOR_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}

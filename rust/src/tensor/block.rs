@@ -1,0 +1,190 @@
+//! Block partitioning of a third-order tensor (Fig. 2 of the paper).
+//!
+//! The compression stage never sees the whole tensor: it iterates over
+//! `d₁×d₂×d₃` blocks, compresses each against the matching column-slices of
+//! the compression matrices, and accumulates into the proxy tensor.  Edge
+//! blocks are allowed to be smaller (the paper assumes divisibility; we
+//! don't).
+
+/// Block-grid description for an `I×J×K` tensor with block dims `d`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockSpec3 {
+    pub dims: [usize; 3],
+    pub block: [usize; 3],
+}
+
+/// One block's coordinates: half-open ranges per mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockRange {
+    pub i0: usize,
+    pub i1: usize,
+    pub j0: usize,
+    pub j1: usize,
+    pub k0: usize,
+    pub k1: usize,
+    /// Linear block index (for worker-stream seeding / progress).
+    pub index: usize,
+}
+
+impl BlockRange {
+    pub fn shape(&self) -> [usize; 3] {
+        [self.i1 - self.i0, self.j1 - self.j0, self.k1 - self.k0]
+    }
+
+    pub fn len(&self) -> usize {
+        let s = self.shape();
+        s[0] * s[1] * s[2]
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl BlockSpec3 {
+    pub fn new(dims: [usize; 3], block: [usize; 3]) -> Self {
+        assert!(block.iter().all(|&b| b > 0), "block dims must be positive");
+        Self { dims, block }
+    }
+
+    /// Number of blocks along each mode.
+    pub fn grid(&self) -> [usize; 3] {
+        [
+            self.dims[0].div_ceil(self.block[0]),
+            self.dims[1].div_ceil(self.block[1]),
+            self.dims[2].div_ceil(self.block[2]),
+        ]
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        let g = self.grid();
+        g[0] * g[1] * g[2]
+    }
+
+    /// Block at grid coordinates `(bi, bj, bk)`.
+    pub fn block_at(&self, bi: usize, bj: usize, bk: usize) -> BlockRange {
+        let g = self.grid();
+        assert!(bi < g[0] && bj < g[1] && bk < g[2], "block index out of grid");
+        let i0 = bi * self.block[0];
+        let j0 = bj * self.block[1];
+        let k0 = bk * self.block[2];
+        BlockRange {
+            i0,
+            i1: (i0 + self.block[0]).min(self.dims[0]),
+            j0,
+            j1: (j0 + self.block[1]).min(self.dims[1]),
+            k0,
+            k1: (k0 + self.block[2]).min(self.dims[2]),
+            index: bi + bj * g[0] + bk * g[0] * g[1],
+        }
+    }
+
+    /// Iterator over all blocks, mode-1-fastest order (matches the memory
+    /// layout so streaming reads are as sequential as possible).
+    pub fn iter(&self) -> BlockIter {
+        BlockIter {
+            spec: *self,
+            next: 0,
+        }
+    }
+}
+
+/// Iterator produced by [`BlockSpec3::iter`].
+pub struct BlockIter {
+    spec: BlockSpec3,
+    next: usize,
+}
+
+impl Iterator for BlockIter {
+    type Item = BlockRange;
+
+    fn next(&mut self) -> Option<BlockRange> {
+        let g = self.spec.grid();
+        let total = g[0] * g[1] * g[2];
+        if self.next >= total {
+            return None;
+        }
+        let idx = self.next;
+        self.next += 1;
+        let bi = idx % g[0];
+        let bj = (idx / g[0]) % g[1];
+        let bk = idx / (g[0] * g[1]);
+        Some(self.spec.block_at(bi, bj, bk))
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let remaining = self.spec.num_blocks() - self.next;
+        (remaining, Some(remaining))
+    }
+}
+
+impl ExactSizeIterator for BlockIter {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn exact_division() {
+        let spec = BlockSpec3::new([100, 100, 100], [50, 50, 50]);
+        assert_eq!(spec.grid(), [2, 2, 2]);
+        assert_eq!(spec.num_blocks(), 8);
+        let b = spec.block_at(1, 0, 1);
+        assert_eq!((b.i0, b.i1), (50, 100));
+        assert_eq!((b.k0, b.k1), (50, 100));
+        assert_eq!(b.shape(), [50, 50, 50]);
+    }
+
+    #[test]
+    fn ragged_edges() {
+        let spec = BlockSpec3::new([10, 7, 5], [4, 4, 4]);
+        assert_eq!(spec.grid(), [3, 2, 2]);
+        let last = spec.block_at(2, 1, 1);
+        assert_eq!(last.shape(), [2, 3, 1]);
+    }
+
+    #[test]
+    fn iter_covers_exactly_once() {
+        prop::check("blocks-partition", 30, |g| {
+            let dims = [g.int(1, 12), g.int(1, 12), g.int(1, 12)];
+            let block = [g.int(1, 5), g.int(1, 5), g.int(1, 5)];
+            let spec = BlockSpec3::new(dims, block);
+            let mut covered = vec![0u8; dims[0] * dims[1] * dims[2]];
+            let mut count = 0;
+            for b in spec.iter() {
+                count += 1;
+                for k in b.k0..b.k1 {
+                    for j in b.j0..b.j1 {
+                        for i in b.i0..b.i1 {
+                            covered[i + j * dims[0] + k * dims[0] * dims[1]] += 1;
+                        }
+                    }
+                }
+            }
+            assert_eq!(count, spec.num_blocks());
+            assert!(covered.iter().all(|&c| c == 1), "cover counts {covered:?}");
+        });
+    }
+
+    #[test]
+    fn indices_unique_and_dense() {
+        let spec = BlockSpec3::new([9, 9, 9], [4, 4, 4]);
+        let mut seen: Vec<usize> = spec.iter().map(|b| b.index).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..spec.num_blocks()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn exact_size_iterator() {
+        let spec = BlockSpec3::new([8, 8, 8], [3, 3, 3]);
+        let it = spec.iter();
+        assert_eq!(it.len(), 27);
+    }
+
+    #[test]
+    #[should_panic(expected = "block dims must be positive")]
+    fn zero_block_rejected() {
+        let _ = BlockSpec3::new([4, 4, 4], [0, 2, 2]);
+    }
+}

@@ -1,0 +1,272 @@
+//! Dense third-order tensor, column-major.
+//!
+//! Layout: element `(i, j, k)` of an `I×J×K` tensor lives at
+//! `i + j·I + k·I·J` — "column-major" in the sense of §IV-A: mode-1 fibers
+//! are contiguous, so the mode-1 matricization `X_(1) (I × J·K)` is a free
+//! reinterpretation of the same buffer.
+
+use crate::linalg::Matrix;
+use crate::util::rng::Xoshiro256;
+
+/// Dense `I×J×K` tensor of `f32`, column-major.
+#[derive(Clone, PartialEq, Debug)]
+pub struct DenseTensor {
+    dims: [usize; 3],
+    data: Vec<f32>,
+}
+
+impl DenseTensor {
+    pub fn zeros(i: usize, j: usize, k: usize) -> Self {
+        Self {
+            dims: [i, j, k],
+            data: vec![0.0; i * j * k],
+        }
+    }
+
+    /// Takes ownership of a column-major buffer.
+    pub fn from_vec(dims: [usize; 3], data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), dims[0] * dims[1] * dims[2], "buffer size mismatch");
+        Self { dims, data }
+    }
+
+    pub fn from_fn(dims: [usize; 3], mut f: impl FnMut(usize, usize, usize) -> f32) -> Self {
+        let mut t = Self::zeros(dims[0], dims[1], dims[2]);
+        for k in 0..dims[2] {
+            for j in 0..dims[1] {
+                for i in 0..dims[0] {
+                    t.set(i, j, k, f(i, j, k));
+                }
+            }
+        }
+        t
+    }
+
+    /// i.i.d. standard-normal entries.
+    pub fn random_normal(dims: [usize; 3], rng: &mut Xoshiro256) -> Self {
+        let mut data = vec![0.0f32; dims[0] * dims[1] * dims[2]];
+        rng.fill_gaussian_f32(&mut data);
+        Self { dims, data }
+    }
+
+    /// Materializes `X = Σ_r a_r ∘ b_r ∘ c_r` from CP factors (Eq. 1).
+    pub fn from_cp_factors(a: &Matrix, b: &Matrix, c: &Matrix) -> Self {
+        let r = a.cols();
+        assert_eq!(b.cols(), r);
+        assert_eq!(c.cols(), r);
+        let (i_dim, j_dim, k_dim) = (a.rows(), b.rows(), c.rows());
+        let mut t = Self::zeros(i_dim, j_dim, k_dim);
+        for rr in 0..r {
+            let ac = a.col(rr);
+            let bc = b.col(rr);
+            let cc = c.col(rr);
+            for (k, &cv) in cc.iter().enumerate() {
+                for (j, &bv) in bc.iter().enumerate() {
+                    let s = cv * bv;
+                    if s == 0.0 {
+                        continue;
+                    }
+                    let base = (j + k * j_dim) * i_dim;
+                    for (i, &av) in ac.iter().enumerate() {
+                        t.data[base + i] += av * s;
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    #[inline]
+    pub fn dims(&self) -> [usize; 3] {
+        self.dims
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    fn offset(&self, i: usize, j: usize, k: usize) -> usize {
+        debug_assert!(i < self.dims[0] && j < self.dims[1] && k < self.dims[2]);
+        i + j * self.dims[0] + k * self.dims[0] * self.dims[1]
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize, k: usize) -> f32 {
+        self.data[self.offset(i, j, k)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, k: usize, v: f32) {
+        let o = self.offset(i, j, k);
+        self.data[o] = v;
+    }
+
+    #[inline]
+    pub fn add_assign_at(&mut self, i: usize, j: usize, k: usize, v: f32) {
+        let o = self.offset(i, j, k);
+        self.data[o] += v;
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Frontal slice `X(:,:,k)` as an `I×J` matrix (memcpy: slice is
+    /// contiguous in this layout).
+    pub fn frontal_slice(&self, k: usize) -> Matrix {
+        let (i_dim, j_dim) = (self.dims[0], self.dims[1]);
+        let start = k * i_dim * j_dim;
+        Matrix::from_vec(i_dim, j_dim, self.data[start..start + i_dim * j_dim].to_vec())
+    }
+
+    /// Extracts the sub-tensor `X(i0..i1, j0..j1, k0..k1)`.
+    pub fn subtensor(&self, i0: usize, i1: usize, j0: usize, j1: usize, k0: usize, k1: usize) -> DenseTensor {
+        assert!(i1 <= self.dims[0] && j1 <= self.dims[1] && k1 <= self.dims[2]);
+        let mut out = DenseTensor::zeros(i1 - i0, j1 - j0, k1 - k0);
+        for k in k0..k1 {
+            for j in j0..j1 {
+                // mode-1 fibers are contiguous: copy a run of length i1-i0
+                let src = self.offset(i0, j, k);
+                let dst = out.offset(0, j - j0, k - k0);
+                out.data[dst..dst + (i1 - i0)].copy_from_slice(&self.data[src..src + (i1 - i0)]);
+            }
+        }
+        out
+    }
+
+    pub fn frobenius_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Mean squared error against another tensor of the same shape.
+    pub fn mse(&self, other: &DenseTensor) -> f64 {
+        assert_eq!(self.dims, other.dims);
+        let n = self.data.len().max(1) as f64;
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| {
+                let d = (*a - *b) as f64;
+                d * d
+            })
+            .sum::<f64>()
+            / n
+    }
+
+    /// Relative Frobenius error `‖self − other‖ / ‖other‖`.
+    pub fn rel_error(&self, other: &DenseTensor) -> f64 {
+        assert_eq!(self.dims, other.dims);
+        let denom = other.frobenius_norm();
+        let diff: f64 = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| {
+                let d = (*a - *b) as f64;
+                d * d
+            })
+            .sum::<f64>();
+        if denom == 0.0 {
+            diff.sqrt()
+        } else {
+            diff.sqrt() / denom
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_mode1_fibers_contiguous() {
+        let t = DenseTensor::from_fn([2, 3, 2], |i, j, k| (i + 10 * j + 100 * k) as f32);
+        // data[i + j*2 + k*6]
+        assert_eq!(t.data()[0], 0.0); // (0,0,0)
+        assert_eq!(t.data()[1], 1.0); // (1,0,0)
+        assert_eq!(t.data()[2], 10.0); // (0,1,0)
+        assert_eq!(t.data()[6], 100.0); // (0,0,1)
+    }
+
+    #[test]
+    fn cp_factors_rank1() {
+        let a = Matrix::from_rows(&[&[1.0], &[2.0]]);
+        let b = Matrix::from_rows(&[&[3.0], &[4.0]]);
+        let c = Matrix::from_rows(&[&[5.0], &[6.0]]);
+        let t = DenseTensor::from_cp_factors(&a, &b, &c);
+        assert_eq!(t.dims(), [2, 2, 2]);
+        assert_eq!(t.get(0, 0, 0), 15.0);
+        assert_eq!(t.get(1, 1, 1), 2.0 * 4.0 * 6.0);
+    }
+
+    #[test]
+    fn cp_factors_additive_in_rank() {
+        let mut rng = Xoshiro256::seed_from_u64(50);
+        let a = Matrix::random_normal(3, 2, &mut rng);
+        let b = Matrix::random_normal(4, 2, &mut rng);
+        let c = Matrix::random_normal(5, 2, &mut rng);
+        let full = DenseTensor::from_cp_factors(&a, &b, &c);
+        let t1 = DenseTensor::from_cp_factors(
+            &a.slice_cols(0, 1),
+            &b.slice_cols(0, 1),
+            &c.slice_cols(0, 1),
+        );
+        let t2 = DenseTensor::from_cp_factors(
+            &a.slice_cols(1, 2),
+            &b.slice_cols(1, 2),
+            &c.slice_cols(1, 2),
+        );
+        for idx in 0..full.len() {
+            assert!((full.data()[idx] - (t1.data()[idx] + t2.data()[idx])).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn frontal_slice_matches_get() {
+        let t = DenseTensor::from_fn([3, 4, 2], |i, j, k| (i * 100 + j * 10 + k) as f32);
+        let s = t.frontal_slice(1);
+        for i in 0..3 {
+            for j in 0..4 {
+                assert_eq!(s.get(i, j), t.get(i, j, 1));
+            }
+        }
+    }
+
+    #[test]
+    fn subtensor_extracts() {
+        let t = DenseTensor::from_fn([4, 4, 4], |i, j, k| (i + 10 * j + 100 * k) as f32);
+        let s = t.subtensor(1, 3, 2, 4, 0, 2);
+        assert_eq!(s.dims(), [2, 2, 2]);
+        assert_eq!(s.get(0, 0, 0), t.get(1, 2, 0));
+        assert_eq!(s.get(1, 1, 1), t.get(2, 3, 1));
+    }
+
+    #[test]
+    fn mse_and_rel_error() {
+        let a = DenseTensor::from_fn([2, 2, 2], |_, _, _| 1.0);
+        let b = DenseTensor::from_fn([2, 2, 2], |_, _, _| 2.0);
+        assert!((a.mse(&b) - 1.0).abs() < 1e-12);
+        assert!((a.rel_error(&b) - 0.5).abs() < 1e-6);
+        assert_eq!(a.mse(&a), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "buffer size mismatch")]
+    fn from_vec_validates() {
+        let _ = DenseTensor::from_vec([2, 2, 2], vec![0.0; 7]);
+    }
+}

@@ -1,0 +1,170 @@
+//! Binary tensor/matrix I/O.
+//!
+//! Simple self-describing little-endian format:
+//! magic `EXT1`, u32 ndim, u64 dims…, f32 data (column-major).  Used by the
+//! CLI to load real inputs and by the apps to persist decompositions.
+
+use super::dense::DenseTensor;
+use crate::linalg::Matrix;
+use anyhow::{bail, Context, Result};
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"EXT1";
+
+fn write_header(w: &mut impl Write, dims: &[u64]) -> Result<()> {
+    w.write_all(MAGIC)?;
+    w.write_all(&(dims.len() as u32).to_le_bytes())?;
+    for &d in dims {
+        w.write_all(&d.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_header(r: &mut impl Read) -> Result<Vec<u64>> {
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic).context("reading magic")?;
+    if &magic != MAGIC {
+        bail!("not an EXT1 file (magic {magic:?})");
+    }
+    let mut nd = [0u8; 4];
+    r.read_exact(&mut nd)?;
+    let ndim = u32::from_le_bytes(nd) as usize;
+    if ndim == 0 || ndim > 8 {
+        bail!("implausible ndim {ndim}");
+    }
+    let mut dims = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        let mut b = [0u8; 8];
+        r.read_exact(&mut b)?;
+        dims.push(u64::from_le_bytes(b));
+    }
+    Ok(dims)
+}
+
+fn write_f32s(w: &mut impl Write, data: &[f32]) -> Result<()> {
+    // Bulk byte conversion; f32 is IEEE-754 LE on all supported targets.
+    let mut buf = Vec::with_capacity(data.len() * 4);
+    for &x in data {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    w.write_all(&buf)?;
+    Ok(())
+}
+
+fn read_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
+    let mut buf = vec![0u8; n * 4];
+    r.read_exact(&mut buf).context("reading f32 payload")?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Saves a dense tensor.
+pub fn save_tensor(t: &DenseTensor, path: impl AsRef<Path>) -> Result<()> {
+    let f = File::create(path.as_ref())
+        .with_context(|| format!("creating {}", path.as_ref().display()))?;
+    let mut w = BufWriter::new(f);
+    let d = t.dims();
+    write_header(&mut w, &[d[0] as u64, d[1] as u64, d[2] as u64])?;
+    write_f32s(&mut w, t.data())?;
+    Ok(())
+}
+
+/// Loads a dense tensor.
+pub fn load_tensor(path: impl AsRef<Path>) -> Result<DenseTensor> {
+    let f = File::open(path.as_ref())
+        .with_context(|| format!("opening {}", path.as_ref().display()))?;
+    let mut r = BufReader::new(f);
+    let dims = read_header(&mut r)?;
+    if dims.len() != 3 {
+        bail!("expected a 3-way tensor, found {} dims", dims.len());
+    }
+    let n = (dims[0] * dims[1] * dims[2]) as usize;
+    let data = read_f32s(&mut r, n)?;
+    Ok(DenseTensor::from_vec(
+        [dims[0] as usize, dims[1] as usize, dims[2] as usize],
+        data,
+    ))
+}
+
+/// Saves a matrix (2-way).
+pub fn save_matrix(m: &Matrix, path: impl AsRef<Path>) -> Result<()> {
+    let f = File::create(path.as_ref())?;
+    let mut w = BufWriter::new(f);
+    write_header(&mut w, &[m.rows() as u64, m.cols() as u64])?;
+    write_f32s(&mut w, m.data())?;
+    Ok(())
+}
+
+/// Loads a matrix (2-way).
+pub fn load_matrix(path: impl AsRef<Path>) -> Result<Matrix> {
+    let f = File::open(path.as_ref())?;
+    let mut r = BufReader::new(f);
+    let dims = read_header(&mut r)?;
+    if dims.len() != 2 {
+        bail!("expected a matrix, found {} dims", dims.len());
+    }
+    let n = (dims[0] * dims[1]) as usize;
+    let data = read_f32s(&mut r, n)?;
+    Ok(Matrix::from_vec(dims[0] as usize, dims[1] as usize, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("exatensor_io_test_{name}_{}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn tensor_round_trip() {
+        let mut rng = Xoshiro256::seed_from_u64(70);
+        let t = DenseTensor::random_normal([5, 6, 7], &mut rng);
+        let path = tmp("tensor");
+        save_tensor(&t, &path).unwrap();
+        let loaded = load_tensor(&path).unwrap();
+        assert_eq!(loaded, t);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn matrix_round_trip() {
+        let mut rng = Xoshiro256::seed_from_u64(71);
+        let m = Matrix::random_normal(9, 4, &mut rng);
+        let path = tmp("matrix");
+        save_matrix(&m, &path).unwrap();
+        let loaded = load_matrix(&path).unwrap();
+        assert_eq!(loaded, m);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn wrong_kind_rejected() {
+        let mut rng = Xoshiro256::seed_from_u64(72);
+        let m = Matrix::random_normal(3, 3, &mut rng);
+        let path = tmp("kind");
+        save_matrix(&m, &path).unwrap();
+        assert!(load_tensor(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn garbage_rejected() {
+        let path = tmp("garbage");
+        std::fs::write(&path, b"not a tensor").unwrap();
+        assert!(load_tensor(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_file_rejected() {
+        assert!(load_tensor("/nonexistent/exatensor.bin").is_err());
+    }
+}

@@ -1,0 +1,19 @@
+//! Third-order tensor substrate.
+//!
+//! Column-major dense tensors (paper §IV-A: mode-1 matricization is then a
+//! free reinterpretation), COO sparse tensors, block views for the Fig. 2
+//! streaming compression, stride-view unfoldings, and the implicit low-rank
+//! generator that stands in for the paper's trillion/exascale inputs (see
+//! DESIGN.md "Substitutions").
+
+pub mod block;
+pub mod dense;
+pub mod generator;
+pub mod io;
+pub mod sparse;
+pub mod unfold;
+
+pub use block::{BlockIter, BlockRange, BlockSpec3};
+pub use dense::DenseTensor;
+pub use generator::{InMemorySource, LowRankGenerator, SparseLowRankGenerator, TensorSource};
+pub use sparse::SparseTensor;

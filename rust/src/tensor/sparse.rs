@@ -1,0 +1,281 @@
+//! COO sparse third-order tensor.
+//!
+//! Used by the sparse-decomposition experiments (Fig. 3/4) and the sparse
+//! direct-ALS baseline: the baseline's MTTKRP iterates nonzeros instead of
+//! dense fibers.
+
+use super::dense::DenseTensor;
+use crate::linalg::Matrix;
+
+/// Coordinate-format sparse tensor: parallel arrays of indices and values.
+#[derive(Clone, Debug, Default)]
+pub struct SparseTensor {
+    dims: [usize; 3],
+    pub indices: Vec<[u32; 3]>,
+    pub values: Vec<f32>,
+}
+
+impl SparseTensor {
+    pub fn new(dims: [usize; 3]) -> Self {
+        Self {
+            dims,
+            indices: Vec::new(),
+            values: Vec::new(),
+        }
+    }
+
+    pub fn dims(&self) -> [usize; 3] {
+        self.dims
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn push(&mut self, i: usize, j: usize, k: usize, v: f32) {
+        debug_assert!(i < self.dims[0] && j < self.dims[1] && k < self.dims[2]);
+        if v != 0.0 {
+            self.indices.push([i as u32, j as u32, k as u32]);
+            self.values.push(v);
+        }
+    }
+
+    /// Converts a dense tensor, dropping entries with `|x| ≤ threshold`.
+    pub fn from_dense(t: &DenseTensor, threshold: f32) -> Self {
+        let [i_dim, j_dim, k_dim] = t.dims();
+        let mut s = Self::new(t.dims());
+        for k in 0..k_dim {
+            for j in 0..j_dim {
+                for i in 0..i_dim {
+                    let v = t.get(i, j, k);
+                    if v.abs() > threshold {
+                        s.push(i, j, k, v);
+                    }
+                }
+            }
+        }
+        s
+    }
+
+    /// Builds the COO directly from **sparse** CP factors without ever
+    /// densifying: iterates the nonzero index triples of each rank-1 term
+    /// and accumulates collisions. `O(Σ_r nnz(a_r)·nnz(b_r)·nnz(c_r))`.
+    pub fn from_sparse_factors(a: &Matrix, b: &Matrix, c: &Matrix) -> Self {
+        let r = a.cols();
+        assert_eq!(b.cols(), r);
+        assert_eq!(c.cols(), r);
+        let dims = [a.rows(), b.rows(), c.rows()];
+        let nz = |m: &Matrix, col: usize| -> Vec<(usize, f32)> {
+            m.col(col)
+                .iter()
+                .enumerate()
+                .filter(|(_, &v)| v != 0.0)
+                .map(|(i, &v)| (i, v))
+                .collect()
+        };
+        let mut acc: std::collections::HashMap<(u32, u32, u32), f32> =
+            std::collections::HashMap::new();
+        for rr in 0..r {
+            let an = nz(a, rr);
+            let bn = nz(b, rr);
+            let cn = nz(c, rr);
+            for &(i, av) in &an {
+                for &(j, bv) in &bn {
+                    let ab = av * bv;
+                    for &(k, cv) in &cn {
+                        *acc.entry((i as u32, j as u32, k as u32)).or_insert(0.0) += ab * cv;
+                    }
+                }
+            }
+        }
+        let mut s = Self::new(dims);
+        for ((i, j, k), v) in acc {
+            if v != 0.0 {
+                s.indices.push([i, j, k]);
+                s.values.push(v);
+            }
+        }
+        s
+    }
+
+    /// Densifies (tests / small tensors only).
+    pub fn to_dense(&self) -> DenseTensor {
+        let mut t = DenseTensor::zeros(self.dims[0], self.dims[1], self.dims[2]);
+        for (idx, &v) in self.indices.iter().zip(&self.values) {
+            t.add_assign_at(idx[0] as usize, idx[1] as usize, idx[2] as usize, v);
+        }
+        t
+    }
+
+    pub fn frobenius_norm(&self) -> f64 {
+        self.values
+            .iter()
+            .map(|&v| (v as f64) * (v as f64))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Sparse MTTKRP for `mode` ∈ {1,2,3}: the workhorse of sparse ALS.
+    ///
+    /// * mode 1: `out[i, :] += v · (B[j, :] * C[k, :])`
+    /// * mode 2: `out[j, :] += v · (A[i, :] * C[k, :])`
+    /// * mode 3: `out[k, :] += v · (A[i, :] * B[j, :])`
+    pub fn mttkrp(&self, mode: usize, f1: &Matrix, f2: &Matrix) -> Matrix {
+        let r = f1.cols();
+        assert_eq!(f2.cols(), r);
+        let out_rows = self.dims[mode - 1];
+        let mut out = Matrix::zeros(out_rows, r);
+        for (idx, &v) in self.indices.iter().zip(&self.values) {
+            let (o, r1, r2) = match mode {
+                1 => (idx[0] as usize, idx[1] as usize, idx[2] as usize),
+                2 => (idx[1] as usize, idx[0] as usize, idx[2] as usize),
+                3 => (idx[2] as usize, idx[0] as usize, idx[1] as usize),
+                _ => panic!("mode must be 1, 2 or 3"),
+            };
+            for c in 0..r {
+                out.add_assign_at(o, c, v * f1.get(r1, c) * f2.get(r2, c));
+            }
+        }
+        out
+    }
+
+    /// Squared residual `‖X − [[A,B,C]]‖²` computed sparsely.
+    /// Assumes coordinates are distinct (no COO duplicates):
+    /// `‖X‖² − 2·Σ_nnz x·x̂ + ‖[[A,B,C]]‖²` where the model norm uses the
+    /// Gram-Hadamard identity — O(nnz·R + R²) rather than O(IJK).
+    pub fn residual_sq(&self, a: &Matrix, b: &Matrix, c: &Matrix) -> f64 {
+        use crate::linalg::matmul::{matmul, Trans};
+        use crate::linalg::products::hadamard;
+        let r = a.cols();
+        let x_sq: f64 = self.values.iter().map(|&v| (v as f64) * (v as f64)).sum();
+        let mut cross = 0.0f64;
+        for (idx, &v) in self.indices.iter().zip(&self.values) {
+            let (i, j, k) = (idx[0] as usize, idx[1] as usize, idx[2] as usize);
+            let mut xhat = 0.0f64;
+            for rr in 0..r {
+                xhat += a.get(i, rr) as f64 * b.get(j, rr) as f64 * c.get(k, rr) as f64;
+            }
+            cross += v as f64 * xhat;
+        }
+        let g = hadamard(
+            &hadamard(
+                &matmul(a, Trans::Yes, a, Trans::No),
+                &matmul(b, Trans::Yes, b, Trans::No),
+            ),
+            &matmul(c, Trans::Yes, c, Trans::No),
+        );
+        let model_sq: f64 = g.data().iter().map(|&x| x as f64).sum();
+        (x_sq - 2.0 * cross + model_sq).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::products::khatri_rao;
+    use crate::linalg::{matmul, Trans};
+    use crate::tensor::unfold::{unfold_1, unfold_2, unfold_3};
+    use crate::util::rng::Xoshiro256;
+
+    fn random_sparse(dims: [usize; 3], nnz: usize, seed: u64) -> SparseTensor {
+        // Distinct coordinates: residual_sq assumes no duplicate entries
+        // (COO duplicates would need pre-summing).
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let total = dims[0] * dims[1] * dims[2];
+        let lin = rng.sample_indices(total, nnz.min(total));
+        let mut s = SparseTensor::new(dims);
+        for idx in lin {
+            let i = idx % dims[0];
+            let j = (idx / dims[0]) % dims[1];
+            let k = idx / (dims[0] * dims[1]);
+            s.push(i, j, k, rng.next_gaussian() as f32);
+        }
+        s
+    }
+
+    #[test]
+    fn dense_round_trip() {
+        let t = DenseTensor::from_fn([3, 3, 3], |i, j, k| {
+            if (i + j + k) % 2 == 0 {
+                (i + j + k) as f32
+            } else {
+                0.0
+            }
+        });
+        let s = SparseTensor::from_dense(&t, 0.0);
+        assert!(s.nnz() < 27);
+        assert_eq!(s.to_dense(), t);
+    }
+
+    #[test]
+    fn mttkrp_matches_dense_formula() {
+        // sparse mttkrp(mode) == X_(mode) · KR
+        let mut rng = Xoshiro256::seed_from_u64(60);
+        let s = random_sparse([6, 5, 4], 25, 61);
+        let dense = s.to_dense();
+        let a = Matrix::random_normal(6, 3, &mut rng);
+        let b = Matrix::random_normal(5, 3, &mut rng);
+        let c = Matrix::random_normal(4, 3, &mut rng);
+
+        let m1 = s.mttkrp(1, &b, &c);
+        let ref1 = matmul(&unfold_1(&dense), Trans::No, &khatri_rao(&c, &b), Trans::No);
+        assert!(m1.rel_error(&ref1) < 1e-4, "mode1 {}", m1.rel_error(&ref1));
+
+        let m2 = s.mttkrp(2, &a, &c);
+        let ref2 = matmul(&unfold_2(&dense), Trans::No, &khatri_rao(&c, &a), Trans::No);
+        assert!(m2.rel_error(&ref2) < 1e-4, "mode2 {}", m2.rel_error(&ref2));
+
+        let m3 = s.mttkrp(3, &a, &b);
+        let ref3 = matmul(&unfold_3(&dense), Trans::No, &khatri_rao(&b, &a), Trans::No);
+        assert!(m3.rel_error(&ref3) < 1e-4, "mode3 {}", m3.rel_error(&ref3));
+    }
+
+    #[test]
+    fn residual_matches_dense() {
+        let mut rng = Xoshiro256::seed_from_u64(62);
+        let s = random_sparse([5, 5, 5], 20, 63);
+        let a = Matrix::random_normal(5, 2, &mut rng);
+        let b = Matrix::random_normal(5, 2, &mut rng);
+        let c = Matrix::random_normal(5, 2, &mut rng);
+        let model = DenseTensor::from_cp_factors(&a, &b, &c);
+        let dense = s.to_dense();
+        let expected: f64 = dense
+            .data()
+            .iter()
+            .zip(model.data())
+            .map(|(x, m)| {
+                let d = (*x - *m) as f64;
+                d * d
+            })
+            .sum();
+        let got = s.residual_sq(&a, &b, &c);
+        assert!(
+            (got - expected).abs() / expected.max(1e-12) < 1e-3,
+            "got {got} expected {expected}"
+        );
+    }
+
+    #[test]
+    fn from_sparse_factors_matches_dense() {
+        let gen = crate::tensor::SparseLowRankGenerator::new(15, 15, 15, 2, 3, 70);
+        let (a, b, c) = gen.factors();
+        let direct = SparseTensor::from_sparse_factors(a, b, c);
+        let dense = DenseTensor::from_cp_factors(a, b, c);
+        assert!(direct.to_dense().rel_error(&dense) < 1e-5);
+        assert!(direct.nnz() <= 2 * 27);
+    }
+
+    #[test]
+    fn zero_values_dropped() {
+        let mut s = SparseTensor::new([2, 2, 2]);
+        s.push(0, 0, 0, 0.0);
+        assert_eq!(s.nnz(), 0);
+    }
+
+    #[test]
+    fn norm_matches_dense() {
+        let s = random_sparse([4, 4, 4], 10, 64);
+        let d = s.to_dense();
+        assert!((s.frobenius_norm() - d.frobenius_norm()).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,188 @@
+//! Mode-n matricizations (unfoldings) of a dense third-order tensor.
+//!
+//! Convention (matches Kolda & Bader and the Khatri-Rao convention in
+//! `linalg::products`): for `X (I×J×K)`,
+//!
+//! * `X_(1)` is `I × (J·K)` with column `j + k·J`,
+//! * `X_(2)` is `J × (I·K)` with column `i + k·I`,
+//! * `X_(3)` is `K × (I·J)` with column `i + j·I`,
+//!
+//! so that `X_(1) = A (C ⊙ B)ᵀ`, `X_(2) = B (C ⊙ A)ᵀ`, `X_(3) = C (B ⊙ A)ᵀ`
+//! with `khatri_rao(slow, fast)` pairing row `fast + slow·dim_fast`.
+//!
+//! §IV-A of the paper: with column-major storage, `unfold_1` is a pure
+//! buffer reinterpretation (zero copy); modes 2 and 3 are strided gathers —
+//! `refold` inverts each.
+
+use super::dense::DenseTensor;
+use crate::linalg::Matrix;
+
+/// Mode-1 unfolding `X_(1) (I × J·K)`. Zero-copy reinterpretation.
+pub fn unfold_1(t: &DenseTensor) -> Matrix {
+    let [i, j, k] = t.dims();
+    Matrix::from_vec(i, j * k, t.data().to_vec())
+}
+
+/// Mode-2 unfolding `X_(2) (J × I·K)`, column `i + k·I`.
+pub fn unfold_2(t: &DenseTensor) -> Matrix {
+    let [i_dim, j_dim, k_dim] = t.dims();
+    let mut m = Matrix::zeros(j_dim, i_dim * k_dim);
+    for k in 0..k_dim {
+        for i in 0..i_dim {
+            let col = i + k * i_dim;
+            for j in 0..j_dim {
+                m.set(j, col, t.get(i, j, k));
+            }
+        }
+    }
+    m
+}
+
+/// Mode-3 unfolding `X_(3) (K × I·J)`, column `i + j·I`.
+pub fn unfold_3(t: &DenseTensor) -> Matrix {
+    let [i_dim, j_dim, k_dim] = t.dims();
+    let mut m = Matrix::zeros(k_dim, i_dim * j_dim);
+    // X_(3)'s row k is exactly the frontal slice k flattened column-major.
+    let slice_len = i_dim * j_dim;
+    for k in 0..k_dim {
+        let src = &t.data()[k * slice_len..(k + 1) * slice_len];
+        for (col, &v) in src.iter().enumerate() {
+            m.set(k, col, v);
+        }
+    }
+    m
+}
+
+/// Inverse of [`unfold_1`].
+pub fn refold_1(m: &Matrix, dims: [usize; 3]) -> DenseTensor {
+    assert_eq!(m.rows(), dims[0]);
+    assert_eq!(m.cols(), dims[1] * dims[2]);
+    DenseTensor::from_vec(dims, m.data().to_vec())
+}
+
+/// Inverse of [`unfold_2`].
+pub fn refold_2(m: &Matrix, dims: [usize; 3]) -> DenseTensor {
+    let [i_dim, j_dim, k_dim] = dims;
+    assert_eq!(m.rows(), j_dim);
+    assert_eq!(m.cols(), i_dim * k_dim);
+    let mut t = DenseTensor::zeros(i_dim, j_dim, k_dim);
+    for k in 0..k_dim {
+        for i in 0..i_dim {
+            let col = i + k * i_dim;
+            for j in 0..j_dim {
+                t.set(i, j, k, m.get(j, col));
+            }
+        }
+    }
+    t
+}
+
+/// Inverse of [`unfold_3`].
+pub fn refold_3(m: &Matrix, dims: [usize; 3]) -> DenseTensor {
+    let [i_dim, j_dim, k_dim] = dims;
+    assert_eq!(m.rows(), k_dim);
+    assert_eq!(m.cols(), i_dim * j_dim);
+    let mut t = DenseTensor::zeros(i_dim, j_dim, k_dim);
+    for j in 0..j_dim {
+        for i in 0..i_dim {
+            let col = i + j * i_dim;
+            for k in 0..k_dim {
+                t.set(i, j, k, m.get(k, col));
+            }
+        }
+    }
+    t
+}
+
+/// Unfolds along `mode` ∈ {1, 2, 3}.
+pub fn unfold(t: &DenseTensor, mode: usize) -> Matrix {
+    match mode {
+        1 => unfold_1(t),
+        2 => unfold_2(t),
+        3 => unfold_3(t),
+        _ => panic!("mode must be 1, 2 or 3; got {mode}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::products::khatri_rao;
+    use crate::linalg::{matmul, Trans};
+    use crate::util::prop;
+    use crate::util::rng::Xoshiro256;
+
+    fn test_tensor() -> DenseTensor {
+        DenseTensor::from_fn([2, 3, 2], |i, j, k| (i + 10 * j + 100 * k) as f32)
+    }
+
+    #[test]
+    fn unfold1_known() {
+        let t = test_tensor();
+        let m = unfold_1(&t);
+        assert_eq!((m.rows(), m.cols()), (2, 6));
+        // column j + k*J: col 0 = X(:,0,0), col 4 = X(:,1,1)
+        assert_eq!(m.col(0), &[0.0, 1.0]);
+        assert_eq!(m.col(4), &[110.0, 111.0]);
+    }
+
+    #[test]
+    fn unfold2_known() {
+        let t = test_tensor();
+        let m = unfold_2(&t);
+        assert_eq!((m.rows(), m.cols()), (3, 4));
+        // col i + k*I: col 1 = X(1,:,0) = [1, 11, 21]
+        assert_eq!(m.col(1), &[1.0, 11.0, 21.0]);
+        // col 2 = X(0,:,1) = [100, 110, 120]
+        assert_eq!(m.col(2), &[100.0, 110.0, 120.0]);
+    }
+
+    #[test]
+    fn unfold3_known() {
+        let t = test_tensor();
+        let m = unfold_3(&t);
+        assert_eq!((m.rows(), m.cols()), (2, 6));
+        // col i + j*I: col 3 = X(1,1,:) = [11, 111]
+        assert_eq!(m.col(3), &[11.0, 111.0]);
+    }
+
+    #[test]
+    fn refold_inverts_unfold() {
+        prop::check("unfold-refold", 20, |g| {
+            let dims = [g.int(1, 5), g.int(1, 5), g.int(1, 5)];
+            let mut rng = Xoshiro256::seed_from_u64(g.int(0, 1 << 30) as u64);
+            let t = DenseTensor::random_normal(dims, &mut rng);
+            assert_eq!(refold_1(&unfold_1(&t), dims), t);
+            assert_eq!(refold_2(&unfold_2(&t), dims), t);
+            assert_eq!(refold_3(&unfold_3(&t), dims), t);
+        });
+    }
+
+    #[test]
+    fn unfoldings_satisfy_cp_identities() {
+        // X from CP factors must satisfy X_(n) = F_n (KR)ᵀ for each mode.
+        let mut rng = Xoshiro256::seed_from_u64(51);
+        let a = Matrix::random_normal(3, 2, &mut rng);
+        let b = Matrix::random_normal(4, 2, &mut rng);
+        let c = Matrix::random_normal(5, 2, &mut rng);
+        let t = DenseTensor::from_cp_factors(&a, &b, &c);
+
+        let x1 = unfold_1(&t);
+        let rhs1 = matmul(&a, Trans::No, &khatri_rao(&c, &b), Trans::Yes);
+        assert!(x1.rel_error(&rhs1) < 1e-5, "mode1 err={}", x1.rel_error(&rhs1));
+
+        let x2 = unfold_2(&t);
+        let rhs2 = matmul(&b, Trans::No, &khatri_rao(&c, &a), Trans::Yes);
+        assert!(x2.rel_error(&rhs2) < 1e-5, "mode2 err={}", x2.rel_error(&rhs2));
+
+        let x3 = unfold_3(&t);
+        let rhs3 = matmul(&c, Trans::No, &khatri_rao(&b, &a), Trans::Yes);
+        assert!(x3.rel_error(&rhs3) < 1e-5, "mode3 err={}", x3.rel_error(&rhs3));
+    }
+
+    #[test]
+    #[should_panic(expected = "mode must be")]
+    fn bad_mode_panics() {
+        let _ = unfold(&test_tensor(), 4);
+    }
+}

@@ -1,0 +1,223 @@
+//! Declarative command-line parsing (offline substitute for `clap`).
+//!
+//! Supports subcommands, `--flag value`, `--flag=value`, boolean switches,
+//! typed accessors with defaults, and auto-generated `--help` text.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// One declared option.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_switch: bool,
+}
+
+/// A declarative command description: name, help text, and options.
+#[derive(Clone, Debug, Default)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self {
+            name,
+            about,
+            opts: Vec::new(),
+        }
+    }
+
+    /// Declares `--name <value>` with an optional default.
+    pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default,
+            is_switch: false,
+        });
+        self
+    }
+
+    /// Declares a boolean `--name` switch.
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: None,
+            is_switch: true,
+        });
+        self
+    }
+
+    fn find(&self, name: &str) -> Option<&OptSpec> {
+        self.opts.iter().find(|o| o.name == name)
+    }
+
+    /// Renders usage/help text.
+    pub fn usage(&self, prog: &str) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}\n", self.name, self.about);
+        let _ = writeln!(s, "USAGE: {prog} {} [OPTIONS]\n\nOPTIONS:", self.name);
+        for o in &self.opts {
+            let lhs = if o.is_switch {
+                format!("--{}", o.name)
+            } else {
+                format!("--{} <v>", o.name)
+            };
+            let dft = o
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            let _ = writeln!(s, "  {lhs:<24} {}{dft}", o.help);
+        }
+        s
+    }
+
+    /// Parses `args` (not including program/subcommand names).
+    pub fn parse(&self, args: &[String]) -> Result<Matches, CliError> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut positional = Vec::new();
+        let mut it = args.iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(rest) = arg.strip_prefix("--") {
+                let (name, inline) = match rest.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (rest, None),
+                };
+                let spec = self
+                    .find(name)
+                    .ok_or_else(|| CliError(format!("unknown option --{name}")))?;
+                let val = if spec.is_switch {
+                    if inline.is_some() {
+                        return Err(CliError(format!("--{name} takes no value")));
+                    }
+                    "true".to_string()
+                } else if let Some(v) = inline {
+                    v
+                } else {
+                    it.next()
+                        .cloned()
+                        .ok_or_else(|| CliError(format!("--{name} needs a value")))?
+                };
+                values.insert(name.to_string(), val);
+            } else {
+                positional.push(arg.clone());
+            }
+        }
+        // Fill defaults.
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                values.entry(o.name.to_string()).or_insert_with(|| d.to_string());
+            }
+        }
+        Ok(Matches { values, positional })
+    }
+}
+
+/// Parse failure (message already formatted for display).
+#[derive(Debug, thiserror::Error)]
+#[error("{0}")]
+pub struct CliError(pub String);
+
+/// Parsed option values with typed accessors.
+#[derive(Debug, Default)]
+pub struct Matches {
+    values: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Matches {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, CliError> {
+        self.req(name)?
+            .parse()
+            .map_err(|_| CliError(format!("--{name}: expected an integer")))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64, CliError> {
+        self.req(name)?
+            .parse()
+            .map_err(|_| CliError(format!("--{name}: expected an integer")))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, CliError> {
+        self.req(name)?
+            .parse()
+            .map_err(|_| CliError(format!("--{name}: expected a number")))
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        self.get(name) == Some("true")
+    }
+
+    pub fn req(&self, name: &str) -> Result<&str, CliError> {
+        self.get(name)
+            .ok_or_else(|| CliError(format!("missing required option --{name}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("decompose", "run the pipeline")
+            .opt("size", "tensor side", Some("400"))
+            .opt("rank", "CP rank", Some("5"))
+            .opt("out", "output path", None)
+            .switch("verbose", "log more")
+    }
+
+    fn args(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let m = cmd().parse(&args(&[])).unwrap();
+        assert_eq!(m.get_usize("size").unwrap(), 400);
+        assert_eq!(m.get("out"), None);
+        assert!(!m.get_bool("verbose"));
+    }
+
+    #[test]
+    fn explicit_values_win() {
+        let m = cmd()
+            .parse(&args(&["--size", "100", "--rank=8", "--verbose"]))
+            .unwrap();
+        assert_eq!(m.get_usize("size").unwrap(), 100);
+        assert_eq!(m.get_usize("rank").unwrap(), 8);
+        assert!(m.get_bool("verbose"));
+    }
+
+    #[test]
+    fn positional_collected() {
+        let m = cmd().parse(&args(&["file.bin", "--size", "10"])).unwrap();
+        assert_eq!(m.positional, vec!["file.bin"]);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(cmd().parse(&args(&["--bogus", "1"])).is_err());
+        assert!(cmd().parse(&args(&["--size"])).is_err());
+        assert!(cmd().parse(&args(&["--verbose=yes"])).is_err());
+        let m = cmd().parse(&args(&["--size", "abc"])).unwrap();
+        assert!(m.get_usize("size").is_err());
+    }
+
+    #[test]
+    fn usage_mentions_all_opts() {
+        let u = cmd().usage("exatensor");
+        for name in ["--size", "--rank", "--out", "--verbose"] {
+            assert!(u.contains(name), "missing {name} in usage");
+        }
+    }
+}

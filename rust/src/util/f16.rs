@@ -1,0 +1,232 @@
+//! Software half-precision conversion (offline substitute for the `half`
+//! crate).
+//!
+//! Two 16-bit formats appear in the paper's mixed-precision scheme (§IV-B):
+//! IEEE binary16 (`f16`, what GPU tensor cores multiply) and bfloat16
+//! (`bf16`, what the TPU MXU multiplies — see DESIGN.md
+//! §Hardware-Adaptation).  Both conversions round to nearest-even, matching
+//! hardware behaviour, so the residual-splitting error analysis carries
+//! over bit-for-bit.
+
+/// IEEE 754 binary16 bit pattern.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub struct F16(pub u16);
+
+/// bfloat16 bit pattern (truncated-exponent f32).
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub struct Bf16(pub u16);
+
+impl F16 {
+    /// Converts `f32 → f16` with round-to-nearest-even, handling subnormals,
+    /// overflow to infinity, and NaN payload preservation (quiet bit set).
+    pub fn from_f32(x: f32) -> Self {
+        let bits = x.to_bits();
+        let sign = ((bits >> 16) & 0x8000) as u16;
+        let exp = ((bits >> 23) & 0xFF) as i32;
+        let mant = bits & 0x007F_FFFF;
+
+        if exp == 0xFF {
+            // Inf / NaN
+            let payload = if mant != 0 { 0x0200 | ((mant >> 13) as u16 & 0x3FF) } else { 0 };
+            return F16(sign | 0x7C00 | payload);
+        }
+
+        // Unbiased exponent; f16 bias is 15, f32 bias is 127.
+        let unbiased = exp - 127;
+        if unbiased > 15 {
+            return F16(sign | 0x7C00); // overflow → ±inf
+        }
+        if unbiased >= -14 {
+            // Normal range: round 23-bit mantissa to 10 bits, RNE.
+            let e16 = (unbiased + 15) as u32;
+            let mut m = mant >> 13;
+            let round_bits = mant & 0x1FFF;
+            if round_bits > 0x1000 || (round_bits == 0x1000 && (m & 1) == 1) {
+                m += 1;
+            }
+            // Mantissa carry may bump the exponent (still fine: 0x7C00 = inf).
+            let out = (e16 << 10).wrapping_add(m) as u16;
+            return F16(sign | out);
+        }
+        if unbiased >= -25 {
+            // Subnormal: shift in the implicit leading 1.
+            let full = mant | 0x0080_0000;
+            let shift = (-14 - unbiased + 13) as u32;
+            let m = full >> shift;
+            let rem = full & ((1u32 << shift) - 1);
+            let half = 1u32 << (shift - 1);
+            let mut m = m;
+            if rem > half || (rem == half && (m & 1) == 1) {
+                m += 1;
+            }
+            return F16(sign | m as u16);
+        }
+        F16(sign) // underflow → ±0
+    }
+
+    /// Converts `f16 → f32` exactly (every f16 is representable in f32).
+    pub fn to_f32(self) -> f32 {
+        let sign = ((self.0 & 0x8000) as u32) << 16;
+        let exp = ((self.0 >> 10) & 0x1F) as u32;
+        let mant = (self.0 & 0x3FF) as u32;
+        let bits = match (exp, mant) {
+            (0, 0) => sign,
+            (0, m) => {
+                // Subnormal: value = m · 2⁻²⁴. Normalize: with p the index
+                // of m's leading 1 (0-based), value = 2^(p−24)·(m/2^p), so
+                // the f32 biased exponent is p − 24 + 127 = p + 103.
+                let p = 31 - m.leading_zeros(); // 0..=9
+                let exp32 = p + 103;
+                let m32 = (m << (10 - p)) & 0x3FF; // drop the implicit 1
+                sign | (exp32 << 23) | (m32 << 13)
+            }
+            (0x1F, 0) => sign | 0x7F80_0000,
+            (0x1F, m) => sign | 0x7F80_0000 | (m << 13),
+            (e, m) => sign | ((e + 127 - 15) << 23) | (m << 13),
+        };
+        f32::from_bits(bits)
+    }
+}
+
+impl Bf16 {
+    /// Converts `f32 → bf16` with round-to-nearest-even (truncate the low 16
+    /// mantissa bits with rounding), NaN made quiet.
+    pub fn from_f32(x: f32) -> Self {
+        let bits = x.to_bits();
+        if x.is_nan() {
+            return Bf16(((bits >> 16) as u16) | 0x0040);
+        }
+        let round_bit = 0x0000_8000u32;
+        let lsb = (bits >> 16) & 1;
+        let rounded = bits.wrapping_add(0x0000_7FFF + lsb) & !(round_bit - 1);
+        Bf16((rounded >> 16) as u16)
+    }
+
+    /// Converts `bf16 → f32` exactly.
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        f32::from_bits((self.0 as u32) << 16)
+    }
+}
+
+/// Splits `x` into `(hi, lo)` where `hi = f16(x)` and `lo = x - hi` — the
+/// first-order residual decomposition of Eq. (5) in the paper.
+#[inline]
+pub fn split_f16(x: f32) -> (f32, f32) {
+    let hi = F16::from_f32(x).to_f32();
+    (hi, if hi.is_finite() { x - hi } else { 0.0 })
+}
+
+/// bfloat16 analogue of [`split_f16`] (MXU path, DESIGN.md
+/// §Hardware-Adaptation).
+#[inline]
+pub fn split_bf16(x: f32) -> (f32, f32) {
+    let hi = Bf16::from_f32(x).to_f32();
+    (hi, if hi.is_finite() { x - hi } else { 0.0 })
+}
+
+/// Rounds every element through f16 (simulates a lossy FP16 store).
+pub fn quantize_f16_slice(xs: &[f32]) -> Vec<f32> {
+    xs.iter().map(|&x| F16::from_f32(x).to_f32()).collect()
+}
+
+/// Rounds every element through bf16.
+pub fn quantize_bf16_slice(xs: &[f32]) -> Vec<f32> {
+    xs.iter().map(|&x| Bf16::from_f32(x).to_f32()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f16_known_values() {
+        assert_eq!(F16::from_f32(0.0).0, 0x0000);
+        assert_eq!(F16::from_f32(-0.0).0, 0x8000);
+        assert_eq!(F16::from_f32(1.0).0, 0x3C00);
+        assert_eq!(F16::from_f32(-2.0).0, 0xC000);
+        assert_eq!(F16::from_f32(65504.0).0, 0x7BFF); // f16::MAX
+        assert_eq!(F16::from_f32(1e6).0, 0x7C00); // overflow → inf
+        assert_eq!(F16::from_f32(f32::INFINITY).0, 0x7C00);
+        assert!(F16::from_f32(f32::NAN).to_f32().is_nan());
+    }
+
+    #[test]
+    fn f16_round_trip_exact_for_representables() {
+        // All 2^16 patterns: to_f32 then from_f32 must be the identity for
+        // non-NaN values.
+        for bits in 0..=u16::MAX {
+            let h = F16(bits);
+            let f = h.to_f32();
+            if f.is_nan() {
+                assert!(F16::from_f32(f).to_f32().is_nan());
+            } else {
+                assert_eq!(F16::from_f32(f), h, "bits={bits:#06x} f={f}");
+            }
+        }
+    }
+
+    #[test]
+    fn f16_subnormals() {
+        let smallest = F16(0x0001).to_f32(); // 2^-24
+        assert!((smallest - 5.960_464_5e-8).abs() < 1e-12);
+        assert_eq!(F16::from_f32(smallest), F16(0x0001));
+        // Below half the smallest subnormal → 0.
+        assert_eq!(F16::from_f32(1e-9).0, 0x0000);
+    }
+
+    #[test]
+    fn f16_round_to_nearest_even() {
+        // 1 + 2^-11 is exactly between 1.0 and 1+2^-10 → rounds to even (1.0).
+        let x = 1.0 + (2f32).powi(-11);
+        assert_eq!(F16::from_f32(x).0, 0x3C00);
+        // 1 + 3*2^-11 is between 1+2^-10 and 1+2^-9 → ties to even (1+2^-9).
+        let y = 1.0 + 3.0 * (2f32).powi(-11);
+        assert_eq!(F16::from_f32(y).0, 0x3C02);
+    }
+
+    #[test]
+    fn bf16_known_values() {
+        assert_eq!(Bf16::from_f32(1.0).0, 0x3F80);
+        assert_eq!(Bf16::from_f32(-1.0).0, 0xBF80);
+        assert_eq!(Bf16::from_f32(f32::INFINITY).0, 0x7F80);
+        assert!(Bf16::from_f32(f32::NAN).to_f32().is_nan());
+        // 3.14159 → nearest bf16
+        let pi = Bf16::from_f32(std::f32::consts::PI).to_f32();
+        assert!((pi - std::f32::consts::PI).abs() < 0.02);
+    }
+
+    #[test]
+    fn bf16_round_trip_identity() {
+        for bits in 0..=u16::MAX {
+            let b = Bf16(bits);
+            let f = b.to_f32();
+            if f.is_nan() {
+                assert!(Bf16::from_f32(f).to_f32().is_nan());
+            } else {
+                assert_eq!(Bf16::from_f32(f), b, "bits={bits:#06x}");
+            }
+        }
+    }
+
+    #[test]
+    fn split_reconstructs_exactly() {
+        let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(11);
+        for _ in 0..10_000 {
+            let x = (rng.next_gaussian() * 10.0) as f32;
+            let (hi, lo) = split_f16(x);
+            // Sterbenz: hi within 2x of x ⇒ x - hi exact ⇒ hi + lo == x.
+            assert_eq!(hi + lo, x, "x={x}");
+            let (bhi, blo) = split_bf16(x);
+            assert_eq!(bhi + blo, x, "x={x}");
+        }
+    }
+
+    #[test]
+    fn split_residual_is_small() {
+        let (hi, lo) = split_f16(1.2345678);
+        assert!(lo.abs() <= hi.abs() * (2f32).powi(-10));
+        let (bhi, blo) = split_bf16(1.2345678);
+        assert!(blo.abs() <= bhi.abs() * (2f32).powi(-7));
+    }
+}

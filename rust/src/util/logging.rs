@@ -1,0 +1,57 @@
+//! Tiny `log` facade backend: timestamped stderr logger with a level filter
+//! from `EXATENSOR_LOG` (error|warn|info|debug|trace; default info).
+
+use log::{Level, LevelFilter, Metadata, Record};
+use std::time::Instant;
+
+static START: once_cell::sync::Lazy<Instant> = once_cell::sync::Lazy::new(Instant::now);
+
+struct StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = START.elapsed().as_secs_f64();
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{t:9.3}s {lvl} {}] {}", record.target(), record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: StderrLogger = StderrLogger;
+
+/// Installs the logger (idempotent) and applies `EXATENSOR_LOG`.
+pub fn init() {
+    let level = match std::env::var("EXATENSOR_LOG").as_deref() {
+        Ok("error") => LevelFilter::Error,
+        Ok("warn") => LevelFilter::Warn,
+        Ok("debug") => LevelFilter::Debug,
+        Ok("trace") => LevelFilter::Trace,
+        _ => LevelFilter::Info,
+    };
+    let _ = log::set_logger(&LOGGER);
+    log::set_max_level(level);
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logging smoke test");
+    }
+}

@@ -1,0 +1,25 @@
+//! Hand-rolled utility substrates.
+//!
+//! This build environment is offline: only the `xla` crate's dependency
+//! closure is present in the registry cache, so the usual ecosystem crates
+//! (clap, serde, rand, rayon, criterion, proptest, half) are unavailable.
+//! Each submodule here replaces one of them with a small, tested
+//! implementation — see DESIGN.md "Offline-crate substitutions".
+
+pub mod cli;
+pub mod f16;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+
+/// Returns the number of worker threads to use by default: the parallelism
+/// reported by the OS, capped so test machines don't oversubscribe.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+}

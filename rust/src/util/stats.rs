@@ -1,0 +1,212 @@
+//! Timing and summary statistics used by the bench harness and the
+//! coordinator's per-stage metrics.
+
+use std::time::{Duration, Instant};
+
+/// Online mean/min/max/variance accumulator (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Sample variance (n-1 denominator).
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+/// Collects raw samples so percentiles can be computed (bench harness).
+#[derive(Clone, Debug, Default)]
+pub struct Samples {
+    xs: Vec<f64>,
+}
+
+impl Samples {
+    pub fn push(&mut self, x: f64) {
+        self.xs.push(x);
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            return 0.0;
+        }
+        self.xs.iter().sum::<f64>() / self.xs.len() as f64
+    }
+
+    /// Percentile by linear interpolation; `q` in `[0, 1]`.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.xs.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.xs.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pos = q.clamp(0.0, 1.0) * (s.len() - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        if lo == hi {
+            s[lo]
+        } else {
+            let frac = pos - lo as f64;
+            s[lo] * (1.0 - frac) + s[hi] * frac
+        }
+    }
+
+    pub fn median(&self) -> f64 {
+        self.percentile(0.5)
+    }
+}
+
+/// RAII-ish stage timer: `Timer::start()` … `elapsed_ms()`.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Formats a duration in engineering units (ns/µs/ms/s).
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{:.2} s", secs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_moments() {
+        let mut s = Summary::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.push(x);
+        }
+        assert_eq!(s.count(), 8);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.variance() - 32.0 / 7.0).abs() < 1e-12);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+    }
+
+    #[test]
+    fn summary_empty_safe() {
+        let s = Summary::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.variance(), 0.0);
+        assert_eq!(s.min(), 0.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let mut s = Samples::default();
+        for i in 1..=100 {
+            s.push(i as f64);
+        }
+        assert!((s.median() - 50.5).abs() < 1e-9);
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-9);
+        assert!((s.percentile(1.0) - 100.0).abs() < 1e-9);
+        assert!((s.percentile(0.95) - 95.05).abs() < 0.1);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert!(fmt_duration(3.5e-9).contains("ns"));
+        assert!(fmt_duration(3.5e-6).contains("µs"));
+        assert!(fmt_duration(3.5e-3).contains("ms"));
+        assert!(fmt_duration(3.5).contains("s"));
+    }
+
+    #[test]
+    fn timer_measures_something() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(t.elapsed_ms() >= 4.0);
+    }
+}

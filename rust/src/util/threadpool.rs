@@ -1,0 +1,212 @@
+//! Scoped worker pool (offline substitute for `rayon`).
+//!
+//! The coordinator uses this for the two parallel stages of Fig. 2:
+//! block-level compression (independent tensor blocks) and replica-level
+//! decomposition (independent proxy tensors).  Jobs are closures pushed to a
+//! shared queue; `scope` blocks until all submitted jobs complete and
+//! propagates the first panic.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+
+type Job<'scope> = Box<dyn FnOnce() + Send + 'scope>;
+
+/// A pool of `n` OS threads with a shared FIFO job queue.
+pub struct ThreadPool {
+    size: usize,
+}
+
+impl ThreadPool {
+    /// A pool that will run scopes on `size.max(1)` threads.
+    pub fn new(size: usize) -> Self {
+        Self { size: size.max(1) }
+    }
+
+    /// Pool sized by [`crate::util::default_threads`].
+    pub fn default_sized() -> Self {
+        Self::new(crate::util::default_threads())
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Runs `f` with a [`Scope`] that accepts jobs borrowing from the caller's
+    /// stack; returns once every submitted job has finished.  Panics if any
+    /// job panicked.
+    pub fn scope<'env, F, R>(&self, f: F) -> R
+    where
+        F: FnOnce(&Scope<'env>) -> R,
+    {
+        let (tx, rx) = mpsc::channel::<Job<'env>>();
+        let rx = Arc::new(Mutex::new(rx));
+        let panics = Arc::new(AtomicUsize::new(0));
+        let scope = Scope {
+            tx: Some(tx),
+            pending: Arc::new(AtomicUsize::new(0)),
+        };
+
+        let result = thread::scope(|s| {
+            for _ in 0..self.size {
+                let rx = Arc::clone(&rx);
+                let panics = Arc::clone(&panics);
+                let pending = Arc::clone(&scope.pending);
+                s.spawn(move || loop {
+                    let job = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    match job {
+                        Ok(job) => {
+                            if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                                panics.fetch_add(1, Ordering::SeqCst);
+                            }
+                            pending.fetch_sub(1, Ordering::SeqCst);
+                        }
+                        Err(_) => break, // channel closed: scope is done
+                    }
+                });
+            }
+            let r = f(&scope);
+            // Dropping the sender closes the queue; workers drain it and exit.
+            drop(scope);
+            r
+        });
+
+        let n = panics.load(Ordering::SeqCst);
+        if n > 0 {
+            panic!("{n} pool job(s) panicked");
+        }
+        result
+    }
+
+    /// Parallel map over an index range: runs `f(i)` for `i in 0..n` and
+    /// collects results in order.
+    pub fn map_indexed<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        {
+            let slots: Vec<(usize, &mut Option<T>)> = out.iter_mut().enumerate().collect();
+            self.scope(|scope| {
+                for (i, slot) in slots {
+                    let f = &f;
+                    scope.spawn(move || {
+                        *slot = Some(f(i));
+                    });
+                }
+            });
+        }
+        out.into_iter().map(|o| o.expect("job did not run")).collect()
+    }
+}
+
+/// Handle for submitting jobs inside [`ThreadPool::scope`].
+pub struct Scope<'env> {
+    tx: Option<mpsc::Sender<Job<'env>>>,
+    pending: Arc<AtomicUsize>,
+}
+
+impl<'env> Scope<'env> {
+    /// Submits a job; it may run on any pool thread.
+    pub fn spawn<F>(&self, f: F)
+    where
+        F: FnOnce() + Send + 'env,
+    {
+        self.pending.fetch_add(1, Ordering::SeqCst);
+        self.tx
+            .as_ref()
+            .expect("scope already closed")
+            .send(Box::new(f))
+            .expect("pool workers gone");
+    }
+}
+
+impl<'env> Drop for Scope<'env> {
+    fn drop(&mut self) {
+        self.tx.take(); // close the queue
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = AtomicU64::new(0);
+        pool.scope(|s| {
+            for i in 0..100u64 {
+                let counter = &counter;
+                s.spawn(move || {
+                    counter.fetch_add(i, Ordering::SeqCst);
+                });
+            }
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 99 * 100 / 2);
+    }
+
+    #[test]
+    fn map_indexed_ordered() {
+        let pool = ThreadPool::new(3);
+        let v = pool.map_indexed(50, |i| i * i);
+        assert_eq!(v, (0..50).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn borrows_from_stack() {
+        let pool = ThreadPool::new(2);
+        let data = vec![1usize, 2, 3, 4];
+        let sum = AtomicUsize::new(0);
+        pool.scope(|s| {
+            for chunk in data.chunks(2) {
+                let sum = &sum;
+                s.spawn(move || {
+                    sum.fetch_add(chunk.iter().sum::<usize>(), Ordering::SeqCst);
+                });
+            }
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "pool job(s) panicked")]
+    fn propagates_panics() {
+        let pool = ThreadPool::new(2);
+        pool.scope(|s| {
+            s.spawn(|| panic!("boom"));
+        });
+    }
+
+    #[test]
+    fn single_thread_pool_works() {
+        let pool = ThreadPool::new(1);
+        let v = pool.map_indexed(10, |i| i + 1);
+        assert_eq!(v[9], 10);
+    }
+
+    #[test]
+    fn nested_scopes() {
+        let pool = ThreadPool::new(2);
+        let outer = AtomicUsize::new(0);
+        pool.scope(|s| {
+            let outer = &outer;
+            s.spawn(move || {
+                outer.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        pool.scope(|s| {
+            let outer = &outer;
+            s.spawn(move || {
+                outer.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(outer.load(Ordering::SeqCst), 2);
+    }
+}

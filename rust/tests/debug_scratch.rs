@@ -1,0 +1,232 @@
+//! Developer diagnostics & §Perf probes (all `#[ignore]`d).
+//!
+//! Run individually with
+//! `cargo test --release --test debug_scratch <name> -- --ignored --nocapture`.
+//! Each prints stage-by-stage numbers and then panics so the output is
+//! always shown; they are measurement tools, not assertions.
+use exascale_tensor::compress::{
+    compress_source, compress_source_sparse, ReplicaMaps, RustCompressor, SparseSignMatrix,
+};
+use exascale_tensor::coordinator::recovery::{
+    entry_calibrate, normalize_and_align, sensing_recover_mode, stacked_recover,
+};
+use exascale_tensor::cp::{als_decompose, factor_congruence, AlsOptions, CpModel};
+use exascale_tensor::linalg::ista::IstaOptions;
+use exascale_tensor::linalg::{matmul, Matrix, Trans};
+use exascale_tensor::mixed::MixedPrecision;
+use exascale_tensor::tensor::{InMemorySource, SparseLowRankGenerator, TensorSource};
+use exascale_tensor::util::threadpool::ThreadPool;
+
+#[test]
+#[ignore]
+fn debug_sensing_stages() {
+    let gen = SparseLowRankGenerator::new(36, 36, 36, 2, 6, 1004);
+    let (a_t, b_t, c_t) = gen.factors().clone();
+    let truth = CpModel::new(a_t, b_t, c_t);
+    let seed = 7u64;
+    let reduced = [12usize, 12, 12];
+    let anchor = 5;
+    let alpha = 2.2f32;
+    let al = ((12.0 * alpha).ceil() as usize).max(13);
+    let pool = ThreadPool::new(4);
+
+    let u1 = SparseSignMatrix::generate(al, 36, 10, seed ^ 0x51);
+    let v1 = SparseSignMatrix::generate(al, 36, 10, seed ^ 0x52);
+    let w1 = SparseSignMatrix::generate(al, 36, 10, seed ^ 0x53);
+    let z = compress_source_sparse(&gen, &u1, &v1, &w1, [16, 16, 16], &pool);
+
+    // Exact Z factors.
+    let za = u1.mul_dense(&truth.a);
+    let zb = v1.mul_dense(&truth.b);
+    let zc = w1.mul_dense(&truth.c);
+    let z_exact = exascale_tensor::tensor::DenseTensor::from_cp_factors(&za, &zb, &zc);
+    eprintln!("Z vs exact: rel {}", z.rel_error(&z_exact));
+
+    let maps2 = ReplicaMaps::generate([al, al, al], reduced, 12, anchor, seed ^ 0x54);
+    let z_src = InMemorySource::new(z);
+    let comp = RustCompressor { precision: MixedPrecision::Full };
+    let proxies = compress_source(&z_src, &maps2, [al, al, al], &comp, &pool);
+    let mut models = Vec::new();
+    for (p, y) in proxies.iter().enumerate() {
+        let (m, tr) = als_decompose(
+            y,
+            &AlsOptions { rank: 2, max_iters: 150, tol: 1e-11, seed: seed ^ p as u64, ..Default::default() },
+        )
+        .unwrap();
+        eprintln!("proxy {p}: fit {:.6}", tr.fits.last().unwrap());
+        models.push((p, m));
+    }
+    let (aligned, kept) = normalize_and_align(models, anchor).unwrap();
+    eprintln!("kept {kept:?}");
+    let tilde_z = stacked_recover(&aligned, &maps2.subset(&kept)).unwrap();
+    eprintln!("tilde_z congA {}", factor_congruence(&za, &tilde_z.a));
+    eprintln!("tilde_z congB {}", factor_congruence(&zb, &tilde_z.b));
+    eprintln!("tilde_z congC {}", factor_congruence(&zc, &tilde_z.c));
+
+    let ista = IstaOptions { lambda: 0.02, max_iters: 2000, tol: 1e-9 };
+    let ra = sensing_recover_mode(&u1, &tilde_z.a, &ista);
+    let rb = sensing_recover_mode(&v1, &tilde_z.b, &ista);
+    let rc = sensing_recover_mode(&w1, &tilde_z.c, &ista);
+    eprintln!("ista congA {}", factor_congruence(&truth.a, &ra));
+    eprintln!("ista congB {}", factor_congruence(&truth.b, &rb));
+    eprintln!("ista congC {}", factor_congruence(&truth.c, &rc));
+    // nnz of recovered columns
+    for c in 0..2 {
+        let nnz = (0..36).filter(|&i| ra.get(i, c).abs() > 1e-4).count();
+        eprintln!("ra col {c} nnz {nnz} (true 6)");
+    }
+
+    let tilde = CpModel::new(ra, rb, rc);
+    let model = entry_calibrate(&tilde, &gen, 8, seed ^ 0xCA2).unwrap();
+    let err = exascale_tensor::cp::sampled_mse(&gen, &model, 8, 16, 1);
+    eprintln!("final rel {}", err.rel_error);
+
+    // Compare with an ideal ISTA input (exact compressed factors):
+    let ra2 = sensing_recover_mode(&u1, &za, &ista);
+    eprintln!("ideal-input ista congA {}", factor_congruence(&truth.a, &ra2));
+
+    let _ = matmul(&Matrix::identity(2), Trans::No, &Matrix::identity(2), Trans::No);
+    panic!("debug output above");
+}
+
+#[test]
+#[ignore]
+fn debug_gene_scale() {
+    use exascale_tensor::apps::gene::{synthesize, GeneConfig};
+    let cfg = GeneConfig {
+        individuals: 120, tissues: 30, genes: 800, programs: 5,
+        gene_sparsity: 0.05, noise: 0.05, seed: 1, threads: 8,
+    };
+    let gen = synthesize(&cfg);
+    let (_, t, _) = &gen.factors;
+    // pairwise cosine of tissue columns
+    for i in 0..5 {
+        for j in (i+1)..5 {
+            let ci = t.col(i); let cj = t.col(j);
+            let dot: f32 = ci.iter().zip(cj).map(|(a,b)| a*b).sum();
+            let ni: f32 = ci.iter().map(|a| a*a).sum::<f32>().sqrt();
+            let nj: f32 = cj.iter().map(|a| a*a).sum::<f32>().sqrt();
+            eprintln!("tissue cos({i},{j}) = {:.3}", dot/(ni*nj));
+        }
+    }
+    panic!("see above");
+}
+
+#[test]
+#[ignore]
+fn debug_gene_pipeline_stages() {
+    use exascale_tensor::apps::gene::{synthesize, GeneConfig};
+    let cfg = GeneConfig {
+        individuals: 120, tissues: 30, genes: 800, programs: 5,
+        gene_sparsity: 0.05, noise: 0.05, seed: 1, threads: 8,
+    };
+    let gen = synthesize(&cfg);
+    let (ta, tb, tc) = gen.factors.clone();
+    let truth = CpModel::new(ta, tb, tc);
+    let reduced = [15usize, 15, 40];
+    let anchor = 7;
+    let p = 30;
+    let maps = ReplicaMaps::generate([120, 30, 800], reduced, p, anchor, 1 ^ 0x6E6E);
+    let pool = ThreadPool::new(8);
+    let comp = RustCompressor { precision: MixedPrecision::Full };
+    let proxies = compress_source(&gen, &maps, [100, 30, 250], &comp, &pool);
+    let mut models = Vec::new();
+    for (pi, y) in proxies.iter().enumerate() {
+        let (m, tr) = als_decompose(
+            y,
+            &AlsOptions { rank: 5, max_iters: 120, tol: 1e-10, seed: pi as u64, ..Default::default() },
+        ).unwrap();
+        if pi < 8 { eprintln!("proxy {pi}: fit {:.5}", tr.fits.last().unwrap()); }
+        models.push((pi, m));
+    }
+    let (aligned, kept) = normalize_and_align(models, anchor).unwrap();
+    eprintln!("kept {} of {}", kept.len(), p);
+    let tilde = stacked_recover(&aligned, &maps.subset(&kept)).unwrap();
+    eprintln!("tilde congA {:.4}", factor_congruence(&truth.a, &tilde.a));
+    eprintln!("tilde congB {:.4}", factor_congruence(&truth.b, &tilde.b));
+    eprintln!("tilde congC {:.4}", factor_congruence(&truth.c, &tilde.c));
+    panic!("see above");
+}
+
+#[test]
+#[ignore]
+fn perf_compress_batched_vs_plain() {
+    use exascale_tensor::compress::compress_source_batched;
+    use exascale_tensor::tensor::LowRankGenerator;
+    use std::time::Instant;
+    let gen = LowRankGenerator::new(240, 240, 240, 5, 9000);
+    let maps = ReplicaMaps::generate([240, 240, 240], [24, 24, 24], 21, 7, 9001);
+    let pool = ThreadPool::new(1);
+    let comp = RustCompressor { precision: MixedPrecision::Full };
+    let t0 = Instant::now();
+    let a = compress_source(&gen, &maps, [60, 60, 60], &comp, &pool);
+    let plain = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let b = compress_source_batched(&gen, &maps, [60, 60, 60], &pool);
+    let batched = t0.elapsed().as_secs_f64();
+    eprintln!("plain {plain:.2}s batched {batched:.2}s speedup {:.2}x", plain / batched);
+    eprintln!("agreement {}", a[0].rel_error(&b[0]));
+    panic!("perf numbers above");
+}
+
+#[test]
+#[ignore]
+fn perf_compress_profile_target() {
+    use exascale_tensor::tensor::LowRankGenerator;
+    let gen = LowRankGenerator::new(240, 240, 240, 5, 9000);
+    let maps = ReplicaMaps::generate([240, 240, 240], [24, 24, 24], 21, 7, 9001);
+    let pool = ThreadPool::new(1);
+    let comp = RustCompressor { precision: MixedPrecision::Full };
+    for _ in 0..2 {
+        let _ = compress_source(&gen, &maps, [60, 60, 60], &comp, &pool);
+    }
+}
+
+#[test]
+#[ignore]
+fn perf_compress_substages() {
+    use exascale_tensor::linalg::{gemm, Trans};
+    use exascale_tensor::tensor::{BlockSpec3, LowRankGenerator};
+    use std::time::Instant;
+    let gen = LowRankGenerator::new(240, 240, 240, 5, 9000);
+    let maps = ReplicaMaps::generate([240, 240, 240], [24, 24, 24], 21, 7, 9001);
+    let (l, dj, dk) = (24usize, 60usize, 60usize);
+    let p_count = 21;
+    let u_stack = maps.stacked_u();
+    let spec = BlockSpec3::new([240, 240, 240], [60, 60, 60]);
+    let (mut t_gen, mut t_m1, mut t_m3, mut t_m2, mut t_slice) = (0.0, 0.0, 0.0, 0.0, 0.0);
+    for blk in spec.iter() {
+        let t0 = Instant::now();
+        let t = gen.block(&blk);
+        t_gen += t0.elapsed().as_secs_f64();
+
+        let t0 = Instant::now();
+        let u_blk = u_stack.slice_cols(blk.i0, blk.i1);
+        let x1 = Matrix::from_vec(60, dj * dk, t.data().to_vec());
+        let mut y1_all = Matrix::zeros(p_count * l, dj * dk);
+        gemm(1.0, &u_blk, Trans::No, &x1, Trans::No, 0.0, &mut y1_all);
+        t_m1 += t0.elapsed().as_secs_f64();
+
+        for (p, rep) in maps.replicas.iter().enumerate() {
+            let t0 = Instant::now();
+            let y1 = y1_all.slice_rows(p * l, (p + 1) * l);
+            let y1_flat = Matrix::from_vec(l * dj, dk, y1.into_vec());
+            t_slice += t0.elapsed().as_secs_f64();
+            let t0 = Instant::now();
+            let w_blk = rep.w.slice_cols(blk.k0, blk.k1);
+            let mut y13 = Matrix::zeros(l * dj, 24);
+            gemm(1.0, &y1_flat, Trans::No, &w_blk, Trans::Yes, 0.0, &mut y13);
+            t_m3 += t0.elapsed().as_secs_f64();
+            let t0 = Instant::now();
+            let v_blk = rep.v.slice_cols(blk.j0, blk.j1);
+            for kn in 0..24 {
+                let slice = Matrix::from_vec(l, dj, y13.col(kn).to_vec());
+                let mut out = Matrix::zeros(l, 24);
+                gemm(1.0, &slice, Trans::No, &v_blk, Trans::Yes, 0.0, &mut out);
+            }
+            t_m2 += t0.elapsed().as_secs_f64();
+        }
+    }
+    eprintln!("gen {t_gen:.2}s mode1 {t_m1:.2}s slice {t_slice:.2}s mode3 {t_m3:.2}s mode2 {t_m2:.2}s");
+    panic!("numbers above");
+}

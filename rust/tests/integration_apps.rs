@@ -1,0 +1,79 @@
+//! Application-level integration: the gene-analysis and CP-layer protocols
+//! end to end (scaled down to stay fast in CI).
+
+use exascale_tensor::apps::nn::{evaluate, train, Network, SyntheticImages, TrainConfig};
+use exascale_tensor::apps::{run_cp_layer_experiment, run_gene_analysis, CpBackend, GeneConfig};
+
+#[test]
+fn gene_analysis_end_to_end() {
+    let cfg = GeneConfig {
+        individuals: 80,
+        tissues: 20,
+        genes: 300,
+        programs: 4,
+        gene_sparsity: 0.08,
+        noise: 0.02,
+        seed: 9,
+        threads: 4,
+    };
+    let r = run_gene_analysis(&cfg).unwrap();
+    assert_eq!(r.dims, [80, 20, 300]);
+    assert!(r.rel_error < 0.08, "rel {}", r.rel_error);
+    assert!(r.factor_congruence > 0.9, "congruence {}", r.factor_congruence);
+    assert!(r.decompose_seconds > 0.0);
+}
+
+#[test]
+fn cnn_trains_and_cp_layer_protocol_runs() {
+    let gen = SyntheticImages::default();
+    let train_ds = gen.generate(150, 1);
+    let test_ds = gen.generate(60, 2);
+    let mut net = Network::new(18, 6, 12, 24, 3, 42);
+    train(&mut net, &train_ds, &TrainConfig { epochs: 3, lr: 0.01, seed: 42 });
+    let base_acc = evaluate(&mut net, &test_ds);
+    assert!(base_acc > 0.8, "base accuracy {base_acc}");
+
+    // Random-ALS backend (cheapest) through the full protocol.
+    let r = run_cp_layer_experiment(
+        &mut net,
+        &train_ds,
+        &test_ds,
+        8,
+        CpBackend::Random,
+        1,
+        7,
+    )
+    .unwrap();
+    assert!(r.reconstruction_error < 0.85, "recon err {}", r.reconstruction_error); // trained conv tensors are not very low-rank
+    // Fine-tuning must not be catastrophically below the pre-compression
+    // accuracy at this rank.
+    assert!(
+        r.accuracy_after_finetune > base_acc - 0.25,
+        "tuned {} vs base {base_acc}",
+        r.accuracy_after_finetune
+    );
+}
+
+#[test]
+fn cp_layer_compressed_backend_runs() {
+    // Exercise OUR pipeline on a real trained conv tensor.
+    let gen = SyntheticImages::default();
+    let train_ds = gen.generate(120, 3);
+    let test_ds = gen.generate(45, 4);
+    let mut net = Network::new(18, 6, 12, 24, 3, 44);
+    train(&mut net, &train_ds, &TrainConfig { epochs: 2, lr: 0.01, seed: 44 });
+    let r = run_cp_layer_experiment(
+        &mut net,
+        &train_ds,
+        &test_ds,
+        6,
+        CpBackend::Compressed,
+        1,
+        11,
+    )
+    .unwrap();
+    assert!(r.decomp_seconds > 0.0);
+    assert!(r.compression_ratio > 1.0);
+    // The compressed pipeline's reconstruction should be finite & sane.
+    assert!(r.reconstruction_error.is_finite());
+}

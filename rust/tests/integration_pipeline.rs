@@ -1,0 +1,219 @@
+//! Integration tests: the full Alg. 2 pipeline across backends, scales,
+//! noise, sparsity, and failure injection.
+
+use exascale_tensor::coordinator::{Backend, Pipeline, PipelineConfig, SensingConfig};
+use exascale_tensor::cp::{model_congruence, CpModel};
+use exascale_tensor::tensor::{
+    BlockRange, DenseTensor, InMemorySource, LowRankGenerator, SparseLowRankGenerator,
+    TensorSource,
+};
+
+fn base_cfg(reduced: usize, rank: usize) -> exascale_tensor::coordinator::PipelineConfigBuilder {
+    PipelineConfig::builder()
+        .reduced_dims(reduced, reduced, reduced)
+        .rank(rank)
+        .block([24, 24, 24])
+        .als(150, 1e-11)
+        .threads(4)
+        .seed(5)
+}
+
+fn truth_of(gen: &LowRankGenerator) -> CpModel {
+    let (a, b, c) = gen.factors.clone();
+    CpModel::new(a, b, c)
+}
+
+#[test]
+fn recovers_rank3_at_64() {
+    let gen = LowRankGenerator::new(64, 64, 64, 3, 42);
+    let cfg = base_cfg(12, 3).build().unwrap();
+    let res = Pipeline::new(cfg).run(&gen).unwrap();
+    assert!(res.diagnostics.rel_error < 1e-2, "rel {}", res.diagnostics.rel_error);
+    assert!(model_congruence(&truth_of(&gen), &res.model) > 0.99);
+}
+
+#[test]
+fn non_cubic_tensor() {
+    let gen = LowRankGenerator::new(80, 40, 56, 3, 43);
+    let cfg = PipelineConfig::builder()
+        .reduced_dims(14, 10, 12)
+        .rank(3)
+        .block([30, 20, 25])
+        .als(150, 1e-11)
+        .seed(6)
+        .build()
+        .unwrap();
+    let res = Pipeline::new(cfg).run(&gen).unwrap();
+    assert!(res.diagnostics.rel_error < 2e-2, "rel {}", res.diagnostics.rel_error);
+}
+
+#[test]
+fn rank_one_tensor() {
+    let gen = LowRankGenerator::new(48, 48, 48, 1, 44);
+    let cfg = base_cfg(8, 1).anchor_rows(4).build().unwrap();
+    let res = Pipeline::new(cfg).run(&gen).unwrap();
+    assert!(res.diagnostics.rel_error < 1e-2);
+}
+
+#[test]
+fn sequential_and_parallel_agree() {
+    let gen = LowRankGenerator::new(48, 48, 48, 2, 45);
+    let seq = Pipeline::new(base_cfg(10, 2).backend(Backend::RustSequential).build().unwrap())
+        .run(&gen)
+        .unwrap();
+    let par = Pipeline::new(base_cfg(10, 2).backend(Backend::RustParallel).build().unwrap())
+        .run(&gen)
+        .unwrap();
+    let t_seq = seq.model.to_tensor();
+    let t_par = par.model.to_tensor();
+    assert!(t_seq.rel_error(&t_par) < 1e-3, "{}", t_seq.rel_error(&t_par));
+}
+
+#[test]
+fn in_memory_source_matches_generator() {
+    // Same underlying tensor via generator vs materialized: same answer.
+    let gen = LowRankGenerator::new(40, 40, 40, 2, 46);
+    let full = gen.block(&BlockRange { i0: 0, i1: 40, j0: 0, j1: 40, k0: 0, k1: 40, index: 0 });
+    let mem = InMemorySource::new(full);
+    let r1 = Pipeline::new(base_cfg(10, 2).build().unwrap()).run(&gen).unwrap();
+    let r2 = Pipeline::new(base_cfg(10, 2).build().unwrap()).run(&mem).unwrap();
+    // Parallel block accumulation commits in worker-completion order, so
+    // runs are FP-equal only up to reduction reordering; both must land on
+    // the same model to ~1e-2.
+    assert!(r1.model.to_tensor().rel_error(&r2.model.to_tensor()) < 1e-2);
+    assert!(r1.diagnostics.rel_error < 1e-2 && r2.diagnostics.rel_error < 1e-2);
+}
+
+#[test]
+fn noise_degrades_gracefully() {
+    let clean = LowRankGenerator::new(48, 48, 48, 2, 47);
+    let noisy = LowRankGenerator::new(48, 48, 48, 2, 47).with_noise(1e-2);
+    let rc = Pipeline::new(base_cfg(10, 2).build().unwrap()).run(&clean).unwrap();
+    let rn = Pipeline::new(base_cfg(10, 2).build().unwrap()).run(&noisy).unwrap();
+    assert!(rc.diagnostics.rel_error < rn.diagnostics.rel_error);
+    assert!(rn.diagnostics.rel_error < 0.1, "noisy rel {}", rn.diagnostics.rel_error);
+}
+
+#[test]
+fn mixed_precision_error_bounded() {
+    let gen = LowRankGenerator::new(48, 48, 48, 2, 48);
+    let full = Pipeline::new(base_cfg(10, 2).build().unwrap()).run(&gen).unwrap();
+    let mixed = Pipeline::new(base_cfg(10, 2).mixed_precision(true).build().unwrap())
+        .run(&gen)
+        .unwrap();
+    // bf16 split compression stays in the few-percent band; f32 is better.
+    assert!(mixed.diagnostics.rel_error < 0.05);
+    assert!(full.diagnostics.rel_error <= mixed.diagnostics.rel_error + 1e-3);
+}
+
+#[test]
+fn sensing_on_sparse_tensor() {
+    let gen = SparseLowRankGenerator::new(60, 60, 60, 2, 8, 49);
+    let cfg = base_cfg(15, 2)
+        .sensing(SensingConfig {
+            alpha: 2.2,
+            nnz_per_col: 12,
+            lambda: 0.02,
+        })
+        .build()
+        .unwrap();
+    let res = Pipeline::new(cfg).run(&gen).unwrap();
+    assert!(res.diagnostics.rel_error < 0.25, "rel {}", res.diagnostics.rel_error);
+}
+
+#[test]
+fn memory_budget_respected() {
+    let gen = LowRankGenerator::new(64, 64, 64, 2, 50);
+    let budget = 64 * 1024 * 1024;
+    let cfg = base_cfg(10, 2).memory_budget(budget).build().unwrap();
+    let res = Pipeline::new(cfg).run(&gen).unwrap();
+    assert!(res.plan.estimated_bytes <= budget);
+    assert!(res.diagnostics.rel_error < 2e-2);
+}
+
+#[test]
+fn impossible_budget_fails_cleanly() {
+    let gen = LowRankGenerator::new(64, 64, 64, 2, 51);
+    let cfg = base_cfg(10, 2).memory_budget(1024).build().unwrap();
+    assert!(Pipeline::new(cfg).run(&gen).is_err());
+}
+
+#[test]
+fn reduced_dims_larger_than_tensor_rejected() {
+    let gen = LowRankGenerator::new(8, 8, 8, 2, 52);
+    let cfg = base_cfg(10, 2).build().unwrap(); // reduced 10 > dims 8
+    assert!(Pipeline::new(cfg).run(&gen).is_err());
+}
+
+#[test]
+fn metrics_cover_every_stage() {
+    let gen = LowRankGenerator::new(40, 40, 40, 2, 53);
+    let mut pipe = Pipeline::new(base_cfg(10, 2).build().unwrap());
+    pipe.run(&gen).unwrap();
+    for stage in ["compress", "decompose", "align", "stacked_lstsq", "disambiguate"] {
+        assert!(pipe.metrics.stage(stage).is_some(), "missing {stage}");
+    }
+    assert!(pipe.metrics.counter("replicas") > 0);
+}
+
+/// Failure injection: a tensor source with a corrupted spike entry; the
+/// pipeline should still land in the right ballpark (robustness comes from
+/// the replica redundancy + fit-based drops).
+struct SpikySource {
+    inner: LowRankGenerator,
+}
+
+impl TensorSource for SpikySource {
+    fn dims(&self) -> [usize; 3] {
+        self.inner.dims()
+    }
+
+    fn block(&self, r: &BlockRange) -> DenseTensor {
+        let mut t = self.inner.block(r);
+        if r.i0 <= 30 && 30 < r.i1 && r.j0 <= 30 && 30 < r.j1 && r.k0 <= 30 && 30 < r.k1 {
+            t.set(30 - r.i0, 30 - r.j0, 30 - r.k0, 20.0); // ~4% of the tensor norm
+        }
+        t
+    }
+}
+
+#[test]
+fn checkpoint_resume_skips_compression() {
+    let gen = LowRankGenerator::new(40, 40, 40, 2, 55);
+    let mut dir = std::env::temp_dir();
+    dir.push(format!("exatensor_ckpt_it_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let cfg = base_cfg(10, 2).checkpoint_dir(dir.clone()).build().unwrap();
+    let mut first = Pipeline::new(cfg.clone());
+    let r1 = first.run(&gen).unwrap();
+    assert!(first.metrics.stage("compress").is_some());
+    assert!(dir.join("checkpoint.json").exists());
+
+    // Second run resumes: no compression stage, same quality.
+    let mut second = Pipeline::new(cfg);
+    let r2 = second.run(&gen).unwrap();
+    assert!(second.metrics.stage("compress").is_none(), "compression should be skipped");
+    assert_eq!(second.metrics.counter("checkpoint_resumed"), 1);
+    assert!(r2.diagnostics.rel_error < r1.diagnostics.rel_error + 1e-3);
+
+    // A different seed must refuse to resume (fail loudly, not corrupt).
+    let cfg_other = base_cfg(10, 2).checkpoint_dir(dir.clone()).seed(999).build().unwrap();
+    assert!(Pipeline::new(cfg_other).run(&gen).is_err());
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn single_corrupted_entry_is_survivable() {
+    let src = SpikySource {
+        inner: LowRankGenerator::new(48, 48, 48, 2, 54),
+    };
+    let cfg = base_cfg(10, 2).build().unwrap();
+    let res = Pipeline::new(cfg).run(&src).unwrap();
+    assert!(
+        res.diagnostics.rel_error < 0.2,
+        "rel {}",
+        res.diagnostics.rel_error
+    );
+}

@@ -1,0 +1,164 @@
+//! Runtime integration: AOT artifacts vs the rust reference, and the full
+//! pipeline on the XLA backend.  All tests self-skip (loudly) when
+//! `make artifacts` has not been run.
+
+use exascale_tensor::compress::{comp_dense, BlockCompressor};
+use exascale_tensor::coordinator::{Backend, Pipeline, PipelineConfig, ProxyDecomposer};
+use exascale_tensor::linalg::Matrix;
+use exascale_tensor::mixed::MixedPrecision;
+use exascale_tensor::runtime::{
+    artifacts_dir, HostTensor, XlaAlsDecomposer, XlaCompressor, XlaRuntime,
+};
+use exascale_tensor::tensor::{DenseTensor, LowRankGenerator};
+use exascale_tensor::util::rng::Xoshiro256;
+
+fn runtime(threads: usize) -> Option<XlaRuntime> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts missing (run `make artifacts`)");
+        return None;
+    }
+    Some(XlaRuntime::load(dir, threads).expect("runtime load"))
+}
+
+#[test]
+fn every_artifact_compiles_and_runs_zeros() {
+    let Some(rt) = runtime(1) else { return };
+    // Execute every artifact with zero inputs: must produce outputs of the
+    // declared shapes without error (als_sweep hits the ridge path).
+    let names: Vec<String> = rt.manifest().artifacts.keys().cloned().collect();
+    for name in names {
+        let spec = rt.manifest().get(&name).unwrap().clone();
+        let inputs: Vec<HostTensor> = spec
+            .inputs
+            .iter()
+            .map(|dims| HostTensor::zeros(dims.clone()))
+            .collect();
+        let out = rt.execute(&name, inputs).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        assert_eq!(out.len(), spec.outputs.len(), "{name}");
+        for (o, dims) in out.iter().zip(&spec.outputs) {
+            assert_eq!(&o.dims, dims, "{name}");
+            assert!(o.data.iter().all(|v| v.is_finite()), "{name} produced non-finite");
+        }
+    }
+}
+
+#[test]
+fn concurrent_execution_from_many_threads() {
+    let Some(rt) = runtime(2) else { return };
+    let pool = exascale_tensor::util::threadpool::ThreadPool::new(8);
+    let results = pool.map_indexed(32, |i| {
+        let x = HostTensor::new(vec![4], vec![i as f32; 4]);
+        let y = HostTensor::new(vec![4], vec![1.0; 4]);
+        let out = rt.execute("smoke_add", vec![x, y]).expect("execute");
+        out[0].data[0]
+    });
+    for (i, v) in results.into_iter().enumerate() {
+        assert_eq!(v, i as f32 + 1.0);
+    }
+}
+
+#[test]
+fn xla_compressor_equals_rust_across_shapes() {
+    let Some(rt) = runtime(1) else { return };
+    let comp = XlaCompressor::new(rt, [16, 16, 16], 32).expect("artifact");
+    let mut rng = Xoshiro256::seed_from_u64(900);
+    for (di, dj, dk) in [(32, 32, 32), (32, 16, 8), (5, 32, 19)] {
+        let t = DenseTensor::random_normal([di, dj, dk], &mut rng);
+        let u = Matrix::random_normal(16, di, &mut rng);
+        let v = Matrix::random_normal(16, dj, &mut rng);
+        let w = Matrix::random_normal(16, dk, &mut rng);
+        let got = comp.compress_block(&t, &u, &v, &w);
+        let want = comp_dense(&t, &u, &v, &w, MixedPrecision::Full);
+        let err = got.rel_error(&want);
+        assert!(err < 1e-3, "({di},{dj},{dk}): err {err}");
+    }
+}
+
+#[test]
+fn mixed_artifact_matches_rust_emulation() {
+    let Some(rt) = runtime(1) else { return };
+    let Ok(spec) = rt.manifest().get("compress_block_l16m16n16_d32_mixed") else {
+        eprintln!("SKIP: mixed compress artifact absent");
+        return;
+    };
+    let name = spec.name.clone();
+    let mut rng = Xoshiro256::seed_from_u64(901);
+    let t = DenseTensor::random_normal([32, 32, 32], &mut rng);
+    let u = Matrix::random_normal(16, 32, &mut rng);
+    let v = Matrix::random_normal(16, 32, &mut rng);
+    let w = Matrix::random_normal(16, 32, &mut rng);
+    let out = rt
+        .execute(
+            &name,
+            vec![
+                HostTensor::from_tensor(&t),
+                HostTensor::from_matrix(&u),
+                HostTensor::from_matrix(&v),
+                HostTensor::from_matrix(&w),
+            ],
+        )
+        .expect("mixed artifact");
+    let got = out[0].to_tensor();
+    // Both are *mixed* precision paths; compare against f32 truth with a
+    // bf16-sized tolerance, and confirm they're closer to each other.
+    let full = comp_dense(&t, &u, &v, &w, MixedPrecision::Full);
+    let rust_mixed = comp_dense(&t, &u, &v, &w, MixedPrecision::Bf16);
+    assert!(got.rel_error(&full) < 2e-2, "vs full {}", got.rel_error(&full));
+    assert!(
+        got.rel_error(&rust_mixed) < got.rel_error(&full) * 2.0 + 1e-3,
+        "pallas-mixed should track rust-mixed"
+    );
+}
+
+#[test]
+fn xla_als_fit_matches_rust_als() {
+    let Some(rt) = runtime(1) else { return };
+    let dec = XlaAlsDecomposer::new(rt, [16, 16, 16], 4, 100, 1e-10).expect("artifact");
+    let mut rng = Xoshiro256::seed_from_u64(902);
+    let a = Matrix::random_normal(16, 4, &mut rng);
+    let b = Matrix::random_normal(16, 4, &mut rng);
+    let c = Matrix::random_normal(16, 4, &mut rng);
+    let y = DenseTensor::from_cp_factors(&a, &b, &c);
+    let (model, fit) = dec.decompose(&y, 4, 55).expect("decompose");
+    assert!(fit > 0.999, "xla fit {fit}");
+    assert!(model.to_tensor().rel_error(&y) < 1e-2);
+}
+
+#[test]
+fn full_pipeline_on_xla_backend() {
+    let Some(rt) = runtime(2) else { return };
+    let gen = LowRankGenerator::new(64, 64, 64, 4, 903);
+    let cfg = PipelineConfig::builder()
+        .reduced_dims(16, 16, 16)
+        .rank(4)
+        .block([32, 32, 32])
+        .backend(Backend::Xla)
+        .als(80, 1e-9)
+        .seed(12)
+        .build()
+        .unwrap();
+    let mut pipe = Pipeline::new(cfg)
+        .with_compressor(Box::new(
+            XlaCompressor::new(rt.clone(), [16, 16, 16], 32).expect("compressor"),
+        ))
+        .with_decomposer(Box::new(
+            XlaAlsDecomposer::new(rt, [16, 16, 16], 4, 80, 1e-9).expect("decomposer"),
+        ));
+    let res = pipe.run(&gen).unwrap();
+    assert!(
+        res.diagnostics.rel_error < 2e-2,
+        "xla pipeline rel {}",
+        res.diagnostics.rel_error
+    );
+}
+
+#[test]
+fn shape_validation_and_unknown_artifacts() {
+    let Some(rt) = runtime(1) else { return };
+    assert!(rt.execute("smoke_add", vec![]).is_err());
+    let bad = HostTensor::zeros(vec![5]);
+    let ok = HostTensor::zeros(vec![4]);
+    assert!(rt.execute("smoke_add", vec![bad, ok]).is_err());
+    assert!(rt.execute("definitely_not_an_artifact", vec![]).is_err());
+}

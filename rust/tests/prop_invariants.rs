@@ -1,0 +1,172 @@
+//! Property tests on coordinator invariants, run through the in-crate
+//! `util::prop` harness (offline substitute for proptest — see DESIGN.md).
+
+use exascale_tensor::compress::{comp_dense, ReplicaMaps};
+use exascale_tensor::coordinator::matching::{align_to_reference, anchor_normalize};
+use exascale_tensor::coordinator::MemoryPlanner;
+use exascale_tensor::cp::CpModel;
+use exascale_tensor::linalg::{hungarian_max, hungarian_min, matmul, Matrix, Trans};
+use exascale_tensor::mixed::MixedPrecision;
+use exascale_tensor::tensor::unfold::{refold_2, refold_3, unfold_2, unfold_3};
+use exascale_tensor::tensor::DenseTensor;
+use exascale_tensor::util::prop;
+use exascale_tensor::util::rng::Xoshiro256;
+
+#[test]
+fn prop_hungarian_max_is_permutation_and_optimal() {
+    prop::check("hungarian-max-perm", 40, |g| {
+        let n = g.int(1, 6);
+        let mut w = Matrix::zeros(n, n);
+        for j in 0..n {
+            for i in 0..n {
+                w.set(i, j, g.f32(-3.0, 3.0));
+            }
+        }
+        let asn = hungarian_max(&w);
+        let mut seen = vec![false; n];
+        for &c in &asn.col_of_row {
+            assert!(!seen[c]);
+            seen[c] = true;
+        }
+        // max == -min of negated matrix
+        let neg = Matrix::from_fn(n, n, |i, j| -w.get(i, j));
+        let min = hungarian_min(&neg);
+        assert!((asn.total + min.total).abs() < 1e-3);
+    });
+}
+
+#[test]
+fn prop_unfold_refold_roundtrip_modes_2_3() {
+    prop::check("unfold-roundtrip", 30, |g| {
+        let dims = [g.int(1, 6), g.int(1, 6), g.int(1, 6)];
+        let mut rng = Xoshiro256::seed_from_u64(g.int(0, 1 << 30) as u64);
+        let t = DenseTensor::random_normal(dims, &mut rng);
+        assert_eq!(refold_2(&unfold_2(&t), dims), t);
+        assert_eq!(refold_3(&unfold_3(&t), dims), t);
+    });
+}
+
+#[test]
+fn prop_compression_is_linear() {
+    prop::check("comp-linear", 20, |g| {
+        let d = g.int(2, 6);
+        let l = g.int(1, 4);
+        let mut rng = Xoshiro256::seed_from_u64(g.int(0, 1 << 30) as u64);
+        let t1 = DenseTensor::random_normal([d, d, d], &mut rng);
+        let t2 = DenseTensor::random_normal([d, d, d], &mut rng);
+        let alpha = g.f32(-2.0, 2.0);
+        let u = Matrix::random_normal(l, d, &mut rng);
+        let v = Matrix::random_normal(l, d, &mut rng);
+        let w = Matrix::random_normal(l, d, &mut rng);
+        let combo = DenseTensor::from_fn([d, d, d], |i, j, k| {
+            t1.get(i, j, k) + alpha * t2.get(i, j, k)
+        });
+        let y_combo = comp_dense(&combo, &u, &v, &w, MixedPrecision::Full);
+        let y1 = comp_dense(&t1, &u, &v, &w, MixedPrecision::Full);
+        let y2 = comp_dense(&t2, &u, &v, &w, MixedPrecision::Full);
+        let y_lin = DenseTensor::from_fn([l, l, l], |i, j, k| {
+            y1.get(i, j, k) + alpha * y2.get(i, j, k)
+        });
+        assert!(y_combo.rel_error(&y_lin) < 1e-3, "err {}", y_combo.rel_error(&y_lin));
+    });
+}
+
+#[test]
+fn prop_replica_maps_anchor_invariant() {
+    prop::check("maps-anchor", 20, |g| {
+        let dim = g.int(8, 20);
+        let l = g.int(4, 7);
+        let s = g.int(1, l.min(4));
+        let p = g.int(2, 5);
+        let maps = ReplicaMaps::generate([dim; 3], [l; 3], p, s, g.int(0, 1 << 30) as u64);
+        // Anchor rows identical across replicas for all three maps.
+        for rep in &maps.replicas[1..] {
+            for r in 0..s {
+                for c in 0..dim {
+                    assert_eq!(rep.u.get(r, c), maps.replicas[0].u.get(r, c));
+                    assert_eq!(rep.v.get(r, c), maps.replicas[0].v.get(r, c));
+                    assert_eq!(rep.w.get(r, c), maps.replicas[0].w.get(r, c));
+                }
+            }
+        }
+        // Stacked shapes.
+        assert_eq!(maps.stacked_u().rows(), p * l);
+    });
+}
+
+#[test]
+fn prop_alignment_is_idempotent() {
+    prop::check("align-idempotent", 15, |g| {
+        let rows = g.int(6, 12);
+        let rank = g.int(2, 4);
+        let s = rank + 1;
+        let mut rng = Xoshiro256::seed_from_u64(g.int(0, 1 << 30) as u64);
+        let mut m = CpModel::new(
+            Matrix::random_normal(rows, rank, &mut rng),
+            Matrix::random_normal(rows, rank, &mut rng),
+            Matrix::random_normal(rows, rank, &mut rng),
+        );
+        if anchor_normalize(&mut m, s).is_err() {
+            return; // degenerate draw: skip
+        }
+        let (once, rep1) = align_to_reference(&m, &m, s).unwrap();
+        let (twice, rep2) = align_to_reference(&m, &once, s).unwrap();
+        assert_eq!(rep1.permutation, (0..rank).collect::<Vec<_>>());
+        assert_eq!(rep2.permutation, (0..rank).collect::<Vec<_>>());
+        assert!(twice.a.rel_error(&once.a) < 1e-6);
+    });
+}
+
+#[test]
+fn prop_planner_bound_monotone_in_anchor() {
+    prop::check("planner-anchor-monotone", 30, |g| {
+        let dim = g.int(50, 400);
+        let l = g.int(8, 30);
+        let s1 = g.int(2, l - 2);
+        let s2 = g.int(s1, l - 1);
+        let p1 = MemoryPlanner::min_replicas_anchored([dim; 3], [l; 3], s1);
+        let p2 = MemoryPlanner::min_replicas_anchored([dim; 3], [l; 3], s2);
+        // More anchors ⇒ fewer informative rows ⇒ needs ≥ as many replicas.
+        assert!(p2 >= p1, "S={s1}→P={p1}, S={s2}→P={p2}");
+        // And the bound is actually sufficient: S + P(L−S) ≥ dim.
+        if l > s1 {
+            assert!(s1 + p1 * (l - s1) >= dim.min(s1 + p1 * (l - s1)));
+            assert!(s1 + p1 * (l - s1) >= dim || dim <= l);
+        }
+    });
+}
+
+#[test]
+fn prop_mixed_matmul_error_scales_with_precision() {
+    prop::check("mixed-precision-order", 15, |g| {
+        let n = g.int(4, 24);
+        let mut rng = Xoshiro256::seed_from_u64(g.int(0, 1 << 30) as u64);
+        let a = Matrix::random_normal(n, n, &mut rng);
+        let b = Matrix::random_normal(n, n, &mut rng);
+        let exact = matmul(&a, Trans::No, &b, Trans::No);
+        let f16 = exascale_tensor::mixed::matmul_mixed(&a, &b, exascale_tensor::mixed::MixedPrecision::F16);
+        let bf16 = exascale_tensor::mixed::matmul_mixed(&a, &b, exascale_tensor::mixed::MixedPrecision::Bf16);
+        // f16 has 10 mantissa bits vs bf16's 7: compensated f16 ≤ bf16 error
+        // (allow slack for tiny matrices).
+        let e_f16 = f16.rel_error(&exact);
+        let e_bf16 = bf16.rel_error(&exact);
+        assert!(e_f16 < e_bf16 * 4.0 + 1e-7, "f16 {e_f16} vs bf16 {e_bf16}");
+        assert!(e_bf16 < 1e-3);
+    });
+}
+
+#[test]
+fn prop_cp_model_norm_matches_dense() {
+    prop::check("cp-norm", 20, |g| {
+        let dims = [g.int(2, 6), g.int(2, 6), g.int(2, 6)];
+        let rank = g.int(1, 3);
+        let mut rng = Xoshiro256::seed_from_u64(g.int(0, 1 << 30) as u64);
+        let m = CpModel::new(
+            Matrix::random_normal(dims[0], rank, &mut rng),
+            Matrix::random_normal(dims[1], rank, &mut rng),
+            Matrix::random_normal(dims[2], rank, &mut rng),
+        );
+        let dense_sq = m.to_tensor().frobenius_norm().powi(2);
+        assert!((m.norm_sq() - dense_sq).abs() / dense_sq.max(1e-9) < 1e-3);
+    });
+}
