@@ -18,7 +18,7 @@
 use exascale_tensor::bench_harness::{bench_once, speedup};
 use exascale_tensor::coordinator::{Backend, Pipeline, PipelineConfig};
 use exascale_tensor::cp::{model_congruence, CpModel};
-use exascale_tensor::runtime::{artifacts_dir, XlaAlsDecomposer, XlaCompressor, XlaRuntime};
+use exascale_tensor::runtime::{artifacts_dir, XlaBackend, XlaRuntime};
 use exascale_tensor::tensor::LowRankGenerator;
 use exascale_tensor::util::logging;
 
@@ -38,19 +38,9 @@ fn build_pipeline(backend: Backend, rt: Option<&XlaRuntime>) -> anyhow::Result<P
         .build()?;
     let mut pipe = Pipeline::new(cfg);
     if let Some(rt) = rt {
-        pipe = pipe
-            .with_compressor(Box::new(XlaCompressor::new(
-                rt.clone(),
-                [REDUCED; 3],
-                BLOCK,
-            )?))
-            .with_decomposer(Box::new(XlaAlsDecomposer::new(
-                rt.clone(),
-                [REDUCED; 3],
-                RANK,
-                100,
-                1e-10,
-            )?));
+        // Single constructor for the whole XLA arm (ComputeBackend).
+        let xla = XlaBackend::new(rt.clone(), [REDUCED; 3], BLOCK, RANK, 100, 1e-10, 4)?;
+        pipe = pipe.with_compute(std::sync::Arc::new(xla));
     }
     Ok(pipe)
 }

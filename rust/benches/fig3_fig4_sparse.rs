@@ -16,7 +16,7 @@
 use exascale_tensor::bench_harness::{bench_once, speedup, Report};
 use exascale_tensor::coordinator::{Backend, Pipeline, PipelineConfig};
 use exascale_tensor::cp::{als_decompose, als_decompose_sparse, AlsOptions};
-use exascale_tensor::runtime::{artifacts_dir, XlaAlsDecomposer, XlaCompressor, XlaRuntime};
+use exascale_tensor::runtime::{artifacts_dir, XlaBackend, XlaRuntime};
 use exascale_tensor::tensor::{DenseTensor, SparseLowRankGenerator, SparseTensor};
 
 const RANK: usize = 3;
@@ -79,14 +79,10 @@ fn main() {
                 .seed(23)
                 .build()
                 .expect("config");
-            let mut pipe = Pipeline::new(cfg)
-                .with_compressor(Box::new(
-                    XlaCompressor::new(rt.clone(), [l, l, l], BLOCK).expect("compress artifact"),
-                ))
-                .with_decomposer(Box::new(
-                    XlaAlsDecomposer::new(rt.clone(), [l, l, l], RANK, 60, 1e-9)
-                        .expect("als artifact"),
-                ));
+            let mut pipe = Pipeline::new(cfg).with_compute(std::sync::Arc::new(
+                XlaBackend::new(rt.clone(), [l, l, l], BLOCK, RANK, 60, 1e-9, 4)
+                    .expect("xla backend artifacts"),
+            ));
             let (meas, result) =
                 bench_once(&format!("I={size} compressed(xla)"), || {
                     pipe.run(&gen).expect("pipeline")

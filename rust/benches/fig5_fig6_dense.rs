@@ -13,8 +13,9 @@
 
 use exascale_tensor::bench_harness::{bench_once, speedup, Report};
 use exascale_tensor::coordinator::{Backend, Pipeline, PipelineConfig};
-use exascale_tensor::runtime::{artifacts_dir, XlaAlsDecomposer, XlaCompressor, XlaRuntime};
+use exascale_tensor::runtime::{artifacts_dir, XlaBackend, XlaRuntime};
 use exascale_tensor::tensor::LowRankGenerator;
+use std::sync::Arc;
 
 const RANK: usize = 5;
 const REDUCED: usize = 24;
@@ -32,14 +33,10 @@ fn pipeline(backend: Backend, rt: Option<&XlaRuntime>) -> Pipeline {
         .expect("config");
     let mut pipe = Pipeline::new(cfg);
     if let Some(rt) = rt {
-        pipe = pipe
-            .with_compressor(Box::new(
-                XlaCompressor::new(rt.clone(), [REDUCED; 3], BLOCK).expect("compressor artifact"),
-            ))
-            .with_decomposer(Box::new(
-                XlaAlsDecomposer::new(rt.clone(), [REDUCED; 3], RANK, 80, 1e-9)
-                    .expect("als artifact"),
-            ));
+        // One ComputeBackend wires both fused artifacts + CPU kernels.
+        let xla = XlaBackend::new(rt.clone(), [REDUCED; 3], BLOCK, RANK, 80, 1e-9, 4)
+            .expect("xla backend artifacts");
+        pipe = pipe.with_compute(Arc::new(xla));
     }
     pipe
 }

@@ -1,0 +1,106 @@
+//! `BENCH_gemm_mttkrp` — serial-vs-parallel kernel throughput tracked
+//! from the ComputeBackend PR onward.
+//!
+//! Sweeps the `CpuParallelBackend` over 1/2/4/8 worker threads against the
+//! serial reference on the `kernel_micro` shapes:
+//!
+//! * GEMM 256×256×256 (the blocked-kernel headline shape);
+//! * GEMM 512×64×512 (the fat-unfolding × tall-skinny compression shape);
+//! * MTTKRP on a 96³ tensor at rank 16 (the ALS hot spot: `I × JK` times
+//!   `JK × R`).
+//!
+//! Emits a markdown table plus machine-readable JSON at both
+//! `bench_results/BENCH_gemm_mttkrp.json` and `BENCH_gemm_mttkrp.json`
+//! (the tracked perf-trajectory file).
+
+use exascale_tensor::bench_harness::{bench, gflops, speedup, Report};
+use exascale_tensor::linalg::{ComputeBackend, CpuParallelBackend, Matrix, SerialBackend, Trans};
+use exascale_tensor::tensor::unfold::unfold_1;
+use exascale_tensor::tensor::DenseTensor;
+use exascale_tensor::util::rng::Xoshiro256;
+
+const THREAD_SWEEP: [usize; 4] = [1, 2, 4, 8];
+
+fn main() {
+    let mut rng = Xoshiro256::seed_from_u64(4242);
+    let mut rep = Report::new(
+        "BENCH_gemm_mttkrp",
+        "serial vs parallel GEMM/MTTKRP throughput (ComputeBackend)",
+    );
+
+    // ── GEMM shapes ──
+    for (m, k, n) in [(256usize, 256usize, 256usize), (512, 64, 512)] {
+        let a = Matrix::random_normal(m, k, &mut rng);
+        let b = Matrix::random_normal(k, n, &mut rng);
+        let flops = 2.0 * (m * n * k) as f64;
+
+        let serial = bench(&format!("gemm_{m}x{k}x{n}_serial"), 5, 1.0, || {
+            SerialBackend.matmul(&a, Trans::No, &b, Trans::No)
+        });
+        let serial_s = serial.mean_s;
+        println!(
+            "gemm {m}×{k}×{n} serial: {:.3} ms ({:.2} GF/s)",
+            serial_s * 1e3,
+            gflops(flops, serial_s)
+        );
+        let g = gflops(flops, serial_s);
+        rep.push(serial.with_threads(1).with_extra("gflops", g).with_extra("speedup", 1.0));
+
+        for &t in &THREAD_SWEEP[1..] {
+            let be = CpuParallelBackend::new(t);
+            let meas = bench(&format!("gemm_{m}x{k}x{n}_par{t}"), 5, 1.0, || {
+                be.matmul(&a, Trans::No, &b, Trans::No)
+            });
+            let sp = speedup(serial_s, meas.mean_s);
+            println!(
+                "gemm {m}×{k}×{n} par×{t}:  {:.3} ms ({:.2} GF/s, {sp:.2}x)",
+                meas.mean_s * 1e3,
+                gflops(flops, meas.mean_s)
+            );
+            let g = gflops(flops, meas.mean_s);
+            rep.push(meas.with_threads(t).with_extra("gflops", g).with_extra("speedup", sp));
+        }
+    }
+
+    // ── MTTKRP: 96³ tensor, rank 16 ──
+    let (dim, rank) = (96usize, 16usize);
+    let t3 = DenseTensor::random_normal([dim, dim, dim], &mut rng);
+    let x1 = unfold_1(&t3);
+    let bfac = Matrix::random_normal(dim, rank, &mut rng);
+    let cfac = Matrix::random_normal(dim, rank, &mut rng);
+    // X₁ (I × JK) · KR (JK × R): 2·I·JK·R flops plus the KR formation.
+    let flops = 2.0 * (dim * dim * dim * rank) as f64;
+
+    let serial = bench("mttkrp_96_r16_serial", 5, 1.0, || {
+        SerialBackend.mttkrp(1, &x1, &cfac, &bfac)
+    });
+    let serial_s = serial.mean_s;
+    println!(
+        "mttkrp 96³ r16 serial: {:.3} ms ({:.2} GF/s)",
+        serial_s * 1e3,
+        gflops(flops, serial_s)
+    );
+    let g = gflops(flops, serial_s);
+    rep.push(serial.with_threads(1).with_extra("gflops", g).with_extra("speedup", 1.0));
+
+    for &t in &THREAD_SWEEP[1..] {
+        let be = CpuParallelBackend::new(t);
+        let meas = bench(&format!("mttkrp_96_r16_par{t}"), 5, 1.0, || {
+            be.mttkrp(1, &x1, &cfac, &bfac)
+        });
+        let sp = speedup(serial_s, meas.mean_s);
+        println!(
+            "mttkrp 96³ r16 par×{t}:  {:.3} ms ({:.2} GF/s, {sp:.2}x)",
+            meas.mean_s * 1e3,
+            gflops(flops, meas.mean_s)
+        );
+        let g = gflops(flops, meas.mean_s);
+        rep.push(meas.with_threads(t).with_extra("gflops", g).with_extra("speedup", sp));
+    }
+
+    rep.finish();
+    match rep.save_as("BENCH_gemm_mttkrp.json") {
+        Ok(()) => println!("(saved BENCH_gemm_mttkrp.json)"),
+        Err(e) => eprintln!("warning: could not save BENCH_gemm_mttkrp.json: {e}"),
+    }
+}

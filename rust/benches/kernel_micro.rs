@@ -5,9 +5,9 @@
 //! * TTM-chain block compression: rust vs the AOT Pallas artifact;
 //! * single `als_sweep` artifact execution latency (the request-path unit).
 
-use exascale_tensor::bench_harness::{bench, Report};
+use exascale_tensor::bench_harness::{bench, gflops, speedup, Report};
 use exascale_tensor::compress::comp_dense;
-use exascale_tensor::linalg::{matmul, Matrix, Trans};
+use exascale_tensor::linalg::{matmul, ComputeBackend, CpuParallelBackend, Matrix, Trans};
 use exascale_tensor::mixed::{matmul_mixed, MixedPrecision};
 use exascale_tensor::runtime::{artifacts_dir, HostTensor, XlaRuntime};
 use exascale_tensor::tensor::DenseTensor;
@@ -23,9 +23,22 @@ fn main() {
     let m = bench("gemm_256_blocked", 5, 1.0, || {
         matmul(&a, Trans::No, &b, Trans::No)
     });
-    let gflops = 2.0 * 256f64.powi(3) / m.mean_s / 1e9;
-    println!("gemm 256³ blocked: {:.3} ms ({gflops:.2} GF/s)", m.mean_s * 1e3);
-    rep.push(m.with_extra("gflops", gflops));
+    let serial_s = m.mean_s;
+    let flops = 2.0 * 256f64.powi(3);
+    let gf = gflops(flops, m.mean_s);
+    println!("gemm 256³ blocked: {:.3} ms ({gf:.2} GF/s)", m.mean_s * 1e3);
+    rep.push(m.with_extra("gflops", gf));
+
+    // Parallel ComputeBackend on the same shape (full sweep lives in the
+    // gemm_mttkrp bench; this row keeps the headline number here).
+    let be4 = CpuParallelBackend::new(4);
+    let m = bench("gemm_256_parallel_t4", 5, 1.0, || {
+        be4.matmul(&a, Trans::No, &b, Trans::No)
+    });
+    let sp = speedup(serial_s, m.mean_s);
+    let gf = gflops(flops, m.mean_s);
+    println!("gemm 256³ parallel×4: {:.3} ms ({gf:.2} GF/s, {sp:.2}x)", m.mean_s * 1e3);
+    rep.push(m.with_extra("gflops", gf).with_extra("speedup", sp));
 
     // ── mixed-precision emulation ──
     let m = bench("mixed_matmul_256_rust", 5, 1.0, || {

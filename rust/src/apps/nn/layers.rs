@@ -2,8 +2,12 @@
 //!
 //! The network processes one image at a time (batch = 1) — at 16×16 that
 //! is plenty fast and keeps the backward passes simple and auditable.
+//! The matrix work (im2col GEMMs, dense mat-vecs) dispatches through a
+//! [`ComputeBackend`] handle held by [`Network`] — serial by default,
+//! swappable via [`Network::with_backend`] for larger geometries.
 
-use crate::linalg::{matmul, Matrix, Trans};
+use crate::linalg::backend::{serial_backend, BackendHandle, ComputeBackend};
+use crate::linalg::{Matrix, Trans};
 use crate::util::rng::Xoshiro256;
 
 /// A 2-D convolution (valid padding, stride 1) via im2col.
@@ -65,11 +69,11 @@ impl Conv2d {
     }
 
     /// Forward: input `(in_ch · side²)` planes → `(out_ch · out²)` planes.
-    pub fn forward(&mut self, x: &[f32], in_side: usize) -> Vec<f32> {
+    pub fn forward(&mut self, x: &[f32], in_side: usize, be: &dyn ComputeBackend) -> Vec<f32> {
         let out_side = self.out_side(in_side);
         self.cols = self.im2col(x, in_side);
         self.in_side = in_side;
-        let y = matmul(&self.weight, Trans::No, &self.cols, Trans::No);
+        let y = be.matmul(&self.weight, Trans::No, &self.cols, Trans::No);
         let mut out = vec![0.0f32; self.out_ch * out_side * out_side];
         for ch in 0..self.out_ch {
             for p in 0..out_side * out_side {
@@ -81,13 +85,13 @@ impl Conv2d {
 
     /// Backward: given `dy` (out_ch · out²), updates weights with SGD and
     /// returns `dx` (in_ch · side²).
-    pub fn backward(&mut self, dy: &[f32], lr: f32) -> Vec<f32> {
+    pub fn backward(&mut self, dy: &[f32], lr: f32, be: &dyn ComputeBackend) -> Vec<f32> {
         let out_side = self.out_side(self.in_side);
         let np = out_side * out_side;
         let dy_m = Matrix::from_fn(self.out_ch, np, |ch, p| dy[ch * np + p]);
         // dW = dY · colsᵀ ; dcols = Wᵀ · dY
-        let dw = matmul(&dy_m, Trans::No, &self.cols, Trans::Yes);
-        let dcols = matmul(&self.weight, Trans::Yes, &dy_m, Trans::No);
+        let dw = be.matmul(&dy_m, Trans::No, &self.cols, Trans::Yes);
+        let dcols = be.matmul(&self.weight, Trans::Yes, &dy_m, Trans::No);
         // col2im scatter
         let in_side = self.in_side;
         let mut dx = vec![0.0f32; self.in_ch * in_side * in_side];
@@ -142,17 +146,17 @@ impl Dense {
         }
     }
 
-    pub fn forward(&mut self, x: &[f32]) -> Vec<f32> {
+    pub fn forward(&mut self, x: &[f32], be: &dyn ComputeBackend) -> Vec<f32> {
         self.input = x.to_vec();
-        let mut y = crate::linalg::matvec(&self.weight, Trans::No, x);
+        let mut y = be.matvec(&self.weight, Trans::No, x);
         for (o, b) in y.iter_mut().zip(&self.bias) {
             *o += b;
         }
         y
     }
 
-    pub fn backward(&mut self, dy: &[f32], lr: f32) -> Vec<f32> {
-        let dx = crate::linalg::matvec(&self.weight, Trans::Yes, dy);
+    pub fn backward(&mut self, dy: &[f32], lr: f32, be: &dyn ComputeBackend) -> Vec<f32> {
+        let dx = be.matvec(&self.weight, Trans::Yes, dy);
         for (i, &g) in dy.iter().enumerate() {
             self.bias[i] -= lr * g;
             for (j, &xj) in self.input.iter().enumerate() {
@@ -243,6 +247,9 @@ pub struct Network {
     pub fc1: Dense,
     pub fc2: Dense,
     pub side: usize,
+    /// Kernel dispatch for every layer; serial by default (the Table-I
+    /// geometry is small), swappable via [`Network::with_backend`].
+    backend: BackendHandle,
 }
 
 impl Network {
@@ -273,40 +280,51 @@ impl Network {
             fc1,
             fc2,
             side,
+            backend: serial_backend(),
         }
+    }
+
+    /// Swaps the kernel dispatch backend for every layer.
+    pub fn with_backend(mut self, backend: BackendHandle) -> Self {
+        self.backend = backend;
+        self
     }
 
     /// Forward to logits.
     pub fn forward(&mut self, img: &[f32]) -> Vec<f32> {
+        let be = self.backend.clone();
+        let be: &dyn ComputeBackend = &*be;
         let side = self.side;
         let s1 = side - 2;
-        let x = self.conv1.forward(img, side);
+        let x = self.conv1.forward(img, side, be);
         let x = self.relu1.forward(&x);
         let x = self.pool1.forward(&x, self.conv1.out_ch, s1);
         let s1p = s1 / 2;
-        let x = self.conv2.forward(&x, s1p);
+        let x = self.conv2.forward(&x, s1p, be);
         let x = self.relu2.forward(&x);
         let s2 = s1p - 2;
         let x = self.pool2.forward(&x, self.conv2.out_ch, s2);
-        let x = self.fc1.forward(&x);
+        let x = self.fc1.forward(&x, be);
         let x = self.relu3.forward(&x);
-        self.fc2.forward(&x)
+        self.fc2.forward(&x, be)
     }
 
     /// One SGD step on (img, label) with softmax cross-entropy.
     /// Returns the loss.
     pub fn train_step(&mut self, img: &[f32], label: usize, lr: f32) -> f32 {
         let logits = self.forward(img);
+        let be = self.backend.clone();
+        let be: &dyn ComputeBackend = &*be;
         let (loss, mut grad) = softmax_xent(&logits, label);
-        grad = self.fc2.backward(&grad, lr);
+        grad = self.fc2.backward(&grad, lr, be);
         grad = self.relu3.backward(&grad);
-        grad = self.fc1.backward(&grad, lr);
+        grad = self.fc1.backward(&grad, lr, be);
         grad = self.pool2.backward(&grad);
         grad = self.relu2.backward(&grad);
-        grad = self.conv2.backward(&grad, lr);
+        grad = self.conv2.backward(&grad, lr, be);
         grad = self.pool1.backward(&grad);
         grad = self.relu1.backward(&grad);
-        let _ = self.conv1.backward(&grad, lr);
+        let _ = self.conv1.backward(&grad, lr, be);
         loss
     }
 
@@ -339,6 +357,7 @@ pub fn softmax_xent(logits: &[f32], label: usize) -> (f32, Vec<f32>) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::backend::SerialBackend;
 
     #[test]
     fn conv_identity_kernel_preserves_center() {
@@ -349,7 +368,7 @@ mod tests {
             conv.weight.set(0, j, if j == 4 { 1.0 } else { 0.0 });
         }
         let img: Vec<f32> = (0..36).map(|i| i as f32).collect(); // 6×6
-        let out = conv.forward(&img, 6);
+        let out = conv.forward(&img, 6, &SerialBackend);
         // out[p] = center pixel of field = img[(oy+1)*6 + ox+1]
         assert_eq!(out.len(), 16);
         assert_eq!(out[0], img[7]);
@@ -392,11 +411,11 @@ mod tests {
         let mut d = Dense::new(4, 2, &mut rng);
         let x = vec![0.5, -1.0, 0.25, 2.0];
         for _ in 0..50 {
-            let y = d.forward(&x);
+            let y = d.forward(&x, &SerialBackend);
             let (_, g) = softmax_xent(&y, 0);
-            d.backward(&g, 0.1);
+            d.backward(&g, 0.1, &SerialBackend);
         }
-        let y = d.forward(&x);
+        let y = d.forward(&x, &SerialBackend);
         assert!(y[0] > y[1], "did not learn: {y:?}");
     }
 
@@ -407,16 +426,16 @@ mod tests {
         let img: Vec<f32> = (0..25).map(|i| (i % 5) as f32 / 5.0).collect();
         // learn to make channel 0 output sum big, channel 1 small
         for _ in 0..60 {
-            let out = conv.forward(&img, 5);
+            let out = conv.forward(&img, 5, &SerialBackend);
             let np = 9;
             let mut dy = vec![0.0f32; 2 * np];
             for p in 0..np {
                 dy[p] = -1.0; // increase ch0
                 dy[np + p] = 1.0; // decrease ch1
             }
-            conv.backward(&dy, 0.01);
+            conv.backward(&dy, 0.01, &SerialBackend);
         }
-        let out = conv.forward(&img, 5);
+        let out = conv.forward(&img, 5, &SerialBackend);
         let s0: f32 = out[..9].iter().sum();
         let s1: f32 = out[9..].iter().sum();
         assert!(s0 > s1, "s0={s0} s1={s1}");

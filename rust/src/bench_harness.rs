@@ -74,6 +74,22 @@ impl Measurement {
         self.extra.push((key.to_string(), value));
         self
     }
+
+    /// Tags the worker-thread count — the sweep axis of the
+    /// `BENCH_gemm_mttkrp` kernel-throughput report.
+    pub fn with_threads(self, threads: usize) -> Self {
+        self.with_extra("threads", threads as f64)
+    }
+}
+
+/// Throughput in GFLOP/s for `flops` floating-point operations done in
+/// `seconds` (the standard `2·m·n·k` GEMM convention is the caller's job).
+pub fn gflops(flops: f64, seconds: f64) -> f64 {
+    if seconds <= 0.0 {
+        f64::INFINITY
+    } else {
+        flops / seconds / 1e9
+    }
 }
 
 /// A table of measurements that prints like the paper's figures and
@@ -141,6 +157,14 @@ impl Report {
     /// Writes JSON rows under `bench_results/<id>.json`.
     pub fn save(&self) -> std::io::Result<std::path::PathBuf> {
         std::fs::create_dir_all("bench_results")?;
+        let path = std::path::PathBuf::from(format!("bench_results/{}.json", self.id));
+        self.save_as(&path)?;
+        Ok(path)
+    }
+
+    /// Writes the JSON document to an explicit path (e.g. the tracked
+    /// `BENCH_gemm_mttkrp.json` throughput trajectory).
+    pub fn save_as(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
         let rows: Vec<Json> = self
             .rows
             .iter()
@@ -168,9 +192,7 @@ impl Report {
             ("title", Json::str(self.title.clone())),
             ("rows", Json::Arr(rows)),
         ]);
-        let path = std::path::PathBuf::from(format!("bench_results/{}.json", self.id));
-        std::fs::write(&path, doc.to_string_pretty())?;
-        Ok(path)
+        std::fs::write(path, doc.to_string_pretty())
     }
 
     /// Print + save, the standard bench-main tail.

@@ -6,52 +6,80 @@
 //! run with mixed-precision operands (§IV-B) — that is the code path the
 //! Pallas `ttm_chain` kernel replaces on the accelerator.
 
-use crate::linalg::{gemm, Matrix, Trans};
-use crate::mixed::{matmul_mixed, MixedPrecision};
+use crate::linalg::backend::{ComputeBackend, SerialBackend};
+use crate::linalg::{Matrix, Trans};
+use crate::mixed::{matmul_mixed_with, MixedPrecision};
 use crate::tensor::unfold::{refold_1, refold_2, refold_3, unfold_2, unfold_3};
 use crate::tensor::DenseTensor;
 
 /// Mode-1 tensor-times-matrix: `Y = X ×₁ U`, `U (L×I)`, result `L×J×K`.
 pub fn ttm_mode1(t: &DenseTensor, u: &Matrix, precision: MixedPrecision) -> DenseTensor {
+    ttm_mode1_with(t, u, precision, &SerialBackend)
+}
+
+/// [`ttm_mode1`] dispatching its GEMM through `backend`.
+pub fn ttm_mode1_with(
+    t: &DenseTensor,
+    u: &Matrix,
+    precision: MixedPrecision,
+    backend: &dyn ComputeBackend,
+) -> DenseTensor {
     let [i, j, k] = t.dims();
     assert_eq!(u.cols(), i, "ttm1: U cols {} != I {}", u.cols(), i);
     // X_(1) is the raw buffer: (I × J·K).
     let x1 = Matrix::from_vec(i, j * k, t.data().to_vec());
-    let y1 = mm(u, &x1, precision);
+    let y1 = mm(u, &x1, precision, backend);
     refold_1(&y1, [u.rows(), j, k])
 }
 
 /// Mode-2 TTM: `Y = X ×₂ V`, `V (M×J)`, result `I×M×K`.
 pub fn ttm_mode2(t: &DenseTensor, v: &Matrix, precision: MixedPrecision) -> DenseTensor {
+    ttm_mode2_with(t, v, precision, &SerialBackend)
+}
+
+/// [`ttm_mode2`] dispatching its GEMM through `backend`.
+pub fn ttm_mode2_with(
+    t: &DenseTensor,
+    v: &Matrix,
+    precision: MixedPrecision,
+    backend: &dyn ComputeBackend,
+) -> DenseTensor {
     let [i, j, k] = t.dims();
     assert_eq!(v.cols(), j, "ttm2: V cols {} != J {}", v.cols(), j);
     let x2 = unfold_2(t); // J × (I·K)
-    let y2 = mm(v, &x2, precision); // M × (I·K)
+    let y2 = mm(v, &x2, precision, backend); // M × (I·K)
     refold_2(&y2, [i, v.rows(), k])
 }
 
 /// Mode-3 TTM: `Y = X ×₃ W`, `W (N×K)`, result `I×J×N`.
 pub fn ttm_mode3(t: &DenseTensor, w: &Matrix, precision: MixedPrecision) -> DenseTensor {
+    ttm_mode3_with(t, w, precision, &SerialBackend)
+}
+
+/// [`ttm_mode3`] dispatching its GEMM through `backend`.
+pub fn ttm_mode3_with(
+    t: &DenseTensor,
+    w: &Matrix,
+    precision: MixedPrecision,
+    backend: &dyn ComputeBackend,
+) -> DenseTensor {
     let [i, j, k] = t.dims();
     assert_eq!(w.cols(), k, "ttm3: W cols {} != K {}", w.cols(), k);
     let x3 = unfold_3(t); // K × (I·J)
-    let y3 = mm(w, &x3, precision); // N × (I·J)
+    let y3 = mm(w, &x3, precision, backend); // N × (I·J)
     refold_3(&y3, [i, j, w.rows()])
 }
 
 #[inline]
-fn mm(a: &Matrix, b: &Matrix, precision: MixedPrecision) -> Matrix {
+fn mm(a: &Matrix, b: &Matrix, precision: MixedPrecision, backend: &dyn ComputeBackend) -> Matrix {
     match precision {
-        MixedPrecision::Full => {
-            let mut out = Matrix::zeros(a.rows(), b.cols());
-            gemm(1.0, a, Trans::No, b, Trans::No, 0.0, &mut out);
-            out
-        }
-        p => matmul_mixed(a, b, p),
+        MixedPrecision::Full => backend.matmul(a, Trans::No, b, Trans::No),
+        p => matmul_mixed_with(a, b, p, backend),
     }
 }
 
-/// Full compression `Comp(X, U, V, W) = X ×₁U ×₂V ×₃W` (Eq. 3).
+/// Full compression `Comp(X, U, V, W) = X ×₁U ×₂V ×₃W` (Eq. 3) on the
+/// serial reference backend.
 ///
 /// Order: smallest intermediate first would be optimal in general; here we
 /// contract mode 1 first (free matricization), then 2, then 3 — for the
@@ -64,9 +92,24 @@ pub fn comp_dense(
     w: &Matrix,
     precision: MixedPrecision,
 ) -> DenseTensor {
-    let y1 = ttm_mode1(t, u, precision);
-    let y2 = ttm_mode2(&y1, v, precision);
-    ttm_mode3(&y2, w, precision)
+    comp_dense_with(t, u, v, w, precision, &SerialBackend)
+}
+
+/// [`comp_dense`] dispatching every GEMM of the TTM chain through
+/// `backend`.  The streaming compressor passes the serial reference here
+/// (parallelism lives at block granularity); standalone callers can pass a
+/// parallel backend to speed up a single large contraction.
+pub fn comp_dense_with(
+    t: &DenseTensor,
+    u: &Matrix,
+    v: &Matrix,
+    w: &Matrix,
+    precision: MixedPrecision,
+    backend: &dyn ComputeBackend,
+) -> DenseTensor {
+    let y1 = ttm_mode1_with(t, u, precision, backend);
+    let y2 = ttm_mode2_with(&y1, v, precision, backend);
+    ttm_mode3_with(&y2, w, precision, backend)
 }
 
 #[cfg(test)]

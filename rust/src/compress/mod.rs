@@ -16,7 +16,10 @@ pub mod maps;
 pub mod sparse_proj;
 pub mod stream;
 
-pub use comp::{comp_dense, ttm_mode1, ttm_mode2, ttm_mode3};
+pub use comp::{
+    comp_dense, comp_dense_with, ttm_mode1, ttm_mode1_with, ttm_mode2, ttm_mode2_with, ttm_mode3,
+    ttm_mode3_with,
+};
 pub use maps::{CompressionMaps, ReplicaMaps};
 pub use sparse_proj::SparseSignMatrix;
 pub use stream::{

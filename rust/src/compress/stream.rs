@@ -13,11 +13,12 @@
 //! `runtime::XlaCompressor` (the AOT Pallas kernel) is the "GPU tensor
 //! cores" arm.
 
-use super::comp::comp_dense;
+use super::comp::comp_dense_with;
 use super::maps::ReplicaMaps;
-use crate::mixed::MixedPrecision;
+use crate::linalg::backend::{ComputeBackend, SerialBackend};
 use crate::linalg::Matrix;
-use crate::tensor::{BlockSpec3, DenseTensor, TensorSource};
+use crate::mixed::MixedPrecision;
+use crate::tensor::{BlockRange, BlockSpec3, DenseTensor, TensorSource};
 use crate::util::threadpool::ThreadPool;
 use std::sync::Mutex;
 
@@ -38,6 +39,10 @@ pub trait BlockCompressor: Sync {
 }
 
 /// Pure-rust blocked TTM chain with selectable precision.
+///
+/// Dispatches through the **serial** [`ComputeBackend`] reference: blocks
+/// are already fanned out over the worker pool, so the per-block chain
+/// must not nest another pool.
 pub struct RustCompressor {
     pub precision: MixedPrecision,
 }
@@ -50,7 +55,7 @@ impl BlockCompressor for RustCompressor {
         v_blk: &Matrix,
         w_blk: &Matrix,
     ) -> DenseTensor {
-        comp_dense(t, u_blk, v_blk, w_blk, self.precision)
+        comp_dense_with(t, u_blk, v_blk, w_blk, self.precision, &SerialBackend)
     }
 
     fn name(&self) -> &'static str {
@@ -76,7 +81,7 @@ pub fn compress_source(
 ) -> Vec<DenseTensor> {
     let [l, m, n] = maps.reduced;
     let p_count = maps.p_count();
-    let spec = BlockSpec3::new(maps.dims, block);
+    let blocks = block_grid(maps.dims, block);
 
     // One accumulator per replica, each behind its own mutex; workers lock a
     // replica only for the cheap (L·M·N) add, not during the GEMMs.
@@ -84,34 +89,35 @@ pub fn compress_source(
         .map(|_| Mutex::new(DenseTensor::zeros(l, m, n)))
         .collect();
 
-    pool.scope(|scope| {
-        for blk in spec.iter() {
-            let accs = &accs;
-            let src = src;
-            let maps = maps;
-            let compressor = compressor;
-            scope.spawn(move || {
-                let t = src.block(&blk);
-                for (p, rep) in maps.replicas.iter().enumerate() {
-                    // Column-slices of the compression matrices (cheap: we
-                    // transpose-slice via dedicated helper below).
-                    let u_blk = slice_cols(&rep.u, blk.i0, blk.i1);
-                    let v_blk = slice_cols(&rep.v, blk.j0, blk.j1);
-                    let w_blk = slice_cols(&rep.w, blk.k0, blk.k1);
-                    let contrib = compressor.compress_block(&t, &u_blk, &v_blk, &w_blk);
-                    let mut acc = accs[p].lock().unwrap();
-                    let acc_data = acc.data_mut();
-                    for (dst, &srcv) in acc_data.iter_mut().zip(contrib.data()) {
-                        *dst += srcv;
-                    }
+    pool.for_each_chunk(blocks.len(), 1, |range| {
+        for blk in &blocks[range] {
+            let t = src.block(blk);
+            for (p, rep) in maps.replicas.iter().enumerate() {
+                // Column-slices of the compression matrices (cheap: we
+                // transpose-slice via dedicated helper below).
+                let u_blk = slice_cols(&rep.u, blk.i0, blk.i1);
+                let v_blk = slice_cols(&rep.v, blk.j0, blk.j1);
+                let w_blk = slice_cols(&rep.w, blk.k0, blk.k1);
+                let contrib = compressor.compress_block(&t, &u_blk, &v_blk, &w_blk);
+                let mut acc = accs[p].lock().unwrap();
+                let acc_data = acc.data_mut();
+                for (dst, &srcv) in acc_data.iter_mut().zip(contrib.data()) {
+                    *dst += srcv;
                 }
-            });
+            }
         }
     });
 
     accs.into_iter()
         .map(|m| m.into_inner().unwrap())
         .collect()
+}
+
+/// Materializes the block grid once so the pool can chunk over indices
+/// ([`ThreadPool::for_each_chunk`]) instead of hand-rolling one spawn per
+/// block at every streaming call site.
+fn block_grid(dims: [usize; 3], block: [usize; 3]) -> Vec<BlockRange> {
+    BlockSpec3::new(dims, block).iter().collect()
 }
 
 /// `M[:, c0..c1]` — contiguous memcpy in column-major.
@@ -134,61 +140,61 @@ pub fn compress_source_batched(
     block: [usize; 3],
     pool: &ThreadPool,
 ) -> Vec<DenseTensor> {
-    use crate::linalg::{gemm, Trans};
+    use crate::linalg::Trans;
     let [l, m, n] = maps.reduced;
     let p_count = maps.p_count();
-    let spec = BlockSpec3::new(maps.dims, block);
+    let blocks = block_grid(maps.dims, block);
     let u_stack = maps.stacked_u(); // (P·L) × I
 
     let accs: Vec<Mutex<DenseTensor>> = (0..p_count)
         .map(|_| Mutex::new(DenseTensor::zeros(l, m, n)))
         .collect();
 
-    pool.scope(|scope| {
-        for blk in spec.iter() {
-            let accs = &accs;
-            let u_stack = &u_stack;
-            scope.spawn(move || {
-                let t = src.block(&blk);
-                let [di, dj, dk] = t.dims();
-                // One batched mode-1 GEMM for all replicas:
-                // X_(1) is a free view of the column-major block.
-                let u_blk = u_stack.slice_cols(blk.i0, blk.i1); // (P·L) × di
-                let x1 = Matrix::from_vec(di, dj * dk, t.data().to_vec());
-                let mut y1_all = Matrix::zeros(p_count * l, dj * dk);
-                gemm(1.0, &u_blk, Trans::No, &x1, Trans::No, 0.0, &mut y1_all);
-                // Per replica, unfold-free chain (§Perf): in column-major,
-                //   Y1 (l, dj, dk) viewed as (l·dj × dk) is contiguous →
-                //   mode-3 is ONE gemm against W_blkᵀ;
-                //   then each frontal slice of (l, dj, n) is a contiguous
-                //   (l × dj) matrix → mode-2 is n small gemms against V_blkᵀ.
-                for (p, rep) in maps.replicas.iter().enumerate() {
-                    let y1 = y1_all.slice_rows(p * l, (p + 1) * l); // l × dj·dk
-                    let v_blk = rep.v.slice_cols(blk.j0, blk.j1); // m × dj
-                    let w_blk = rep.w.slice_cols(blk.k0, blk.k1); // n × dk
-                    // mode 3: (l·dj × dk) @ (dk × n) → (l·dj × n)
-                    let y1_flat = Matrix::from_vec(l * dj, dk, y1.into_vec());
-                    let mut y13 = Matrix::zeros(l * dj, n);
-                    gemm(1.0, &y1_flat, Trans::No, &w_blk, Trans::Yes, 0.0, &mut y13);
-                    // mode 2: per output slice kn, (l × dj) @ (dj × m)
-                    let mut contrib = DenseTensor::zeros(l, m, n);
-                    for kn in 0..n {
-                        let slice = Matrix::from_vec(l, dj, y13.col(kn).to_vec());
-                        let mut out = Matrix::from_vec(
-                            l,
-                            m,
-                            contrib.data()[kn * l * m..(kn + 1) * l * m].to_vec(),
-                        );
-                        gemm(1.0, &slice, Trans::No, &v_blk, Trans::Yes, 0.0, &mut out);
-                        contrib.data_mut()[kn * l * m..(kn + 1) * l * m]
-                            .copy_from_slice(out.data());
-                    }
-                    let mut acc = accs[p].lock().unwrap();
-                    for (dst, &s) in acc.data_mut().iter_mut().zip(contrib.data()) {
+    // Per-block contractions dispatch through the serial reference backend:
+    // parallelism lives at block granularity (this chunked loop), so the
+    // inner chain must not nest another pool.
+    let be = SerialBackend;
+    pool.for_each_chunk(blocks.len(), 1, |range| {
+        for blk in &blocks[range] {
+            let t = src.block(blk);
+            let [di, dj, dk] = t.dims();
+            // One batched mode-1 GEMM for all replicas:
+            // X_(1) is a free view of the column-major block.
+            let u_blk = u_stack.slice_cols(blk.i0, blk.i1); // (P·L) × di
+            let x1 = Matrix::from_vec(di, dj * dk, t.data().to_vec());
+            let mut y1_all = Matrix::zeros(p_count * l, dj * dk);
+            be.gemm(1.0, &u_blk, Trans::No, &x1, Trans::No, 0.0, &mut y1_all);
+            // Per replica, unfold-free chain (§Perf): in column-major,
+            //   Y1 (l, dj, dk) viewed as (l·dj × dk) is contiguous →
+            //   mode-3 is ONE gemm against W_blkᵀ;
+            //   then each frontal slice of (l, dj, n) is a contiguous
+            //   (l × dj) matrix → mode-2 is a batched GEMM of n small
+            //   slices against V_blkᵀ (ComputeBackend::gemm_batch).
+            for (p, rep) in maps.replicas.iter().enumerate() {
+                let y1 = y1_all.slice_rows(p * l, (p + 1) * l); // l × dj·dk
+                let v_blk = rep.v.slice_cols(blk.j0, blk.j1); // m × dj
+                let w_blk = rep.w.slice_cols(blk.k0, blk.k1); // n × dk
+                // mode 3: (l·dj × dk) @ (dk × n) → (l·dj × n)
+                let y1_flat = Matrix::from_vec(l * dj, dk, y1.into_vec());
+                let mut y13 = Matrix::zeros(l * dj, n);
+                be.gemm(1.0, &y1_flat, Trans::No, &w_blk, Trans::Yes, 0.0, &mut y13);
+                // mode 2, batched over output slices kn: (l × dj) @ (dj × m)
+                let slices: Vec<Matrix> = (0..n)
+                    .map(|kn| Matrix::from_vec(l, dj, y13.col(kn).to_vec()))
+                    .collect();
+                let mut outs: Vec<Matrix> = (0..n).map(|_| Matrix::zeros(l, m)).collect();
+                be.gemm_batch(1.0, &slices, Trans::No, &v_blk, Trans::Yes, 0.0, &mut outs);
+                let mut acc = accs[p].lock().unwrap();
+                let acc_data = acc.data_mut();
+                for (kn, out) in outs.iter().enumerate() {
+                    for (dst, &s) in acc_data[kn * l * m..(kn + 1) * l * m]
+                        .iter_mut()
+                        .zip(out.data())
+                    {
                         *dst += s;
                     }
                 }
-            });
+            }
         }
     });
 
@@ -215,30 +221,30 @@ pub fn compress_source_sparse(
     assert_eq!(v.cols(), dims[1]);
     assert_eq!(w.cols(), dims[2]);
     let (al, bm, gn) = (u.rows(), v.rows(), w.rows());
-    let spec = BlockSpec3::new(dims, block);
+    let blocks = block_grid(dims, block);
     let acc = Mutex::new(DenseTensor::zeros(al, bm, gn));
 
-    pool.scope(|scope| {
-        for blk in spec.iter() {
-            let acc = &acc;
-            scope.spawn(move || {
-                let t = src.block(&blk);
-                let [di, dj, dk] = t.dims();
-                // mode 1: sparse U slice (αL×di) · T_(1) (di × dj·dk)
-                let u_blk = u.slice_cols(blk.i0, blk.i1);
-                let t1 = Matrix::from_vec(di, dj * dk, t.data().to_vec());
-                let y1 = refold_1(&u_blk.mul_dense(&t1), [al, dj, dk]);
-                // mode 2
-                let v_blk = v.slice_cols(blk.j0, blk.j1);
-                let y2 = refold_2(&v_blk.mul_dense(&unfold_2(&y1)), [al, bm, dk]);
-                // mode 3
-                let w_blk = w.slice_cols(blk.k0, blk.k1);
-                let y3 = refold_3(&w_blk.mul_dense(&unfold_3(&y2)), [al, bm, gn]);
-                let mut a = acc.lock().unwrap();
-                for (dst, &s) in a.data_mut().iter_mut().zip(y3.data()) {
-                    *dst += s;
-                }
-            });
+    pool.for_each_chunk(blocks.len(), 1, |range| {
+        for blk in &blocks[range] {
+            let t = src.block(blk);
+            let [di, dj, dk] = t.dims();
+            // mode 1: sparse U slice (αL×di) · T_(1) (di × dj·dk).  The
+            // ±1-sparse products are O(nnz) scalar kernels and stay
+            // outside ComputeBackend deliberately — there is no dense
+            // contraction here to dispatch.
+            let u_blk = u.slice_cols(blk.i0, blk.i1);
+            let t1 = Matrix::from_vec(di, dj * dk, t.data().to_vec());
+            let y1 = refold_1(&u_blk.mul_dense(&t1), [al, dj, dk]);
+            // mode 2
+            let v_blk = v.slice_cols(blk.j0, blk.j1);
+            let y2 = refold_2(&v_blk.mul_dense(&unfold_2(&y1)), [al, bm, dk]);
+            // mode 3
+            let w_blk = w.slice_cols(blk.k0, blk.k1);
+            let y3 = refold_3(&w_blk.mul_dense(&unfold_3(&y2)), [al, bm, gn]);
+            let mut a = acc.lock().unwrap();
+            for (dst, &s) in a.data_mut().iter_mut().zip(y3.data()) {
+                *dst += s;
+            }
         }
     });
     acc.into_inner().unwrap()
@@ -247,6 +253,7 @@ pub fn compress_source_sparse(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compress::comp::comp_dense;
     use crate::tensor::{InMemorySource, LowRankGenerator};
     use crate::util::rng::Xoshiro256;
 

@@ -12,9 +12,18 @@
 //!                     └── match/rescale (Π,Σ) ──▶ (A, B, C)
 //! ```
 //!
-//! The proxy decomposition backend is pluggable ([`ProxyDecomposer`]): the
-//! in-crate rust ALS below, or `runtime::XlaAlsDecomposer` running the AOT
-//! JAX/Pallas artifact.
+//! The coordinator resolves one
+//! [`ComputeBackend`](crate::linalg::ComputeBackend) handle from
+//! [`super::config::Backend`] (serial / parallel CPU /
+//! `runtime::XlaBackend`) and consults its stage hooks to pick the
+//! compression and proxy-ALS engines; the stage-level traits
+//! ([`ProxyDecomposer`], [`BlockCompressor`]) remain as override points —
+//! the XLA backend exposes its fused AOT artifacts through exactly those
+//! hooks.  On the CPU arms the streaming stages parallelize at block /
+//! replica granularity over the worker pool and deliberately run the
+//! serial kernel reference inside each job; the parallel kernels serve
+//! top-level single contractions (`cp::als_decompose_with`, the apps, the
+//! `gemm_mttkrp` bench).
 
 use super::config::{Backend, PipelineConfig};
 use super::metrics::Metrics;
@@ -27,12 +36,14 @@ use crate::compress::{
     compress_source, compress_source_sparse, BlockCompressor, ReplicaMaps, RustCompressor,
     SparseSignMatrix,
 };
-use crate::cp::{als_decompose, sampled_mse, AlsOptions, CpModel};
+use crate::cp::{als_decompose_with, sampled_mse, AlsOptions, CpModel};
+use crate::linalg::backend::{cpu_backend, serial_backend, BackendHandle, SerialBackend};
 use crate::linalg::ista::IstaOptions;
 use crate::mixed::MixedPrecision;
 use crate::tensor::{DenseTensor, TensorSource};
 use crate::util::threadpool::ThreadPool;
 use anyhow::Result;
+use std::sync::Arc;
 
 /// Pluggable proxy-tensor CP decomposition backend.
 /// Returns the model plus its final relative fit (`1 − ‖Y−Ŷ‖/‖Y‖`) so the
@@ -43,15 +54,36 @@ pub trait ProxyDecomposer: Sync {
     fn name(&self) -> &'static str;
 }
 
-/// In-crate rust ALS backend.
+/// In-crate rust ALS backend.  Dispatches its MTTKRP/Gram kernels through
+/// a [`ComputeBackend`](crate::linalg::ComputeBackend) handle — the serial
+/// reference by default, since the coordinator already parallelizes across
+/// replicas.
 pub struct RustAlsDecomposer {
     pub iters: usize,
     pub tol: f64,
+    backend: BackendHandle,
+}
+
+impl RustAlsDecomposer {
+    pub fn new(iters: usize, tol: f64) -> Self {
+        Self {
+            iters,
+            tol,
+            backend: serial_backend(),
+        }
+    }
+
+    /// Overrides the kernel backend (e.g. a parallel one when replicas are
+    /// decomposed one at a time).
+    pub fn with_backend(mut self, backend: BackendHandle) -> Self {
+        self.backend = backend;
+        self
+    }
 }
 
 impl ProxyDecomposer for RustAlsDecomposer {
     fn decompose(&self, proxy: &DenseTensor, rank: usize, seed: u64) -> Result<(CpModel, f64)> {
-        let (model, trace) = als_decompose(
+        let (model, trace) = als_decompose_with(
             proxy,
             &AlsOptions {
                 rank,
@@ -60,6 +92,7 @@ impl ProxyDecomposer for RustAlsDecomposer {
                 seed,
                 ..Default::default()
             },
+            &*self.backend,
         )?;
         let fit = trace.fits.last().copied().unwrap_or(f64::NEG_INFINITY);
         Ok((model, fit))
@@ -102,10 +135,16 @@ pub struct PipelineResult {
 pub struct Pipeline {
     cfg: PipelineConfig,
     pub metrics: Metrics,
-    /// Optional external decomposer (e.g. the XLA runtime backend);
-    /// defaults to rust ALS per `cfg.backend`.
+    /// The compute backend every stage dispatches through; resolved from
+    /// `cfg.backend` on the first run unless injected via
+    /// [`Pipeline::with_compute`].
+    compute: Option<BackendHandle>,
+    /// Optional stage override (tests / custom engines); takes precedence
+    /// over the compute backend's [`proxy_decomposer`]
+    /// (crate::linalg::ComputeBackend::proxy_decomposer) hook.
     decomposer: Option<Box<dyn ProxyDecomposer>>,
-    /// Optional external block compressor (e.g. the XLA kernel backend).
+    /// Optional stage override; takes precedence over the compute
+    /// backend's `block_compressor` hook.
     compressor: Option<Box<dyn BlockCompressor>>,
 }
 
@@ -114,18 +153,27 @@ impl Pipeline {
         Self {
             cfg,
             metrics: Metrics::new(),
+            compute: None,
             decomposer: None,
             compressor: None,
         }
     }
 
-    /// Installs a custom proxy decomposer (the XLA backend does this).
+    /// Installs the compute backend explicitly.  The usual entry point for
+    /// the XLA arm: `pipe.with_compute(Arc::new(XlaBackend::from_config(
+    /// pipe.config())?))`.
+    pub fn with_compute(mut self, backend: BackendHandle) -> Self {
+        self.compute = Some(backend);
+        self
+    }
+
+    /// Installs a custom proxy decomposer (stage-level override).
     pub fn with_decomposer(mut self, d: Box<dyn ProxyDecomposer>) -> Self {
         self.decomposer = Some(d);
         self
     }
 
-    /// Installs a custom block compressor (the XLA backend does this).
+    /// Installs a custom block compressor (stage-level override).
     pub fn with_compressor(mut self, c: Box<dyn BlockCompressor>) -> Self {
         self.compressor = Some(c);
         self
@@ -133,6 +181,43 @@ impl Pipeline {
 
     pub fn config(&self) -> &PipelineConfig {
         &self.cfg
+    }
+
+    /// Resolves the [`BackendHandle`] for this run: an injected handle
+    /// wins; otherwise `cfg.backend` maps to its constructor —
+    /// `RustSequential → SerialBackend`, `RustParallel →
+    /// CpuParallelBackend`, `Xla → runtime::XlaBackend::from_config` (which
+    /// needs AOT artifacts and fails loudly without them).  Legacy callers
+    /// that injected *any* XLA stage via [`Pipeline::with_compressor`] /
+    /// [`Pipeline::with_decomposer`] keep working: the CPU backend backs
+    /// the kernels and the non-injected stage falls back to its rust
+    /// default, exactly as before this layer existed.
+    ///
+    /// Note on the CPU arms: the streaming stages parallelize at *block /
+    /// replica* granularity over the worker pool and deliberately run the
+    /// serial kernel reference inside each job (see `compress::stream`,
+    /// `refine`); the handle is what stage hooks and top-level single
+    /// contractions dispatch through.
+    fn resolve_compute(&mut self) -> Result<BackendHandle> {
+        if let Some(b) = &self.compute {
+            return Ok(b.clone());
+        }
+        let resolved: BackendHandle = match self.cfg.backend {
+            Backend::RustSequential => serial_backend(),
+            Backend::RustParallel => cpu_backend(self.cfg.threads),
+            Backend::Xla => {
+                if self.compressor.is_some() || self.decomposer.is_some() {
+                    cpu_backend(self.cfg.threads)
+                } else {
+                    Arc::new(crate::runtime::XlaBackend::from_config(&self.cfg)?)
+                }
+            }
+        };
+        // Cache so repeated runs reuse one handle — for Backend::Xla this
+        // avoids reloading the PJRT runtime (and recompiling every
+        // artifact) on each run() call.
+        self.compute = Some(resolved.clone());
+        Ok(resolved)
     }
 
     fn pool(&self) -> ThreadPool {
@@ -155,18 +240,22 @@ impl Pipeline {
     /// Runs Alg. 2 on `src`.
     pub fn run(&mut self, src: &dyn TensorSource) -> Result<PipelineResult> {
         self.cfg.validate()?;
+        let compute = self.resolve_compute()?;
         let dims = src.dims();
         let plan = MemoryPlanner::plan(&self.cfg, dims)?;
         log::info!(
-            "pipeline: dims={dims:?} reduced={:?} P={} block={:?} backend={:?}",
+            "pipeline: dims={dims:?} reduced={:?} P={} block={:?} backend={:?} compute={} \
+             (streaming stages: block-parallel over {} thread(s), serial kernels per job)",
             self.cfg.reduced,
             plan.replicas,
             plan.block,
-            self.cfg.backend
+            self.cfg.backend,
+            compute.name(),
+            self.pool().size()
         );
 
         if self.cfg.sensing.is_some() {
-            return self.run_sensing(src, plan);
+            return self.run_sensing(src, plan, &compute);
         }
 
         let pool = self.pool();
@@ -181,9 +270,11 @@ impl Pipeline {
             self.cfg.seed,
         );
         let default_comp;
-        let compressor: &dyn BlockCompressor = match &self.compressor {
-            Some(c) => c.as_ref(),
-            None => {
+        let compressor: &dyn BlockCompressor = match (&self.compressor, compute.block_compressor())
+        {
+            (Some(c), _) => c.as_ref(),
+            (None, Some(c)) => c,
+            (None, None) => {
                 default_comp = self.default_compressor();
                 &default_comp
             }
@@ -204,7 +295,9 @@ impl Pipeline {
                 // Fast path (§Perf): plain-f32 rust compression uses the
                 // replica-batched, unfold-free chain; custom backends (XLA)
                 // and mixed precision go through the trait.
-                let use_batched = self.compressor.is_none() && !self.cfg.mixed_precision;
+                let use_batched = self.compressor.is_none()
+                    && compute.block_compressor().is_none()
+                    && !self.cfg.mixed_precision;
                 let p = self.metrics.time("compress", || {
                     if use_batched {
                         crate::compress::compress_source_batched(src, &maps, plan.block, &pool)
@@ -222,7 +315,7 @@ impl Pipeline {
 
         // ── Stage 2: proxy decomposition (Alg. 2 lines 3–4) ──
         let models = self.metrics.time("decompose", || {
-            self.decompose_proxies(&proxies, &pool)
+            self.decompose_proxies(&proxies, &pool, &compute)
         })?;
 
         // ── Stage 3: anchor normalization + Hungarian alignment (5–7) ──
@@ -303,7 +396,12 @@ impl Pipeline {
     }
 
     /// §IV-D compressed-sensing two-stage variant.
-    fn run_sensing(&mut self, src: &dyn TensorSource, plan: MemoryPlan) -> Result<PipelineResult> {
+    fn run_sensing(
+        &mut self,
+        src: &dyn TensorSource,
+        plan: MemoryPlan,
+        compute: &BackendHandle,
+    ) -> Result<PipelineResult> {
         let sc = self.cfg.sensing.unwrap();
         let dims = src.dims();
         let [l, m, n] = self.cfg.reduced;
@@ -338,7 +436,7 @@ impl Pipeline {
             compress_source(&z_src, &maps2, [al, bm, gn], &default_comp, &pool)
         });
         let models = self.metrics.time("decompose", || {
-            self.decompose_proxies(&proxies, &pool)
+            self.decompose_proxies(&proxies, &pool, compute)
         })?;
         let min_keep =
             MemoryPlanner::min_replicas_anchored([al, bm, gn], self.cfg.reduced, anchor);
@@ -386,20 +484,31 @@ impl Pipeline {
         &self,
         proxies: &[DenseTensor],
         pool: &ThreadPool,
+        compute: &BackendHandle,
     ) -> Result<Vec<(usize, CpModel)>> {
         let rank = self.cfg.rank;
         let seed = self.cfg.seed;
         let default_dec;
-        let decomposer: &dyn ProxyDecomposer = match &self.decomposer {
-            Some(d) => d.as_ref(),
-            None => {
-                default_dec = RustAlsDecomposer {
-                    iters: self.cfg.als_iters,
-                    tol: self.cfg.als_tol,
-                };
-                &default_dec
-            }
-        };
+        let decomposer: &dyn ProxyDecomposer =
+            match (&self.decomposer, compute.proxy_decomposer()) {
+                (Some(d), _) => d.as_ref(),
+                (None, Some(d)) => d,
+                (None, None) => {
+                    // Replicas are decomposed in parallel across the pool,
+                    // so each ALS normally runs on the serial kernel
+                    // reference; with a single proxy the pool cannot help,
+                    // so that lone ALS gets the resolved kernel backend
+                    // (parallel on the RustParallel arm) instead.
+                    let kernel: BackendHandle = if proxies.len() <= 1 {
+                        compute.clone()
+                    } else {
+                        Arc::new(SerialBackend)
+                    };
+                    default_dec = RustAlsDecomposer::new(self.cfg.als_iters, self.cfg.als_tol)
+                        .with_backend(kernel);
+                    &default_dec
+                }
+            };
         let results = pool.map_indexed(proxies.len(), |p| {
             let mut best: Option<(CpModel, f64)> = None;
             for attempt in 0..MAX_ATTEMPTS {

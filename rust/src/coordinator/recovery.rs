@@ -297,7 +297,11 @@ pub fn sensing_recover_mode(
     // so recovery is invariant to the column's unknown Σ scale.
     for col in 0..tilde_compressed.cols() {
         let rhs = Matrix::from_fn(tilde_compressed.rows(), 1, |r, _| tilde_compressed.get(r, col));
-        let atb = crate::linalg::matmul(&u_dense, crate::linalg::Trans::Yes, &rhs, crate::linalg::Trans::No);
+        let atb = {
+            use crate::linalg::backend::{ComputeBackend, SerialBackend};
+            use crate::linalg::Trans;
+            SerialBackend.matmul(&u_dense, Trans::Yes, &rhs, Trans::No)
+        };
         let lam_max = atb.max_abs();
         if lam_max == 0.0 {
             continue;

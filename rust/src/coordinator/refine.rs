@@ -14,15 +14,21 @@
 //! the compressed pipeline provides.
 
 use crate::cp::CpModel;
-use crate::linalg::products::{hadamard, khatri_rao};
-use crate::linalg::{matmul, ridge_solve, Matrix, Trans};
+use crate::linalg::backend::{ComputeBackend, SerialBackend};
+use crate::linalg::products::hadamard;
+use crate::linalg::{ridge_solve, Matrix};
 use crate::tensor::unfold::{unfold_2, unfold_3};
-use crate::tensor::{BlockSpec3, TensorSource};
+use crate::tensor::{BlockRange, BlockSpec3, TensorSource};
 use crate::util::threadpool::ThreadPool;
 use anyhow::Result;
 use std::sync::Mutex;
 
 /// Streams one mode's MTTKRP `X_(mode) · KR` over the block grid.
+///
+/// Per-block contractions dispatch through the serial [`ComputeBackend`]
+/// reference — parallelism lives at block granularity via
+/// [`ThreadPool::for_each_chunk`], so the inner kernel must not nest
+/// another pool.
 fn streaming_mttkrp(
     src: &dyn TensorSource,
     model: &CpModel,
@@ -33,44 +39,32 @@ fn streaming_mttkrp(
     let dims = src.dims();
     let r = model.rank();
     let out_rows = dims[mode - 1];
-    let spec = BlockSpec3::new(dims, block);
+    let blocks: Vec<BlockRange> = BlockSpec3::new(dims, block).iter().collect();
     let acc = Mutex::new(Matrix::zeros(out_rows, r));
+    let be = SerialBackend;
 
-    pool.scope(|scope| {
-        for blk in spec.iter() {
-            let acc = &acc;
-            let model = &model;
-            scope.spawn(move || {
-                let t = src.block(&blk);
-                let [di, dj, dk] = t.dims();
-                let a_blk = model.a.slice_rows(blk.i0, blk.i1);
-                let b_blk = model.b.slice_rows(blk.j0, blk.j1);
-                let c_blk = model.c.slice_rows(blk.k0, blk.k1);
-                let (part, off, rows) = match mode {
-                    1 => {
-                        let x1 = Matrix::from_vec(di, dj * dk, t.data().to_vec());
-                        let kr = khatri_rao(&c_blk, &b_blk);
-                        (matmul(&x1, Trans::No, &kr, Trans::No), blk.i0, di)
-                    }
-                    2 => {
-                        let x2 = unfold_2(&t);
-                        let kr = khatri_rao(&c_blk, &a_blk);
-                        (matmul(&x2, Trans::No, &kr, Trans::No), blk.j0, dj)
-                    }
-                    3 => {
-                        let x3 = unfold_3(&t);
-                        let kr = khatri_rao(&b_blk, &a_blk);
-                        (matmul(&x3, Trans::No, &kr, Trans::No), blk.k0, dk)
-                    }
-                    _ => unreachable!(),
-                };
-                let mut g = acc.lock().unwrap();
-                for c in 0..r {
-                    for row in 0..rows {
-                        g.add_assign_at(off + row, c, part.get(row, c));
-                    }
+    pool.for_each_chunk(blocks.len(), 1, |range| {
+        for blk in &blocks[range] {
+            let t = src.block(blk);
+            let [di, dj, dk] = t.dims();
+            let a_blk = model.a.slice_rows(blk.i0, blk.i1);
+            let b_blk = model.b.slice_rows(blk.j0, blk.j1);
+            let c_blk = model.c.slice_rows(blk.k0, blk.k1);
+            let (part, off, rows) = match mode {
+                1 => {
+                    let x1 = Matrix::from_vec(di, dj * dk, t.data().to_vec());
+                    (be.mttkrp(1, &x1, &c_blk, &b_blk), blk.i0, di)
                 }
-            });
+                2 => (be.mttkrp(2, &unfold_2(&t), &c_blk, &a_blk), blk.j0, dj),
+                3 => (be.mttkrp(3, &unfold_3(&t), &b_blk, &a_blk), blk.k0, dk),
+                _ => unreachable!(),
+            };
+            let mut g = acc.lock().unwrap();
+            for c in 0..r {
+                for row in 0..rows {
+                    g.add_assign_at(off + row, c, part.get(row, c));
+                }
+            }
         }
     });
     acc.into_inner().unwrap()
@@ -85,12 +79,8 @@ pub fn refine(
     pool: &ThreadPool,
 ) -> Result<CpModel> {
     let ridge = 1e-8f32;
-    let gram = |x: &Matrix, y: &Matrix| {
-        hadamard(
-            &matmul(x, Trans::Yes, x, Trans::No),
-            &matmul(y, Trans::Yes, y, Trans::No),
-        )
-    };
+    let be = SerialBackend;
+    let gram = |x: &Matrix, y: &Matrix| hadamard(&be.gram(x), &be.gram(y));
     for _ in 0..sweeps {
         let m1 = streaming_mttkrp(src, &model, 1, block, pool);
         model.a = ridge_solve(&gram(&model.c, &model.b), &m1.transpose(), ridge)?.transpose();
@@ -105,6 +95,8 @@ pub fn refine(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::products::khatri_rao;
+    use crate::linalg::{matmul, Trans};
     use crate::tensor::LowRankGenerator;
     use crate::util::rng::Xoshiro256;
 

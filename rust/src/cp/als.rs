@@ -11,8 +11,9 @@
 
 use super::init::{hosvd_init, random_init, InitMethod};
 use super::model::CpModel;
-use crate::linalg::products::{hadamard, khatri_rao};
-use crate::linalg::{matmul, ridge_solve, Matrix, Trans};
+use crate::linalg::backend::{ComputeBackend, SerialBackend};
+use crate::linalg::products::hadamard;
+use crate::linalg::{ridge_solve, Matrix};
 use crate::tensor::unfold::{unfold_1, unfold_2, unfold_3};
 use crate::tensor::{DenseTensor, SparseTensor};
 use crate::util::rng::Xoshiro256;
@@ -53,8 +54,20 @@ pub struct AlsTrace {
     pub converged: bool,
 }
 
-/// Dense direct ALS (Alg. 1).  Returns the model and its trace.
+/// Dense direct ALS (Alg. 1) on the serial reference backend.
+/// Returns the model and its trace.
 pub fn als_decompose(t: &DenseTensor, opts: &AlsOptions) -> Result<(CpModel, AlsTrace)> {
+    als_decompose_with(t, opts, &SerialBackend)
+}
+
+/// Dense direct ALS dispatching every MTTKRP/Gram through `backend` —
+/// pass a [`crate::linalg::CpuParallelBackend`] to run the paper's
+/// "Parallel on CPU" baseline arm.
+pub fn als_decompose_with(
+    t: &DenseTensor,
+    opts: &AlsOptions,
+    backend: &dyn ComputeBackend,
+) -> Result<(CpModel, AlsTrace)> {
     let mut rng = Xoshiro256::seed_from_u64(opts.seed);
     let (a0, b0, c0) = match opts.init {
         InitMethod::Random => random_init(t.dims(), opts.rank, &mut rng),
@@ -71,13 +84,13 @@ pub fn als_decompose(t: &DenseTensor, opts: &AlsOptions) -> Result<(CpModel, Als
 
     for it in 0..opts.max_iters {
         // Mode 1: A ← X₁ (C⊙B) (CᵀC * BᵀB)⁻¹
-        model.a = mode_update(&x1, &model.c, &model.b, opts.ridge)?;
+        model.a = mode_update(&x1, 1, &model.c, &model.b, opts.ridge, backend)?;
         // Mode 2: B ← X₂ (C⊙A) (CᵀC * AᵀA)⁻¹
-        model.b = mode_update(&x2, &model.c, &model.a, opts.ridge)?;
+        model.b = mode_update(&x2, 2, &model.c, &model.a, opts.ridge, backend)?;
         // Mode 3: C ← X₃ (B⊙A) (BᵀB * AᵀA)⁻¹
-        model.c = mode_update(&x3, &model.b, &model.a, opts.ridge)?;
+        model.c = mode_update(&x3, 3, &model.b, &model.a, opts.ridge, backend)?;
 
-        let fit = fit_dense(norm_x, &x1, &model);
+        let fit = fit_dense(norm_x, &x1, &model, backend);
         trace.fits.push(fit);
         trace.iters = it + 1;
         if (fit - prev_fit).abs() < opts.tol && it > 0 {
@@ -90,14 +103,19 @@ pub fn als_decompose(t: &DenseTensor, opts: &AlsOptions) -> Result<(CpModel, Als
 }
 
 /// One ALS mode update given the mode unfolding and the other two factors
-/// (`slow ⊙ fast` ordering must match the unfolding convention).
-fn mode_update(x_n: &Matrix, slow: &Matrix, fast: &Matrix, ridge: f32) -> Result<Matrix> {
-    let kr = khatri_rao(slow, fast);
-    let mttkrp = matmul(x_n, Trans::No, &kr, Trans::No);
-    let gram = hadamard(
-        &matmul(slow, Trans::Yes, slow, Trans::No),
-        &matmul(fast, Trans::Yes, fast, Trans::No),
-    );
+/// (`slow ⊙ fast` ordering must match the unfolding convention).  The
+/// MTTKRP — the sweep's hot spot — and the factor Grams dispatch through
+/// the backend.
+fn mode_update(
+    x_n: &Matrix,
+    mode: usize,
+    slow: &Matrix,
+    fast: &Matrix,
+    ridge: f32,
+    backend: &dyn ComputeBackend,
+) -> Result<Matrix> {
+    let mttkrp = backend.mttkrp(mode, x_n, slow, fast);
+    let gram = hadamard(&backend.gram(slow), &backend.gram(fast));
     // Solve gram · Fᵀ = mttkrpᵀ  ⇒  F = mttkrp · gram⁻¹ (gram symmetric).
     let sol = ridge_solve(&gram, &mttkrp.transpose(), ridge)?;
     Ok(sol.transpose())
@@ -106,10 +124,9 @@ fn mode_update(x_n: &Matrix, slow: &Matrix, fast: &Matrix, ridge: f32) -> Result
 /// Relative fit `1 − ‖X − X̂‖/‖X‖` computed without forming `X̂`:
 /// `‖X − X̂‖² = ‖X‖² − 2⟨X₁, Â(C⊙B)ᵀ⟩ + ‖X̂‖²`, with the inner product as a
 /// trace of small matrices.
-fn fit_dense(norm_x: f64, x1: &Matrix, model: &CpModel) -> f64 {
-    let kr = khatri_rao(&model.c, &model.b);
-    // ⟨X₁, A·KRᵀ⟩ = Tr(Aᵀ·X₁·KR)
-    let x1kr = matmul(x1, Trans::No, &kr, Trans::No); // I×R
+fn fit_dense(norm_x: f64, x1: &Matrix, model: &CpModel, backend: &dyn ComputeBackend) -> f64 {
+    // ⟨X₁, A·KRᵀ⟩ = Tr(Aᵀ·X₁·KR) — the X₁·KR product is itself an MTTKRP.
+    let x1kr = backend.mttkrp(1, x1, &model.c, &model.b); // I×R
     let mut inner = 0.0f64;
     for r in 0..model.rank() {
         for i in 0..model.a.rows() {
@@ -120,8 +137,19 @@ fn fit_dense(norm_x: f64, x1: &Matrix, model: &CpModel) -> f64 {
     1.0 - resid_sq.sqrt() / norm_x.max(1e-300)
 }
 
-/// Sparse direct ALS: same sweep structure with sparse MTTKRP.
+/// Sparse direct ALS on the serial reference backend.
 pub fn als_decompose_sparse(t: &SparseTensor, opts: &AlsOptions) -> Result<(CpModel, AlsTrace)> {
+    als_decompose_sparse_with(t, opts, &SerialBackend)
+}
+
+/// Sparse direct ALS: same sweep structure with sparse MTTKRP (an
+/// `O(nnz·R)` scatter that stays outside [`ComputeBackend`]); the Gram
+/// solves dispatch through `backend`.
+pub fn als_decompose_sparse_with(
+    t: &SparseTensor,
+    opts: &AlsOptions,
+    backend: &dyn ComputeBackend,
+) -> Result<(CpModel, AlsTrace)> {
     let mut rng = Xoshiro256::seed_from_u64(opts.seed);
     let (a0, b0, c0) = random_init(t.dims(), opts.rank, &mut rng);
     let norm_x = t.frobenius_norm();
@@ -132,11 +160,11 @@ pub fn als_decompose_sparse(t: &SparseTensor, opts: &AlsOptions) -> Result<(CpMo
 
     for it in 0..opts.max_iters {
         let m1 = t.mttkrp(1, &model.b, &model.c);
-        model.a = gram_solve(&m1, &model.c, &model.b, opts.ridge)?;
+        model.a = gram_solve(&m1, &model.c, &model.b, opts.ridge, backend)?;
         let m2 = t.mttkrp(2, &model.a, &model.c);
-        model.b = gram_solve(&m2, &model.c, &model.a, opts.ridge)?;
+        model.b = gram_solve(&m2, &model.c, &model.a, opts.ridge, backend)?;
         let m3 = t.mttkrp(3, &model.a, &model.b);
-        model.c = gram_solve(&m3, &model.b, &model.a, opts.ridge)?;
+        model.c = gram_solve(&m3, &model.b, &model.a, opts.ridge, backend)?;
 
         let resid_sq = t.residual_sq(&model.a, &model.b, &model.c);
         let fit = 1.0 - resid_sq.sqrt() / norm_x.max(1e-300);
@@ -151,11 +179,14 @@ pub fn als_decompose_sparse(t: &SparseTensor, opts: &AlsOptions) -> Result<(CpMo
     Ok((model, trace))
 }
 
-fn gram_solve(mttkrp: &Matrix, g1: &Matrix, g2: &Matrix, ridge: f32) -> Result<Matrix> {
-    let gram = hadamard(
-        &matmul(g1, Trans::Yes, g1, Trans::No),
-        &matmul(g2, Trans::Yes, g2, Trans::No),
-    );
+fn gram_solve(
+    mttkrp: &Matrix,
+    g1: &Matrix,
+    g2: &Matrix,
+    ridge: f32,
+    backend: &dyn ComputeBackend,
+) -> Result<Matrix> {
+    let gram = hadamard(&backend.gram(g1), &backend.gram(g2));
     let sol = ridge_solve(&gram, &mttkrp.transpose(), ridge)?;
     Ok(sol.transpose())
 }
@@ -274,6 +305,23 @@ mod tests {
         .unwrap();
         let err = model.to_tensor().rel_error(&dense);
         assert!(err < 1e-2, "err {err}, fit {:?}", trace.fits.last());
+    }
+
+    #[test]
+    fn parallel_backend_reaches_same_solution() {
+        use crate::linalg::CpuParallelBackend;
+        let (t, _) = planted([14, 12, 10], 2, 120);
+        let opts = AlsOptions {
+            rank: 2,
+            max_iters: 120,
+            tol: 1e-12,
+            ..Default::default()
+        };
+        let (m_ser, _) = als_decompose(&t, &opts).unwrap();
+        let be = CpuParallelBackend::new(4).with_min_par_flops(0);
+        let (m_par, _) = als_decompose_with(&t, &opts, &be).unwrap();
+        assert!(m_ser.to_tensor().rel_error(&t) < 1e-3);
+        assert!(m_par.to_tensor().rel_error(&t) < 1e-3);
     }
 
     #[test]

@@ -5,8 +5,9 @@
 //! leading eigenvectors of the unfolding Grams (the Matlab Tensor Toolbox
 //! `'nvecs'` option).
 
+use crate::linalg::backend::{ComputeBackend, SerialBackend};
 use crate::linalg::eig::leading_eigvecs;
-use crate::linalg::{matmul, Matrix, Trans};
+use crate::linalg::{Matrix, Trans};
 use crate::tensor::unfold::{unfold_1, unfold_2, unfold_3};
 use crate::tensor::DenseTensor;
 use crate::util::rng::Xoshiro256;
@@ -32,7 +33,7 @@ pub fn random_init(dims: [usize; 3], rank: usize, rng: &mut Xoshiro256) -> (Matr
 /// (Tensor Toolbox behaviour).
 pub fn hosvd_init(t: &DenseTensor, rank: usize, rng: &mut Xoshiro256) -> (Matrix, Matrix, Matrix) {
     let per_mode = |x: &Matrix, dim: usize, rng: &mut Xoshiro256| -> Matrix {
-        let gram = matmul(x, Trans::No, x, Trans::Yes);
+        let gram = SerialBackend.matmul(x, Trans::No, x, Trans::Yes);
         let v = leading_eigvecs(&gram, rank.min(dim));
         if v.cols() == rank {
             v
@@ -54,6 +55,7 @@ pub fn hosvd_init(t: &DenseTensor, rank: usize, rng: &mut Xoshiro256) -> (Matrix
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::matmul;
 
     #[test]
     fn random_init_shapes() {

@@ -8,7 +8,10 @@ pub mod init;
 pub mod model;
 pub mod tucker;
 
-pub use als::{als_decompose, als_decompose_sparse, AlsOptions, AlsTrace};
+pub use als::{
+    als_decompose, als_decompose_sparse, als_decompose_sparse_with, als_decompose_with,
+    AlsOptions, AlsTrace,
+};
 pub use error::{factor_congruence, model_congruence, sampled_mse, SampledError};
 pub use init::{hosvd_init, random_init, InitMethod};
 pub use model::CpModel;

@@ -1,8 +1,9 @@
 //! The CP model `[[A, B, C]]` and factor-level operations shared by the
 //! direct and compressed paths.
 
-use crate::linalg::{matmul, Matrix, Trans};
+use crate::linalg::backend::{ComputeBackend, SerialBackend};
 use crate::linalg::products::{hadamard, khatri_rao};
+use crate::linalg::{Matrix, Trans};
 use crate::tensor::DenseTensor;
 
 /// A rank-R CP model of a third-order tensor: `X ≈ Σ_r a_r ∘ b_r ∘ c_r`.
@@ -47,11 +48,8 @@ impl CpModel {
     /// O(IJK)).
     pub fn norm_sq(&self) -> f64 {
         let g = hadamard(
-            &hadamard(
-                &matmul(&self.a, Trans::Yes, &self.a, Trans::No),
-                &matmul(&self.b, Trans::Yes, &self.b, Trans::No),
-            ),
-            &matmul(&self.c, Trans::Yes, &self.c, Trans::No),
+            &hadamard(&SerialBackend.gram(&self.a), &SerialBackend.gram(&self.b)),
+            &SerialBackend.gram(&self.c),
         );
         g.data().iter().map(|&x| x as f64).sum()
     }
@@ -88,7 +86,7 @@ impl CpModel {
 
     /// Mode-1 reconstruction `A (C ⊙ B)ᵀ` (for validation on small sizes).
     pub fn unfold1(&self) -> Matrix {
-        matmul(&self.a, Trans::No, &khatri_rao(&self.c, &self.b), Trans::Yes)
+        SerialBackend.matmul(&self.a, Trans::No, &khatri_rao(&self.c, &self.b), Trans::Yes)
     }
 }
 

@@ -1,0 +1,504 @@
+//! The **`ComputeBackend`** dispatch surface — one trait for every dense
+//! kernel the compressed-CP pipeline is hot in.
+//!
+//! The paper's scalability argument (and the randomized-CP literature it
+//! builds on) rests on pushing all work into a handful of dense
+//! contractions: GEMM for the blocked TTM chain, MTTKRP for the ALS
+//! sweeps, Gram matrices for the tiny `R×R` solves, and batched small
+//! GEMMs for the per-block compression contractions.  This module
+//! abstracts exactly that surface once so every layer above `linalg`
+//! (`cp`, `compress`, `coordinator`, `apps`) dispatches through a backend
+//! handle instead of calling free functions:
+//!
+//! * [`SerialBackend`] — the cache-blocked single-threaded kernels in
+//!   [`super::matmul`]; the differential-test reference and the paper's
+//!   "Baseline (CPU)" arm.
+//! * [`CpuParallelBackend`] — the same micro-kernel repartitioned over
+//!   [`ThreadPool`]: GEMMs split into row/column macro-strips (each worker
+//!   packs its own panels), MTTKRPs parallelized over unfolding row
+//!   chunks, and `gemm_batch` fanned out item-per-worker.  This is the
+//!   "Parallel on CPU" arm.
+//! * `runtime::XlaBackend` — implements the same trait, delegating the
+//!   dense kernels to a CPU backend while exposing the fused AOT Pallas
+//!   artifacts through the [`ComputeBackend::block_compressor`] /
+//!   [`ComputeBackend::proxy_decomposer`] stage hooks ("Parallel on GPU",
+//!   adapted to the MXU).
+//!
+//! Strip splitting preserves the serial kernel's `KC`-panel accumulation
+//! order, so parallel results match the serial reference to float
+//! round-off (bitwise-identical when strip widths align with the
+//! micro-kernel's column blocking) — the differential tests in
+//! `rust/tests/backend_differential.rs` hold to well below `1e-4`.
+
+use super::matmul::{self, Trans};
+use super::matrix::Matrix;
+use super::products::khatri_rao;
+use crate::util::threadpool::ThreadPool;
+use std::sync::Arc;
+
+/// Shape of `op(M)`.
+#[inline]
+fn op_dims(m: &Matrix, t: Trans) -> (usize, usize) {
+    match t {
+        Trans::No => (m.rows(), m.cols()),
+        Trans::Yes => (m.cols(), m.rows()),
+    }
+}
+
+/// One dispatch surface for the pipeline's dense kernels.
+///
+/// Provided methods ([`matmul`](ComputeBackend::matmul),
+/// [`gram`](ComputeBackend::gram), [`mttkrp`](ComputeBackend::mttkrp),
+/// [`gemm_batch`](ComputeBackend::gemm_batch)) are built on
+/// [`gemm`](ComputeBackend::gemm), so a minimal backend only implements
+/// `gemm` + `name` and inherits correct (serial-composed) versions of the
+/// rest; backends override them when they can do better (parallel fan-out,
+/// fused device kernels).
+pub trait ComputeBackend: Send + Sync {
+    /// Human-readable backend name (metrics/logs).
+    fn name(&self) -> &'static str;
+
+    /// `C ← alpha · op(A)·op(B) + beta · C` — the root kernel.
+    ///
+    /// Semantics match [`matmul::gemm`]: `beta = 0` clears `C` (including
+    /// NaNs) before accumulating.  Panics on shape mismatch.
+    fn gemm(
+        &self,
+        alpha: f32,
+        a: &Matrix,
+        op_a: Trans,
+        b: &Matrix,
+        op_b: Trans,
+        beta: f32,
+        c: &mut Matrix,
+    );
+
+    /// Batched GEMM sharing one right-hand operand:
+    /// `C_i ← alpha · op(A_i)·op(B) + beta · C_i` for every `i`.
+    ///
+    /// This is the shape of the per-block compression contractions (the
+    /// mode-2 slice loop of the unfold-free TTM chain): many small left
+    /// operands against a single compression-matrix slice.
+    fn gemm_batch(
+        &self,
+        alpha: f32,
+        a_list: &[Matrix],
+        op_a: Trans,
+        b: &Matrix,
+        op_b: Trans,
+        beta: f32,
+        c_list: &mut [Matrix],
+    ) {
+        assert_eq!(a_list.len(), c_list.len(), "gemm_batch: batch size mismatch");
+        for (a, c) in a_list.iter().zip(c_list.iter_mut()) {
+            self.gemm(alpha, a, op_a, b, op_b, beta, c);
+        }
+    }
+
+    /// Convenience: `op(A)·op(B)` into a fresh matrix.
+    fn matmul(&self, a: &Matrix, op_a: Trans, b: &Matrix, op_b: Trans) -> Matrix {
+        let (m, _) = op_dims(a, op_a);
+        let (_, n) = op_dims(b, op_b);
+        let mut c = Matrix::zeros(m, n);
+        self.gemm(1.0, a, op_a, b, op_b, 0.0, &mut c);
+        c
+    }
+
+    /// `y ← op(A)·x` (cheap; serial on every CPU backend).
+    fn matvec(&self, a: &Matrix, op: Trans, x: &[f32]) -> Vec<f32> {
+        matmul::matvec(a, op, x)
+    }
+
+    /// Gram matrix `FᵀF` of a factor (`R×R`, the ALS normal-equation
+    /// operand).
+    fn gram(&self, f: &Matrix) -> Matrix {
+        self.matmul(f, Trans::Yes, f, Trans::No)
+    }
+
+    /// MTTKRP for `mode`: `X_(mode) · (slow ⊙ fast)` with the crate's
+    /// unfolding/Khatri-Rao convention (`khatri_rao(slow, fast)` pairs row
+    /// `fast + slow·dim_fast`, matching `tensor::unfold`).
+    ///
+    /// `x_mode` is the mode-`mode` unfolding (`dims[mode-1] × rest`); the
+    /// result is `dims[mode-1] × R`.  `mode` is carried for assertions and
+    /// diagnostics — the contraction itself is fully determined by the
+    /// operands.
+    fn mttkrp(&self, mode: usize, x_mode: &Matrix, slow: &Matrix, fast: &Matrix) -> Matrix {
+        assert!((1..=3).contains(&mode), "mttkrp: mode must be 1..=3, got {mode}");
+        assert_eq!(
+            x_mode.cols(),
+            slow.rows() * fast.rows(),
+            "mttkrp mode {mode}: unfolding has {} columns but slow×fast = {}×{}",
+            x_mode.cols(),
+            slow.rows(),
+            fast.rows()
+        );
+        let kr = khatri_rao(slow, fast);
+        self.matmul(x_mode, Trans::No, &kr, Trans::No)
+    }
+
+    /// Stage hook: a backend owning a fused block-compression kernel (the
+    /// XLA `ttm_chain` artifact) exposes it here; CPU backends return
+    /// `None` and the pipeline composes the generic chain from `gemm`.
+    fn block_compressor(&self) -> Option<&dyn crate::compress::BlockCompressor> {
+        None
+    }
+
+    /// Stage hook: a backend owning a fused proxy-ALS kernel (the XLA
+    /// `als_sweep` artifact) exposes it here; CPU backends return `None`
+    /// and the pipeline runs the in-crate rust ALS.
+    fn proxy_decomposer(&self) -> Option<&dyn crate::coordinator::ProxyDecomposer> {
+        None
+    }
+}
+
+/// Single-threaded reference backend: thin forwarding to the cache-blocked
+/// kernels in [`matmul`].  Every other backend is differential-tested
+/// against this one.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SerialBackend;
+
+impl ComputeBackend for SerialBackend {
+    fn name(&self) -> &'static str {
+        "cpu-serial"
+    }
+
+    fn gemm(
+        &self,
+        alpha: f32,
+        a: &Matrix,
+        op_a: Trans,
+        b: &Matrix,
+        op_b: Trans,
+        beta: f32,
+        c: &mut Matrix,
+    ) {
+        matmul::gemm(alpha, a, op_a, b, op_b, beta, c);
+    }
+}
+
+/// Below this many FLOPs (`2·m·n·k`) a GEMM runs serially: a pool scope
+/// spawns OS threads, which only pays for itself on macroscopic tiles.
+const DEFAULT_PAR_MIN_FLOPS: usize = 1 << 22;
+
+/// Multi-threaded CPU backend: the serial micro-kernel repartitioned over
+/// a [`ThreadPool`].
+///
+/// * Wide outputs (`n ≥ m`) split into contiguous **column strips** — free
+///   to extract and scatter in column-major storage.
+/// * Tall outputs (the MTTKRP shape: `I × R` with huge inner `k`) split
+///   into **row strips** of the unfolding, each worker running the blocked
+///   kernel on its chunk with its own packed panels.
+/// * `gemm_batch` fans the (independent) batch items out across workers.
+///
+/// Tiny problems fall back to the serial path (see
+/// [`CpuParallelBackend::with_min_par_flops`]); nested use inside
+/// block-level pool jobs should hold a [`SerialBackend`] instead — the
+/// pipeline's streaming stages do exactly that (block-level parallelism
+/// only).
+pub struct CpuParallelBackend {
+    pool: ThreadPool,
+    min_par_flops: usize,
+}
+
+impl CpuParallelBackend {
+    /// Backend over `threads.max(1)` workers.
+    pub fn new(threads: usize) -> Self {
+        Self {
+            pool: ThreadPool::new(threads),
+            min_par_flops: DEFAULT_PAR_MIN_FLOPS,
+        }
+    }
+
+    /// Sized by [`crate::util::default_threads`].
+    pub fn default_sized() -> Self {
+        Self::new(crate::util::default_threads())
+    }
+
+    /// Overrides the serial-fallback threshold (`0` forces the parallel
+    /// path — used by the differential tests to exercise it on small
+    /// shapes).
+    pub fn with_min_par_flops(mut self, flops: usize) -> Self {
+        self.min_par_flops = flops;
+        self
+    }
+
+    pub fn threads(&self) -> usize {
+        self.pool.size()
+    }
+}
+
+impl ComputeBackend for CpuParallelBackend {
+    fn name(&self) -> &'static str {
+        "cpu-parallel"
+    }
+
+    fn gemm(
+        &self,
+        alpha: f32,
+        a: &Matrix,
+        op_a: Trans,
+        b: &Matrix,
+        op_b: Trans,
+        beta: f32,
+        c: &mut Matrix,
+    ) {
+        let (m, k) = op_dims(a, op_a);
+        let (k2, n) = op_dims(b, op_b);
+        assert_eq!(k, k2, "gemm: inner dimension mismatch ({k} vs {k2})");
+        assert_eq!((c.rows(), c.cols()), (m, n), "gemm: output shape mismatch");
+
+        let flops = 2usize
+            .saturating_mul(m)
+            .saturating_mul(n)
+            .saturating_mul(k);
+        let threads = self.pool.size();
+        if threads == 1 || alpha == 0.0 || flops < self.min_par_flops {
+            matmul::gemm(alpha, a, op_a, b, op_b, beta, c);
+            return;
+        }
+
+        if n >= m {
+            // Column strips: op(B) columns j0..j1 and the matching C strip.
+            let strips = ThreadPool::partition(n, threads);
+            let c_ref: &Matrix = c;
+            let parts = self.pool.map_indexed(strips.len(), |s| {
+                let (j0, j1) = strips[s];
+                let b_sub = match op_b {
+                    Trans::No => b.slice_cols(j0, j1),
+                    Trans::Yes => b.slice_rows(j0, j1),
+                };
+                let mut c_sub = c_ref.slice_cols(j0, j1);
+                matmul::gemm(alpha, a, op_a, &b_sub, op_b, beta, &mut c_sub);
+                c_sub
+            });
+            for (s, part) in parts.iter().enumerate() {
+                c.set_block(0, strips[s].0, part);
+            }
+        } else {
+            // Row strips: op(A) rows i0..i1 and the matching C strip.
+            let strips = ThreadPool::partition(m, threads);
+            let c_ref: &Matrix = c;
+            let parts = self.pool.map_indexed(strips.len(), |s| {
+                let (i0, i1) = strips[s];
+                let a_sub = match op_a {
+                    Trans::No => a.slice_rows(i0, i1),
+                    Trans::Yes => a.slice_cols(i0, i1),
+                };
+                let mut c_sub = c_ref.slice_rows(i0, i1);
+                matmul::gemm(alpha, &a_sub, op_a, b, op_b, beta, &mut c_sub);
+                c_sub
+            });
+            for (s, part) in parts.iter().enumerate() {
+                c.set_block(strips[s].0, 0, part);
+            }
+        }
+    }
+
+    fn gemm_batch(
+        &self,
+        alpha: f32,
+        a_list: &[Matrix],
+        op_a: Trans,
+        b: &Matrix,
+        op_b: Trans,
+        beta: f32,
+        c_list: &mut [Matrix],
+    ) {
+        assert_eq!(a_list.len(), c_list.len(), "gemm_batch: batch size mismatch");
+        // Serial fallback mirrors `gemm`: spawning a pool scope only pays
+        // for itself when the whole batch carries macroscopic work.
+        let (k_b, n_b) = op_dims(b, op_b);
+        let batch_flops: usize = a_list
+            .iter()
+            .map(|a| {
+                let (m, _) = op_dims(a, op_a);
+                2usize
+                    .saturating_mul(m)
+                    .saturating_mul(k_b)
+                    .saturating_mul(n_b)
+            })
+            .sum();
+        if self.pool.size() == 1 || a_list.len() <= 1 || batch_flops < self.min_par_flops {
+            for (a, c) in a_list.iter().zip(c_list.iter_mut()) {
+                matmul::gemm(alpha, a, op_a, b, op_b, beta, c);
+            }
+            return;
+        }
+        // Independent items: one pool job each, serial kernel inside.
+        self.pool.scope(|scope| {
+            for (a, c) in a_list.iter().zip(c_list.iter_mut()) {
+                scope.spawn(move || matmul::gemm(alpha, a, op_a, b, op_b, beta, c));
+            }
+        });
+    }
+}
+
+/// Backend handle threaded through the pipeline stages.
+pub type BackendHandle = Arc<dyn ComputeBackend>;
+
+/// The serial reference backend as a shared handle.
+pub fn serial_backend() -> BackendHandle {
+    Arc::new(SerialBackend)
+}
+
+/// A CPU backend handle: serial for `threads ≤ 1`, parallel otherwise.
+pub fn cpu_backend(threads: usize) -> BackendHandle {
+    if threads <= 1 {
+        Arc::new(SerialBackend)
+    } else {
+        Arc::new(CpuParallelBackend::new(threads))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::gemm_naive;
+    use crate::util::rng::Xoshiro256;
+
+    fn close(a: &Matrix, b: &Matrix, tol: f64) {
+        assert_eq!((a.rows(), a.cols()), (b.rows(), b.cols()));
+        let err = a.rel_error(b);
+        assert!(err < tol, "rel error {err} > {tol}");
+    }
+
+    fn par() -> CpuParallelBackend {
+        // Threshold 0 forces the strip-split path even on tiny shapes.
+        CpuParallelBackend::new(4).with_min_par_flops(0)
+    }
+
+    #[test]
+    fn parallel_gemm_matches_naive_all_transposes() {
+        let mut rng = Xoshiro256::seed_from_u64(900);
+        let be = par();
+        for &(m, k, n) in &[(5, 7, 9), (64, 32, 48), (130, 33, 257), (257, 129, 3)] {
+            for &op_a in &[Trans::No, Trans::Yes] {
+                for &op_b in &[Trans::No, Trans::Yes] {
+                    let (ar, ac) = if op_a == Trans::No { (m, k) } else { (k, m) };
+                    let (br, bc) = if op_b == Trans::No { (k, n) } else { (n, k) };
+                    let a = Matrix::random_normal(ar, ac, &mut rng);
+                    let b = Matrix::random_normal(br, bc, &mut rng);
+                    let fast = be.matmul(&a, op_a, &b, op_b);
+                    let slow = gemm_naive(&a, op_a, &b, op_b);
+                    close(&fast, &slow, 1e-4);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial_bitwise_on_aligned_tiles() {
+        // n = 256 over 4 workers → 64-wide strips, a multiple of the
+        // micro-kernel's 8-column blocking, and k < KC keeps a single
+        // accumulation panel: identical floats.
+        let mut rng = Xoshiro256::seed_from_u64(901);
+        let a = Matrix::random_normal(150, 70, &mut rng);
+        let b = Matrix::random_normal(70, 256, &mut rng);
+        let serial = SerialBackend.matmul(&a, Trans::No, &b, Trans::No);
+        let parallel = par().matmul(&a, Trans::No, &b, Trans::No);
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn alpha_beta_accumulate_semantics() {
+        let mut rng = Xoshiro256::seed_from_u64(902);
+        let be = par();
+        let a = Matrix::random_normal(40, 20, &mut rng);
+        let b = Matrix::random_normal(20, 50, &mut rng);
+        let c0 = Matrix::random_normal(40, 50, &mut rng);
+        let mut c_par = c0.clone();
+        be.gemm(0.5, &a, Trans::No, &b, Trans::No, 2.0, &mut c_par);
+        let mut c_ser = c0.clone();
+        matmul::gemm(0.5, &a, Trans::No, &b, Trans::No, 2.0, &mut c_ser);
+        close(&c_par, &c_ser, 1e-6);
+    }
+
+    #[test]
+    fn beta_zero_clears_nan_in_parallel_path() {
+        let a = Matrix::identity(33);
+        let mut c = Matrix::from_vec(33, 33, vec![f32::NAN; 33 * 33]);
+        par().gemm(1.0, &a, Trans::No, &a, Trans::No, 0.0, &mut c);
+        assert_eq!(c, Matrix::identity(33));
+    }
+
+    #[test]
+    fn gemm_batch_matches_loop() {
+        let mut rng = Xoshiro256::seed_from_u64(903);
+        let be = par();
+        let b = Matrix::random_normal(12, 9, &mut rng);
+        let a_list: Vec<Matrix> = (0..7)
+            .map(|_| Matrix::random_normal(10, 12, &mut rng))
+            .collect();
+        let mut batch: Vec<Matrix> = (0..7).map(|_| Matrix::zeros(10, 9)).collect();
+        be.gemm_batch(1.0, &a_list, Trans::No, &b, Trans::No, 0.0, &mut batch);
+        for (a, c) in a_list.iter().zip(&batch) {
+            let want = SerialBackend.matmul(a, Trans::No, &b, Trans::No);
+            close(c, &want, 1e-6);
+        }
+    }
+
+    #[test]
+    fn mttkrp_matches_serial_reference() {
+        let mut rng = Xoshiro256::seed_from_u64(904);
+        let (i, j, k, r) = (23, 7, 5, 4);
+        let x1 = Matrix::random_normal(i, j * k, &mut rng);
+        let b = Matrix::random_normal(j, r, &mut rng);
+        let c = Matrix::random_normal(k, r, &mut rng);
+        let fast = par().mttkrp(1, &x1, &c, &b);
+        let slow = SerialBackend.mttkrp(1, &x1, &c, &b);
+        close(&fast, &slow, 1e-6);
+        assert_eq!((fast.rows(), fast.cols()), (i, r));
+    }
+
+    #[test]
+    fn gram_is_symmetric_and_matches() {
+        let mut rng = Xoshiro256::seed_from_u64(905);
+        let f = Matrix::random_normal(90, 6, &mut rng);
+        let g_par = par().gram(&f);
+        let g_ser = SerialBackend.gram(&f);
+        close(&g_par, &g_ser, 1e-6);
+        close(&g_par, &g_par.transpose(), 1e-5);
+    }
+
+    #[test]
+    fn empty_and_degenerate_shapes() {
+        let be = par();
+        let a = Matrix::zeros(0, 3);
+        let b = Matrix::zeros(3, 4);
+        let c = be.matmul(&a, Trans::No, &b, Trans::No);
+        assert_eq!((c.rows(), c.cols()), (0, 4));
+        // Single row/col strips narrower than the worker count.
+        let mut rng = Xoshiro256::seed_from_u64(906);
+        let a = Matrix::random_normal(1, 40, &mut rng);
+        let b = Matrix::random_normal(40, 2, &mut rng);
+        close(
+            &be.matmul(&a, Trans::No, &b, Trans::No),
+            &gemm_naive(&a, Trans::No, &b, Trans::No),
+            1e-5,
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "inner dimension mismatch")]
+    fn parallel_shape_mismatch_panics() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(2, 3);
+        let _ = par().matmul(&a, Trans::No, &b, Trans::No);
+    }
+
+    #[test]
+    fn partition_is_balanced_cover() {
+        for n in [0usize, 1, 5, 16, 17] {
+            for parts in [1usize, 2, 4, 9] {
+                let ranges = ThreadPool::partition(n, parts);
+                let total: usize = ranges.iter().map(|(a, b)| b - a).sum();
+                assert_eq!(total, n);
+                for w in ranges.windows(2) {
+                    assert_eq!(w[0].1, w[1].0, "ranges must be contiguous");
+                    assert!(w[0].1 - w[0].0 >= w[1].1 - w[1].0);
+                }
+            }
+        }
+    }
+}

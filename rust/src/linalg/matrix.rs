@@ -131,10 +131,23 @@ impl Matrix {
 
     // ---------- submatrices ----------
 
-    /// Rows `r0..r1` (copy).
+    /// Rows `r0..r1` (copy).  Column-major means each column's row range
+    /// is one contiguous segment — copied with `copy_from_slice`, which
+    /// matters on the hot paths that strip-split by rows (parallel GEMM,
+    /// streaming refinement factor slices).
     pub fn slice_rows(&self, r0: usize, r1: usize) -> Matrix {
         assert!(r0 <= r1 && r1 <= self.rows);
-        Matrix::from_fn(r1 - r0, self.cols, |i, j| self.get(r0 + i, j))
+        let sub_rows = r1 - r0;
+        let mut data = vec![0.0f32; sub_rows * self.cols];
+        for j in 0..self.cols {
+            let src = &self.data[j * self.rows + r0..j * self.rows + r1];
+            data[j * sub_rows..(j + 1) * sub_rows].copy_from_slice(src);
+        }
+        Matrix {
+            rows: sub_rows,
+            cols: self.cols,
+            data,
+        }
     }
 
     /// Columns `c0..c1` (cheap memcpy in column-major).

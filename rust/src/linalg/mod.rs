@@ -5,7 +5,13 @@
 //! choice: mode-1 unfoldings are then free).  No BLAS — the blocked GEMM in
 //! [`matmul`] is the CPU-baseline hot path and is profiled in
 //! EXPERIMENTS.md §Perf.
+//!
+//! Hot callers do not use the free functions directly: the [`backend`]
+//! module wraps this surface in the [`ComputeBackend`] trait (serial
+//! reference, multi-threaded CPU, XLA), and every pipeline stage above
+//! `linalg` dispatches through a [`BackendHandle`].
 
+pub mod backend;
 pub mod cholesky;
 pub mod eig;
 pub mod hungarian;
@@ -17,6 +23,9 @@ pub mod products;
 pub mod qr;
 pub mod svd;
 
+pub use backend::{
+    cpu_backend, serial_backend, BackendHandle, ComputeBackend, CpuParallelBackend, SerialBackend,
+};
 pub use cholesky::{cholesky_factor, cholesky_solve};
 pub use eig::sym_eig;
 pub use hungarian::{hungarian_max, hungarian_min, Assignment};

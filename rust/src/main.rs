@@ -11,7 +11,7 @@
 use exascale_tensor::apps::{run_cp_layer_experiment, run_gene_analysis, CpBackend, GeneConfig};
 use exascale_tensor::apps::nn::{train, Network, SyntheticImages, TrainConfig};
 use exascale_tensor::coordinator::{Backend, Pipeline, PipelineConfig};
-use exascale_tensor::runtime::{artifacts_dir, XlaRuntime};
+use exascale_tensor::runtime::artifacts_dir;
 use exascale_tensor::tensor::{InMemorySource, LowRankGenerator};
 use exascale_tensor::util::cli::Command;
 use exascale_tensor::util::logging;
@@ -101,20 +101,10 @@ fn cmd_decompose(prog: &str, args: &[String]) -> i32 {
             .build()?;
         let mut pipe = Pipeline::new(cfg);
         if backend == Backend::Xla {
-            let rt = XlaRuntime::load(artifacts_dir(), 2)?;
-            pipe = pipe
-                .with_compressor(Box::new(exascale_tensor::runtime::XlaCompressor::new(
-                    rt.clone(),
-                    [reduced, reduced, reduced],
-                    block,
-                )?))
-                .with_decomposer(Box::new(exascale_tensor::runtime::XlaAlsDecomposer::new(
-                    rt,
-                    [reduced, reduced, reduced],
-                    rank,
-                    120,
-                    1e-10,
-                )?));
+            // One constructor wires the whole XLA arm (fused compression +
+            // ALS artifacts, CPU fallback kernels) from the run config.
+            let xla = exascale_tensor::runtime::XlaBackend::from_config(pipe.config())?;
+            pipe = pipe.with_compute(std::sync::Arc::new(xla));
         }
 
         let result = if let Some(path) = m.get("input") {

@@ -17,5 +17,6 @@
 pub mod split;
 
 pub use split::{
-    matmul_mixed, matmul_mixed_naive, split_matrix, MixedPrecision, SplitMatrix,
+    matmul_mixed, matmul_mixed_naive, matmul_mixed_with, split_matrix, MixedPrecision,
+    SplitMatrix,
 };

@@ -1,6 +1,7 @@
 //! Split-precision matrices and the compensated matmul of Eq. (5).
 
-use crate::linalg::{gemm, Matrix, Trans};
+use crate::linalg::backend::{ComputeBackend, SerialBackend};
+use crate::linalg::{Matrix, Trans};
 use crate::util::f16::{quantize_bf16_slice, quantize_f16_slice};
 
 /// Which 16-bit format the emulation rounds through.
@@ -49,8 +50,18 @@ pub fn split_matrix(m: &Matrix, precision: MixedPrecision) -> SplitMatrix {
 /// f32 (the emulation quantizes the operands; accumulation here is f32 as
 /// on the MXU/tensor cores).
 pub fn matmul_mixed(a: &Matrix, b: &Matrix, precision: MixedPrecision) -> Matrix {
+    matmul_mixed_with(a, b, precision, &SerialBackend)
+}
+
+/// [`matmul_mixed`] dispatching its three GEMM terms through `backend`.
+pub fn matmul_mixed_with(
+    a: &Matrix,
+    b: &Matrix,
+    precision: MixedPrecision,
+    backend: &dyn ComputeBackend,
+) -> Matrix {
     if precision == MixedPrecision::Full {
-        return crate::linalg::matmul(a, Trans::No, b, Trans::No);
+        return backend.matmul(a, Trans::No, b, Trans::No);
     }
     let sa = split_matrix(a, precision);
     let sb = split_matrix(b, precision);
@@ -62,9 +73,9 @@ pub fn matmul_mixed(a: &Matrix, b: &Matrix, precision: MixedPrecision) -> Matrix
     let lo_b = split_matrix(&sb.lo, precision).hi;
 
     let mut out = Matrix::zeros(a.rows(), b.cols());
-    gemm(1.0, &sa.hi, Trans::No, &sb.hi, Trans::No, 0.0, &mut out);
-    gemm(1.0, &sa.hi, Trans::No, &lo_b, Trans::No, 1.0, &mut out);
-    gemm(1.0, &lo_a, Trans::No, &sb.hi, Trans::No, 1.0, &mut out);
+    backend.gemm(1.0, &sa.hi, Trans::No, &sb.hi, Trans::No, 0.0, &mut out);
+    backend.gemm(1.0, &sa.hi, Trans::No, &lo_b, Trans::No, 1.0, &mut out);
+    backend.gemm(1.0, &lo_a, Trans::No, &sb.hi, Trans::No, 1.0, &mut out);
     out
 }
 
@@ -72,11 +83,11 @@ pub fn matmul_mixed(a: &Matrix, b: &Matrix, precision: MixedPrecision) -> Matrix
 /// gives you; the ablation baseline for Eq. (5).
 pub fn matmul_mixed_naive(a: &Matrix, b: &Matrix, precision: MixedPrecision) -> Matrix {
     if precision == MixedPrecision::Full {
-        return crate::linalg::matmul(a, Trans::No, b, Trans::No);
+        return SerialBackend.matmul(a, Trans::No, b, Trans::No);
     }
     let sa = split_matrix(a, precision);
     let sb = split_matrix(b, precision);
-    crate::linalg::matmul(&sa.hi, Trans::No, &sb.hi, Trans::No)
+    SerialBackend.matmul(&sa.hi, Trans::No, &sb.hi, Trans::No)
 }
 
 #[cfg(test)]

@@ -15,16 +15,17 @@
 //! * [`host`]     — `HostTensor`, the `Send` host-side value crossing the
 //!   channel boundary.
 //! * [`executor`] — the executor thread pool.
-//! * [`backends`] — [`crate::compress::BlockCompressor`] and
-//!   [`crate::coordinator::ProxyDecomposer`] implementations backed by the
-//!   artifacts (the "GPU tensor cores" arm of the benchmarks).
+//! * [`backends`] — [`XlaBackend`], the artifact-backed
+//!   [`crate::linalg::ComputeBackend`] ("GPU tensor cores" arm of the
+//!   benchmarks), built from the [`crate::compress::BlockCompressor`] and
+//!   [`crate::coordinator::ProxyDecomposer`] artifact adapters.
 
 pub mod backends;
 pub mod executor;
 pub mod host;
 pub mod manifest;
 
-pub use backends::{XlaAlsDecomposer, XlaCompressor};
+pub use backends::{XlaAlsDecomposer, XlaBackend, XlaCompressor};
 pub use executor::XlaRuntime;
 pub use host::HostTensor;
 pub use manifest::{ArtifactSpec, Manifest};

@@ -144,7 +144,7 @@ impl SparseTensor {
     /// `‖X‖² − 2·Σ_nnz x·x̂ + ‖[[A,B,C]]‖²` where the model norm uses the
     /// Gram-Hadamard identity — O(nnz·R + R²) rather than O(IJK).
     pub fn residual_sq(&self, a: &Matrix, b: &Matrix, c: &Matrix) -> f64 {
-        use crate::linalg::matmul::{matmul, Trans};
+        use crate::linalg::backend::{ComputeBackend, SerialBackend};
         use crate::linalg::products::hadamard;
         let r = a.cols();
         let x_sq: f64 = self.values.iter().map(|&v| (v as f64) * (v as f64)).sum();
@@ -158,11 +158,8 @@ impl SparseTensor {
             cross += v as f64 * xhat;
         }
         let g = hadamard(
-            &hadamard(
-                &matmul(a, Trans::Yes, a, Trans::No),
-                &matmul(b, Trans::Yes, b, Trans::No),
-            ),
-            &matmul(c, Trans::Yes, c, Trans::No),
+            &hadamard(&SerialBackend.gram(a), &SerialBackend.gram(b)),
+            &SerialBackend.gram(c),
         );
         let model_sq: f64 = g.data().iter().map(|&x| x as f64).sum();
         (x_sq - 2.0 * cross + model_sq).max(0.0)

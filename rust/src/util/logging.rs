@@ -2,9 +2,10 @@
 //! from `EXATENSOR_LOG` (error|warn|info|debug|trace; default info).
 
 use log::{Level, LevelFilter, Metadata, Record};
+use std::sync::OnceLock;
 use std::time::Instant;
 
-static START: once_cell::sync::Lazy<Instant> = once_cell::sync::Lazy::new(Instant::now);
+static START: OnceLock<Instant> = OnceLock::new();
 
 struct StderrLogger;
 
@@ -17,7 +18,7 @@ impl log::Log for StderrLogger {
         if !self.enabled(record.metadata()) {
             return;
         }
-        let t = START.elapsed().as_secs_f64();
+        let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
         let lvl = match record.level() {
             Level::Error => "ERROR",
             Level::Warn => "WARN ",
@@ -42,6 +43,7 @@ pub fn init() {
         Ok("trace") => LevelFilter::Trace,
         _ => LevelFilter::Info,
     };
+    START.get_or_init(Instant::now);
     let _ = log::set_logger(&LOGGER);
     log::set_max_level(level);
 }

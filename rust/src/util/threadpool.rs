@@ -82,6 +82,62 @@ impl ThreadPool {
         result
     }
 
+    /// Scoped parallel iteration over `0..n` in contiguous chunks: runs
+    /// `f(range)` for a balanced partition of the index range, blocking
+    /// until every chunk completes.
+    ///
+    /// This is the shared chunking primitive for the streaming stages
+    /// (block grids in `compress::stream`, `coordinator::refine`) and the
+    /// strip-parallel kernels in `linalg::backend` — call sites used to
+    /// hand-roll per-item spawn loops.  Chunks are at least `min_chunk`
+    /// indices wide (clamped to ≥ 1); when a single chunk covers
+    /// everything, `f` runs inline without touching the pool.
+    pub fn for_each_chunk<F>(&self, n: usize, min_chunk: usize, f: F)
+    where
+        F: Fn(std::ops::Range<usize>) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        let min_chunk = min_chunk.max(1);
+        // ~2 chunks per worker smooths imbalance without oversubmitting;
+        // never so many that a chunk drops below `min_chunk`.
+        let target_chunks = (self.size * 2).max(1);
+        let parts = target_chunks.min(n / min_chunk).max(1);
+        let ranges = Self::partition(n, parts);
+        if ranges.len() <= 1 {
+            f(0..n);
+            return;
+        }
+        self.scope(|scope| {
+            for (start, end) in ranges {
+                let f = &f;
+                scope.spawn(move || f(start..end));
+            }
+        });
+    }
+
+    /// Balanced contiguous partition of `0..n` into at most `parts`
+    /// non-empty ranges (earlier ranges at most one index longer) — the
+    /// shared chunking primitive behind [`ThreadPool::for_each_chunk`] and
+    /// the strip-split kernels in `linalg::backend`.
+    pub fn partition(n: usize, parts: usize) -> Vec<(usize, usize)> {
+        let parts = parts.clamp(1, n.max(1));
+        let base = n / parts;
+        let rem = n % parts;
+        let mut out = Vec::with_capacity(parts);
+        let mut start = 0;
+        for p in 0..parts {
+            let len = base + usize::from(p < rem);
+            if len == 0 {
+                break;
+            }
+            out.push((start, start + len));
+            start += len;
+        }
+        out
+    }
+
     /// Parallel map over an index range: runs `f(i)` for `i in 0..n` and
     /// collects results in order.
     pub fn map_indexed<T, F>(&self, n: usize, f: F) -> Vec<T>
@@ -182,6 +238,36 @@ mod tests {
         pool.scope(|s| {
             s.spawn(|| panic!("boom"));
         });
+    }
+
+    #[test]
+    fn for_each_chunk_covers_range_exactly_once() {
+        let pool = ThreadPool::new(3);
+        for n in [0usize, 1, 2, 7, 64, 101] {
+            for min_chunk in [1usize, 4, 1000] {
+                let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+                pool.for_each_chunk(n, min_chunk, |range| {
+                    for i in range {
+                        hits[i].fetch_add(1, Ordering::SeqCst);
+                    }
+                });
+                assert!(
+                    hits.iter().all(|h| h.load(Ordering::SeqCst) == 1),
+                    "n={n} min_chunk={min_chunk}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn for_each_chunk_respects_min_chunk() {
+        let pool = ThreadPool::new(4);
+        let max_calls = std::sync::atomic::AtomicUsize::new(0);
+        pool.for_each_chunk(100, 40, |range| {
+            assert!(range.len() >= 40 || range.end == 100);
+            max_calls.fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(max_calls.load(Ordering::SeqCst) <= 3);
     }
 
     #[test]

@@ -1,0 +1,206 @@
+//! Differential property tests for the `ComputeBackend` layer: the
+//! parallel CPU backend must agree with the serial reference on every
+//! kernel, across random shapes (including ragged edge tiles), all
+//! transpose combinations, and the MTTKRP/Khatri-Rao identities the ALS
+//! sweeps rely on.
+
+use exascale_tensor::linalg::products::{hadamard, khatri_rao};
+use exascale_tensor::linalg::{ComputeBackend, CpuParallelBackend, Matrix, SerialBackend, Trans};
+use exascale_tensor::tensor::unfold::{unfold_1, unfold_2, unfold_3};
+use exascale_tensor::tensor::DenseTensor;
+use exascale_tensor::util::prop;
+use exascale_tensor::util::rng::Xoshiro256;
+
+/// Parallel backend with the serial-fallback threshold disabled so even
+/// tiny property-test shapes exercise the strip-split path.
+fn par(threads: usize) -> CpuParallelBackend {
+    CpuParallelBackend::new(threads).with_min_par_flops(0)
+}
+
+fn assert_close(got: &Matrix, want: &Matrix, tol: f64, what: &str) {
+    assert_eq!((got.rows(), got.cols()), (want.rows(), want.cols()), "{what}: shape");
+    let err = got.rel_error(want);
+    assert!(err < tol, "{what}: rel error {err} > {tol}");
+}
+
+#[test]
+fn gemm_differential_random_shapes_all_transposes() {
+    prop::check("backend-gemm-differential", 40, |g| {
+        // Ragged shapes straddling the micro-kernel's 8/4/1-column blocks
+        // and the MC=128 row panel.
+        let m = g.int(1, 150);
+        let k = g.int(1, 70);
+        let n = g.int(1, 150);
+        let threads = g.int(2, 6);
+        let op_a = if g.bool(0.5) { Trans::Yes } else { Trans::No };
+        let op_b = if g.bool(0.5) { Trans::Yes } else { Trans::No };
+        let mut rng = Xoshiro256::seed_from_u64(g.int(0, 1 << 30) as u64);
+        let (ar, ac) = if op_a == Trans::No { (m, k) } else { (k, m) };
+        let (br, bc) = if op_b == Trans::No { (k, n) } else { (n, k) };
+        let a = Matrix::random_normal(ar, ac, &mut rng);
+        let b = Matrix::random_normal(br, bc, &mut rng);
+
+        let serial = SerialBackend.matmul(&a, op_a, &b, op_b);
+        let parallel = par(threads).matmul(&a, op_a, &b, op_b);
+        assert_close(&parallel, &serial, 1e-4, "gemm");
+    });
+}
+
+#[test]
+fn gemm_differential_alpha_beta() {
+    prop::check("backend-gemm-alpha-beta", 25, |g| {
+        let m = g.int(1, 60);
+        let k = g.int(1, 40);
+        let n = g.int(1, 60);
+        let alpha = g.f32(-2.0, 2.0);
+        let beta = if g.bool(0.3) { 0.0 } else { g.f32(-1.5, 1.5) };
+        let mut rng = Xoshiro256::seed_from_u64(g.int(0, 1 << 30) as u64);
+        let a = Matrix::random_normal(m, k, &mut rng);
+        let b = Matrix::random_normal(k, n, &mut rng);
+        let c0 = Matrix::random_normal(m, n, &mut rng);
+
+        let mut c_ser = c0.clone();
+        SerialBackend.gemm(alpha, &a, Trans::No, &b, Trans::No, beta, &mut c_ser);
+        let mut c_par = c0.clone();
+        par(4).gemm(alpha, &a, Trans::No, &b, Trans::No, beta, &mut c_par);
+        // Absolute-scale comparison: alpha/beta may cancel the result.
+        let diff = c_par.sub(&c_ser).frobenius_norm();
+        let scale = c_ser.frobenius_norm().max(1.0);
+        assert!(diff / scale < 1e-4, "alpha-beta diff {diff} scale {scale}");
+    });
+}
+
+#[test]
+fn mttkrp_differential_all_modes() {
+    prop::check("backend-mttkrp-differential", 25, |g| {
+        let dims = [g.int(2, 14), g.int(2, 12), g.int(2, 10)];
+        let r = g.int(1, 5);
+        let threads = g.int(2, 5);
+        let mut rng = Xoshiro256::seed_from_u64(g.int(0, 1 << 30) as u64);
+        let t = DenseTensor::random_normal(dims, &mut rng);
+        let a = Matrix::random_normal(dims[0], r, &mut rng);
+        let b = Matrix::random_normal(dims[1], r, &mut rng);
+        let c = Matrix::random_normal(dims[2], r, &mut rng);
+
+        let pairs = [
+            (1usize, unfold_1(&t), &c, &b),
+            (2, unfold_2(&t), &c, &a),
+            (3, unfold_3(&t), &b, &a),
+        ];
+        for (mode, x_mode, slow, fast) in pairs {
+            let serial = SerialBackend.mttkrp(mode, &x_mode, slow, fast);
+            let parallel = par(threads).mttkrp(mode, &x_mode, slow, fast);
+            assert_close(&parallel, &serial, 1e-4, &format!("mttkrp mode {mode}"));
+        }
+    });
+}
+
+#[test]
+fn mttkrp_khatri_rao_unfold_identity() {
+    // For X = [[A, B, C]] exactly, X_(1)·(C ⊙ B) = A·(CᵀC * BᵀB): the
+    // identity every ALS normal equation is built on.  Check it per mode
+    // on both backends.
+    prop::check("mttkrp-kr-identity", 20, |g| {
+        let dims = [g.int(2, 10), g.int(2, 10), g.int(2, 10)];
+        let r = g.int(1, 4);
+        let mut rng = Xoshiro256::seed_from_u64(g.int(0, 1 << 30) as u64);
+        let a = Matrix::random_normal(dims[0], r, &mut rng);
+        let b = Matrix::random_normal(dims[1], r, &mut rng);
+        let c = Matrix::random_normal(dims[2], r, &mut rng);
+        let t = DenseTensor::from_cp_factors(&a, &b, &c);
+
+        let parallel = par(3);
+        let backends: [&dyn ComputeBackend; 2] = [&SerialBackend, &parallel];
+        let cases = [
+            (1usize, unfold_1(&t), &c, &b, &a),
+            (2, unfold_2(&t), &c, &a, &b),
+            (3, unfold_3(&t), &b, &a, &c),
+        ];
+        for be in backends {
+            for case in &cases {
+                let (mode, x_mode, slow, fast, factor) = case;
+                let (mode, slow, fast, factor) = (*mode, *slow, *fast, *factor);
+                let mttkrp = be.mttkrp(mode, x_mode, slow, fast);
+                let want = be.matmul(
+                    factor,
+                    Trans::No,
+                    &hadamard(&be.gram(slow), &be.gram(fast)),
+                    Trans::No,
+                );
+                assert_close(&mttkrp, &want, 1e-3, &format!("identity mode {mode}"));
+            }
+        }
+    });
+}
+
+#[test]
+fn mttkrp_equals_explicit_khatri_rao_product() {
+    let mut rng = Xoshiro256::seed_from_u64(77);
+    let t = DenseTensor::random_normal([9, 8, 7], &mut rng);
+    let b = Matrix::random_normal(8, 3, &mut rng);
+    let c = Matrix::random_normal(7, 3, &mut rng);
+    let x1 = unfold_1(&t);
+    let kr = khatri_rao(&c, &b);
+    let explicit = SerialBackend.matmul(&x1, Trans::No, &kr, Trans::No);
+    let parallel = par(4);
+    let backends: [&dyn ComputeBackend; 2] = [&SerialBackend, &parallel];
+    for be in backends {
+        assert_close(&be.mttkrp(1, &x1, &c, &b), &explicit, 1e-5, "explicit kr");
+    }
+}
+
+#[test]
+fn gemm_batch_differential() {
+    prop::check("backend-gemm-batch", 20, |g| {
+        let items = g.int(1, 9);
+        let l = g.int(1, 20);
+        let dj = g.int(1, 20);
+        let m = g.int(1, 20);
+        let mut rng = Xoshiro256::seed_from_u64(g.int(0, 1 << 30) as u64);
+        // The per-block compression shape: many small (l × dj) slices
+        // against one shared (m × dj) map slice, transposed.
+        let v_blk = Matrix::random_normal(m, dj, &mut rng);
+        let slices: Vec<Matrix> = (0..items)
+            .map(|_| Matrix::random_normal(l, dj, &mut rng))
+            .collect();
+
+        let mut serial: Vec<Matrix> = (0..items).map(|_| Matrix::zeros(l, m)).collect();
+        SerialBackend.gemm_batch(1.0, &slices, Trans::No, &v_blk, Trans::Yes, 0.0, &mut serial);
+        let mut parallel: Vec<Matrix> = (0..items).map(|_| Matrix::zeros(l, m)).collect();
+        par(4).gemm_batch(1.0, &slices, Trans::No, &v_blk, Trans::Yes, 0.0, &mut parallel);
+
+        for (i, (s, p)) in serial.iter().zip(&parallel).enumerate() {
+            assert_close(p, s, 1e-5, &format!("batch item {i}"));
+            let direct = SerialBackend.matmul(&slices[i], Trans::No, &v_blk, Trans::Yes);
+            assert_close(s, &direct, 1e-5, &format!("batch vs direct {i}"));
+        }
+    });
+}
+
+#[test]
+fn gram_differential() {
+    prop::check("backend-gram", 20, |g| {
+        let rows = g.int(1, 200);
+        let r = g.int(1, 8);
+        let mut rng = Xoshiro256::seed_from_u64(g.int(0, 1 << 30) as u64);
+        let f = Matrix::random_normal(rows, r, &mut rng);
+        assert_close(&par(4).gram(&f), &SerialBackend.gram(&f), 1e-4, "gram");
+    });
+}
+
+#[test]
+fn matvec_matches_gemm_on_both_backends() {
+    let mut rng = Xoshiro256::seed_from_u64(78);
+    let a = Matrix::random_normal(31, 17, &mut rng);
+    let x: Vec<f32> = rng.gaussian_vec_f32(17);
+    let xm = Matrix::from_vec(17, 1, x.clone());
+    let want = SerialBackend.matmul(&a, Trans::No, &xm, Trans::No);
+    let parallel = par(3);
+    let backends: [&dyn ComputeBackend; 2] = [&SerialBackend, &parallel];
+    for be in backends {
+        let y = be.matvec(&a, Trans::No, &x);
+        for i in 0..31 {
+            assert!((y[i] - want.get(i, 0)).abs() < 1e-5, "{} matvec row {i}", be.name());
+        }
+    }
+}

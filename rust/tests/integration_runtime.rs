@@ -7,7 +7,7 @@ use exascale_tensor::coordinator::{Backend, Pipeline, PipelineConfig, ProxyDecom
 use exascale_tensor::linalg::Matrix;
 use exascale_tensor::mixed::MixedPrecision;
 use exascale_tensor::runtime::{
-    artifacts_dir, HostTensor, XlaAlsDecomposer, XlaCompressor, XlaRuntime,
+    artifacts_dir, HostTensor, XlaAlsDecomposer, XlaBackend, XlaCompressor, XlaRuntime,
 };
 use exascale_tensor::tensor::{DenseTensor, LowRankGenerator};
 use exascale_tensor::util::rng::Xoshiro256;
@@ -18,7 +18,15 @@ fn runtime(threads: usize) -> Option<XlaRuntime> {
         eprintln!("SKIP: artifacts missing (run `make artifacts`)");
         return None;
     }
-    Some(XlaRuntime::load(dir, threads).expect("runtime load"))
+    // Also self-skip when the crate was built without the `xla` feature
+    // (or against the vendored stub): load fails cleanly in that case.
+    match XlaRuntime::load(dir, threads) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP: xla runtime unavailable ({e})");
+            None
+        }
+    }
 }
 
 #[test]
@@ -138,13 +146,9 @@ fn full_pipeline_on_xla_backend() {
         .seed(12)
         .build()
         .unwrap();
-    let mut pipe = Pipeline::new(cfg)
-        .with_compressor(Box::new(
-            XlaCompressor::new(rt.clone(), [16, 16, 16], 32).expect("compressor"),
-        ))
-        .with_decomposer(Box::new(
-            XlaAlsDecomposer::new(rt, [16, 16, 16], 4, 80, 1e-9).expect("decomposer"),
-        ));
+    // The whole XLA arm behind one ComputeBackend constructor.
+    let xla = XlaBackend::new(rt, [16, 16, 16], 32, 4, 80, 1e-9, 4).expect("xla backend");
+    let mut pipe = Pipeline::new(cfg).with_compute(std::sync::Arc::new(xla));
     let res = pipe.run(&gen).unwrap();
     assert!(
         res.diagnostics.rel_error < 2e-2,
