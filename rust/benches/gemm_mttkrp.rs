@@ -1,40 +1,91 @@
-//! `BENCH_gemm_mttkrp` — serial-vs-parallel kernel throughput tracked
+//! `BENCH_gemm_mttkrp` — kernel throughput *and* allocator traffic tracked
 //! from the ComputeBackend PR onward.
 //!
-//! Sweeps the `CpuParallelBackend` over 1/2/4/8 worker threads against the
-//! serial reference on the `kernel_micro` shapes:
+//! Sweeps the `CpuParallelBackend` over worker threads against the serial
+//! reference, and — the point of the fused-MTTKRP PR — benches the fused
+//! zero-materialization MTTKRP against the `khatri_rao`+GEMM oracle with a
+//! counting global allocator attributing bytes to each call:
 //!
 //! * GEMM 256×256×256 (the blocked-kernel headline shape);
 //! * GEMM 512×64×512 (the fat-unfolding × tall-skinny compression shape);
-//! * MTTKRP on a 96³ tensor at rank 16 (the ALS hot spot: `I × JK` times
-//!   `JK × R`).
+//! * MTTKRP on a 96³ tensor at rank 16 (the ALS hot spot), `materialized`
+//!   vs `fused_serial` vs `fused_par{t}`.
 //!
-//! Emits a markdown table plus machine-readable JSON at both
+//! Each MTTKRP row carries `alloc_bytes` (heap bytes requested per call)
+//! and `alloc_peak_bytes` (transient high-water above entry).  The run
+//! **asserts** the fused path never allocates the `(J·K)×R` Khatri-Rao
+//! intermediate — per-call bytes and peak both strictly below the buffer
+//! the materialized arm cannot avoid — so an allocation regression fails
+//! the bench (and the CI smoke job) instead of silently rotting.
+//!
+//! `--quick` bounds sizes/iterations for CI smoke; the full run emits a
+//! markdown table plus machine-readable JSON at both
 //! `bench_results/BENCH_gemm_mttkrp.json` and `BENCH_gemm_mttkrp.json`
 //! (the tracked perf-trajectory file).
 
-use exascale_tensor::bench_harness::{bench, gflops, speedup, Report};
-use exascale_tensor::linalg::{ComputeBackend, CpuParallelBackend, Matrix, SerialBackend, Trans};
+use exascale_tensor::bench_harness::{bench, gflops, speedup, Measurement, Report};
+use exascale_tensor::linalg::{
+    mttkrp_materialized, ComputeBackend, CpuParallelBackend, Matrix, SerialBackend, Trans,
+};
 use exascale_tensor::tensor::unfold::unfold_1;
 use exascale_tensor::tensor::DenseTensor;
+use exascale_tensor::util::alloc::CountingAlloc;
 use exascale_tensor::util::rng::Xoshiro256;
 
-const THREAD_SWEEP: [usize; 4] = [1, 2, 4, 8];
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new();
+
+/// Runs `f` once after a warmup call and returns
+/// `(bytes allocated, transient peak above entry)` for the measured call.
+/// The warmup absorbs one-time growth (thread-local pack arenas, Vec
+/// high-water marks) so steady-state traffic is what's attributed.
+fn alloc_profile<T>(mut f: impl FnMut() -> T) -> (f64, f64) {
+    // Several warmup rounds: parallel arms hand chunks to whichever pool
+    // workers are free, so one round is not guaranteed to touch (and grow)
+    // every worker's thread-local pack arena.
+    for _ in 0..3 {
+        let _ = f();
+    }
+    ALLOC.reset_peak();
+    let live_before = ALLOC.live_bytes();
+    let bytes_before = ALLOC.allocated_bytes();
+    let out = f();
+    let bytes = ALLOC.allocated_bytes().saturating_sub(bytes_before) as f64;
+    let peak = ALLOC.peak_bytes().saturating_sub(live_before) as f64;
+    drop(out);
+    (bytes, peak)
+}
+
+fn push_with_gflops(rep: &mut Report, m: Measurement, flops: f64, baseline_s: f64, threads: usize) {
+    let g = gflops(flops, m.mean_s);
+    let sp = speedup(baseline_s, m.mean_s);
+    rep.push(m.with_threads(threads).with_extra("gflops", g).with_extra("speedup", sp));
+}
 
 fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (min_iters, budget_s) = if quick { (2usize, 0.2f64) } else { (5, 1.0) };
+    let thread_sweep: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4, 8] };
+    let gemm_shapes: &[(usize, usize, usize)] = if quick {
+        &[(96, 96, 96)]
+    } else {
+        &[(256, 256, 256), (512, 64, 512)]
+    };
+    let (dim, rank) = if quick { (48usize, 8usize) } else { (96, 16) };
+
     let mut rng = Xoshiro256::seed_from_u64(4242);
     let mut rep = Report::new(
         "BENCH_gemm_mttkrp",
-        "serial vs parallel GEMM/MTTKRP throughput (ComputeBackend)",
+        "serial vs parallel GEMM + fused vs materialized MTTKRP (ComputeBackend)",
     );
 
     // ── GEMM shapes ──
-    for (m, k, n) in [(256usize, 256usize, 256usize), (512, 64, 512)] {
+    for &(m, k, n) in gemm_shapes {
         let a = Matrix::random_normal(m, k, &mut rng);
         let b = Matrix::random_normal(k, n, &mut rng);
         let flops = 2.0 * (m * n * k) as f64;
 
-        let serial = bench(&format!("gemm_{m}x{k}x{n}_serial"), 5, 1.0, || {
+        let serial = bench(&format!("gemm_{m}x{k}x{n}_serial"), min_iters, budget_s, || {
             SerialBackend.matmul(&a, Trans::No, &b, Trans::No)
         });
         let serial_s = serial.mean_s;
@@ -43,64 +94,122 @@ fn main() {
             serial_s * 1e3,
             gflops(flops, serial_s)
         );
-        let g = gflops(flops, serial_s);
-        rep.push(serial.with_threads(1).with_extra("gflops", g).with_extra("speedup", 1.0));
+        push_with_gflops(&mut rep, serial, flops, serial_s, 1);
 
-        for &t in &THREAD_SWEEP[1..] {
-            let be = CpuParallelBackend::new(t);
-            let meas = bench(&format!("gemm_{m}x{k}x{n}_par{t}"), 5, 1.0, || {
+        for &t in &thread_sweep[1..] {
+            // Threshold 0: always measure the strip-split path itself —
+            // quick-mode shapes sit below the serial-fallback cutoff, and a
+            // "parallel" row that silently benched the serial branch would
+            // defeat the CI smoke job.
+            let be = CpuParallelBackend::new(t).with_min_par_flops(0);
+            let meas = bench(&format!("gemm_{m}x{k}x{n}_par{t}"), min_iters, budget_s, || {
                 be.matmul(&a, Trans::No, &b, Trans::No)
             });
-            let sp = speedup(serial_s, meas.mean_s);
             println!(
-                "gemm {m}×{k}×{n} par×{t}:  {:.3} ms ({:.2} GF/s, {sp:.2}x)",
+                "gemm {m}×{k}×{n} par×{t}:  {:.3} ms ({:.2} GF/s, {:.2}x)",
                 meas.mean_s * 1e3,
-                gflops(flops, meas.mean_s)
+                gflops(flops, meas.mean_s),
+                speedup(serial_s, meas.mean_s)
             );
-            let g = gflops(flops, meas.mean_s);
-            rep.push(meas.with_threads(t).with_extra("gflops", g).with_extra("speedup", sp));
+            push_with_gflops(&mut rep, meas, flops, serial_s, t);
         }
     }
 
-    // ── MTTKRP: 96³ tensor, rank 16 ──
-    let (dim, rank) = (96usize, 16usize);
+    // ── MTTKRP: dim³ tensor at `rank` — fused vs materialized ──
     let t3 = DenseTensor::random_normal([dim, dim, dim], &mut rng);
     let x1 = unfold_1(&t3);
     let bfac = Matrix::random_normal(dim, rank, &mut rng);
     let cfac = Matrix::random_normal(dim, rank, &mut rng);
-    // X₁ (I × JK) · KR (JK × R): 2·I·JK·R flops plus the KR formation.
+    // X₁ (I × JK) · KR (JK × R): 2·I·JK·R flops either way; the
+    // materialized arm additionally forms the JK × R Khatri-Rao buffer.
     let flops = 2.0 * (dim * dim * dim * rank) as f64;
+    let kr_bytes = (dim * dim * rank * std::mem::size_of::<f32>()) as f64;
 
-    let serial = bench("mttkrp_96_r16_serial", 5, 1.0, || {
+    let (mat_bytes, mat_peak) = alloc_profile(|| mttkrp_materialized(&x1, &cfac, &bfac));
+    let mat = bench(&format!("mttkrp_{dim}_r{rank}_materialized"), min_iters, budget_s, || {
+        mttkrp_materialized(&x1, &cfac, &bfac)
+    });
+    let mat_s = mat.mean_s;
+    println!(
+        "mttkrp {dim}³ r{rank} materialized: {:.3} ms ({:.2} GF/s, {:.0} KB/call, peak {:.0} KB)",
+        mat_s * 1e3,
+        gflops(flops, mat_s),
+        mat_bytes / 1024.0,
+        mat_peak / 1024.0
+    );
+    let row = mat.with_extra("alloc_bytes", mat_bytes).with_extra("alloc_peak_bytes", mat_peak);
+    push_with_gflops(&mut rep, row, flops, mat_s, 1);
+
+    let (fused_bytes, fused_peak) = alloc_profile(|| SerialBackend.mttkrp(1, &x1, &cfac, &bfac));
+    let fused = bench(&format!("mttkrp_{dim}_r{rank}_fused_serial"), min_iters, budget_s, || {
         SerialBackend.mttkrp(1, &x1, &cfac, &bfac)
     });
-    let serial_s = serial.mean_s;
     println!(
-        "mttkrp 96³ r16 serial: {:.3} ms ({:.2} GF/s)",
-        serial_s * 1e3,
-        gflops(flops, serial_s)
+        "mttkrp {dim}³ r{rank} fused serial: {:.3} ms ({:.2} GF/s, {:.2}x, {:.0} KB/call, peak {:.0} KB)",
+        fused.mean_s * 1e3,
+        gflops(flops, fused.mean_s),
+        speedup(mat_s, fused.mean_s),
+        fused_bytes / 1024.0,
+        fused_peak / 1024.0
     );
-    let g = gflops(flops, serial_s);
-    rep.push(serial.with_threads(1).with_extra("gflops", g).with_extra("speedup", 1.0));
+    let row = fused
+        .with_extra("alloc_bytes", fused_bytes)
+        .with_extra("alloc_peak_bytes", fused_peak);
+    push_with_gflops(&mut rep, row, flops, mat_s, 1);
 
-    for &t in &THREAD_SWEEP[1..] {
-        let be = CpuParallelBackend::new(t);
-        let meas = bench(&format!("mttkrp_96_r16_par{t}"), 5, 1.0, || {
+    // The memory claim, asserted: the fused path must never allocate the
+    // (J·K)×R Khatri-Rao intermediate the materialized arm cannot avoid.
+    assert!(
+        fused_bytes < kr_bytes,
+        "fused MTTKRP allocated {fused_bytes} B/call — at least the {kr_bytes} B Khatri-Rao \
+         buffer it exists to avoid"
+    );
+    assert!(
+        fused_peak < mat_peak,
+        "fused MTTKRP peak {fused_peak} B not below materialized peak {mat_peak} B"
+    );
+    assert!(
+        mat_bytes >= kr_bytes,
+        "materialized arm allocated {mat_bytes} B/call — did it stop forming the \
+         {kr_bytes} B Khatri-Rao buffer? Update the bench arms"
+    );
+    println!(
+        "alloc win asserted: fused {:.0} KB/call vs materialized {:.0} KB/call (KR buffer {:.0} KB)",
+        fused_bytes / 1024.0,
+        mat_bytes / 1024.0,
+        kr_bytes / 1024.0
+    );
+
+    for &t in &thread_sweep[1..] {
+        // Threshold 0: see the GEMM sweep — the panel/row split must be
+        // what's measured, not the serial fallback.
+        let be = CpuParallelBackend::new(t).with_min_par_flops(0);
+        let (par_bytes, par_peak) = alloc_profile(|| be.mttkrp(1, &x1, &cfac, &bfac));
+        let meas = bench(&format!("mttkrp_{dim}_r{rank}_fused_par{t}"), min_iters, budget_s, || {
             be.mttkrp(1, &x1, &cfac, &bfac)
         });
-        let sp = speedup(serial_s, meas.mean_s);
         println!(
-            "mttkrp 96³ r16 par×{t}:  {:.3} ms ({:.2} GF/s, {sp:.2}x)",
+            "mttkrp {dim}³ r{rank} fused par×{t}:  {:.3} ms ({:.2} GF/s, {:.2}x, peak {:.0} KB)",
             meas.mean_s * 1e3,
-            gflops(flops, meas.mean_s)
+            gflops(flops, meas.mean_s),
+            speedup(mat_s, meas.mean_s),
+            par_peak / 1024.0
         );
-        let g = gflops(flops, meas.mean_s);
-        rep.push(meas.with_threads(t).with_extra("gflops", g).with_extra("speedup", sp));
+        let row = meas
+            .with_extra("alloc_bytes", par_bytes)
+            .with_extra("alloc_peak_bytes", par_peak);
+        push_with_gflops(&mut rep, row, flops, mat_s, t);
     }
 
     rep.finish();
-    match rep.save_as("BENCH_gemm_mttkrp.json") {
-        Ok(()) => println!("(saved BENCH_gemm_mttkrp.json)"),
-        Err(e) => eprintln!("warning: could not save BENCH_gemm_mttkrp.json: {e}"),
+    if quick {
+        // Quick rows (bounded shapes, truncated sweep) are not comparable
+        // to the tracked trajectory — never overwrite it from CI smoke.
+        println!("(--quick: not overwriting BENCH_gemm_mttkrp.json)");
+    } else {
+        match rep.save_as("BENCH_gemm_mttkrp.json") {
+            Ok(()) => println!("(saved BENCH_gemm_mttkrp.json)"),
+            Err(e) => eprintln!("warning: could not save BENCH_gemm_mttkrp.json: {e}"),
+        }
     }
 }

@@ -15,7 +15,6 @@
 
 use crate::cp::CpModel;
 use crate::linalg::backend::{ComputeBackend, SerialBackend};
-use crate::linalg::products::hadamard;
 use crate::linalg::{ridge_solve, Matrix};
 use crate::tensor::unfold::{unfold_2, unfold_3};
 use crate::tensor::{BlockRange, BlockSpec3, TensorSource};
@@ -23,10 +22,12 @@ use crate::util::threadpool::ThreadPool;
 use anyhow::Result;
 use std::sync::Mutex;
 
-/// Streams one mode's MTTKRP `X_(mode) · KR` over the block grid.
+/// Streams one mode's MTTKRP `X_(mode) · (slow ⊙ fast)` over the block
+/// grid.
 ///
 /// Per-block contractions dispatch through the serial [`ComputeBackend`]
-/// reference — parallelism lives at block granularity via
+/// reference — now the fused kernel, so no block ever materializes its
+/// Khatri-Rao operand — and parallelism lives at block granularity via
 /// [`ThreadPool::for_each_chunk`], so the inner kernel must not nest
 /// another pool.
 fn streaming_mttkrp(
@@ -61,8 +62,9 @@ fn streaming_mttkrp(
             };
             let mut g = acc.lock().unwrap();
             for c in 0..r {
-                for row in 0..rows {
-                    g.add_assign_at(off + row, c, part.get(row, c));
+                let dst = &mut g.col_mut(c)[off..off + rows];
+                for (d, &s) in dst.iter_mut().zip(part.col(c)) {
+                    *d += s;
                 }
             }
         }
@@ -80,7 +82,7 @@ pub fn refine(
 ) -> Result<CpModel> {
     let ridge = 1e-8f32;
     let be = SerialBackend;
-    let gram = |x: &Matrix, y: &Matrix| hadamard(&be.gram(x), &be.gram(y));
+    let gram = |x: &Matrix, y: &Matrix| be.kr_gram(x, y);
     for _ in 0..sweeps {
         let m1 = streaming_mttkrp(src, &model, 1, block, pool);
         model.a = ridge_solve(&gram(&model.c, &model.b), &m1.transpose(), ridge)?.transpose();

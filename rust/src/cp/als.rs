@@ -12,7 +12,6 @@
 use super::init::{hosvd_init, random_init, InitMethod};
 use super::model::CpModel;
 use crate::linalg::backend::{ComputeBackend, SerialBackend};
-use crate::linalg::products::hadamard;
 use crate::linalg::{ridge_solve, Matrix};
 use crate::tensor::unfold::{unfold_1, unfold_2, unfold_3};
 use crate::tensor::{DenseTensor, SparseTensor};
@@ -104,8 +103,9 @@ pub fn als_decompose_with(
 
 /// One ALS mode update given the mode unfolding and the other two factors
 /// (`slow ⊙ fast` ordering must match the unfolding convention).  The
-/// MTTKRP — the sweep's hot spot — and the factor Grams dispatch through
-/// the backend.
+/// MTTKRP — the sweep's hot spot, fused so the Khatri-Rao product is never
+/// formed — and the Gram (`kr_gram`, Hadamard-of-Grams) both dispatch
+/// through the backend: a whole normal equation without a `(J·K)×R` buffer.
 fn mode_update(
     x_n: &Matrix,
     mode: usize,
@@ -115,7 +115,7 @@ fn mode_update(
     backend: &dyn ComputeBackend,
 ) -> Result<Matrix> {
     let mttkrp = backend.mttkrp(mode, x_n, slow, fast);
-    let gram = hadamard(&backend.gram(slow), &backend.gram(fast));
+    let gram = backend.kr_gram(slow, fast);
     // Solve gram · Fᵀ = mttkrpᵀ  ⇒  F = mttkrp · gram⁻¹ (gram symmetric).
     let sol = ridge_solve(&gram, &mttkrp.transpose(), ridge)?;
     Ok(sol.transpose())
@@ -186,7 +186,7 @@ fn gram_solve(
     ridge: f32,
     backend: &dyn ComputeBackend,
 ) -> Result<Matrix> {
-    let gram = hadamard(&backend.gram(g1), &backend.gram(g2));
+    let gram = backend.kr_gram(g1, g2);
     let sol = ridge_solve(&gram, &mttkrp.transpose(), ridge)?;
     Ok(sol.transpose())
 }

@@ -15,9 +15,9 @@
 //!   "Baseline (CPU)" arm.
 //! * [`CpuParallelBackend`] — the same micro-kernel repartitioned over
 //!   [`ThreadPool`]: GEMMs split into row/column macro-strips (each worker
-//!   packs its own panels), MTTKRPs parallelized over unfolding row
-//!   chunks, and `gemm_batch` fanned out item-per-worker.  This is the
-//!   "Parallel on CPU" arm.
+//!   packs its own panels), fused MTTKRPs split by slow-factor panels or
+//!   output rows (see below), and `gemm_batch` fanned out item-per-worker.
+//!   This is the "Parallel on CPU" arm.
 //! * `runtime::XlaBackend` — implements the same trait, delegating the
 //!   dense kernels to a CPU backend while exposing the fused AOT Pallas
 //!   artifacts through the [`ComputeBackend::block_compressor`] /
@@ -27,14 +27,36 @@
 //! Strip splitting preserves the serial kernel's `KC`-panel accumulation
 //! order, so parallel results match the serial reference to float
 //! round-off (bitwise-identical when strip widths align with the
-//! micro-kernel's column blocking) — the differential tests in
+//! micro-kernel's `NR`-column register tiling) — the differential tests in
 //! `rust/tests/backend_differential.rs` hold to well below `1e-4`.
+//!
+//! ## Fused MTTKRP dataflow
+//!
+//! [`ComputeBackend::mttkrp`] defaults to the **fused zero-materialization
+//! kernel** ([`matmul::mttkrp_fused`]): the Khatri-Rao operand is
+//! synthesized straight into the packed `KC×NC` B-panels, so no `(J·K)×R`
+//! intermediate is ever allocated — the memory win the paper's scalability
+//! claim rests on.  [`CpuParallelBackend`] splits the fused kernel two
+//! ways, both built on [`matmul::mttkrp_fused_acc`]'s exact splitting
+//! invariant:
+//!
+//! * **panel split** (default when the slow factor has enough rows): each
+//!   [`ThreadPool::for_each_chunk`] chunk streams a contiguous range of
+//!   slow-factor panels — a contiguous byte range of the unfolding — into a
+//!   per-chunk `I×R` accumulator, merged once under a lock;
+//! * **row split** (tall outputs with a short slow factor): workers own
+//!   disjoint output row strips, stitched together with no merge reduction.
+//!
+//! The materialized `khatri_rao`+GEMM formulation survives only as
+//! [`mttkrp_materialized`], the differential-test oracle.  The Gram of the
+//! (never-formed) Khatri-Rao operand comes from
+//! [`ComputeBackend::kr_gram`] via the Hadamard-of-Grams identity.
 
 use super::matmul::{self, Trans};
 use super::matrix::Matrix;
-use super::products::khatri_rao;
+use super::products::{hadamard, khatri_rao};
 use crate::util::threadpool::ThreadPool;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Shape of `op(M)`.
 #[inline]
@@ -123,18 +145,25 @@ pub trait ComputeBackend: Send + Sync {
     /// result is `dims[mode-1] × R`.  `mode` is carried for assertions and
     /// diagnostics — the contraction itself is fully determined by the
     /// operands.
+    ///
+    /// The default is the **fused** kernel ([`matmul::mttkrp_fused`]): the
+    /// Khatri-Rao product is never materialized — its entries exist only
+    /// inside the packed `KC×NC` panels of the blocked GEMM.  The
+    /// materialized formulation survives as [`mttkrp_materialized`], the
+    /// differential-test oracle.
     fn mttkrp(&self, mode: usize, x_mode: &Matrix, slow: &Matrix, fast: &Matrix) -> Matrix {
-        assert!((1..=3).contains(&mode), "mttkrp: mode must be 1..=3, got {mode}");
-        assert_eq!(
-            x_mode.cols(),
-            slow.rows() * fast.rows(),
-            "mttkrp mode {mode}: unfolding has {} columns but slow×fast = {}×{}",
-            x_mode.cols(),
-            slow.rows(),
-            fast.rows()
-        );
-        let kr = khatri_rao(slow, fast);
-        self.matmul(x_mode, Trans::No, &kr, Trans::No)
+        validate_mttkrp(mode, x_mode, slow, fast);
+        matmul::mttkrp_fused(x_mode, slow, fast)
+    }
+
+    /// Gram `(slow ⊙ fast)ᵀ(slow ⊙ fast)` of the *implicit* Khatri-Rao
+    /// operand via the Hadamard-of-Grams identity
+    /// `(C ⊙ B)ᵀ(C ⊙ B) = CᵀC * BᵀB` (proven in `linalg::products`) —
+    /// `R×R` work on two factor Grams, never the `(J·K)×R` product.  This
+    /// is the Gram-side twin of the fused [`mttkrp`](ComputeBackend::mttkrp):
+    /// together they make a full ALS normal equation Khatri-Rao-free.
+    fn kr_gram(&self, slow: &Matrix, fast: &Matrix) -> Matrix {
+        hadamard(&self.gram(slow), &self.gram(fast))
     }
 
     /// Stage hook: a backend owning a fused block-compression kernel (the
@@ -150,6 +179,29 @@ pub trait ComputeBackend: Send + Sync {
     fn proxy_decomposer(&self) -> Option<&dyn crate::coordinator::ProxyDecomposer> {
         None
     }
+}
+
+/// Shared MTTKRP operand validation (trait default + parallel override).
+fn validate_mttkrp(mode: usize, x_mode: &Matrix, slow: &Matrix, fast: &Matrix) {
+    assert!((1..=3).contains(&mode), "mttkrp: mode must be 1..=3, got {mode}");
+    assert_eq!(
+        x_mode.cols(),
+        slow.rows() * fast.rows(),
+        "mttkrp mode {mode}: unfolding has {} columns but slow×fast = {}×{}",
+        x_mode.cols(),
+        slow.rows(),
+        fast.rows()
+    );
+}
+
+/// Reference MTTKRP that **materializes** the `(J·K)×R` Khatri-Rao product
+/// before a single GEMM — the formulation the fused kernel replaced.  Kept
+/// solely as the differential-test oracle and the `materialized` arm of the
+/// `gemm_mttkrp` bench; production paths must not call it (the buffer it
+/// allocates is exactly the memory wall the fused path removes).
+pub fn mttkrp_materialized(x_mode: &Matrix, slow: &Matrix, fast: &Matrix) -> Matrix {
+    let kr = khatri_rao(slow, fast);
+    matmul::matmul(x_mode, Trans::No, &kr, Trans::No)
 }
 
 /// Single-threaded reference backend: thin forwarding to the cache-blocked
@@ -295,6 +347,57 @@ impl ComputeBackend for CpuParallelBackend {
         }
     }
 
+    /// Fused MTTKRP, split over the pool two ways (both exact: they
+    /// partition [`matmul::mttkrp_fused_acc`]'s accumulation ranges):
+    ///
+    /// * **panel split** when the slow factor is deep enough — each chunk
+    ///   of slow-factor rows covers a contiguous column (and byte) range of
+    ///   the unfolding; per-chunk `I×R` accumulators merge once under a
+    ///   lock (`O(I·R)` per chunk, tiny next to the streamed panel work);
+    /// * **row split** otherwise — workers own disjoint output row strips,
+    ///   each streaming every panel of its strip, stitched with
+    ///   `set_block` (no reduction).
+    fn mttkrp(&self, mode: usize, x_mode: &Matrix, slow: &Matrix, fast: &Matrix) -> Matrix {
+        validate_mttkrp(mode, x_mode, slow, fast);
+        let (i, r) = (x_mode.rows(), fast.cols());
+        let kdim = slow.rows();
+        let flops = 2usize
+            .saturating_mul(i)
+            .saturating_mul(x_mode.cols())
+            .saturating_mul(r);
+        let threads = self.pool.size();
+        if threads == 1 || flops < self.min_par_flops {
+            return matmul::mttkrp_fused(x_mode, slow, fast);
+        }
+        if kdim >= 2 * threads || kdim > i {
+            let acc = Mutex::new(Matrix::zeros(i, r));
+            self.pool.for_each_chunk(kdim, 1, |panels| {
+                let mut part = Matrix::zeros(i, r);
+                matmul::mttkrp_fused_acc(x_mode, 0..i, panels, slow, fast, &mut part);
+                let mut merged = acc.lock().unwrap();
+                for c in 0..r {
+                    for (dst, &src) in merged.col_mut(c).iter_mut().zip(part.col(c)) {
+                        *dst += src;
+                    }
+                }
+            });
+            acc.into_inner().unwrap()
+        } else {
+            let strips = ThreadPool::partition(i, threads);
+            let parts = self.pool.map_indexed(strips.len(), |s| {
+                let (i0, i1) = strips[s];
+                let mut part = Matrix::zeros(i1 - i0, r);
+                matmul::mttkrp_fused_acc(x_mode, i0..i1, 0..kdim, slow, fast, &mut part);
+                part
+            });
+            let mut out = Matrix::zeros(i, r);
+            for (s, part) in parts.iter().enumerate() {
+                out.set_block(strips[s].0, 0, part);
+            }
+            out
+        }
+    }
+
     fn gemm_batch(
         &self,
         alpha: f32,
@@ -390,8 +493,8 @@ mod tests {
     #[test]
     fn parallel_matches_serial_bitwise_on_aligned_tiles() {
         // n = 256 over 4 workers → 64-wide strips, a multiple of the
-        // micro-kernel's 8-column blocking, and k < KC keeps a single
-        // accumulation panel: identical floats.
+        // micro-kernel's NR-column register tiling, and k < KC keeps a
+        // single accumulation panel: identical floats.
         let mut rng = Xoshiro256::seed_from_u64(901);
         let a = Matrix::random_normal(150, 70, &mut rng);
         let b = Matrix::random_normal(70, 256, &mut rng);
@@ -449,6 +552,32 @@ mod tests {
         let slow = SerialBackend.mttkrp(1, &x1, &c, &b);
         close(&fast, &slow, 1e-6);
         assert_eq!((fast.rows(), fast.cols()), (i, r));
+    }
+
+    #[test]
+    fn fused_mttkrp_matches_materialized_oracle_both_splits() {
+        let mut rng = Xoshiro256::seed_from_u64(907);
+        // (i, j, k) chosen so k ≥ 2·threads forces the panel split and
+        // k < 2·threads with tall i forces the row split.
+        for &(i, j, k, r) in &[(10usize, 6usize, 20usize, 3usize), (40, 9, 3, 5)] {
+            let x1 = Matrix::random_normal(i, j * k, &mut rng);
+            let b = Matrix::random_normal(j, r, &mut rng);
+            let c = Matrix::random_normal(k, r, &mut rng);
+            let oracle = mttkrp_materialized(&x1, &c, &b);
+            close(&SerialBackend.mttkrp(1, &x1, &c, &b), &oracle, 1e-5);
+            close(&par().mttkrp(1, &x1, &c, &b), &oracle, 1e-5);
+        }
+    }
+
+    #[test]
+    fn kr_gram_matches_materialized_gram() {
+        let mut rng = Xoshiro256::seed_from_u64(908);
+        let b = Matrix::random_normal(11, 4, &mut rng);
+        let c = Matrix::random_normal(6, 4, &mut rng);
+        let kr = khatri_rao(&c, &b);
+        let want = SerialBackend.gram(&kr);
+        close(&SerialBackend.kr_gram(&c, &b), &want, 1e-4);
+        close(&par().kr_gram(&c, &b), &want, 1e-4);
     }
 
     #[test]

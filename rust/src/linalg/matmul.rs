@@ -1,13 +1,51 @@
-//! Blocked GEMM — the CPU-baseline hot path.
+//! Blocked GEMM and the fused zero-materialization MTTKRP — the CPU hot path.
 //!
-//! `gemm(alpha, A, opA, B, opB, beta, C)` computes
-//! `C ← alpha · op(A) · op(B) + beta · C` with cache-blocked loops and a
-//! column-major micro-kernel.  This is the routine the paper's "Baseline
-//! (CPU)" variant spends its time in; the "GPU tensor core" variant replaces
-//! it with the AOT Pallas artifact (see `runtime`).  §Perf iterates on the
-//! block sizes below.
+//! Two kernels live here, sharing one packing/micro-kernel substrate:
+//!
+//! * [`gemm`]: `C ← alpha · op(A) · op(B) + beta · C` with BLIS-style cache
+//!   blocking (`MC`/`KC`/`NC` macro panels) and a register-tiled `MR×NR`
+//!   micro-kernel.
+//! * [`mttkrp_fused`]: `X · (slow ⊙ fast)` where the Khatri-Rao operand is
+//!   **never materialized** — its entries are synthesized column-by-column
+//!   straight into the packed `KC×NC` B-panel ([`pack_b_khatri_rao`]), so
+//!   the only place `(slow ⊙ fast)` values ever exist is a reusable
+//!   `≤ KC·NC` scratch panel, regardless of how large `J·K` is.  This is
+//!   the paper's scalability argument applied to the ALS hot spot: the
+//!   `O(JK·R)` buffer that bounds tensor size on the materialized path
+//!   simply does not exist.
+//!
+//! ## Dataflow
+//!
+//! ```text
+//!   jc-loop (NC cols of C)                 B source: dense op(B) panel
+//!     pc-loop (KC of the inner dim)  ──▶     OR virtual Khatri-Rao rows
+//!       pack_b  → b_pack (KC×NC, NR-strips, zero-padded)
+//!       ic-loop (MC rows of C)
+//!         pack_a → a_pack (MC×KC, MR-strips, zero-padded)
+//!         macro_kernel: MR×NR register tiles, FMA-friendly `i`-contiguous
+//!                       inner loops that LLVM autovectorizes
+//! ```
+//!
+//! ## Tiling constants
+//!
+//! `MC=128`, `KC=256`, `NC=512` keep the A panel (~128 KB) in L2 and stream
+//! the B panel through L3 (tuned in EXPERIMENTS.md §Perf).  The register
+//! tile is `MR×NR` with `NR = 4` output columns and `MR` rows gated on the
+//! compile-time SIMD width: 8 (portable), 16 (`avx2`), 32 (`avx512f`).
+//! Accumulators are `[[f32; MR]; NR]` arrays kept in vector registers; the
+//! inner loop broadcasts one B value against `MR` contiguous packed A lanes.
+//!
+//! ## Scratch arena
+//!
+//! Pack buffers live in a thread-local [`PackArena`] and are reused across
+//! calls: the thousands of small GEMMs in the blocked TTM chain no longer
+//! allocate per call (the seed kernel paid two `vec![0.0; …]` per GEMM).
+//! Pool workers get their own arena per scope; the caller thread's arena
+//! persists for the life of the thread.
 
 use super::matrix::Matrix;
+use std::cell::RefCell;
+use std::ops::Range;
 
 /// Transpose flag for [`gemm`] operands.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
@@ -16,12 +54,54 @@ pub enum Trans {
     Yes,
 }
 
-// Cache-blocking parameters, tuned in EXPERIMENTS.md §Perf on the benchmark
-// shapes (tall-skinny factors, fat unfoldings). MC×KC panel of A ~128 KB
-// fits L2; KC×NC panel of B streams through L3.
+// Cache-blocking parameters (macro tiles): MC×KC panel of A ~128 KB fits
+// L2; KC×NC panel of B streams through L3.
 const MC: usize = 128;
 const KC: usize = 256;
 const NC: usize = 512;
+
+/// Register-tile rows: the packed-A strip width and the vector-lane axis of
+/// the micro-kernel.  Gated on compile-time target features so
+/// `-C target-cpu=native` (or `-C target-feature=+avx2`) widens the tile.
+#[cfg(target_feature = "avx512f")]
+pub const MR: usize = 32;
+#[cfg(all(target_feature = "avx2", not(target_feature = "avx512f")))]
+pub const MR: usize = 16;
+#[cfg(not(any(target_feature = "avx2", target_feature = "avx512f")))]
+pub const MR: usize = 8;
+
+/// Register-tile columns: output columns sharing each packed-A pass, so
+/// every A load feeds `NR` FMAs.  Column strips split along multiples of
+/// `NR` reproduce the serial kernel bitwise (see `linalg::backend`).
+pub const NR: usize = 4;
+
+/// Reusable per-thread packing scratch: one A-panel and one B-panel buffer,
+/// grown high-water-mark style and never shrunk.
+#[derive(Default)]
+struct PackArena {
+    a: Vec<f32>,
+    b: Vec<f32>,
+}
+
+impl PackArena {
+    /// Buffers sized for an `m×k` by `k×n` product under the current
+    /// blocking (strip-padded to MR/NR multiples).
+    fn reserve(&mut self, m: usize, n: usize, k: usize) -> (&mut [f32], &mut [f32]) {
+        let a_need = MC.min(m).div_ceil(MR) * MR * KC.min(k);
+        let b_need = NC.min(n).div_ceil(NR) * NR * KC.min(k);
+        if self.a.len() < a_need {
+            self.a.resize(a_need, 0.0);
+        }
+        if self.b.len() < b_need {
+            self.b.resize(b_need, 0.0);
+        }
+        (&mut self.a[..a_need], &mut self.b[..b_need])
+    }
+}
+
+thread_local! {
+    static PACK_ARENA: RefCell<PackArena> = RefCell::new(PackArena::default());
+}
 
 #[inline]
 fn dims(m: &Matrix, t: Trans) -> (usize, usize) {
@@ -33,8 +113,17 @@ fn dims(m: &Matrix, t: Trans) -> (usize, usize) {
 
 /// `C ← alpha · op(A)·op(B) + beta · C`.
 ///
-/// Panics if shapes disagree.
-pub fn gemm(alpha: f32, a: &Matrix, op_a: Trans, b: &Matrix, op_b: Trans, beta: f32, c: &mut Matrix) {
+/// Panics if shapes disagree.  `beta = 0` clears `C` (including NaNs)
+/// before accumulating.
+pub fn gemm(
+    alpha: f32,
+    a: &Matrix,
+    op_a: Trans,
+    b: &Matrix,
+    op_b: Trans,
+    beta: f32,
+    c: &mut Matrix,
+) {
     let (m, k) = dims(a, op_a);
     let (k2, n) = dims(b, op_b);
     assert_eq!(k, k2, "gemm: inner dimension mismatch ({k} vs {k2})");
@@ -55,82 +144,239 @@ pub fn gemm(alpha: f32, a: &Matrix, op_a: Trans, b: &Matrix, op_b: Trans, beta: 
         return;
     }
 
-    // Pack op(A) panels into row-major and op(B) panels into column-major so
-    // the micro-kernel streams both contiguously.  Buffers are sized to the
-    // actual problem (§Perf): fixed MC·KC/KC·NC buffers cost ~640 KB of
-    // zeroing per call, which dominates the thousands of small GEMMs in the
-    // blocked TTM chain.
-    let mut a_pack = vec![0.0f32; MC.min(m) * KC.min(k)];
-    let mut b_pack = vec![0.0f32; KC.min(k) * NC.min(n)];
-
-    let mut jc = 0;
-    while jc < n {
-        let nb = NC.min(n - jc);
-        let mut pc = 0;
-        while pc < k {
-            let kb = KC.min(k - pc);
-            pack_b(b, op_b, pc, jc, kb, nb, &mut b_pack);
-            let mut ic = 0;
-            while ic < m {
-                let mb = MC.min(m - ic);
-                pack_a(a, op_a, ic, pc, mb, kb, &mut a_pack);
-                micro_kernel(alpha, &a_pack, &b_pack, mb, nb, kb, c, ic, jc);
-                ic += MC;
-            }
-            pc += KC;
-        }
-        jc += NC;
-    }
-}
-
-/// Packs `op(A)[ic..ic+mb, pc..pc+kb]` row-major into `out`.
-fn pack_a(a: &Matrix, op: Trans, ic: usize, pc: usize, mb: usize, kb: usize, out: &mut [f32]) {
-    match op {
-        Trans::No => {
-            for p in 0..kb {
-                let col = a.col(pc + p);
-                for i in 0..mb {
-                    out[i * kb + p] = col[ic + i];
+    PACK_ARENA.with(|cell| {
+        let arena = &mut *cell.borrow_mut();
+        let (a_pack, b_pack) = arena.reserve(m, n, k);
+        let mut jc = 0;
+        while jc < n {
+            let nb = NC.min(n - jc);
+            let mut pc = 0;
+            while pc < k {
+                let kb = KC.min(k - pc);
+                pack_b(b, op_b, pc, jc, kb, nb, b_pack);
+                let mut ic = 0;
+                while ic < m {
+                    let mb = MC.min(m - ic);
+                    pack_a(a, op_a, ic, pc, mb, kb, a_pack);
+                    macro_kernel(alpha, a_pack, b_pack, mb, nb, kb, c, ic, jc);
+                    ic += MC;
                 }
+                pc += KC;
             }
+            jc += NC;
         }
-        Trans::Yes => {
-            // op(A)[i,p] = A[p,i]: columns of A become rows of op(A).
-            for i in 0..mb {
-                let col = a.col(ic + i);
-                out[i * kb..i * kb + kb].copy_from_slice(&col[pc..pc + kb]);
-            }
-        }
-    }
+    });
 }
 
-/// Packs `op(B)[pc..pc+kb, jc..jc+nb]` column-major into `out`.
-fn pack_b(b: &Matrix, op: Trans, pc: usize, jc: usize, kb: usize, nb: usize, out: &mut [f32]) {
-    match op {
-        Trans::No => {
-            for j in 0..nb {
-                let col = b.col(jc + j);
-                out[j * kb..j * kb + kb].copy_from_slice(&col[pc..pc + kb]);
-            }
-        }
-        Trans::Yes => {
-            for j in 0..nb {
-                let base = j * kb;
-                for p in 0..kb {
-                    out[base + p] = b.get(jc + j, pc + p);
-                }
-            }
-        }
-    }
-}
-
-/// Inner kernel over packed panels: A row-major (mb×kb), B col-major (kb×nb).
+/// Fused MTTKRP `X · (slow ⊙ fast)` into a fresh `I × R` matrix.
 ///
-/// Register blocking (§Perf): 4 output columns share each A-row pass, so
-/// every `a` load feeds 4 FMAs — short-`k` GEMMs (the TTM chain's k=d
-/// contractions) are load-bound in the 1-column variant.  Within the pass,
-/// 4-wide `p` unrolling lets LLVM vectorize.
-fn micro_kernel(
+/// `X` is an `I × (J·K)` unfolding, `fast` is `J × R` (row index varies
+/// fastest along X's columns), `slow` is `K × R`.  The Khatri-Rao operand
+/// exists only as transient packed `KC×NC` panels — no `(J·K)×R`
+/// intermediate is ever allocated.  The materialized reference
+/// (`linalg::backend::mttkrp_materialized`) is kept as the test oracle.
+pub fn mttkrp_fused(x: &Matrix, slow: &Matrix, fast: &Matrix) -> Matrix {
+    let mut out = Matrix::zeros(x.rows(), fast.cols());
+    mttkrp_fused_acc(x, 0..x.rows(), 0..slow.rows(), slow, fast, &mut out);
+    out
+}
+
+/// Accumulating fused-MTTKRP building block: adds the contribution of
+/// unfolding rows `rows` and slow-factor panels `panels` into `out`
+/// (shaped `rows.len() × R`), i.e.
+/// `out += X[rows, panels·J..] · (slow[panels, :] ⊙ fast)`.
+///
+/// Summing over a partition of `panels` (or stacking over a partition of
+/// `rows`) reproduces the full MTTKRP exactly — this is the splitting
+/// invariant the parallel backend's panel/row decomposition relies on.
+pub fn mttkrp_fused_acc(
+    x: &Matrix,
+    rows: Range<usize>,
+    panels: Range<usize>,
+    slow: &Matrix,
+    fast: &Matrix,
+    out: &mut Matrix,
+) {
+    let jdim = fast.rows();
+    let kdim = slow.rows();
+    let r = fast.cols();
+    assert_eq!(slow.cols(), r, "mttkrp_fused: rank mismatch");
+    assert_eq!(
+        x.cols(),
+        jdim * kdim,
+        "mttkrp_fused: unfolding has {} columns but slow×fast = {}×{}",
+        x.cols(),
+        kdim,
+        jdim
+    );
+    assert!(rows.start <= rows.end && rows.end <= x.rows(), "mttkrp_fused: row range");
+    assert!(
+        panels.start <= panels.end && panels.end <= kdim,
+        "mttkrp_fused: panel range"
+    );
+    let m = rows.end - rows.start;
+    assert_eq!(
+        (out.rows(), out.cols()),
+        (m, r),
+        "mttkrp_fused: accumulator shape mismatch"
+    );
+    // Virtual Khatri-Rao row range covered by the requested panels.
+    let p0 = panels.start * jdim;
+    let p1 = panels.end * jdim;
+    if m == 0 || r == 0 || p0 == p1 {
+        return;
+    }
+
+    PACK_ARENA.with(|cell| {
+        let arena = &mut *cell.borrow_mut();
+        let (a_pack, b_pack) = arena.reserve(m, r, p1 - p0);
+        let mut jc = 0;
+        while jc < r {
+            let nb = NC.min(r - jc);
+            let mut pc = p0;
+            while pc < p1 {
+                let kb = KC.min(p1 - pc);
+                pack_b_khatri_rao(slow, fast, pc, jc, kb, nb, b_pack);
+                let mut ic = 0;
+                while ic < m {
+                    let mb = MC.min(m - ic);
+                    pack_a(x, Trans::No, rows.start + ic, pc, mb, kb, a_pack);
+                    macro_kernel(1.0, a_pack, b_pack, mb, nb, kb, out, ic, jc);
+                    ic += MC;
+                }
+                pc += KC;
+            }
+            jc += NC;
+        }
+    });
+}
+
+/// Packs `op(A)[ic..ic+mb, pc..pc+kb]` into MR-row strips: strip `s` holds
+/// rows `s·MR..s·MR+MR` with element `(i, p)` at `s·kb·MR + p·MR + i`, rows
+/// beyond `mb` zero-padded so the micro-kernel never branches on ragged
+/// edges.
+fn pack_a(a: &Matrix, op: Trans, ic: usize, pc: usize, mb: usize, kb: usize, out: &mut [f32]) {
+    let strips = mb.div_ceil(MR);
+    match op {
+        Trans::No => {
+            for s in 0..strips {
+                let base = s * kb * MR;
+                let i0 = ic + s * MR;
+                let rs = MR.min(mb - s * MR);
+                for p in 0..kb {
+                    let col = &a.col(pc + p)[i0..i0 + rs];
+                    let dst = &mut out[base + p * MR..base + (p + 1) * MR];
+                    dst[..rs].copy_from_slice(col);
+                    dst[rs..].fill(0.0);
+                }
+            }
+        }
+        Trans::Yes => {
+            // op(A)[i, p] = A[pc+p, ic+i]: column ic+i of A is row i of
+            // op(A), contiguous over p.
+            for s in 0..strips {
+                let base = s * kb * MR;
+                let rs = MR.min(mb - s * MR);
+                for ii in 0..MR {
+                    if ii < rs {
+                        let col = &a.col(ic + s * MR + ii)[pc..pc + kb];
+                        for (p, &v) in col.iter().enumerate() {
+                            out[base + p * MR + ii] = v;
+                        }
+                    } else {
+                        for p in 0..kb {
+                            out[base + p * MR + ii] = 0.0;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Packs `op(B)[pc..pc+kb, jc..jc+nb]` into NR-column strips: strip `s`
+/// holds columns `s·NR..s·NR+NR` with element `(p, q)` at
+/// `s·kb·NR + p·NR + q`, columns beyond `nb` zero-padded.
+fn pack_b(b: &Matrix, op: Trans, pc: usize, jc: usize, kb: usize, nb: usize, out: &mut [f32]) {
+    let strips = nb.div_ceil(NR);
+    for s in 0..strips {
+        let base = s * kb * NR;
+        for q in 0..NR {
+            let jq = s * NR + q;
+            if jq >= nb {
+                for p in 0..kb {
+                    out[base + p * NR + q] = 0.0;
+                }
+                continue;
+            }
+            match op {
+                Trans::No => {
+                    let col = &b.col(jc + jq)[pc..pc + kb];
+                    for (p, &v) in col.iter().enumerate() {
+                        out[base + p * NR + q] = v;
+                    }
+                }
+                Trans::Yes => {
+                    for p in 0..kb {
+                        out[base + p * NR + q] = b.get(jc + jq, pc + p);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Packs rows `pc..pc+kb`, columns `jc..jc+nb` of the **virtual** Khatri-Rao
+/// operand `slow ⊙ fast` — `(slow ⊙ fast)[j + k·J, r] = slow[k,r]·fast[j,r]`
+/// — into the same NR-strip layout as [`pack_b`].  Entries are generated on
+/// the fly from the factor columns with running `(j, k)` counters (no
+/// per-row div/mod); this packed panel is the only place Khatri-Rao values
+/// ever exist.
+fn pack_b_khatri_rao(
+    slow: &Matrix,
+    fast: &Matrix,
+    pc: usize,
+    jc: usize,
+    kb: usize,
+    nb: usize,
+    out: &mut [f32],
+) {
+    let jdim = fast.rows();
+    let strips = nb.div_ceil(NR);
+    for s in 0..strips {
+        let base = s * kb * NR;
+        for q in 0..NR {
+            let jq = s * NR + q;
+            if jq >= nb {
+                for p in 0..kb {
+                    out[base + p * NR + q] = 0.0;
+                }
+                continue;
+            }
+            let fcol = fast.col(jc + jq);
+            let scol = slow.col(jc + jq);
+            let (mut k, mut j) = (pc / jdim, pc % jdim);
+            let mut sv = scol[k];
+            for p in 0..kb {
+                out[base + p * NR + q] = sv * fcol[j];
+                j += 1;
+                if j == jdim {
+                    j = 0;
+                    k += 1;
+                    if k < scol.len() {
+                        sv = scol[k];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Drives the register-tiled micro-kernel over every `MR×NR` tile of one
+/// packed `mb×kb` × `kb×nb` macro block, accumulating into `C` at offset
+/// `(ic, jc)`.
+#[allow(clippy::too_many_arguments)]
+fn macro_kernel(
     alpha: f32,
     a_pack: &[f32],
     b_pack: &[f32],
@@ -143,84 +389,74 @@ fn micro_kernel(
 ) {
     let crows = c.rows();
     let cdata = c.data_mut();
-    let mut j = 0;
-    // 8-column blocks.
-    while j + 8 <= nb {
-        let bs: [&[f32]; 8] = [
-            &b_pack[j * kb..(j + 1) * kb],
-            &b_pack[(j + 1) * kb..(j + 2) * kb],
-            &b_pack[(j + 2) * kb..(j + 3) * kb],
-            &b_pack[(j + 3) * kb..(j + 4) * kb],
-            &b_pack[(j + 4) * kb..(j + 5) * kb],
-            &b_pack[(j + 5) * kb..(j + 6) * kb],
-            &b_pack[(j + 6) * kb..(j + 7) * kb],
-            &b_pack[(j + 7) * kb..(j + 8) * kb],
-        ];
-        let cb: [usize; 8] = core::array::from_fn(|q| ic + (jc + j + q) * crows);
-        for i in 0..mb {
-            let arow = &a_pack[i * kb..i * kb + kb];
-            let mut d = [0.0f32; 8];
-            for p in 0..kb {
-                let a = arow[p];
-                for q in 0..8 {
-                    d[q] += a * bs[q][p];
-                }
-            }
-            for q in 0..8 {
-                cdata[cb[q] + i] += alpha * d[q];
-            }
+    let m_strips = mb.div_ceil(MR);
+    let n_strips = nb.div_ceil(NR);
+    for js in 0..n_strips {
+        let b_strip = &b_pack[js * kb * NR..(js + 1) * kb * NR];
+        let nr = NR.min(nb - js * NR);
+        for is in 0..m_strips {
+            let a_strip = &a_pack[is * kb * MR..(is + 1) * kb * MR];
+            let mr = MR.min(mb - is * MR);
+            micro_kernel(
+                alpha,
+                a_strip,
+                b_strip,
+                kb,
+                mr,
+                nr,
+                cdata,
+                crows,
+                ic + is * MR,
+                jc + js * NR,
+            );
         }
-        j += 8;
     }
-    // 4-column blocks.
-    while j + 4 <= nb {
-        let b0 = &b_pack[j * kb..(j + 1) * kb];
-        let b1 = &b_pack[(j + 1) * kb..(j + 2) * kb];
-        let b2 = &b_pack[(j + 2) * kb..(j + 3) * kb];
-        let b3 = &b_pack[(j + 3) * kb..(j + 4) * kb];
-        let cb0 = ic + (jc + j) * crows;
-        let cb1 = ic + (jc + j + 1) * crows;
-        let cb2 = ic + (jc + j + 2) * crows;
-        let cb3 = ic + (jc + j + 3) * crows;
-        for i in 0..mb {
-            let arow = &a_pack[i * kb..i * kb + kb];
-            let (mut d0, mut d1, mut d2, mut d3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-            for p in 0..kb {
-                let a = arow[p];
-                d0 += a * b0[p];
-                d1 += a * b1[p];
-                d2 += a * b2[p];
-                d3 += a * b3[p];
+}
+
+/// One `MR×NR` register tile: `MR·NR` accumulators held in vector
+/// registers; each step of the `p` loop broadcasts one packed-B value
+/// against `MR` contiguous packed-A lanes (an FMA per lane — LLVM
+/// autovectorizes the `i` loop since both sides are contiguous and
+/// reduction-free).  The zero-padded packing means full-width arithmetic
+/// always; only the epilogue write-back is clipped to the valid `mr×nr`
+/// corner.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn micro_kernel(
+    alpha: f32,
+    a_strip: &[f32],
+    b_strip: &[f32],
+    kb: usize,
+    mr: usize,
+    nr: usize,
+    cdata: &mut [f32],
+    crows: usize,
+    ci: usize,
+    cj: usize,
+) {
+    let mut acc = [[0.0f32; MR]; NR];
+    for p in 0..kb {
+        let av = &a_strip[p * MR..(p + 1) * MR];
+        let bv = &b_strip[p * NR..(p + 1) * NR];
+        for q in 0..NR {
+            let b = bv[q];
+            for i in 0..MR {
+                acc[q][i] += av[i] * b;
             }
-            cdata[cb0 + i] += alpha * d0;
-            cdata[cb1 + i] += alpha * d1;
-            cdata[cb2 + i] += alpha * d2;
-            cdata[cb3 + i] += alpha * d3;
         }
-        j += 4;
     }
-    // Remainder columns.
-    while j < nb {
-        let bcol = &b_pack[j * kb..j * kb + kb];
-        let cbase = ic + (jc + j) * crows;
-        for i in 0..mb {
-            let arow = &a_pack[i * kb..i * kb + kb];
-            let mut acc = [0.0f32; 4];
-            let chunks = kb / 4;
-            for q in 0..chunks {
-                let p = q * 4;
-                acc[0] += arow[p] * bcol[p];
-                acc[1] += arow[p + 1] * bcol[p + 1];
-                acc[2] += arow[p + 2] * bcol[p + 2];
-                acc[3] += arow[p + 3] * bcol[p + 3];
+    for (q, acc_col) in acc.iter().enumerate().take(nr) {
+        let base = ci + (cj + q) * crows;
+        let col = &mut cdata[base..base + mr];
+        if alpha == 1.0 {
+            for (dst, &v) in col.iter_mut().zip(acc_col.iter()) {
+                *dst += v;
             }
-            let mut dot = (acc[0] + acc[1]) + (acc[2] + acc[3]);
-            for p in chunks * 4..kb {
-                dot += arow[p] * bcol[p];
+        } else {
+            for (dst, &v) in col.iter_mut().zip(acc_col.iter()) {
+                *dst += alpha * v;
             }
-            cdata[cbase + i] += alpha * dot;
         }
-        j += 1;
     }
 }
 
@@ -289,6 +525,7 @@ pub fn gemm_naive(a: &Matrix, op_a: Trans, b: &Matrix, op_b: Trans) -> Matrix {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::products::khatri_rao;
     use crate::util::rng::Xoshiro256;
 
     fn assert_close(a: &Matrix, b: &Matrix, tol: f64) {
@@ -318,6 +555,25 @@ mod tests {
                     let fast = matmul(&a, op_a, &b, op_b);
                     let slow = gemm_naive(&a, op_a, &b, op_b);
                     assert_close(&fast, &slow, 1e-5);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ragged_register_tile_edges_match_naive() {
+        // Shapes straddling every MR/NR boundary (including MR±1 rows and
+        // NR±1 columns) so edge-tile zero-padding and clipped write-back
+        // are both exercised.
+        let mut rng = Xoshiro256::seed_from_u64(43);
+        for &m in &[1usize, MR - 1, MR, MR + 1, 2 * MR + 3] {
+            for &n in &[1usize, NR - 1, NR, NR + 1, 3 * NR + 1] {
+                for &k in &[1usize, 5, KC + 7] {
+                    let a = Matrix::random_normal(m, k, &mut rng);
+                    let b = Matrix::random_normal(k, n, &mut rng);
+                    let fast = matmul(&a, Trans::No, &b, Trans::No);
+                    let slow = gemm_naive(&a, Trans::No, &b, Trans::No);
+                    assert_close(&fast, &slow, 1e-4);
                 }
             }
         }
@@ -385,5 +641,84 @@ mod tests {
         let b = Matrix::zeros(3, 4);
         let c = matmul(&a, Trans::No, &b, Trans::No);
         assert_eq!((c.rows(), c.cols()), (0, 4));
+    }
+
+    #[test]
+    fn fused_mttkrp_matches_materialized() {
+        let mut rng = Xoshiro256::seed_from_u64(500);
+        for &(i, j, k, r) in &[
+            (9usize, 8usize, 7usize, 3usize),
+            (33, 5, 41, 6),
+            (1, 17, 1, 2),
+            (130, 70, 3, 16),
+        ] {
+            let x = Matrix::random_normal(i, j * k, &mut rng);
+            let fast = Matrix::random_normal(j, r, &mut rng);
+            let slow = Matrix::random_normal(k, r, &mut rng);
+            let fused = mttkrp_fused(&x, &slow, &fast);
+            let kr = khatri_rao(&slow, &fast);
+            let reference = matmul(&x, Trans::No, &kr, Trans::No);
+            assert_close(&fused, &reference, 1e-4);
+        }
+    }
+
+    #[test]
+    fn fused_mttkrp_spans_multiple_kc_panels() {
+        // J·K = 24·32 = 768 > KC: the virtual Khatri-Rao operand is packed
+        // across three KC panels and accumulated.
+        let mut rng = Xoshiro256::seed_from_u64(501);
+        let (i, j, k, r) = (20usize, 24usize, 32usize, 5usize);
+        let x = Matrix::random_normal(i, j * k, &mut rng);
+        let fast = Matrix::random_normal(j, r, &mut rng);
+        let slow = Matrix::random_normal(k, r, &mut rng);
+        let fused = mttkrp_fused(&x, &slow, &fast);
+        let reference = matmul(&x, Trans::No, &khatri_rao(&slow, &fast), Trans::No);
+        assert_close(&fused, &reference, 1e-4);
+    }
+
+    #[test]
+    fn fused_acc_panel_partition_sums_to_full() {
+        // The parallel backend's splitting invariant: accumulating disjoint
+        // panel ranges into one output equals the full fused MTTKRP, and a
+        // row-range strip equals the matching rows of the full result.
+        let mut rng = Xoshiro256::seed_from_u64(502);
+        let (i, j, k, r) = (15usize, 7usize, 11usize, 4usize);
+        let x = Matrix::random_normal(i, j * k, &mut rng);
+        let fast = Matrix::random_normal(j, r, &mut rng);
+        let slow = Matrix::random_normal(k, r, &mut rng);
+        let full = mttkrp_fused(&x, &slow, &fast);
+
+        let mut acc = Matrix::zeros(i, r);
+        for (k0, k1) in [(0usize, 4usize), (4, 5), (5, 11)] {
+            mttkrp_fused_acc(&x, 0..i, k0..k1, &slow, &fast, &mut acc);
+        }
+        assert_close(&acc, &full, 1e-5);
+
+        let mut strip = Matrix::zeros(5, r);
+        mttkrp_fused_acc(&x, 3..8, 0..k, &slow, &fast, &mut strip);
+        assert_close(&strip, &full.slice_rows(3, 8), 1e-5);
+    }
+
+    #[test]
+    fn fused_mttkrp_empty_ranges_are_noops() {
+        let mut rng = Xoshiro256::seed_from_u64(503);
+        let x = Matrix::random_normal(6, 12, &mut rng);
+        let fast = Matrix::random_normal(4, 2, &mut rng);
+        let slow = Matrix::random_normal(3, 2, &mut rng);
+        let mut out = Matrix::zeros(6, 2);
+        mttkrp_fused_acc(&x, 0..6, 2..2, &slow, &fast, &mut out);
+        assert_eq!(out, Matrix::zeros(6, 2));
+        let mut empty = Matrix::zeros(0, 2);
+        mttkrp_fused_acc(&x, 4..4, 0..3, &slow, &fast, &mut empty);
+        assert_eq!((empty.rows(), empty.cols()), (0, 2));
+    }
+
+    #[test]
+    #[should_panic(expected = "unfolding has")]
+    fn fused_mttkrp_shape_mismatch_panics() {
+        let x = Matrix::zeros(3, 10);
+        let fast = Matrix::zeros(4, 2);
+        let slow = Matrix::zeros(3, 2);
+        let _ = mttkrp_fused(&x, &slow, &fast);
     }
 }

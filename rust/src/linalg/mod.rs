@@ -24,14 +24,15 @@ pub mod qr;
 pub mod svd;
 
 pub use backend::{
-    cpu_backend, serial_backend, BackendHandle, ComputeBackend, CpuParallelBackend, SerialBackend,
+    cpu_backend, mttkrp_materialized, serial_backend, BackendHandle, ComputeBackend,
+    CpuParallelBackend, SerialBackend,
 };
 pub use cholesky::{cholesky_factor, cholesky_solve};
 pub use eig::sym_eig;
 pub use hungarian::{hungarian_max, hungarian_min, Assignment};
 pub use ista::ista_l1;
 pub use lstsq::{lstsq, pinv, ridge_solve};
-pub use matmul::{gemm, matmul, matvec, Trans};
+pub use matmul::{gemm, matmul, matvec, mttkrp_fused, mttkrp_fused_acc, Trans};
 pub use matrix::Matrix;
 pub use products::{hadamard, khatri_rao, kronecker};
 pub use qr::{qr_decompose, qr_solve};

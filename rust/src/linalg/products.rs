@@ -16,24 +16,30 @@ use super::matrix::Matrix;
 /// `X_(1) ≈ A (C ⊙ B)ᵀ` with `(C ⊙ B)[j + k*J, r] = C[k,r]·B[j,r]`.
 /// So `khatri_rao(C, B)` returns the matrix whose row `j + k·J` is
 /// `C[k,:] * B[j,:]` — the *first* argument varies slowest.
+///
+/// **Role:** test oracle.  Production MTTKRPs use the fused kernel
+/// (`linalg::matmul::mttkrp_fused`), which synthesizes these entries
+/// directly into packed GEMM panels; materializing the `(J·K)×R` product
+/// is exactly the memory wall the fused path removes, so this function
+/// survives for the differential tests (via
+/// `linalg::backend::mttkrp_materialized`) and the Gram-identity property
+/// checks only.
 pub fn khatri_rao(slow: &Matrix, fast: &Matrix) -> Matrix {
     let r = slow.cols();
     assert_eq!(fast.cols(), r, "khatri_rao: rank mismatch");
     let k_dim = slow.rows();
     let j_dim = fast.rows();
-    let mut out = Matrix::zeros(j_dim * k_dim, r);
+    // Built straight into the column-major buffer with
+    // `with_capacity`/`extend` — no zero-fill pass that every entry then
+    // overwrites.
+    let mut data = Vec::with_capacity(j_dim * k_dim * r);
     for c in 0..r {
-        let s_col = slow.col(c);
         let f_col = fast.col(c);
-        let o_col = out.col_mut(c);
-        for (k, &sv) in s_col.iter().enumerate() {
-            let base = k * j_dim;
-            for (j, &fv) in f_col.iter().enumerate() {
-                o_col[base + j] = sv * fv;
-            }
+        for &sv in slow.col(c) {
+            data.extend(f_col.iter().map(|&fv| sv * fv));
         }
     }
-    out
+    Matrix::from_vec(j_dim * k_dim, r, data)
 }
 
 /// Kronecker product `A ⊗ B` for `A (m×n)`, `B (p×q)` → `(m·p) × (n·q)`,

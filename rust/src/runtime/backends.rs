@@ -284,6 +284,12 @@ impl ComputeBackend for XlaBackend {
         self.cpu.gemm_batch(alpha, a_list, op_a, b, op_b, beta, c_list);
     }
 
+    fn mttkrp(&self, mode: usize, x_mode: &Matrix, slow: &Matrix, fast: &Matrix) -> Matrix {
+        // Delegate so host-side MTTKRPs get the parallel fused panel/row
+        // split, not the trait's serial default.
+        self.cpu.mttkrp(mode, x_mode, slow, fast)
+    }
+
     fn block_compressor(&self) -> Option<&dyn BlockCompressor> {
         Some(&self.compressor)
     }

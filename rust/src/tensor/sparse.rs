@@ -120,20 +120,40 @@ impl SparseTensor {
     /// * mode 1: `out[i, :] += v · (B[j, :] * C[k, :])`
     /// * mode 2: `out[j, :] += v · (A[i, :] * C[k, :])`
     /// * mode 3: `out[k, :] += v · (A[i, :] * B[j, :])`
+    ///
+    /// Rank-column-outer loop order: every operand of the inner scatter is
+    /// a contiguous column slice (free in column-major storage), mirroring
+    /// the fused dense kernel's factor-column walks — the row-outer form's
+    /// strided per-entry `get`s (one `i + c·rows` multiply each) dominated
+    /// at large `nnz`.
     pub fn mttkrp(&self, mode: usize, f1: &Matrix, f2: &Matrix) -> Matrix {
         let r = f1.cols();
         assert_eq!(f2.cols(), r);
+        assert!((1..=3).contains(&mode), "mode must be 1, 2 or 3");
         let out_rows = self.dims[mode - 1];
         let mut out = Matrix::zeros(out_rows, r);
-        for (idx, &v) in self.indices.iter().zip(&self.values) {
-            let (o, r1, r2) = match mode {
-                1 => (idx[0] as usize, idx[1] as usize, idx[2] as usize),
-                2 => (idx[1] as usize, idx[0] as usize, idx[2] as usize),
-                3 => (idx[2] as usize, idx[0] as usize, idx[1] as usize),
-                _ => panic!("mode must be 1, 2 or 3"),
-            };
-            for c in 0..r {
-                out.add_assign_at(o, c, v * f1.get(r1, c) * f2.get(r2, c));
+        for c in 0..r {
+            let f1c = f1.col(c);
+            let f2c = f2.col(c);
+            let oc = out.col_mut(c);
+            let entries = self.indices.iter().zip(&self.values);
+            match mode {
+                1 => {
+                    for (idx, &v) in entries {
+                        oc[idx[0] as usize] += v * f1c[idx[1] as usize] * f2c[idx[2] as usize];
+                    }
+                }
+                2 => {
+                    for (idx, &v) in entries {
+                        oc[idx[1] as usize] += v * f1c[idx[0] as usize] * f2c[idx[2] as usize];
+                    }
+                }
+                3 => {
+                    for (idx, &v) in entries {
+                        oc[idx[2] as usize] += v * f1c[idx[0] as usize] * f2c[idx[1] as usize];
+                    }
+                }
+                _ => unreachable!(),
             }
         }
         out

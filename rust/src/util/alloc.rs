@@ -1,0 +1,136 @@
+//! Counting global allocator — the perf-trajectory benches' substitute for
+//! heap profilers (offline environment: no `dhat`/`jemalloc` stats).
+//!
+//! [`CountingAlloc`] wraps [`System`] and tracks three relaxed atomic
+//! gauges: cumulative bytes ever allocated, currently-live bytes, and the
+//! live high-water mark.  A bench binary installs it with
+//! `#[global_allocator]` and brackets a closure to attribute bytes to one
+//! kernel call — this is how `BENCH_gemm_mttkrp.json` proves the fused
+//! MTTKRP never allocates its `(J·K)×R` Khatri-Rao intermediate.
+//!
+//! Counters are process-global, so measurements are only meaningful while
+//! the bracketed region runs single-threaded (pool scopes inside the
+//! region still count — their allocations are genuinely part of the call's
+//! cost).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Byte-counting wrapper around the system allocator.
+pub struct CountingAlloc {
+    /// Cumulative bytes ever handed out (never decreases).
+    allocated: AtomicUsize,
+    /// Bytes currently live.
+    live: AtomicUsize,
+    /// High-water mark of `live` since the last [`CountingAlloc::reset_peak`].
+    peak: AtomicUsize,
+}
+
+impl CountingAlloc {
+    pub const fn new() -> Self {
+        Self {
+            allocated: AtomicUsize::new(0),
+            live: AtomicUsize::new(0),
+            peak: AtomicUsize::new(0),
+        }
+    }
+
+    /// Cumulative bytes ever allocated.
+    pub fn allocated_bytes(&self) -> usize {
+        self.allocated.load(Ordering::Relaxed)
+    }
+
+    /// Bytes currently live.
+    pub fn live_bytes(&self) -> usize {
+        self.live.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of live bytes since the last reset.
+    pub fn peak_bytes(&self) -> usize {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    /// Resets the high-water mark to the current live size, so the next
+    /// reading isolates one region's transient footprint.
+    pub fn reset_peak(&self) {
+        self.peak.store(self.live.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    fn on_alloc(&self, size: usize) {
+        self.allocated.fetch_add(size, Ordering::Relaxed);
+        let live = self.live.fetch_add(size, Ordering::Relaxed) + size;
+        self.peak.fetch_max(live, Ordering::Relaxed);
+    }
+
+    fn on_dealloc(&self, size: usize) {
+        self.live.fetch_sub(size, Ordering::Relaxed);
+    }
+}
+
+impl Default for CountingAlloc {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// SAFETY: pure delegation to `System`; the counters never influence the
+// returned pointers or layouts.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            self.on_alloc(layout.size());
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout);
+        self.on_dealloc(layout.size());
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc_zeroed(layout);
+        if !p.is_null() {
+            self.on_alloc(layout.size());
+        }
+        p
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let p = System.realloc(ptr, layout, new_size);
+        if !p.is_null() {
+            // Count the grown block as a fresh allocation and retire the
+            // old size: cumulative counts every byte ever requested, live
+            // nets out to the delta.
+            self.on_alloc(new_size);
+            self.on_dealloc(layout.size());
+        }
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Not installed as the test harness's global allocator (that would
+    // perturb every other test); exercised through the counter methods.
+    #[test]
+    fn counters_track_alloc_dealloc() {
+        let a = CountingAlloc::new();
+        a.on_alloc(1000);
+        a.on_alloc(500);
+        assert_eq!(a.allocated_bytes(), 1500);
+        assert_eq!(a.live_bytes(), 1500);
+        assert_eq!(a.peak_bytes(), 1500);
+        a.on_dealloc(1000);
+        assert_eq!(a.live_bytes(), 500);
+        assert_eq!(a.peak_bytes(), 1500, "peak survives frees");
+        a.reset_peak();
+        assert_eq!(a.peak_bytes(), 500);
+        a.on_alloc(100);
+        assert_eq!(a.peak_bytes(), 600);
+        assert_eq!(a.allocated_bytes(), 1600, "cumulative never decreases");
+    }
+}

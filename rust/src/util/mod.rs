@@ -6,6 +6,7 @@
 //! Each submodule here replaces one of them with a small, tested
 //! implementation — see DESIGN.md "Offline-crate substitutions".
 
+pub mod alloc;
 pub mod cli;
 pub mod f16;
 pub mod json;

@@ -2,10 +2,15 @@
 //! parallel CPU backend must agree with the serial reference on every
 //! kernel, across random shapes (including ragged edge tiles), all
 //! transpose combinations, and the MTTKRP/Khatri-Rao identities the ALS
-//! sweeps rely on.
+//! sweeps rely on.  The fused zero-materialization MTTKRP (serial and both
+//! parallel splits) is differential-tested against the materialized
+//! `khatri_rao`+GEMM oracle it replaced.
 
 use exascale_tensor::linalg::products::{hadamard, khatri_rao};
-use exascale_tensor::linalg::{ComputeBackend, CpuParallelBackend, Matrix, SerialBackend, Trans};
+use exascale_tensor::linalg::{
+    mttkrp_fused, mttkrp_fused_acc, mttkrp_materialized, ComputeBackend, CpuParallelBackend,
+    Matrix, SerialBackend, Trans,
+};
 use exascale_tensor::tensor::unfold::{unfold_1, unfold_2, unfold_3};
 use exascale_tensor::tensor::DenseTensor;
 use exascale_tensor::util::prop;
@@ -131,6 +136,90 @@ fn mttkrp_khatri_rao_unfold_identity() {
             }
         }
     });
+}
+
+#[test]
+fn fused_mttkrp_differential_vs_materialized_all_modes() {
+    // The fused kernel (serial default + parallel panel/row splits) against
+    // the materialized khatri_rao+GEMM oracle, random shapes, every mode.
+    prop::check("fused-mttkrp-vs-materialized", 30, |g| {
+        let dims = [g.int(1, 14), g.int(1, 12), g.int(1, 10)];
+        let r = g.int(1, 6);
+        let threads = g.int(2, 5);
+        let mut rng = Xoshiro256::seed_from_u64(g.int(0, 1 << 30) as u64);
+        let t = DenseTensor::random_normal(dims, &mut rng);
+        let a = Matrix::random_normal(dims[0], r, &mut rng);
+        let b = Matrix::random_normal(dims[1], r, &mut rng);
+        let c = Matrix::random_normal(dims[2], r, &mut rng);
+
+        let cases = [
+            (1usize, unfold_1(&t), &c, &b),
+            (2, unfold_2(&t), &c, &a),
+            (3, unfold_3(&t), &b, &a),
+        ];
+        for (mode, x_mode, slow, fast) in cases {
+            let oracle = mttkrp_materialized(&x_mode, slow, fast);
+            let direct = mttkrp_fused(&x_mode, slow, fast);
+            assert_close(&direct, &oracle, 1e-4, &format!("fused direct mode {mode}"));
+            let serial = SerialBackend.mttkrp(mode, &x_mode, slow, fast);
+            assert_close(&serial, &oracle, 1e-4, &format!("fused serial mode {mode}"));
+            let parallel = par(threads).mttkrp(mode, &x_mode, slow, fast);
+            assert_close(&parallel, &oracle, 1e-4, &format!("fused parallel mode {mode}"));
+        }
+    });
+}
+
+#[test]
+fn fused_mttkrp_degenerate_dims() {
+    // Degenerate tensors — 1×n×1 and friends — hit the fused kernel's
+    // panel-counter edge cases (J = 1 wraps every step; K = 1 never wraps)
+    // and the parallel backend's split-selection boundaries.
+    let mut rng = Xoshiro256::seed_from_u64(79);
+    for dims in [[1usize, 17, 1], [9, 1, 1], [1, 1, 9], [1, 1, 1], [2, 1, 13]] {
+        let t = DenseTensor::random_normal(dims, &mut rng);
+        let r = 3;
+        let a = Matrix::random_normal(dims[0], r, &mut rng);
+        let b = Matrix::random_normal(dims[1], r, &mut rng);
+        let c = Matrix::random_normal(dims[2], r, &mut rng);
+        let cases = [
+            (1usize, unfold_1(&t), &c, &b),
+            (2, unfold_2(&t), &c, &a),
+            (3, unfold_3(&t), &b, &a),
+        ];
+        for (mode, x_mode, slow, fast) in cases {
+            let oracle = mttkrp_materialized(&x_mode, slow, fast);
+            let what = format!("degenerate {dims:?} mode {mode}");
+            assert_close(&SerialBackend.mttkrp(mode, &x_mode, slow, fast), &oracle, 1e-4, &what);
+            assert_close(&par(4).mttkrp(mode, &x_mode, slow, fast), &oracle, 1e-4, &what);
+        }
+    }
+}
+
+#[test]
+fn fused_acc_split_invariants() {
+    // The exact-splitting contract the parallel backend relies on: panel
+    // partitions sum to the full MTTKRP; row strips stack to it.
+    let mut rng = Xoshiro256::seed_from_u64(80);
+    let (i, j, k, r) = (21usize, 6usize, 13usize, 4usize);
+    let x = Matrix::random_normal(i, j * k, &mut rng);
+    let fast = Matrix::random_normal(j, r, &mut rng);
+    let slow = Matrix::random_normal(k, r, &mut rng);
+    let oracle = mttkrp_materialized(&x, &slow, &fast);
+
+    let mut acc = Matrix::zeros(i, r);
+    for (k0, k1) in [(0usize, 5usize), (5, 6), (6, 13)] {
+        mttkrp_fused_acc(&x, 0..i, k0..k1, &slow, &fast, &mut acc);
+    }
+    assert_close(&acc, &oracle, 1e-4, "panel partition sum");
+
+    let mut strips = Vec::new();
+    for (i0, i1) in [(0usize, 8usize), (8, 9), (9, 21)] {
+        let mut part = Matrix::zeros(i1 - i0, r);
+        mttkrp_fused_acc(&x, i0..i1, 0..k, &slow, &fast, &mut part);
+        strips.push(part);
+    }
+    let stacked = Matrix::vstack(&strips.iter().collect::<Vec<_>>());
+    assert_close(&stacked, &oracle, 1e-4, "row strip stack");
 }
 
 #[test]
