@@ -14,16 +14,19 @@ use exascale_tensor::bench_harness::{bench_once, speedup, Report};
 use exascale_tensor::coordinator::{Backend, Pipeline, PipelineConfig, SensingConfig};
 use exascale_tensor::tensor::SparseLowRankGenerator;
 
-const SIZE: usize = 240;
 const RANK: usize = 3;
 
 fn main() {
-    let sparsities = [8usize, 16, 32];
+    // `--quick` bounds the sweep for smoke runs (one sparsity, smaller
+    // virtual size); the full sweep remains the tracked figure.
+    let quick = std::env::args().any(|a| a == "--quick");
+    let size: usize = if quick { 120 } else { 240 };
+    let sparsities: &[usize] = if quick { &[8] } else { &[8, 16, 32] };
     let mut fig7 = Report::new("fig7_exascale_time", "sensing vs baseline time (sparsity sweep)");
     let mut fig8 = Report::new("fig8_exascale_mse", "sensing vs baseline MSE (sparsity sweep)");
 
-    for &nnz in &sparsities {
-        let gen = SparseLowRankGenerator::new(SIZE, SIZE, SIZE, RANK, nnz, 3000 + nnz as u64);
+    for &nnz in sparsities {
+        let gen = SparseLowRankGenerator::new(size, size, size, RANK, nnz, 3000 + nnz as u64);
 
         // Baseline: plain pipeline, sequential.
         let cfg = PipelineConfig::builder()

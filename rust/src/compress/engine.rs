@@ -1,0 +1,663 @@
+//! Out-of-core streaming engine: the producer/consumer block scheduler
+//! behind every `compress_source*` entry point.
+//!
+//! The block grid is split into **shards** — contiguous runs of block
+//! indices whose count depends only on the grid (never on thread counts) —
+//! and every shard's contributions are accumulated in block-index order
+//! into a shard-local accumulator, then folded into the global result in
+//! shard-index order.  That fixed reduction tree makes the result **bitwise
+//! identical** across compute-thread counts, I/O-thread counts, prefetch
+//! depths, and sync-vs-prefetched execution, and it gives incremental
+//! checkpointing a well-defined unit: the folded prefix of shards.
+//!
+//! Two execution modes share that reduction:
+//!
+//! * **Synchronous** (`prefetch: None`) — workers claim whole shards and
+//!   read each block inline ([`TensorSource::block`]) before processing it.
+//!   Zero queueing overhead; right for in-memory/implicit sources.
+//! * **Prefetched** (`prefetch: Some`) — dedicated I/O producer threads
+//!   stage upcoming blocks into a bounded queue
+//!   ([`std::sync::mpsc::sync_channel`], double-buffering generalized to
+//!   `depth` slots) while compute workers drain it; block reads overlap
+//!   with the TTM chains, which is where file-backed sources win.  An
+//!   ordered-commit step per shard (late blocks park in a small pending
+//!   list) preserves the deterministic reduction.
+//!
+//! Stall time on both sides of the queue is counted ([`StreamStats`]) and
+//! surfaced through `coordinator::metrics` by the pipeline.
+
+use crate::tensor::{BlockRange, DenseTensor, TensorSource};
+use crate::util::threadpool::ThreadPool;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+/// Default shard count the block grid is partitioned into.  A constant —
+/// NOT derived from the worker count — so the reduction tree (and thus the
+/// bitwise result) is invariant across thread configurations, while still
+/// exceeding any realistic pool size for load balancing.
+pub const DEFAULT_SHARD_PARTS: usize = 32;
+
+/// Prefetch policy for the staged I/O pipeline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PrefetchConfig {
+    /// Bounded-queue capacity in blocks (≥ 1): how far I/O may run ahead
+    /// of compute.  The memory planner budgets `depth × block bytes`.
+    pub depth: usize,
+    /// Dedicated I/O producer threads.
+    pub io_threads: usize,
+}
+
+impl Default for PrefetchConfig {
+    fn default() -> Self {
+        Self { depth: 4, io_threads: 2 }
+    }
+}
+
+/// Execution options for [`stream_blocks`].
+#[derive(Clone, Debug)]
+pub struct StreamOptions {
+    /// Compute worker threads.
+    pub threads: usize,
+    /// `None` → synchronous reads inside compute workers.
+    pub prefetch: Option<PrefetchConfig>,
+    /// Shard partition granularity (see [`DEFAULT_SHARD_PARTS`]).  Changing
+    /// this changes the reduction tree, so checkpoints record it.
+    pub shard_parts: usize,
+}
+
+impl Default for StreamOptions {
+    fn default() -> Self {
+        Self {
+            threads: crate::util::default_threads(),
+            prefetch: None,
+            shard_parts: DEFAULT_SHARD_PARTS,
+        }
+    }
+}
+
+/// Counters from one streaming pass.
+#[derive(Clone, Debug, Default)]
+pub struct StreamStats {
+    /// Blocks actually read this pass (excludes resumed prefix).
+    pub blocks_read: u64,
+    /// Shards in the partition.
+    pub shards: usize,
+    /// Total time spent inside `TensorSource::block` (across threads).
+    pub io_seconds: f64,
+    /// Compute-side stall: time workers spent blocked in `recv` on an
+    /// empty queue (prefetched mode only; includes the tail wait for the
+    /// channel to close, excludes receiver-lock contention).
+    pub io_stall_seconds: f64,
+    /// Producer-side stall: time I/O threads blocked on the full queue
+    /// (prefetched mode only; high values mean I/O is ahead of compute).
+    pub send_stall_seconds: f64,
+    /// Blocks skipped because a resumed checkpoint already covered them.
+    pub resumed_blocks: u64,
+    /// The progress callback requested an early stop.
+    pub aborted: bool,
+    /// Whether the prefetched pipeline ran.
+    pub prefetched: bool,
+}
+
+/// A resumable prefix: the first `shards_done` shards' contributions are
+/// already folded into `acc` (from an incremental checkpoint).
+pub struct ResumeState<A> {
+    pub shards_done: usize,
+    pub blocks_done: usize,
+    pub acc: A,
+}
+
+/// Incremental-progress callback: invoked (serialized, in prefix order)
+/// whenever the folded shard prefix advances, with the partial accumulator,
+/// folded shard count, and folded block count.  Returning `false` stops the
+/// pass early — the engine then returns the folded prefix with
+/// `stats.aborted = true` (the kill/resume test hook).
+pub type ProgressFn<'a, A> = &'a (dyn Fn(&A, usize, usize) -> bool + Sync);
+
+/// How one streaming pass consumes blocks into an accumulator.
+///
+/// `process` is called exactly once per block, **in block-index order
+/// within each shard**, against that shard's private accumulator — the
+/// engine guarantees this in both execution modes, which is what makes
+/// results reproducible.  `Ctx` is per-worker scratch (pack buffers, GEMM
+/// workspaces) that survives across blocks.
+pub trait BlockConsumer: Sync {
+    type Acc: Send;
+    type Ctx;
+
+    fn make_ctx(&self) -> Self::Ctx;
+    fn zero_acc(&self) -> Self::Acc;
+    fn process(&self, ctx: &mut Self::Ctx, blk: &BlockRange, t: DenseTensor, acc: &mut Self::Acc);
+    /// Folds a completed shard accumulator into the running result.
+    /// Called in strict shard-index order.
+    fn merge(&self, into: &mut Self::Acc, from: Self::Acc);
+}
+
+/// In-order prefix folder over completed shards.
+struct Folder<A> {
+    next: usize,
+    blocks_done: usize,
+    parked: Vec<Option<A>>,
+    acc: A,
+}
+
+/// Per-shard ordered-commit state for the prefetched mode.
+///
+/// The lock guarding this is held only for the cheap operations below —
+/// claiming ownership, parking a block, handing the next parked block to
+/// the owner.  The expensive `process` call runs **outside** the lock:
+/// exactly one consumer owns a shard at a time (`busy`), so per-shard
+/// ordering is preserved while different shards compute in parallel.
+struct ShardState<A> {
+    next_pos: usize,
+    end: usize,
+    acc: Option<A>,
+    /// A consumer is currently processing this shard's in-order run.
+    busy: bool,
+    /// Blocks that arrived before their turn (bounded by the fold-prefix
+    /// window: producers only claim blocks of in-window shards).
+    pending: Vec<(usize, DenseTensor)>,
+}
+
+/// Streams `blocks` from `src` through `consumer`, returning the folded
+/// accumulator and this pass's counters.  See the module docs for the
+/// execution modes and determinism guarantees.
+pub fn stream_blocks<C: BlockConsumer>(
+    src: &dyn TensorSource,
+    blocks: &[BlockRange],
+    opts: &StreamOptions,
+    consumer: &C,
+    resume: Option<ResumeState<C::Acc>>,
+    on_progress: Option<ProgressFn<'_, C::Acc>>,
+) -> (C::Acc, StreamStats) {
+    let shards = ThreadPool::partition(blocks.len(), opts.shard_parts.max(1));
+    let nshards = shards.len();
+    let (resume_shards, resume_blocks, acc0) = match resume {
+        Some(r) => {
+            assert!(
+                r.shards_done <= nshards,
+                "resume prefix {} exceeds shard count {nshards}",
+                r.shards_done
+            );
+            (r.shards_done, r.blocks_done, r.acc)
+        }
+        None => (0, 0, consumer.zero_acc()),
+    };
+    let mut stats = StreamStats {
+        shards: nshards,
+        resumed_blocks: resume_blocks as u64,
+        prefetched: opts.prefetch.is_some(),
+        ..Default::default()
+    };
+    if blocks.is_empty() || resume_shards >= nshards {
+        return (acc0, stats);
+    }
+    debug_assert_eq!(
+        resume_blocks,
+        shards[..resume_shards].iter().map(|(a, b)| b - a).sum::<usize>(),
+        "resume block count does not match the shard prefix"
+    );
+
+    let folder = Mutex::new(Folder {
+        next: resume_shards,
+        blocks_done: resume_blocks,
+        parked: (0..nshards).map(|_| None).collect(),
+        acc: acc0,
+    });
+    let fold_advanced = std::sync::Condvar::new();
+    let stop = AtomicBool::new(false);
+    let io_ns = AtomicU64::new(0);
+    let recv_stall_ns = AtomicU64::new(0);
+    let send_stall_ns = AtomicU64::new(0);
+    let blocks_read = AtomicU64::new(0);
+
+    // Folds `acc_s` (shard `s`, complete) and any now-contiguous parked
+    // shards into the prefix, firing the progress callback on advance.
+    let complete_shard = |s: usize, acc_s: C::Acc| {
+        let mut f = folder.lock().unwrap();
+        f.parked[s] = Some(acc_s);
+        let mut advanced = false;
+        while f.next < nshards {
+            let idx = f.next;
+            let Some(a) = f.parked[idx].take() else { break };
+            consumer.merge(&mut f.acc, a);
+            let (b0, b1) = shards[idx];
+            f.blocks_done += b1 - b0;
+            f.next += 1;
+            advanced = true;
+        }
+        if advanced {
+            if let Some(cb) = on_progress {
+                if !cb(&f.acc, f.next, f.blocks_done) {
+                    stop.store(true, Ordering::SeqCst);
+                }
+            }
+            // Wake workers throttled on the fold-prefix window.
+            fold_advanced.notify_all();
+        }
+    };
+
+    match opts.prefetch {
+        None => {
+            // Synchronous mode: workers claim whole shards; reads happen
+            // inline.  A claimed shard always runs to completion (stop is
+            // only honored between shards) so parked accumulators stay
+            // consistent with the shard partition.
+            //
+            // The fold-prefix window bounds live shard accumulators: a
+            // worker may not start shard `s` until the folded prefix is
+            // within `window` shards of it, so at most `window` accumulator
+            // sets exist at once even if one early shard is slow (the
+            // memory planner budgets exactly that bound).
+            let window = opts.threads.max(2);
+            let cursor = AtomicUsize::new(resume_shards);
+            ThreadPool::run_workers(opts.threads, |_w| {
+                let mut ctx = consumer.make_ctx();
+                loop {
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let s = cursor.fetch_add(1, Ordering::SeqCst);
+                    if s >= nshards {
+                        break;
+                    }
+                    {
+                        let mut f = folder.lock().unwrap();
+                        while !stop.load(Ordering::SeqCst) && s >= f.next + window {
+                            f = fold_advanced.wait(f).unwrap();
+                        }
+                    }
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let (b0, b1) = shards[s];
+                    let mut acc = consumer.zero_acc();
+                    for pos in b0..b1 {
+                        let t0 = Instant::now();
+                        let t = src.block(&blocks[pos]);
+                        io_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                        blocks_read.fetch_add(1, Ordering::Relaxed);
+                        consumer.process(&mut ctx, &blocks[pos], t, &mut acc);
+                    }
+                    complete_shard(s, acc);
+                }
+            });
+        }
+        Some(pf) => {
+            let depth = pf.depth.max(1);
+            let io_threads = pf.io_threads.max(1);
+            let consumers = opts.threads.max(1);
+            // Fold-prefix window, as in sync mode: producers only claim
+            // blocks of shards within `window` of the folded prefix, which
+            // bounds live shard accumulators and parked raw blocks even if
+            // one early shard is slow.  Claims round-robin **across** the
+            // window's shards (per-shard cursors) rather than sweeping the
+            // grid linearly — a shard's blocks must commit in order, so
+            // shard-level interleaving is what lets `threads` consumers
+            // compute concurrently instead of convoying behind one shard.
+            let window = opts.threads.max(2);
+            let (tx, rx) = mpsc::sync_channel::<(usize, DenseTensor)>(depth);
+            let rx = Arc::new(Mutex::new(rx));
+            let states: Vec<Mutex<ShardState<C::Acc>>> = shards
+                .iter()
+                .map(|&(a, b)| {
+                    Mutex::new(ShardState {
+                        next_pos: a,
+                        end: b,
+                        acc: None,
+                        busy: false,
+                        pending: Vec::new(),
+                    })
+                })
+                .collect();
+            // Per-shard claim cursors (positions are claimed ascending
+            // within each shard; exhausted shards just overshoot).
+            let shard_cursor: Vec<AtomicUsize> =
+                shards.iter().map(|&(a, _)| AtomicUsize::new(a)).collect();
+            // Spreads concurrent producers across the window's shards.
+            let rr = AtomicUsize::new(0);
+            let shard_of = |pos: usize| shards.partition_point(|&(_, end)| end <= pos);
+
+            std::thread::scope(|scope| {
+                for _ in 0..io_threads {
+                    let tx = tx.clone();
+                    let stop = &stop;
+                    let io_ns = &io_ns;
+                    let send_stall_ns = &send_stall_ns;
+                    let blocks_read = &blocks_read;
+                    let folder = &folder;
+                    let fold_advanced = &fold_advanced;
+                    let shard_cursor = &shard_cursor;
+                    let rr = &rr;
+                    let shards = &shards;
+                    scope.spawn(move || loop {
+                        if stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        // Claim the next block: scan the current fold
+                        // window round-robin for an unclaimed position;
+                        // when the whole window is claimed, wait for the
+                        // prefix to advance (waiting is producer-only and
+                        // safe — every in-window position was claimed by a
+                        // non-waiting producer, so folds keep coming).
+                        let claimed = 'claim: loop {
+                            let wstart = folder.lock().unwrap().next;
+                            if wstart >= nshards {
+                                break 'claim None;
+                            }
+                            let span = (wstart + window).min(nshards) - wstart;
+                            let first = rr.fetch_add(1, Ordering::Relaxed) % span;
+                            for k in 0..span {
+                                let s = wstart + (first + k) % span;
+                                let pos = shard_cursor[s].fetch_add(1, Ordering::SeqCst);
+                                if pos < shards[s].1 {
+                                    break 'claim Some(pos);
+                                }
+                            }
+                            let mut f = folder.lock().unwrap();
+                            while !stop.load(Ordering::SeqCst) && f.next == wstart {
+                                f = fold_advanced.wait(f).unwrap();
+                            }
+                            if stop.load(Ordering::SeqCst) {
+                                break 'claim None;
+                            }
+                        };
+                        let Some(pos) = claimed else { break };
+                        let t0 = Instant::now();
+                        let t = src.block(&blocks[pos]);
+                        let read_done = Instant::now();
+                        io_ns.fetch_add(
+                            (read_done - t0).as_nanos() as u64,
+                            Ordering::Relaxed,
+                        );
+                        blocks_read.fetch_add(1, Ordering::Relaxed);
+                        // Blocking send = backpressure from the bounded
+                        // queue; an Err means every consumer exited (abort).
+                        if tx.send((pos, t)).is_err() {
+                            break;
+                        }
+                        send_stall_ns
+                            .fetch_add(read_done.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    });
+                }
+                // The scope's own sender must drop so the channel closes
+                // once the last producer finishes.
+                drop(tx);
+
+                for _ in 0..consumers {
+                    let rx = Arc::clone(&rx);
+                    let states = &states;
+                    let stop = &stop;
+                    let recv_stall_ns = &recv_stall_ns;
+                    let complete_shard = &complete_shard;
+                    let shard_of = &shard_of;
+                    scope.spawn(move || {
+                        let mut ctx = consumer.make_ctx();
+                        loop {
+                            if stop.load(Ordering::SeqCst) {
+                                break;
+                            }
+                            let msg = {
+                                let guard = rx.lock().unwrap();
+                                // Time only the recv itself (empty-queue
+                                // starvation), not contention on the
+                                // receiver lock — otherwise N-1 consumers
+                                // would each double-count one consumer's
+                                // wait and inflate the stall metric.
+                                let t0 = Instant::now();
+                                let m = guard.recv();
+                                recv_stall_ns
+                                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                                m
+                            };
+                            let Ok((pos, t)) = msg else { break };
+                            let s = shard_of(pos);
+                            // Become the shard's owner if this is the next
+                            // in-order block and no one holds it; park
+                            // otherwise.  The lock is held only for this.
+                            let mut work = {
+                                let mut st = states[s].lock().unwrap();
+                                if st.busy || pos != st.next_pos {
+                                    st.pending.push((pos, t));
+                                    None
+                                } else {
+                                    st.busy = true;
+                                    let acc =
+                                        st.acc.take().unwrap_or_else(|| consumer.zero_acc());
+                                    Some((pos, t, acc))
+                                }
+                            };
+                            // Owner's in-order run: process WITHOUT the
+                            // shard lock, re-locking briefly to commit and
+                            // pick up parked successors.
+                            while let Some((p, tensor, mut acc)) = work.take() {
+                                consumer.process(&mut ctx, &blocks[p], tensor, &mut acc);
+                                let mut st = states[s].lock().unwrap();
+                                st.next_pos = p + 1;
+                                let nxt = st.next_pos;
+                                let parked =
+                                    st.pending.iter().position(|(q, _)| *q == nxt);
+                                if let Some(i) = parked {
+                                    let (np, nt) = st.pending.swap_remove(i);
+                                    work = Some((np, nt, acc));
+                                } else if nxt == st.end {
+                                    st.busy = false;
+                                    drop(st);
+                                    complete_shard(s, acc);
+                                } else {
+                                    st.acc = Some(acc);
+                                    st.busy = false;
+                                }
+                            }
+                        }
+                        // Dropping our rx clone lets blocked producers
+                        // observe the closed channel and exit on abort.
+                    });
+                }
+                // The scope's own receiver handle must drop too — otherwise
+                // producers blocked in `send` after an abort would never see
+                // the channel close (all consumers gone but the receiver
+                // still alive here ⇒ deadlock).
+                drop(rx);
+            });
+        }
+    }
+
+    let folder = folder.into_inner().unwrap();
+    stats.aborted = stop.load(Ordering::SeqCst);
+    assert!(
+        stats.aborted || folder.next == nshards,
+        "streaming pass ended with {} of {nshards} shards folded",
+        folder.next
+    );
+    stats.blocks_read = blocks_read.load(Ordering::Relaxed);
+    stats.io_seconds = io_ns.load(Ordering::Relaxed) as f64 * 1e-9;
+    stats.io_stall_seconds = recv_stall_ns.load(Ordering::Relaxed) as f64 * 1e-9;
+    stats.send_stall_seconds = send_stall_ns.load(Ordering::Relaxed) as f64 * 1e-9;
+    (folder.acc, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{BlockSpec3, InMemorySource};
+    use crate::util::rng::Xoshiro256;
+    use std::sync::atomic::AtomicUsize;
+
+    /// Toy consumer: accumulates `Σ block_sum·w(pos)` with a deliberately
+    /// order-sensitive float recurrence, so any reordering of the per-shard
+    /// fold or the shard merge changes the bits.
+    struct SumConsumer;
+    impl BlockConsumer for SumConsumer {
+        type Acc = Vec<f32>;
+        type Ctx = ();
+        fn make_ctx(&self) {}
+        fn zero_acc(&self) -> Vec<f32> {
+            vec![0.0]
+        }
+        fn process(&self, _c: &mut (), blk: &BlockRange, t: DenseTensor, acc: &mut Vec<f32>) {
+            let s: f32 = t.data().iter().sum();
+            // Order-sensitive: multiply-accumulate with a pos-dependent
+            // factor; float non-associativity exposes reorderings.
+            acc[0] = acc[0] * 1.000_1 + s * (1.0 + blk.index as f32 * 0.01);
+        }
+        fn merge(&self, into: &mut Vec<f32>, from: Vec<f32>) {
+            into[0] += from[0];
+        }
+    }
+
+    fn setup(dims: [usize; 3], block: [usize; 3]) -> (InMemorySource, Vec<BlockRange>) {
+        let mut rng = Xoshiro256::seed_from_u64(777);
+        let t = DenseTensor::random_normal(dims, &mut rng);
+        let blocks = BlockSpec3::new(dims, block).iter().collect();
+        (InMemorySource::new(t), blocks)
+    }
+
+    fn run(src: &InMemorySource, blocks: &[BlockRange], opts: &StreamOptions) -> f32 {
+        let (acc, stats) = stream_blocks(src, blocks, opts, &SumConsumer, None, None);
+        assert!(!stats.aborted);
+        assert_eq!(stats.blocks_read, blocks.len() as u64);
+        acc[0]
+    }
+
+    #[test]
+    fn bitwise_invariant_across_threads_and_prefetch() {
+        let (src, blocks) = setup([12, 11, 10], [5, 4, 3]);
+        let reference = run(
+            &src,
+            &blocks,
+            &StreamOptions { threads: 1, prefetch: None, shard_parts: 8 },
+        );
+        for threads in [2, 4, 8] {
+            let got = run(
+                &src,
+                &blocks,
+                &StreamOptions { threads, prefetch: None, shard_parts: 8 },
+            );
+            assert_eq!(got.to_bits(), reference.to_bits(), "sync threads={threads}");
+        }
+        for (threads, depth, io) in [(1, 1, 1), (2, 2, 1), (4, 4, 2), (8, 3, 3)] {
+            let got = run(
+                &src,
+                &blocks,
+                &StreamOptions {
+                    threads,
+                    prefetch: Some(PrefetchConfig { depth, io_threads: io }),
+                    shard_parts: 8,
+                },
+            );
+            assert_eq!(
+                got.to_bits(),
+                reference.to_bits(),
+                "prefetch threads={threads} depth={depth} io={io}"
+            );
+        }
+    }
+
+    #[test]
+    fn progress_reports_monotonic_prefix_and_resume_matches() {
+        let (src, blocks) = setup([10, 10, 10], [4, 4, 4]);
+        let opts = StreamOptions { threads: 3, prefetch: None, shard_parts: 6 };
+        let reference = run(&src, &blocks, &opts);
+
+        // Abort after the prefix first advances, capturing the partial.
+        // Single-threaded so shards complete strictly in order and the
+        // captured prefix is deterministically one shard.
+        let seq = StreamOptions { threads: 1, ..opts.clone() };
+        let captured: Mutex<Option<(Vec<f32>, usize, usize)>> = Mutex::new(None);
+        let abort_cb = |acc: &Vec<f32>, shards: usize, blks: usize| {
+            let mut g = captured.lock().unwrap();
+            if g.is_none() {
+                *g = Some((acc.clone(), shards, blks));
+                false
+            } else {
+                true
+            }
+        };
+        let (_, stats) =
+            stream_blocks(&src, &blocks, &seq, &SumConsumer, None, Some(&abort_cb));
+        assert!(stats.aborted);
+        let (partial, shards_done, blocks_done) = captured.into_inner().unwrap().unwrap();
+        assert_eq!(shards_done, 1, "1-thread sync folds shard 0 first");
+
+        // Resume from the captured prefix; result must match bitwise.
+        let (acc, stats2) = stream_blocks(
+            &src,
+            &blocks,
+            &opts,
+            &SumConsumer,
+            Some(ResumeState { shards_done, blocks_done, acc: partial }),
+            None,
+        );
+        assert!(!stats2.aborted);
+        assert_eq!(stats2.resumed_blocks, blocks_done as u64);
+        assert_eq!(
+            stats2.blocks_read as usize,
+            blocks.len() - blocks_done,
+            "resume must not re-read folded blocks"
+        );
+        assert_eq!(acc[0].to_bits(), reference.to_bits());
+    }
+
+    #[test]
+    fn progress_prefix_is_monotone_and_complete() {
+        let (src, blocks) = setup([9, 9, 9], [3, 3, 3]);
+        let last = AtomicUsize::new(0);
+        let calls = AtomicUsize::new(0);
+        let cb = |_acc: &Vec<f32>, shards: usize, _blks: usize| {
+            let prev = last.swap(shards, Ordering::SeqCst);
+            assert!(shards > prev, "prefix must strictly advance");
+            calls.fetch_add(1, Ordering::SeqCst);
+            true
+        };
+        let opts = StreamOptions {
+            threads: 4,
+            prefetch: Some(PrefetchConfig { depth: 2, io_threads: 2 }),
+            shard_parts: 5,
+        };
+        let (_, stats) = stream_blocks(&src, &blocks, &opts, &SumConsumer, None, Some(&cb));
+        assert!(!stats.aborted);
+        assert_eq!(last.load(Ordering::SeqCst), stats.shards);
+        assert!(calls.load(Ordering::SeqCst) >= 1);
+    }
+
+    #[test]
+    fn empty_grid_returns_zero_acc() {
+        let (src, _) = setup([4, 4, 4], [4, 4, 4]);
+        let (acc, stats) =
+            stream_blocks(&src, &[], &StreamOptions::default(), &SumConsumer, None, None);
+        assert_eq!(acc, vec![0.0]);
+        assert_eq!(stats.blocks_read, 0);
+    }
+
+    #[test]
+    fn single_shard_is_flat_block_order_fold() {
+        // With one shard the engine must reduce exactly like a sequential
+        // loop over blocks — the oracle for mutex-vs-shard comparisons.
+        let (src, blocks) = setup([8, 8, 8], [3, 3, 3]);
+        let mut expected = vec![0.0f32];
+        for blk in &blocks {
+            let t = src.block(blk);
+            SumConsumer.process(&mut (), blk, t, &mut expected);
+        }
+        for threads in [1, 4] {
+            let got = run(
+                &src,
+                &blocks,
+                &StreamOptions { threads, prefetch: None, shard_parts: 1 },
+            );
+            assert_eq!(got.to_bits(), expected[0].to_bits());
+        }
+        let got = run(
+            &src,
+            &blocks,
+            &StreamOptions {
+                threads: 4,
+                prefetch: Some(PrefetchConfig { depth: 3, io_threads: 2 }),
+                shard_parts: 1,
+            },
+        );
+        assert_eq!(got.to_bits(), expected[0].to_bits());
+    }
+}

@@ -7,11 +7,17 @@
 //!   anchor rows (Alg. 2 line 1).
 //! * [`sparse_proj`] — sparse ±1 projection matrices for the
 //!   compressed-sensing two-stage construction (§IV-D).
+//! * [`engine`] — the out-of-core streaming engine: deterministic shard
+//!   partition, shard-local accumulation with in-order prefix folding,
+//!   optional prefetched I/O (bounded producer/consumer queue), and
+//!   incremental-progress hooks for mid-compression checkpoints.
 //! * [`stream`] — blocked, multi-threaded compression of a
-//!   [`crate::tensor::TensorSource`] (Fig. 2), generic over the
-//!   block-compressor backend (pure rust vs AOT XLA kernel).
+//!   [`crate::tensor::TensorSource`] (Fig. 2) on top of the engine,
+//!   generic over the block-compressor backend (pure rust vs AOT XLA
+//!   kernel).
 
 pub mod comp;
+pub mod engine;
 pub mod maps;
 pub mod sparse_proj;
 pub mod stream;
@@ -20,9 +26,14 @@ pub use comp::{
     comp_dense, comp_dense_with, ttm_mode1, ttm_mode1_with, ttm_mode2, ttm_mode2_with, ttm_mode3,
     ttm_mode3_with,
 };
+pub use engine::{
+    stream_blocks, BlockConsumer, PrefetchConfig, ProgressFn, ResumeState, StreamOptions,
+    StreamStats, DEFAULT_SHARD_PARTS,
+};
 pub use maps::{CompressionMaps, ReplicaMaps};
 pub use sparse_proj::SparseSignMatrix;
 pub use stream::{
-    compress_source, compress_source_batched, compress_source_sparse, BlockCompressor,
+    compress_source, compress_source_batched, compress_source_batched_opts, compress_source_opts,
+    compress_source_sparse, compress_source_sparse_opts, BlockCompressor, ProxyResume,
     RustCompressor,
 };

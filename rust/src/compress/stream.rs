@@ -4,9 +4,16 @@
 //! each block `T = X(i0:i1, j0:j1, k0:k1)` contributes
 //! `Comp(T, U_p[:, i0:i1], V_p[:, j0:j1], W_p[:, k0:k1])` to every replica's
 //! proxy tensor, and compression is linear so contributions just add.
-//! Blocks are distributed over the worker pool ("the compressions of all
-//! tensor blocks are independent"); per-replica accumulators are sharded to
-//! avoid a single contended lock.
+//!
+//! Scheduling and accumulation live in [`super::engine`]: blocks stream
+//! through deterministic shards with **shard-local accumulators** merged
+//! once in shard order (no per-add mutex — the old `Mutex<DenseTensor>`
+//! per-replica accumulators serialized every `L·M·N` add through one lock
+//! per replica, and made results depend on thread scheduling).  With the
+//! engine, every entry point below is bitwise-reproducible across thread
+//! counts and prefetch settings, supports file-backed out-of-core sources
+//! (prefetched reads), and reports incremental progress for mid-compression
+//! checkpoints.
 //!
 //! The per-block TTM chain is pluggable ([`BlockCompressor`]): the pure-rust
 //! backend below is the "Baseline"/"Parallel on CPU" arm of Figs. 5–7, and
@@ -14,13 +21,15 @@
 //! cores" arm.
 
 use super::comp::comp_dense_with;
+use super::engine::{
+    stream_blocks, BlockConsumer, ProgressFn, ResumeState, StreamOptions, StreamStats,
+};
 use super::maps::ReplicaMaps;
 use crate::linalg::backend::{ComputeBackend, SerialBackend};
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, Trans};
 use crate::mixed::MixedPrecision;
 use crate::tensor::{BlockRange, BlockSpec3, DenseTensor, TensorSource};
 use crate::util::threadpool::ThreadPool;
-use std::sync::Mutex;
 
 /// A backend that compresses one tensor block against matrix column-slices.
 pub trait BlockCompressor: Sync {
@@ -67,11 +76,72 @@ impl BlockCompressor for RustCompressor {
     }
 }
 
+/// Resumable state for the proxy accumulators (one tensor per replica).
+pub type ProxyResume = ResumeState<Vec<DenseTensor>>;
+
+/// Materializes the block grid once so the scheduler can shard over
+/// indices instead of hand-rolling one spawn per block at every call site.
+fn block_grid(dims: [usize; 3], block: [usize; 3]) -> Vec<BlockRange> {
+    BlockSpec3::new(dims, block).iter().collect()
+}
+
+#[inline]
+fn add_into(dst: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d += s;
+    }
+}
+
+fn zero_proxies(maps: &ReplicaMaps) -> Vec<DenseTensor> {
+    let [l, m, n] = maps.reduced;
+    (0..maps.p_count()).map(|_| DenseTensor::zeros(l, m, n)).collect()
+}
+
+fn merge_proxies(into: &mut [DenseTensor], from: Vec<DenseTensor>) {
+    for (a, b) in into.iter_mut().zip(from) {
+        add_into(a.data_mut(), b.data());
+    }
+}
+
+/// Per-replica compression through a pluggable [`BlockCompressor`].
+struct CompressConsumer<'a> {
+    maps: &'a ReplicaMaps,
+    compressor: &'a dyn BlockCompressor,
+}
+
+impl BlockConsumer for CompressConsumer<'_> {
+    type Acc = Vec<DenseTensor>;
+    type Ctx = ();
+
+    fn make_ctx(&self) {}
+
+    fn zero_acc(&self) -> Vec<DenseTensor> {
+        zero_proxies(self.maps)
+    }
+
+    fn process(&self, _ctx: &mut (), blk: &BlockRange, t: DenseTensor, acc: &mut Vec<DenseTensor>) {
+        for (p, rep) in self.maps.replicas.iter().enumerate() {
+            // Column-slices of the compression matrices (contiguous memcpy
+            // in column-major).
+            let u_blk = rep.u.slice_cols(blk.i0, blk.i1);
+            let v_blk = rep.v.slice_cols(blk.j0, blk.j1);
+            let w_blk = rep.w.slice_cols(blk.k0, blk.k1);
+            let contrib = self.compressor.compress_block(&t, &u_blk, &v_blk, &w_blk);
+            add_into(acc[p].data_mut(), contrib.data());
+        }
+    }
+
+    fn merge(&self, into: &mut Vec<DenseTensor>, from: Vec<DenseTensor>) {
+        merge_proxies(into, from);
+    }
+}
+
 /// Streams `src` through the block grid and returns one proxy tensor
 /// `Y_p (L×M×N)` per replica.
 ///
 /// `threads = 1` reproduces the sequential "Baseline"; more threads give the
-/// "Parallel" arms.
+/// "Parallel" arms (bitwise-identical results either way).
 pub fn compress_source(
     src: &dyn TensorSource,
     maps: &ReplicaMaps,
@@ -79,50 +149,149 @@ pub fn compress_source(
     compressor: &dyn BlockCompressor,
     pool: &ThreadPool,
 ) -> Vec<DenseTensor> {
-    let [l, m, n] = maps.reduced;
-    let p_count = maps.p_count();
+    let opts = StreamOptions { threads: pool.size(), ..Default::default() };
+    compress_source_opts(src, maps, block, compressor, &opts, None, None).0
+}
+
+/// [`compress_source`] with explicit scheduling options, optional resume
+/// state, and an incremental-progress callback (checkpoint hook).
+pub fn compress_source_opts(
+    src: &dyn TensorSource,
+    maps: &ReplicaMaps,
+    block: [usize; 3],
+    compressor: &dyn BlockCompressor,
+    opts: &StreamOptions,
+    resume: Option<ProxyResume>,
+    on_progress: Option<ProgressFn<'_, Vec<DenseTensor>>>,
+) -> (Vec<DenseTensor>, StreamStats) {
     let blocks = block_grid(maps.dims, block);
+    let consumer = CompressConsumer { maps, compressor };
+    stream_blocks(src, &blocks, opts, &consumer, resume, on_progress)
+}
 
-    // One accumulator per replica, each behind its own mutex; workers lock a
-    // replica only for the cheap (L·M·N) add, not during the GEMMs.
-    let accs: Vec<Mutex<DenseTensor>> = (0..p_count)
-        .map(|_| Mutex::new(DenseTensor::zeros(l, m, n)))
-        .collect();
+/// Per-worker scratch for the replica-batched chain: every intermediate a
+/// block needs, recycled across blocks so the hot loop allocates nothing
+/// but the accumulators themselves (the old implementation copied each
+/// block into `x1` and re-allocated `y1`/`y13`/`slices`/`outs` per block
+/// *per replica*).
+#[derive(Default)]
+pub struct BatchedScratch {
+    y1_all: Vec<f32>,
+    y1: Vec<f32>,
+    y13: Vec<f32>,
+    pool: Vec<Vec<f32>>,
+}
 
-    pool.for_each_chunk(blocks.len(), 1, |range| {
-        for blk in &blocks[range] {
-            let t = src.block(blk);
-            for (p, rep) in maps.replicas.iter().enumerate() {
-                // Column-slices of the compression matrices (cheap: we
-                // transpose-slice via dedicated helper below).
-                let u_blk = slice_cols(&rep.u, blk.i0, blk.i1);
-                let v_blk = slice_cols(&rep.v, blk.j0, blk.j1);
-                let w_blk = slice_cols(&rep.w, blk.k0, blk.k1);
-                let contrib = compressor.compress_block(&t, &u_blk, &v_blk, &w_blk);
-                let mut acc = accs[p].lock().unwrap();
-                let acc_data = acc.data_mut();
-                for (dst, &srcv) in acc_data.iter_mut().zip(contrib.data()) {
-                    *dst += srcv;
-                }
+/// Re-sizes a recycled buffer without re-zeroing the retained prefix:
+/// every consumer below fully overwrites what it takes (GEMM `beta = 0`
+/// outputs, full repack/copy loops), so after warmup reuse is O(growth),
+/// not an O(len) memset per block.
+fn take_sized(slot: &mut Vec<f32>, len: usize) -> Vec<f32> {
+    let mut v = std::mem::take(slot);
+    v.resize(len, 0.0);
+    v
+}
+
+fn pool_take(pool: &mut Vec<Vec<f32>>, len: usize) -> Vec<f32> {
+    let mut v = pool.pop().unwrap_or_default();
+    v.resize(len, 0.0);
+    v
+}
+
+/// Replica-batched chain (§Perf optimization): one stacked mode-1 GEMM for
+/// all replicas, then per-replica unfold-free modes 3 and 2.
+struct BatchedConsumer<'a> {
+    maps: &'a ReplicaMaps,
+    /// `[U_1; …; U_P]` — `(P·L) × I`.
+    u_stack: Matrix,
+}
+
+impl BlockConsumer for BatchedConsumer<'_> {
+    type Acc = Vec<DenseTensor>;
+    type Ctx = BatchedScratch;
+
+    fn make_ctx(&self) -> BatchedScratch {
+        BatchedScratch::default()
+    }
+
+    fn zero_acc(&self) -> Vec<DenseTensor> {
+        zero_proxies(self.maps)
+    }
+
+    fn process(
+        &self,
+        sc: &mut BatchedScratch,
+        blk: &BlockRange,
+        t: DenseTensor,
+        acc: &mut Vec<DenseTensor>,
+    ) {
+        let [l, m, n] = self.maps.reduced;
+        let p_count = self.maps.p_count();
+        let [di, dj, dk] = t.dims();
+        // Per-block contractions dispatch through the serial reference
+        // backend: parallelism lives at block granularity in the engine, so
+        // the inner chain must not nest another pool.
+        let be = SerialBackend;
+
+        // One batched mode-1 GEMM for all replicas.  `X_(1)` is a free
+        // reinterpretation of the block's own column-major buffer — no copy.
+        let u_blk = self.u_stack.slice_cols(blk.i0, blk.i1); // (P·L) × di
+        let x1 = Matrix::from_vec(di, dj * dk, t.into_vec());
+        let mut y1_all =
+            Matrix::from_vec(p_count * l, dj * dk, take_sized(&mut sc.y1_all, p_count * l * dj * dk));
+        be.gemm(1.0, &u_blk, Trans::No, &x1, Trans::No, 0.0, &mut y1_all);
+        sc.pool.push(x1.into_vec()); // recycle the block buffer
+
+        for (p, rep) in self.maps.replicas.iter().enumerate() {
+            let v_blk = rep.v.slice_cols(blk.j0, blk.j1); // m × dj
+            let w_blk = rep.w.slice_cols(blk.k0, blk.k1); // n × dk
+            // Rows p·l..(p+1)·l of Y1_all, repacked contiguously as the
+            // (l·dj × dk) mode-3 operand (strided copy into reused scratch).
+            let mut y1 = take_sized(&mut sc.y1, l * dj * dk);
+            let all = y1_all.data();
+            let rows_all = p_count * l;
+            for c in 0..dj * dk {
+                y1[c * l..(c + 1) * l]
+                    .copy_from_slice(&all[c * rows_all + p * l..c * rows_all + (p + 1) * l]);
             }
+            let y1_flat = Matrix::from_vec(l * dj, dk, y1);
+            // mode 3: (l·dj × dk) @ (dk × n) → (l·dj × n)
+            let mut y13 = Matrix::from_vec(l * dj, n, take_sized(&mut sc.y13, l * dj * n));
+            be.gemm(1.0, &y1_flat, Trans::No, &w_blk, Trans::Yes, 0.0, &mut y13);
+            // mode 2, batched over output slices kn: (l × dj) @ (dj × m)
+            let mut slices = Vec::with_capacity(n);
+            let mut outs = Vec::with_capacity(n);
+            for kn in 0..n {
+                let mut s = pool_take(&mut sc.pool, l * dj);
+                s.copy_from_slice(y13.col(kn));
+                slices.push(Matrix::from_vec(l, dj, s));
+                outs.push(Matrix::from_vec(l, m, pool_take(&mut sc.pool, l * m)));
+            }
+            be.gemm_batch(1.0, &slices, Trans::No, &v_blk, Trans::Yes, 0.0, &mut outs);
+            let acc_data = acc[p].data_mut();
+            for (kn, out) in outs.iter().enumerate() {
+                add_into(&mut acc_data[kn * l * m..(kn + 1) * l * m], out.data());
+            }
+            for s in slices {
+                sc.pool.push(s.into_vec());
+            }
+            for o in outs {
+                sc.pool.push(o.into_vec());
+            }
+            sc.y13 = y13.into_vec();
+            sc.y1 = y1_flat.into_vec();
         }
-    });
+        sc.y1_all = y1_all.into_vec();
+        // The replica loop's takes/pushes balance, but the recycled block
+        // buffer is a net +1 per block — cap the pool at one block's
+        // working set (2n slice/out buffers + 1) so per-worker scratch
+        // stays bounded over arbitrarily long streams.
+        sc.pool.truncate(2 * n + 1);
+    }
 
-    accs.into_iter()
-        .map(|m| m.into_inner().unwrap())
-        .collect()
-}
-
-/// Materializes the block grid once so the pool can chunk over indices
-/// ([`ThreadPool::for_each_chunk`]) instead of hand-rolling one spawn per
-/// block at every streaming call site.
-fn block_grid(dims: [usize; 3], block: [usize; 3]) -> Vec<BlockRange> {
-    BlockSpec3::new(dims, block).iter().collect()
-}
-
-/// `M[:, c0..c1]` — contiguous memcpy in column-major.
-fn slice_cols(m: &Matrix, c0: usize, c1: usize) -> Matrix {
-    m.slice_cols(c0, c1)
+    fn merge(&self, into: &mut Vec<DenseTensor>, from: Vec<DenseTensor>) {
+        merge_proxies(into, from);
+    }
 }
 
 /// Replica-batched streaming compression (§Perf optimization).
@@ -140,67 +309,65 @@ pub fn compress_source_batched(
     block: [usize; 3],
     pool: &ThreadPool,
 ) -> Vec<DenseTensor> {
-    use crate::linalg::Trans;
-    let [l, m, n] = maps.reduced;
-    let p_count = maps.p_count();
+    let opts = StreamOptions { threads: pool.size(), ..Default::default() };
+    compress_source_batched_opts(src, maps, block, &opts, None, None).0
+}
+
+/// [`compress_source_batched`] with explicit scheduling options, resume
+/// state, and progress callback.
+pub fn compress_source_batched_opts(
+    src: &dyn TensorSource,
+    maps: &ReplicaMaps,
+    block: [usize; 3],
+    opts: &StreamOptions,
+    resume: Option<ProxyResume>,
+    on_progress: Option<ProgressFn<'_, Vec<DenseTensor>>>,
+) -> (Vec<DenseTensor>, StreamStats) {
     let blocks = block_grid(maps.dims, block);
-    let u_stack = maps.stacked_u(); // (P·L) × I
+    let consumer = BatchedConsumer { maps, u_stack: maps.stacked_u() };
+    stream_blocks(src, &blocks, opts, &consumer, resume, on_progress)
+}
 
-    let accs: Vec<Mutex<DenseTensor>> = (0..p_count)
-        .map(|_| Mutex::new(DenseTensor::zeros(l, m, n)))
-        .collect();
+/// First-stage **sparse** compression consumer (±1 maps; §IV-D).
+struct SparseConsumer<'a> {
+    u: &'a crate::compress::SparseSignMatrix,
+    v: &'a crate::compress::SparseSignMatrix,
+    w: &'a crate::compress::SparseSignMatrix,
+}
 
-    // Per-block contractions dispatch through the serial reference backend:
-    // parallelism lives at block granularity (this chunked loop), so the
-    // inner chain must not nest another pool.
-    let be = SerialBackend;
-    pool.for_each_chunk(blocks.len(), 1, |range| {
-        for blk in &blocks[range] {
-            let t = src.block(blk);
-            let [di, dj, dk] = t.dims();
-            // One batched mode-1 GEMM for all replicas:
-            // X_(1) is a free view of the column-major block.
-            let u_blk = u_stack.slice_cols(blk.i0, blk.i1); // (P·L) × di
-            let x1 = Matrix::from_vec(di, dj * dk, t.data().to_vec());
-            let mut y1_all = Matrix::zeros(p_count * l, dj * dk);
-            be.gemm(1.0, &u_blk, Trans::No, &x1, Trans::No, 0.0, &mut y1_all);
-            // Per replica, unfold-free chain (§Perf): in column-major,
-            //   Y1 (l, dj, dk) viewed as (l·dj × dk) is contiguous →
-            //   mode-3 is ONE gemm against W_blkᵀ;
-            //   then each frontal slice of (l, dj, n) is a contiguous
-            //   (l × dj) matrix → mode-2 is a batched GEMM of n small
-            //   slices against V_blkᵀ (ComputeBackend::gemm_batch).
-            for (p, rep) in maps.replicas.iter().enumerate() {
-                let y1 = y1_all.slice_rows(p * l, (p + 1) * l); // l × dj·dk
-                let v_blk = rep.v.slice_cols(blk.j0, blk.j1); // m × dj
-                let w_blk = rep.w.slice_cols(blk.k0, blk.k1); // n × dk
-                // mode 3: (l·dj × dk) @ (dk × n) → (l·dj × n)
-                let y1_flat = Matrix::from_vec(l * dj, dk, y1.into_vec());
-                let mut y13 = Matrix::zeros(l * dj, n);
-                be.gemm(1.0, &y1_flat, Trans::No, &w_blk, Trans::Yes, 0.0, &mut y13);
-                // mode 2, batched over output slices kn: (l × dj) @ (dj × m)
-                let slices: Vec<Matrix> = (0..n)
-                    .map(|kn| Matrix::from_vec(l, dj, y13.col(kn).to_vec()))
-                    .collect();
-                let mut outs: Vec<Matrix> = (0..n).map(|_| Matrix::zeros(l, m)).collect();
-                be.gemm_batch(1.0, &slices, Trans::No, &v_blk, Trans::Yes, 0.0, &mut outs);
-                let mut acc = accs[p].lock().unwrap();
-                let acc_data = acc.data_mut();
-                for (kn, out) in outs.iter().enumerate() {
-                    for (dst, &s) in acc_data[kn * l * m..(kn + 1) * l * m]
-                        .iter_mut()
-                        .zip(out.data())
-                    {
-                        *dst += s;
-                    }
-                }
-            }
-        }
-    });
+impl BlockConsumer for SparseConsumer<'_> {
+    type Acc = DenseTensor;
+    type Ctx = ();
 
-    accs.into_iter()
-        .map(|m| m.into_inner().unwrap())
-        .collect()
+    fn make_ctx(&self) {}
+
+    fn zero_acc(&self) -> DenseTensor {
+        DenseTensor::zeros(self.u.rows(), self.v.rows(), self.w.rows())
+    }
+
+    fn process(&self, _ctx: &mut (), blk: &BlockRange, t: DenseTensor, acc: &mut DenseTensor) {
+        use crate::tensor::unfold::{refold_1, refold_2, refold_3, unfold_2, unfold_3};
+        let (al, bm, gn) = (self.u.rows(), self.v.rows(), self.w.rows());
+        let [di, dj, dk] = t.dims();
+        // mode 1: sparse U slice (αL×di) · T_(1) (di × dj·dk).  The
+        // ±1-sparse products are O(nnz) scalar kernels and stay outside
+        // ComputeBackend deliberately — there is no dense contraction here
+        // to dispatch.  T_(1) reinterprets the block buffer (no copy).
+        let u_blk = self.u.slice_cols(blk.i0, blk.i1);
+        let t1 = Matrix::from_vec(di, dj * dk, t.into_vec());
+        let y1 = refold_1(&u_blk.mul_dense(&t1), [al, dj, dk]);
+        // mode 2
+        let v_blk = self.v.slice_cols(blk.j0, blk.j1);
+        let y2 = refold_2(&v_blk.mul_dense(&unfold_2(&y1)), [al, bm, dk]);
+        // mode 3
+        let w_blk = self.w.slice_cols(blk.k0, blk.k1);
+        let y3 = refold_3(&w_blk.mul_dense(&unfold_3(&y2)), [al, bm, gn]);
+        add_into(acc.data_mut(), y3.data());
+    }
+
+    fn merge(&self, into: &mut DenseTensor, from: DenseTensor) {
+        add_into(into.data_mut(), from.data());
+    }
 }
 
 /// First-stage **sparse** streaming compression for the compressed-sensing
@@ -215,45 +382,67 @@ pub fn compress_source_sparse(
     block: [usize; 3],
     pool: &ThreadPool,
 ) -> DenseTensor {
-    use crate::tensor::unfold::{refold_1, refold_2, refold_3, unfold_2, unfold_3};
+    let opts = StreamOptions { threads: pool.size(), ..Default::default() };
+    compress_source_sparse_opts(src, u, v, w, block, &opts).0
+}
+
+/// [`compress_source_sparse`] with explicit scheduling options.
+pub fn compress_source_sparse_opts(
+    src: &dyn TensorSource,
+    u: &crate::compress::SparseSignMatrix,
+    v: &crate::compress::SparseSignMatrix,
+    w: &crate::compress::SparseSignMatrix,
+    block: [usize; 3],
+    opts: &StreamOptions,
+) -> (DenseTensor, StreamStats) {
     let dims = src.dims();
     assert_eq!(u.cols(), dims[0]);
     assert_eq!(v.cols(), dims[1]);
     assert_eq!(w.cols(), dims[2]);
-    let (al, bm, gn) = (u.rows(), v.rows(), w.rows());
     let blocks = block_grid(dims, block);
-    let acc = Mutex::new(DenseTensor::zeros(al, bm, gn));
+    let consumer = SparseConsumer { u, v, w };
+    stream_blocks(src, &blocks, opts, &consumer, None, None)
+}
 
+/// The retired per-add-mutex implementation, kept **only** as the
+/// differential oracle for the shard-local engine (its accumulation order
+/// is scheduling-dependent beyond one thread, which is exactly why it was
+/// replaced).
+#[doc(hidden)]
+pub fn compress_source_locked(
+    src: &dyn TensorSource,
+    maps: &ReplicaMaps,
+    block: [usize; 3],
+    compressor: &dyn BlockCompressor,
+    pool: &ThreadPool,
+) -> Vec<DenseTensor> {
+    use std::sync::Mutex;
+    let [l, m, n] = maps.reduced;
+    let accs: Vec<Mutex<DenseTensor>> = (0..maps.p_count())
+        .map(|_| Mutex::new(DenseTensor::zeros(l, m, n)))
+        .collect();
+    let blocks = block_grid(maps.dims, block);
     pool.for_each_chunk(blocks.len(), 1, |range| {
         for blk in &blocks[range] {
             let t = src.block(blk);
-            let [di, dj, dk] = t.dims();
-            // mode 1: sparse U slice (αL×di) · T_(1) (di × dj·dk).  The
-            // ±1-sparse products are O(nnz) scalar kernels and stay
-            // outside ComputeBackend deliberately — there is no dense
-            // contraction here to dispatch.
-            let u_blk = u.slice_cols(blk.i0, blk.i1);
-            let t1 = Matrix::from_vec(di, dj * dk, t.data().to_vec());
-            let y1 = refold_1(&u_blk.mul_dense(&t1), [al, dj, dk]);
-            // mode 2
-            let v_blk = v.slice_cols(blk.j0, blk.j1);
-            let y2 = refold_2(&v_blk.mul_dense(&unfold_2(&y1)), [al, bm, dk]);
-            // mode 3
-            let w_blk = w.slice_cols(blk.k0, blk.k1);
-            let y3 = refold_3(&w_blk.mul_dense(&unfold_3(&y2)), [al, bm, gn]);
-            let mut a = acc.lock().unwrap();
-            for (dst, &s) in a.data_mut().iter_mut().zip(y3.data()) {
-                *dst += s;
+            for (p, rep) in maps.replicas.iter().enumerate() {
+                let u_blk = rep.u.slice_cols(blk.i0, blk.i1);
+                let v_blk = rep.v.slice_cols(blk.j0, blk.j1);
+                let w_blk = rep.w.slice_cols(blk.k0, blk.k1);
+                let contrib = compressor.compress_block(&t, &u_blk, &v_blk, &w_blk);
+                let mut acc = accs[p].lock().unwrap();
+                add_into(acc.data_mut(), contrib.data());
             }
         }
     });
-    acc.into_inner().unwrap()
+    accs.into_iter().map(|m| m.into_inner().unwrap()).collect()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::compress::comp::comp_dense;
+    use crate::compress::engine::PrefetchConfig;
     use crate::tensor::{InMemorySource, LowRankGenerator};
     use crate::util::rng::Xoshiro256;
 
@@ -282,7 +471,7 @@ mod tests {
     }
 
     #[test]
-    fn single_thread_matches_parallel() {
+    fn single_thread_matches_parallel_bitwise() {
         let gen = LowRankGenerator::new(16, 16, 16, 2, 142);
         let maps = ReplicaMaps::generate([16, 16, 16], [5, 5, 5], 2, 2, 143);
         let comp = RustCompressor {
@@ -290,8 +479,79 @@ mod tests {
         };
         let seq = compress_source(&gen, &maps, [4, 4, 4], &comp, &ThreadPool::new(1));
         let par = compress_source(&gen, &maps, [4, 4, 4], &comp, &ThreadPool::new(8));
+        // The shard-local engine's fixed reduction tree makes thread counts
+        // bitwise-invisible (the retired mutex path only promised ~1e-5).
+        assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn prefetch_matches_sync_bitwise() {
+        let gen = LowRankGenerator::new(14, 15, 16, 2, 151);
+        let maps = ReplicaMaps::generate([14, 15, 16], [5, 5, 5], 2, 2, 152);
+        let comp = RustCompressor {
+            precision: MixedPrecision::Full,
+        };
+        let sync = compress_source_opts(
+            &gen,
+            &maps,
+            [5, 6, 4],
+            &comp,
+            &StreamOptions { threads: 3, ..Default::default() },
+            None,
+            None,
+        )
+        .0;
+        for (depth, io) in [(1, 1), (4, 2), (2, 3)] {
+            let (pref, stats) = compress_source_opts(
+                &gen,
+                &maps,
+                [5, 6, 4],
+                &comp,
+                &StreamOptions {
+                    threads: 3,
+                    prefetch: Some(PrefetchConfig { depth, io_threads: io }),
+                    ..Default::default()
+                },
+                None,
+                None,
+            );
+            assert!(stats.prefetched);
+            assert_eq!(sync, pref, "depth={depth} io={io}");
+        }
+    }
+
+    #[test]
+    fn shard_local_matches_locked_oracle() {
+        let gen = LowRankGenerator::new(15, 13, 11, 2, 153);
+        let maps = ReplicaMaps::generate([15, 13, 11], [5, 4, 3], 2, 2, 154);
+        let comp = RustCompressor {
+            precision: MixedPrecision::Full,
+        };
+        // (a) Numerically: any shard partition vs the mutex path (fp
+        // reassociation only — both sum the same per-block contributions).
+        let locked = compress_source_locked(&gen, &maps, [4, 4, 4], &comp, &ThreadPool::new(1));
+        let sharded = compress_source(&gen, &maps, [4, 4, 4], &comp, &ThreadPool::new(8));
         for p in 0..2 {
-            assert!(seq[p].rel_error(&par[p]) < 1e-5);
+            let err = sharded[p].rel_error(&locked[p]);
+            assert!(err < 1e-6, "replica {p} err {err}");
+        }
+        // (b) Bitwise: a single shard reduces in flat block order — exactly
+        // the deterministic (1-thread) mutex fold — at every thread count
+        // and in both execution modes.
+        for threads in [1, 2, 8] {
+            for prefetch in [None, Some(PrefetchConfig { depth: 2, io_threads: 2 })] {
+                let got = compress_source_opts(
+                    &gen,
+                    &maps,
+                    [4, 4, 4],
+                    &comp,
+                    &StreamOptions { threads, prefetch, shard_parts: 1 },
+                    None,
+                    None,
+                )
+                .0;
+                assert_eq!(got, locked, "threads={threads} prefetch={prefetch:?}");
+            }
         }
     }
 
@@ -322,6 +582,28 @@ mod tests {
             let err = batched[p].rel_error(&plain[p]);
             assert!(err < 1e-5, "replica {p} err {err}");
         }
+    }
+
+    #[test]
+    fn batched_bitwise_invariant_across_schedules() {
+        let gen = LowRankGenerator::new(18, 14, 12, 2, 155);
+        let maps = ReplicaMaps::generate([18, 14, 12], [6, 5, 4], 3, 2, 156);
+        let reference = compress_source_batched(&gen, &maps, [5, 5, 5], &ThreadPool::new(1));
+        let par = compress_source_batched(&gen, &maps, [5, 5, 5], &ThreadPool::new(8));
+        assert_eq!(reference, par);
+        let (pref, _) = compress_source_batched_opts(
+            &gen,
+            &maps,
+            [5, 5, 5],
+            &StreamOptions {
+                threads: 4,
+                prefetch: Some(PrefetchConfig { depth: 3, io_threads: 2 }),
+                ..Default::default()
+            },
+            None,
+            None,
+        );
+        assert_eq!(reference, pref);
     }
 
     #[test]

@@ -1,5 +1,5 @@
-//! Run checkpointing: persist pipeline state after the expensive stages so
-//! an interrupted run resumes without recompressing.
+//! Run checkpointing: persist pipeline state during and after the
+//! expensive stages so an interrupted run resumes without recompressing.
 //!
 //! The compression stage dominates wall-clock (`P` passes over a huge
 //! tensor); a crash afterwards should not force a redo.  A checkpoint
@@ -7,6 +7,22 @@
 //! count, stage) plus the proxy tensors in the crate's EXT1 binary format.
 //! The maps themselves are *not* stored: they are regenerated
 //! deterministically from the seed, which the header fingerprints.
+//!
+//! Two checkpoint kinds coexist in one directory:
+//!
+//! * **Final** (`checkpoint.json` + `proxy_*.ext1`) — the fully compressed
+//!   proxies, written once after Stage 1 completes (the pre-existing
+//!   behavior).
+//! * **Incremental** (`partial.json` + `partial_<gen>_proxy_*.ext1`) — the
+//!   streaming engine's folded shard prefix, written every few shards
+//!   mid-compression.  The header records the block-grid partition
+//!   (block dims, shard parts, total blocks) plus a shard-progress bitmap,
+//!   so a killed run resumes from the folded prefix instead of restarting
+//!   Stage 1 from zero — and, because the engine's reduction order is
+//!   fixed, the resumed result is bitwise identical to an uninterrupted
+//!   run.  Writes are generation-numbered and committed by an atomic
+//!   rename of `partial.json`, so a kill mid-write leaves the previous
+//!   complete generation in force.
 
 use crate::tensor::io::{load_tensor, save_tensor};
 use crate::tensor::DenseTensor;
@@ -124,12 +140,326 @@ pub fn load_proxies(
         .get("proxy_count")
         .and_then(|x| x.as_usize())
         .context("missing proxy_count")?;
+    if count != fp.replicas {
+        bail!(
+            "checkpoint holds {count} proxies but the run expects {} replicas",
+            fp.replicas
+        );
+    }
     let mut proxies = Vec::with_capacity(count);
     for p in 0..count {
         let path = dir.join(format!("proxy_{p:04}.ext1"));
-        proxies.push(load_tensor(&path).with_context(|| format!("loading {}", path.display()))?);
+        let t = load_tensor(&path).with_context(|| format!("loading {}", path.display()))?;
+        if t.dims() != fp.reduced {
+            bail!(
+                "{}: proxy dims {:?} do not match reduced dims {:?}",
+                path.display(),
+                t.dims(),
+                fp.reduced
+            );
+        }
+        proxies.push(t);
     }
     Ok(Some(proxies))
+}
+
+/// The streaming position an incremental checkpoint captures, plus the
+/// block-grid partition it is only valid for (resuming under a different
+/// partition would fold blocks twice or skip them).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CompressionProgress {
+    /// Block dims the grid was built with.
+    pub block: [usize; 3],
+    /// Shard partition granularity (`StreamOptions::shard_parts`).
+    pub shard_parts: usize,
+    /// Total shards in the partition.
+    pub shards_total: usize,
+    /// Folded prefix: shards `0..shards_done` are in the partial proxies.
+    pub shards_done: usize,
+    /// Blocks covered by the folded prefix.
+    pub blocks_done: usize,
+    /// Total blocks in the grid.
+    pub blocks_total: usize,
+    /// Which compression path produced the partials (`"plain"`,
+    /// `"batched"`) — paths differ in GEMM association, so partials are
+    /// only resumable by the same path.
+    pub path: String,
+    /// Monotone write generation (for atomic replacement).
+    pub generation: u64,
+}
+
+impl CompressionProgress {
+    fn to_json(&self, bitmap_hex: &str) -> Json {
+        Json::obj(vec![
+            ("block", Json::arr_usize(&self.block)),
+            ("shard_parts", Json::num(self.shard_parts as f64)),
+            ("shards_total", Json::num(self.shards_total as f64)),
+            ("shards_done", Json::num(self.shards_done as f64)),
+            ("blocks_done", Json::num(self.blocks_done as f64)),
+            ("blocks_total", Json::num(self.blocks_total as f64)),
+            ("path", Json::str(self.path.clone())),
+            ("generation", Json::num(self.generation as f64)),
+            ("shard_bitmap", Json::str(bitmap_hex)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<(CompressionProgress, String)> {
+        let num = |key: &str| -> Result<usize> {
+            v.get(key)
+                .and_then(|x| x.as_usize())
+                .with_context(|| format!("partial checkpoint missing {key}"))
+        };
+        let block = {
+            let a = v
+                .get("block")
+                .and_then(|x| x.as_arr())
+                .context("partial checkpoint missing block")?;
+            if a.len() != 3 {
+                bail!("partial checkpoint block: expected 3 dims");
+            }
+            [
+                a[0].as_usize().context("block dim")?,
+                a[1].as_usize().context("block dim")?,
+                a[2].as_usize().context("block dim")?,
+            ]
+        };
+        let bitmap = v
+            .get("shard_bitmap")
+            .and_then(|x| x.as_str())
+            .context("partial checkpoint missing shard_bitmap")?
+            .to_string();
+        Ok((
+            CompressionProgress {
+                block,
+                shard_parts: num("shard_parts")?,
+                shards_total: num("shards_total")?,
+                shards_done: num("shards_done")?,
+                blocks_done: num("blocks_done")?,
+                blocks_total: num("blocks_total")?,
+                path: v
+                    .get("path")
+                    .and_then(|x| x.as_str())
+                    .context("partial checkpoint missing path")?
+                    .to_string(),
+                generation: num("generation")? as u64,
+            },
+            bitmap,
+        ))
+    }
+}
+
+/// Little-endian-bit hex bitmap with bits `0..done` set out of `total` —
+/// the block-grid progress record.  The current writer always persists a
+/// prefix (the engine folds shards in order), but the format carries the
+/// full bitmap so readers verify integrity rather than trusting a counter.
+fn prefix_bitmap_hex(done: usize, total: usize) -> String {
+    let nbytes = total.div_ceil(8).max(1);
+    let mut bytes = vec![0u8; nbytes];
+    for s in 0..done {
+        bytes[s / 8] |= 1 << (s % 8);
+    }
+    let mut out = String::with_capacity(nbytes * 2);
+    for b in bytes {
+        out.push_str(&format!("{b:02x}"));
+    }
+    out
+}
+
+/// Parses a bitmap written by [`prefix_bitmap_hex`] and verifies it is the
+/// prefix `0..done` of `total` shards.  Decodes byte-wise (never slicing
+/// the untrusted string) so corrupt multi-byte content errors instead of
+/// panicking mid-character.
+fn check_prefix_bitmap(hex: &str, done: usize, total: usize) -> Result<()> {
+    let nbytes = total.div_ceil(8).max(1);
+    let raw = hex.as_bytes();
+    if raw.len() != nbytes * 2 {
+        bail!("shard bitmap length {} != {}", raw.len(), nbytes * 2);
+    }
+    let nibble = |b: u8| -> Result<u8> {
+        match b {
+            b'0'..=b'9' => Ok(b - b'0'),
+            b'a'..=b'f' => Ok(b - b'a' + 10),
+            b'A'..=b'F' => Ok(b - b'A' + 10),
+            _ => bail!("shard bitmap is not hex (byte {b:#04x})"),
+        }
+    };
+    let mut bytes = Vec::with_capacity(nbytes);
+    for i in 0..nbytes {
+        bytes.push((nibble(raw[2 * i])? << 4) | nibble(raw[2 * i + 1])?);
+    }
+    for s in 0..total {
+        let set = bytes[s / 8] & (1 << (s % 8)) != 0;
+        if set != (s < done) {
+            bail!("shard bitmap is not the expected prefix of {done}/{total} (bit {s} = {set})");
+        }
+    }
+    Ok(())
+}
+
+fn partial_proxy_name(generation: u64, p: usize) -> String {
+    format!("partial_{generation:08}_proxy_{p:04}.ext1")
+}
+
+/// Writes an incremental (mid-compression) checkpoint: the folded-prefix
+/// proxies under a fresh generation, then the `partial.json` header via an
+/// atomic rename, then garbage-collects older generations.  A kill at any
+/// point leaves a complete previous generation (or no partial at all).
+pub fn save_partial(
+    dir: impl AsRef<Path>,
+    fp: &Fingerprint,
+    progress: &CompressionProgress,
+    proxies: &[DenseTensor],
+) -> Result<()> {
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir)?;
+    let g = progress.generation;
+    for (p, y) in proxies.iter().enumerate() {
+        save_tensor(y, dir.join(partial_proxy_name(g, p)))?;
+    }
+    let header = Json::obj(vec![
+        ("version", Json::num(1.0)),
+        ("stage", Json::str("compressing")),
+        ("fingerprint", fp.to_json()),
+        ("proxy_count", Json::num(proxies.len() as f64)),
+        (
+            "progress",
+            progress.to_json(&prefix_bitmap_hex(progress.shards_done, progress.shards_total)),
+        ),
+    ]);
+    let tmp = dir.join("partial.json.tmp");
+    std::fs::write(&tmp, header.to_string_pretty())?;
+    std::fs::rename(&tmp, dir.join("partial.json")).context("committing partial.json")?;
+    // GC superseded generations (best-effort).
+    if let Ok(entries) = std::fs::read_dir(dir) {
+        for e in entries.flatten() {
+            let name = e.file_name();
+            let name = name.to_string_lossy();
+            if name.starts_with("partial_")
+                && name.ends_with(".ext1")
+                && !name.starts_with(&format!("partial_{g:08}_"))
+            {
+                std::fs::remove_file(e.path()).ok();
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Loads an incremental checkpoint if present.  `Ok(None)` when absent;
+/// `Err` when one exists but was written under a different fingerprint or
+/// block-grid partition (resuming it would corrupt results — fail loudly,
+/// mirroring [`load_proxies`]).  `expected` carries the partition of the
+/// *current* run (its `shards_done`/`blocks_done`/`generation` are
+/// ignored).
+pub fn load_partial(
+    dir: impl AsRef<Path>,
+    fp: &Fingerprint,
+    expected: &CompressionProgress,
+) -> Result<Option<(CompressionProgress, Vec<DenseTensor>)>> {
+    let dir = dir.as_ref();
+    let header_path = dir.join("partial.json");
+    if !header_path.exists() {
+        return Ok(None);
+    }
+    let text = std::fs::read_to_string(&header_path)?;
+    let v = Json::parse(&text).context("partial.json parse")?;
+    if v.get("version").and_then(|x| x.as_usize()) != Some(1) {
+        bail!("unsupported partial checkpoint version");
+    }
+    let stored_fp =
+        Fingerprint::from_json(v.get("fingerprint").context("missing fingerprint")?)?;
+    if &stored_fp != fp {
+        bail!(
+            "partial checkpoint at {} was created with different parameters \
+             (stored {stored_fp:?}, requested {fp:?}); delete it to recompress",
+            dir.display()
+        );
+    }
+    let (progress, bitmap) =
+        CompressionProgress::from_json(v.get("progress").context("missing progress")?)?;
+    if progress.block != expected.block
+        || progress.shard_parts != expected.shard_parts
+        || progress.shards_total != expected.shards_total
+        || progress.blocks_total != expected.blocks_total
+        || progress.path != expected.path
+    {
+        bail!(
+            "partial checkpoint at {} used a different block-grid partition or path \
+             (stored {progress:?}, current {expected:?}); delete it to recompress",
+            dir.display()
+        );
+    }
+    // Progress bounds: a tampered/corrupt header must fail loudly here,
+    // not panic later in the engine's resume assertions.
+    if progress.shards_done > progress.shards_total {
+        bail!(
+            "partial checkpoint claims {} of {} shards done",
+            progress.shards_done,
+            progress.shards_total
+        );
+    }
+    let parts =
+        crate::util::threadpool::ThreadPool::partition(progress.blocks_total, progress.shard_parts);
+    if parts.len() != progress.shards_total {
+        bail!(
+            "partial checkpoint shard partition is inconsistent ({} parts for {} declared)",
+            parts.len(),
+            progress.shards_total
+        );
+    }
+    let prefix_blocks: usize = parts[..progress.shards_done].iter().map(|(a, b)| b - a).sum();
+    if prefix_blocks != progress.blocks_done {
+        bail!(
+            "partial checkpoint blocks_done {} does not match its {}-shard prefix ({prefix_blocks})",
+            progress.blocks_done,
+            progress.shards_done
+        );
+    }
+    check_prefix_bitmap(&bitmap, progress.shards_done, progress.shards_total)?;
+    let count = v
+        .get("proxy_count")
+        .and_then(|x| x.as_usize())
+        .context("missing proxy_count")?;
+    // A truncated/corrupt partial must fail loudly here: resuming with the
+    // wrong accumulator count would silently drop replicas in the merge.
+    if count != fp.replicas {
+        bail!(
+            "partial checkpoint holds {count} proxies but the run expects {} replicas",
+            fp.replicas
+        );
+    }
+    let mut proxies = Vec::with_capacity(count);
+    for p in 0..count {
+        let path = dir.join(partial_proxy_name(progress.generation, p));
+        let t = load_tensor(&path).with_context(|| format!("loading {}", path.display()))?;
+        if t.dims() != fp.reduced {
+            bail!(
+                "{}: partial proxy dims {:?} do not match reduced dims {:?}",
+                path.display(),
+                t.dims(),
+                fp.reduced
+            );
+        }
+        proxies.push(t);
+    }
+    Ok(Some((progress, proxies)))
+}
+
+/// Removes only the incremental checkpoint (after the final one lands).
+pub fn clear_partial(dir: impl AsRef<Path>) -> Result<()> {
+    let dir = dir.as_ref();
+    if !dir.exists() {
+        return Ok(());
+    }
+    std::fs::remove_file(dir.join("partial.json")).ok();
+    for e in std::fs::read_dir(dir)?.flatten() {
+        let name = e.file_name();
+        let name = name.to_string_lossy();
+        if name.starts_with("partial_") && name.ends_with(".ext1") {
+            std::fs::remove_file(e.path()).ok();
+        }
+    }
+    Ok(())
 }
 
 /// Removes a checkpoint directory (after a successful run).
@@ -216,6 +546,138 @@ mod tests {
     #[test]
     fn absent_checkpoint_is_none() {
         assert!(load_proxies("/nonexistent/ckpt", &fp()).unwrap().is_none());
+    }
+
+    fn progress(shards_done: usize, generation: u64) -> CompressionProgress {
+        // Self-consistent partition: 120 blocks over 10 shards of 12.
+        CompressionProgress {
+            block: [8, 8, 8],
+            shard_parts: 10,
+            shards_total: 10,
+            shards_done,
+            blocks_done: shards_done * 12,
+            blocks_total: 120,
+            path: "batched".to_string(),
+            generation,
+        }
+    }
+
+    #[test]
+    fn partial_progress_bounds_validated() {
+        let dir = tmpdir("partial_bounds");
+        let mut rng = Xoshiro256::seed_from_u64(8);
+        let proxies = vec![
+            DenseTensor::random_normal([10, 10, 10], &mut rng),
+            DenseTensor::random_normal([10, 10, 10], &mut rng),
+        ];
+        // blocks_done inconsistent with the shard prefix → loud failure.
+        let mut pr = progress(3, 0);
+        pr.blocks_done = 35;
+        save_partial(&dir, &fp(), &pr, &proxies).unwrap();
+        assert!(load_partial(&dir, &fp(), &progress(0, 0)).is_err());
+        clear(&dir).unwrap();
+        // shards_done beyond shards_total → loud failure, not a panic.
+        let mut pr = progress(10, 0);
+        pr.shards_done = 12;
+        pr.blocks_done = 144;
+        save_partial(&dir, &fp(), &pr, &proxies).unwrap();
+        assert!(load_partial(&dir, &fp(), &progress(0, 0)).is_err());
+        clear(&dir).unwrap();
+    }
+
+    #[test]
+    fn partial_round_trip_and_gc() {
+        let dir = tmpdir("partial_rt");
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let proxies = vec![
+            DenseTensor::random_normal([10, 10, 10], &mut rng),
+            DenseTensor::random_normal([10, 10, 10], &mut rng),
+        ];
+        save_partial(&dir, &fp(), &progress(3, 0), &proxies).unwrap();
+        let newer = vec![
+            DenseTensor::random_normal([10, 10, 10], &mut rng),
+            DenseTensor::random_normal([10, 10, 10], &mut rng),
+        ];
+        save_partial(&dir, &fp(), &progress(6, 1), &newer).unwrap();
+        let (pr, loaded) = load_partial(&dir, &fp(), &progress(0, 0)).unwrap().unwrap();
+        assert_eq!(pr.shards_done, 6);
+        assert_eq!(pr.blocks_done, 72);
+        assert_eq!(loaded, newer, "latest generation wins");
+        // Generation-0 files were garbage-collected.
+        assert!(!dir.join(super::partial_proxy_name(0, 0)).exists());
+        clear_partial(&dir).unwrap();
+        assert!(load_partial(&dir, &fp(), &progress(0, 0)).unwrap().is_none());
+        clear(&dir).unwrap();
+    }
+
+    #[test]
+    fn partial_partition_mismatch_rejected() {
+        let dir = tmpdir("partial_mismatch");
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let proxies = vec![DenseTensor::random_normal([10, 10, 10], &mut rng)];
+        save_partial(&dir, &fp(), &progress(2, 0), &proxies).unwrap();
+        let mut other_block = progress(0, 0);
+        other_block.block = [4, 4, 4];
+        assert!(load_partial(&dir, &fp(), &other_block).is_err());
+        let mut other_path = progress(0, 0);
+        other_path.path = "plain".to_string();
+        assert!(load_partial(&dir, &fp(), &other_path).is_err());
+        let mut other_fp = fp();
+        other_fp.seed = 123;
+        assert!(load_partial(&dir, &other_fp, &progress(0, 0)).is_err());
+        clear(&dir).unwrap();
+    }
+
+    #[test]
+    fn partial_absent_is_none_and_final_untouched() {
+        let dir = tmpdir("partial_absent");
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let proxies = vec![
+            DenseTensor::random_normal([10, 10, 10], &mut rng),
+            DenseTensor::random_normal([10, 10, 10], &mut rng),
+        ];
+        // A final checkpoint alone yields no partial.
+        save_proxies(&dir, &fp(), &proxies).unwrap();
+        assert!(load_partial(&dir, &fp(), &progress(0, 0)).unwrap().is_none());
+        // clear_partial must not disturb the final checkpoint.
+        clear_partial(&dir).unwrap();
+        assert!(load_proxies(&dir, &fp()).unwrap().is_some());
+        clear(&dir).unwrap();
+    }
+
+    #[test]
+    fn proxy_count_and_dims_validated_on_load() {
+        let dir = tmpdir("count_dims");
+        let mut rng = Xoshiro256::seed_from_u64(6);
+        // One proxy where the fingerprint promises two → loud failure.
+        let short = vec![DenseTensor::random_normal([10, 10, 10], &mut rng)];
+        save_proxies(&dir, &fp(), &short).unwrap();
+        assert!(load_proxies(&dir, &fp()).is_err());
+        clear(&dir).unwrap();
+        save_partial(&dir, &fp(), &progress(2, 0), &short).unwrap();
+        assert!(load_partial(&dir, &fp(), &progress(0, 0)).is_err());
+        clear(&dir).unwrap();
+        // Right count, wrong dims → loud failure.
+        let wrong_dims = vec![
+            DenseTensor::random_normal([9, 10, 10], &mut rng),
+            DenseTensor::random_normal([9, 10, 10], &mut rng),
+        ];
+        save_proxies(&dir, &fp(), &wrong_dims).unwrap();
+        assert!(load_proxies(&dir, &fp()).is_err());
+        clear(&dir).unwrap();
+    }
+
+    #[test]
+    fn bitmap_prefix_integrity() {
+        assert_eq!(super::prefix_bitmap_hex(0, 10), "0000");
+        assert_eq!(super::prefix_bitmap_hex(3, 10), "0700");
+        assert!(super::check_prefix_bitmap("0700", 3, 10).is_ok());
+        assert!(super::check_prefix_bitmap("0f00", 3, 10).is_err(), "extra bit");
+        assert!(super::check_prefix_bitmap("0300", 3, 10).is_err(), "missing bit");
+        assert!(super::check_prefix_bitmap("07", 3, 10).is_err(), "short");
+        assert!(super::check_prefix_bitmap("zz00", 3, 10).is_err(), "not hex");
+        // Multi-byte UTF-8 of the right *byte* length must error, not panic.
+        assert!(super::check_prefix_bitmap("aé0", 3, 10).is_err(), "non-ascii");
     }
 
     #[test]

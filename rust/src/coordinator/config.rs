@@ -27,6 +27,17 @@ pub struct SensingConfig {
     pub lambda: f32,
 }
 
+impl SensingConfig {
+    /// Stage-1 expanded dims `[αL, βM, γN]` for the given reduced dims —
+    /// the shape of the intermediate `Z` (and of each of the streaming
+    /// engine's shard-local `Z` accumulators).  One definition shared by
+    /// the pipeline and the memory planner.
+    pub fn expanded(&self, reduced: [usize; 3]) -> [usize; 3] {
+        let expand = |r: usize| ((r as f32 * self.alpha).ceil() as usize).max(r + 1);
+        [expand(reduced[0]), expand(reduced[1]), expand(reduced[2])]
+    }
+}
+
 impl Default for SensingConfig {
     fn default() -> Self {
         Self {
@@ -67,8 +78,22 @@ pub struct PipelineConfig {
     pub mixed_precision: bool,
     /// Compressed-sensing two-stage mode — §IV-D. `None` = plain Alg. 2.
     pub sensing: Option<SensingConfig>,
-    /// Memory budget in bytes for the planner (0 = unlimited).
+    /// Memory budget in bytes for the planner (0 = unlimited).  When the
+    /// budget is smaller than the tensor's byte size, the planner resolves
+    /// an **out-of-core** plan: block dims, prefetch depth, and the
+    /// streaming working set (queue + in-flight blocks + shard
+    /// accumulators + checkpoint snapshots) are sized to fit the budget,
+    /// and prefetching defaults on so file-backed reads overlap compute.
+    /// (Known modeling gap: blocks parked out of order in the prefetched
+    /// scheduler are bounded by the fold window but not individually
+    /// budgeted — see ROADMAP.)
     pub memory_budget: usize,
+    /// Prefetch queue depth in blocks.  `None` → auto (enabled at
+    /// `2 × io_threads` for out-of-core plans, disabled otherwise);
+    /// `Some(0)` → force synchronous reads; `Some(d)` → force depth `d`.
+    pub prefetch_depth: Option<usize>,
+    /// Dedicated I/O producer threads when prefetching.
+    pub io_threads: usize,
     /// Streaming direct-refinement sweeps after recovery (one extra pass
     /// over the source per sweep; removes the stacked-solve noise
     /// amplification). 0 disables.
@@ -153,6 +178,8 @@ impl Default for PipelineConfigBuilder {
                 mixed_precision: false,
                 sensing: None,
                 memory_budget: 0,
+                prefetch_depth: None,
+                io_threads: 2,
                 refine_sweeps: 1,
                 checkpoint_dir: None,
                 seed: 0,
@@ -220,6 +247,17 @@ impl PipelineConfigBuilder {
 
     pub fn memory_budget(mut self, bytes: usize) -> Self {
         self.cfg.memory_budget = bytes;
+        self
+    }
+
+    /// Forces the prefetch queue depth (`0` disables prefetching).
+    pub fn prefetch_depth(mut self, depth: usize) -> Self {
+        self.cfg.prefetch_depth = Some(depth);
+        self
+    }
+
+    pub fn io_threads(mut self, n: usize) -> Self {
+        self.cfg.io_threads = n.max(1);
         self
     }
 
@@ -305,6 +343,22 @@ mod tests {
             })
             .build()
             .is_err());
+    }
+
+    #[test]
+    fn streaming_knobs_apply() {
+        let cfg = PipelineConfig::builder()
+            .prefetch_depth(8)
+            .io_threads(0)
+            .memory_budget(1 << 20)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.prefetch_depth, Some(8));
+        assert_eq!(cfg.io_threads, 1, "clamped");
+        assert_eq!(cfg.memory_budget, 1 << 20);
+        let auto = PipelineConfig::builder().build().unwrap();
+        assert_eq!(auto.prefetch_depth, None);
+        assert_eq!(auto.io_threads, 2);
     }
 
     #[test]

@@ -46,6 +46,13 @@ impl Metrics {
         *c.entry(name.to_string()).or_insert(0) += by;
     }
 
+    /// Sets a gauge-style counter to an absolute value (e.g. the resolved
+    /// prefetch depth of the last run, where accumulation is meaningless).
+    pub fn set(&self, name: &str, value: u64) {
+        let mut c = self.counters.lock().unwrap();
+        c.insert(name.to_string(), value);
+    }
+
     pub fn counter(&self, name: &str) -> u64 {
         self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
     }
@@ -110,6 +117,14 @@ mod tests {
         m.incr("blocks", 4);
         assert_eq!(m.counter("blocks"), 7);
         assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn set_overwrites_gauge() {
+        let m = Metrics::new();
+        m.set("depth", 4);
+        m.set("depth", 2);
+        assert_eq!(m.counter("depth"), 2);
     }
 
     #[test]

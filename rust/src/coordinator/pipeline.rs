@@ -33,8 +33,8 @@ use super::recovery::{
     stacked_recover,
 };
 use crate::compress::{
-    compress_source, compress_source_sparse, BlockCompressor, ReplicaMaps, RustCompressor,
-    SparseSignMatrix,
+    compress_source, BlockCompressor, PrefetchConfig, ReplicaMaps, ResumeState, RustCompressor,
+    SparseSignMatrix, StreamOptions, DEFAULT_SHARD_PARTS,
 };
 use crate::cp::{als_decompose_with, sampled_mse, AlsOptions, CpModel};
 use crate::linalg::backend::{cpu_backend, serial_backend, BackendHandle, SerialBackend};
@@ -146,6 +146,31 @@ pub struct Pipeline {
     /// Optional stage override; takes precedence over the compute
     /// backend's `block_compressor` hook.
     compressor: Option<Box<dyn BlockCompressor>>,
+}
+
+/// The streaming schedule a [`MemoryPlan`] resolves to: prefetch policy
+/// plus the deterministic shard partition.  One constructor for every
+/// streaming stage, so checkpoints always record the schedule the engine
+/// actually runs.
+fn stream_opts_from_plan(plan: &MemoryPlan, pool: &ThreadPool) -> StreamOptions {
+    StreamOptions {
+        threads: pool.size(),
+        prefetch: (plan.prefetch_depth > 0).then_some(PrefetchConfig {
+            depth: plan.prefetch_depth,
+            io_threads: plan.io_threads,
+        }),
+        shard_parts: DEFAULT_SHARD_PARTS,
+    }
+}
+
+/// Surfaces one streaming pass's counters through the metrics registry.
+fn record_stream_stats(metrics: &Metrics, stats: &crate::compress::StreamStats) {
+    metrics.record("compress_io", stats.io_seconds);
+    if stats.prefetched {
+        metrics.record("compress_io_stall", stats.io_stall_seconds);
+        metrics.record("compress_backpressure", stats.send_stall_seconds);
+    }
+    metrics.incr("blocks_streamed", stats.blocks_read);
 }
 
 impl Pipeline {
@@ -279,6 +304,46 @@ impl Pipeline {
                 &default_comp
             }
         };
+        // Streaming schedule from the plan (incremental checkpoints are
+        // only valid for one partition, so it is fixed here and recorded
+        // there).
+        let stream_opts = stream_opts_from_plan(&plan, &pool);
+        if plan.out_of_core {
+            log::info!(
+                "out-of-core plan: tensor exceeds the {}-byte budget; streaming with \
+                 prefetch depth {} × {} I/O thread(s)",
+                self.cfg.memory_budget,
+                plan.prefetch_depth,
+                plan.io_threads
+            );
+        }
+        // Fast path (§Perf): plain-f32 rust compression uses the
+        // replica-batched, unfold-free chain; custom backends (XLA)
+        // and mixed precision go through the trait.
+        let use_batched = self.compressor.is_none()
+            && compute.block_compressor().is_none()
+            && !self.cfg.mixed_precision;
+        let blocks_total = crate::tensor::BlockSpec3::new(dims, plan.block).num_blocks();
+        let shards_total =
+            ThreadPool::partition(blocks_total, stream_opts.shard_parts).len();
+        let partition = super::checkpoint::CompressionProgress {
+            block: plan.block,
+            shard_parts: stream_opts.shard_parts,
+            shards_total,
+            shards_done: 0,
+            blocks_done: 0,
+            blocks_total,
+            // The compressor's name is part of the identity: partials from
+            // one kernel (e.g. the XLA artifact) must not silently blend
+            // with a suffix computed by another.
+            path: if use_batched {
+                "batched".to_string()
+            } else {
+                format!("plain:{}", compressor.name())
+            },
+            generation: 0,
+        };
+
         // Checkpoint resume: reuse persisted proxies from a matching run.
         let fp = super::checkpoint::default_fingerprint(&self.cfg, dims, plan.replicas);
         let resumed = match &self.cfg.checkpoint_dir {
@@ -292,21 +357,125 @@ impl Pipeline {
                 p
             }
             None => {
-                // Fast path (§Perf): plain-f32 rust compression uses the
-                // replica-batched, unfold-free chain; custom backends (XLA)
-                // and mixed precision go through the trait.
-                let use_batched = self.compressor.is_none()
-                    && compute.block_compressor().is_none()
-                    && !self.cfg.mixed_precision;
-                let p = self.metrics.time("compress", || {
+                // Mid-compression resume: a killed run's folded shard
+                // prefix continues instead of restarting Stage 1 from
+                // zero; the fixed reduction order makes the resumed result
+                // bitwise identical to an uninterrupted pass.
+                let partial = match &self.cfg.checkpoint_dir {
+                    Some(dir) => super::checkpoint::load_partial(dir, &fp, &partition)?,
+                    None => None,
+                };
+                let (resume, start_gen) = match partial {
+                    Some((pr, acc)) => {
+                        log::info!(
+                            "resuming compression mid-stream: {}/{} blocks already folded",
+                            pr.blocks_done,
+                            pr.blocks_total
+                        );
+                        self.metrics
+                            .incr("checkpoint_partial_resumed_blocks", pr.blocks_done as u64);
+                        let r = ResumeState {
+                            shards_done: pr.shards_done,
+                            blocks_done: pr.blocks_done,
+                            acc,
+                        };
+                        (Some(r), pr.generation + 1)
+                    }
+                    None => (None, 0),
+                };
+                // Incremental sink: persist the folded prefix roughly
+                // every eighth of the grid (bounded checkpoint traffic).
+                // The engine invokes the sink while holding its fold lock,
+                // so only a snapshot clone happens there; the disk write
+                // runs on a dedicated background thread (one in-flight
+                // snapshot — when the writer is behind, a checkpoint is
+                // skipped rather than stalling fold advancement).
+                use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+                let ckpt_interval = (blocks_total / 8).max(1);
+                let last_saved = AtomicUsize::new(
+                    resume.as_ref().map(|r| r.blocks_done).unwrap_or(0),
+                );
+                let generation = AtomicU64::new(start_gen);
+                type Snapshot = (super::checkpoint::CompressionProgress, Vec<DenseTensor>);
+                // Set by the sink on enqueue, cleared by the writer after
+                // the save lands: lets the sink skip the (multi-MB,
+                // under-the-fold-lock) snapshot clone entirely while a
+                // write is still in flight.
+                let writer_busy = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+                let (ckpt_tx, ckpt_writer) = match &self.cfg.checkpoint_dir {
+                    Some(dir) => {
+                        let (tx, rx) = std::sync::mpsc::sync_channel::<Snapshot>(1);
+                        let dir = dir.clone();
+                        let fp_w = fp.clone();
+                        let busy = std::sync::Arc::clone(&writer_busy);
+                        let handle = std::thread::spawn(move || {
+                            while let Ok((pr, proxies)) = rx.recv() {
+                                if let Err(e) =
+                                    super::checkpoint::save_partial(&dir, &fp_w, &pr, &proxies)
+                                {
+                                    log::warn!("incremental checkpoint failed: {e:#}");
+                                }
+                                busy.store(false, Ordering::SeqCst);
+                            }
+                        });
+                        (Some(tx), Some(handle))
+                    }
+                    None => (None, None),
+                };
+                let sink = |acc: &Vec<DenseTensor>, shards_done: usize, blocks_done: usize| {
+                    if shards_done >= shards_total {
+                        return true; // completion is the final checkpoint's job
+                    }
+                    if blocks_done < last_saved.load(Ordering::SeqCst) + ckpt_interval {
+                        return true;
+                    }
+                    if let Some(tx) = &ckpt_tx {
+                        if writer_busy.load(Ordering::SeqCst) {
+                            return true; // try again at the next advance
+                        }
+                        let mut pr = partition.clone();
+                        pr.shards_done = shards_done;
+                        pr.blocks_done = blocks_done;
+                        pr.generation = generation.load(Ordering::SeqCst);
+                        // Sends happen under the engine's fold lock, so
+                        // enqueue order == generation order.  `busy` flips
+                        // on BEFORE the send (and back off on failure) so a
+                        // fast writer can never clear it first and wedge it.
+                        writer_busy.store(true, Ordering::SeqCst);
+                        if tx.try_send((pr, acc.clone())).is_ok() {
+                            generation.fetch_add(1, Ordering::SeqCst);
+                            last_saved.store(blocks_done, Ordering::SeqCst);
+                        } else {
+                            writer_busy.store(false, Ordering::SeqCst);
+                        }
+                    }
+                    true
+                };
+                let (p, stats) = self.metrics.time("compress", || {
+                    let progress: Option<crate::compress::ProgressFn<'_, Vec<DenseTensor>>> =
+                        if self.cfg.checkpoint_dir.is_some() { Some(&sink) } else { None };
                     if use_batched {
-                        crate::compress::compress_source_batched(src, &maps, plan.block, &pool)
+                        crate::compress::compress_source_batched_opts(
+                            src, &maps, plan.block, &stream_opts, resume, progress,
+                        )
                     } else {
-                        compress_source(src, &maps, plan.block, compressor, &pool)
+                        crate::compress::compress_source_opts(
+                            src, &maps, plan.block, compressor, &stream_opts, resume, progress,
+                        )
                     }
                 });
+                // Retire the background writer before the final checkpoint
+                // so no partial write races save_proxies/clear_partial.
+                drop(ckpt_tx);
+                if let Some(h) = ckpt_writer {
+                    let _ = h.join();
+                }
+                record_stream_stats(&self.metrics, &stats);
+                self.metrics
+                    .set("compress_prefetch_depth", plan.prefetch_depth as u64);
                 if let Some(dir) = &self.cfg.checkpoint_dir {
                     super::checkpoint::save_proxies(dir, &fp, &p)?;
+                    super::checkpoint::clear_partial(dir)?;
                 }
                 p
             }
@@ -404,9 +573,7 @@ impl Pipeline {
     ) -> Result<PipelineResult> {
         let sc = self.cfg.sensing.unwrap();
         let dims = src.dims();
-        let [l, m, n] = self.cfg.reduced;
-        let expand = |r: usize| ((r as f32 * sc.alpha).ceil() as usize).max(r + 1);
-        let (al, bm, gn) = (expand(l), expand(m), expand(n));
+        let [al, bm, gn] = sc.expanded(self.cfg.reduced);
         let pool = self.pool();
         let anchor = self.cfg.effective_anchor();
 
@@ -415,10 +582,16 @@ impl Pipeline {
         let v1 = SparseSignMatrix::generate(bm, dims[1], sc.nnz_per_col, self.cfg.seed ^ 0x52);
         let w1 = SparseSignMatrix::generate(gn, dims[2], sc.nnz_per_col, self.cfg.seed ^ 0x53);
 
-        // Stage-1: one streaming sparse compression into Z (αL×βM×γN).
-        let z = self.metrics.time("sensing_stage1", || {
-            compress_source_sparse(src, &u1, &v1, &w1, plan.block, &pool)
+        // Stage-1: one streaming sparse compression into Z (αL×βM×γN),
+        // on the plan's streaming schedule (prefetched when out-of-core —
+        // this pass is the one that touches the huge source).
+        let stream_opts = stream_opts_from_plan(&plan, &pool);
+        let (z, stage1_stats) = self.metrics.time("sensing_stage1", || {
+            crate::compress::compress_source_sparse_opts(
+                src, &u1, &v1, &w1, plan.block, &stream_opts,
+            )
         });
+        record_stream_stats(&self.metrics, &stage1_stats);
 
         // Stage-2: plain Alg. 2 on the in-memory Z with dense maps
         // U'_p (L×αL) — reusing the whole standard pipeline.

@@ -2,10 +2,17 @@
 //!
 //! The recovery least squares needs `P ≥ (I−2)/(L−2)` replicas for
 //! identifiability ([5] as cited by the paper), and the working set of the
-//! pipeline is `P·L·M·N` proxy floats plus one block per worker plus the
-//! stacked LSTSQ operands.  The planner computes the replica count, checks
-//! the total against a byte budget, and — if the budget is tight — shrinks
-//! the block size before giving up.
+//! pipeline is `P·L·M·N` proxy floats plus one block (and its stacked
+//! mode-1 intermediate) per worker, the prefetch queue, and the stacked
+//! LSTSQ operands.  The planner computes the replica count, checks the
+//! total against a byte budget, and — if the budget is tight — shrinks the
+//! block size, then the prefetch depth, before giving up.
+//!
+//! When the budget is smaller than the tensor's own byte size the plan is
+//! **out-of-core**: the input can never be materialized, the streaming
+//! stages must page blocks (a [`crate::tensor::FileTensorSource`] or
+//! implicit generator), and prefetching defaults on so block reads overlap
+//! the per-block TTM chains.
 
 use super::config::PipelineConfig;
 use anyhow::{bail, Result};
@@ -16,8 +23,16 @@ pub struct MemoryPlan {
     pub replicas: usize,
     pub block: [usize; 3],
     pub corner: usize,
-    /// Estimated peak bytes (proxies + per-worker blocks + recovery).
+    /// Estimated peak bytes (proxies + per-worker blocks + batched
+    /// intermediates + prefetch queue + recovery).
     pub estimated_bytes: usize,
+    /// Prefetch queue depth in blocks (0 = synchronous reads).
+    pub prefetch_depth: usize,
+    /// I/O producer threads when `prefetch_depth > 0`.
+    pub io_threads: usize,
+    /// The budget is below the tensor's byte size: the input must stay on
+    /// disk / implicit and stream through the block pipeline.
+    pub out_of_core: bool,
 }
 
 /// Plans replica count / block size / corner size for a concrete tensor.
@@ -66,6 +81,16 @@ impl MemoryPlanner {
     }
 
     /// Byte estimate for a candidate plan.
+    ///
+    /// When prefetching, raw blocks live in the queue (`prefetch_depth`),
+    /// in producer reads (`io_threads`), and in consumers' hands
+    /// (`threads`) — all budgeted.  (Blocks parked out-of-order in a
+    /// shard's pending list are bounded by the engine's fold-prefix window
+    /// but not individually modeled; see ROADMAP.)  `batched = true`
+    /// models the replica-batched f32 chain, whose mode-1 intermediate
+    /// stacks all `P` replicas (`P·L × dj·dk` per worker) — the term that
+    /// actually dominates tight out-of-core budgets.
+    #[allow(clippy::too_many_arguments)]
     pub fn estimate_bytes(
         dims: [usize; 3],
         reduced: [usize; 3],
@@ -73,18 +98,30 @@ impl MemoryPlanner {
         block: [usize; 3],
         threads: usize,
         rank: usize,
+        prefetch_depth: usize,
+        io_threads: usize,
+        batched: bool,
     ) -> usize {
         let f = std::mem::size_of::<f32>();
         let [l, m, n] = reduced;
         let proxies = replicas * l * m * n * f;
-        // Each in-flight worker holds one materialized block + its (L×dj·dk)
-        // intermediate (bounded by block mode-1 product with L).
+        // Each in-flight worker holds one materialized block + the mode-1
+        // intermediate of its TTM chain: (L × dj·dk) per replica on the
+        // trait path, (P·L × dj·dk) stacked on the batched f32 path.
         let blk = block[0] * block[1] * block[2];
-        let interm = l * block[1] * block[2];
+        let interm = if batched { replicas * l } else { l } * block[1] * block[2];
         let workers = threads.max(1) * (blk + interm) * f;
+        // Shard-local accumulator sets: the engine's fold-prefix window
+        // caps live sets at `threads.max(2)` plus the folder's own.
+        let shard_accs = (threads.max(2) + 1) * l * m * n * replicas * f;
+        let queue = if prefetch_depth > 0 {
+            (prefetch_depth + io_threads.max(1) + threads.max(1)) * blk * f
+        } else {
+            0
+        };
         // Recovery: stacked U (P·L × I) + stacked A (P·L × R) per mode.
         let recovery = replicas * l * (dims[0] + rank) * f;
-        proxies + workers + recovery
+        proxies + workers + shard_accs + queue + recovery
     }
 
     /// Resolves the plan for `dims` under `cfg`, shrinking blocks to satisfy
@@ -146,16 +183,68 @@ impl MemoryPlanner {
             .min(dims[2])
             .max(cfg.rank + 1);
 
-        let mut estimated =
-            Self::estimate_bytes(dims, reduced, replicas, block, cfg.threads, cfg.rank);
+        // Out-of-core decision: a budget below the tensor's own byte size
+        // means the input can never be materialized — the streaming stages
+        // must page blocks, and prefetching defaults on to hide the reads.
+        let tensor_bytes = dims[0]
+            .checked_mul(dims[1])
+            .and_then(|x| x.checked_mul(dims[2]))
+            .and_then(|x| x.checked_mul(std::mem::size_of::<f32>()))
+            .unwrap_or(usize::MAX);
+        let out_of_core = cfg.memory_budget > 0 && tensor_bytes > cfg.memory_budget;
+        let io_threads = cfg.io_threads.max(1);
+        let mut prefetch_depth = match cfg.prefetch_depth {
+            Some(d) => d,
+            None if out_of_core => 2 * io_threads,
+            None => 0,
+        };
+        // The replica-batched f32 chain (pipeline's default fast path)
+        // stacks all P replicas in its mode-1 intermediate; budget for it
+        // unless mixed precision forces the trait path.
+        let batched = !cfg.mixed_precision;
+
+        // Incremental checkpointing snapshots the folded proxies: up to two
+        // extra P·L·M·N sets live at once (one queued for the background
+        // writer + one mid-save).
+        let snapshot_bytes = if cfg.checkpoint_dir.is_some() {
+            2 * replicas * reduced[0] * reduced[1] * reduced[2] * std::mem::size_of::<f32>()
+        } else {
+            0
+        };
+        // Sensing stage-1 streams into shard-local copies of the expanded
+        // Z (αL×βM×γN) — up to the same window+1 live sets as the plain
+        // path's proxy accumulators, but at the expanded shape.
+        let sensing_acc_bytes = match &cfg.sensing {
+            Some(sc) => {
+                let [al, bm, gn] = sc.expanded(reduced);
+                (cfg.threads.max(2) + 1) * al * bm * gn * std::mem::size_of::<f32>()
+            }
+            None => 0,
+        };
+        let est = |block: [usize; 3], depth: usize| {
+            snapshot_bytes
+                + sensing_acc_bytes
+                + Self::estimate_bytes(
+                    dims, reduced, replicas, block, cfg.threads, cfg.rank, depth, io_threads,
+                    batched,
+                )
+        };
+        let mut estimated = est(block, prefetch_depth);
         if cfg.memory_budget > 0 {
-            // Halve block dims until we fit (blocks dominate for big d).
+            // Halve block dims until we fit (blocks and their stacked
+            // intermediates dominate for big d)…
             while estimated > cfg.memory_budget && block.iter().any(|&b| b > 8) {
                 for b in block.iter_mut() {
                     *b = (*b / 2).max(8);
                 }
-                estimated =
-                    Self::estimate_bytes(dims, reduced, replicas, block, cfg.threads, cfg.rank);
+                estimated = est(block, prefetch_depth);
+            }
+            // …then trade prefetch headroom for footprint, all the way
+            // down to synchronous streaming (depth 0 zeroes the queue and
+            // in-flight block terms) before giving up.
+            while estimated > cfg.memory_budget && prefetch_depth > 0 {
+                prefetch_depth /= 2;
+                estimated = est(block, prefetch_depth);
             }
             if estimated > cfg.memory_budget {
                 bail!(
@@ -170,6 +259,9 @@ impl MemoryPlanner {
             block,
             corner,
             estimated_bytes: estimated,
+            prefetch_depth,
+            io_threads,
+            out_of_core,
         })
     }
 }
@@ -183,6 +275,9 @@ mod tests {
         PipelineConfig::builder()
             .reduced_dims(50, 50, 50)
             .rank(5)
+            // Pinned: the estimate scales with workers, and tests must not
+            // depend on the machine's core count.
+            .threads(4)
             .build()
             .unwrap()
     }
@@ -201,6 +296,47 @@ mod tests {
         assert_eq!(plan.block, [500, 500, 500]);
         assert_eq!(plan.corner, 20);
         assert!(plan.estimated_bytes > 0);
+        assert!(!plan.out_of_core, "no budget → in-core");
+        assert_eq!(plan.prefetch_depth, 0, "prefetch off without out-of-core");
+    }
+
+    #[test]
+    fn out_of_core_plan_selected_below_tensor_bytes() {
+        let mut c = cfg();
+        // 2000³ f32 = 32 GB ≫ 1 GB budget.
+        c.memory_budget = 1 << 30;
+        let plan = MemoryPlanner::plan(&c, [2000, 2000, 2000]).unwrap();
+        assert!(plan.out_of_core);
+        assert!(plan.prefetch_depth >= 1, "out-of-core defaults prefetch on");
+        assert_eq!(plan.io_threads, 2);
+        assert!(plan.estimated_bytes <= c.memory_budget);
+    }
+
+    #[test]
+    fn explicit_prefetch_depth_honored_and_zero_disables() {
+        let mut c = cfg();
+        c.memory_budget = 1 << 30;
+        c.prefetch_depth = Some(16);
+        let plan = MemoryPlanner::plan(&c, [2000, 2000, 2000]).unwrap();
+        assert!(plan.prefetch_depth <= 16 && plan.prefetch_depth >= 1);
+        c.prefetch_depth = Some(0);
+        let plan = MemoryPlanner::plan(&c, [2000, 2000, 2000]).unwrap();
+        assert_eq!(plan.prefetch_depth, 0);
+    }
+
+    #[test]
+    fn estimate_monotone_in_depth_and_batching() {
+        let base = MemoryPlanner::estimate_bytes(
+            [1000; 3], [50; 3], 31, [100; 3], 4, 5, 0, 2, false,
+        );
+        let deeper = MemoryPlanner::estimate_bytes(
+            [1000; 3], [50; 3], 31, [100; 3], 4, 5, 8, 2, false,
+        );
+        let batched = MemoryPlanner::estimate_bytes(
+            [1000; 3], [50; 3], 31, [100; 3], 4, 5, 0, 2, true,
+        );
+        assert!(deeper > base, "queue + in-flight blocks must be budgeted");
+        assert!(batched > base, "stacked P·L intermediate must be budgeted");
     }
 
     #[test]

@@ -1,18 +1,23 @@
 //! `exatensor` — the Exascale-Tensor command-line coordinator (Layer 3).
 //!
 //! Subcommands:
-//! * `decompose` — run the compressed CP pipeline on a synthetic implicit
-//!   tensor or a tensor file.
-//! * `gene`      — the gene-expression analysis application (§V-C).
-//! * `cp-layer`  — the CP tensor-layer / CNN compression application
+//! * `decompose`  — run the compressed CP pipeline on a synthetic implicit
+//!   tensor or an `EXT1` tensor file (file inputs stream out-of-core
+//!   through [`FileTensorSource`]; see `--memory-budget-mb`).
+//! * `gen-tensor` — author an `EXT1` tensor file from the implicit
+//!   low-rank generator, streamed slab-by-slab so the file may exceed RAM.
+//! * `gene`       — the gene-expression analysis application (§V-C).
+//! * `cp-layer`   — the CP tensor-layer / CNN compression application
 //!   (Table I).
-//! * `artifacts` — list the AOT artifacts the runtime can execute.
+//! * `artifacts`  — list the AOT artifacts the runtime can execute.
 
 use exascale_tensor::apps::{run_cp_layer_experiment, run_gene_analysis, CpBackend, GeneConfig};
 use exascale_tensor::apps::nn::{train, Network, SyntheticImages, TrainConfig};
 use exascale_tensor::coordinator::{Backend, Pipeline, PipelineConfig};
 use exascale_tensor::runtime::artifacts_dir;
-use exascale_tensor::tensor::{InMemorySource, LowRankGenerator};
+use exascale_tensor::tensor::{
+    save_tensor_streamed, FileTensorSource, LowRankGenerator, TensorSource,
+};
 use exascale_tensor::util::cli::Command;
 use exascale_tensor::util::logging;
 
@@ -24,6 +29,7 @@ fn main() {
     let rest: Vec<String> = args.iter().skip(2).cloned().collect();
     let code = match sub.as_str() {
         "decompose" => cmd_decompose(&prog, &rest),
+        "gen-tensor" => cmd_gen_tensor(&prog, &rest),
         "gene" => cmd_gene(&prog, &rest),
         "cp-layer" => cmd_cp_layer(&prog, &rest),
         "artifacts" => cmd_artifacts(),
@@ -43,7 +49,7 @@ fn main() {
 fn print_help(prog: &str) {
     println!(
         "exatensor — compressed CP tensor decomposition (Exascale-Tensor)\n\n\
-         USAGE: {prog} <decompose|gene|cp-layer|artifacts> [OPTIONS]\n\n\
+         USAGE: {prog} <decompose|gen-tensor|gene|cp-layer|artifacts> [OPTIONS]\n\n\
          Run `{prog} <subcommand> --help` for options."
     );
 }
@@ -54,9 +60,13 @@ fn decompose_cmd() -> Command {
         .opt("rank", "CP rank F", Some("5"))
         .opt("reduced", "proxy side L=M=N", Some("24"))
         .opt("block", "compression block side d", Some("60"))
-        .opt("input", "EXT1 tensor file instead of synthetic", None)
+        .opt("input", "EXT1 tensor file instead of synthetic (streamed out-of-core)", None)
         .opt("backend", "seq | par | xla", Some("par"))
         .opt("threads", "worker threads (0 = auto)", Some("0"))
+        .opt("memory-budget-mb", "planner byte budget in MiB (0 = unlimited)", Some("0"))
+        .opt("prefetch-depth", "staged-block queue depth (auto | 0 = off | N)", Some("auto"))
+        .opt("io-threads", "I/O producer threads when prefetching", Some("2"))
+        .opt("checkpoint-dir", "directory for incremental + final checkpoints", None)
         .opt("seed", "random seed", Some("0"))
         .switch("mixed", "mixed-precision (split bf16) compression")
         .switch("help", "show help")
@@ -90,15 +100,29 @@ fn cmd_decompose(prog: &str, args: &[String]) -> i32 {
             "xla" => Backend::Xla,
             _ => Backend::RustParallel,
         };
-        let cfg = PipelineConfig::builder()
+        let mut builder = PipelineConfig::builder()
             .reduced_dims(reduced, reduced, reduced)
             .rank(rank)
             .block([block, block, block])
             .backend(backend)
             .threads(threads)
+            .memory_budget(m.get_usize("memory-budget-mb")? * (1 << 20))
+            .io_threads(m.get_usize("io-threads")?)
             .mixed_precision(m.get_bool("mixed"))
-            .seed(seed)
-            .build()?;
+            .seed(seed);
+        match m.get("prefetch-depth").unwrap_or("auto") {
+            "auto" => {}
+            d => {
+                builder = builder.prefetch_depth(
+                    d.parse::<usize>()
+                        .map_err(|_| anyhow::anyhow!("bad --prefetch-depth '{d}'"))?,
+                )
+            }
+        }
+        if let Some(dir) = m.get("checkpoint-dir") {
+            builder = builder.checkpoint_dir(dir);
+        }
+        let cfg = builder.build()?;
         let mut pipe = Pipeline::new(cfg);
         if backend == Backend::Xla {
             // One constructor wires the whole XLA arm (fused compression +
@@ -108,8 +132,14 @@ fn cmd_decompose(prog: &str, args: &[String]) -> i32 {
         }
 
         let result = if let Some(path) = m.get("input") {
-            let t = exascale_tensor::tensor::io::load_tensor(path)?;
-            let src = InMemorySource::new(t);
+            // File inputs stream block-by-block: only the planner's working
+            // set (not the tensor) must fit in memory.
+            let src = FileTensorSource::open(path)?;
+            println!(
+                "file tensor {:?} ({} MiB on disk, streamed out-of-core)",
+                src.dims(),
+                src.payload_bytes() >> 20
+            );
             pipe.run(&src)?
         } else {
             let gen = LowRankGenerator::new(size, size, size, rank, seed);
@@ -120,13 +150,74 @@ fn cmd_decompose(prog: &str, args: &[String]) -> i32 {
             pipe.run(&gen)?
         };
         println!(
-            "plan: P={} block={:?} est bytes={}",
-            result.plan.replicas, result.plan.block, result.plan.estimated_bytes
+            "plan: P={} block={:?} est bytes={} out_of_core={} prefetch_depth={} io_threads={}",
+            result.plan.replicas,
+            result.plan.block,
+            result.plan.estimated_bytes,
+            result.plan.out_of_core,
+            result.plan.prefetch_depth,
+            result.plan.io_threads
         );
         println!("sampled MSE      : {:.3e}", result.diagnostics.sampled_mse);
         println!("sampled rel error: {:.3e}", result.diagnostics.rel_error);
         println!("dropped replicas : {}", result.diagnostics.dropped_replicas);
         println!("\nstage timings:\n{}", pipe.metrics.report());
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_gen_tensor(prog: &str, args: &[String]) -> i32 {
+    let cmd = Command::new(
+        "gen-tensor",
+        "author an EXT1 tensor file from the implicit low-rank generator (streamed)",
+    )
+    .opt("size", "tensor side I=J=K", Some("200"))
+    .opt("rank", "planted CP rank", Some("5"))
+    .opt("noise", "additive N(0,σ²) noise sigma", Some("0"))
+    .opt("slab", "frontal slices per write slab", Some("8"))
+    .opt("out", "output path", Some("tensor.ext1"))
+    .opt("seed", "random seed", Some("0"))
+    .switch("help", "show help");
+    let m = match cmd.parse(args) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}\n{}", cmd.usage(prog));
+            return 2;
+        }
+    };
+    if m.get_bool("help") {
+        println!("{}", cmd.usage(prog));
+        return 0;
+    }
+    let run = || -> anyhow::Result<()> {
+        let size = m.get_usize("size")?;
+        let rank = m.get_usize("rank")?;
+        let out = m.get("out").unwrap_or("tensor.ext1");
+        let sigma: f32 = m
+            .get("noise")
+            .unwrap_or("0")
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad --noise"))?;
+        let mut gen = LowRankGenerator::new(size, size, size, rank, m.get_u64("seed")?);
+        if sigma > 0.0 {
+            gen = gen.with_noise(sigma);
+        }
+        let t0 = std::time::Instant::now();
+        save_tensor_streamed(&gen, out, m.get_usize("slab")?)?;
+        let bytes = size * size * size * 4;
+        let secs = t0.elapsed().as_secs_f64();
+        println!(
+            "wrote {out}: {size}³ rank-{rank} tensor, {} MiB in {secs:.2}s ({:.1} MiB/s)",
+            bytes >> 20,
+            (bytes >> 20) as f64 / secs.max(1e-9)
+        );
         Ok(())
     };
     match run() {

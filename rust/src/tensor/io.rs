@@ -1,15 +1,21 @@
-//! Binary tensor/matrix I/O.
+//! Binary tensor/matrix I/O and the file-backed block source.
 //!
 //! Simple self-describing little-endian format:
 //! magic `EXT1`, u32 ndim, u64 dims…, f32 data (column-major).  Used by the
-//! CLI to load real inputs and by the apps to persist decompositions.
+//! CLI to load real inputs, by the apps to persist decompositions, and —
+//! since the out-of-core PR — as the on-disk layout behind
+//! [`FileTensorSource`] (seek-based block reads, never materializing the
+//! whole tensor) and [`StreamedTensorWriter`] (authoring larger-than-RAM
+//! files slab by slab).
 
+use super::block::BlockRange;
 use super::dense::DenseTensor;
+use super::generator::TensorSource;
 use crate::linalg::Matrix;
 use anyhow::{bail, Context, Result};
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 const MAGIC: &[u8; 4] = b"EXT1";
 
@@ -20,6 +26,30 @@ fn write_header(w: &mut impl Write, dims: &[u64]) -> Result<()> {
         w.write_all(&d.to_le_bytes())?;
     }
     Ok(())
+}
+
+/// Header byte size for an `ndim`-way file: magic + ndim + dims.
+fn header_len(ndim: usize) -> u64 {
+    (4 + 4 + 8 * ndim) as u64
+}
+
+/// Validates that the dims product fits `usize` (and the address space when
+/// multiplied by 4 bytes/element) — a corrupt header must fail loudly here,
+/// not by attempting a multi-exabyte allocation downstream.
+fn checked_elems(dims: &[u64]) -> Result<usize> {
+    let mut n: usize = 1;
+    for &d in dims {
+        let d: usize = d
+            .try_into()
+            .ok()
+            .with_context(|| format!("dim {d} exceeds usize"))?;
+        n = n
+            .checked_mul(d)
+            .with_context(|| format!("dims {dims:?} overflow usize"))?;
+    }
+    n.checked_mul(4)
+        .with_context(|| format!("dims {dims:?}: byte size overflows usize"))?;
+    Ok(n)
 }
 
 fn read_header(r: &mut impl Read) -> Result<Vec<u64>> {
@@ -40,26 +70,70 @@ fn read_header(r: &mut impl Read) -> Result<Vec<u64>> {
         r.read_exact(&mut b)?;
         dims.push(u64::from_le_bytes(b));
     }
+    checked_elems(&dims)?;
     Ok(dims)
 }
 
-fn write_f32s(w: &mut impl Write, data: &[f32]) -> Result<()> {
-    // Bulk byte conversion; f32 is IEEE-754 LE on all supported targets.
-    let mut buf = Vec::with_capacity(data.len() * 4);
-    for &x in data {
-        buf.extend_from_slice(&x.to_le_bytes());
+/// Bulk byte view of an `f32` slice.  Every bit pattern is a valid `f32`
+/// and the payload is little-endian on all supported targets, so reads and
+/// writes are single `memcpy`-sized calls instead of per-element loops.
+fn as_bytes(data: &[f32]) -> &[u8] {
+    // SAFETY: f32 has no invalid bit patterns, align(u8) ≤ align(f32), and
+    // the length is exactly the element count times the element size.
+    unsafe { std::slice::from_raw_parts(data.as_ptr().cast::<u8>(), data.len() * 4) }
+}
+
+fn as_bytes_mut(data: &mut [f32]) -> &mut [u8] {
+    // SAFETY: see `as_bytes`; exclusive borrow guarantees no aliasing.
+    unsafe { std::slice::from_raw_parts_mut(data.as_mut_ptr().cast::<u8>(), data.len() * 4) }
+}
+
+/// Fixes endianness in place after a raw little-endian read (no-op on
+/// little-endian targets, i.e. everywhere we run).
+fn fix_endianness(data: &mut [f32]) {
+    if cfg!(target_endian = "big") {
+        for x in data.iter_mut() {
+            *x = f32::from_bits(x.to_bits().swap_bytes());
+        }
     }
-    w.write_all(&buf)?;
+}
+
+fn write_f32s(w: &mut impl Write, data: &[f32]) -> Result<()> {
+    if cfg!(target_endian = "big") {
+        // Slow path for exotic targets: byte-swap through a bounce buffer.
+        let mut buf = Vec::with_capacity(data.len() * 4);
+        for &x in data {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        w.write_all(&buf)?;
+    } else {
+        w.write_all(as_bytes(data))?;
+    }
+    Ok(())
+}
+
+fn read_f32s_into(r: &mut impl Read, out: &mut [f32]) -> Result<()> {
+    r.read_exact(as_bytes_mut(out)).context("reading f32 payload")?;
+    fix_endianness(out);
     Ok(())
 }
 
 fn read_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
-    let mut buf = vec![0u8; n * 4];
-    r.read_exact(&mut buf).context("reading f32 payload")?;
-    Ok(buf
-        .chunks_exact(4)
-        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-        .collect())
+    let mut out = vec![0.0f32; n];
+    read_f32s_into(r, &mut out)?;
+    Ok(out)
+}
+
+/// Checks the file length against the header: `n` payload elements after an
+/// `ndim`-way header.  Catches truncated files and headers whose dims claim
+/// more data than the file holds before any allocation is sized from them.
+fn check_file_len(f: &File, ndim: usize, n: usize, what: &str) -> Result<()> {
+    let actual = f.metadata().context("stat")?.len();
+    let expected = header_len(ndim) + n as u64 * 4;
+    if actual != expected {
+        bail!("{what}: file is {actual} bytes, header implies {expected}");
+    }
+    Ok(())
 }
 
 /// Saves a dense tensor.
@@ -73,7 +147,8 @@ pub fn save_tensor(t: &DenseTensor, path: impl AsRef<Path>) -> Result<()> {
     Ok(())
 }
 
-/// Loads a dense tensor.
+/// Loads a dense tensor (fully materialized — use [`FileTensorSource`] for
+/// inputs that must stay out of core).
 pub fn load_tensor(path: impl AsRef<Path>) -> Result<DenseTensor> {
     let f = File::open(path.as_ref())
         .with_context(|| format!("opening {}", path.as_ref().display()))?;
@@ -82,7 +157,8 @@ pub fn load_tensor(path: impl AsRef<Path>) -> Result<DenseTensor> {
     if dims.len() != 3 {
         bail!("expected a 3-way tensor, found {} dims", dims.len());
     }
-    let n = (dims[0] * dims[1] * dims[2]) as usize;
+    let n = checked_elems(&dims)?;
+    check_file_len(r.get_ref(), 3, n, "load_tensor")?;
     let data = read_f32s(&mut r, n)?;
     Ok(DenseTensor::from_vec(
         [dims[0] as usize, dims[1] as usize, dims[2] as usize],
@@ -107,14 +183,236 @@ pub fn load_matrix(path: impl AsRef<Path>) -> Result<Matrix> {
     if dims.len() != 2 {
         bail!("expected a matrix, found {} dims", dims.len());
     }
-    let n = (dims[0] * dims[1]) as usize;
+    let n = checked_elems(&dims)?;
+    check_file_len(r.get_ref(), 2, n, "load_matrix")?;
     let data = read_f32s(&mut r, n)?;
     Ok(Matrix::from_vec(dims[0] as usize, dims[1] as usize, data))
+}
+
+/// A [`TensorSource`] backed by an `EXT1` file on disk: blocks are read with
+/// positional (`pread`-style) strided reads, so the whole tensor never
+/// resides in memory and many worker/producer threads can read concurrently
+/// from one shared handle.
+///
+/// Reads are coalesced per the column-major layout: a block spanning the
+/// full mode-1 extent reads one contiguous run per `(j-range, k)` plane,
+/// and a block spanning modes 1 *and* 2 reads one run per frontal slice —
+/// the `BlockSpec3` iteration order (mode-1 fastest) keeps those runs as
+/// sequential on disk as the grid allows.  Bytes land directly in the
+/// output tensor's buffer (no intermediate staging copy).
+pub struct FileTensorSource {
+    file: File,
+    dims: [usize; 3],
+    data_offset: u64,
+    path: PathBuf,
+    /// Non-unix targets have no positional read on a shared handle; they
+    /// serialize seek+read pairs through this lock instead.
+    #[cfg(not(unix))]
+    seek_lock: std::sync::Mutex<()>,
+}
+
+impl FileTensorSource {
+    /// Opens an `EXT1` 3-way tensor file for out-of-core block reads.
+    pub fn open(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        let file =
+            File::open(&path).with_context(|| format!("opening {}", path.display()))?;
+        let mut r = BufReader::new(&file);
+        let dims = read_header(&mut r)?;
+        if dims.len() != 3 {
+            bail!(
+                "{}: expected a 3-way tensor, found {} dims",
+                path.display(),
+                dims.len()
+            );
+        }
+        let n = checked_elems(&dims)?;
+        check_file_len(&file, 3, n, "FileTensorSource")?;
+        Ok(Self {
+            file,
+            dims: [dims[0] as usize, dims[1] as usize, dims[2] as usize],
+            data_offset: header_len(3),
+            path,
+            #[cfg(not(unix))]
+            seek_lock: std::sync::Mutex::new(()),
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Total payload bytes on disk (the figure the memory planner compares
+    /// against its budget to pick an out-of-core plan).
+    pub fn payload_bytes(&self) -> usize {
+        self.dims[0] * self.dims[1] * self.dims[2] * 4
+    }
+
+    /// Positional read of `out.len()` f32s starting at element `elem_off`.
+    fn read_at(&self, elem_off: u64, out: &mut [f32]) -> Result<()> {
+        let byte_off = self.data_offset + elem_off * 4;
+        #[cfg(unix)]
+        {
+            use std::os::unix::fs::FileExt;
+            self.file
+                .read_exact_at(as_bytes_mut(out), byte_off)
+                .with_context(|| {
+                    format!("pread {} bytes at {byte_off}", out.len() * 4)
+                })?;
+        }
+        #[cfg(not(unix))]
+        {
+            use std::io::{Seek, SeekFrom};
+            let _g = self.seek_lock.lock().unwrap();
+            let mut f = &self.file;
+            f.seek(SeekFrom::Start(byte_off))?;
+            f.read_exact(as_bytes_mut(out))
+                .with_context(|| format!("read {} bytes at {byte_off}", out.len() * 4))?;
+        }
+        fix_endianness(out);
+        Ok(())
+    }
+}
+
+impl TensorSource for FileTensorSource {
+    fn dims(&self) -> [usize; 3] {
+        self.dims
+    }
+
+    fn block(&self, r: &BlockRange) -> DenseTensor {
+        let [i_dim, j_dim, k_dim] = self.dims;
+        assert!(
+            r.i1 <= i_dim && r.j1 <= j_dim && r.k1 <= k_dim,
+            "block {r:?} out of bounds for dims {:?}",
+            self.dims
+        );
+        let [di, dj, dk] = r.shape();
+        let mut out = vec![0.0f32; di * dj * dk];
+        let plane = (i_dim * j_dim) as u64;
+        let res: Result<()> = (|| {
+            if di == i_dim && dj == j_dim {
+                // Whole frontal slices: one contiguous run.
+                let off = r.k0 as u64 * plane;
+                self.read_at(off, &mut out)?;
+            } else if di == i_dim {
+                // Full mode-1 fibers: one run of di·dj per frontal slice.
+                for (kk, k) in (r.k0..r.k1).enumerate() {
+                    let off = k as u64 * plane + (r.j0 * i_dim) as u64;
+                    let dst = kk * di * dj;
+                    self.read_at(off, &mut out[dst..dst + di * dj])?;
+                }
+            } else {
+                // General case: one run of di per (j, k) fiber.
+                for (kk, k) in (r.k0..r.k1).enumerate() {
+                    for (jj, j) in (r.j0..r.j1).enumerate() {
+                        let off = k as u64 * plane + (j * i_dim + r.i0) as u64;
+                        let dst = (kk * dj + jj) * di;
+                        self.read_at(off, &mut out[dst..dst + di])?;
+                    }
+                }
+            }
+            Ok(())
+        })();
+        if let Err(e) = res {
+            // TensorSource::block is infallible by contract; a read error on
+            // an already-validated file is unrecoverable mid-stream.
+            panic!("FileTensorSource: reading {}: {e:#}", self.path.display());
+        }
+        DenseTensor::from_vec([di, dj, dk], out)
+    }
+}
+
+/// Sequential writer for `EXT1` tensor files too large to materialize:
+/// accepts the column-major payload in slabs and verifies the element count
+/// on [`StreamedTensorWriter::finish`].
+pub struct StreamedTensorWriter {
+    w: BufWriter<File>,
+    total: usize,
+    written: usize,
+    path: PathBuf,
+}
+
+impl StreamedTensorWriter {
+    /// Creates the file and writes the header; payload slabs follow.
+    pub fn create(path: impl AsRef<Path>, dims: [usize; 3]) -> Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        let f = File::create(&path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        let mut w = BufWriter::new(f);
+        write_header(&mut w, &[dims[0] as u64, dims[1] as u64, dims[2] as u64])?;
+        Ok(Self {
+            w,
+            total: dims[0] * dims[1] * dims[2],
+            written: 0,
+            path,
+        })
+    }
+
+    /// Appends the next slab of column-major payload.
+    pub fn write_slab(&mut self, data: &[f32]) -> Result<()> {
+        if self.written + data.len() > self.total {
+            bail!(
+                "{}: slab overruns payload ({} + {} > {})",
+                self.path.display(),
+                self.written,
+                data.len(),
+                self.total
+            );
+        }
+        write_f32s(&mut self.w, data)?;
+        self.written += data.len();
+        Ok(())
+    }
+
+    /// Flushes and validates that exactly the declared payload was written.
+    pub fn finish(mut self) -> Result<()> {
+        if self.written != self.total {
+            bail!(
+                "{}: wrote {} of {} elements",
+                self.path.display(),
+                self.written,
+                self.total
+            );
+        }
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+/// Streams `src` to an `EXT1` file in slabs of `slab_planes` frontal slices
+/// (each slab is contiguous in the column-major layout), so implicit
+/// generators can author files far larger than resident memory.
+pub fn save_tensor_streamed(
+    src: &dyn TensorSource,
+    path: impl AsRef<Path>,
+    slab_planes: usize,
+) -> Result<()> {
+    let [i, j, k] = src.dims();
+    let planes = slab_planes.max(1);
+    let mut w = StreamedTensorWriter::create(path, [i, j, k])?;
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + planes).min(k);
+        let slab = src.block(&BlockRange {
+            i0: 0,
+            i1: i,
+            j0: 0,
+            j1: j,
+            k0,
+            k1,
+            index: 0,
+        });
+        w.write_slab(slab.data())?;
+        k0 = k1;
+    }
+    w.finish()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::block::BlockSpec3;
+    use crate::tensor::generator::{InMemorySource, LowRankGenerator};
     use crate::util::rng::Xoshiro256;
 
     fn tmp(name: &str) -> std::path::PathBuf {
@@ -166,5 +464,116 @@ mod tests {
     #[test]
     fn missing_file_rejected() {
         assert!(load_tensor("/nonexistent/exatensor.bin").is_err());
+    }
+
+    #[test]
+    fn huge_dims_header_rejected_without_allocating() {
+        // Header claims ~u64::MAX elements; must bail on validation, not
+        // attempt the allocation.
+        let path = tmp("hugedims");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&3u32.to_le_bytes());
+        for _ in 0..3 {
+            bytes.extend_from_slice(&(u64::MAX / 2).to_le_bytes());
+        }
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(load_tensor(&path).is_err());
+        assert!(FileTensorSource::open(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn truncated_payload_rejected() {
+        let mut rng = Xoshiro256::seed_from_u64(73);
+        let t = DenseTensor::random_normal([4, 4, 4], &mut rng);
+        let path = tmp("trunc");
+        save_tensor(&t, &path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 5]).unwrap();
+        assert!(load_tensor(&path).is_err());
+        assert!(FileTensorSource::open(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn file_source_matches_in_memory_all_block_sizes() {
+        let mut rng = Xoshiro256::seed_from_u64(74);
+        let t = DenseTensor::random_normal([13, 9, 7], &mut rng);
+        let path = tmp("filesrc");
+        save_tensor(&t, &path).unwrap();
+        let fsrc = FileTensorSource::open(&path).unwrap();
+        assert_eq!(fsrc.dims(), [13, 9, 7]);
+        assert_eq!(fsrc.payload_bytes(), 13 * 9 * 7 * 4);
+        let msrc = InMemorySource::new(t);
+        for block in [[13, 9, 7], [13, 9, 3], [13, 4, 2], [5, 3, 2], [1, 1, 1]] {
+            let spec = BlockSpec3::new([13, 9, 7], block);
+            for blk in spec.iter() {
+                let a = fsrc.block(&blk);
+                let b = msrc.block(&blk);
+                assert_eq!(a, b, "block {blk:?} at block dims {block:?}");
+            }
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn file_source_concurrent_reads_agree() {
+        let mut rng = Xoshiro256::seed_from_u64(75);
+        let t = DenseTensor::random_normal([16, 16, 16], &mut rng);
+        let path = tmp("filesrc_par");
+        save_tensor(&t, &path).unwrap();
+        let fsrc = FileTensorSource::open(&path).unwrap();
+        let spec = BlockSpec3::new([16, 16, 16], [5, 6, 7]);
+        let blocks: Vec<BlockRange> = spec.iter().collect();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let fsrc = &fsrc;
+                let blocks = &blocks;
+                let expected = &t;
+                s.spawn(move || {
+                    for blk in blocks {
+                        let a = fsrc.block(blk);
+                        let b =
+                            expected.subtensor(blk.i0, blk.i1, blk.j0, blk.j1, blk.k0, blk.k1);
+                        assert_eq!(a, b);
+                    }
+                });
+            }
+        });
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn streamed_writer_round_trips_generator() {
+        let gen = LowRankGenerator::new(10, 8, 12, 2, 76);
+        let path = tmp("streamed");
+        save_tensor_streamed(&gen, &path, 5).unwrap();
+        let loaded = load_tensor(&path).unwrap();
+        let full = gen.block(&BlockRange {
+            i0: 0,
+            i1: 10,
+            j0: 0,
+            j1: 8,
+            k0: 0,
+            k1: 12,
+            index: 0,
+        });
+        assert_eq!(loaded, full);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn streamed_writer_validates_counts() {
+        let path = tmp("streamed_bad");
+        let mut w = StreamedTensorWriter::create(&path, [2, 2, 2]).unwrap();
+        w.write_slab(&[0.0; 4]).unwrap();
+        assert!(w.write_slab(&[0.0; 5]).is_err(), "overrun rejected");
+        std::fs::remove_file(&path).ok();
+
+        let mut w = StreamedTensorWriter::create(&path, [2, 2, 2]).unwrap();
+        w.write_slab(&[0.0; 4]).unwrap();
+        assert!(w.finish().is_err(), "short payload rejected");
+        std::fs::remove_file(&path).ok();
     }
 }

@@ -16,4 +16,5 @@ pub mod unfold;
 pub use block::{BlockIter, BlockRange, BlockSpec3};
 pub use dense::DenseTensor;
 pub use generator::{InMemorySource, LowRankGenerator, SparseLowRankGenerator, TensorSource};
+pub use io::{save_tensor_streamed, FileTensorSource, StreamedTensorWriter};
 pub use sparse::SparseTensor;

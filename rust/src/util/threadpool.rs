@@ -117,6 +117,28 @@ impl ThreadPool {
         });
     }
 
+    /// Runs `n.max(1)` scoped worker threads, each executing `f(worker)`,
+    /// and returns when all finish (panics propagate via `thread::scope`).
+    ///
+    /// Unlike [`ThreadPool::scope`], the thread count is an explicit
+    /// argument rather than the pool size: the streaming engine
+    /// (`compress::engine`) sizes its I/O-producer and compute-consumer
+    /// groups independently, and routing both groups through one queue-fed
+    /// pool could deadlock (producers occupying every pool thread would
+    /// starve the consumers they block on).
+    pub fn run_workers<F>(n: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        let n = n.max(1);
+        thread::scope(|s| {
+            for w in 0..n {
+                let f = &f;
+                s.spawn(move || f(w));
+            }
+        });
+    }
+
     /// Balanced contiguous partition of `0..n` into at most `parts`
     /// non-empty ranges (earlier ranges at most one index longer) — the
     /// shared chunking primitive behind [`ThreadPool::for_each_chunk`] and
@@ -268,6 +290,22 @@ mod tests {
             max_calls.fetch_add(1, Ordering::SeqCst);
         });
         assert!(max_calls.load(Ordering::SeqCst) <= 3);
+    }
+
+    #[test]
+    fn run_workers_covers_all_indices() {
+        let hits: Vec<AtomicUsize> = (0..6).map(|_| AtomicUsize::new(0)).collect();
+        ThreadPool::run_workers(6, |w| {
+            hits[w].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+        // Zero clamps to one worker.
+        let ran = AtomicUsize::new(0);
+        ThreadPool::run_workers(0, |w| {
+            assert_eq!(w, 0);
+            ran.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(ran.load(Ordering::SeqCst), 1);
     }
 
     #[test]

@@ -1,0 +1,283 @@
+//! Integration tests for the out-of-core streaming engine: file-backed
+//! sources vs in-memory, budgeted (out-of-core) pipeline runs, and
+//! kill/resume invariance of incremental compression checkpoints.
+
+use exascale_tensor::compress::{
+    compress_source_batched_opts, compress_source_opts, PrefetchConfig, ReplicaMaps, ResumeState,
+    RustCompressor, StreamOptions,
+};
+use exascale_tensor::coordinator::checkpoint::{self, CompressionProgress};
+use exascale_tensor::coordinator::{MemoryPlanner, Pipeline, PipelineConfig};
+use exascale_tensor::cp::CpModel;
+use exascale_tensor::mixed::MixedPrecision;
+use exascale_tensor::tensor::{
+    save_tensor_streamed, BlockSpec3, DenseTensor, FileTensorSource, InMemorySource,
+    LowRankGenerator,
+};
+use exascale_tensor::util::threadpool::ThreadPool;
+
+fn tmppath(name: &str) -> std::path::PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("exatensor_oocore_{name}_{}", std::process::id()));
+    p
+}
+
+fn factors_rel_error(a: &CpModel, b: &CpModel) -> f64 {
+    a.a.rel_error(&b.a).max(a.b.rel_error(&b.b)).max(a.c.rel_error(&b.c))
+}
+
+#[test]
+fn file_source_pipeline_matches_in_memory() {
+    let gen = LowRankGenerator::new(48, 48, 48, 3, 900);
+    let path = tmppath("file_vs_mem.ext1");
+    save_tensor_streamed(&gen, &path, 6).unwrap();
+    let file_src = FileTensorSource::open(&path).unwrap();
+    let tensor = exascale_tensor::tensor::io::load_tensor(&path).unwrap();
+    let mem_src = InMemorySource::new(tensor);
+
+    let cfg = || {
+        PipelineConfig::builder()
+            .reduced_dims(12, 12, 12)
+            .rank(3)
+            .block([16, 16, 16])
+            .als(150, 1e-11)
+            .threads(3)
+            .seed(901)
+            .build()
+            .unwrap()
+    };
+    let from_file = Pipeline::new(cfg()).run(&file_src).unwrap();
+    let from_mem = Pipeline::new(cfg()).run(&mem_src).unwrap();
+    // Identical block data + deterministic engine ⇒ identical factors.
+    let err = factors_rel_error(&from_file.model, &from_mem.model);
+    assert!(err < 1e-6, "file vs in-memory factor err {err}");
+    assert!(
+        from_file.diagnostics.rel_error < 2e-2,
+        "rel {}",
+        from_file.diagnostics.rel_error
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn out_of_core_budgeted_run_succeeds_under_budget() {
+    let gen = LowRankGenerator::new(64, 64, 64, 2, 902);
+    let path = tmppath("oocore_budget.ext1");
+    save_tensor_streamed(&gen, &path, 8).unwrap();
+    let src = FileTensorSource::open(&path).unwrap();
+    let tensor_bytes = src.payload_bytes();
+    let budget = tensor_bytes * 7 / 10; // strictly below the tensor itself
+
+    let cfg = PipelineConfig::builder()
+        .reduced_dims(12, 12, 12)
+        .rank(2)
+        .als(150, 1e-11)
+        .threads(2)
+        .memory_budget(budget)
+        .seed(903)
+        .build()
+        .unwrap();
+    let mut pipe = Pipeline::new(cfg);
+    let res = pipe.run(&src).unwrap();
+    assert!(res.plan.out_of_core, "budget {budget} < tensor {tensor_bytes} must go out-of-core");
+    assert!(res.plan.prefetch_depth >= 1, "out-of-core defaults prefetch on");
+    assert!(res.plan.estimated_bytes <= budget);
+    assert!(
+        res.diagnostics.rel_error < 2e-2,
+        "rel {}",
+        res.diagnostics.rel_error
+    );
+    assert!(pipe.metrics.counter("blocks_streamed") > 0);
+    assert!(pipe.metrics.stage("compress_io").is_some(), "I/O time must be surfaced");
+    std::fs::remove_file(&path).ok();
+}
+
+/// Kill/resume at the streaming-engine + checkpoint layer: abort after the
+/// first incremental save, resume from the loaded partial, and require the
+/// final proxies to be bitwise identical to an uninterrupted pass.
+#[test]
+fn compress_kill_resume_is_bitwise_invariant() {
+    let gen = LowRankGenerator::new(24, 24, 24, 2, 904);
+    let maps = ReplicaMaps::generate([24, 24, 24], [6, 6, 6], 3, 2, 905);
+    let comp = RustCompressor { precision: MixedPrecision::Full };
+    let block = [5, 5, 5];
+    let opts = StreamOptions { threads: 2, ..Default::default() };
+    let blocks_total = BlockSpec3::new([24, 24, 24], block).num_blocks();
+    let shards_total = ThreadPool::partition(blocks_total, opts.shard_parts).len();
+
+    let (reference, _) =
+        compress_source_opts(&gen, &maps, block, &comp, &opts, None, None);
+
+    let dir = tmppath("kill_resume_ckpt");
+    let fp = checkpoint::Fingerprint {
+        dims: [24, 24, 24],
+        reduced: [6, 6, 6],
+        rank: 2,
+        replicas: 3,
+        anchor_rows: 2,
+        seed: 905,
+        mixed_precision: false,
+    };
+    let partition = CompressionProgress {
+        block,
+        shard_parts: opts.shard_parts,
+        shards_total,
+        shards_done: 0,
+        blocks_done: 0,
+        blocks_total,
+        path: "plain".to_string(),
+        generation: 0,
+    };
+
+    // "Kill": persist the first folded prefix, then stop the pass.
+    let saved = std::sync::atomic::AtomicBool::new(false);
+    let sink = |acc: &Vec<DenseTensor>, shards_done: usize, blocks_done: usize| {
+        if saved.swap(true, std::sync::atomic::Ordering::SeqCst) {
+            return false;
+        }
+        let mut pr = partition.clone();
+        pr.shards_done = shards_done;
+        pr.blocks_done = blocks_done;
+        checkpoint::save_partial(&dir, &fp, &pr, acc).unwrap();
+        false
+    };
+    let (_, stats) =
+        compress_source_opts(&gen, &maps, block, &comp, &opts, None, Some(&sink));
+    assert!(stats.aborted);
+
+    // Resume from disk; the folded prefix must not be re-read.
+    let (pr, acc) = checkpoint::load_partial(&dir, &fp, &partition).unwrap().unwrap();
+    assert!(pr.shards_done > 0 && pr.shards_done < shards_total);
+    let resume = ResumeState {
+        shards_done: pr.shards_done,
+        blocks_done: pr.blocks_done,
+        acc,
+    };
+    let (resumed, stats2) =
+        compress_source_opts(&gen, &maps, block, &comp, &opts, Some(resume), None);
+    assert!(!stats2.aborted);
+    assert_eq!(
+        stats2.blocks_read as usize,
+        blocks_total - pr.blocks_done,
+        "resume must skip the folded prefix"
+    );
+    assert_eq!(resumed, reference, "kill/resume must be bitwise invisible");
+    checkpoint::clear(&dir).unwrap();
+}
+
+/// Full-pipeline resume: a partial checkpoint authored mid-compression is
+/// picked up by `Pipeline::run`, and the resumed run's factors match a
+/// clean run exactly.
+#[test]
+fn pipeline_resumes_partial_checkpoint() {
+    let gen = LowRankGenerator::new(32, 32, 32, 2, 906);
+    let dims = [32, 32, 32];
+    let cfg = |ckpt: Option<std::path::PathBuf>| {
+        let mut b = PipelineConfig::builder()
+            .reduced_dims(8, 8, 8)
+            .rank(2)
+            .anchor_rows(4)
+            .block([8, 8, 8])
+            .als(150, 1e-11)
+            .threads(2)
+            .seed(907);
+        if let Some(d) = ckpt {
+            b = b.checkpoint_dir(d);
+        }
+        b.build().unwrap()
+    };
+    let clean = Pipeline::new(cfg(None)).run(&gen).unwrap();
+
+    // Author a partial checkpoint exactly as the pipeline would: same
+    // plan, maps, fingerprint, and (batched) path.
+    let dir = tmppath("pipeline_partial");
+    let base = cfg(None);
+    let plan = MemoryPlanner::plan(&base, dims).unwrap();
+    let maps = ReplicaMaps::generate(
+        dims,
+        base.reduced,
+        plan.replicas,
+        base.effective_anchor(),
+        base.seed,
+    );
+    let fp = checkpoint::default_fingerprint(&base, dims, plan.replicas);
+    let opts = StreamOptions { threads: 2, ..Default::default() };
+    let blocks_total = BlockSpec3::new(dims, plan.block).num_blocks();
+    let shards_total = ThreadPool::partition(blocks_total, opts.shard_parts).len();
+    let partition = CompressionProgress {
+        block: plan.block,
+        shard_parts: opts.shard_parts,
+        shards_total,
+        shards_done: 0,
+        blocks_done: 0,
+        blocks_total,
+        path: "batched".to_string(),
+        generation: 0,
+    };
+    let saved = std::sync::atomic::AtomicBool::new(false);
+    let sink = |acc: &Vec<DenseTensor>, shards_done: usize, blocks_done: usize| {
+        if saved.swap(true, std::sync::atomic::Ordering::SeqCst) {
+            return false;
+        }
+        let mut pr = partition.clone();
+        pr.shards_done = shards_done;
+        pr.blocks_done = blocks_done;
+        checkpoint::save_partial(&dir, &fp, &pr, acc).unwrap();
+        false
+    };
+    let (_, stats) =
+        compress_source_batched_opts(&gen, &maps, plan.block, &opts, None, Some(&sink));
+    assert!(stats.aborted, "partial checkpoint must capture an incomplete pass");
+
+    let mut pipe = Pipeline::new(cfg(Some(dir.clone())));
+    let resumed = pipe.run(&gen).unwrap();
+    assert!(
+        pipe.metrics.counter("checkpoint_partial_resumed_blocks") > 0,
+        "pipeline must resume from the partial checkpoint"
+    );
+    let err = factors_rel_error(&clean.model, &resumed.model);
+    assert!(err < 1e-6, "resumed vs clean factor err {err}");
+    checkpoint::clear(&dir).unwrap();
+}
+
+/// The same engine schedule invariance, exercised on a *file-backed*
+/// source: prefetched out-of-core reads must be bitwise identical to
+/// synchronous in-memory streaming.
+#[test]
+fn file_backed_prefetch_bitwise_matches_sync() {
+    let gen = LowRankGenerator::new(20, 20, 20, 2, 908);
+    let path = tmppath("prefetch_file.ext1");
+    save_tensor_streamed(&gen, &path, 4).unwrap();
+    let fsrc = FileTensorSource::open(&path).unwrap();
+    let msrc = InMemorySource::new(exascale_tensor::tensor::io::load_tensor(&path).unwrap());
+
+    let maps = ReplicaMaps::generate([20, 20, 20], [6, 6, 6], 2, 2, 909);
+    let comp = RustCompressor { precision: MixedPrecision::Full };
+    let sync_mem = compress_source_opts(
+        &msrc,
+        &maps,
+        [7, 6, 5],
+        &comp,
+        &StreamOptions { threads: 2, ..Default::default() },
+        None,
+        None,
+    )
+    .0;
+    let (pref_file, stats) = compress_source_opts(
+        &fsrc,
+        &maps,
+        [7, 6, 5],
+        &comp,
+        &StreamOptions {
+            threads: 4,
+            prefetch: Some(PrefetchConfig { depth: 3, io_threads: 2 }),
+            ..Default::default()
+        },
+        None,
+        None,
+    );
+    assert!(stats.prefetched);
+    assert!(stats.io_seconds > 0.0);
+    assert_eq!(sync_mem, pref_file);
+    std::fs::remove_file(&path).ok();
+}
