@@ -462,6 +462,13 @@ pub fn clear_partial(dir: impl AsRef<Path>) -> Result<()> {
     Ok(())
 }
 
+/// True when `dir` holds a committed incremental (mid-compression)
+/// checkpoint — the `serve/` scheduler uses this to report which recovered
+/// jobs will resume in-flight work rather than restart Stage 1.
+pub fn partial_exists(dir: impl AsRef<Path>) -> bool {
+    dir.as_ref().join("partial.json").exists()
+}
+
 /// Removes a checkpoint directory (after a successful run).
 pub fn clear(dir: impl AsRef<Path>) -> Result<()> {
     let dir = dir.as_ref();

@@ -1,6 +1,7 @@
 //! Pipeline configuration: every knob of Alg. 2 plus execution policy.
 
-use anyhow::{bail, Result};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
 
 /// Which engine performs block compression and proxy decomposition.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -152,6 +153,162 @@ impl PipelineConfig {
             }
         }
         Ok(())
+    }
+}
+
+impl PipelineConfig {
+    /// Serializes every knob to JSON — the `serve/` job spool persists one
+    /// of these per job so a crashed daemon rebuilds the exact run.
+    /// `u64` seeds round-trip exactly up to 2⁵³ (JSON numbers are f64).
+    pub fn to_json(&self) -> Json {
+        let opt_num = |v: Option<usize>| match v {
+            Some(x) => Json::num(x as f64),
+            None => Json::Null,
+        };
+        let mut pairs = vec![
+            ("reduced", Json::arr_usize(&self.reduced)),
+            ("rank", Json::num(self.rank as f64)),
+            ("replicas", opt_num(self.replicas)),
+            ("anchor_rows", opt_num(self.anchor_rows)),
+            (
+                "block",
+                match self.block {
+                    Some(b) => Json::arr_usize(&b),
+                    None => Json::Null,
+                },
+            ),
+            ("corner", opt_num(self.corner)),
+            ("als_iters", Json::num(self.als_iters as f64)),
+            ("als_tol", Json::num(self.als_tol)),
+            (
+                "backend",
+                Json::str(match self.backend {
+                    Backend::RustSequential => "seq",
+                    Backend::RustParallel => "par",
+                    Backend::Xla => "xla",
+                }),
+            ),
+            ("threads", Json::num(self.threads as f64)),
+            ("mixed_precision", Json::Bool(self.mixed_precision)),
+            ("memory_budget", Json::num(self.memory_budget as f64)),
+            ("prefetch_depth", opt_num(self.prefetch_depth)),
+            ("io_threads", Json::num(self.io_threads as f64)),
+            ("refine_sweeps", Json::num(self.refine_sweeps as f64)),
+            ("seed", Json::num(self.seed as f64)),
+        ];
+        if let Some(sc) = &self.sensing {
+            pairs.push((
+                "sensing",
+                Json::obj(vec![
+                    ("alpha", Json::num(sc.alpha as f64)),
+                    ("nnz_per_col", Json::num(sc.nnz_per_col as f64)),
+                    ("lambda", Json::num(sc.lambda as f64)),
+                ]),
+            ));
+        }
+        if let Some(dir) = &self.checkpoint_dir {
+            pairs.push(("checkpoint_dir", Json::str(dir.display().to_string())));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Inverse of [`PipelineConfig::to_json`]; validates the result.
+    pub fn from_json(v: &Json) -> Result<PipelineConfig> {
+        let num = |key: &str| -> Result<usize> {
+            v.get(key)
+                .and_then(|x| x.as_usize())
+                .with_context(|| format!("config missing {key}"))
+        };
+        let opt_num = |key: &str| -> Result<Option<usize>> {
+            match v.get(key) {
+                None | Some(Json::Null) => Ok(None),
+                Some(x) => Ok(Some(
+                    x.as_usize().with_context(|| format!("config bad {key}"))?,
+                )),
+            }
+        };
+        let reduced = {
+            let a = v
+                .get("reduced")
+                .and_then(|x| x.as_arr())
+                .context("config missing reduced")?;
+            if a.len() != 3 {
+                bail!("config reduced: expected 3 dims");
+            }
+            [
+                a[0].as_usize().context("reduced dim")?,
+                a[1].as_usize().context("reduced dim")?,
+                a[2].as_usize().context("reduced dim")?,
+            ]
+        };
+        let block = match v.get("block") {
+            None | Some(Json::Null) => None,
+            Some(x) => {
+                let a = x.as_arr().context("config bad block")?;
+                if a.len() != 3 {
+                    bail!("config block: expected 3 dims");
+                }
+                Some([
+                    a[0].as_usize().context("block dim")?,
+                    a[1].as_usize().context("block dim")?,
+                    a[2].as_usize().context("block dim")?,
+                ])
+            }
+        };
+        let backend = match v.get("backend").and_then(|x| x.as_str()).unwrap_or("par") {
+            "seq" => Backend::RustSequential,
+            "xla" => Backend::Xla,
+            "par" => Backend::RustParallel,
+            other => bail!("config backend '{other}' (expected seq|par|xla)"),
+        };
+        let sensing = match v.get("sensing") {
+            None | Some(Json::Null) => None,
+            Some(s) => Some(SensingConfig {
+                alpha: s
+                    .get("alpha")
+                    .and_then(|x| x.as_f64())
+                    .context("sensing missing alpha")? as f32,
+                nnz_per_col: s
+                    .get("nnz_per_col")
+                    .and_then(|x| x.as_usize())
+                    .context("sensing missing nnz_per_col")?,
+                lambda: s
+                    .get("lambda")
+                    .and_then(|x| x.as_f64())
+                    .context("sensing missing lambda")? as f32,
+            }),
+        };
+        let cfg = PipelineConfig {
+            reduced,
+            rank: num("rank")?,
+            replicas: opt_num("replicas")?,
+            anchor_rows: opt_num("anchor_rows")?,
+            block,
+            corner: opt_num("corner")?,
+            als_iters: num("als_iters")?,
+            als_tol: v
+                .get("als_tol")
+                .and_then(|x| x.as_f64())
+                .context("config missing als_tol")?,
+            backend,
+            threads: num("threads")?.max(1),
+            mixed_precision: v
+                .get("mixed_precision")
+                .and_then(|x| x.as_bool())
+                .unwrap_or(false),
+            sensing,
+            memory_budget: num("memory_budget")?,
+            prefetch_depth: opt_num("prefetch_depth")?,
+            io_threads: num("io_threads")?.max(1),
+            refine_sweeps: num("refine_sweeps")?,
+            checkpoint_dir: v
+                .get("checkpoint_dir")
+                .and_then(|x| x.as_str())
+                .map(std::path::PathBuf::from),
+            seed: num("seed")? as u64,
+        };
+        cfg.validate()?;
+        Ok(cfg)
     }
 }
 
@@ -359,6 +516,73 @@ mod tests {
         let auto = PipelineConfig::builder().build().unwrap();
         assert_eq!(auto.prefetch_depth, None);
         assert_eq!(auto.io_threads, 2);
+    }
+
+    #[test]
+    fn json_round_trip_preserves_every_knob() {
+        let cfg = PipelineConfig::builder()
+            .reduced_dims(20, 21, 22)
+            .rank(3)
+            .replicas(9)
+            .anchor_rows(5)
+            .block([100, 90, 80])
+            .corner(15)
+            .als(120, 1e-10)
+            .backend(Backend::RustSequential)
+            .threads(3)
+            .mixed_precision(true)
+            .memory_budget(1 << 24)
+            .prefetch_depth(0)
+            .io_threads(4)
+            .refine_sweeps(2)
+            .checkpoint_dir("/tmp/ckpt")
+            .seed(424242)
+            .build()
+            .unwrap();
+        let text = cfg.to_json().to_string_pretty();
+        let back = PipelineConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.reduced, cfg.reduced);
+        assert_eq!(back.rank, cfg.rank);
+        assert_eq!(back.replicas, cfg.replicas);
+        assert_eq!(back.anchor_rows, cfg.anchor_rows);
+        assert_eq!(back.block, cfg.block);
+        assert_eq!(back.corner, cfg.corner);
+        assert_eq!(back.als_iters, cfg.als_iters);
+        assert_eq!(back.als_tol, cfg.als_tol);
+        assert_eq!(back.backend, cfg.backend);
+        assert_eq!(back.threads, cfg.threads);
+        assert_eq!(back.mixed_precision, cfg.mixed_precision);
+        assert_eq!(back.memory_budget, cfg.memory_budget);
+        assert_eq!(back.prefetch_depth, Some(0), "Some(0) ≠ None must survive");
+        assert_eq!(back.io_threads, cfg.io_threads);
+        assert_eq!(back.refine_sweeps, cfg.refine_sweeps);
+        assert_eq!(back.checkpoint_dir, cfg.checkpoint_dir);
+        assert_eq!(back.seed, cfg.seed);
+
+        // None-valued options round-trip as None (not 0).
+        let auto = PipelineConfig::builder().build().unwrap();
+        let back = PipelineConfig::from_json(&auto.to_json()).unwrap();
+        assert_eq!(back.prefetch_depth, None);
+        assert_eq!(back.replicas, None);
+        assert_eq!(back.block, None);
+        assert!(back.sensing.is_none());
+
+        // Sensing block round-trips.
+        let sens = PipelineConfig::builder()
+            .sensing(SensingConfig::default())
+            .build()
+            .unwrap();
+        let back = PipelineConfig::from_json(&sens.to_json()).unwrap();
+        let sc = back.sensing.unwrap();
+        assert!((sc.alpha - 2.2).abs() < 1e-6);
+        assert_eq!(sc.nnz_per_col, 8);
+
+        // Invalid configs are rejected on the way in.
+        let mut bad = cfg.to_json();
+        if let Json::Obj(m) = &mut bad {
+            m.insert("rank".into(), Json::num(0.0));
+        }
+        assert!(PipelineConfig::from_json(&bad).is_err());
     }
 
     #[test]

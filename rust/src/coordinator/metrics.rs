@@ -57,6 +57,21 @@ impl Metrics {
         self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
     }
 
+    /// One consistent export of every counter and gauge, sorted by key
+    /// (the BTreeMap order).  This is the `METRICS` protocol verb's
+    /// payload and the scheduler's per-job gauge surface (`jobs_queued`,
+    /// `jobs_running`, `cache_hits`, `cache_evictions`,
+    /// `admission_rejected_bytes`, …) — one snapshot call instead of
+    /// ad-hoc field reads, so readers never observe a torn registry.
+    pub fn snapshot(&self) -> Vec<(String, u64)> {
+        self.counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), *v))
+            .collect()
+    }
+
     pub fn stage(&self, name: &str) -> Option<StageStats> {
         self.stages.lock().unwrap().get(name).cloned()
     }
@@ -135,6 +150,26 @@ mod tests {
         let r = m.report();
         assert!(r.contains("decompose"));
         assert!(r.contains("replicas"));
+    }
+
+    #[test]
+    fn snapshot_exports_counters_and_gauges_sorted() {
+        let m = Metrics::new();
+        m.incr("jobs_queued", 3);
+        m.set("admission_rejected_bytes", 1024);
+        m.incr("cache_hits", 1);
+        let snap = m.snapshot();
+        assert_eq!(
+            snap,
+            vec![
+                ("admission_rejected_bytes".to_string(), 1024),
+                ("cache_hits".to_string(), 1),
+                ("jobs_queued".to_string(), 3),
+            ]
+        );
+        let mut sorted = snap.clone();
+        sorted.sort();
+        assert_eq!(snap, sorted, "snapshot keys must come out sorted");
     }
 
     #[test]

@@ -105,6 +105,12 @@ impl MemoryPlanner {
         let f = std::mem::size_of::<f32>();
         let [l, m, n] = reduced;
         let proxies = replicas * l * m * n * f;
+        // The replica maps themselves: every replica holds dense
+        // `U_p (L×I), V_p (M×J), W_p (N×K)` factors for the whole run —
+        // `P × (L·I + M·J + N·K)` floats.  At exascale `I` this is the
+        // dominant term (ROADMAP gap closed in PR 4); out-of-core plans
+        // must account for it or the admission controller undercounts.
+        let maps = replicas * (l * dims[0] + m * dims[1] + n * dims[2]) * f;
         // Each in-flight worker holds one materialized block + the mode-1
         // intermediate of its TTM chain: (L × dj·dk) per replica on the
         // trait path, (P·L × dj·dk) stacked on the batched f32 path.
@@ -121,7 +127,7 @@ impl MemoryPlanner {
         };
         // Recovery: stacked U (P·L × I) + stacked A (P·L × R) per mode.
         let recovery = replicas * l * (dims[0] + rank) * f;
-        proxies + workers + shard_accs + queue + recovery
+        proxies + maps + workers + shard_accs + queue + recovery
     }
 
     /// Resolves the plan for `dims` under `cfg`, shrinking blocks to satisfy
@@ -340,6 +346,30 @@ mod tests {
     }
 
     #[test]
+    fn estimate_includes_replica_map_bytes_hand_computed() {
+        // dims [100,80,60], reduced [10,10,10], P=3, block [20,20,20],
+        // threads 2, rank 4, no prefetch, unbatched.  By hand:
+        //   proxies    = 3·10·10·10·4                      = 12 000
+        //   maps       = 3·(10·100 + 10·80 + 10·60)·4      = 28 800
+        //   workers    = 2·(20³ + 10·20·20)·4              = 96 000
+        //   shard_accs = (2+1)·10³·3·4                     = 36 000
+        //   queue      = 0
+        //   recovery   = 3·10·(100+4)·4                    = 12 480
+        //   total                                          = 185 280
+        let est = MemoryPlanner::estimate_bytes(
+            [100, 80, 60], [10, 10, 10], 3, [20, 20, 20], 2, 4, 0, 1, false,
+        );
+        assert_eq!(est, 185_280);
+
+        // Growing I by ΔI=900 must add exactly the I-linear terms:
+        // maps P·L·ΔI·4 plus recovery P·L·ΔI·4 = 2·3·10·900·4 = 216 000.
+        let est_big = MemoryPlanner::estimate_bytes(
+            [1000, 80, 60], [10, 10, 10], 3, [20, 20, 20], 2, 4, 0, 1, false,
+        );
+        assert_eq!(est_big - est, 216_000, "replica-map bytes must scale with I");
+    }
+
+    #[test]
     fn explicit_replicas_below_bound_rejected() {
         let mut c = cfg();
         c.replicas = Some(2);
@@ -354,11 +384,15 @@ mod tests {
     #[test]
     fn budget_shrinks_blocks() {
         let mut c = cfg();
-        c.memory_budget = 200 * 1024 * 1024;
+        // 300 MiB: above the plan's fixed floor (proxies 26 MiB + replica
+        // maps 62.4 MiB + shard accumulators 130 MiB + recovery 20.9 MiB
+        // ≈ 239 MiB for P=52 at these shapes), below the unbounded
+        // estimate, so the block-shrinking loop must engage and converge.
+        c.memory_budget = 300 * 1024 * 1024;
         let plan_unbounded = MemoryPlanner::plan(&cfg(), [2000, 2000, 2000]).unwrap();
         let plan_bounded = MemoryPlanner::plan(&c, [2000, 2000, 2000]).unwrap();
-        assert!(plan_bounded.block[0] <= plan_unbounded.block[0]);
-        assert!(plan_bounded.estimated_bytes <= 200 * 1024 * 1024);
+        assert!(plan_bounded.block[0] < plan_unbounded.block[0]);
+        assert!(plan_bounded.estimated_bytes <= 300 * 1024 * 1024);
     }
 
     #[test]

@@ -43,6 +43,7 @@ pub mod cp;
 pub mod linalg;
 pub mod mixed;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod util;
 

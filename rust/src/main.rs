@@ -10,6 +10,11 @@
 //! * `cp-layer`   — the CP tensor-layer / CNN compression application
 //!   (Table I).
 //! * `artifacts`  — list the AOT artifacts the runtime can execute.
+//! * `serve`      — the multi-tenant decomposition daemon (job scheduler
+//!   with memory-budget admission control, result cache, crash-safe job
+//!   spool; line-delimited JSON protocol over TCP).
+//! * `client`     — talk to a running daemon
+//!   (`submit|status|result|cancel|metrics|shutdown`).
 
 use exascale_tensor::apps::{run_cp_layer_experiment, run_gene_analysis, CpBackend, GeneConfig};
 use exascale_tensor::apps::nn::{train, Network, SyntheticImages, TrainConfig};
@@ -33,6 +38,8 @@ fn main() {
         "gene" => cmd_gene(&prog, &rest),
         "cp-layer" => cmd_cp_layer(&prog, &rest),
         "artifacts" => cmd_artifacts(),
+        "serve" => cmd_serve(&prog, &rest),
+        "client" => cmd_client(&prog, &rest),
         _ => {
             print_help(&prog);
             if sub == "help" || sub == "--help" {
@@ -49,7 +56,7 @@ fn main() {
 fn print_help(prog: &str) {
     println!(
         "exatensor — compressed CP tensor decomposition (Exascale-Tensor)\n\n\
-         USAGE: {prog} <decompose|gen-tensor|gene|cp-layer|artifacts> [OPTIONS]\n\n\
+         USAGE: {prog} <decompose|gen-tensor|gene|cp-layer|artifacts|serve|client> [OPTIONS]\n\n\
          Run `{prog} <subcommand> --help` for options."
     );
 }
@@ -342,6 +349,179 @@ fn cmd_cp_layer(prog: &str, args: &[String]) -> i32 {
                 rep.decomp_seconds,
                 rep.reconstruction_error
             );
+        }
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+fn serve_cmd() -> Command {
+    Command::new("serve", "multi-tenant decomposition daemon")
+        .opt("addr", "bind address (port 0 = ephemeral)", Some("127.0.0.1:7077"))
+        .opt("spool", "spool dir (job records, results, checkpoints)", Some("spool"))
+        .opt(
+            "memory-budget-mb",
+            "global admission budget in MiB (0 = unlimited)",
+            Some("0"),
+        )
+        .opt("workers", "concurrent jobs", Some("2"))
+        .opt("cache-mb", "result-cache budget in MiB", Some("64"))
+        .switch("help", "show help")
+}
+
+fn cmd_serve(prog: &str, args: &[String]) -> i32 {
+    let cmd = serve_cmd();
+    let m = match cmd.parse(args) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}\n{}", cmd.usage(prog));
+            return 2;
+        }
+    };
+    if m.get_bool("help") {
+        println!("{}", cmd.usage(prog));
+        return 0;
+    }
+    let run = || -> anyhow::Result<()> {
+        let cfg = exascale_tensor::serve::ServerConfig {
+            addr: m.req("addr")?.to_string(),
+            spool_dir: m.req("spool")?.into(),
+            scheduler: exascale_tensor::serve::SchedulerConfig {
+                memory_budget: m.get_usize("memory-budget-mb")? * (1 << 20),
+                workers: m.get_usize("workers")?,
+                cache_bytes: m.get_usize("cache-mb")? * (1 << 20),
+            },
+        };
+        let server = exascale_tensor::serve::Server::bind(&cfg)?;
+        // The "listening" line is the readiness signal scripts wait for.
+        println!("exatensor serve: listening on {} (spool {})", server.local_addr(),
+                 cfg.spool_dir.display());
+        use std::io::Write as _;
+        std::io::stdout().flush().ok();
+        server.run()
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+fn client_cmd() -> Command {
+    Command::new(
+        "client",
+        "talk to a running daemon: submit|status|result|cancel|metrics|shutdown",
+    )
+    .opt("addr", "daemon address", Some("127.0.0.1:7077"))
+    .opt("id", "job id (status/result/cancel)", None)
+    .opt("size", "synthetic tensor side I=J=K", Some("200"))
+    .opt("source-rank", "planted generator rank (default: --rank)", None)
+    .opt("noise", "synthetic additive noise sigma", Some("0"))
+    .opt("input", "EXT1 tensor file instead of synthetic", None)
+    .opt("rank", "CP rank F", Some("5"))
+    .opt("reduced", "proxy side L=M=N", Some("24"))
+    .opt("block", "compression block side d", Some("60"))
+    .opt("memory-budget-mb", "per-job planner budget in MiB (0 = daemon default)", Some("0"))
+    .opt("threads", "per-job worker threads", Some("2"))
+    .opt("priority", "higher runs first", Some("0"))
+    .opt("seed", "random seed", Some("0"))
+    .opt("poll-ms", "--wait poll interval", Some("200"))
+    .switch("wait", "block until the submitted job is terminal")
+    .switch("help", "show help")
+}
+
+fn cmd_client(prog: &str, args: &[String]) -> i32 {
+    use exascale_tensor::serve::{protocol, JobSource, JobSpec, Request};
+    let cmd = client_cmd();
+    let m = match cmd.parse(args) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}\n{}", cmd.usage(prog));
+            return 2;
+        }
+    };
+    if m.get_bool("help") || m.positional.is_empty() {
+        println!("{}", cmd.usage(prog));
+        return i32::from(!m.get_bool("help"));
+    }
+    let run = || -> anyhow::Result<()> {
+        let addr = m.req("addr")?;
+        let verb = m.positional[0].as_str();
+        let want_id = || -> anyhow::Result<String> { Ok(m.req("id")?.to_string()) };
+        let req = match verb {
+            "submit" => {
+                let rank = m.get_usize("rank")?;
+                let seed = m.get_u64("seed")?;
+                let source = match m.get("input") {
+                    Some(path) => JobSource::File { path: path.to_string() },
+                    None => JobSource::Synthetic {
+                        size: m.get_usize("size")?,
+                        rank: match m.get("source-rank") {
+                            Some(_) => m.get_usize("source-rank")?,
+                            None => rank,
+                        },
+                        noise: m.get_f64("noise")?,
+                        seed,
+                    },
+                };
+                let reduced = m.get_usize("reduced")?;
+                let block = m.get_usize("block")?;
+                let config = PipelineConfig::builder()
+                    .reduced_dims(reduced, reduced, reduced)
+                    .rank(rank)
+                    .block([block, block, block])
+                    .threads(m.get_usize("threads")?)
+                    .memory_budget(m.get_usize("memory-budget-mb")? * (1 << 20))
+                    .seed(seed)
+                    .build()?;
+                Request::Submit(JobSpec {
+                    source,
+                    config,
+                    priority: m.get_f64("priority")? as i64,
+                })
+            }
+            "status" => Request::Status(want_id()?),
+            "result" => Request::Result(want_id()?),
+            "cancel" => Request::Cancel(want_id()?),
+            "metrics" => Request::Metrics,
+            "shutdown" => Request::Shutdown,
+            other => anyhow::bail!("unknown client verb '{other}'"),
+        };
+        let resp = protocol::call(addr, &req)?;
+        print!("{}", resp.to_string_pretty());
+        if verb == "submit" && m.get_bool("wait") {
+            let id = resp
+                .get("job")
+                .and_then(|j| j.get("id"))
+                .and_then(|x| x.as_str())
+                .ok_or_else(|| anyhow::anyhow!("submit failed, nothing to wait for"))?
+                .to_string();
+            let poll = std::time::Duration::from_millis(m.get_u64("poll-ms")?);
+            loop {
+                std::thread::sleep(poll);
+                let st = protocol::call_ok(addr, &Request::Status(id.clone()))?;
+                let state = st
+                    .get("job")
+                    .and_then(|j| j.get("state"))
+                    .and_then(|x| x.as_str())
+                    .unwrap_or("?")
+                    .to_string();
+                if matches!(state.as_str(), "done" | "failed" | "cancelled") {
+                    print!("{}", st.to_string_pretty());
+                    if state != "done" {
+                        anyhow::bail!("job {id} ended {state}");
+                    }
+                    break;
+                }
+            }
         }
         Ok(())
     };

@@ -1,0 +1,389 @@
+//! Result cache: repeated decompositions of the same input are served
+//! from memory instead of re-running the pipeline.
+//!
+//! The key is a **tensor fingerprint**: an FNV-1a digest over the input's
+//! identity (for `EXT1` files, the header bytes + file length + mtime; for
+//! synthetic sources, the generator parameters), the tensor dims, the CP
+//! rank, the seed, and a hash of the result-relevant pipeline config.
+//! Execution-only knobs (`threads`, `io_threads`, `prefetch_depth`,
+//! `checkpoint_dir`) are excluded — the streaming engine is bitwise
+//! deterministic across them, so runs that differ only there produce
+//! identical factors and must share a cache line.
+//!
+//! Eviction is LRU under a byte budget: each entry is priced at its factor
+//! bytes, and inserts evict least-recently-used entries until the cache
+//! fits.  An entry larger than the whole budget is simply not cached.
+
+use super::job::JobSpec;
+use crate::cp::CpModel;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::io::Read;
+use std::sync::{Arc, Mutex};
+
+/// 64-bit FNV-1a — tiny, dependency-free, stable across platforms.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = Fnv::new();
+    h.write(bytes);
+    h.finish()
+}
+
+/// Incremental FNV-1a hasher.
+pub struct Fnv {
+    state: u64,
+}
+
+impl Fnv {
+    pub fn new() -> Self {
+        Self { state: 0xcbf2_9ce4_8422_2325 }
+    }
+
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.state ^= b as u64;
+            self.state = self.state.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    pub fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.state
+    }
+}
+
+impl Default for Fnv {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Digest of a CP model's factor bytes — the protocol's cheap bitwise-
+/// identity witness (resume-after-kill must reproduce it exactly).
+pub fn model_digest(model: &CpModel) -> u64 {
+    let mut h = Fnv::new();
+    for m in [&model.a, &model.b, &model.c] {
+        h.write_u64(m.rows() as u64);
+        h.write_u64(m.cols() as u64);
+        for &x in m.data() {
+            h.write(&x.to_le_bytes());
+        }
+    }
+    h.finish()
+}
+
+/// Digest of an `EXT1` file's identity: header bytes (magic + ndim + dims),
+/// total file length, and the modification time.  Never reads the payload,
+/// so fingerprinting a multi-TB tensor costs one small read — the mtime is
+/// what catches a payload rewritten in place with the same shape.
+pub fn file_fingerprint(path: &str) -> Result<u64> {
+    let mut f = std::fs::File::open(path).with_context(|| format!("fingerprinting {path}"))?;
+    let meta = f.metadata().context("stat")?;
+    let len = meta.len();
+    // Magic (4) + ndim (4) + up to 8 dims (64): the EXT1 header never
+    // exceeds 72 bytes.
+    let mut header = [0u8; 72];
+    let mut read = 0;
+    while read < header.len() {
+        match f.read(&mut header[read..]) {
+            Ok(0) => break,
+            Ok(n) => read += n,
+            Err(e) => return Err(e).context("reading header"),
+        }
+    }
+    let mut h = Fnv::new();
+    h.write(&header[..read]);
+    h.write_u64(len);
+    if let Ok(mtime) = meta.modified() {
+        if let Ok(d) = mtime.duration_since(std::time::UNIX_EPOCH) {
+            h.write_u64(d.as_secs());
+            h.write_u64(d.subsec_nanos() as u64);
+        }
+    }
+    Ok(h.finish())
+}
+
+/// The full result-cache key for a job spec.  Errors if a file input
+/// cannot be read (the submitter gets the failure immediately).
+pub fn cache_key(spec: &JobSpec) -> Result<String> {
+    let mut h = Fnv::new();
+    match &spec.source {
+        super::job::JobSource::Synthetic { size, rank, noise, seed } => {
+            h.write(b"synthetic");
+            h.write_u64(*size as u64);
+            h.write_u64(*rank as u64);
+            h.write_u64(noise.to_bits());
+            h.write_u64(*seed);
+        }
+        super::job::JobSource::File { path } => {
+            h.write(b"file");
+            h.write_u64(file_fingerprint(path)?);
+        }
+    }
+    let dims = spec.source.dims()?;
+    for d in dims {
+        h.write_u64(d as u64);
+    }
+    h.write_u64(spec.config.rank as u64);
+    h.write_u64(spec.config.seed);
+    // Config hash over the canonical JSON minus execution-only knobs.
+    let mut cfg = spec.config.to_json();
+    if let Json::Obj(m) = &mut cfg {
+        for k in ["threads", "io_threads", "prefetch_depth", "checkpoint_dir"] {
+            m.remove(k);
+        }
+    }
+    h.write(cfg.to_string_compact().as_bytes());
+    Ok(format!("{:016x}", h.finish()))
+}
+
+/// A cached decomposition: the model plus the summary the protocol returns.
+#[derive(Clone)]
+pub struct CachedResult {
+    pub model: Arc<CpModel>,
+    pub rel_error: f64,
+    pub sampled_mse: f64,
+    pub dropped_replicas: usize,
+    pub model_digest: u64,
+}
+
+impl CachedResult {
+    /// Bytes this entry charges against the cache budget (factor data).
+    fn cost(&self) -> usize {
+        let m = &self.model;
+        (m.a.rows() + m.b.rows() + m.c.rows()) * m.rank() * std::mem::size_of::<f32>() + 64
+    }
+}
+
+/// Monotone counters a scheduler mirrors into its metrics registry.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub used_bytes: usize,
+    pub entries: usize,
+}
+
+struct Entry {
+    result: CachedResult,
+    bytes: usize,
+    last_used: u64,
+}
+
+struct Inner {
+    map: HashMap<String, Entry>,
+    used: usize,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+/// Thread-safe LRU result cache with a byte budget.
+pub struct ResultCache {
+    budget: usize,
+    inner: Mutex<Inner>,
+}
+
+impl ResultCache {
+    /// `budget` = 0 disables caching entirely (every get misses, inserts
+    /// are dropped).
+    pub fn new(budget: usize) -> Self {
+        Self {
+            budget,
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                used: 0,
+                tick: 0,
+                hits: 0,
+                misses: 0,
+                evictions: 0,
+            }),
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<CachedResult> {
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        match g.map.get_mut(key) {
+            Some(e) => {
+                e.last_used = tick;
+                let r = e.result.clone();
+                g.hits += 1;
+                Some(r)
+            }
+            None => {
+                g.misses += 1;
+                None
+            }
+        }
+    }
+
+    pub fn insert(&self, key: String, result: CachedResult) {
+        let bytes = result.cost();
+        if bytes > self.budget {
+            log::debug!("cache: {key} costs {bytes} B > budget {} B, not cached", self.budget);
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        if let Some(old) = g.map.remove(&key) {
+            g.used -= old.bytes;
+        }
+        // Evict LRU entries until the new entry fits the budget.
+        while g.used + bytes > self.budget {
+            let victim = g
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone());
+            match victim {
+                Some(k) => {
+                    let e = g.map.remove(&k).unwrap();
+                    g.used -= e.bytes;
+                    g.evictions += 1;
+                }
+                None => break,
+            }
+        }
+        g.used += bytes;
+        g.map.insert(key, Entry { result, bytes, last_used: tick });
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let g = self.inner.lock().unwrap();
+        CacheStats {
+            hits: g.hits,
+            misses: g.misses,
+            evictions: g.evictions,
+            used_bytes: g.used,
+            entries: g.map.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::PipelineConfig;
+    use crate::linalg::Matrix;
+    use crate::serve::job::JobSource;
+
+    fn model(rows: usize, rank: usize, fill: f32) -> CachedResult {
+        let m = |r| Matrix::from_vec(r, rank, vec![fill; r * rank]);
+        let model = CpModel::new(m(rows), m(rows), m(rows));
+        let digest = model_digest(&model);
+        CachedResult {
+            model: Arc::new(model),
+            rel_error: 0.0,
+            sampled_mse: 0.0,
+            dropped_replicas: 0,
+            model_digest: digest,
+        }
+    }
+
+    fn spec(seed: u64, threads: usize) -> JobSpec {
+        JobSpec {
+            source: JobSource::Synthetic { size: 16, rank: 2, noise: 0.0, seed: 9 },
+            config: PipelineConfig::builder()
+                .reduced_dims(8, 8, 8)
+                .rank(2)
+                .anchor_rows(4)
+                .threads(threads)
+                .seed(seed)
+                .build()
+                .unwrap(),
+            priority: 0,
+        }
+    }
+
+    #[test]
+    fn fnv_is_stable_and_input_sensitive() {
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_ne!(fnv1a64(b"a"), fnv1a64(b"b"));
+        let mut h = Fnv::new();
+        h.write(b"ab");
+        let mut h2 = Fnv::new();
+        h2.write(b"a");
+        h2.write(b"b");
+        assert_eq!(h.finish(), h2.finish(), "incremental == one-shot");
+    }
+
+    #[test]
+    fn cache_key_ignores_execution_knobs_but_not_seed() {
+        let k1 = cache_key(&spec(1, 2)).unwrap();
+        let k2 = cache_key(&spec(1, 8)).unwrap();
+        assert_eq!(k1, k2, "thread count must not split cache lines");
+        let k3 = cache_key(&spec(2, 2)).unwrap();
+        assert_ne!(k1, k3, "seed changes the result, must change the key");
+    }
+
+    #[test]
+    fn model_digest_detects_single_bit_changes() {
+        let a = model(8, 2, 1.0);
+        let mut m = (*a.model).clone();
+        *m.a.data_mut().first_mut().unwrap() += 1e-7;
+        assert_ne!(model_digest(&m), a.model_digest);
+    }
+
+    #[test]
+    fn lru_eviction_respects_byte_budget() {
+        // Each 8×2×3-factor entry costs 8·2·4·3 + 64 = 256 bytes; budget
+        // holds exactly two.
+        let cache = ResultCache::new(512);
+        cache.insert("a".into(), model(8, 2, 1.0));
+        cache.insert("b".into(), model(8, 2, 2.0));
+        assert_eq!(cache.stats().entries, 2);
+        // Touch "a" so "b" is LRU, then insert "c": "b" must be evicted.
+        assert!(cache.get("a").is_some());
+        cache.insert("c".into(), model(8, 2, 3.0));
+        let st = cache.stats();
+        assert_eq!(st.entries, 2);
+        assert_eq!(st.evictions, 1);
+        assert!(st.used_bytes <= 512);
+        assert!(cache.get("b").is_none(), "LRU entry must be gone");
+        assert!(cache.get("a").is_some() && cache.get("c").is_some());
+    }
+
+    #[test]
+    fn oversized_entry_and_zero_budget_are_not_cached() {
+        let cache = ResultCache::new(100);
+        cache.insert("big".into(), model(64, 4, 1.0));
+        assert_eq!(cache.stats().entries, 0);
+        let off = ResultCache::new(0);
+        off.insert("x".into(), model(8, 2, 1.0));
+        assert!(off.get("x").is_none());
+        assert_eq!(off.stats().misses, 1);
+    }
+
+    #[test]
+    fn file_fingerprint_tracks_rewrites_and_shape() {
+        let p = std::env::temp_dir()
+            .join(format!("exatensor_fp_{}.ext1", std::process::id()));
+        let path = p.to_str().unwrap();
+        let t = crate::tensor::DenseTensor::from_vec([2, 2, 2], vec![1.0; 8]);
+        crate::tensor::io::save_tensor(&t, &p).unwrap();
+        let f1 = file_fingerprint(path).unwrap();
+        assert_eq!(f1, file_fingerprint(path).unwrap(), "stable across reads");
+        // Rewriting the payload in place with the same shape must change
+        // the fingerprint (via mtime): a stale cached decomposition of the
+        // old payload would otherwise be served silently.
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let t2 = crate::tensor::DenseTensor::from_vec([2, 2, 2], vec![2.0; 8]);
+        crate::tensor::io::save_tensor(&t2, &p).unwrap();
+        let f2 = file_fingerprint(path).unwrap();
+        assert_ne!(f1, f2, "same-shape rewrite must change the fingerprint");
+        // A different shape changes it regardless of timing.
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let t3 = crate::tensor::DenseTensor::from_vec([4, 2, 1], vec![1.0; 8]);
+        crate::tensor::io::save_tensor(&t3, &p).unwrap();
+        assert_ne!(f2, file_fingerprint(path).unwrap());
+        std::fs::remove_file(&p).ok();
+    }
+}

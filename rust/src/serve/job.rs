@@ -1,0 +1,507 @@
+//! Job model for the multi-tenant decomposition service: what a tenant
+//! submits, the lifecycle state machine, and the crash-safe spool that
+//! persists every record so a killed daemon recovers its queue.
+//!
+//! Lifecycle:
+//!
+//! ```text
+//! submitted ──▶ queued ──▶ running ──▶ done
+//!     │            │           ├─────▶ failed
+//!     └────────────┴───────────┴─────▶ cancelled
+//! ```
+//!
+//! `submitted` covers the brief planning window between `SUBMIT` arriving
+//! and the scheduler pricing the job with [`MemoryPlanner`]
+//! (crate::coordinator::MemoryPlanner); a cache hit jumps straight from
+//! `submitted` to `done`.  Records are JSON files under
+//! `<spool>/jobs/<id>.json`, committed by atomic rename, so the spool is
+//! never observed half-written.
+
+use crate::coordinator::config::PipelineConfig;
+use crate::tensor::{FileTensorSource, LowRankGenerator, TensorSource};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Unique job identifier (`job-<seq>`; the sequence survives restarts).
+pub type JobId = String;
+
+/// Where the input tensor comes from.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JobSource {
+    /// Implicit low-rank generator (never materialized).
+    Synthetic {
+        size: usize,
+        rank: usize,
+        noise: f64,
+        seed: u64,
+    },
+    /// An `EXT1` file streamed out-of-core through `FileTensorSource`.
+    File { path: String },
+}
+
+impl JobSource {
+    pub fn to_json(&self) -> Json {
+        match self {
+            JobSource::Synthetic {
+                size,
+                rank,
+                noise,
+                seed,
+            } => Json::obj(vec![
+                ("kind", Json::str("synthetic")),
+                ("size", Json::num(*size as f64)),
+                ("rank", Json::num(*rank as f64)),
+                ("noise", Json::num(*noise)),
+                ("seed", Json::num(*seed as f64)),
+            ]),
+            JobSource::File { path } => Json::obj(vec![
+                ("kind", Json::str("file")),
+                ("path", Json::str(path.clone())),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<JobSource> {
+        match v.get("kind").and_then(|x| x.as_str()) {
+            Some("synthetic") => Ok(JobSource::Synthetic {
+                size: v
+                    .get("size")
+                    .and_then(|x| x.as_usize())
+                    .context("source missing size")?,
+                rank: v
+                    .get("rank")
+                    .and_then(|x| x.as_usize())
+                    .context("source missing rank")?,
+                noise: v.get("noise").and_then(|x| x.as_f64()).unwrap_or(0.0),
+                seed: v
+                    .get("seed")
+                    .and_then(|x| x.as_usize())
+                    .context("source missing seed")? as u64,
+            }),
+            Some("file") => Ok(JobSource::File {
+                path: v
+                    .get("path")
+                    .and_then(|x| x.as_str())
+                    .context("source missing path")?
+                    .to_string(),
+            }),
+            other => bail!("unknown source kind {other:?}"),
+        }
+    }
+
+    /// Tensor dims without materializing anything (file inputs read only
+    /// the header) — what the planner prices admission with.
+    pub fn dims(&self) -> Result<[usize; 3]> {
+        match self {
+            JobSource::Synthetic { size, .. } => Ok([*size, *size, *size]),
+            JobSource::File { path } => Ok(FileTensorSource::open(path)?.dims()),
+        }
+    }
+
+    /// Opens the streaming source for a run.
+    pub fn open(&self) -> Result<Box<dyn TensorSource>> {
+        match self {
+            JobSource::Synthetic {
+                size,
+                rank,
+                noise,
+                seed,
+            } => {
+                let mut g = LowRankGenerator::new(*size, *size, *size, *rank, *seed);
+                if *noise > 0.0 {
+                    g = g.with_noise(*noise as f32);
+                }
+                Ok(Box::new(g))
+            }
+            JobSource::File { path } => Ok(Box::new(FileTensorSource::open(path)?)),
+        }
+    }
+}
+
+/// Everything a tenant submits: input + full pipeline config + priority.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub source: JobSource,
+    /// Per-job pipeline configuration.  `checkpoint_dir` is daemon-owned
+    /// (one directory per job under the spool) and ignored if set here.
+    pub config: PipelineConfig,
+    /// Higher runs first; ties break FIFO by submission order.
+    pub priority: i64,
+}
+
+impl JobSpec {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("source", self.source.to_json()),
+            ("config", self.config.to_json()),
+            ("priority", Json::num(self.priority as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<JobSpec> {
+        Ok(JobSpec {
+            source: JobSource::from_json(v.get("source").context("spec missing source")?)?,
+            config: PipelineConfig::from_json(v.get("config").context("spec missing config")?)?,
+            priority: v.get("priority").and_then(|x| x.as_f64()).unwrap_or(0.0) as i64,
+        })
+    }
+}
+
+/// Lifecycle states.  `is_terminal` states never transition again.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    Submitted,
+    Queued,
+    Running,
+    Done,
+    Failed,
+    Cancelled,
+}
+
+impl JobState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            JobState::Submitted => "submitted",
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<JobState> {
+        Ok(match s {
+            "submitted" => JobState::Submitted,
+            "queued" => JobState::Queued,
+            "running" => JobState::Running,
+            "done" => JobState::Done,
+            "failed" => JobState::Failed,
+            "cancelled" => JobState::Cancelled,
+            other => bail!("unknown job state '{other}'"),
+        })
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobState::Done | JobState::Failed | JobState::Cancelled)
+    }
+}
+
+/// What a finished job produced (also the cache payload's summary).
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobOutcome {
+    pub rel_error: f64,
+    pub sampled_mse: f64,
+    pub dropped_replicas: usize,
+    /// FNV-1a digest of the factor bytes — the cheap bitwise-identity
+    /// witness the protocol exposes (kill/restart resume must reproduce
+    /// an uninterrupted run's digest exactly).
+    pub model_digest: u64,
+    /// Served from the result cache instead of a fresh run.
+    pub from_cache: bool,
+}
+
+impl JobOutcome {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("rel_error", Json::num(self.rel_error)),
+            ("sampled_mse", Json::num(self.sampled_mse)),
+            ("dropped_replicas", Json::num(self.dropped_replicas as f64)),
+            ("model_digest", Json::str(format!("{:016x}", self.model_digest))),
+            ("from_cache", Json::Bool(self.from_cache)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<JobOutcome> {
+        let digest = v
+            .get("model_digest")
+            .and_then(|x| x.as_str())
+            .context("outcome missing model_digest")?;
+        Ok(JobOutcome {
+            rel_error: v
+                .get("rel_error")
+                .and_then(|x| x.as_f64())
+                .context("outcome missing rel_error")?,
+            sampled_mse: v.get("sampled_mse").and_then(|x| x.as_f64()).unwrap_or(f64::NAN),
+            dropped_replicas: v
+                .get("dropped_replicas")
+                .and_then(|x| x.as_usize())
+                .unwrap_or(0),
+            model_digest: u64::from_str_radix(digest, 16).context("bad model_digest")?,
+            from_cache: v.get("from_cache").and_then(|x| x.as_bool()).unwrap_or(false),
+        })
+    }
+}
+
+/// One job's persisted record — the unit the spool stores and the
+/// `STATUS` verb returns.
+#[derive(Clone, Debug)]
+pub struct JobRecord {
+    pub id: JobId,
+    /// Monotone submission sequence (FIFO tiebreak; survives restarts).
+    pub seq: u64,
+    pub spec: JobSpec,
+    pub state: JobState,
+    /// Admission price: the resolved plan's estimated bytes.
+    pub plan_bytes: usize,
+    /// Result-cache key (tensor fingerprint + config hash).
+    pub cache_key: String,
+    /// A `CANCEL` arrived while the job was running.  Persisted so an
+    /// acknowledged cancellation survives a daemon crash: recovery turns
+    /// a flagged non-terminal record into `cancelled` instead of
+    /// requeueing it.
+    pub cancel_requested: bool,
+    pub error: Option<String>,
+    pub outcome: Option<JobOutcome>,
+}
+
+impl JobRecord {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("version", Json::num(1.0)),
+            ("id", Json::str(self.id.clone())),
+            ("seq", Json::num(self.seq as f64)),
+            ("spec", self.spec.to_json()),
+            ("state", Json::str(self.state.as_str())),
+            ("plan_bytes", Json::num(self.plan_bytes as f64)),
+            ("cache_key", Json::str(self.cache_key.clone())),
+        ];
+        if self.cancel_requested {
+            pairs.push(("cancel_requested", Json::Bool(true)));
+        }
+        if let Some(e) = &self.error {
+            pairs.push(("error", Json::str(e.clone())));
+        }
+        if let Some(o) = &self.outcome {
+            pairs.push(("outcome", o.to_json()));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(v: &Json) -> Result<JobRecord> {
+        if v.get("version").and_then(|x| x.as_usize()) != Some(1) {
+            bail!("unsupported job record version");
+        }
+        Ok(JobRecord {
+            id: v
+                .get("id")
+                .and_then(|x| x.as_str())
+                .context("record missing id")?
+                .to_string(),
+            seq: v
+                .get("seq")
+                .and_then(|x| x.as_usize())
+                .context("record missing seq")? as u64,
+            spec: JobSpec::from_json(v.get("spec").context("record missing spec")?)?,
+            state: JobState::parse(
+                v.get("state")
+                    .and_then(|x| x.as_str())
+                    .context("record missing state")?,
+            )?,
+            plan_bytes: v.get("plan_bytes").and_then(|x| x.as_usize()).unwrap_or(0),
+            cache_key: v
+                .get("cache_key")
+                .and_then(|x| x.as_str())
+                .unwrap_or("")
+                .to_string(),
+            cancel_requested: v
+                .get("cancel_requested")
+                .and_then(|x| x.as_bool())
+                .unwrap_or(false),
+            error: v.get("error").and_then(|x| x.as_str()).map(str::to_string),
+            outcome: match v.get("outcome") {
+                None | Some(Json::Null) => None,
+                Some(o) => Some(JobOutcome::from_json(o)?),
+            },
+        })
+    }
+}
+
+/// The on-disk spool: `jobs/` (records), `results/` (factor files),
+/// `checkpoints/<id>/` (per-job incremental + final pipeline checkpoints).
+pub struct Spool {
+    dir: PathBuf,
+}
+
+impl Spool {
+    pub fn open(dir: impl AsRef<Path>) -> Result<Spool> {
+        let dir = dir.as_ref().to_path_buf();
+        for sub in ["jobs", "results", "checkpoints"] {
+            std::fs::create_dir_all(dir.join(sub))
+                .with_context(|| format!("creating spool {}/{sub}", dir.display()))?;
+        }
+        Ok(Spool { dir })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Per-job pipeline checkpoint directory — a killed daemon's running
+    /// jobs resume mid-compression from here on restart.
+    pub fn checkpoint_dir(&self, id: &str) -> PathBuf {
+        self.dir.join("checkpoints").join(id)
+    }
+
+    /// Per-job result directory (factor matrices as EXT1 files).
+    pub fn result_dir(&self, id: &str) -> PathBuf {
+        self.dir.join("results").join(id)
+    }
+
+    fn record_path(&self, id: &str) -> PathBuf {
+        self.dir.join("jobs").join(format!("{id}.json"))
+    }
+
+    /// Persists one record via write-to-temp + atomic rename: a kill mid-
+    /// save leaves the previous complete record in force.
+    pub fn save(&self, rec: &JobRecord) -> Result<()> {
+        let path = self.record_path(&rec.id);
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, rec.to_json().to_string_pretty())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path).context("committing job record")?;
+        Ok(())
+    }
+
+    /// Loads every record, sorted by sequence.  Unparseable files are
+    /// skipped with a warning (one corrupt record must not wedge the whole
+    /// daemon on restart).
+    pub fn load_all(&self) -> Result<Vec<JobRecord>> {
+        let mut out = Vec::new();
+        for e in std::fs::read_dir(self.dir.join("jobs"))?.flatten() {
+            let path = e.path();
+            if path.extension().and_then(|x| x.to_str()) != Some("json") {
+                continue;
+            }
+            let parsed = std::fs::read_to_string(&path)
+                .map_err(anyhow::Error::from)
+                .and_then(|t| Ok(Json::parse(&t)?))
+                .and_then(|v| JobRecord::from_json(&v));
+            match parsed {
+                Ok(rec) => out.push(rec),
+                Err(err) => log::warn!("spool: skipping {}: {err:#}", path.display()),
+            }
+        }
+        out.sort_by_key(|r| r.seq);
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("exatensor_spool_{name}_{}", std::process::id()));
+        std::fs::remove_dir_all(&p).ok();
+        p
+    }
+
+    fn spec() -> JobSpec {
+        JobSpec {
+            source: JobSource::Synthetic {
+                size: 32,
+                rank: 2,
+                noise: 0.0,
+                seed: 7,
+            },
+            config: PipelineConfig::builder()
+                .reduced_dims(8, 8, 8)
+                .rank(2)
+                .anchor_rows(4)
+                .build()
+                .unwrap(),
+            priority: 3,
+        }
+    }
+
+    fn record(id: &str, seq: u64, state: JobState) -> JobRecord {
+        JobRecord {
+            id: id.to_string(),
+            seq,
+            spec: spec(),
+            state,
+            plan_bytes: 123_456,
+            cache_key: "deadbeef".into(),
+            cancel_requested: false,
+            error: None,
+            outcome: Some(JobOutcome {
+                rel_error: 1e-3,
+                sampled_mse: 1e-6,
+                dropped_replicas: 1,
+                model_digest: 0xfeed_beef_dead_cafe,
+                from_cache: false,
+            }),
+        }
+    }
+
+    #[test]
+    fn record_json_round_trip() {
+        let rec = record("job-000007", 7, JobState::Running);
+        let v = Json::parse(&rec.to_json().to_string_pretty()).unwrap();
+        let back = JobRecord::from_json(&v).unwrap();
+        assert_eq!(back.id, rec.id);
+        assert_eq!(back.seq, rec.seq);
+        assert_eq!(back.state, JobState::Running);
+        assert_eq!(back.plan_bytes, rec.plan_bytes);
+        assert_eq!(back.cache_key, rec.cache_key);
+        assert!(!back.cancel_requested, "defaults false");
+        let mut flagged = rec.clone();
+        flagged.cancel_requested = true;
+        let back = JobRecord::from_json(&flagged.to_json()).unwrap();
+        assert!(back.cancel_requested, "cancel flag survives the round trip");
+        assert_eq!(back.outcome, rec.outcome);
+        assert_eq!(back.spec.priority, 3);
+        assert_eq!(back.spec.source, rec.spec.source);
+        assert_eq!(back.spec.config.reduced, [8, 8, 8]);
+    }
+
+    #[test]
+    fn file_source_round_trip_and_state_strings() {
+        let s = JobSource::File { path: "/tmp/x.ext1".into() };
+        assert_eq!(JobSource::from_json(&s.to_json()).unwrap(), s);
+        for st in [
+            JobState::Submitted,
+            JobState::Queued,
+            JobState::Running,
+            JobState::Done,
+            JobState::Failed,
+            JobState::Cancelled,
+        ] {
+            assert_eq!(JobState::parse(st.as_str()).unwrap(), st);
+            assert_eq!(
+                st.is_terminal(),
+                matches!(st, JobState::Done | JobState::Failed | JobState::Cancelled)
+            );
+        }
+        assert!(JobState::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn spool_persists_and_recovers_sorted() {
+        let dir = tmpdir("persist");
+        let spool = Spool::open(&dir).unwrap();
+        spool.save(&record("job-000002", 2, JobState::Queued)).unwrap();
+        spool.save(&record("job-000001", 1, JobState::Done)).unwrap();
+        // Overwrite in place: the newer state wins.
+        spool.save(&record("job-000002", 2, JobState::Running)).unwrap();
+        // A corrupt record is skipped, not fatal.
+        std::fs::write(dir.join("jobs").join("junk.json"), "{nope").unwrap();
+        let all = spool.load_all().unwrap();
+        assert_eq!(all.len(), 2);
+        assert_eq!(all[0].id, "job-000001");
+        assert_eq!(all[1].state, JobState::Running);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn synthetic_source_dims_and_open() {
+        let s = JobSource::Synthetic { size: 12, rank: 2, noise: 0.0, seed: 3 };
+        assert_eq!(s.dims().unwrap(), [12, 12, 12]);
+        assert_eq!(s.open().unwrap().dims(), [12, 12, 12]);
+        let missing = JobSource::File { path: "/nonexistent/x.ext1".into() };
+        assert!(missing.dims().is_err());
+    }
+}

@@ -1,0 +1,31 @@
+//! `serve/` — the multi-tenant decomposition service (PR 4).
+//!
+//! Turns the one-shot [`Pipeline`](crate::coordinator::Pipeline) into a
+//! long-lived daemon: tenants `SUBMIT` jobs over a line-delimited JSON TCP
+//! protocol, a scheduler admits as many as fit a global memory budget
+//! (priced per job by [`MemoryPlanner`](crate::coordinator::MemoryPlanner)),
+//! repeated inputs are served from an LRU result cache keyed by tensor
+//! fingerprint, and every job record is spooled so a killed daemon
+//! recovers its queue — running jobs resume mid-compression from their
+//! incremental checkpoints, bitwise-identically.
+//!
+//! Module map:
+//!
+//! * [`job`]       — job model + lifecycle + the crash-safe JSON spool.
+//! * [`scheduler`] — priority/FIFO queue, admission control, worker pool.
+//! * [`cache`]     — tensor fingerprinting + LRU byte-budget result cache.
+//! * [`protocol`]  — the wire format (`SUBMIT`/`STATUS`/`RESULT`/`CANCEL`/
+//!   `METRICS`/`SHUTDOWN`) and the one-shot client.
+//! * [`server`]    — the TCP accept loop + graceful drain.
+
+pub mod cache;
+pub mod job;
+pub mod protocol;
+pub mod scheduler;
+pub mod server;
+
+pub use cache::{cache_key, file_fingerprint, model_digest, CachedResult, ResultCache};
+pub use job::{JobId, JobOutcome, JobRecord, JobSource, JobSpec, JobState, Spool};
+pub use protocol::Request;
+pub use scheduler::{Scheduler, SchedulerConfig};
+pub use server::{Server, ServerConfig};

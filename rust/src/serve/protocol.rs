@@ -1,0 +1,206 @@
+//! Wire protocol: newline-delimited JSON over TCP, dependency-free.
+//!
+//! One request per line, one response per line; a connection may carry any
+//! number of request/response pairs.  Requests are objects with a `cmd`
+//! field (`SUBMIT`, `STATUS`, `RESULT`, `CANCEL`, `METRICS`, `SHUTDOWN`);
+//! responses always carry `"ok": true|false` and, on failure, `"error"`.
+//!
+//! ```text
+//! → {"cmd":"SUBMIT","spec":{"source":{...},"config":{...},"priority":0}}
+//! ← {"ok":true,"job":{"id":"job-000001","state":"queued",...}}
+//! → {"cmd":"METRICS"}
+//! ← {"ok":true,"metrics":{"jobs_queued":1,"jobs_running":1,...}}
+//! ```
+
+use super::job::{JobId, JobSpec};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+
+/// A parsed client request.
+#[derive(Debug)]
+pub enum Request {
+    Submit(JobSpec),
+    Status(JobId),
+    Result(JobId),
+    Cancel(JobId),
+    Metrics,
+    Shutdown,
+}
+
+impl Request {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Request::Submit(spec) => Json::obj(vec![
+                ("cmd", Json::str("SUBMIT")),
+                ("spec", spec.to_json()),
+            ]),
+            Request::Status(id) => {
+                Json::obj(vec![("cmd", Json::str("STATUS")), ("id", Json::str(id.clone()))])
+            }
+            Request::Result(id) => {
+                Json::obj(vec![("cmd", Json::str("RESULT")), ("id", Json::str(id.clone()))])
+            }
+            Request::Cancel(id) => {
+                Json::obj(vec![("cmd", Json::str("CANCEL")), ("id", Json::str(id.clone()))])
+            }
+            Request::Metrics => Json::obj(vec![("cmd", Json::str("METRICS"))]),
+            Request::Shutdown => Json::obj(vec![("cmd", Json::str("SHUTDOWN"))]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<Request> {
+        let id = || -> Result<JobId> {
+            Ok(v.get("id")
+                .and_then(|x| x.as_str())
+                .context("request missing id")?
+                .to_string())
+        };
+        match v.get("cmd").and_then(|x| x.as_str()) {
+            Some("SUBMIT") => Ok(Request::Submit(JobSpec::from_json(
+                v.get("spec").context("SUBMIT missing spec")?,
+            )?)),
+            Some("STATUS") => Ok(Request::Status(id()?)),
+            Some("RESULT") => Ok(Request::Result(id()?)),
+            Some("CANCEL") => Ok(Request::Cancel(id()?)),
+            Some("METRICS") => Ok(Request::Metrics),
+            Some("SHUTDOWN") => Ok(Request::Shutdown),
+            other => bail!("unknown cmd {other:?}"),
+        }
+    }
+}
+
+/// `{"ok":true, ...fields}`.
+pub fn ok(fields: Vec<(&str, Json)>) -> Json {
+    let mut pairs = vec![("ok", Json::Bool(true))];
+    pairs.extend(fields);
+    Json::obj(pairs)
+}
+
+/// `{"ok":false,"error":msg}`.
+pub fn err(msg: impl std::fmt::Display) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::str(msg.to_string())),
+    ])
+}
+
+/// Writes one message line (compact JSON + `\n`) and flushes.
+pub fn write_line(w: &mut impl Write, v: &Json) -> std::io::Result<()> {
+    w.write_all(v.to_string_compact().as_bytes())?;
+    w.write_all(b"\n")?;
+    w.flush()
+}
+
+/// Largest accepted message line.  A multi-tenant daemon must not let one
+/// connection grow an unbounded `String`: a peer streaming bytes with no
+/// newline is cut off here instead of OOMing everyone else's jobs.
+pub const MAX_LINE_BYTES: u64 = 4 << 20;
+
+/// Reads the next non-blank message line (blank lines are tolerated as
+/// keep-alives and skipped); `Ok(None)` on clean EOF.  Lines longer than
+/// [`MAX_LINE_BYTES`] are an error.
+pub fn read_line_json(r: &mut impl BufRead) -> Result<Option<Json>> {
+    loop {
+        let mut line = String::new();
+        let n = r
+            .by_ref()
+            .take(MAX_LINE_BYTES)
+            .read_line(&mut line)
+            .context("reading message line")?;
+        if n == 0 {
+            return Ok(None);
+        }
+        if n as u64 >= MAX_LINE_BYTES && !line.ends_with('\n') {
+            bail!("message line exceeds {MAX_LINE_BYTES} bytes");
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        return Ok(Some(Json::parse(trimmed).context("parsing message")?));
+    }
+}
+
+/// One-shot client call: connect, send, read the single response.
+pub fn call(addr: &str, req: &Request) -> Result<Json> {
+    let stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    let mut w = stream.try_clone().context("cloning stream")?;
+    write_line(&mut w, &req.to_json()).context("sending request")?;
+    let mut r = BufReader::new(stream);
+    read_line_json(&mut r)?.context("server closed the connection without replying")
+}
+
+/// `call` + ok-check: returns the response object or the server's error.
+pub fn call_ok(addr: &str, req: &Request) -> Result<Json> {
+    let resp = call(addr, req)?;
+    if resp.get("ok").and_then(|x| x.as_bool()) != Some(true) {
+        bail!(
+            "server error: {}",
+            resp.get("error").and_then(|x| x.as_str()).unwrap_or("unknown")
+        );
+    }
+    Ok(resp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::PipelineConfig;
+    use crate::serve::job::JobSource;
+
+    #[test]
+    fn request_round_trips() {
+        let spec = JobSpec {
+            source: JobSource::Synthetic { size: 16, rank: 2, noise: 0.0, seed: 1 },
+            config: PipelineConfig::builder()
+                .reduced_dims(8, 8, 8)
+                .rank(2)
+                .anchor_rows(4)
+                .build()
+                .unwrap(),
+            priority: 1,
+        };
+        for req in [
+            Request::Submit(spec),
+            Request::Status("job-000001".into()),
+            Request::Result("job-000002".into()),
+            Request::Cancel("job-000003".into()),
+            Request::Metrics,
+            Request::Shutdown,
+        ] {
+            let v = Json::parse(&req.to_json().to_string_compact()).unwrap();
+            let back = Request::from_json(&v).unwrap();
+            assert_eq!(
+                back.to_json().to_string_compact(),
+                req.to_json().to_string_compact()
+            );
+        }
+        assert!(Request::from_json(&Json::parse(r#"{"cmd":"NOPE"}"#).unwrap()).is_err());
+        assert!(Request::from_json(&Json::parse(r#"{"cmd":"STATUS"}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn oversized_line_rejected_not_buffered() {
+        let big = vec![b'x'; MAX_LINE_BYTES as usize + 16];
+        let mut r = std::io::BufReader::new(&big[..]);
+        assert!(read_line_json(&mut r).is_err(), "no-newline flood must error");
+    }
+
+    #[test]
+    fn line_io_round_trips_and_eof_is_none() {
+        let msg = ok(vec![("x", Json::num(1.0))]);
+        let mut buf = Vec::new();
+        write_line(&mut buf, &msg).unwrap();
+        buf.extend_from_slice(b"\n  \n"); // stray keep-alive blanks
+        write_line(&mut buf, &err("boom")).unwrap();
+        let mut r = std::io::BufReader::new(&buf[..]);
+        let a = read_line_json(&mut r).unwrap().unwrap();
+        assert_eq!(a.get("ok").unwrap(), &Json::Bool(true));
+        let b = read_line_json(&mut r).unwrap().unwrap();
+        assert_eq!(b.get("error").and_then(|x| x.as_str()), Some("boom"));
+        assert!(read_line_json(&mut r).unwrap().is_none(), "EOF → None");
+    }
+}

@@ -1,0 +1,749 @@
+//! Priority/FIFO job scheduler with **memory-budget admission control**.
+//!
+//! Every submitted job is priced up front by
+//! [`MemoryPlanner`](crate::coordinator::MemoryPlanner): the resolved
+//! plan's `estimated_bytes` (which, since PR 4, includes the replica maps
+//! — the exascale-dominant term) is the job's admission cost.  Workers
+//! admit jobs in priority-then-FIFO order, **backfilling** past any job
+//! that does not currently fit the global budget: small jobs run alongside
+//! one big out-of-core job instead of head-of-line blocking behind it.
+//! Backfill can delay a large job while smaller ones keep arriving; the
+//! trade-off is deliberate (documented in the ROADMAP) and deferrals are
+//! observable: `admission_rejected_bytes` counts each job's bytes once at
+//! its first deferral, and the `admission_deferred_bytes` gauge carries
+//! the bytes currently blocked ahead of the last admission.
+//!
+//! Jobs run on a bounded pool of worker threads (one job per worker; the
+//! pipeline's own `threads` knob governs intra-job parallelism).  Each
+//! running job writes the pipeline's incremental checkpoints under its
+//! spool directory, so a killed daemon requeues `running` jobs on restart
+//! and they resume mid-compression bitwise-identically.
+//!
+//! Shutdown is a graceful drain: no new admissions, running jobs complete,
+//! queued jobs stay spooled for the next start.
+
+use super::cache::{cache_key, model_digest, CachedResult, ResultCache};
+use super::job::{JobId, JobOutcome, JobRecord, JobSpec, JobState, Spool};
+use crate::coordinator::{checkpoint, MemoryPlanner, Metrics, Pipeline};
+use crate::cp::CpModel;
+use anyhow::{bail, Context, Result};
+use std::collections::{BTreeMap, BTreeSet};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Scheduler construction knobs.
+#[derive(Clone, Debug)]
+pub struct SchedulerConfig {
+    /// Global admission budget in bytes (0 = unlimited: admit up to the
+    /// worker count).  Per-job planner budgets are clamped to this, so a
+    /// job either resolves a plan that fits or fails at submission.
+    pub memory_budget: usize,
+    /// Concurrent jobs (worker threads).
+    pub workers: usize,
+    /// Result-cache byte budget.
+    pub cache_bytes: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        Self {
+            memory_budget: 0,
+            workers: 2,
+            cache_bytes: 64 << 20,
+        }
+    }
+}
+
+struct State {
+    records: BTreeMap<JobId, JobRecord>,
+    /// Queued ids, sorted (priority desc, seq asc).
+    queue: Vec<JobId>,
+    /// Running ids → admission bytes.
+    running: BTreeMap<JobId, usize>,
+    used_bytes: usize,
+    used_bytes_peak: usize,
+    running_peak: usize,
+    cancel_requested: BTreeSet<JobId>,
+    /// Queued jobs whose bytes were already counted into the monotone
+    /// `admission_rejected_bytes` counter (count once per deferral, not
+    /// once per worker wakeup).
+    deferred_seen: BTreeSet<JobId>,
+    next_seq: u64,
+    shutting_down: bool,
+}
+
+struct Inner {
+    spool: Spool,
+    cache: ResultCache,
+    metrics: Arc<Metrics>,
+    budget: usize,
+    state: Mutex<State>,
+    cv: Condvar,
+}
+
+/// The multi-tenant job scheduler.  All methods are `&self`; clone the
+/// wrapping `Arc` to share it with the server's connection handlers.
+pub struct Scheduler {
+    inner: Arc<Inner>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Scheduler {
+    /// Opens the spool, recovers persisted jobs (crashed `running` jobs are
+    /// requeued and will resume from their checkpoints), and starts the
+    /// worker pool.
+    pub fn new(spool: Spool, cfg: SchedulerConfig, metrics: Arc<Metrics>) -> Result<Scheduler> {
+        let recovered = spool.load_all()?;
+        let mut state = State {
+            records: BTreeMap::new(),
+            queue: Vec::new(),
+            running: BTreeMap::new(),
+            used_bytes: 0,
+            used_bytes_peak: 0,
+            running_peak: 0,
+            cancel_requested: BTreeSet::new(),
+            deferred_seen: BTreeSet::new(),
+            next_seq: 1,
+            shutting_down: false,
+        };
+        let (mut requeued, mut resumable) = (0u64, 0u64);
+        for mut rec in recovered {
+            state.next_seq = state.next_seq.max(rec.seq + 1);
+            match rec.state {
+                JobState::Running | JobState::Submitted | JobState::Queued
+                    if rec.cancel_requested =>
+                {
+                    // An acknowledged cancellation must survive the crash:
+                    // honor it instead of requeueing.
+                    rec.state = JobState::Cancelled;
+                    spool.save(&rec)?;
+                    checkpoint::clear(spool.checkpoint_dir(&rec.id)).ok();
+                }
+                JobState::Running | JobState::Submitted | JobState::Queued => {
+                    if checkpoint::partial_exists(spool.checkpoint_dir(&rec.id)) {
+                        resumable += 1;
+                    }
+                    if rec.state != JobState::Queued {
+                        rec.state = JobState::Queued;
+                        spool.save(&rec)?;
+                    }
+                    requeued += 1;
+                    state.queue.push(rec.id.clone());
+                }
+                _ => {} // terminal states are kept for STATUS/RESULT only
+            }
+            state.records.insert(rec.id.clone(), rec);
+        }
+        sort_queue(&mut state.queue, &state.records);
+        metrics.set("jobs_recovered", requeued);
+        metrics.set("jobs_resumable", resumable);
+        let inner = Arc::new(Inner {
+            spool,
+            cache: ResultCache::new(cfg.cache_bytes),
+            metrics,
+            budget: cfg.memory_budget,
+            state: Mutex::new(state),
+            cv: Condvar::new(),
+        });
+        {
+            let st = inner.state.lock().unwrap();
+            inner.sync_gauges(&st);
+        }
+        let workers = (0..cfg.workers.max(1))
+            .map(|w| {
+                let inner = Arc::clone(&inner);
+                std::thread::Builder::new()
+                    .name(format!("serve-worker-{w}"))
+                    .spawn(move || worker_loop(inner))
+                    .expect("spawning scheduler worker")
+            })
+            .collect();
+        Ok(Scheduler {
+            inner,
+            workers: Mutex::new(workers),
+        })
+    }
+
+    /// Submits a job: prices it with the planner, checks the result cache
+    /// (a hit completes the job instantly), otherwise enqueues it.
+    /// Errors (unreadable input file, infeasible plan) reach the submitter
+    /// directly — no job record is created.
+    pub fn submit(&self, spec: JobSpec) -> Result<JobRecord> {
+        let key = cache_key(&spec)?;
+        let dims = spec.source.dims()?;
+        let mut cfg = spec.config.clone();
+        // The daemon's global budget caps every per-job plan: a job either
+        // resolves (possibly out-of-core) under it or is rejected here,
+        // so one admitted job can never exceed the whole budget.
+        if self.inner.budget > 0
+            && (cfg.memory_budget == 0 || cfg.memory_budget > self.inner.budget)
+        {
+            cfg.memory_budget = self.inner.budget;
+        }
+        // Price with checkpointing on (every daemon job checkpoints): the
+        // planner counts the incremental-snapshot sets only when a
+        // checkpoint dir is present, and the real path is assigned below
+        // once the id exists — only `is_some` affects the estimate.
+        cfg.checkpoint_dir = Some(self.inner.spool.checkpoint_dir("pending"));
+        let plan = MemoryPlanner::plan(&cfg, dims)
+            .context("admission: resolving the job's memory plan")?;
+
+        // Phase 1 (locked): allocate the id and publish the record in
+        // `submitted` state — visible to STATUS, not yet runnable.
+        let mut rec = {
+            let mut st = self.inner.state.lock().unwrap();
+            if st.shutting_down {
+                bail!("daemon is shutting down, not accepting jobs");
+            }
+            let seq = st.next_seq;
+            st.next_seq += 1;
+            let id = format!("job-{seq:06}");
+            cfg.checkpoint_dir = Some(self.inner.spool.checkpoint_dir(&id));
+            let rec = JobRecord {
+                id: id.clone(),
+                seq,
+                spec: JobSpec {
+                    source: spec.source,
+                    config: cfg,
+                    priority: spec.priority,
+                },
+                state: JobState::Submitted,
+                plan_bytes: plan.estimated_bytes,
+                cache_key: key,
+                cancel_requested: false,
+                error: None,
+                outcome: None,
+            };
+            st.records.insert(id, rec.clone());
+            rec
+        };
+
+        // Cache fast path: completes instantly, no queue involvement.
+        let mut hit_model = None;
+        if let Some(hit) = self.inner.cache.get(&rec.cache_key) {
+            rec.state = JobState::Done;
+            rec.outcome = Some(JobOutcome {
+                rel_error: hit.rel_error,
+                sampled_mse: hit.sampled_mse,
+                dropped_replicas: hit.dropped_replicas,
+                model_digest: hit.model_digest,
+                from_cache: true,
+            });
+            hit_model = Some(hit.model);
+        } else {
+            rec.state = JobState::Queued;
+        }
+
+        // Phase 2 (off-lock): persist before the job becomes runnable — a
+        // job a crash would silently lose must not exist, and spool disk
+        // writes must not stall protocol reads or worker admissions.
+        if let Err(e) = self.inner.spool.save(&rec) {
+            let mut st = self.inner.state.lock().unwrap();
+            st.records.remove(&rec.id);
+            self.inner.sync_gauges(&st);
+            return Err(e);
+        }
+
+        // Phase 3 (locked): make it runnable (or terminal for a cache
+        // hit) — unless a racing CANCEL transitioned it meanwhile.
+        let rec_out = {
+            let mut guard = self.inner.state.lock().unwrap();
+            let st = &mut *guard;
+            let current = match st.records.get(&rec.id) {
+                Some(r) => r.state,
+                None => bail!("job {} vanished during submission", rec.id),
+            };
+            if current == JobState::Submitted {
+                {
+                    let r = st.records.get_mut(&rec.id).unwrap();
+                    r.state = rec.state;
+                    r.outcome = rec.outcome.clone();
+                }
+                let out = st.records[&rec.id].clone();
+                if out.state == JobState::Queued {
+                    st.queue.push(out.id.clone());
+                    sort_queue(&mut st.queue, &st.records);
+                } else {
+                    self.inner.metrics.incr("jobs_done", 1);
+                }
+                self.inner.sync_gauges(st);
+                out
+            } else {
+                // A racing CANCEL transitioned it while we persisted; its
+                // spool write may have been overwritten by phase 2 —
+                // restore the current truth on disk.
+                let out = st.records[&rec.id].clone();
+                self.inner.sync_gauges(st);
+                drop(guard);
+                if let Err(e) = self.inner.spool.save(&out) {
+                    log::warn!("spool: restoring {}: {e:#}", out.id);
+                }
+                return Ok(out);
+            }
+        };
+        self.inner.cv.notify_all();
+        // Cache-hit jobs still get their factor files (RESULT promises
+        // them for every done job); written off-lock, it's small.
+        if let Some(model) = hit_model {
+            if let Err(e) = save_model(&self.inner.spool.result_dir(&rec_out.id), &model) {
+                log::warn!("persisting cached factors for {}: {e:#}", rec_out.id);
+            }
+        }
+        Ok(rec_out)
+    }
+
+    pub fn status(&self, id: &str) -> Option<JobRecord> {
+        self.inner.state.lock().unwrap().records.get(id).cloned()
+    }
+
+    /// All records, submission order.
+    pub fn jobs(&self) -> Vec<JobRecord> {
+        let st = self.inner.state.lock().unwrap();
+        let mut v: Vec<JobRecord> = st.records.values().cloned().collect();
+        v.sort_by_key(|r| r.seq);
+        v
+    }
+
+    /// Cancels a job.  Queued jobs cancel immediately; running jobs are
+    /// flagged and transition to `cancelled` when their pipeline pass
+    /// finishes (the streaming stages have no preemption point that would
+    /// preserve checkpoint consistency).  Terminal jobs are left as-is.
+    pub fn cancel(&self, id: &str) -> Result<JobRecord> {
+        let mut st = self.inner.state.lock().unwrap();
+        let rec = st.records.get(id).context("no such job")?.clone();
+        match rec.state {
+            JobState::Submitted | JobState::Queued => {
+                st.queue.retain(|q| q.as_str() != id);
+                st.deferred_seen.remove(id);
+                let snapshot = {
+                    let r = st.records.get_mut(id).unwrap();
+                    r.state = JobState::Cancelled;
+                    r.clone()
+                };
+                self.inner.metrics.incr("jobs_cancelled", 1);
+                self.inner.sync_gauges(&st);
+                drop(st);
+                if let Err(e) = self.inner.spool.save(&snapshot) {
+                    log::warn!("spool: persisting cancel for {id}: {e:#}");
+                }
+                Ok(snapshot)
+            }
+            JobState::Running => {
+                st.cancel_requested.insert(id.to_string());
+                // Persist the flag so the acknowledged cancellation
+                // survives a daemon crash mid-run (saved off-lock).
+                let snapshot = {
+                    let r = st.records.get_mut(id).unwrap();
+                    r.cancel_requested = true;
+                    r.clone()
+                };
+                drop(st);
+                if let Err(e) = self.inner.spool.save(&snapshot) {
+                    log::warn!("spool: persisting cancel flag for {id}: {e:#}");
+                }
+                Ok(snapshot)
+            }
+            _ => Ok(rec),
+        }
+    }
+
+    /// Begins the graceful drain: stop admitting, let running jobs finish.
+    pub fn shutdown(&self) {
+        let mut st = self.inner.state.lock().unwrap();
+        st.shutting_down = true;
+        drop(st);
+        self.inner.cv.notify_all();
+    }
+
+    /// Waits for every worker to exit (call after [`Scheduler::shutdown`]).
+    pub fn join(&self) {
+        let handles: Vec<_> = self.workers.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.inner.state.lock().unwrap().queue.len()
+    }
+
+    pub fn running_count(&self) -> usize {
+        self.inner.state.lock().unwrap().running.len()
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.inner.metrics
+    }
+
+    /// Where a finished job's factor files land in the spool.
+    pub fn result_dir(&self, id: &str) -> std::path::PathBuf {
+        self.inner.spool.result_dir(id)
+    }
+
+    /// Blocks until `id` reaches a terminal state (test/CLI convenience);
+    /// errors after `timeout`.
+    pub fn wait(&self, id: &str, timeout: std::time::Duration) -> Result<JobRecord> {
+        let start = Instant::now();
+        loop {
+            match self.status(id) {
+                Some(rec) if rec.state.is_terminal() => return Ok(rec),
+                Some(_) => {}
+                None => bail!("no such job {id}"),
+            }
+            if start.elapsed() > timeout {
+                bail!("timed out waiting for {id}");
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+    }
+}
+
+/// Priority desc, then FIFO by sequence.
+fn sort_queue(queue: &mut [JobId], records: &BTreeMap<JobId, JobRecord>) {
+    queue.sort_by_key(|id| {
+        let r = &records[id];
+        (std::cmp::Reverse(r.spec.priority), r.seq)
+    });
+}
+
+fn worker_loop(inner: Arc<Inner>) {
+    loop {
+        let (id, snapshot) = {
+            let mut st = inner.state.lock().unwrap();
+            loop {
+                if st.shutting_down {
+                    return;
+                }
+                if let Some(picked) = inner.pick_admissible(&mut st) {
+                    break picked;
+                }
+                st = inner.cv.wait(st).unwrap();
+            }
+        };
+        // Persist the queued→running transition off the state lock (the
+        // in-memory record is authoritative; spool writes must not stall
+        // protocol reads or peer admissions).
+        if let Err(e) = inner.spool.save(&snapshot) {
+            log::warn!("spool: persisting {id} running: {e:#}");
+        }
+        inner.run_job(&id);
+        // A completion frees budget: wake peers blocked on admission.
+        inner.cv.notify_all();
+    }
+}
+
+impl Inner {
+    /// First queued job that fits the remaining budget, in priority/FIFO
+    /// order.  Jobs scanned past are deferred, not rejected: each job's
+    /// bytes feed the monotone `admission_rejected_bytes` counter once (at
+    /// its first deferral), and the bytes currently blocked ahead of the
+    /// admitted job are exported as the `admission_deferred_bytes` gauge —
+    /// so queueing under memory pressure is observable via `METRICS`
+    /// without the magnitude depending on worker wakeup frequency.
+    /// Returns the picked id plus a record snapshot for the caller to
+    /// persist off-lock.
+    fn pick_admissible(&self, st: &mut State) -> Option<(JobId, JobRecord)> {
+        let mut chosen = None;
+        let mut deferred_bytes = 0u64;
+        for (pos, id) in st.queue.iter().enumerate() {
+            let pb = st.records[id].plan_bytes;
+            if self.budget == 0 || st.used_bytes + pb <= self.budget {
+                chosen = Some(pos);
+                break;
+            }
+            deferred_bytes += pb as u64;
+            if st.deferred_seen.insert(id.clone()) {
+                self.metrics.incr("admission_rejected_bytes", pb as u64);
+            }
+        }
+        self.metrics.set("admission_deferred_bytes", deferred_bytes);
+        let pos = chosen?;
+        let id = st.queue.remove(pos);
+        st.deferred_seen.remove(&id);
+        let pb = st.records[&id].plan_bytes;
+        st.used_bytes += pb;
+        st.used_bytes_peak = st.used_bytes_peak.max(st.used_bytes);
+        st.running.insert(id.clone(), pb);
+        st.running_peak = st.running_peak.max(st.running.len());
+        let rec = st.records.get_mut(&id).unwrap();
+        rec.state = JobState::Running;
+        let snapshot = rec.clone();
+        self.sync_gauges(st);
+        Some((id, snapshot))
+    }
+
+    fn run_job(&self, id: &str) {
+        let (rec, cancelled) = {
+            let st = self.state.lock().unwrap();
+            (
+                st.records.get(id).cloned().expect("running job has a record"),
+                st.cancel_requested.contains(id),
+            )
+        };
+        if cancelled {
+            self.finalize(id, JobState::Cancelled, None, None);
+            return;
+        }
+        // A twin job may have finished while this one sat queued.
+        if let Some(hit) = self.cache.get(&rec.cache_key) {
+            let outcome = JobOutcome {
+                rel_error: hit.rel_error,
+                sampled_mse: hit.sampled_mse,
+                dropped_replicas: hit.dropped_replicas,
+                model_digest: hit.model_digest,
+                from_cache: true,
+            };
+            if let Err(e) = save_model(&self.spool.result_dir(id), &hit.model) {
+                log::warn!("persisting cached factors for {id}: {e:#}");
+            }
+            self.finalize(id, JobState::Done, Some(outcome), None);
+            return;
+        }
+
+        let started = Instant::now();
+        let run = catch_unwind(AssertUnwindSafe(|| -> Result<(CpModel, JobOutcome)> {
+            let src = rec.spec.source.open()?;
+            let mut pipe = Pipeline::new(rec.spec.config.clone());
+            let res = pipe.run(src.as_ref())?;
+            // Fold the per-job pipeline counters into the daemon registry
+            // (aggregate traffic: blocks_streamed, checkpoint resumes, …).
+            // Gauge-style values must not be summed — last run wins.
+            for (k, v) in pipe.metrics.snapshot() {
+                if k == "compress_prefetch_depth" {
+                    self.metrics.set(&k, v);
+                } else {
+                    self.metrics.incr(&k, v);
+                }
+            }
+            let digest = model_digest(&res.model);
+            Ok((
+                res.model,
+                JobOutcome {
+                    rel_error: res.diagnostics.rel_error,
+                    sampled_mse: res.diagnostics.sampled_mse,
+                    dropped_replicas: res.diagnostics.dropped_replicas,
+                    model_digest: digest,
+                    from_cache: false,
+                },
+            ))
+        }));
+        self.metrics.record("job_run", started.elapsed().as_secs_f64());
+        let run = match run {
+            Ok(r) => r,
+            Err(_) => Err(anyhow::anyhow!("job panicked (see daemon log)")),
+        };
+        match run {
+            Ok((model, outcome)) => {
+                let cancelled = {
+                    let st = self.state.lock().unwrap();
+                    st.cancel_requested.contains(id)
+                };
+                if cancelled {
+                    checkpoint::clear(self.spool.checkpoint_dir(id)).ok();
+                    self.finalize(id, JobState::Cancelled, None, None);
+                    return;
+                }
+                if let Err(e) = save_model(&self.spool.result_dir(id), &model) {
+                    log::warn!("persisting result factors for {id}: {e:#}");
+                }
+                self.cache.insert(
+                    rec.cache_key.clone(),
+                    CachedResult {
+                        model: Arc::new(model),
+                        rel_error: outcome.rel_error,
+                        sampled_mse: outcome.sampled_mse,
+                        dropped_replicas: outcome.dropped_replicas,
+                        model_digest: outcome.model_digest,
+                    },
+                );
+                // The job is complete: its pipeline checkpoints are dead
+                // weight (the spooled factors are the durable artifact).
+                checkpoint::clear(self.spool.checkpoint_dir(id)).ok();
+                self.finalize(id, JobState::Done, Some(outcome), None);
+            }
+            Err(e) => {
+                self.finalize(id, JobState::Failed, None, Some(format!("{e:#}")));
+            }
+        }
+    }
+
+    fn finalize(
+        &self,
+        id: &str,
+        state: JobState,
+        outcome: Option<JobOutcome>,
+        error: Option<String>,
+    ) {
+        let snapshot = {
+            let mut st = self.state.lock().unwrap();
+            if let Some(pb) = st.running.remove(id) {
+                st.used_bytes -= pb;
+            }
+            st.cancel_requested.remove(id);
+            let snap = st.records.get_mut(id).map(|rec| {
+                rec.state = state;
+                rec.outcome = outcome;
+                rec.error = error;
+                rec.clone()
+            });
+            let counter = match state {
+                JobState::Done => "jobs_done",
+                JobState::Failed => "jobs_failed",
+                _ => "jobs_cancelled",
+            };
+            self.metrics.incr(counter, 1);
+            self.sync_gauges(&st);
+            snap
+        };
+        // Off-lock persistence: the in-memory record is authoritative.  A
+        // crash between the transition and this write re-runs the job on
+        // restart — idempotent, and usually a cache hit.
+        if let Some(rec) = snapshot {
+            if let Err(e) = self.spool.save(&rec) {
+                log::warn!("spool: persisting {id} {}: {e:#}", state.as_str());
+            }
+        }
+    }
+
+    /// Mirrors queue/running/cache state into the metrics registry — the
+    /// single source the `METRICS` verb snapshots.
+    fn sync_gauges(&self, st: &State) {
+        self.metrics.set("jobs_queued", st.queue.len() as u64);
+        self.metrics.set("jobs_running", st.running.len() as u64);
+        self.metrics.set("jobs_running_peak", st.running_peak as u64);
+        self.metrics.set("admission_used_bytes", st.used_bytes as u64);
+        self.metrics
+            .set("admission_used_bytes_peak", st.used_bytes_peak as u64);
+        let cs = self.cache.stats();
+        self.metrics.set("cache_hits", cs.hits);
+        self.metrics.set("cache_misses", cs.misses);
+        self.metrics.set("cache_evictions", cs.evictions);
+        self.metrics.set("cache_bytes", cs.used_bytes as u64);
+        self.metrics.set("cache_entries", cs.entries as u64);
+    }
+}
+
+/// Persists the factor matrices as EXT1 files under `dir`.
+fn save_model(dir: &std::path::Path, model: &CpModel) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    crate::tensor::io::save_matrix(&model.a, dir.join("a.ext1"))?;
+    crate::tensor::io::save_matrix(&model.b, dir.join("b.ext1"))?;
+    crate::tensor::io::save_matrix(&model.c, dir.join("c.ext1"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::PipelineConfig;
+    use crate::serve::job::JobSource;
+    use std::time::Duration;
+
+    fn tmpdir(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("exatensor_sched_{name}_{}", std::process::id()));
+        std::fs::remove_dir_all(&p).ok();
+        p
+    }
+
+    fn small_spec(seed: u64, priority: i64) -> JobSpec {
+        JobSpec {
+            source: JobSource::Synthetic { size: 24, rank: 2, noise: 0.0, seed },
+            config: PipelineConfig::builder()
+                .reduced_dims(8, 8, 8)
+                .rank(2)
+                .anchor_rows(4)
+                .block([8, 8, 8])
+                .als(120, 1e-10)
+                .threads(2)
+                .seed(seed)
+                .build()
+                .unwrap(),
+            priority,
+        }
+    }
+
+    fn sched(dir: &std::path::Path, cfg: SchedulerConfig) -> Scheduler {
+        Scheduler::new(Spool::open(dir).unwrap(), cfg, Arc::new(Metrics::new())).unwrap()
+    }
+
+    #[test]
+    fn submit_runs_to_done_and_repeat_hits_cache() {
+        let dir = tmpdir("basic");
+        let s = sched(&dir, SchedulerConfig { workers: 1, ..Default::default() });
+        let rec = s.submit(small_spec(11, 0)).unwrap();
+        assert_eq!(rec.state, JobState::Queued);
+        assert!(rec.plan_bytes > 0, "planner must price the job");
+        let done = s.wait(&rec.id, Duration::from_secs(120)).unwrap();
+        assert_eq!(done.state, JobState::Done, "err: {:?}", done.error);
+        let o1 = done.outcome.unwrap();
+        assert!(!o1.from_cache);
+        assert!(o1.rel_error < 0.05, "rel {}", o1.rel_error);
+        // Identical resubmission: served from cache at submit time, same
+        // digest, no second pipeline run.
+        let rec2 = s.submit(small_spec(11, 0)).unwrap();
+        assert_eq!(rec2.state, JobState::Done);
+        let o2 = rec2.outcome.unwrap();
+        assert!(o2.from_cache);
+        assert_eq!(o2.model_digest, o1.model_digest);
+        assert_eq!(s.metrics().counter("cache_hits"), 1);
+        // Result factors persisted for the real run.
+        assert!(dir.join("results").join(&rec.id).join("a.ext1").exists());
+        s.shutdown();
+        s.join();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn failed_source_reaches_submitter_not_a_record() {
+        let dir = tmpdir("badsubmit");
+        let s = sched(&dir, SchedulerConfig::default());
+        let spec = JobSpec {
+            source: JobSource::File { path: "/nonexistent/t.ext1".into() },
+            ..small_spec(1, 0)
+        };
+        assert!(s.submit(spec).is_err());
+        assert_eq!(s.jobs().len(), 0);
+        s.shutdown();
+        s.join();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn queued_job_cancels_immediately() {
+        let dir = tmpdir("cancel");
+        // Zero workers is clamped to 1, so block admission with a
+        // ridiculous budget floor instead: budget smaller than any plan
+        // keeps everything queued.
+        let s = sched(
+            &dir,
+            SchedulerConfig { memory_budget: 1, workers: 1, ..Default::default() },
+        );
+        // Submission must fail the planner (cannot fit 1 byte)…
+        assert!(s.submit(small_spec(5, 0)).is_err());
+        s.shutdown();
+        s.join();
+        std::fs::remove_dir_all(&dir).ok();
+
+        // …so exercise cancel on an admissible-but-unstarted job instead:
+        // single worker, first job occupies it, second job sits queued.
+        let dir = tmpdir("cancel2");
+        let s = sched(&dir, SchedulerConfig { workers: 1, ..Default::default() });
+        let a = s.submit(small_spec(6, 5)).unwrap();
+        let b = s.submit(small_spec(7, 0)).unwrap();
+        let c = s.cancel(&b.id).unwrap();
+        assert!(
+            c.state == JobState::Cancelled || c.state == JobState::Running,
+            "cancel observed {:?}",
+            c.state
+        );
+        let fb = s.wait(&b.id, Duration::from_secs(120)).unwrap();
+        assert!(matches!(fb.state, JobState::Cancelled | JobState::Done));
+        s.wait(&a.id, Duration::from_secs(120)).unwrap();
+        s.shutdown();
+        s.join();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

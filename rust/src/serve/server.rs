@@ -1,0 +1,217 @@
+//! The daemon: a `TcpListener` accept loop in front of the scheduler.
+//!
+//! One thread per connection, newline-delimited JSON request/response
+//! pairs (see [`super::protocol`]).  `SHUTDOWN` answers, then starts the
+//! graceful drain: the acceptor stops taking connections, running jobs
+//! complete, queued jobs stay spooled for the next start.  A hard kill
+//! (SIGKILL / power loss) is also safe: job records are committed by
+//! atomic rename and running jobs leave incremental pipeline checkpoints,
+//! so the next `bind` + `run` recovers the queue and resumes mid-
+//! compression work bitwise-identically.
+
+use super::job::Spool;
+use super::protocol::{self, Request};
+use super::scheduler::{Scheduler, SchedulerConfig};
+use crate::coordinator::Metrics;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Daemon construction knobs.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Bind address; port 0 picks an ephemeral port (see
+    /// [`Server::local_addr`]).
+    pub addr: String,
+    /// Spool directory (job records, results, per-job checkpoints).
+    pub spool_dir: PathBuf,
+    pub scheduler: SchedulerConfig,
+}
+
+struct Shared {
+    scheduler: Scheduler,
+    metrics: Arc<Metrics>,
+    shutting_down: AtomicBool,
+    addr: SocketAddr,
+}
+
+/// A bound (but not yet serving) daemon.
+pub struct Server {
+    listener: TcpListener,
+    shared: Arc<Shared>,
+}
+
+impl Server {
+    /// Opens the spool (recovering persisted jobs), starts the scheduler's
+    /// worker pool, and binds the listener.
+    pub fn bind(cfg: &ServerConfig) -> Result<Server> {
+        let metrics = Arc::new(Metrics::new());
+        let spool = Spool::open(&cfg.spool_dir)?;
+        let scheduler = Scheduler::new(spool, cfg.scheduler.clone(), Arc::clone(&metrics))?;
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding {}", cfg.addr))?;
+        let addr = listener.local_addr().context("local_addr")?;
+        Ok(Server {
+            listener,
+            shared: Arc::new(Shared {
+                scheduler,
+                metrics,
+                shutting_down: AtomicBool::new(false),
+                addr,
+            }),
+        })
+    }
+
+    /// The actually-bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.shared.addr
+    }
+
+    /// Serves until a `SHUTDOWN` request, then drains gracefully.
+    pub fn run(self) -> Result<()> {
+        log::info!("serve: listening on {}", self.shared.addr);
+        let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        for stream in self.listener.incoming() {
+            if self.shared.shutting_down.load(Ordering::SeqCst) {
+                break;
+            }
+            match stream {
+                Ok(s) => {
+                    let shared = Arc::clone(&self.shared);
+                    handles.push(std::thread::spawn(move || handle_conn(shared, s)));
+                    handles.retain(|h| !h.is_finished());
+                }
+                Err(e) => log::warn!("serve: accept: {e}"),
+            }
+        }
+        log::info!("serve: draining ({} running)", self.shared.scheduler.running_count());
+        // Stop admissions FIRST — an open connection must not keep feeding
+        // the queue (scheduler.submit also rejects once this flag is set),
+        // and the drain must not wait on idle keep-alive connections.
+        self.shared.scheduler.shutdown();
+        self.shared.scheduler.join();
+        // Reap finished handlers; an idle connection blocked in read does
+        // not hold the drain hostage — handle_conn closes it on its next
+        // request (it checks the flag), or it dies with the process.
+        for h in handles {
+            if h.is_finished() {
+                let _ = h.join();
+            }
+        }
+        log::info!("serve: drained, bye");
+        Ok(())
+    }
+}
+
+/// Answers requests on one connection until EOF (or `SHUTDOWN`).
+fn handle_conn(shared: Arc<Shared>, stream: TcpStream) {
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(e) => {
+            log::warn!("serve: cloning stream: {e}");
+            return;
+        }
+    };
+    let mut reader = BufReader::new(stream);
+    loop {
+        let msg = match protocol::read_line_json(&mut reader) {
+            Ok(Some(v)) => v,
+            Ok(None) => return,
+            Err(e) => {
+                let _ = protocol::write_line(&mut writer, &protocol::err(format!("{e:#}")));
+                return;
+            }
+        };
+        // During the drain, answer with an error and close: open
+        // connections must not keep the daemon serving.
+        if shared.shutting_down.load(Ordering::SeqCst) {
+            let _ = protocol::write_line(&mut writer, &protocol::err("daemon is draining"));
+            return;
+        }
+        let (resp, shutdown) = match Request::from_json(&msg) {
+            Ok(req) => dispatch(&shared, req),
+            Err(e) => (protocol::err(format!("{e:#}")), false),
+        };
+        if protocol::write_line(&mut writer, &resp).is_err() {
+            return;
+        }
+        if shutdown {
+            trigger_shutdown(&shared);
+            return;
+        }
+    }
+}
+
+/// Flags the drain and pokes the blocking acceptor with a self-connection.
+fn trigger_shutdown(shared: &Shared) {
+    if !shared.shutting_down.swap(true, Ordering::SeqCst) {
+        // Normalize a wildcard bind (0.0.0.0 / ::) to loopback: connecting
+        // to the unspecified address is not valid on every platform, and a
+        // failed poke would leave the acceptor blocked forever.
+        let mut target = shared.addr;
+        if target.ip().is_unspecified() {
+            let ip: std::net::IpAddr = match target {
+                SocketAddr::V4(_) => std::net::Ipv4Addr::LOCALHOST.into(),
+                SocketAddr::V6(_) => std::net::Ipv6Addr::LOCALHOST.into(),
+            };
+            target.set_ip(ip);
+        }
+        let _ = TcpStream::connect(target);
+    }
+}
+
+fn dispatch(shared: &Shared, req: Request) -> (Json, bool) {
+    match req {
+        Request::Submit(spec) => match shared.scheduler.submit(spec) {
+            Ok(rec) => (protocol::ok(vec![("job", rec.to_json())]), false),
+            Err(e) => (protocol::err(format!("{e:#}")), false),
+        },
+        Request::Status(id) => match shared.scheduler.status(&id) {
+            Some(rec) => (protocol::ok(vec![("job", rec.to_json())]), false),
+            None => (protocol::err(format!("no such job {id}")), false),
+        },
+        Request::Result(id) => match shared.scheduler.status(&id) {
+            Some(rec) => match rec.state {
+                super::job::JobState::Done => {
+                    let mut fields = vec![("job", rec.to_json())];
+                    let rdir = shared.scheduler.result_dir(&id);
+                    if rdir.exists() {
+                        fields.push(("result_dir", Json::str(rdir.display().to_string())));
+                    }
+                    (protocol::ok(fields), false)
+                }
+                super::job::JobState::Failed => (
+                    protocol::err(format!(
+                        "job {id} failed: {}",
+                        rec.error.as_deref().unwrap_or("unknown")
+                    )),
+                    false,
+                ),
+                other => (
+                    protocol::err(format!("job {id} not finished (state {})", other.as_str())),
+                    false,
+                ),
+            },
+            None => (protocol::err(format!("no such job {id}")), false),
+        },
+        Request::Cancel(id) => match shared.scheduler.cancel(&id) {
+            Ok(rec) => (protocol::ok(vec![("job", rec.to_json())]), false),
+            Err(e) => (protocol::err(format!("{e:#}")), false),
+        },
+        Request::Metrics => {
+            let snap: BTreeMap<String, Json> = shared
+                .metrics
+                .snapshot()
+                .into_iter()
+                .map(|(k, v)| (k, Json::num(v as f64)))
+                .collect();
+            (protocol::ok(vec![("metrics", Json::Obj(snap))]), false)
+        }
+        Request::Shutdown => (protocol::ok(vec![("draining", Json::Bool(true))]), true),
+    }
+}

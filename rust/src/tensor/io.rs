@@ -496,6 +496,95 @@ mod tests {
         std::fs::remove_file(&path).ok();
     }
 
+    /// Builds a raw EXT1 header (magic + ndim + dims), optionally followed
+    /// by `payload` f32s — for authoring deliberately corrupt files.
+    fn raw_file(path: &std::path::Path, ndim: u32, dims: &[u64], payload_elems: usize) {
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&ndim.to_le_bytes());
+        for &d in dims {
+            bytes.extend_from_slice(&d.to_le_bytes());
+        }
+        bytes.extend_from_slice(&vec![0u8; payload_elems * 4]);
+        std::fs::write(path, &bytes).unwrap();
+    }
+
+    #[test]
+    fn file_source_rejects_length_mismatch_long_and_short() {
+        // Header says 2×2×2 = 8 elements; file carries 9 (trailing junk —
+        // e.g. a half-finished rewrite) and then 7 (truncation).  Both are
+        // length mismatches FileTensorSource must refuse at open.
+        let path = tmp("len_long");
+        raw_file(&path, 3, &[2, 2, 2], 9);
+        let e = FileTensorSource::open(&path).unwrap_err().to_string();
+        assert!(e.contains("header implies"), "unexpected error: {e}");
+        assert!(load_tensor(&path).is_err());
+        std::fs::remove_file(&path).ok();
+
+        let path = tmp("len_short");
+        raw_file(&path, 3, &[2, 2, 2], 7);
+        assert!(FileTensorSource::open(&path).is_err());
+        assert!(load_tensor(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn file_source_rejects_header_truncated_mid_dims() {
+        // ndim claims 3 but only two dim words follow: read_header must
+        // fail on the short read, not invent a dimension.
+        let path = tmp("mid_dims");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&3u32.to_le_bytes());
+        bytes.extend_from_slice(&2u64.to_le_bytes());
+        bytes.extend_from_slice(&2u64.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(FileTensorSource::open(&path).is_err());
+        assert!(load_tensor(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn file_source_rejects_implausible_ndim() {
+        for ndim in [0u32, 9, u32::MAX] {
+            let path = tmp(&format!("ndim_{ndim}"));
+            raw_file(&path, ndim, &[], 0);
+            let e = FileTensorSource::open(&path).unwrap_err().to_string();
+            assert!(e.contains("ndim"), "ndim {ndim}: unexpected error {e}");
+            std::fs::remove_file(&path).ok();
+        }
+    }
+
+    #[test]
+    fn file_source_rejects_dims_product_overflow() {
+        // 2³¹ × 2³¹ × 1: the element count (2⁶²) fits usize on 64-bit
+        // targets, but ×4 bytes overflows — checked_elems must catch the
+        // byte-size overflow before any allocation is sized from it.
+        let path = tmp("byte_overflow");
+        raw_file(&path, 3, &[1 << 31, 1 << 31, 1], 0);
+        assert!(FileTensorSource::open(&path).is_err());
+        std::fs::remove_file(&path).ok();
+
+        // 2³³ × 2³³ × 1: the element product itself overflows u64→usize
+        // multiplication.
+        let path = tmp("elem_overflow");
+        raw_file(&path, 3, &[1 << 33, 1 << 33, 1], 0);
+        assert!(FileTensorSource::open(&path).is_err());
+        assert!(load_tensor(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn file_source_rejects_matrix_files() {
+        let mut rng = Xoshiro256::seed_from_u64(77);
+        let m = Matrix::random_normal(4, 4, &mut rng);
+        let path = tmp("src_kind");
+        save_matrix(&m, &path).unwrap();
+        let e = FileTensorSource::open(&path).unwrap_err().to_string();
+        assert!(e.contains("3-way"), "unexpected error: {e}");
+        std::fs::remove_file(&path).ok();
+    }
+
     #[test]
     fn file_source_matches_in_memory_all_block_sizes() {
         let mut rng = Xoshiro256::seed_from_u64(74);

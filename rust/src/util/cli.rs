@@ -120,9 +120,16 @@ impl Command {
 }
 
 /// Parse failure (message already formatted for display).
-#[derive(Debug, thiserror::Error)]
-#[error("{0}")]
+#[derive(Debug)]
 pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
 
 /// Parsed option values with typed accessors.
 #[derive(Debug, Default)]

@@ -66,7 +66,10 @@ fn out_of_core_budgeted_run_succeeds_under_budget() {
     save_tensor_streamed(&gen, &path, 8).unwrap();
     let src = FileTensorSource::open(&path).unwrap();
     let tensor_bytes = src.payload_bytes();
-    let budget = tensor_bytes * 7 / 10; // strictly below the tensor itself
+    // Strictly below the tensor itself, but above the plan's floor — which
+    // since PR 4 includes the replica-map bytes P·(L·I+M·J+N·K)·4 (~150 KiB
+    // here), so 70% of the 1 MiB tensor no longer fits the minimum plan.
+    let budget = tensor_bytes * 85 / 100;
 
     let cfg = PipelineConfig::builder()
         .reduced_dims(12, 12, 12)
