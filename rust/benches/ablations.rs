@@ -6,7 +6,7 @@
 //! * block size `d`        — compression throughput vs block size (Fig. 2).
 
 use exascale_tensor::bench_harness::{bench_once, Report};
-use exascale_tensor::compress::{compress_source, ReplicaMaps, RustCompressor};
+use exascale_tensor::compress::{compress_source, MapSource, MapTier, RustCompressor};
 use exascale_tensor::coordinator::{MemoryPlanner, Pipeline, PipelineConfig};
 use exascale_tensor::cp::{model_congruence, CpModel};
 use exascale_tensor::mixed::MixedPrecision;
@@ -154,7 +154,7 @@ fn main() {
 
     // ── block size d: compression stage throughput only ──
     let mut rep = Report::new("ablation_blocks", "block size d vs compression throughput");
-    let maps = ReplicaMaps::generate([SIZE; 3], [16; 3], 8, 6, 4);
+    let maps = MapSource::generate([SIZE; 3], [16; 3], 8, 6, 4, MapTier::Materialized);
     let pool = ThreadPool::default_sized();
     let comp = RustCompressor {
         precision: MixedPrecision::Full,

@@ -1,0 +1,145 @@
+//! `BENCH_mapgen` — the replica-map path's memory trajectory across tiers.
+//!
+//! Walks the exact map access pattern of the compression stage — per-block
+//! column panels of `U_p`/`V_p`/`W_p` on the trait path plus the stacked
+//! `[U_1; …; U_P]` panels of the batched path — at two `I` values **16×
+//! apart**, with the counting global allocator bracketing each walk, and
+//! **asserts**:
+//!
+//! 1. the procedural tier's map-path `alloc_peak_bytes` is flat in `I`
+//!    (`O(panel)`, not `O(P·L·I)`) — the exascale claim of ISSUE 5;
+//! 2. the materialized tier's peak grows ≈ linearly with `I` (the term the
+//!    procedural tier eliminates), so the comparison stays honest;
+//! 3. both tiers emit bitwise-identical panel streams (checksum equality).
+//!
+//! `--quick` bounds sizes for the CI smoke job; failures are hard
+//! `assert!`s so a map-path memory regression fails CI instead of rotting.
+
+use exascale_tensor::bench_harness::{bench_once, Report};
+use exascale_tensor::compress::{MapSource, MapTier};
+use exascale_tensor::util::alloc::CountingAlloc;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new();
+
+/// Fixed shapes: `P` and the reduced dims are pinned (not planner-derived)
+/// so the materialized map bytes scale *linearly* in `I` and the contrast
+/// between tiers is attributable to `I` alone.
+const P: usize = 8;
+const L: usize = 32;
+const JK: usize = 64;
+const PANEL: usize = 64;
+
+/// Streams every mode-0 panel a compression pass would cut — per-replica
+/// and stacked — through one recycled scratch buffer, folding a checksum
+/// so generation cannot be optimized away.  Returns (checksum, entries).
+fn walk_map_path(maps: &MapSource, full_checksum: bool) -> (f64, u64) {
+    let [i, _, _] = maps.dims();
+    let mut buf = Vec::new();
+    let mut sum = 0.0f64;
+    let mut entries = 0u64;
+    for p in 0..maps.p_count() {
+        let mut c0 = 0;
+        while c0 < i {
+            let c1 = (c0 + PANEL).min(i);
+            let pan = maps.panel(p, 0, c0, c1, std::mem::take(&mut buf));
+            let take = if full_checksum { pan.data().len() } else { 8 };
+            sum += pan.data().iter().take(take).map(|&x| x as f64).sum::<f64>();
+            entries += pan.data().len() as u64;
+            buf = pan.into_vec();
+            c0 = c1;
+        }
+    }
+    let mut c0 = 0;
+    while c0 < i {
+        let c1 = (c0 + PANEL).min(i);
+        let pan = maps.stacked_panel(0, c0, c1, std::mem::take(&mut buf));
+        let take = if full_checksum { pan.data().len() } else { 8 };
+        sum += pan.data().iter().take(take).map(|&x| x as f64).sum::<f64>();
+        entries += pan.data().len() as u64;
+        buf = pan.into_vec();
+        c0 = c1;
+    }
+    (sum, entries)
+}
+
+struct Case {
+    peak_bytes: usize,
+    checksum: f64,
+}
+
+fn run_case(rep: &mut Report, tier: MapTier, i_dim: usize, full_checksum: bool) -> Case {
+    ALLOC.reset_peak();
+    let live0 = ALLOC.live_bytes();
+    // Construction is part of the map path: the materialized tier pays its
+    // `P×(L·I + M·J + N·K)` storage here, the procedural tier only a spec.
+    let maps = MapSource::generate([i_dim, JK, JK], [L, L, L], P, 4, 42, tier);
+    let name = format!("mapgen_{}_{i_dim}", tier.as_str());
+    let (meas, (checksum, entries)) =
+        bench_once(&name, || walk_map_path(&maps, full_checksum));
+    let peak_bytes = ALLOC.peak_bytes().saturating_sub(live0);
+    let entries_per_s = entries as f64 / meas.mean_s.max(1e-9);
+    println!(
+        "{name}: peak {} KiB, {:.1} M entries/s",
+        peak_bytes >> 10,
+        entries_per_s / 1e6
+    );
+    rep.push(
+        meas.with_extra("alloc_peak_bytes", peak_bytes as f64)
+            .with_extra("entries_per_s", entries_per_s)
+            .with_extra("i_dim", i_dim as f64),
+    );
+    Case { peak_bytes, checksum }
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let i_small: usize = if quick { 1 << 10 } else { 1 << 12 };
+    let i_big = 16 * i_small;
+    let mut rep = Report::new(
+        "BENCH_mapgen",
+        "replica-map path: procedural alloc peak flat across 16x I",
+    );
+
+    // Small I with full checksums: the tiers must emit identical streams.
+    let mat_small = run_case(&mut rep, MapTier::Materialized, i_small, true);
+    let proc_small = run_case(&mut rep, MapTier::Procedural, i_small, true);
+    assert_eq!(
+        mat_small.checksum.to_bits(),
+        proc_small.checksum.to_bits(),
+        "tiers must stream bitwise-identical panels"
+    );
+
+    // 16× I: the procedural peak must stay flat, the materialized must not.
+    let mat_big = run_case(&mut rep, MapTier::Materialized, i_big, false);
+    let proc_big = run_case(&mut rep, MapTier::Procedural, i_big, false);
+    println!(
+        "peaks: materialized {} KiB → {} KiB ({}×), procedural {} KiB → {} KiB",
+        mat_small.peak_bytes >> 10,
+        mat_big.peak_bytes >> 10,
+        mat_big.peak_bytes / mat_small.peak_bytes.max(1),
+        proc_small.peak_bytes >> 10,
+        proc_big.peak_bytes >> 10,
+    );
+    assert!(
+        proc_big.peak_bytes * 2 <= proc_small.peak_bytes * 3,
+        "procedural map-path peak must be flat in I: {} → {} bytes across 16× I",
+        proc_small.peak_bytes,
+        proc_big.peak_bytes
+    );
+    assert!(
+        mat_big.peak_bytes >= 8 * mat_small.peak_bytes,
+        "materialized peak should scale ~linearly with I ({} → {}); \
+         if this broke, the contrast baseline is wrong",
+        mat_small.peak_bytes,
+        mat_big.peak_bytes
+    );
+    assert!(
+        16 * proc_big.peak_bytes <= mat_big.peak_bytes,
+        "procedural peak {} must be ≪ materialized {} at I={i_big}",
+        proc_big.peak_bytes,
+        mat_big.peak_bytes
+    );
+
+    rep.finish();
+}

@@ -19,7 +19,7 @@
 
 use exascale_tensor::bench_harness::{bench_once, speedup, Report};
 use exascale_tensor::compress::{
-    compress_source_opts, PrefetchConfig, ReplicaMaps, RustCompressor, StreamOptions,
+    compress_source_opts, MapSource, MapTier, PrefetchConfig, RustCompressor, StreamOptions,
 };
 use exascale_tensor::coordinator::{Pipeline, PipelineConfig};
 use exascale_tensor::mixed::MixedPrecision;
@@ -128,7 +128,7 @@ fn main() {
     );
 
     // ── 3. Prefetch overlap on a latency-bound source ──
-    let maps = ReplicaMaps::generate([size, size, size], [16, 16, 16], 4, 2, 99);
+    let maps = MapSource::generate([size, size, size], [16, 16, 16], 4, 2, 99, MapTier::Materialized);
     let comp = RustCompressor { precision: MixedPrecision::Full };
     let block = [32, 32, 32];
     let threads = 2;

@@ -1,4 +1,5 @@
-//! Replica compression-matrix generation — Alg. 2 line 1.
+//! Replica compression-matrix generation — Alg. 2 line 1 — as a **tiered
+//! map source**.
 //!
 //! Each replica `p` gets Gaussian `U_p (L×I)`, `V_p (M×J)`, `W_p (N×K)`.
 //! The first `S` **rows** of every `U_p` (and of `V_p`, `W_p`) are identical
@@ -11,9 +12,173 @@
 //! all three compression matrices.  (The paper's text says "columns"; for
 //! `U_p ∈ R^{L×I}` the anchor must be on the compressed side, i.e. rows —
 //! column anchors would not survive the product `U_p A`.)
+//!
+//! ## Tiers
+//!
+//! Storing the maps densely costs `P × (L·I + M·J + N·K)` floats — the
+//! dominant term at exascale `I` (they dwarf the proxies).  But the maps
+//! are *pure functions of the seed*: every entry is
+//! [`MapSpec::entry`]`(p, mode, row, col)`, a counter-based hash
+//! ([`crate::util::rng::counter_key`] → Box-Muller), so any `L×w` column
+//! panel can be synthesized on demand, in any order, on any thread — the
+//! generate-on-slice treatment that randomized-sketch CP methods
+//! (Erichson et al., arXiv:1703.09074) use to avoid storing sketch
+//! operators at all.
+//!
+//! * [`MapSource::Materialized`] — the panels are cut (`memcpy`) from
+//!   matrices filled **by the same generator** at construction.  Right for
+//!   small dims where `P·(L·I+…)` floats are cheap and reuse across blocks
+//!   makes copying faster than re-hashing.
+//! * [`MapSource::Procedural`] — nothing is stored but the [`MapSpec`];
+//!   panels are synthesized into caller scratch at use sites.  Map memory
+//!   collapses from `O(P·(L·I+M·J+N·K))` to `O(panel)`.
+//!
+//! Both tiers produce **bitwise-identical** panels (same entry function,
+//! same f32 operations), so the whole pipeline — compression, recovery,
+//! checkpoints — is tier-invariant, and a checkpoint written under one
+//! tier resumes under the other.
+//!
+//! The original sequential-stream generator (per-replica xoshiro streams)
+//! survives only as [`generate_stream_oracle`], the distributional oracle
+//! for the statistical tests below.
 
 use crate::linalg::Matrix;
-use crate::util::rng::Xoshiro256;
+use crate::util::rng::{counter_key, gaussian_from_key, Xoshiro256};
+use std::sync::Arc;
+
+/// Replica slot the shared anchor rows hash under: every replica sees the
+/// same anchor entries because the replica index is collapsed to this
+/// sentinel before keying.
+const ANCHOR_REPLICA: u64 = u64::MAX;
+
+/// The resolved storage tier of a [`MapSource`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MapTier {
+    /// Maps stored as dense matrices; panels are column-range memcpys.
+    Materialized,
+    /// Maps exist only as a seed; panels are synthesized on demand.
+    Procedural,
+}
+
+impl MapTier {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            MapTier::Materialized => "materialized",
+            MapTier::Procedural => "procedural",
+        }
+    }
+}
+
+/// Everything needed to synthesize any map entry: the counter-based
+/// generator's key space.  `Copy`-small — a procedural map source is just
+/// this plus the kept-replica index list.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MapSpec {
+    pub dims: [usize; 3],
+    pub reduced: [usize; 3],
+    pub p_count: usize,
+    pub anchor_rows: usize,
+    pub seed: u64,
+}
+
+impl MapSpec {
+    pub fn new(
+        dims: [usize; 3],
+        reduced: [usize; 3],
+        p_count: usize,
+        anchor_rows: usize,
+        seed: u64,
+    ) -> Self {
+        let [l, m, n] = reduced;
+        assert!(
+            anchor_rows <= l && anchor_rows <= m && anchor_rows <= n,
+            "anchor rows S={anchor_rows} exceed reduced dims {reduced:?}"
+        );
+        assert!(p_count >= 1, "need at least one replica");
+        Self { dims, reduced, p_count, anchor_rows, seed }
+    }
+
+    /// Rows of a mode-`mode` map (`L`, `M`, or `N`).
+    #[inline]
+    pub fn rows(&self, mode: usize) -> usize {
+        self.reduced[mode]
+    }
+
+    /// Columns of a mode-`mode` map (`I`, `J`, or `K`).
+    #[inline]
+    pub fn cols(&self, mode: usize) -> usize {
+        self.dims[mode]
+    }
+
+    /// One map entry, random-access: `U_p[row, col]` for `mode = 0` (and
+    /// `V_p`/`W_p` for modes 1/2).  Entries are `N(0, 1/dim)` — the same
+    /// `1/√dim` variance normalization the sequential generator applied —
+    /// and rows below `anchor_rows` are shared across replicas.
+    #[inline]
+    pub fn entry(&self, p: usize, mode: usize, row: usize, col: usize) -> f32 {
+        debug_assert!(p < self.p_count, "replica {p} ≥ P={}", self.p_count);
+        debug_assert!(row < self.rows(mode) && col < self.cols(mode));
+        let rep = if row < self.anchor_rows { ANCHOR_REPLICA } else { p as u64 };
+        let key = counter_key(self.seed, rep, mode as u64, row as u64, col as u64);
+        gaussian_from_key(key) * (1.0 / (self.cols(mode) as f32).sqrt())
+    }
+
+    /// Synthesizes the column panel `[:, c0..c1)` of replica `p`'s
+    /// mode-`mode` map into `out` (column-major `rows × (c1−c0)`), reusing
+    /// `out`'s capacity.
+    pub fn fill_panel(&self, p: usize, mode: usize, c0: usize, c1: usize, out: &mut Vec<f32>) {
+        let rows = self.rows(mode);
+        assert!(c0 <= c1 && c1 <= self.cols(mode), "panel [{c0},{c1}) out of range");
+        out.clear();
+        out.reserve(rows * (c1 - c0));
+        for col in c0..c1 {
+            for row in 0..rows {
+                out.push(self.entry(p, mode, row, col));
+            }
+        }
+    }
+
+    /// Synthesizes the **stacked** column panel
+    /// `[[U_{k0}]; …; [U_{k_last}]][:, c0..c1)` for the replicas in `kept`
+    /// (column-major `(kept.len()·rows) × (c1−c0)`).
+    pub fn fill_stacked_panel(
+        &self,
+        kept: &[usize],
+        mode: usize,
+        c0: usize,
+        c1: usize,
+        out: &mut Vec<f32>,
+    ) {
+        let rows = self.rows(mode);
+        assert!(c0 <= c1 && c1 <= self.cols(mode), "panel [{c0},{c1}) out of range");
+        out.clear();
+        out.reserve(kept.len() * rows * (c1 - c0));
+        for col in c0..c1 {
+            for &p in kept {
+                for row in 0..rows {
+                    out.push(self.entry(p, mode, row, col));
+                }
+            }
+        }
+    }
+
+    /// Materializes one replica's three maps (used by the materialized
+    /// tier's constructor — and by it only, so both tiers share one entry
+    /// function).
+    fn materialize_replica(&self, p: usize) -> CompressionMaps {
+        let gen = |mode: usize| {
+            let (rows, cols) = (self.rows(mode), self.cols(mode));
+            let mut data = Vec::with_capacity(rows * cols);
+            for col in 0..cols {
+                for row in 0..rows {
+                    data.push(self.entry(p, mode, row, col));
+                }
+            }
+            Matrix::from_vec(rows, cols, data)
+        };
+        CompressionMaps { u: gen(0), v: gen(1), w: gen(2) }
+    }
+}
 
 /// One replica's compression matrices.
 #[derive(Clone, Debug)]
@@ -23,20 +188,38 @@ pub struct CompressionMaps {
     pub w: Matrix, // N × K
 }
 
-/// The full set of `P` replicas with `S` shared anchor rows in `U_p`.
+impl CompressionMaps {
+    /// The mode-`mode` map (`u`/`v`/`w`).
+    #[inline]
+    pub fn mode(&self, mode: usize) -> &Matrix {
+        match mode {
+            0 => &self.u,
+            1 => &self.v,
+            2 => &self.w,
+            _ => panic!("mode {mode} out of range"),
+        }
+    }
+}
+
+/// The full set of `P` replicas with `S` shared anchor rows, **stored**.
+///
+/// Replicas are held behind [`Arc`] so [`ReplicaMaps::subset`] — replica
+/// drop after failed proxy decompositions — is O(1) per kept replica
+/// instead of a deep clone of every matrix.
 #[derive(Clone, Debug)]
 pub struct ReplicaMaps {
-    pub replicas: Vec<CompressionMaps>,
+    pub replicas: Vec<Arc<CompressionMaps>>,
     pub anchor_rows: usize,
     pub dims: [usize; 3],
     pub reduced: [usize; 3],
 }
 
 impl ReplicaMaps {
-    /// Generates `p_count` replicas for compressing `dims = [I,J,K]` down to
-    /// `reduced = [L,M,N]`, with `anchor_rows = S` shared leading rows of
-    /// each `U_p`.  Entries are scaled `N(0, 1/√L)`-style so compressed
-    /// magnitudes stay O(‖X‖) independent of the compression ratio.
+    /// Generates `p_count` materialized replicas for compressing
+    /// `dims = [I,J,K]` down to `reduced = [L,M,N]`, with
+    /// `anchor_rows = S` shared leading rows per mode.  Filled from
+    /// [`MapSpec::entry`], so the result is bitwise identical to what the
+    /// procedural tier synthesizes for the same parameters.
     pub fn generate(
         dims: [usize; 3],
         reduced: [usize; 3],
@@ -44,50 +227,11 @@ impl ReplicaMaps {
         anchor_rows: usize,
         seed: u64,
     ) -> Self {
-        let [i, j, k] = dims;
-        let [l, m, n] = reduced;
-        assert!(
-            anchor_rows <= l && anchor_rows <= m && anchor_rows <= n,
-            "anchor rows S={anchor_rows} exceed reduced dims {reduced:?}"
-        );
-        assert!(p_count >= 1, "need at least one replica");
-        let mut anchor_rng = Xoshiro256::seed_from_u64(seed ^ 0xA11C_0000);
-        // Shared anchor blocks (S×dim), common to every replica, per mode.
-        let anchor_u = Matrix::random_normal(anchor_rows, i, &mut anchor_rng);
-        let anchor_v = Matrix::random_normal(anchor_rows, j, &mut anchor_rng);
-        let anchor_w = Matrix::random_normal(anchor_rows, k, &mut anchor_rng);
-
-        let overwrite_anchor = |mat: &mut Matrix, anchor: &Matrix| {
-            for r in 0..anchor.rows() {
-                for c in 0..anchor.cols() {
-                    mat.set(r, c, anchor.get(r, c));
-                }
-            }
-        };
-
-        let base = Xoshiro256::seed_from_u64(seed);
-        let mut replicas = Vec::with_capacity(p_count);
-        for p in 0..p_count {
-            let mut rng = base.stream(p as u64 + 1);
-            let mut u = Matrix::random_normal(l, i, &mut rng);
-            let mut v = Matrix::random_normal(m, j, &mut rng);
-            let mut w = Matrix::random_normal(n, k, &mut rng);
-            overwrite_anchor(&mut u, &anchor_u);
-            overwrite_anchor(&mut v, &anchor_v);
-            overwrite_anchor(&mut w, &anchor_w);
-            // Variance normalization (1/√dim) keeps compressed magnitudes
-            // O(‖X‖) independent of the compression ratio.
-            u.scale(1.0 / (i as f32).sqrt());
-            v.scale(1.0 / (j as f32).sqrt());
-            w.scale(1.0 / (k as f32).sqrt());
-            replicas.push(CompressionMaps { u, v, w });
-        }
-        Self {
-            replicas,
-            anchor_rows,
-            dims,
-            reduced,
-        }
+        let spec = MapSpec::new(dims, reduced, p_count, anchor_rows, seed);
+        let replicas = (0..p_count)
+            .map(|p| Arc::new(spec.materialize_replica(p)))
+            .collect();
+        Self { replicas, anchor_rows, dims, reduced }
     }
 
     pub fn p_count(&self) -> usize {
@@ -96,10 +240,10 @@ impl ReplicaMaps {
 
     /// Keeps only the replicas at `indices` (used after dropping replicas
     /// whose proxy decomposition failed to converge — Alg. 2's "drop it
-    /// (them) in time").
+    /// (them) in time").  O(1) per kept replica: only the `Arc`s clone.
     pub fn subset(&self, indices: &[usize]) -> ReplicaMaps {
         ReplicaMaps {
-            replicas: indices.iter().map(|&i| self.replicas[i].clone()).collect(),
+            replicas: indices.iter().map(|&i| Arc::clone(&self.replicas[i])).collect(),
             anchor_rows: self.anchor_rows,
             dims: self.dims,
             reduced: self.reduced,
@@ -107,7 +251,9 @@ impl ReplicaMaps {
     }
 
     /// Stacked `[U_1; …; U_P]` — the LHS of the recovery least squares
-    /// (Eq. 4) for mode 1.
+    /// (Eq. 4) for mode 1.  Materializes `P·L × I`; production recovery
+    /// streams panels instead (`coordinator::recovery::stacked_recover`) —
+    /// this remains for tests and the vstack oracle.
     pub fn stacked_u(&self) -> Matrix {
         let refs: Vec<&Matrix> = self.replicas.iter().map(|r| &r.u).collect();
         Matrix::vstack(&refs)
@@ -124,6 +270,215 @@ impl ReplicaMaps {
         let refs: Vec<&Matrix> = self.replicas.iter().map(|r| &r.w).collect();
         Matrix::vstack(&refs)
     }
+}
+
+/// The procedural tier: a [`MapSpec`] plus the kept replica indices.
+/// `kept[i]` is the *original* replica id of position `i`, so subsetting
+/// preserves generation identity (a kept replica's entries never change).
+#[derive(Clone, Debug)]
+pub struct ProceduralMaps {
+    pub spec: MapSpec,
+    kept: Vec<usize>,
+}
+
+impl ProceduralMaps {
+    /// Original replica id at position `p`.
+    #[inline]
+    pub fn replica_id(&self, p: usize) -> usize {
+        self.kept[p]
+    }
+}
+
+/// A tiered source of replica compression maps — the one interface every
+/// consumer (streaming compression, stacked recovery, checkpoint resume)
+/// goes through, so the tier choice is invisible to results.
+#[derive(Clone, Debug)]
+pub enum MapSource {
+    Materialized(ReplicaMaps),
+    Procedural(ProceduralMaps),
+}
+
+impl MapSource {
+    /// Generates a map source in the given tier.  Both tiers describe the
+    /// identical map family: the tier only decides whether panels are cut
+    /// from stored matrices or synthesized on demand.
+    pub fn generate(
+        dims: [usize; 3],
+        reduced: [usize; 3],
+        p_count: usize,
+        anchor_rows: usize,
+        seed: u64,
+        tier: MapTier,
+    ) -> Self {
+        match tier {
+            MapTier::Materialized => MapSource::Materialized(ReplicaMaps::generate(
+                dims, reduced, p_count, anchor_rows, seed,
+            )),
+            MapTier::Procedural => MapSource::Procedural(ProceduralMaps {
+                spec: MapSpec::new(dims, reduced, p_count, anchor_rows, seed),
+                kept: (0..p_count).collect(),
+            }),
+        }
+    }
+
+    pub fn tier(&self) -> MapTier {
+        match self {
+            MapSource::Materialized(_) => MapTier::Materialized,
+            MapSource::Procedural(_) => MapTier::Procedural,
+        }
+    }
+
+    pub fn p_count(&self) -> usize {
+        match self {
+            MapSource::Materialized(m) => m.p_count(),
+            MapSource::Procedural(p) => p.kept.len(),
+        }
+    }
+
+    pub fn dims(&self) -> [usize; 3] {
+        match self {
+            MapSource::Materialized(m) => m.dims,
+            MapSource::Procedural(p) => p.spec.dims,
+        }
+    }
+
+    pub fn reduced(&self) -> [usize; 3] {
+        match self {
+            MapSource::Materialized(m) => m.reduced,
+            MapSource::Procedural(p) => p.spec.reduced,
+        }
+    }
+
+    pub fn anchor_rows(&self) -> usize {
+        match self {
+            MapSource::Materialized(m) => m.anchor_rows,
+            MapSource::Procedural(p) => p.spec.anchor_rows,
+        }
+    }
+
+    /// The stored-tier maps, when this source is materialized (tests and
+    /// the vstack recovery oracle).
+    pub fn materialized(&self) -> Option<&ReplicaMaps> {
+        match self {
+            MapSource::Materialized(m) => Some(m),
+            MapSource::Procedural(_) => None,
+        }
+    }
+
+    /// Keeps only the replicas at `indices` — O(1) per kept replica in
+    /// both tiers (`Arc` clone / index push).
+    pub fn subset(&self, indices: &[usize]) -> MapSource {
+        match self {
+            MapSource::Materialized(m) => MapSource::Materialized(m.subset(indices)),
+            MapSource::Procedural(p) => MapSource::Procedural(ProceduralMaps {
+                spec: p.spec,
+                kept: indices.iter().map(|&i| p.kept[i]).collect(),
+            }),
+        }
+    }
+
+    /// The column panel `[:, c0..c1)` of replica `p`'s mode-`mode` map,
+    /// built in `buf` (recycled: pass the previous panel's
+    /// [`Matrix::into_vec`] back in to make the hot path allocation-free).
+    /// Materialized: one contiguous memcpy (column-major column range).
+    /// Procedural: synthesized entry-wise.  Bitwise identical either way.
+    pub fn panel(&self, p: usize, mode: usize, c0: usize, c1: usize, mut buf: Vec<f32>) -> Matrix {
+        match self {
+            MapSource::Materialized(m) => {
+                let mat = m.replicas[p].mode(mode);
+                let rows = mat.rows();
+                assert!(c0 <= c1 && c1 <= mat.cols(), "panel [{c0},{c1}) out of range");
+                buf.clear();
+                buf.extend_from_slice(&mat.data()[c0 * rows..c1 * rows]);
+                Matrix::from_vec(rows, c1 - c0, buf)
+            }
+            MapSource::Procedural(pm) => {
+                let spec = &pm.spec;
+                spec.fill_panel(pm.kept[p], mode, c0, c1, &mut buf);
+                Matrix::from_vec(spec.rows(mode), c1 - c0, buf)
+            }
+        }
+    }
+
+    /// The stacked column panel `[[U_1]; …; [U_P]][:, c0..c1)` over the
+    /// kept replicas — the `(P·L) × w` operand of the replica-batched
+    /// mode-1 GEMM and of the streamed recovery solve.
+    pub fn stacked_panel(&self, mode: usize, c0: usize, c1: usize, mut buf: Vec<f32>) -> Matrix {
+        match self {
+            MapSource::Materialized(m) => {
+                let rows: usize = m.reduced[mode];
+                let total = m.p_count() * rows;
+                assert!(
+                    c0 <= c1 && c1 <= m.dims[mode],
+                    "panel [{c0},{c1}) out of range"
+                );
+                buf.clear();
+                buf.reserve(total * (c1 - c0));
+                for col in c0..c1 {
+                    for rep in &m.replicas {
+                        buf.extend_from_slice(rep.mode(mode).col(col));
+                    }
+                }
+                Matrix::from_vec(total, c1 - c0, buf)
+            }
+            MapSource::Procedural(pm) => {
+                let spec = &pm.spec;
+                spec.fill_stacked_panel(&pm.kept, mode, c0, c1, &mut buf);
+                Matrix::from_vec(pm.kept.len() * spec.rows(mode), c1 - c0, buf)
+            }
+        }
+    }
+}
+
+impl From<ReplicaMaps> for MapSource {
+    fn from(m: ReplicaMaps) -> Self {
+        MapSource::Materialized(m)
+    }
+}
+
+/// The **retired** sequential-stream generator (per-replica xoshiro
+/// streams, anchors overwritten, `1/√dim` scale applied after) — kept only
+/// as the distributional oracle for the statistical tests: the
+/// counter-based generator must match its moments, anchor sharing, and
+/// cross-replica independence, even though the individual values differ.
+#[doc(hidden)]
+pub fn generate_stream_oracle(
+    dims: [usize; 3],
+    reduced: [usize; 3],
+    p_count: usize,
+    anchor_rows: usize,
+    seed: u64,
+) -> Vec<CompressionMaps> {
+    let [i, j, k] = dims;
+    let [l, m, n] = reduced;
+    assert!(anchor_rows <= l && anchor_rows <= m && anchor_rows <= n);
+    let mut anchor_rng = Xoshiro256::seed_from_u64(seed ^ 0xA11C_0000);
+    let anchor_u = Matrix::random_normal(anchor_rows, i, &mut anchor_rng);
+    let anchor_v = Matrix::random_normal(anchor_rows, j, &mut anchor_rng);
+    let anchor_w = Matrix::random_normal(anchor_rows, k, &mut anchor_rng);
+    let overwrite_anchor = |mat: &mut Matrix, anchor: &Matrix| {
+        for r in 0..anchor.rows() {
+            for c in 0..anchor.cols() {
+                mat.set(r, c, anchor.get(r, c));
+            }
+        }
+    };
+    let base = Xoshiro256::seed_from_u64(seed);
+    (0..p_count)
+        .map(|p| {
+            let mut rng = base.stream(p as u64 + 1);
+            let mut u = Matrix::random_normal(l, i, &mut rng);
+            let mut v = Matrix::random_normal(m, j, &mut rng);
+            let mut w = Matrix::random_normal(n, k, &mut rng);
+            overwrite_anchor(&mut u, &anchor_u);
+            overwrite_anchor(&mut v, &anchor_v);
+            overwrite_anchor(&mut w, &anchor_w);
+            u.scale(1.0 / (i as f32).sqrt());
+            v.scale(1.0 / (j as f32).sqrt());
+            w.scale(1.0 / (k as f32).sqrt());
+            CompressionMaps { u, v, w }
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -168,6 +523,15 @@ mod tests {
     }
 
     #[test]
+    fn modes_distinct_within_replica() {
+        // One replica's U/V/W must not repeat values (mode is keyed).
+        let maps = ReplicaMaps::generate([12, 12, 12], [4, 4, 4], 1, 1, 5);
+        let r = &maps.replicas[0];
+        assert!(r.u.sub(&r.v).max_abs() > 1e-6);
+        assert!(r.v.sub(&r.w).max_abs() > 1e-6);
+    }
+
+    #[test]
     fn stacked_shapes() {
         let maps = ReplicaMaps::generate([25, 24, 23], [5, 4, 3], 6, 2, 4);
         assert_eq!(maps.stacked_u().rows(), 30);
@@ -181,11 +545,126 @@ mod tests {
         let a = ReplicaMaps::generate([10, 10, 10], [4, 4, 4], 2, 1, 9);
         let b = ReplicaMaps::generate([10, 10, 10], [4, 4, 4], 2, 1, 9);
         assert_eq!(a.replicas[1].u.data(), b.replicas[1].u.data());
+        let c = ReplicaMaps::generate([10, 10, 10], [4, 4, 4], 2, 1, 10);
+        assert_ne!(c.replicas[1].u.data(), b.replicas[1].u.data());
     }
 
     #[test]
     #[should_panic(expected = "anchor rows")]
     fn anchor_larger_than_l_rejected() {
         let _ = ReplicaMaps::generate([10, 10, 10], [4, 4, 4], 2, 5, 1);
+    }
+
+    #[test]
+    fn subset_is_shared_not_cloned() {
+        let maps = ReplicaMaps::generate([16, 16, 16], [5, 5, 5], 4, 2, 11);
+        let sub = maps.subset(&[0, 2, 3]);
+        assert_eq!(sub.p_count(), 3);
+        // O(1) subset: the kept replicas are the same allocations.
+        assert!(Arc::ptr_eq(&maps.replicas[0], &sub.replicas[0]));
+        assert!(Arc::ptr_eq(&maps.replicas[2], &sub.replicas[1]));
+        assert!(Arc::ptr_eq(&maps.replicas[3], &sub.replicas[2]));
+    }
+
+    #[test]
+    fn tiers_are_bitwise_identical() {
+        let dims = [33, 21, 17];
+        let reduced = [7, 6, 5];
+        let mat = MapSource::generate(dims, reduced, 4, 3, 77, MapTier::Materialized);
+        let proc_ = MapSource::generate(dims, reduced, 4, 3, 77, MapTier::Procedural);
+        for mode in 0..3 {
+            for p in 0..4 {
+                // Whole-map panel and a strict interior panel.
+                for (c0, c1) in [(0, dims[mode]), (3, dims[mode].min(11))] {
+                    let a = mat.panel(p, mode, c0, c1, Vec::new());
+                    let b = proc_.panel(p, mode, c0, c1, Vec::new());
+                    assert_eq!(a.data(), b.data(), "p={p} mode={mode} [{c0},{c1})");
+                }
+            }
+            let a = mat.stacked_panel(mode, 2, 9, Vec::new());
+            let b = proc_.stacked_panel(mode, 2, 9, Vec::new());
+            assert_eq!(a.data(), b.data(), "stacked mode={mode}");
+        }
+    }
+
+    #[test]
+    fn panels_agree_with_materialized_slices() {
+        // A panel must equal the same column range of the stored matrix —
+        // and the stacked panel must equal the vstack's column range.
+        let src = MapSource::generate([19, 13, 11], [5, 4, 3], 3, 2, 21, MapTier::Materialized);
+        let maps = src.materialized().unwrap();
+        let pan = src.panel(1, 0, 4, 9, Vec::new());
+        assert_eq!(pan.data(), maps.replicas[1].u.slice_cols(4, 9).data());
+        let st = src.stacked_panel(0, 4, 9, Vec::new());
+        assert_eq!(st.data(), maps.stacked_u().slice_cols(4, 9).data());
+    }
+
+    #[test]
+    fn procedural_subset_preserves_generation_identity() {
+        let full = MapSource::generate([14, 14, 14], [4, 4, 4], 5, 2, 31, MapTier::Procedural);
+        let sub = full.subset(&[1, 4]);
+        assert_eq!(sub.p_count(), 2);
+        // Position 1 of the subset is original replica 4: identical panels.
+        let a = full.panel(4, 2, 0, 14, Vec::new());
+        let b = sub.panel(1, 2, 0, 14, Vec::new());
+        assert_eq!(a.data(), b.data());
+        // Subset-of-subset composes.
+        let sub2 = sub.subset(&[1]);
+        let c = sub2.panel(0, 2, 0, 14, Vec::new());
+        assert_eq!(a.data(), c.data());
+    }
+
+    #[test]
+    fn panel_assembly_is_order_invariant() {
+        // Random access means assembling a map from panels in any split
+        // must give the same bytes.
+        let src = MapSource::generate([23, 9, 9], [6, 3, 3], 2, 1, 41, MapTier::Procedural);
+        let whole = src.panel(1, 0, 0, 23, Vec::new());
+        let mut pieced = vec![0.0f32; 6 * 23];
+        for (c0, c1) in [(11, 23), (0, 5), (5, 11)] {
+            let pan = src.panel(1, 0, c0, c1, Vec::new());
+            pieced[c0 * 6..c1 * 6].copy_from_slice(pan.data());
+        }
+        assert_eq!(whole.data(), &pieced[..]);
+    }
+
+    #[test]
+    fn counter_generator_matches_stream_oracle_statistics() {
+        // The retired sequential generator is the distributional oracle:
+        // same N(0, 1/dim) family, shared anchors, independent replicas.
+        let dims = [200, 150, 100];
+        let reduced = [12, 10, 8];
+        let new = ReplicaMaps::generate(dims, reduced, 3, 2, 55);
+        let old = generate_stream_oracle(dims, reduced, 3, 2, 55);
+        let stats = |m: &Matrix| {
+            let n = m.data().len() as f64;
+            let mean: f64 = m.data().iter().map(|&x| x as f64).sum::<f64>() / n;
+            let var: f64 =
+                m.data().iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;
+            (mean, var)
+        };
+        for (mode, dim) in [(0usize, 200usize), (1, 150), (2, 100)] {
+            let (nm, nv) = stats(new.replicas[0].mode(mode));
+            let (om, ov) = stats(old[0].mode(mode));
+            let sd = 1.0 / (dim as f64).sqrt();
+            assert!(nm.abs() < 0.2 * sd, "mode {mode} mean {nm} vs sd {sd}");
+            assert!(om.abs() < 0.2 * sd, "oracle mode {mode} mean {om} vs sd {sd}");
+            assert!((nv / ov - 1.0).abs() < 0.25, "mode {mode} var {nv} vs oracle {ov}");
+        }
+        // Cross-replica correlation of non-anchor rows ≈ 0 in both.
+        let corr = |a: &Matrix, b: &Matrix| {
+            let (mut dot, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
+            for c in 0..a.cols() {
+                for r in 2..a.rows() {
+                    let (x, y) = (a.get(r, c) as f64, b.get(r, c) as f64);
+                    dot += x * y;
+                    na += x * x;
+                    nb += y * y;
+                }
+            }
+            dot / (na.sqrt() * nb.sqrt())
+        };
+        assert!(corr(&new.replicas[0].u, &new.replicas[1].u).abs() < 0.08);
+        assert!(corr(&old[0].u, &old[1].u).abs() < 0.08);
     }
 }

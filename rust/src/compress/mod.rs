@@ -3,8 +3,10 @@
 //!
 //! * [`comp`] — the mode-product chain `Comp(X, U, V, W)` (Eq. 3) for an
 //!   in-memory tensor, with optional mixed-precision operands (§IV-B).
-//! * [`maps`] — replica compression-matrix generation with `S` shared
-//!   anchor rows (Alg. 2 line 1).
+//! * [`maps`] — tiered replica compression-map source with `S` shared
+//!   anchor rows (Alg. 2 line 1): a counter-based random-access generator
+//!   behind a `Materialized` (stored matrices) and a `Procedural`
+//!   (generate-on-slice, `O(panel)` memory) tier — bitwise identical.
 //! * [`sparse_proj`] — sparse ±1 projection matrices for the
 //!   compressed-sensing two-stage construction (§IV-D).
 //! * [`engine`] — the out-of-core streaming engine: deterministic shard
@@ -30,7 +32,7 @@ pub use engine::{
     stream_blocks, BlockConsumer, PrefetchConfig, ProgressFn, ResumeState, StreamOptions,
     StreamStats, DEFAULT_SHARD_PARTS,
 };
-pub use maps::{CompressionMaps, ReplicaMaps};
+pub use maps::{CompressionMaps, MapSource, MapSpec, MapTier, ProceduralMaps, ReplicaMaps};
 pub use sparse_proj::SparseSignMatrix;
 pub use stream::{
     compress_source, compress_source_batched, compress_source_batched_opts, compress_source_opts,

@@ -24,7 +24,7 @@ use super::comp::comp_dense_with;
 use super::engine::{
     stream_blocks, BlockConsumer, ProgressFn, ResumeState, StreamOptions, StreamStats,
 };
-use super::maps::ReplicaMaps;
+use super::maps::MapSource;
 use crate::linalg::backend::{ComputeBackend, SerialBackend};
 use crate::linalg::{Matrix, Trans};
 use crate::mixed::MixedPrecision;
@@ -93,8 +93,8 @@ fn add_into(dst: &mut [f32], src: &[f32]) {
     }
 }
 
-fn zero_proxies(maps: &ReplicaMaps) -> Vec<DenseTensor> {
-    let [l, m, n] = maps.reduced;
+fn zero_proxies(maps: &MapSource) -> Vec<DenseTensor> {
+    let [l, m, n] = maps.reduced();
     (0..maps.p_count()).map(|_| DenseTensor::zeros(l, m, n)).collect()
 }
 
@@ -104,31 +104,53 @@ fn merge_proxies(into: &mut [DenseTensor], from: Vec<DenseTensor>) {
     }
 }
 
+/// Per-worker scratch the per-block map panels are cut (materialized tier)
+/// or synthesized (procedural tier) into — recycled across blocks so the
+/// map path allocates nothing after warmup regardless of tier.
+#[derive(Default)]
+pub struct PanelScratch {
+    u: Vec<f32>,
+    v: Vec<f32>,
+    w: Vec<f32>,
+}
+
 /// Per-replica compression through a pluggable [`BlockCompressor`].
 struct CompressConsumer<'a> {
-    maps: &'a ReplicaMaps,
+    maps: &'a MapSource,
     compressor: &'a dyn BlockCompressor,
 }
 
 impl BlockConsumer for CompressConsumer<'_> {
     type Acc = Vec<DenseTensor>;
-    type Ctx = ();
+    type Ctx = PanelScratch;
 
-    fn make_ctx(&self) {}
+    fn make_ctx(&self) -> PanelScratch {
+        PanelScratch::default()
+    }
 
     fn zero_acc(&self) -> Vec<DenseTensor> {
         zero_proxies(self.maps)
     }
 
-    fn process(&self, _ctx: &mut (), blk: &BlockRange, t: DenseTensor, acc: &mut Vec<DenseTensor>) {
-        for (p, rep) in self.maps.replicas.iter().enumerate() {
-            // Column-slices of the compression matrices (contiguous memcpy
-            // in column-major).
-            let u_blk = rep.u.slice_cols(blk.i0, blk.i1);
-            let v_blk = rep.v.slice_cols(blk.j0, blk.j1);
-            let w_blk = rep.w.slice_cols(blk.k0, blk.k1);
+    fn process(
+        &self,
+        sc: &mut PanelScratch,
+        blk: &BlockRange,
+        t: DenseTensor,
+        acc: &mut Vec<DenseTensor>,
+    ) {
+        for p in 0..self.maps.p_count() {
+            // Per-block column panels of the compression maps, built in
+            // recycled worker scratch (memcpy or generate-on-slice
+            // depending on the tier — bitwise identical either way).
+            let u_blk = self.maps.panel(p, 0, blk.i0, blk.i1, std::mem::take(&mut sc.u));
+            let v_blk = self.maps.panel(p, 1, blk.j0, blk.j1, std::mem::take(&mut sc.v));
+            let w_blk = self.maps.panel(p, 2, blk.k0, blk.k1, std::mem::take(&mut sc.w));
             let contrib = self.compressor.compress_block(&t, &u_blk, &v_blk, &w_blk);
             add_into(acc[p].data_mut(), contrib.data());
+            sc.u = u_blk.into_vec();
+            sc.v = v_blk.into_vec();
+            sc.w = w_blk.into_vec();
         }
     }
 
@@ -144,7 +166,7 @@ impl BlockConsumer for CompressConsumer<'_> {
 /// "Parallel" arms (bitwise-identical results either way).
 pub fn compress_source(
     src: &dyn TensorSource,
-    maps: &ReplicaMaps,
+    maps: &MapSource,
     block: [usize; 3],
     compressor: &dyn BlockCompressor,
     pool: &ThreadPool,
@@ -157,29 +179,34 @@ pub fn compress_source(
 /// state, and an incremental-progress callback (checkpoint hook).
 pub fn compress_source_opts(
     src: &dyn TensorSource,
-    maps: &ReplicaMaps,
+    maps: &MapSource,
     block: [usize; 3],
     compressor: &dyn BlockCompressor,
     opts: &StreamOptions,
     resume: Option<ProxyResume>,
     on_progress: Option<ProgressFn<'_, Vec<DenseTensor>>>,
 ) -> (Vec<DenseTensor>, StreamStats) {
-    let blocks = block_grid(maps.dims, block);
+    let blocks = block_grid(maps.dims(), block);
     let consumer = CompressConsumer { maps, compressor };
     stream_blocks(src, &blocks, opts, &consumer, resume, on_progress)
 }
 
 /// Per-worker scratch for the replica-batched chain: every intermediate a
-/// block needs, recycled across blocks so the hot loop allocates nothing
-/// but the accumulators themselves (the old implementation copied each
-/// block into `x1` and re-allocated `y1`/`y13`/`slices`/`outs` per block
-/// *per replica*).
+/// block needs — including the map panels of both tiers — recycled across
+/// blocks so the hot loop allocates nothing but the accumulators
+/// themselves (the old implementation copied each block into `x1` and
+/// re-allocated `y1`/`y13`/`slices`/`outs` per block *per replica*).
 #[derive(Default)]
 pub struct BatchedScratch {
     y1_all: Vec<f32>,
     y1: Vec<f32>,
     y13: Vec<f32>,
     pool: Vec<Vec<f32>>,
+    /// Stacked `[U_1; …; U_P]` column panel for the current block.
+    u_stack: Vec<f32>,
+    /// Per-replica `V_p` / `W_p` column panels (reused across replicas).
+    v_blk: Vec<f32>,
+    w_blk: Vec<f32>,
 }
 
 /// Re-sizes a recycled buffer without re-zeroing the retained prefix:
@@ -199,11 +226,11 @@ fn pool_take(pool: &mut Vec<Vec<f32>>, len: usize) -> Vec<f32> {
 }
 
 /// Replica-batched chain (§Perf optimization): one stacked mode-1 GEMM for
-/// all replicas, then per-replica unfold-free modes 3 and 2.
+/// all replicas, then per-replica unfold-free modes 3 and 2.  The stacked
+/// `[U_1; …; U_P]` operand is never held whole: each block takes only its
+/// `(P·L) × di` column panel, cut or synthesized into worker scratch.
 struct BatchedConsumer<'a> {
-    maps: &'a ReplicaMaps,
-    /// `[U_1; …; U_P]` — `(P·L) × I`.
-    u_stack: Matrix,
+    maps: &'a MapSource,
 }
 
 impl BlockConsumer for BatchedConsumer<'_> {
@@ -225,7 +252,7 @@ impl BlockConsumer for BatchedConsumer<'_> {
         t: DenseTensor,
         acc: &mut Vec<DenseTensor>,
     ) {
-        let [l, m, n] = self.maps.reduced;
+        let [l, m, n] = self.maps.reduced();
         let p_count = self.maps.p_count();
         let [di, dj, dk] = t.dims();
         // Per-block contractions dispatch through the serial reference
@@ -235,16 +262,19 @@ impl BlockConsumer for BatchedConsumer<'_> {
 
         // One batched mode-1 GEMM for all replicas.  `X_(1)` is a free
         // reinterpretation of the block's own column-major buffer — no copy.
-        let u_blk = self.u_stack.slice_cols(blk.i0, blk.i1); // (P·L) × di
+        let u_blk = self
+            .maps
+            .stacked_panel(0, blk.i0, blk.i1, std::mem::take(&mut sc.u_stack)); // (P·L) × di
         let x1 = Matrix::from_vec(di, dj * dk, t.into_vec());
         let mut y1_all =
             Matrix::from_vec(p_count * l, dj * dk, take_sized(&mut sc.y1_all, p_count * l * dj * dk));
         be.gemm(1.0, &u_blk, Trans::No, &x1, Trans::No, 0.0, &mut y1_all);
         sc.pool.push(x1.into_vec()); // recycle the block buffer
 
-        for (p, rep) in self.maps.replicas.iter().enumerate() {
-            let v_blk = rep.v.slice_cols(blk.j0, blk.j1); // m × dj
-            let w_blk = rep.w.slice_cols(blk.k0, blk.k1); // n × dk
+        for p in 0..p_count {
+            // m × dj and n × dk panels, recycled across replicas.
+            let v_blk = self.maps.panel(p, 1, blk.j0, blk.j1, std::mem::take(&mut sc.v_blk));
+            let w_blk = self.maps.panel(p, 2, blk.k0, blk.k1, std::mem::take(&mut sc.w_blk));
             // Rows p·l..(p+1)·l of Y1_all, repacked contiguously as the
             // (l·dj × dk) mode-3 operand (strided copy into reused scratch).
             let mut y1 = take_sized(&mut sc.y1, l * dj * dk);
@@ -280,8 +310,11 @@ impl BlockConsumer for BatchedConsumer<'_> {
             }
             sc.y13 = y13.into_vec();
             sc.y1 = y1_flat.into_vec();
+            sc.v_blk = v_blk.into_vec();
+            sc.w_blk = w_blk.into_vec();
         }
         sc.y1_all = y1_all.into_vec();
+        sc.u_stack = u_blk.into_vec();
         // The replica loop's takes/pushes balance, but the recycled block
         // buffer is a net +1 per block — cap the pool at one block's
         // working set (2n slice/out buffers + 1) so per-worker scratch
@@ -305,7 +338,7 @@ impl BlockConsumer for BatchedConsumer<'_> {
 /// path; the mixed-precision and XLA backends use [`compress_source`].
 pub fn compress_source_batched(
     src: &dyn TensorSource,
-    maps: &ReplicaMaps,
+    maps: &MapSource,
     block: [usize; 3],
     pool: &ThreadPool,
 ) -> Vec<DenseTensor> {
@@ -317,14 +350,14 @@ pub fn compress_source_batched(
 /// state, and progress callback.
 pub fn compress_source_batched_opts(
     src: &dyn TensorSource,
-    maps: &ReplicaMaps,
+    maps: &MapSource,
     block: [usize; 3],
     opts: &StreamOptions,
     resume: Option<ProxyResume>,
     on_progress: Option<ProgressFn<'_, Vec<DenseTensor>>>,
 ) -> (Vec<DenseTensor>, StreamStats) {
-    let blocks = block_grid(maps.dims, block);
-    let consumer = BatchedConsumer { maps, u_stack: maps.stacked_u() };
+    let blocks = block_grid(maps.dims(), block);
+    let consumer = BatchedConsumer { maps };
     stream_blocks(src, &blocks, opts, &consumer, resume, on_progress)
 }
 
@@ -411,24 +444,24 @@ pub fn compress_source_sparse_opts(
 #[doc(hidden)]
 pub fn compress_source_locked(
     src: &dyn TensorSource,
-    maps: &ReplicaMaps,
+    maps: &MapSource,
     block: [usize; 3],
     compressor: &dyn BlockCompressor,
     pool: &ThreadPool,
 ) -> Vec<DenseTensor> {
     use std::sync::Mutex;
-    let [l, m, n] = maps.reduced;
+    let [l, m, n] = maps.reduced();
     let accs: Vec<Mutex<DenseTensor>> = (0..maps.p_count())
         .map(|_| Mutex::new(DenseTensor::zeros(l, m, n)))
         .collect();
-    let blocks = block_grid(maps.dims, block);
+    let blocks = block_grid(maps.dims(), block);
     pool.for_each_chunk(blocks.len(), 1, |range| {
         for blk in &blocks[range] {
             let t = src.block(blk);
-            for (p, rep) in maps.replicas.iter().enumerate() {
-                let u_blk = rep.u.slice_cols(blk.i0, blk.i1);
-                let v_blk = rep.v.slice_cols(blk.j0, blk.j1);
-                let w_blk = rep.w.slice_cols(blk.k0, blk.k1);
+            for p in 0..maps.p_count() {
+                let u_blk = maps.panel(p, 0, blk.i0, blk.i1, Vec::new());
+                let v_blk = maps.panel(p, 1, blk.j0, blk.j1, Vec::new());
+                let w_blk = maps.panel(p, 2, blk.k0, blk.k1, Vec::new());
                 let contrib = compressor.compress_block(&t, &u_blk, &v_blk, &w_blk);
                 let mut acc = accs[p].lock().unwrap();
                 add_into(acc.data_mut(), contrib.data());
@@ -443,11 +476,12 @@ mod tests {
     use super::*;
     use crate::compress::comp::comp_dense;
     use crate::compress::engine::PrefetchConfig;
+    use crate::compress::maps::MapTier;
     use crate::tensor::{InMemorySource, LowRankGenerator};
     use crate::util::rng::Xoshiro256;
 
-    fn full_comp(src: &DenseTensor, maps: &ReplicaMaps, p: usize) -> DenseTensor {
-        let rep = &maps.replicas[p];
+    fn full_comp(src: &DenseTensor, maps: &MapSource, p: usize) -> DenseTensor {
+        let rep = &maps.materialized().expect("test maps are materialized").replicas[p];
         comp_dense(src, &rep.u, &rep.v, &rep.w, MixedPrecision::Full)
     }
 
@@ -455,7 +489,7 @@ mod tests {
     fn blocked_equals_unblocked() {
         let mut rng = Xoshiro256::seed_from_u64(140);
         let t = DenseTensor::random_normal([12, 10, 8], &mut rng);
-        let maps = ReplicaMaps::generate([12, 10, 8], [4, 3, 2], 3, 2, 141);
+        let maps = MapSource::generate([12, 10, 8], [4, 3, 2], 3, 2, 141, MapTier::Materialized);
         let src = InMemorySource::new(t.clone());
         let pool = ThreadPool::new(4);
         let comp = RustCompressor {
@@ -473,7 +507,7 @@ mod tests {
     #[test]
     fn single_thread_matches_parallel_bitwise() {
         let gen = LowRankGenerator::new(16, 16, 16, 2, 142);
-        let maps = ReplicaMaps::generate([16, 16, 16], [5, 5, 5], 2, 2, 143);
+        let maps = MapSource::generate([16, 16, 16], [5, 5, 5], 2, 2, 143, MapTier::Materialized);
         let comp = RustCompressor {
             precision: MixedPrecision::Full,
         };
@@ -487,7 +521,7 @@ mod tests {
     #[test]
     fn prefetch_matches_sync_bitwise() {
         let gen = LowRankGenerator::new(14, 15, 16, 2, 151);
-        let maps = ReplicaMaps::generate([14, 15, 16], [5, 5, 5], 2, 2, 152);
+        let maps = MapSource::generate([14, 15, 16], [5, 5, 5], 2, 2, 152, MapTier::Materialized);
         let comp = RustCompressor {
             precision: MixedPrecision::Full,
         };
@@ -523,7 +557,7 @@ mod tests {
     #[test]
     fn shard_local_matches_locked_oracle() {
         let gen = LowRankGenerator::new(15, 13, 11, 2, 153);
-        let maps = ReplicaMaps::generate([15, 13, 11], [5, 4, 3], 2, 2, 154);
+        let maps = MapSource::generate([15, 13, 11], [5, 4, 3], 2, 2, 154, MapTier::Materialized);
         let comp = RustCompressor {
             precision: MixedPrecision::Full,
         };
@@ -558,7 +592,7 @@ mod tests {
     #[test]
     fn block_size_invariance() {
         let gen = LowRankGenerator::new(9, 9, 9, 2, 144);
-        let maps = ReplicaMaps::generate([9, 9, 9], [3, 3, 3], 2, 1, 145);
+        let maps = MapSource::generate([9, 9, 9], [3, 3, 3], 2, 1, 145, MapTier::Materialized);
         let comp = RustCompressor {
             precision: MixedPrecision::Full,
         };
@@ -573,7 +607,7 @@ mod tests {
     #[test]
     fn batched_matches_unbatched() {
         let gen = LowRankGenerator::new(20, 18, 16, 2, 149);
-        let maps = ReplicaMaps::generate([20, 18, 16], [6, 5, 4], 3, 2, 150);
+        let maps = MapSource::generate([20, 18, 16], [6, 5, 4], 3, 2, 150, MapTier::Materialized);
         let pool = ThreadPool::new(2);
         let comp = RustCompressor { precision: MixedPrecision::Full };
         let plain = compress_source(&gen, &maps, [7, 6, 5], &comp, &pool);
@@ -587,7 +621,7 @@ mod tests {
     #[test]
     fn batched_bitwise_invariant_across_schedules() {
         let gen = LowRankGenerator::new(18, 14, 12, 2, 155);
-        let maps = ReplicaMaps::generate([18, 14, 12], [6, 5, 4], 3, 2, 156);
+        let maps = MapSource::generate([18, 14, 12], [6, 5, 4], 3, 2, 156, MapTier::Materialized);
         let reference = compress_source_batched(&gen, &maps, [5, 5, 5], &ThreadPool::new(1));
         let par = compress_source_batched(&gen, &maps, [5, 5, 5], &ThreadPool::new(8));
         assert_eq!(reference, par);
@@ -604,6 +638,26 @@ mod tests {
             None,
         );
         assert_eq!(reference, pref);
+    }
+
+    #[test]
+    fn procedural_tier_bitwise_matches_materialized() {
+        // The whole point of the tiered source: same seed, either tier,
+        // identical proxies — on the trait path and the batched path, at
+        // several block shapes.
+        let gen = LowRankGenerator::new(17, 15, 13, 2, 161);
+        let mat = MapSource::generate([17, 15, 13], [5, 4, 4], 3, 2, 162, MapTier::Materialized);
+        let proc_ = MapSource::generate([17, 15, 13], [5, 4, 4], 3, 2, 162, MapTier::Procedural);
+        let comp = RustCompressor { precision: MixedPrecision::Full };
+        let pool = ThreadPool::new(3);
+        for block in [[17, 15, 13], [6, 5, 4], [4, 7, 3]] {
+            let a = compress_source(&gen, &mat, block, &comp, &pool);
+            let b = compress_source(&gen, &proc_, block, &comp, &pool);
+            assert_eq!(a, b, "trait path, block {block:?}");
+            let ab = compress_source_batched(&gen, &mat, block, &pool);
+            let bb = compress_source_batched(&gen, &proc_, block, &pool);
+            assert_eq!(ab, bb, "batched path, block {block:?}");
+        }
     }
 
     #[test]
@@ -624,7 +678,7 @@ mod tests {
     #[test]
     fn mixed_precision_backend_close() {
         let gen = LowRankGenerator::new(10, 10, 10, 2, 146);
-        let maps = ReplicaMaps::generate([10, 10, 10], [4, 4, 4], 1, 1, 147);
+        let maps = MapSource::generate([10, 10, 10], [4, 4, 4], 1, 1, 147, MapTier::Materialized);
         let pool = ThreadPool::new(2);
         let full = compress_source(
             &gen,

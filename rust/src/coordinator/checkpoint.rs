@@ -6,7 +6,11 @@
 //! directory holds a JSON header (config fingerprint, dims, seed, replica
 //! count, stage) plus the proxy tensors in the crate's EXT1 binary format.
 //! The maps themselves are *not* stored: they are regenerated
-//! deterministically from the seed, which the header fingerprints.
+//! deterministically from the seed, which the header fingerprints — zero
+//! map bytes on disk in either map tier.  The fingerprint deliberately
+//! excludes the map tier: both tiers synthesize bitwise-identical maps
+//! from the seed, so a checkpoint written under one tier resumes under
+//! the other (asserted in `tests/map_tiers.rs`).
 //!
 //! Two checkpoint kinds coexist in one directory:
 //!
@@ -29,6 +33,14 @@ use crate::tensor::DenseTensor;
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 use std::path::Path;
+
+/// Checkpoint format version.  Bumped to **2** when the replica-map
+/// generator changed from sequential xoshiro streams to the counter-based
+/// hash (PR 5): the fingerprint fields are identical across that change,
+/// but version-1 proxies were folded from differently-valued maps, so
+/// resuming them against regenerated maps would be silently corrupt —
+/// the version gate turns that into a loud "recompress" error instead.
+const CHECKPOINT_VERSION: usize = 2;
 
 /// Identifies a compression run; resuming requires an exact match.
 #[derive(Clone, Debug, PartialEq)]
@@ -102,7 +114,7 @@ pub fn save_proxies(
         save_tensor(y, dir.join(format!("proxy_{p:04}.ext1")))?;
     }
     let header = Json::obj(vec![
-        ("version", Json::num(1.0)),
+        ("version", Json::num(CHECKPOINT_VERSION as f64)),
         ("stage", Json::str("compressed")),
         ("fingerprint", fp.to_json()),
         ("proxy_count", Json::num(proxies.len() as f64)),
@@ -125,7 +137,7 @@ pub fn load_proxies(
     }
     let text = std::fs::read_to_string(&header_path)?;
     let v = Json::parse(&text).context("checkpoint.json parse")?;
-    if v.get("version").and_then(|x| x.as_usize()) != Some(1) {
+    if v.get("version").and_then(|x| x.as_usize()) != Some(CHECKPOINT_VERSION) {
         bail!("unsupported checkpoint version");
     }
     let stored = Fingerprint::from_json(v.get("fingerprint").context("missing fingerprint")?)?;
@@ -317,7 +329,7 @@ pub fn save_partial(
         save_tensor(y, dir.join(partial_proxy_name(g, p)))?;
     }
     let header = Json::obj(vec![
-        ("version", Json::num(1.0)),
+        ("version", Json::num(CHECKPOINT_VERSION as f64)),
         ("stage", Json::str("compressing")),
         ("fingerprint", fp.to_json()),
         ("proxy_count", Json::num(proxies.len() as f64)),
@@ -363,7 +375,7 @@ pub fn load_partial(
     }
     let text = std::fs::read_to_string(&header_path)?;
     let v = Json::parse(&text).context("partial.json parse")?;
-    if v.get("version").and_then(|x| x.as_usize()) != Some(1) {
+    if v.get("version").and_then(|x| x.as_usize()) != Some(CHECKPOINT_VERSION) {
         bail!("unsupported partial checkpoint version");
     }
     let stored_fp =

@@ -15,6 +15,42 @@ pub enum Backend {
     Xla,
 }
 
+/// Replica-map storage-tier policy (see `compress::maps`): how the
+/// Gaussian compression maps exist at runtime.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum MapTierChoice {
+    /// Planner decides: procedural when the materialized maps would eat a
+    /// meaningful share (> 1/8) of the memory budget, materialized
+    /// otherwise (and always, when no budget is set).
+    #[default]
+    Auto,
+    /// Force dense stored maps (`P×(L·I+M·J+N·K)` floats).
+    Materialized,
+    /// Force generate-on-slice maps (`O(panel)` memory).
+    Procedural,
+}
+
+impl MapTierChoice {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            MapTierChoice::Auto => "auto",
+            MapTierChoice::Materialized => "materialized",
+            MapTierChoice::Procedural => "procedural",
+        }
+    }
+
+    /// Parses the CLI/JSON spelling (`auto | materialized | procedural`,
+    /// with `mat`/`proc` shorthands).
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "auto" => MapTierChoice::Auto,
+            "materialized" | "mat" => MapTierChoice::Materialized,
+            "procedural" | "proc" => MapTierChoice::Procedural,
+            other => bail!("map tier '{other}' (expected auto|materialized|procedural)"),
+        })
+    }
+}
+
 /// Compressed-sensing two-stage compression options (§IV-D).
 #[derive(Clone, Copy, Debug)]
 pub struct SensingConfig {
@@ -102,6 +138,11 @@ pub struct PipelineConfig {
     /// Checkpoint directory: when set, the post-compression state is
     /// persisted there and reused by matching re-runs (crash resume).
     pub checkpoint_dir: Option<std::path::PathBuf>,
+    /// Replica-map storage tier (`Auto` lets the planner pick).  Results
+    /// are bitwise identical across tiers; only memory/speed differ, so
+    /// this knob is excluded from cache fingerprints like the other
+    /// execution-only knobs.
+    pub map_tier: MapTierChoice,
     pub seed: u64,
 }
 
@@ -194,6 +235,7 @@ impl PipelineConfig {
             ("prefetch_depth", opt_num(self.prefetch_depth)),
             ("io_threads", Json::num(self.io_threads as f64)),
             ("refine_sweeps", Json::num(self.refine_sweeps as f64)),
+            ("map_tier", Json::str(self.map_tier.as_str())),
             ("seed", Json::num(self.seed as f64)),
         ];
         if let Some(sc) = &self.sensing {
@@ -305,6 +347,11 @@ impl PipelineConfig {
                 .get("checkpoint_dir")
                 .and_then(|x| x.as_str())
                 .map(std::path::PathBuf::from),
+            // Absent in pre-tier job records: default Auto.
+            map_tier: match v.get("map_tier").and_then(|x| x.as_str()) {
+                Some(s) => MapTierChoice::parse(s)?,
+                None => MapTierChoice::Auto,
+            },
             seed: num("seed")? as u64,
         };
         cfg.validate()?;
@@ -339,6 +386,7 @@ impl Default for PipelineConfigBuilder {
                 io_threads: 2,
                 refine_sweeps: 1,
                 checkpoint_dir: None,
+                map_tier: MapTierChoice::Auto,
                 seed: 0,
             },
         }
@@ -425,6 +473,12 @@ impl PipelineConfigBuilder {
 
     pub fn checkpoint_dir(mut self, dir: impl Into<std::path::PathBuf>) -> Self {
         self.cfg.checkpoint_dir = Some(dir.into());
+        self
+    }
+
+    /// Replica-map storage tier (`Auto` lets the planner pick).
+    pub fn map_tier(mut self, tier: MapTierChoice) -> Self {
+        self.cfg.map_tier = tier;
         self
     }
 
@@ -536,11 +590,13 @@ mod tests {
             .io_threads(4)
             .refine_sweeps(2)
             .checkpoint_dir("/tmp/ckpt")
+            .map_tier(MapTierChoice::Procedural)
             .seed(424242)
             .build()
             .unwrap();
         let text = cfg.to_json().to_string_pretty();
         let back = PipelineConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.map_tier, MapTierChoice::Procedural);
         assert_eq!(back.reduced, cfg.reduced);
         assert_eq!(back.rank, cfg.rank);
         assert_eq!(back.replicas, cfg.replicas);
@@ -566,6 +622,21 @@ mod tests {
         assert_eq!(back.replicas, None);
         assert_eq!(back.block, None);
         assert!(back.sensing.is_none());
+        assert_eq!(back.map_tier, MapTierChoice::Auto);
+
+        // Pre-tier job records (no map_tier key) default to Auto.
+        let mut legacy = auto.to_json();
+        if let Json::Obj(m) = &mut legacy {
+            m.remove("map_tier");
+        }
+        let back = PipelineConfig::from_json(&legacy).unwrap();
+        assert_eq!(back.map_tier, MapTierChoice::Auto);
+        // Bad spellings are rejected.
+        let mut bad_tier = auto.to_json();
+        if let Json::Obj(m) = &mut bad_tier {
+            m.insert("map_tier".into(), Json::str("dense"));
+        }
+        assert!(PipelineConfig::from_json(&bad_tier).is_err());
 
         // Sensing block round-trips.
         let sens = PipelineConfig::builder()

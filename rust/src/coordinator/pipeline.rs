@@ -33,7 +33,7 @@ use super::recovery::{
     stacked_recover,
 };
 use crate::compress::{
-    compress_source, BlockCompressor, PrefetchConfig, ReplicaMaps, ResumeState, RustCompressor,
+    compress_source, BlockCompressor, MapSource, PrefetchConfig, ResumeState, RustCompressor,
     SparseSignMatrix, StreamOptions, DEFAULT_SHARD_PARTS,
 };
 use crate::cp::{als_decompose_with, sampled_mse, AlsOptions, CpModel};
@@ -287,12 +287,17 @@ impl Pipeline {
         let anchor = self.cfg.effective_anchor();
 
         // ── Stage 1: compression (Alg. 2 lines 1–2, Fig. 2) ──
-        let maps = ReplicaMaps::generate(
+        // The maps exist in the tier the planner resolved: stored matrices
+        // or generate-on-slice.  Every downstream consumer reads them
+        // through panels, so the tier never changes a single result bit.
+        log::info!("replica maps: {} tier", plan.map_tier.as_str());
+        let maps = MapSource::generate(
             dims,
             self.cfg.reduced,
             plan.replicas,
             anchor,
             self.cfg.seed,
+            plan.map_tier,
         );
         let default_comp;
         let compressor: &dyn BlockCompressor = match (&self.compressor, compute.block_compressor())
@@ -594,14 +599,17 @@ impl Pipeline {
         record_stream_stats(&self.metrics, &stage1_stats);
 
         // Stage-2: plain Alg. 2 on the in-memory Z with dense maps
-        // U'_p (L×αL) — reusing the whole standard pipeline.
-        let maps2 = ReplicaMaps::generate(
+        // U'_p (L×αL) — reusing the whole standard pipeline.  The expanded
+        // dims are small, but the tier still follows the plan so the two
+        // tiers stay bitwise interchangeable end to end.
+        let maps2 = MapSource::generate(
             [al, bm, gn],
             self.cfg.reduced,
             // P from the *expanded* dims: far smaller than from I.
             MemoryPlanner::default_replicas([al, bm, gn], self.cfg.reduced),
             anchor,
             self.cfg.seed ^ 0x54,
+            plan.map_tier,
         );
         let default_comp = self.default_compressor();
         let z_src = crate::tensor::InMemorySource::new(z);

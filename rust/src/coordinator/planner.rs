@@ -14,7 +14,9 @@
 //! implicit generator), and prefetching defaults on so block reads overlap
 //! the per-block TTM chains.
 
-use super::config::PipelineConfig;
+use super::config::{MapTierChoice, PipelineConfig};
+use super::recovery::RECOVERY_PANEL_COLS;
+use crate::compress::MapTier;
 use anyhow::{bail, Result};
 
 /// The resolved execution plan.
@@ -23,8 +25,9 @@ pub struct MemoryPlan {
     pub replicas: usize,
     pub block: [usize; 3],
     pub corner: usize,
-    /// Estimated peak bytes (proxies + per-worker blocks + batched
-    /// intermediates + prefetch queue + recovery).
+    /// Estimated peak bytes (proxies + replica maps in their tier +
+    /// per-worker blocks/panels + batched intermediates + prefetch queue +
+    /// streamed recovery).
     pub estimated_bytes: usize,
     /// Prefetch queue depth in blocks (0 = synchronous reads).
     pub prefetch_depth: usize,
@@ -33,6 +36,10 @@ pub struct MemoryPlan {
     /// The budget is below the tensor's byte size: the input must stay on
     /// disk / implicit and stream through the block pipeline.
     pub out_of_core: bool,
+    /// Resolved replica-map storage tier.  `Auto` configs resolve to
+    /// procedural when the materialized maps would eat > 1/8 of the
+    /// budget; results are bitwise identical either way.
+    pub map_tier: MapTier,
 }
 
 /// Plans replica count / block size / corner size for a concrete tensor.
@@ -80,6 +87,27 @@ impl MemoryPlanner {
         Self::min_replicas_anchored(dims, reduced, 2)
     }
 
+    /// Bytes the replica maps themselves pin for the whole run, by tier:
+    /// the dense `P × (L·I + M·J + N·K)` floats when materialized, **zero**
+    /// when procedural — generate-on-slice maps exist only as per-worker
+    /// panel scratch, which the workers term below counts.  This is the
+    /// term that made exascale `I` unplannable before the tiered source.
+    pub fn replica_map_bytes(
+        dims: [usize; 3],
+        reduced: [usize; 3],
+        replicas: usize,
+        tier: MapTier,
+    ) -> usize {
+        match tier {
+            MapTier::Materialized => {
+                let [l, m, n] = reduced;
+                replicas * (l * dims[0] + m * dims[1] + n * dims[2])
+                    * std::mem::size_of::<f32>()
+            }
+            MapTier::Procedural => 0,
+        }
+    }
+
     /// Byte estimate for a candidate plan.
     ///
     /// When prefetching, raw blocks live in the queue (`prefetch_depth`),
@@ -89,7 +117,9 @@ impl MemoryPlanner {
     /// but not individually modeled; see ROADMAP.)  `batched = true`
     /// models the replica-batched f32 chain, whose mode-1 intermediate
     /// stacks all `P` replicas (`P·L × dj·dk` per worker) — the term that
-    /// actually dominates tight out-of-core budgets.
+    /// actually dominates tight out-of-core budgets.  `tier` picks the
+    /// replica-map model: dense storage (materialized) or panel-scratch
+    /// only (procedural).
     #[allow(clippy::too_many_arguments)]
     pub fn estimate_bytes(
         dims: [usize; 3],
@@ -101,22 +131,24 @@ impl MemoryPlanner {
         prefetch_depth: usize,
         io_threads: usize,
         batched: bool,
+        tier: MapTier,
     ) -> usize {
         let f = std::mem::size_of::<f32>();
         let [l, m, n] = reduced;
         let proxies = replicas * l * m * n * f;
-        // The replica maps themselves: every replica holds dense
-        // `U_p (L×I), V_p (M×J), W_p (N×K)` factors for the whole run —
-        // `P × (L·I + M·J + N·K)` floats.  At exascale `I` this is the
-        // dominant term (ROADMAP gap closed in PR 4); out-of-core plans
-        // must account for it or the admission controller undercounts.
-        let maps = replicas * (l * dims[0] + m * dims[1] + n * dims[2]) * f;
-        // Each in-flight worker holds one materialized block + the mode-1
-        // intermediate of its TTM chain: (L × dj·dk) per replica on the
-        // trait path, (P·L × dj·dk) stacked on the batched f32 path.
+        let maps = Self::replica_map_bytes(dims, reduced, replicas, tier);
+        // Each in-flight worker holds one materialized block, the mode-1
+        // intermediate of its TTM chain — (L × dj·dk) per replica on the
+        // trait path, (P·L × dj·dk) stacked on the batched f32 path — and
+        // the per-block map panels its scratch carries in *both* tiers
+        // (stacked `P·L × di` U-panel when batched, per-replica otherwise,
+        // plus one `M × dj` and one `N × dk` panel).
         let blk = block[0] * block[1] * block[2];
         let interm = if batched { replicas * l } else { l } * block[1] * block[2];
-        let workers = threads.max(1) * (blk + interm) * f;
+        let panels = if batched { replicas * l } else { l } * block[0]
+            + m * block[1]
+            + n * block[2];
+        let workers = threads.max(1) * (blk + interm + panels) * f;
         // Shard-local accumulator sets: the engine's fold-prefix window
         // caps live sets at `threads.max(2)` plus the folder's own.
         let shard_accs = (threads.max(2) + 1) * l * m * n * replicas * f;
@@ -125,8 +157,20 @@ impl MemoryPlanner {
         } else {
             0
         };
-        // Recovery: stacked U (P·L × I) + stacked A (P·L × R) per mode.
-        let recovery = replicas * l * (dims[0] + rank) * f;
+        // Streamed recovery (modes solved sequentially → max over modes):
+        // the `dim×dim` normal-equation Gram + the `dim×R` right-hand
+        // accumulator + the stacked `P·L×R` factor RHS + two `L×panel`
+        // map panels.  The `P·L × dim` stack of the retired vstack solve
+        // is gone in both tiers.
+        let recovery = (0..3)
+            .map(|mode| {
+                let d = dims[mode];
+                let r = reduced[mode];
+                (d * d + d * rank + replicas * r * rank + 2 * r * RECOVERY_PANEL_COLS.min(d))
+                    * f
+            })
+            .max()
+            .unwrap_or(0);
         proxies + maps + workers + shard_accs + queue + recovery
     }
 
@@ -209,6 +253,27 @@ impl MemoryPlanner {
         // unless mixed precision forces the trait path.
         let batched = !cfg.mixed_precision;
 
+        // Resolve the replica-map tier.  Auto: go procedural as soon as
+        // storing the maps would eat a meaningful share (> 1/8) of the
+        // budget — the maps are the `O(P·I)` term the rest of the plan
+        // cannot shrink away, and the procedural tier trades them for
+        // per-worker panel scratch at a small generation cost.  With no
+        // budget (0 = unlimited) stay materialized: panels then cost one
+        // memcpy instead of re-hashing.
+        let mat_map_bytes =
+            Self::replica_map_bytes(dims, reduced, replicas, MapTier::Materialized);
+        let map_tier = match cfg.map_tier {
+            MapTierChoice::Materialized => MapTier::Materialized,
+            MapTierChoice::Procedural => MapTier::Procedural,
+            MapTierChoice::Auto => {
+                if cfg.memory_budget > 0 && mat_map_bytes > cfg.memory_budget / 8 {
+                    MapTier::Procedural
+                } else {
+                    MapTier::Materialized
+                }
+            }
+        };
+
         // Incremental checkpointing snapshots the folded proxies: up to two
         // extra P·L·M·N sets live at once (one queued for the background
         // writer + one mid-save).
@@ -232,7 +297,7 @@ impl MemoryPlanner {
                 + sensing_acc_bytes
                 + Self::estimate_bytes(
                     dims, reduced, replicas, block, cfg.threads, cfg.rank, depth, io_threads,
-                    batched,
+                    batched, map_tier,
                 )
         };
         let mut estimated = est(block, prefetch_depth);
@@ -268,6 +333,7 @@ impl MemoryPlanner {
             prefetch_depth,
             io_threads,
             out_of_core,
+            map_tier,
         })
     }
 }
@@ -304,6 +370,7 @@ mod tests {
         assert!(plan.estimated_bytes > 0);
         assert!(!plan.out_of_core, "no budget → in-core");
         assert_eq!(plan.prefetch_depth, 0, "prefetch off without out-of-core");
+        assert_eq!(plan.map_tier, MapTier::Materialized, "no budget → stored maps");
     }
 
     #[test]
@@ -333,40 +400,108 @@ mod tests {
     #[test]
     fn estimate_monotone_in_depth_and_batching() {
         let base = MemoryPlanner::estimate_bytes(
-            [1000; 3], [50; 3], 31, [100; 3], 4, 5, 0, 2, false,
+            [1000; 3], [50; 3], 31, [100; 3], 4, 5, 0, 2, false, MapTier::Materialized,
         );
         let deeper = MemoryPlanner::estimate_bytes(
-            [1000; 3], [50; 3], 31, [100; 3], 4, 5, 8, 2, false,
+            [1000; 3], [50; 3], 31, [100; 3], 4, 5, 8, 2, false, MapTier::Materialized,
         );
         let batched = MemoryPlanner::estimate_bytes(
-            [1000; 3], [50; 3], 31, [100; 3], 4, 5, 0, 2, true,
+            [1000; 3], [50; 3], 31, [100; 3], 4, 5, 0, 2, true, MapTier::Materialized,
         );
         assert!(deeper > base, "queue + in-flight blocks must be budgeted");
         assert!(batched > base, "stacked P·L intermediate must be budgeted");
     }
 
     #[test]
-    fn estimate_includes_replica_map_bytes_hand_computed() {
+    fn estimate_tier_aware_hand_computed() {
         // dims [100,80,60], reduced [10,10,10], P=3, block [20,20,20],
         // threads 2, rank 4, no prefetch, unbatched.  By hand:
-        //   proxies    = 3·10·10·10·4                      = 12 000
-        //   maps       = 3·(10·100 + 10·80 + 10·60)·4      = 28 800
-        //   workers    = 2·(20³ + 10·20·20)·4              = 96 000
-        //   shard_accs = (2+1)·10³·3·4                     = 36 000
+        //   proxies    = 3·10·10·10·4                        =  12 000
+        //   maps (mat) = 3·(10·100 + 10·80 + 10·60)·4        =  28 800
+        //   workers    = 2·(20³ + 10·20·20 + 3·10·20)·4      = 100 800
+        //                (block + mode-1 interm + u/v/w panels 200 each)
+        //   shard_accs = (2+1)·10³·3·4                       =  36 000
         //   queue      = 0
-        //   recovery   = 3·10·(100+4)·4                    = 12 480
-        //   total                                          = 185 280
-        let est = MemoryPlanner::estimate_bytes(
-            [100, 80, 60], [10, 10, 10], 3, [20, 20, 20], 2, 4, 0, 1, false,
+        //   recovery   = max over modes; mode 1 (dim 100):
+        //                (100² + 100·4 + 3·10·4 + 2·10·100)·4 = 50 080
+        //   total (materialized)                             = 227 680
+        //   total (procedural)  = same − 28 800              = 198 880
+        let args = ([100, 80, 60], [10, 10, 10], 3, [20, 20, 20], 2, 4, 0, 1, false);
+        let est = |tier| {
+            MemoryPlanner::estimate_bytes(
+                args.0, args.1, args.2, args.3, args.4, args.5, args.6, args.7, args.8, tier,
+            )
+        };
+        assert_eq!(est(MapTier::Materialized), 227_680);
+        assert_eq!(est(MapTier::Procedural), 198_880);
+        assert_eq!(
+            est(MapTier::Materialized) - est(MapTier::Procedural),
+            MemoryPlanner::replica_map_bytes(
+                [100, 80, 60], [10, 10, 10], 3, MapTier::Materialized
+            ),
+            "the tiers may differ only by the stored-map term"
         );
-        assert_eq!(est, 185_280);
+    }
 
-        // Growing I by ΔI=900 must add exactly the I-linear terms:
-        // maps P·L·ΔI·4 plus recovery P·L·ΔI·4 = 2·3·10·900·4 = 216 000.
-        let est_big = MemoryPlanner::estimate_bytes(
-            [1000, 80, 60], [10, 10, 10], 3, [20, 20, 20], 2, 4, 0, 1, false,
+    #[test]
+    fn procedural_map_term_is_flat_in_i() {
+        // ΔI-flatness: growing I 10× adds map bytes only in the
+        // materialized tier (P·L·ΔI·4 = 3·10·900·4 = 108 000); the
+        // procedural map term stays zero, so the tier gap at any I equals
+        // the materialized map bytes at that I.
+        for (dims, gap) in [([100, 80, 60], 28_800usize), ([1000, 80, 60], 136_800)] {
+            assert_eq!(
+                MemoryPlanner::replica_map_bytes(dims, [10; 3], 3, MapTier::Procedural),
+                0
+            );
+            let mat = MemoryPlanner::estimate_bytes(
+                dims, [10; 3], 3, [20; 3], 2, 4, 0, 1, false, MapTier::Materialized,
+            );
+            let proc_ = MemoryPlanner::estimate_bytes(
+                dims, [10; 3], 3, [20; 3], 2, 4, 0, 1, false, MapTier::Procedural,
+            );
+            assert_eq!(mat - proc_, gap, "dims {dims:?}");
+        }
+        // And the gap is exactly the maps' I-linear growth: 136 800 −
+        // 28 800 = P·L·ΔI·4 = 108 000.  What remains I-dependent in the
+        // procedural estimate is the solve itself (Gram dim² + dim·R +
+        // panel clamp), not any map storage.
+        let small = MemoryPlanner::estimate_bytes(
+            [100, 80, 60], [10; 3], 3, [20; 3], 2, 4, 0, 1, false, MapTier::Procedural,
         );
-        assert_eq!(est_big - est, 216_000, "replica-map bytes must scale with I");
+        let big = MemoryPlanner::estimate_bytes(
+            [1000, 80, 60], [10; 3], 3, [20; 3], 2, 4, 0, 1, false, MapTier::Procedural,
+        );
+        // mode-0 recovery: (10⁶ + 4000 + 120 + 2·10·256)·4 = 4 036 960 vs
+        // (10⁴ + 400 + 120 + 2·10·100)·4 = 50 080.
+        assert_eq!(big - small, 4_036_960 - 50_080);
+    }
+
+    #[test]
+    fn auto_tier_selection_follows_budget_share() {
+        // No budget → materialized.
+        let plan = MemoryPlanner::plan(&cfg(), [2000, 2000, 2000]).unwrap();
+        assert_eq!(plan.map_tier, MapTier::Materialized);
+        // P=52 at these shapes → materialized maps = 52·(50·2000·3)·4 ≈
+        // 62.4 MB.  1 GiB budget: 62.4 MB < budget/8 → stay materialized.
+        let mut c = cfg();
+        c.memory_budget = 1 << 30;
+        let plan = MemoryPlanner::plan(&c, [2000, 2000, 2000]).unwrap();
+        assert_eq!(plan.map_tier, MapTier::Materialized);
+        // 256 MiB budget: 62.4 MB > budget/8 = 32 MiB → procedural.
+        c.memory_budget = 256 << 20;
+        let plan = MemoryPlanner::plan(&c, [2000, 2000, 2000]).unwrap();
+        assert_eq!(plan.map_tier, MapTier::Procedural);
+        assert!(plan.estimated_bytes <= c.memory_budget);
+        // Explicit choices are always honored.
+        c.map_tier = MapTierChoice::Materialized;
+        c.memory_budget = 1 << 30;
+        let plan = MemoryPlanner::plan(&c, [2000, 2000, 2000]).unwrap();
+        assert_eq!(plan.map_tier, MapTier::Materialized);
+        c.map_tier = MapTierChoice::Procedural;
+        c.memory_budget = 0;
+        let plan = MemoryPlanner::plan(&c, [2000, 2000, 2000]).unwrap();
+        assert_eq!(plan.map_tier, MapTier::Procedural);
     }
 
     #[test]
@@ -384,10 +519,12 @@ mod tests {
     #[test]
     fn budget_shrinks_blocks() {
         let mut c = cfg();
-        // 300 MiB: above the plan's fixed floor (proxies 26 MiB + replica
-        // maps 62.4 MiB + shard accumulators 130 MiB + recovery 20.9 MiB
-        // ≈ 239 MiB for P=52 at these shapes), below the unbounded
-        // estimate, so the block-shrinking loop must engage and converge.
+        // 300 MiB: the auto tier goes procedural (62.4 MiB of materialized
+        // maps > budget/8), leaving a fixed floor of proxies 26 MiB +
+        // shard accumulators 130 MiB + streamed-recovery Gram ~16 MiB ≈
+        // 172 MiB for P=52 at these shapes — below the budget, while the
+        // unbounded estimate exceeds it, so the block-shrinking loop must
+        // engage and converge.
         c.memory_budget = 300 * 1024 * 1024;
         let plan_unbounded = MemoryPlanner::plan(&cfg(), [2000, 2000, 2000]).unwrap();
         let plan_bounded = MemoryPlanner::plan(&c, [2000, 2000, 2000]).unwrap();

@@ -9,17 +9,157 @@
 //! (lines 10–13).
 
 use super::matching::anchor_normalize;
-use crate::compress::{ReplicaMaps, SparseSignMatrix};
+use crate::compress::{MapSource, MapTier, ReplicaMaps, SparseSignMatrix};
 use crate::cp::{als_decompose, AlsOptions, CpModel};
 use crate::linalg::ista::{ista_l1, IstaOptions};
-use crate::linalg::{hungarian_max, lstsq, Matrix};
+use crate::linalg::{cholesky_solve, hungarian_max, lstsq, matmul, Matrix, Trans};
 use crate::tensor::DenseTensor;
 use anyhow::{bail, Context, Result};
 
-/// Solves the stacked least squares (Eq. 4) for all three modes.
+/// Column-panel width of the streamed stacked solve: the only map-shaped
+/// allocation recovery makes is `2 × L×PANEL` scratch (plus the solve's own
+/// `dim×dim` Gram), never the `P·L × dim` stack.  The memory planner
+/// budgets recovery with this same constant.
+pub const RECOVERY_PANEL_COLS: usize = 256;
+
+/// Adds `b` into `m` at offset `(r0, c0)`.
+fn add_block(m: &mut Matrix, r0: usize, c0: usize, b: &Matrix) {
+    for c in 0..b.cols() {
+        let dst = &mut m.col_mut(c0 + c)[r0..r0 + b.rows()];
+        for (d, s) in dst.iter_mut().zip(b.col(c)) {
+            *d += s;
+        }
+    }
+}
+
+/// Adds `bᵀ` into `m` at offset `(r0, c0)`.
+fn add_block_transposed(m: &mut Matrix, r0: usize, c0: usize, b: &Matrix) {
+    for r in 0..b.rows() {
+        let dst = m.col_mut(c0 + r);
+        for c in 0..b.cols() {
+            dst[r0 + c] += b.get(r, c);
+        }
+    }
+}
+
+/// One mode of the stacked solve, streamed: accumulates the normal
+/// equations `Gram = Σ_p U_pᵀU_p` (`dim×dim`) and `AᵀB = Σ_p U_pᵀA_p`
+/// (`dim×R`) from `L × ≤PANEL` column panels — generated or cut on demand —
+/// then solves by Cholesky.  Panel pairs cover the Gram's upper block
+/// triangle; the lower mirrors by symmetry.  The accumulation order (`p`
+/// outer, panels inner, single-threaded) is fixed, so the result is a pure
+/// function of the panel *values* — which is what makes the two map tiers
+/// bitwise interchangeable here.
+fn recover_mode(
+    aligned: &[CpModel],
+    maps: &MapSource,
+    mode: usize,
+    factor: impl Fn(&CpModel) -> &Matrix,
+) -> Result<Matrix> {
+    let dim = maps.dims()[mode];
+    let l = maps.reduced()[mode];
+    let rows = maps.p_count() * l;
+    if rows < dim {
+        bail!("stacked system underdetermined: {rows}×{dim} (need P·L ≥ dim)");
+    }
+    // Anchor rows repeat across replicas, so the stacked map's column rank
+    // is at most S + P·(L−S), not P·L.  Reject rank deficiency up front:
+    // the damped Cholesky below would otherwise return a finite ridge
+    // solution instead of an error.  (Always ≥ L, so pass-through modes
+    // with dim ≤ L are never rejected.)
+    let s = maps.anchor_rows().min(l);
+    let col_rank_bound = s + maps.p_count() * (l - s);
+    if col_rank_bound < dim {
+        bail!(
+            "stacked map rank-deficient on mode {mode}: S + P·(L−S) = {col_rank_bound} < \
+             dim {dim} (anchors repeat across replicas); add replicas or shrink S"
+        );
+    }
+    let rank = factor(&aligned[0]).cols();
+    let w = RECOVERY_PANEL_COLS.min(dim).max(1);
+    let mut gram = Matrix::zeros(dim, dim);
+    let mut atb = Matrix::zeros(dim, rank);
+    let (mut buf_a, mut buf_b) = (Vec::new(), Vec::new());
+    for (p, model) in aligned.iter().enumerate() {
+        let fac = factor(model); // L × R
+        assert_eq!(fac.rows(), l, "replica {p} factor rows ≠ reduced dim");
+        let mut a0 = 0;
+        while a0 < dim {
+            let a1 = (a0 + w).min(dim);
+            let pan_a = maps.panel(p, mode, a0, a1, std::mem::take(&mut buf_a));
+            add_block(&mut atb, a0, 0, &matmul(&pan_a, Trans::Yes, fac, Trans::No));
+            add_block(&mut gram, a0, a0, &matmul(&pan_a, Trans::Yes, &pan_a, Trans::No));
+            let mut b0 = a1;
+            while b0 < dim {
+                let b1 = (b0 + w).min(dim);
+                let pan_b = maps.panel(p, mode, b0, b1, std::mem::take(&mut buf_b));
+                let blk = matmul(&pan_a, Trans::Yes, &pan_b, Trans::No);
+                add_block(&mut gram, a0, b0, &blk);
+                add_block_transposed(&mut gram, b0, a0, &blk);
+                buf_b = pan_b.into_vec();
+                b0 = b1;
+            }
+            buf_a = pan_a.into_vec();
+            a0 = a1;
+        }
+    }
+    match cholesky_solve(&gram, &atb) {
+        Ok(x) if x.data().iter().all(|v| v.is_finite()) => Ok(x),
+        // The Gaussian stacked map is well-conditioned with overwhelming
+        // probability, so this path is defensive.  Materialized tier:
+        // fall back to dense QR on the (small) stack.  Procedural tier:
+        // materializing a `P·L × dim` stack is exactly what this solver
+        // exists to avoid — fail loudly instead.
+        _ => match maps.tier() {
+            MapTier::Materialized => {
+                let m = maps.materialized().expect("materialized tier");
+                let stack = match mode {
+                    0 => m.stacked_u(),
+                    1 => m.stacked_v(),
+                    _ => m.stacked_w(),
+                };
+                let rhs = Matrix::vstack(&aligned.iter().map(&factor).collect::<Vec<_>>());
+                crate::linalg::qr_solve(&stack, &rhs)
+                    .context("stacked least squares (QR fallback)")
+            }
+            MapTier::Procedural => bail!(
+                "stacked Gram not positive definite for mode {mode} and the \
+                 procedural tier has no dense fallback; rerun with \
+                 map_tier=materialized or more replicas"
+            ),
+        },
+    }
+}
+
+/// Solves the stacked least squares (Eq. 4) for all three modes by
+/// **streaming column panels** of the stacked maps — no `P·L × I` matrix is
+/// ever materialized, so recovery works unchanged for both map tiers.
 ///
-/// `aligned` are the anchor-normalized, permutation-aligned replica models.
-pub fn stacked_recover(aligned: &[CpModel], maps: &ReplicaMaps) -> Result<CpModel> {
+/// `aligned` are the anchor-normalized, permutation-aligned replica models,
+/// one per kept replica of `maps` (same order).
+pub fn stacked_recover(aligned: &[CpModel], maps: &MapSource) -> Result<CpModel> {
+    if aligned.is_empty() {
+        bail!("no aligned replicas to recover from");
+    }
+    if aligned.len() != maps.p_count() {
+        bail!(
+            "{} aligned replicas but {} kept maps — subset the maps to match",
+            aligned.len(),
+            maps.p_count()
+        );
+    }
+    let a = recover_mode(aligned, maps, 0, |m| &m.a)?;
+    let b = recover_mode(aligned, maps, 1, |m| &m.b)?;
+    let c = recover_mode(aligned, maps, 2, |m| &m.c)?;
+    Ok(CpModel::new(a, b, c))
+}
+
+/// The retired materializing solve — `vstack` the maps and factors, then
+/// one dense [`lstsq`] per mode.  Kept **only** as the differential oracle
+/// for the panel-streamed [`stacked_recover`] (its peak memory is the
+/// `P·L × I` stack this refactor eliminates).
+#[doc(hidden)]
+pub fn stacked_recover_vstack(aligned: &[CpModel], maps: &ReplicaMaps) -> Result<CpModel> {
     if aligned.is_empty() {
         bail!("no aligned replicas to recover from");
     }
@@ -34,18 +174,9 @@ pub fn stacked_recover(aligned: &[CpModel], maps: &ReplicaMaps) -> Result<CpMode
         }
         lstsq(&stack_map, &stacked).context("stacked least squares")
     };
-    let a = per_mode(
-        maps.stacked_u(),
-        aligned.iter().map(|m| &m.a).collect(),
-    )?;
-    let b = per_mode(
-        maps.stacked_v(),
-        aligned.iter().map(|m| &m.b).collect(),
-    )?;
-    let c = per_mode(
-        maps.stacked_w(),
-        aligned.iter().map(|m| &m.c).collect(),
-    )?;
+    let a = per_mode(maps.stacked_u(), aligned.iter().map(|m| &m.a).collect())?;
+    let b = per_mode(maps.stacked_v(), aligned.iter().map(|m| &m.b).collect())?;
+    let c = per_mode(maps.stacked_w(), aligned.iter().map(|m| &m.c).collect())?;
     Ok(CpModel::new(a, b, c))
 }
 
@@ -402,19 +533,19 @@ mod tests {
     use crate::util::rng::Xoshiro256;
 
     /// Builds the exact compressed models `A_p = U_p A` (no ALS noise) to
-    /// test the algebra of recovery in isolation.
-    fn exact_replica_models(
-        truth: &CpModel,
-        maps: &ReplicaMaps,
-    ) -> Vec<CpModel> {
-        use crate::linalg::{matmul, Trans};
-        maps.replicas
-            .iter()
-            .map(|r| {
+    /// test the algebra of recovery in isolation.  Works for either tier —
+    /// maps are read through whole-map panels.
+    fn exact_replica_models(truth: &CpModel, maps: &MapSource) -> Vec<CpModel> {
+        let [i, j, k] = maps.dims();
+        (0..maps.p_count())
+            .map(|p| {
+                let u = maps.panel(p, 0, 0, i, Vec::new());
+                let v = maps.panel(p, 1, 0, j, Vec::new());
+                let w = maps.panel(p, 2, 0, k, Vec::new());
                 CpModel::new(
-                    matmul(&r.u, Trans::No, &truth.a, Trans::No),
-                    matmul(&r.v, Trans::No, &truth.b, Trans::No),
-                    matmul(&r.w, Trans::No, &truth.c, Trans::No),
+                    matmul(&u, Trans::No, &truth.a, Trans::No),
+                    matmul(&v, Trans::No, &truth.b, Trans::No),
+                    matmul(&w, Trans::No, &truth.c, Trans::No),
                 )
             })
             .collect()
@@ -434,7 +565,7 @@ mod tests {
         // Rank of the stacked map is S + P(L−S) = 4 + 8·4 = 36 ≥ 30.
         let dims = [30, 28, 26];
         let truth = truth_model(dims, 3, 300);
-        let maps = ReplicaMaps::generate(dims, [8, 8, 8], 8, 4, 301);
+        let maps = MapSource::generate(dims, [8, 8, 8], 8, 4, 301, MapTier::Materialized);
         let models = exact_replica_models(&truth, &maps);
         // With exact (unpermuted, unscaled) replicas, stacked recovery must
         // reproduce the factors exactly.
@@ -448,16 +579,63 @@ mod tests {
     fn stacked_recovery_rejects_underdetermined() {
         let dims = [100, 10, 10];
         let truth = truth_model(dims, 2, 302);
-        let maps = ReplicaMaps::generate(dims, [5, 5, 5], 2, 3, 303); // 2·5 < 100
+        // 2·5 < 100: the stacked system cannot determine mode 1.
+        let maps = MapSource::generate(dims, [5, 5, 5], 2, 3, 303, MapTier::Materialized);
         let models = exact_replica_models(&truth, &maps);
         assert!(stacked_recover(&models, &maps).is_err());
+    }
+
+    #[test]
+    fn streamed_recovery_matches_vstack_oracle() {
+        // The panel-streamed normal-equation solve vs the retired
+        // materializing lstsq: same system, so the minimizers agree to
+        // numerical precision — without the P·L×I stack ever existing.
+        // dim 300 > RECOVERY_PANEL_COLS=256 exercises the multi-panel
+        // (off-diagonal Gram block) path.
+        // Stacked-map column rank is S + P(L−S) = 4 + 40·8 = 324 ≥ 300.
+        let dims = [300, 40, 30];
+        let truth = truth_model(dims, 3, 320);
+        let maps = MapSource::generate(dims, [12, 10, 9], 40, 4, 321, MapTier::Materialized);
+        let models = exact_replica_models(&truth, &maps);
+        let streamed = stacked_recover(&models, &maps).unwrap();
+        let oracle =
+            stacked_recover_vstack(&models, maps.materialized().unwrap()).unwrap();
+        let a_err = streamed.a.rel_error(&oracle.a);
+        assert!(a_err < 1e-3, "A err {a_err}");
+        assert!(streamed.b.rel_error(&oracle.b) < 1e-3);
+        assert!(streamed.c.rel_error(&oracle.c) < 1e-3);
+    }
+
+    #[test]
+    fn streamed_recovery_is_tier_bitwise_invariant() {
+        // Stacked-map column rank is S + P(L−S) = 3 + 12·6 = 75 ≥ 60.
+        let dims = [60, 50, 40];
+        let truth = truth_model(dims, 2, 322);
+        let mat = MapSource::generate(dims, [9, 9, 9], 12, 3, 323, MapTier::Materialized);
+        let proc_ = MapSource::generate(dims, [9, 9, 9], 12, 3, 323, MapTier::Procedural);
+        let models = exact_replica_models(&truth, &mat);
+        let a = stacked_recover(&models, &mat).unwrap();
+        let b = stacked_recover(&models, &proc_).unwrap();
+        assert_eq!(a.a.data(), b.a.data());
+        assert_eq!(a.b.data(), b.b.data());
+        assert_eq!(a.c.data(), b.c.data());
+    }
+
+    #[test]
+    fn recovery_rejects_mismatched_replica_count() {
+        let dims = [20, 20, 20];
+        let truth = truth_model(dims, 2, 324);
+        let maps = MapSource::generate(dims, [8, 8, 8], 4, 3, 325, MapTier::Materialized);
+        let models = exact_replica_models(&truth, &maps);
+        // Dropping a model without subsetting the maps must fail loudly.
+        assert!(stacked_recover(&models[..3], &maps).is_err());
     }
 
     #[test]
     fn normalize_and_align_with_planted_perms() {
         let dims = [24, 24, 24];
         let truth = truth_model(dims, 3, 304);
-        let maps = ReplicaMaps::generate(dims, [8, 8, 8], 5, 4, 305);
+        let maps = MapSource::generate(dims, [8, 8, 8], 5, 4, 305, MapTier::Materialized);
         let mut models = exact_replica_models(&truth, &maps);
         // Scramble replicas 1.. with per-replica permutation and scales.
         let perms = [[1usize, 2, 0], [2, 0, 1], [0, 2, 1], [1, 0, 2]];
@@ -549,7 +727,7 @@ mod tests {
         // stack → corner-disambiguate must reproduce the planted tensor.
         let dims = [26, 26, 26];
         let truth = truth_model(dims, 2, 309);
-        let maps = ReplicaMaps::generate(dims, [9, 9, 9], 4, 3, 310);
+        let maps = MapSource::generate(dims, [9, 9, 9], 4, 3, 310, MapTier::Materialized);
         let mut models = exact_replica_models(&truth, &maps);
         for (idx, m) in models.iter_mut().enumerate() {
             let perm = if idx % 2 == 0 { [1usize, 0] } else { [0usize, 1] };

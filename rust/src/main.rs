@@ -18,7 +18,7 @@
 
 use exascale_tensor::apps::{run_cp_layer_experiment, run_gene_analysis, CpBackend, GeneConfig};
 use exascale_tensor::apps::nn::{train, Network, SyntheticImages, TrainConfig};
-use exascale_tensor::coordinator::{Backend, Pipeline, PipelineConfig};
+use exascale_tensor::coordinator::{Backend, MapTierChoice, Pipeline, PipelineConfig};
 use exascale_tensor::runtime::artifacts_dir;
 use exascale_tensor::tensor::{
     save_tensor_streamed, FileTensorSource, LowRankGenerator, TensorSource,
@@ -74,6 +74,11 @@ fn decompose_cmd() -> Command {
         .opt("prefetch-depth", "staged-block queue depth (auto | 0 = off | N)", Some("auto"))
         .opt("io-threads", "I/O producer threads when prefetching", Some("2"))
         .opt("checkpoint-dir", "directory for incremental + final checkpoints", None)
+        .opt(
+            "map-tier",
+            "replica-map tier: auto | materialized | procedural (generate-on-slice)",
+            Some("auto"),
+        )
         .opt("seed", "random seed", Some("0"))
         .switch("mixed", "mixed-precision (split bf16) compression")
         .switch("help", "show help")
@@ -129,6 +134,7 @@ fn cmd_decompose(prog: &str, args: &[String]) -> i32 {
         if let Some(dir) = m.get("checkpoint-dir") {
             builder = builder.checkpoint_dir(dir);
         }
+        builder = builder.map_tier(MapTierChoice::parse(m.get("map-tier").unwrap_or("auto"))?);
         let cfg = builder.build()?;
         let mut pipe = Pipeline::new(cfg);
         if backend == Backend::Xla {
@@ -157,13 +163,15 @@ fn cmd_decompose(prog: &str, args: &[String]) -> i32 {
             pipe.run(&gen)?
         };
         println!(
-            "plan: P={} block={:?} est bytes={} out_of_core={} prefetch_depth={} io_threads={}",
+            "plan: P={} block={:?} est bytes={} out_of_core={} prefetch_depth={} \
+             io_threads={} map_tier={}",
             result.plan.replicas,
             result.plan.block,
             result.plan.estimated_bytes,
             result.plan.out_of_core,
             result.plan.prefetch_depth,
-            result.plan.io_threads
+            result.plan.io_threads,
+            result.plan.map_tier.as_str()
         );
         println!("sampled MSE      : {:.3e}", result.diagnostics.sampled_mse);
         println!("sampled rel error: {:.3e}", result.diagnostics.rel_error);
@@ -372,6 +380,12 @@ fn serve_cmd() -> Command {
         )
         .opt("workers", "concurrent jobs", Some("2"))
         .opt("cache-mb", "result-cache budget in MiB", Some("64"))
+        .opt(
+            "starvation-rounds",
+            "backfill admissions a blocked head job tolerates before the \
+             scheduler reserves the budget for it",
+            Some("8"),
+        )
         .switch("help", "show help")
 }
 
@@ -396,6 +410,7 @@ fn cmd_serve(prog: &str, args: &[String]) -> i32 {
                 memory_budget: m.get_usize("memory-budget-mb")? * (1 << 20),
                 workers: m.get_usize("workers")?,
                 cache_bytes: m.get_usize("cache-mb")? * (1 << 20),
+                starvation_rounds: m.get_u64("starvation-rounds")?,
             },
         };
         let server = exascale_tensor::serve::Server::bind(&cfg)?;
@@ -432,6 +447,7 @@ fn client_cmd() -> Command {
     .opt("memory-budget-mb", "per-job planner budget in MiB (0 = daemon default)", Some("0"))
     .opt("threads", "per-job worker threads", Some("2"))
     .opt("priority", "higher runs first", Some("0"))
+    .opt("map-tier", "replica-map tier: auto | materialized | procedural", Some("auto"))
     .opt("seed", "random seed", Some("0"))
     .opt("poll-ms", "--wait poll interval", Some("200"))
     .switch("wait", "block until the submitted job is terminal")
@@ -480,6 +496,7 @@ fn cmd_client(prog: &str, args: &[String]) -> i32 {
                     .block([block, block, block])
                     .threads(m.get_usize("threads")?)
                     .memory_budget(m.get_usize("memory-budget-mb")? * (1 << 20))
+                    .map_tier(MapTierChoice::parse(m.get("map-tier").unwrap_or("auto"))?)
                     .seed(seed)
                     .build()?;
                 Request::Submit(JobSpec {

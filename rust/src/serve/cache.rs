@@ -132,7 +132,10 @@ pub fn cache_key(spec: &JobSpec) -> Result<String> {
     // Config hash over the canonical JSON minus execution-only knobs.
     let mut cfg = spec.config.to_json();
     if let Json::Obj(m) = &mut cfg {
-        for k in ["threads", "io_threads", "prefetch_depth", "checkpoint_dir"] {
+        // `map_tier` is execution-only too: both tiers produce bitwise
+        // identical factors by construction (tests/map_tiers.rs), so a
+        // procedural resubmission of a materialized job is a cache hit.
+        for k in ["threads", "io_threads", "prefetch_depth", "checkpoint_dir", "map_tier"] {
             m.remove(k);
         }
     }
@@ -322,6 +325,10 @@ mod tests {
         assert_eq!(k1, k2, "thread count must not split cache lines");
         let k3 = cache_key(&spec(2, 2)).unwrap();
         assert_ne!(k1, k3, "seed changes the result, must change the key");
+        // Map tier is bitwise-invisible to results: same cache line.
+        let mut tiered = spec(1, 2);
+        tiered.config.map_tier = crate::coordinator::config::MapTierChoice::Procedural;
+        assert_eq!(k1, cache_key(&tiered).unwrap(), "map tier must not split cache lines");
     }
 
     #[test]

@@ -7,11 +7,17 @@
 //! admit jobs in priority-then-FIFO order, **backfilling** past any job
 //! that does not currently fit the global budget: small jobs run alongside
 //! one big out-of-core job instead of head-of-line blocking behind it.
-//! Backfill can delay a large job while smaller ones keep arriving; the
-//! trade-off is deliberate (documented in the ROADMAP) and deferrals are
-//! observable: `admission_rejected_bytes` counts each job's bytes once at
-//! its first deferral, and the `admission_deferred_bytes` gauge carries
-//! the bytes currently blocked ahead of the last admission.
+//! Backfill is **bounded by an anti-starvation reservation**
+//! ([`SchedulerConfig::starvation_rounds`]): once the head job has been
+//! passed over that many times, no new jobs are admitted until running
+//! work drains enough for the head to fit — a continuous stream of small
+//! jobs can delay a large one by at most `starvation_rounds` backfills
+//! plus one drain.  Deferrals are observable: `admission_rejected_bytes`
+//! counts each job's bytes once at its first deferral,
+//! `admission_deferred_bytes` carries the bytes currently blocked ahead of
+//! the last admission, `admission_head_deferrals` gauges the current
+//! head's consumed rounds, and `admission_reservation_holds` counts picks
+//! the reservation refused.
 //!
 //! Jobs run on a bounded pool of worker threads (one job per worker; the
 //! pipeline's own `threads` knob governs intra-job parallelism).  Each
@@ -44,6 +50,16 @@ pub struct SchedulerConfig {
     pub workers: usize,
     /// Result-cache byte budget.
     pub cache_bytes: usize,
+    /// **Anti-starvation reservation**: how many backfill admissions the
+    /// head-of-queue job tolerates while it does not fit the budget.
+    /// Once a blocked head has been passed over this many times, no
+    /// further jobs are admitted until running work drains enough for the
+    /// head to fit (it always does: a lone job's plan is clamped to the
+    /// budget at submission).  Bounds head-of-line delay to
+    /// `starvation_rounds` backfill jobs plus the drain, at the cost of
+    /// briefly idling workers.  0 disables backfill entirely (strict
+    /// priority/FIFO).
+    pub starvation_rounds: u64,
 }
 
 impl Default for SchedulerConfig {
@@ -52,6 +68,7 @@ impl Default for SchedulerConfig {
             memory_budget: 0,
             workers: 2,
             cache_bytes: 64 << 20,
+            starvation_rounds: 8,
         }
     }
 }
@@ -70,6 +87,10 @@ struct State {
     /// `admission_rejected_bytes` counter (count once per deferral, not
     /// once per worker wakeup).
     deferred_seen: BTreeSet<JobId>,
+    /// Anti-starvation bookkeeping: the currently blocked head-of-queue
+    /// job and how many backfill jobs have been admitted past it.  Reset
+    /// whenever the head changes or is admitted.
+    head_block: Option<(JobId, u64)>,
     next_seq: u64,
     shutting_down: bool,
 }
@@ -79,6 +100,7 @@ struct Inner {
     cache: ResultCache,
     metrics: Arc<Metrics>,
     budget: usize,
+    starvation_rounds: u64,
     state: Mutex<State>,
     cv: Condvar,
 }
@@ -105,6 +127,7 @@ impl Scheduler {
             running_peak: 0,
             cancel_requested: BTreeSet::new(),
             deferred_seen: BTreeSet::new(),
+            head_block: None,
             next_seq: 1,
             shutting_down: false,
         };
@@ -144,6 +167,7 @@ impl Scheduler {
             cache: ResultCache::new(cfg.cache_bytes),
             metrics,
             budget: cfg.memory_budget,
+            starvation_rounds: cfg.starvation_rounds,
             state: Mutex::new(state),
             cv: Condvar::new(),
         });
@@ -442,11 +466,20 @@ impl Inner {
     /// admitted job are exported as the `admission_deferred_bytes` gauge —
     /// so queueing under memory pressure is observable via `METRICS`
     /// without the magnitude depending on worker wakeup frequency.
+    ///
+    /// **Anti-starvation reservation**: backfill past a blocked head job is
+    /// capped at `starvation_rounds` admissions.  Past the cap, nothing is
+    /// admitted until running work drains enough for the head to fit — a
+    /// continuous stream of small jobs can no longer starve a large one
+    /// (the documented PR 4 trade-off, now bounded).  Safe from deadlock:
+    /// submission clamps every plan to the global budget, so the head
+    /// always fits an empty budget, which the drain reaches.
     /// Returns the picked id plus a record snapshot for the caller to
     /// persist off-lock.
     fn pick_admissible(&self, st: &mut State) -> Option<(JobId, JobRecord)> {
         let mut chosen = None;
         let mut deferred_bytes = 0u64;
+        let mut reservation_hold = false;
         for (pos, id) in st.queue.iter().enumerate() {
             let pb = st.records[id].plan_bytes;
             if self.budget == 0 || st.used_bytes + pb <= self.budget {
@@ -457,9 +490,43 @@ impl Inner {
             if st.deferred_seen.insert(id.clone()) {
                 self.metrics.incr("admission_rejected_bytes", pb as u64);
             }
+            if pos == 0 {
+                // The head is blocked: consult (and maybe start) its
+                // deferral count.  A changed head resets the count.
+                let rounds = match &st.head_block {
+                    Some((hid, n)) if hid == id => *n,
+                    _ => {
+                        st.head_block = Some((id.clone(), 0));
+                        0
+                    }
+                };
+                self.metrics.set("admission_head_deferrals", rounds);
+                if rounds >= self.starvation_rounds {
+                    reservation_hold = true;
+                    break;
+                }
+            }
+        }
+        if reservation_hold {
+            self.metrics.incr("admission_reservation_holds", 1);
+            self.metrics.set("admission_deferred_bytes", deferred_bytes);
+            return None;
         }
         self.metrics.set("admission_deferred_bytes", deferred_bytes);
         let pos = chosen?;
+        // Admitting past a blocked head consumes one of its tolerance
+        // rounds; admitting the head itself clears the bookkeeping.
+        if pos > 0 {
+            if let (Some((hid, n)), Some(head)) = (&mut st.head_block, st.queue.first()) {
+                if hid == head {
+                    *n += 1;
+                    self.metrics.set("admission_head_deferrals", *n);
+                }
+            }
+        } else {
+            st.head_block = None;
+            self.metrics.set("admission_head_deferrals", 0);
+        }
         let id = st.queue.remove(pos);
         st.deferred_seen.remove(&id);
         let pb = st.records[&id].plan_bytes;
@@ -665,6 +732,23 @@ mod tests {
         }
     }
 
+    fn big_spec(seed: u64, priority: i64) -> JobSpec {
+        JobSpec {
+            source: JobSource::Synthetic { size: 48, rank: 2, noise: 0.0, seed },
+            config: PipelineConfig::builder()
+                .reduced_dims(12, 12, 12)
+                .rank(2)
+                .anchor_rows(4)
+                .block([12, 12, 12])
+                .als(120, 1e-10)
+                .threads(2)
+                .seed(seed)
+                .build()
+                .unwrap(),
+            priority,
+        }
+    }
+
     fn sched(dir: &std::path::Path, cfg: SchedulerConfig) -> Scheduler {
         Scheduler::new(Spool::open(dir).unwrap(), cfg, Arc::new(Metrics::new())).unwrap()
     }
@@ -706,6 +790,79 @@ mod tests {
         };
         assert!(s.submit(spec).is_err());
         assert_eq!(s.jobs().len(), 0);
+        s.shutdown();
+        s.join();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn reservation_unblocks_starved_head() {
+        let dir = tmpdir("starve");
+        // Price the jobs exactly as submit() will (checkpoint dir present,
+        // per-job budget clamped to the global one).
+        let price = |spec: &JobSpec, budget: usize| {
+            let mut cfg = spec.config.clone();
+            if budget > 0 {
+                cfg.memory_budget = budget;
+            }
+            cfg.checkpoint_dir = Some(dir.join("probe"));
+            MemoryPlanner::plan(&cfg, spec.source.dims().unwrap())
+                .unwrap()
+                .estimated_bytes
+        };
+        let v_s = price(&small_spec(30, 0), 0);
+        let v_b = price(&big_spec(22, 5), 0);
+        // Shape invariants this scenario needs: two smalls coexist, the
+        // big job never coexists with a small, the big job fits alone.
+        assert!(v_b >= 2 * v_s, "big plan {v_b} must cost ≥ 2 smalls ({v_s})");
+        let budget = v_b + v_s / 2;
+        assert_eq!(v_s, price(&small_spec(30, 0), budget), "budget must not reshape smalls");
+        assert_eq!(v_b, price(&big_spec(22, 5), budget), "budget must not reshape the big job");
+
+        let s = sched(
+            &dir,
+            SchedulerConfig {
+                memory_budget: budget,
+                workers: 2,
+                starvation_rounds: 2,
+                ..Default::default()
+            },
+        );
+        // One small occupies part of the budget, then the high-priority
+        // big job becomes the blocked head while more smalls stream in —
+        // the PR 4 starvation scenario.  Wait for the first small to be
+        // *running* before submitting the big job, so the head is
+        // deterministically blocked (not admitted into an empty budget).
+        let first = s.submit(small_spec(30, 0)).unwrap();
+        let t0 = Instant::now();
+        while s.status(&first.id).unwrap().state == JobState::Queued {
+            assert!(t0.elapsed() < Duration::from_secs(60), "first job never started");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let big = s.submit(big_spec(22, 5)).unwrap();
+        let smalls: Vec<_> =
+            (0..5).map(|i| s.submit(small_spec(40 + i, 0)).unwrap()).collect();
+
+        let done_big = s.wait(&big.id, Duration::from_secs(300)).unwrap();
+        assert_eq!(done_big.state, JobState::Done, "err: {:?}", done_big.error);
+        // The reservation must have engaged at least once…
+        assert!(
+            s.metrics().counter("admission_reservation_holds") > 0,
+            "blocked head never triggered the reservation"
+        );
+        // …and bounded backfill: without it all 5 trailing smalls would
+        // finish first; with starvation_rounds = 2 at most 2 may (3 with
+        // scheduling slack).
+        let done_smalls = smalls
+            .iter()
+            .filter(|r| s.status(&r.id).unwrap().state == JobState::Done)
+            .count();
+        assert!(done_smalls <= 3, "head was starved: {done_smalls}/5 smalls finished first");
+
+        for r in smalls.iter().chain([&first]) {
+            let rec = s.wait(&r.id, Duration::from_secs(300)).unwrap();
+            assert_eq!(rec.state, JobState::Done, "err: {:?}", rec.error);
+        }
         s.shutdown();
         s.join();
         std::fs::remove_dir_all(&dir).ok();

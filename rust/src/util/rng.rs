@@ -29,6 +29,53 @@ impl SplitMix64 {
     }
 }
 
+/// SplitMix64's avalanche finalizer as a standalone bijective mixer — the
+/// primitive behind the **counter-based** generator below.
+#[inline]
+pub fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Absorbs one key word into a running hash: multiply by an odd constant
+/// (so position matters — `absorb(absorb(h,a),b) ≠ absorb(absorb(h,b),a)`)
+/// then a full avalanche.  Philox/Squares-style keyed counter hashing,
+/// built from the SplitMix64 finalizer we already carry.
+#[inline]
+fn absorb(h: u64, v: u64) -> u64 {
+    mix64(h.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ v)
+}
+
+/// Collapses a structured 5-word key into one mixed 64-bit word.  This is
+/// the **random-access** generator used by the procedural replica-map tier:
+/// any `(seed, replica, mode, row, col)` coordinate maps to its value with
+/// no sequential state, so panels can be synthesized in any order, on any
+/// thread, and always come out identical.
+#[inline]
+pub fn counter_key(seed: u64, a: u64, b: u64, c: u64, d: u64) -> u64 {
+    // wyhash's prime as the starting constant; five absorb rounds give
+    // full avalanche between every word and the output.
+    absorb(absorb(absorb(absorb(absorb(0xA076_1D64_78BD_642F, seed), a), b), c), d)
+}
+
+/// Standard-normal `f32` from a single counter key.
+///
+/// Uses the **trigonometric** Box-Muller form (not the polar/rejection form
+/// of [`Xoshiro256::next_gaussian`]): every key maps to exactly one value
+/// with no retry loop, which is what makes the mapping a pure function of
+/// the key — the property the generate-on-slice map tier depends on.
+/// `u1` is biased into `(0, 1]` so `ln` never sees zero.
+#[inline]
+pub fn gaussian_from_key(key: u64) -> f32 {
+    let a = mix64(key ^ 0xD1B5_4A32_D192_ED03);
+    let b = mix64(key ^ 0x8EBC_6AF0_9C88_C6E3);
+    let u1 = ((a >> 11) + 1) as f64 * (1.0 / (1u64 << 53) as f64);
+    let u2 = (b >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+    let r = (-2.0 * u1.ln()).sqrt();
+    (r * (std::f64::consts::TAU * u2).cos()) as f32
+}
+
 /// xoshiro256++ 1.0 — fast, high-quality 64-bit generator
 /// (Blackman & Vigna, 2019).
 #[derive(Clone, Debug)]
@@ -262,6 +309,58 @@ mod tests {
             assert!(w[0] < w[1]);
         }
         assert!(*idx.last().unwrap() < 50);
+    }
+
+    #[test]
+    fn counter_key_is_pure_and_order_sensitive() {
+        // Pure function: same coordinates → same word.
+        assert_eq!(counter_key(7, 1, 2, 3, 4), counter_key(7, 1, 2, 3, 4));
+        // Every word position matters (transposed coordinates differ).
+        assert_ne!(counter_key(7, 1, 2, 3, 4), counter_key(7, 2, 1, 3, 4));
+        assert_ne!(counter_key(7, 1, 2, 3, 4), counter_key(7, 1, 2, 4, 3));
+        assert_ne!(counter_key(7, 1, 2, 3, 4), counter_key(8, 1, 2, 3, 4));
+        // No trivial collisions over a coordinate grid.
+        let mut seen = std::collections::BTreeSet::new();
+        for a in 0..20u64 {
+            for b in 0..20u64 {
+                for c in 0..20u64 {
+                    assert!(seen.insert(counter_key(9, a, b, c, 0)));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn counter_gaussian_moments() {
+        // The keyed sampler must match the sequential sampler's
+        // distribution: mean 0, variance 1, bounded tails.
+        let n = 50_000u64;
+        let (mut m1, mut m2) = (0.0f64, 0.0f64);
+        for i in 0..n {
+            let g = gaussian_from_key(counter_key(42, i, 0, 0, 0)) as f64;
+            assert!(g.is_finite());
+            assert!(g.abs() < 10.0, "implausible tail {g}");
+            m1 += g;
+            m2 += g * g;
+        }
+        m1 /= n as f64;
+        m2 /= n as f64;
+        assert!(m1.abs() < 0.02, "mean={m1}");
+        assert!((m2 - 1.0).abs() < 0.05, "var={m2}");
+    }
+
+    #[test]
+    fn counter_gaussian_decorrelated_across_key_words() {
+        // Adjacent coordinates (the worst case for a weak mixer) must be
+        // uncorrelated.
+        let n = 20_000u64;
+        let mut dot = 0.0f64;
+        for i in 0..n {
+            let x = gaussian_from_key(counter_key(3, i, 0, 5, 9)) as f64;
+            let y = gaussian_from_key(counter_key(3, i + 1, 0, 5, 9)) as f64;
+            dot += x * y;
+        }
+        assert!((dot / n as f64).abs() < 0.03, "lag-1 corr {}", dot / n as f64);
     }
 
     #[test]

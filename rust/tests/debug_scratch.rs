@@ -5,7 +5,8 @@
 //! Each prints stage-by-stage numbers and then panics so the output is
 //! always shown; they are measurement tools, not assertions.
 use exascale_tensor::compress::{
-    compress_source, compress_source_sparse, ReplicaMaps, RustCompressor, SparseSignMatrix,
+    compress_source, compress_source_sparse, MapSource, MapTier, ReplicaMaps, RustCompressor,
+    SparseSignMatrix,
 };
 use exascale_tensor::coordinator::recovery::{
     entry_calibrate, normalize_and_align, sensing_recover_mode, stacked_recover,
@@ -42,7 +43,7 @@ fn debug_sensing_stages() {
     let z_exact = exascale_tensor::tensor::DenseTensor::from_cp_factors(&za, &zb, &zc);
     eprintln!("Z vs exact: rel {}", z.rel_error(&z_exact));
 
-    let maps2 = ReplicaMaps::generate([al, al, al], reduced, 12, anchor, seed ^ 0x54);
+    let maps2 = MapSource::generate([al, al, al], reduced, 12, anchor, seed ^ 0x54, MapTier::Materialized);
     let z_src = InMemorySource::new(z);
     let comp = RustCompressor { precision: MixedPrecision::Full };
     let proxies = compress_source(&z_src, &maps2, [al, al, al], &comp, &pool);
@@ -126,7 +127,7 @@ fn debug_gene_pipeline_stages() {
     let reduced = [15usize, 15, 40];
     let anchor = 7;
     let p = 30;
-    let maps = ReplicaMaps::generate([120, 30, 800], reduced, p, anchor, 1 ^ 0x6E6E);
+    let maps = MapSource::generate([120, 30, 800], reduced, p, anchor, 1 ^ 0x6E6E, MapTier::Materialized);
     let pool = ThreadPool::new(8);
     let comp = RustCompressor { precision: MixedPrecision::Full };
     let proxies = compress_source(&gen, &maps, [100, 30, 250], &comp, &pool);
@@ -155,7 +156,7 @@ fn perf_compress_batched_vs_plain() {
     use exascale_tensor::tensor::LowRankGenerator;
     use std::time::Instant;
     let gen = LowRankGenerator::new(240, 240, 240, 5, 9000);
-    let maps = ReplicaMaps::generate([240, 240, 240], [24, 24, 24], 21, 7, 9001);
+    let maps = MapSource::generate([240, 240, 240], [24, 24, 24], 21, 7, 9001, MapTier::Materialized);
     let pool = ThreadPool::new(1);
     let comp = RustCompressor { precision: MixedPrecision::Full };
     let t0 = Instant::now();
@@ -174,7 +175,7 @@ fn perf_compress_batched_vs_plain() {
 fn perf_compress_profile_target() {
     use exascale_tensor::tensor::LowRankGenerator;
     let gen = LowRankGenerator::new(240, 240, 240, 5, 9000);
-    let maps = ReplicaMaps::generate([240, 240, 240], [24, 24, 24], 21, 7, 9001);
+    let maps = MapSource::generate([240, 240, 240], [24, 24, 24], 21, 7, 9001, MapTier::Materialized);
     let pool = ThreadPool::new(1);
     let comp = RustCompressor { precision: MixedPrecision::Full };
     for _ in 0..2 {

@@ -3,8 +3,8 @@
 //! kill/resume invariance of incremental compression checkpoints.
 
 use exascale_tensor::compress::{
-    compress_source_batched_opts, compress_source_opts, PrefetchConfig, ReplicaMaps, ResumeState,
-    RustCompressor, StreamOptions,
+    compress_source_batched_opts, compress_source_opts, MapSource, MapTier, PrefetchConfig,
+    ResumeState, RustCompressor, StreamOptions,
 };
 use exascale_tensor::coordinator::checkpoint::{self, CompressionProgress};
 use exascale_tensor::coordinator::{MemoryPlanner, Pipeline, PipelineConfig};
@@ -101,7 +101,7 @@ fn out_of_core_budgeted_run_succeeds_under_budget() {
 #[test]
 fn compress_kill_resume_is_bitwise_invariant() {
     let gen = LowRankGenerator::new(24, 24, 24, 2, 904);
-    let maps = ReplicaMaps::generate([24, 24, 24], [6, 6, 6], 3, 2, 905);
+    let maps = MapSource::generate([24, 24, 24], [6, 6, 6], 3, 2, 905, MapTier::Materialized);
     let comp = RustCompressor { precision: MixedPrecision::Full };
     let block = [5, 5, 5];
     let opts = StreamOptions { threads: 2, ..Default::default() };
@@ -196,12 +196,13 @@ fn pipeline_resumes_partial_checkpoint() {
     let dir = tmppath("pipeline_partial");
     let base = cfg(None);
     let plan = MemoryPlanner::plan(&base, dims).unwrap();
-    let maps = ReplicaMaps::generate(
+    let maps = MapSource::generate(
         dims,
         base.reduced,
         plan.replicas,
         base.effective_anchor(),
         base.seed,
+        plan.map_tier,
     );
     let fp = checkpoint::default_fingerprint(&base, dims, plan.replicas);
     let opts = StreamOptions { threads: 2, ..Default::default() };
@@ -254,7 +255,7 @@ fn file_backed_prefetch_bitwise_matches_sync() {
     let fsrc = FileTensorSource::open(&path).unwrap();
     let msrc = InMemorySource::new(exascale_tensor::tensor::io::load_tensor(&path).unwrap());
 
-    let maps = ReplicaMaps::generate([20, 20, 20], [6, 6, 6], 2, 2, 909);
+    let maps = MapSource::generate([20, 20, 20], [6, 6, 6], 2, 2, 909, MapTier::Materialized);
     let comp = RustCompressor { precision: MixedPrecision::Full };
     let sync_mem = compress_source_opts(
         &msrc,

@@ -3,7 +3,7 @@
 //! and crash recovery (spooled jobs + mid-compression checkpoint resume
 //! with bitwise-identical output).
 
-use exascale_tensor::compress::{compress_source_batched_opts, ReplicaMaps, StreamOptions};
+use exascale_tensor::compress::{compress_source_batched_opts, MapSource, StreamOptions};
 use exascale_tensor::coordinator::checkpoint::{self, CompressionProgress};
 use exascale_tensor::coordinator::{MemoryPlanner, Pipeline, PipelineConfig};
 use exascale_tensor::serve::{
@@ -102,7 +102,7 @@ fn daemon_admission_cache_and_graceful_shutdown() {
     let budget = p + p / 2;
     let (addr, handle) = start_server(
         &dir,
-        SchedulerConfig { memory_budget: budget, workers: 3, cache_bytes: 64 << 20 },
+        SchedulerConfig { memory_budget: budget, workers: 3, cache_bytes: 64 << 20, ..Default::default() },
     );
 
     let recs: Vec<JobRecord> = (1..=3).map(|s| submit(&addr, &spec(s))).collect();
@@ -180,12 +180,13 @@ fn daemon_restart_recovers_spool_and_resumes_bitwise() {
     run_cfg.checkpoint_dir = Some(ckpt.clone());
     let dims = job_spec.source.dims().unwrap();
     let plan = MemoryPlanner::plan(&run_cfg, dims).unwrap();
-    let maps = ReplicaMaps::generate(
+    let maps = MapSource::generate(
         dims,
         run_cfg.reduced,
         plan.replicas,
         run_cfg.effective_anchor(),
         run_cfg.seed,
+        plan.map_tier,
     );
     let fp = checkpoint::default_fingerprint(&run_cfg, dims, plan.replicas);
     let opts = StreamOptions { threads: 2, ..Default::default() };
@@ -235,7 +236,7 @@ fn daemon_restart_recovers_spool_and_resumes_bitwise() {
     // "Restart" the daemon on the crashed spool.
     let (addr, handle) = start_server(
         &dir,
-        SchedulerConfig { memory_budget: 0, workers: 1, cache_bytes: 16 << 20 },
+        SchedulerConfig { memory_budget: 0, workers: 1, cache_bytes: 16 << 20, ..Default::default() },
     );
     assert_eq!(metric(&addr, "jobs_recovered"), 1);
     assert_eq!(metric(&addr, "jobs_resumable"), 1);
