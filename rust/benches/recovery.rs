@@ -1,0 +1,201 @@
+//! `BENCH_recovery` — the stacked solve's memory trajectory across solvers.
+//!
+//! Builds exact compressed replicas `A_p = U_p·A` against **procedural**
+//! maps (so no `P·L × I` stack exists anywhere), then runs the stacked
+//! recovery with the counting global allocator bracketing each solve, and
+//! **asserts**:
+//!
+//! 1. the dense (Cholesky) solver's peak grows ≈ quadratically with `I` —
+//!    the `I×I` Gram this PR's iterative path exists to kill;
+//! 2. the matrix-free CGNR solver's peak grows only ≈ linearly with `I`
+//!    (the `dim×R` right-hand side + `O(dim)` CG state) across a **16×**
+//!    sweep that the dense solver could not even attempt;
+//! 3. at a common size every solver (Cholesky, CGNR, sketch+polish)
+//!    recovers the planted factors, so the memory win is not bought with
+//!    a wrong answer.
+//!
+//! `--quick` bounds sizes for the CI smoke job; failures are hard
+//! `assert!`s so a recovery memory regression fails CI instead of rotting.
+
+use exascale_tensor::bench_harness::{bench_once, Report};
+use exascale_tensor::compress::{MapSource, MapTier};
+use exascale_tensor::coordinator::config::RecoverySolverKind;
+use exascale_tensor::coordinator::recovery::{stacked_recover_opts, RecoveryOptions};
+use exascale_tensor::cp::CpModel;
+use exascale_tensor::linalg::iterative::CgOptions;
+use exascale_tensor::linalg::{matmul, Matrix, Trans};
+use exascale_tensor::util::alloc::CountingAlloc;
+use exascale_tensor::util::rng::Xoshiro256;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new();
+
+/// Fixed shapes: reduced dims and anchors are pinned; only `P` follows `I`
+/// (the identifiability bound `S + P·(L−S) ≥ I` forces it, exactly as the
+/// planner does), so peak-memory growth is attributable to the solver.
+const L: usize = 32;
+const S: usize = 4;
+const JK: usize = 64;
+const RANK: usize = 2;
+
+fn replicas_for(i_dim: usize) -> usize {
+    (i_dim.saturating_sub(S)).div_ceil(L - S) + 2
+}
+
+/// `A_p = U_p·A` streamed in column panels — the bench never holds a map
+/// bigger than one `L×panel` scratch, same as the pipeline.
+fn compress_factor(maps: &MapSource, p: usize, mode: usize, truth: &Matrix) -> Matrix {
+    let dim = maps.dims()[mode];
+    let l = maps.reduced()[mode];
+    let mut fac = Matrix::zeros(l, truth.cols());
+    let mut buf = Vec::new();
+    let mut a0 = 0;
+    while a0 < dim {
+        let a1 = (a0 + 256).min(dim);
+        let pan = maps.panel(p, mode, a0, a1, std::mem::take(&mut buf));
+        let part = matmul(&pan, Trans::No, &truth.slice_rows(a0, a1), Trans::No);
+        for c in 0..fac.cols() {
+            for (d, s) in fac.col_mut(c).iter_mut().zip(part.col(c)) {
+                *d += s;
+            }
+        }
+        buf = pan.into_vec();
+        a0 = a1;
+    }
+    fac
+}
+
+struct Fixture {
+    truth: CpModel,
+    models: Vec<CpModel>,
+    maps: MapSource,
+}
+
+fn fixture(i_dim: usize) -> Fixture {
+    let dims = [i_dim, JK, JK];
+    let p = replicas_for(i_dim);
+    let maps = MapSource::generate(dims, [L, L, L], p, S, 4242, MapTier::Procedural);
+    let mut rng = Xoshiro256::seed_from_u64(900 + i_dim as u64);
+    let truth = CpModel::new(
+        Matrix::random_normal(dims[0], RANK, &mut rng),
+        Matrix::random_normal(dims[1], RANK, &mut rng),
+        Matrix::random_normal(dims[2], RANK, &mut rng),
+    );
+    let models = (0..p)
+        .map(|p| {
+            CpModel::new(
+                compress_factor(&maps, p, 0, &truth.a),
+                compress_factor(&maps, p, 1, &truth.b),
+                compress_factor(&maps, p, 2, &truth.c),
+            )
+        })
+        .collect();
+    Fixture { truth, models, maps }
+}
+
+struct Case {
+    peak_bytes: usize,
+    model: CpModel,
+}
+
+/// Measures one stacked solve: the fixture (truth, replicas, map spec) is
+/// live before the bracket, so `peak − live0` is the *solver's* footprint —
+/// Gram + factorization for Cholesky, RHS + `O(dim)` CG state for CGNR.
+fn run_case(rep: &mut Report, fx: &Fixture, solver: RecoverySolverKind) -> Case {
+    let i_dim = fx.maps.dims()[0];
+    let opts = RecoveryOptions {
+        solver,
+        // A slightly looser tolerance than the pipeline default: the bench
+        // compares against the planted truth, not bitwise against an
+        // oracle, and fewer sweeps keep the 16× case CI-sized.
+        cg: CgOptions { tol: 1e-4, ..CgOptions::default() },
+        ..RecoveryOptions::default()
+    };
+    ALLOC.reset_peak();
+    let live0 = ALLOC.live_bytes();
+    let name = format!("recovery_{}_{i_dim}", solver.as_str());
+    let (meas, out) =
+        bench_once(&name, || stacked_recover_opts(&fx.models, &fx.maps, &opts).unwrap());
+    let peak_bytes = ALLOC.peak_bytes().saturating_sub(live0);
+    let (model, stats) = out;
+    let err = model.a.rel_error(&fx.truth.a);
+    println!(
+        "{name}: peak {} KiB, {} cg iters, A err {err:.2e}",
+        peak_bytes >> 10,
+        stats.cg_iterations
+    );
+    assert!(err < 1e-2, "{name}: recovered factors off the planted truth ({err})");
+    rep.push(
+        meas.with_extra("alloc_peak_bytes", peak_bytes as f64)
+            .with_extra("cg_iterations", stats.cg_iterations as f64)
+            .with_extra("rel_error_a", err)
+            .with_extra("i_dim", i_dim as f64),
+    );
+    Case { peak_bytes, model }
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let i_small: usize = if quick { 128 } else { 256 };
+    let i_mid = 4 * i_small;
+    let i_big = 16 * i_small;
+    let mut rep = Report::new(
+        "BENCH_recovery",
+        "stacked solve: CGNR alloc peak linear in I where Cholesky is quadratic",
+    );
+
+    // Common size: all three solvers must agree with the planted truth
+    // (run_case asserts it) and with each other.
+    let fx_small = fixture(i_small);
+    let chol_small = run_case(&mut rep, &fx_small, RecoverySolverKind::Cholesky);
+    let iter_small = run_case(&mut rep, &fx_small, RecoverySolverKind::Iterative);
+    let sk_small = run_case(&mut rep, &fx_small, RecoverySolverKind::Sketch);
+    let diff = iter_small.model.a.rel_error(&chol_small.model.a);
+    assert!(diff < 1e-2, "CGNR vs Cholesky diverge: {diff}");
+    let diff = sk_small.model.a.rel_error(&chol_small.model.a);
+    assert!(diff < 1e-2, "sketch vs Cholesky diverge: {diff}");
+
+    // 4× I: the dense solver's Gram makes its peak grow ≈ quadratically.
+    let fx_mid = fixture(i_mid);
+    let chol_mid = run_case(&mut rep, &fx_mid, RecoverySolverKind::Cholesky);
+    let iter_mid = run_case(&mut rep, &fx_mid, RecoverySolverKind::Iterative);
+    assert!(
+        chol_mid.peak_bytes >= 8 * chol_small.peak_bytes,
+        "Cholesky peak should scale ~quadratically with I ({} → {} across 4×); \
+         if this broke, the contrast baseline is wrong",
+        chol_small.peak_bytes,
+        chol_mid.peak_bytes
+    );
+    assert!(
+        4 * iter_mid.peak_bytes <= chol_mid.peak_bytes,
+        "CGNR peak {} must be ≪ Cholesky {} at I={i_mid}",
+        iter_mid.peak_bytes,
+        chol_mid.peak_bytes
+    );
+
+    // 16× I — a size whose Gram alone would cost I²·4 bytes — runs on the
+    // iterative path only, and its peak must stay ≈ linear in I.
+    let fx_big = fixture(i_big);
+    let iter_big = run_case(&mut rep, &fx_big, RecoverySolverKind::Iterative);
+    println!(
+        "peaks: cholesky {} KiB → {} KiB (4× I), iterative {} KiB → {} KiB (16× I)",
+        chol_small.peak_bytes >> 10,
+        chol_mid.peak_bytes >> 10,
+        iter_small.peak_bytes >> 10,
+        iter_big.peak_bytes >> 10,
+    );
+    assert!(
+        iter_big.peak_bytes <= 32 * iter_small.peak_bytes,
+        "CGNR peak must be linear in I, not quadratic: {} → {} bytes across 16× I",
+        iter_small.peak_bytes,
+        iter_big.peak_bytes
+    );
+    let gram_bytes = i_big * i_big * 4;
+    assert!(
+        8 * iter_big.peak_bytes <= gram_bytes,
+        "CGNR peak {} at I={i_big} should be ≪ the {gram_bytes}-byte Gram it avoids",
+        iter_big.peak_bytes
+    );
+
+    rep.finish();
+}

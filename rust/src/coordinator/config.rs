@@ -51,6 +51,86 @@ impl MapTierChoice {
     }
 }
 
+/// Default streamed-recovery panel width (columns per generated `L×w`
+/// map panel) — the `recovery_panel_cols` knob's default.
+pub const DEFAULT_RECOVERY_PANEL_COLS: usize = 256;
+
+/// Stacked-recovery solver policy (see `coordinator::recovery`): how the
+/// per-mode least-squares system of Eq. (4) is solved.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum RecoverySolver {
+    /// Planner decides: matrix-free iterative when the `dim×dim`
+    /// normal-equation Gram would eat a meaningful share (> 1/8) of the
+    /// memory budget, dense Cholesky otherwise (and always, when no
+    /// budget is set).
+    #[default]
+    Auto,
+    /// Force the dense path: accumulate the `dim×dim` Gram panel-wise,
+    /// one Cholesky solve.  `O(dim²)` memory.
+    Cholesky,
+    /// Force matrix-free CGNR: matvecs stream map panels on demand, the
+    /// Gram is never formed.  `O(panel + dim×R)` memory.
+    Iterative,
+    /// Force randomized sketch-and-solve: counter-rng Gaussian sketch of
+    /// the stacked system, small dense solve, CG polish.  Memory is
+    /// `O(sketch_rows×dim)` — larger than `Iterative`, so `Auto` never
+    /// picks it; it exists as an explicitly-requested refine/experiment
+    /// path.
+    Sketch,
+}
+
+impl RecoverySolver {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RecoverySolver::Auto => "auto",
+            RecoverySolver::Cholesky => "cholesky",
+            RecoverySolver::Iterative => "iterative",
+            RecoverySolver::Sketch => "sketch",
+        }
+    }
+
+    /// Parses the CLI/JSON spelling (`auto | cholesky | iterative |
+    /// sketch`, with `chol`/`cg`/`iter` shorthands).
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "auto" => RecoverySolver::Auto,
+            "cholesky" | "chol" => RecoverySolver::Cholesky,
+            "iterative" | "iter" | "cg" => RecoverySolver::Iterative,
+            "sketch" => RecoverySolver::Sketch,
+            other => bail!("recovery solver '{other}' (expected auto|cholesky|iterative|sketch)"),
+        })
+    }
+}
+
+/// A *resolved* recovery solver — what actually runs after the planner
+/// settles `Auto` (the analogue of `compress::maps::MapTier` for
+/// `MapTierChoice`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecoverySolverKind {
+    Cholesky,
+    Iterative,
+    Sketch,
+}
+
+impl RecoverySolverKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RecoverySolverKind::Cholesky => "cholesky",
+            RecoverySolverKind::Iterative => "iterative",
+            RecoverySolverKind::Sketch => "sketch",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "cholesky" => RecoverySolverKind::Cholesky,
+            "iterative" => RecoverySolverKind::Iterative,
+            "sketch" => RecoverySolverKind::Sketch,
+            other => bail!("resolved recovery solver '{other}'"),
+        })
+    }
+}
+
 /// Compressed-sensing two-stage compression options (§IV-D).
 #[derive(Clone, Copy, Debug)]
 pub struct SensingConfig {
@@ -143,6 +223,16 @@ pub struct PipelineConfig {
     /// this knob is excluded from cache fingerprints like the other
     /// execution-only knobs.
     pub map_tier: MapTierChoice,
+    /// Stacked-recovery solver (`Auto` lets the planner pick).  All
+    /// solvers target the same ridge-damped minimizer, so — like
+    /// `map_tier` — this is an execution-only knob excluded from cache
+    /// fingerprints (results agree to solver tolerance, not bitwise).
+    pub recovery_solver: RecoverySolver,
+    /// Column width of the streamed `L×w` map panels recovery reads
+    /// (Gram accumulation for the dense path, matvec passes for the
+    /// iterative path).  Larger panels amortize generation; smaller
+    /// panels shrink the working set.  Execution-only.
+    pub recovery_panel_cols: usize,
     pub seed: u64,
 }
 
@@ -184,6 +274,9 @@ impl PipelineConfig {
         }
         if self.als_iters == 0 {
             bail!("als_iters must be ≥ 1");
+        }
+        if self.recovery_panel_cols == 0 {
+            bail!("recovery_panel_cols must be ≥ 1");
         }
         if let Some(sc) = &self.sensing {
             if sc.alpha <= 1.0 {
@@ -236,6 +329,8 @@ impl PipelineConfig {
             ("io_threads", Json::num(self.io_threads as f64)),
             ("refine_sweeps", Json::num(self.refine_sweeps as f64)),
             ("map_tier", Json::str(self.map_tier.as_str())),
+            ("recovery_solver", Json::str(self.recovery_solver.as_str())),
+            ("recovery_panel_cols", Json::num(self.recovery_panel_cols as f64)),
             ("seed", Json::num(self.seed as f64)),
         ];
         if let Some(sc) = &self.sensing {
@@ -352,6 +447,15 @@ impl PipelineConfig {
                 Some(s) => MapTierChoice::parse(s)?,
                 None => MapTierChoice::Auto,
             },
+            // Absent in pre-iterative job records: default Auto / 256.
+            recovery_solver: match v.get("recovery_solver").and_then(|x| x.as_str()) {
+                Some(s) => RecoverySolver::parse(s)?,
+                None => RecoverySolver::Auto,
+            },
+            recovery_panel_cols: match v.get("recovery_panel_cols") {
+                None | Some(Json::Null) => DEFAULT_RECOVERY_PANEL_COLS,
+                Some(x) => x.as_usize().context("config bad recovery_panel_cols")?,
+            },
             seed: num("seed")? as u64,
         };
         cfg.validate()?;
@@ -387,6 +491,8 @@ impl Default for PipelineConfigBuilder {
                 refine_sweeps: 1,
                 checkpoint_dir: None,
                 map_tier: MapTierChoice::Auto,
+                recovery_solver: RecoverySolver::Auto,
+                recovery_panel_cols: DEFAULT_RECOVERY_PANEL_COLS,
                 seed: 0,
             },
         }
@@ -479,6 +585,18 @@ impl PipelineConfigBuilder {
     /// Replica-map storage tier (`Auto` lets the planner pick).
     pub fn map_tier(mut self, tier: MapTierChoice) -> Self {
         self.cfg.map_tier = tier;
+        self
+    }
+
+    /// Stacked-recovery solver (`Auto` lets the planner pick).
+    pub fn recovery_solver(mut self, s: RecoverySolver) -> Self {
+        self.cfg.recovery_solver = s;
+        self
+    }
+
+    /// Streamed-recovery map-panel width (columns).
+    pub fn recovery_panel_cols(mut self, w: usize) -> Self {
+        self.cfg.recovery_panel_cols = w;
         self
     }
 
@@ -591,12 +709,16 @@ mod tests {
             .refine_sweeps(2)
             .checkpoint_dir("/tmp/ckpt")
             .map_tier(MapTierChoice::Procedural)
+            .recovery_solver(RecoverySolver::Iterative)
+            .recovery_panel_cols(128)
             .seed(424242)
             .build()
             .unwrap();
         let text = cfg.to_json().to_string_pretty();
         let back = PipelineConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(back.map_tier, MapTierChoice::Procedural);
+        assert_eq!(back.recovery_solver, RecoverySolver::Iterative);
+        assert_eq!(back.recovery_panel_cols, 128);
         assert_eq!(back.reduced, cfg.reduced);
         assert_eq!(back.rank, cfg.rank);
         assert_eq!(back.replicas, cfg.replicas);
@@ -623,20 +745,32 @@ mod tests {
         assert_eq!(back.block, None);
         assert!(back.sensing.is_none());
         assert_eq!(back.map_tier, MapTierChoice::Auto);
+        assert_eq!(back.recovery_solver, RecoverySolver::Auto);
+        assert_eq!(back.recovery_panel_cols, DEFAULT_RECOVERY_PANEL_COLS);
 
-        // Pre-tier job records (no map_tier key) default to Auto.
+        // Pre-tier / pre-iterative job records (keys absent) default to
+        // Auto / Auto / 256.
         let mut legacy = auto.to_json();
         if let Json::Obj(m) = &mut legacy {
             m.remove("map_tier");
+            m.remove("recovery_solver");
+            m.remove("recovery_panel_cols");
         }
         let back = PipelineConfig::from_json(&legacy).unwrap();
         assert_eq!(back.map_tier, MapTierChoice::Auto);
+        assert_eq!(back.recovery_solver, RecoverySolver::Auto);
+        assert_eq!(back.recovery_panel_cols, DEFAULT_RECOVERY_PANEL_COLS);
         // Bad spellings are rejected.
         let mut bad_tier = auto.to_json();
         if let Json::Obj(m) = &mut bad_tier {
             m.insert("map_tier".into(), Json::str("dense"));
         }
         assert!(PipelineConfig::from_json(&bad_tier).is_err());
+        let mut bad_solver = auto.to_json();
+        if let Json::Obj(m) = &mut bad_solver {
+            m.insert("recovery_solver".into(), Json::str("gmres"));
+        }
+        assert!(PipelineConfig::from_json(&bad_solver).is_err());
 
         // Sensing block round-trips.
         let sens = PipelineConfig::builder()
@@ -654,6 +788,34 @@ mod tests {
             m.insert("rank".into(), Json::num(0.0));
         }
         assert!(PipelineConfig::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn recovery_solver_parses_all_spellings() {
+        for (s, want) in [
+            ("auto", RecoverySolver::Auto),
+            ("cholesky", RecoverySolver::Cholesky),
+            ("chol", RecoverySolver::Cholesky),
+            ("iterative", RecoverySolver::Iterative),
+            ("iter", RecoverySolver::Iterative),
+            ("cg", RecoverySolver::Iterative),
+            ("sketch", RecoverySolver::Sketch),
+        ] {
+            assert_eq!(RecoverySolver::parse(s).unwrap(), want);
+        }
+        assert!(RecoverySolver::parse("gmres").is_err());
+        for kind in [
+            RecoverySolverKind::Cholesky,
+            RecoverySolverKind::Iterative,
+            RecoverySolverKind::Sketch,
+        ] {
+            assert_eq!(RecoverySolverKind::parse(kind.as_str()).unwrap(), kind);
+        }
+    }
+
+    #[test]
+    fn rejects_zero_panel_cols() {
+        assert!(PipelineConfig::builder().recovery_panel_cols(0).build().is_err());
     }
 
     #[test]

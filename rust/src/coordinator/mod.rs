@@ -31,7 +31,10 @@ pub mod planner;
 pub mod recovery;
 pub mod refine;
 
-pub use config::{Backend, MapTierChoice, PipelineConfig, PipelineConfigBuilder, SensingConfig};
+pub use config::{
+    Backend, MapTierChoice, PipelineConfig, PipelineConfigBuilder, RecoverySolver,
+    RecoverySolverKind, SensingConfig,
+};
 pub use metrics::{Metrics, StageStats};
 pub use pipeline::{Pipeline, PipelineResult, ProxyDecomposer, RustAlsDecomposer};
 pub use planner::{MemoryPlan, MemoryPlanner};

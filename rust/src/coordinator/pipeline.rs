@@ -25,12 +25,12 @@
 //! top-level single contractions (`cp::als_decompose_with`, the apps, the
 //! `gemm_mttkrp` bench).
 
-use super::config::{Backend, PipelineConfig};
+use super::config::{Backend, PipelineConfig, RecoverySolverKind};
 use super::metrics::Metrics;
 use super::planner::{MemoryPlan, MemoryPlanner};
 use super::recovery::{
     corner_disambiguate, entry_calibrate, normalize_and_align_min, sensing_recover_mode,
-    stacked_recover,
+    stacked_recover_opts, RecoveryOptions,
 };
 use crate::compress::{
     compress_source, BlockCompressor, MapSource, PrefetchConfig, ResumeState, RustCompressor,
@@ -504,9 +504,18 @@ impl Pipeline {
         let maps_kept = maps.subset(&kept);
 
         // ── Stage 4: stacked least squares (Eq. 4, line 9) ──
-        let tilde = self
-            .metrics
-            .time("stacked_lstsq", || stacked_recover(&aligned, &maps_kept))?;
+        // The planner has already settled `Auto` into a concrete solver;
+        // panel width is an execution knob, never part of the result.
+        log::info!("recovery solver: {}", plan.recovery_solver.as_str());
+        let ropts = RecoveryOptions {
+            solver: plan.recovery_solver,
+            panel_cols: self.cfg.recovery_panel_cols,
+            ..RecoveryOptions::default()
+        };
+        let (tilde, rstats) = self.metrics.time("stacked_lstsq", || {
+            stacked_recover_opts(&aligned, &maps_kept, &ropts)
+        })?;
+        self.record_recovery(plan.recovery_solver, &rstats);
 
         // ── Stage 5: sampled-subtensor disambiguation (lines 10–13), then
         // an entry-sampling scale polish. The subtensor is sampled at the
@@ -625,9 +634,15 @@ impl Pipeline {
             .metrics
             .time("align", || normalize_and_align_min(models, anchor, min_keep))?;
         let dropped = maps2.p_count() - kept.len();
-        let tilde_z = self.metrics.time("stacked_lstsq", || {
-            stacked_recover(&aligned, &maps2.subset(&kept))
+        let ropts = RecoveryOptions {
+            solver: plan.recovery_solver,
+            panel_cols: self.cfg.recovery_panel_cols,
+            ..RecoveryOptions::default()
+        };
+        let (tilde_z, rstats) = self.metrics.time("stacked_lstsq", || {
+            stacked_recover_opts(&aligned, &maps2.subset(&kept), &ropts)
         })?;
+        self.record_recovery(plan.recovery_solver, &rstats);
 
         // Second factorization stage: Z̃ = U·(AΠΣ) → AΠΣ via ISTA (§IV-D).
         let ista = IstaOptions {
@@ -737,6 +752,20 @@ impl Pipeline {
         self.metrics
             .incr("replicas_fit_dropped", (proxies.len() - kept.len()) as u64);
         Ok(kept)
+    }
+
+    /// Surfaces the stacked solve's counters as gauges (set, not
+    /// accumulated — they describe this run's resolved configuration).
+    fn record_recovery(
+        &self,
+        solver: RecoverySolverKind,
+        stats: &super::recovery::RecoveryStats,
+    ) {
+        self.metrics.set("recovery_cg_iters", stats.cg_iterations);
+        self.metrics.set(
+            "recovery_solver_iterative",
+            u64::from(solver == RecoverySolverKind::Iterative),
+        );
     }
 
     fn diagnose(&self, src: &dyn TensorSource, model: &CpModel, dropped: usize) -> Diagnostics {
@@ -851,6 +880,32 @@ mod tests {
             "sensing rel error {}",
             res.diagnostics.rel_error
         );
+    }
+
+    #[test]
+    fn iterative_solver_matches_default_end_to_end() {
+        use crate::coordinator::config::RecoverySolver;
+        let gen = LowRankGenerator::new(30, 30, 30, 2, 1006);
+        let cfg_chol = base_cfg().rank(2).build().unwrap();
+        let cfg_iter = base_cfg()
+            .rank(2)
+            .recovery_solver(RecoverySolver::Iterative)
+            .build()
+            .unwrap();
+        let r_chol = Pipeline::new(cfg_chol).run(&gen).unwrap();
+        let mut pipe = Pipeline::new(cfg_iter);
+        let r_iter = pipe.run(&gen).unwrap();
+        assert_eq!(r_iter.plan.recovery_solver, RecoverySolverKind::Iterative);
+        assert!(
+            r_iter.diagnostics.rel_error < 1e-2,
+            "iterative rel error {}",
+            r_iter.diagnostics.rel_error
+        );
+        let t_chol = r_chol.model.to_tensor();
+        let t_iter = r_iter.model.to_tensor();
+        assert!(t_chol.rel_error(&t_iter) < 1e-2, "err {}", t_chol.rel_error(&t_iter));
+        assert!(pipe.metrics.counter("recovery_cg_iters") > 0);
+        assert_eq!(pipe.metrics.counter("recovery_solver_iterative"), 1);
     }
 
     #[test]

@@ -14,8 +14,7 @@
 //! implicit generator), and prefetching defaults on so block reads overlap
 //! the per-block TTM chains.
 
-use super::config::{MapTierChoice, PipelineConfig};
-use super::recovery::RECOVERY_PANEL_COLS;
+use super::config::{MapTierChoice, PipelineConfig, RecoverySolver, RecoverySolverKind};
 use crate::compress::MapTier;
 use anyhow::{bail, Result};
 
@@ -40,6 +39,10 @@ pub struct MemoryPlan {
     /// procedural when the materialized maps would eat > 1/8 of the
     /// budget; results are bitwise identical either way.
     pub map_tier: MapTier,
+    /// Resolved stacked-recovery solver.  `Auto` configs resolve to
+    /// iterative when the largest per-mode `dim×dim` Gram would eat
+    /// > 1/8 of the budget; all solvers agree to solver tolerance.
+    pub recovery_solver: RecoverySolverKind,
 }
 
 /// Plans replica count / block size / corner size for a concrete tensor.
@@ -108,6 +111,56 @@ impl MemoryPlanner {
         }
     }
 
+    /// Largest per-mode `dim×dim` normal-equation Gram in bytes — the
+    /// structure the dense recovery solver materializes and the iterative
+    /// one doesn't.  Drives the `Auto` solver resolution the same way the
+    /// materialized-map bytes drive the `Auto` tier.
+    pub fn recovery_gram_bytes(dims: [usize; 3]) -> usize {
+        dims.iter()
+            .map(|&d| d.saturating_mul(d).saturating_mul(std::mem::size_of::<f32>()))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Sketch rows the sketch-and-solve recovery path uses for a mode of
+    /// size `dim`: enough oversampling for a well-conditioned small dense
+    /// solve.  One definition shared by the solver and the byte model.
+    pub fn sketch_rows(dim: usize, rank: usize) -> usize {
+        dim + 4 * rank + 16
+    }
+
+    /// Peak bytes of the stacked-recovery solve for one mode (Eq. 4),
+    /// per resolved solver.  All solvers share the `P·L×R` stacked factor
+    /// RHS, the `dim×R` solution/right-hand accumulator, and two streamed
+    /// `L×w` map panels; they differ in the solver state on top:
+    ///
+    /// * `Cholesky`  — the `dim×dim` Gram (the `O(I²)` term);
+    /// * `Iterative` — six `dim`-length CG vectors (diag, x-col, r, z, p,
+    ///   q), the Gram never exists;
+    /// * `Sketch`    — the `s×dim` sketched operand plus its `s×R` RHS,
+    ///   `s = sketch_rows(dim, rank)`.
+    pub fn recovery_mode_bytes(
+        dim: usize,
+        reduced: usize,
+        replicas: usize,
+        rank: usize,
+        panel_cols: usize,
+        solver: RecoverySolverKind,
+    ) -> usize {
+        let f = std::mem::size_of::<f32>();
+        let w = panel_cols.min(dim).max(1);
+        let shared = dim * rank + replicas * reduced * rank + 2 * reduced * w;
+        let solver_state = match solver {
+            RecoverySolverKind::Cholesky => dim * dim,
+            RecoverySolverKind::Iterative => 6 * dim,
+            RecoverySolverKind::Sketch => {
+                let s = Self::sketch_rows(dim, rank);
+                s * (dim + rank)
+            }
+        };
+        (shared + solver_state) * f
+    }
+
     /// Byte estimate for a candidate plan.
     ///
     /// When prefetching, raw blocks live in the queue (`prefetch_depth`),
@@ -119,7 +172,8 @@ impl MemoryPlanner {
     /// stacks all `P` replicas (`P·L × dj·dk` per worker) — the term that
     /// actually dominates tight out-of-core budgets.  `tier` picks the
     /// replica-map model: dense storage (materialized) or panel-scratch
-    /// only (procedural).
+    /// only (procedural); `panel_cols`/`solver` pick the recovery model
+    /// (see [`MemoryPlanner::recovery_mode_bytes`]).
     #[allow(clippy::too_many_arguments)]
     pub fn estimate_bytes(
         dims: [usize; 3],
@@ -132,6 +186,8 @@ impl MemoryPlanner {
         io_threads: usize,
         batched: bool,
         tier: MapTier,
+        panel_cols: usize,
+        solver: RecoverySolverKind,
     ) -> usize {
         let f = std::mem::size_of::<f32>();
         let [l, m, n] = reduced;
@@ -157,17 +213,19 @@ impl MemoryPlanner {
         } else {
             0
         };
-        // Streamed recovery (modes solved sequentially → max over modes):
-        // the `dim×dim` normal-equation Gram + the `dim×R` right-hand
-        // accumulator + the stacked `P·L×R` factor RHS + two `L×panel`
-        // map panels.  The `P·L × dim` stack of the retired vstack solve
-        // is gone in both tiers.
+        // Streamed recovery (modes solved sequentially → max over modes);
+        // the `P·L × dim` stack of the retired vstack solve is gone in
+        // every tier/solver combination.
         let recovery = (0..3)
             .map(|mode| {
-                let d = dims[mode];
-                let r = reduced[mode];
-                (d * d + d * rank + replicas * r * rank + 2 * r * RECOVERY_PANEL_COLS.min(d))
-                    * f
+                Self::recovery_mode_bytes(
+                    dims[mode],
+                    reduced[mode],
+                    replicas,
+                    rank,
+                    panel_cols,
+                    solver,
+                )
             })
             .max()
             .unwrap_or(0);
@@ -274,6 +332,29 @@ impl MemoryPlanner {
             }
         };
 
+        // Resolve the recovery solver by the same budget-share rule: the
+        // dense path's `dim×dim` Gram is the one recovery term no amount
+        // of block-shrinking can reduce, so go matrix-free as soon as it
+        // would eat > 1/8 of the budget.  With no budget stay Cholesky
+        // (one factorization beats ~rank·dim CG panel passes when memory
+        // is free).  `Sketch` is never auto-picked: its `s×dim` sketched
+        // operand is the same order as the Gram it replaces — it exists
+        // for explicit experimentation, not memory relief.
+        let recovery_solver = match cfg.recovery_solver {
+            RecoverySolver::Cholesky => RecoverySolverKind::Cholesky,
+            RecoverySolver::Iterative => RecoverySolverKind::Iterative,
+            RecoverySolver::Sketch => RecoverySolverKind::Sketch,
+            RecoverySolver::Auto => {
+                if cfg.memory_budget > 0
+                    && Self::recovery_gram_bytes(dims) > cfg.memory_budget / 8
+                {
+                    RecoverySolverKind::Iterative
+                } else {
+                    RecoverySolverKind::Cholesky
+                }
+            }
+        };
+
         // Incremental checkpointing snapshots the folded proxies: up to two
         // extra P·L·M·N sets live at once (one queued for the background
         // writer + one mid-save).
@@ -296,8 +377,18 @@ impl MemoryPlanner {
             snapshot_bytes
                 + sensing_acc_bytes
                 + Self::estimate_bytes(
-                    dims, reduced, replicas, block, cfg.threads, cfg.rank, depth, io_threads,
-                    batched, map_tier,
+                    dims,
+                    reduced,
+                    replicas,
+                    block,
+                    cfg.threads,
+                    cfg.rank,
+                    depth,
+                    io_threads,
+                    batched,
+                    map_tier,
+                    cfg.recovery_panel_cols,
+                    recovery_solver,
                 )
         };
         let mut estimated = est(block, prefetch_depth);
@@ -334,6 +425,7 @@ impl MemoryPlanner {
             io_threads,
             out_of_core,
             map_tier,
+            recovery_solver,
         })
     }
 }
@@ -371,6 +463,11 @@ mod tests {
         assert!(!plan.out_of_core, "no budget → in-core");
         assert_eq!(plan.prefetch_depth, 0, "prefetch off without out-of-core");
         assert_eq!(plan.map_tier, MapTier::Materialized, "no budget → stored maps");
+        assert_eq!(
+            plan.recovery_solver,
+            RecoverySolverKind::Cholesky,
+            "no budget → dense recovery solve"
+        );
     }
 
     #[test]
@@ -399,14 +496,18 @@ mod tests {
 
     #[test]
     fn estimate_monotone_in_depth_and_batching() {
+        let chol = RecoverySolverKind::Cholesky;
         let base = MemoryPlanner::estimate_bytes(
-            [1000; 3], [50; 3], 31, [100; 3], 4, 5, 0, 2, false, MapTier::Materialized,
+            [1000; 3], [50; 3], 31, [100; 3], 4, 5, 0, 2, false, MapTier::Materialized, 256,
+            chol,
         );
         let deeper = MemoryPlanner::estimate_bytes(
-            [1000; 3], [50; 3], 31, [100; 3], 4, 5, 8, 2, false, MapTier::Materialized,
+            [1000; 3], [50; 3], 31, [100; 3], 4, 5, 8, 2, false, MapTier::Materialized, 256,
+            chol,
         );
         let batched = MemoryPlanner::estimate_bytes(
-            [1000; 3], [50; 3], 31, [100; 3], 4, 5, 0, 2, true, MapTier::Materialized,
+            [1000; 3], [50; 3], 31, [100; 3], 4, 5, 0, 2, true, MapTier::Materialized, 256,
+            chol,
         );
         assert!(deeper > base, "queue + in-flight blocks must be budgeted");
         assert!(batched > base, "stacked P·L intermediate must be budgeted");
@@ -429,7 +530,18 @@ mod tests {
         let args = ([100, 80, 60], [10, 10, 10], 3, [20, 20, 20], 2, 4, 0, 1, false);
         let est = |tier| {
             MemoryPlanner::estimate_bytes(
-                args.0, args.1, args.2, args.3, args.4, args.5, args.6, args.7, args.8, tier,
+                args.0,
+                args.1,
+                args.2,
+                args.3,
+                args.4,
+                args.5,
+                args.6,
+                args.7,
+                args.8,
+                tier,
+                256,
+                RecoverySolverKind::Cholesky,
             )
         };
         assert_eq!(est(MapTier::Materialized), 227_680);
@@ -455,10 +567,32 @@ mod tests {
                 0
             );
             let mat = MemoryPlanner::estimate_bytes(
-                dims, [10; 3], 3, [20; 3], 2, 4, 0, 1, false, MapTier::Materialized,
+                dims,
+                [10; 3],
+                3,
+                [20; 3],
+                2,
+                4,
+                0,
+                1,
+                false,
+                MapTier::Materialized,
+                256,
+                RecoverySolverKind::Cholesky,
             );
             let proc_ = MemoryPlanner::estimate_bytes(
-                dims, [10; 3], 3, [20; 3], 2, 4, 0, 1, false, MapTier::Procedural,
+                dims,
+                [10; 3],
+                3,
+                [20; 3],
+                2,
+                4,
+                0,
+                1,
+                false,
+                MapTier::Procedural,
+                256,
+                RecoverySolverKind::Cholesky,
             );
             assert_eq!(mat - proc_, gap, "dims {dims:?}");
         }
@@ -467,14 +601,134 @@ mod tests {
         // procedural estimate is the solve itself (Gram dim² + dim·R +
         // panel clamp), not any map storage.
         let small = MemoryPlanner::estimate_bytes(
-            [100, 80, 60], [10; 3], 3, [20; 3], 2, 4, 0, 1, false, MapTier::Procedural,
+            [100, 80, 60],
+            [10; 3],
+            3,
+            [20; 3],
+            2,
+            4,
+            0,
+            1,
+            false,
+            MapTier::Procedural,
+            256,
+            RecoverySolverKind::Cholesky,
         );
         let big = MemoryPlanner::estimate_bytes(
-            [1000, 80, 60], [10; 3], 3, [20; 3], 2, 4, 0, 1, false, MapTier::Procedural,
+            [1000, 80, 60],
+            [10; 3],
+            3,
+            [20; 3],
+            2,
+            4,
+            0,
+            1,
+            false,
+            MapTier::Procedural,
+            256,
+            RecoverySolverKind::Cholesky,
         );
         // mode-0 recovery: (10⁶ + 4000 + 120 + 2·10·256)·4 = 4 036 960 vs
         // (10⁴ + 400 + 120 + 2·10·100)·4 = 50 080.
         assert_eq!(big - small, 4_036_960 - 50_080);
+    }
+
+    #[test]
+    fn estimate_solver_aware_hand_computed() {
+        // Same shapes as the tier test (dims [100,80,60], reduced 10³,
+        // P=3, rank 4, w = min(256, dim)).  Mode 0 dominates every solver:
+        //   shared     = 100·4 + 3·10·4 + 2·10·100        = 2 520 floats
+        //   cholesky   = + 100²                            → 50 080 bytes
+        //   iterative  = + 6·100                           → 12 480 bytes
+        //   sketch     = + (100+4·4+16)·(100+4) = 132·104  → 64 992 bytes
+        let mode = |solver| MemoryPlanner::recovery_mode_bytes(100, 10, 3, 4, 256, solver);
+        assert_eq!(mode(RecoverySolverKind::Cholesky), 50_080);
+        assert_eq!(mode(RecoverySolverKind::Iterative), 12_480);
+        assert_eq!(mode(RecoverySolverKind::Sketch), 64_992);
+        // Threaded through the full estimate, solvers differ only by the
+        // dominant mode's recovery term.
+        let est = |solver| {
+            MemoryPlanner::estimate_bytes(
+                [100, 80, 60],
+                [10; 3],
+                3,
+                [20; 3],
+                2,
+                4,
+                0,
+                1,
+                false,
+                MapTier::Materialized,
+                256,
+                solver,
+            )
+        };
+        assert_eq!(est(RecoverySolverKind::Cholesky), 227_680);
+        assert_eq!(est(RecoverySolverKind::Iterative), 227_680 - 50_080 + 12_480);
+    }
+
+    #[test]
+    fn iterative_recovery_estimate_is_linear_in_i() {
+        // Growing I 10× (procedural maps, iterative solver) moves only the
+        // O(I) recovery terms: mode-0 goes from
+        // (6·100 + 100·4 + 120 + 2·10·100)·4 = 12 480 (w clamped to 100)
+        // to (6·1000 + 1000·4 + 120 + 2·10·256)·4 = 60 960 — no I² term
+        // anywhere, versus the Cholesky gap of 3 986 880.
+        let est = |dims| {
+            MemoryPlanner::estimate_bytes(
+                dims,
+                [10; 3],
+                3,
+                [20; 3],
+                2,
+                4,
+                0,
+                1,
+                false,
+                MapTier::Procedural,
+                256,
+                RecoverySolverKind::Iterative,
+            )
+        };
+        assert_eq!(est([1000, 80, 60]) - est([100, 80, 60]), 60_960 - 12_480);
+    }
+
+    #[test]
+    fn auto_solver_selection_follows_budget_share() {
+        let base = PipelineConfig::builder()
+            .reduced_dims(10, 10, 10)
+            .rank(4)
+            .threads(2)
+            .build()
+            .unwrap();
+        let dims = [3000, 40, 40];
+        // No budget → dense Cholesky (memory is free, one factorization
+        // beats the CG panel passes).
+        let plan = MemoryPlanner::plan(&base, dims).unwrap();
+        assert_eq!(plan.recovery_solver, RecoverySolverKind::Cholesky);
+        // Gram = 3000²·4 = 36 MB.  1 GiB budget: 36 MB < budget/8 =
+        // 128 MiB → stay Cholesky.
+        let mut c = base.clone();
+        c.memory_budget = 1 << 30;
+        let plan = MemoryPlanner::plan(&c, dims).unwrap();
+        assert_eq!(plan.recovery_solver, RecoverySolverKind::Cholesky);
+        // 200 MiB budget: 36 MB > budget/8 = 25 MiB → iterative.
+        c.memory_budget = 200 << 20;
+        let plan = MemoryPlanner::plan(&c, dims).unwrap();
+        assert_eq!(plan.recovery_solver, RecoverySolverKind::Iterative);
+        assert!(plan.estimated_bytes <= c.memory_budget);
+        // Explicit choices are always honored, including against the
+        // budget rule's preference.
+        c.recovery_solver = RecoverySolver::Cholesky;
+        let plan = MemoryPlanner::plan(&c, dims).unwrap();
+        assert_eq!(plan.recovery_solver, RecoverySolverKind::Cholesky);
+        let mut free = base.clone();
+        free.recovery_solver = RecoverySolver::Iterative;
+        let plan = MemoryPlanner::plan(&free, dims).unwrap();
+        assert_eq!(plan.recovery_solver, RecoverySolverKind::Iterative);
+        free.recovery_solver = RecoverySolver::Sketch;
+        let plan = MemoryPlanner::plan(&free, dims).unwrap();
+        assert_eq!(plan.recovery_solver, RecoverySolverKind::Sketch);
     }
 
     #[test]

@@ -8,19 +8,63 @@
 //! and matching its factors against the leading rows of the recovered ones
 //! (lines 10–13).
 
+use super::config::{RecoverySolverKind, DEFAULT_RECOVERY_PANEL_COLS};
 use super::matching::anchor_normalize;
+use super::planner::MemoryPlanner;
 use crate::compress::{MapSource, MapTier, ReplicaMaps, SparseSignMatrix};
 use crate::cp::{als_decompose, AlsOptions, CpModel};
 use crate::linalg::ista::{ista_l1, IstaOptions};
-use crate::linalg::{cholesky_solve, hungarian_max, lstsq, matmul, Matrix, Trans};
+use crate::linalg::iterative::{cg_normal_solve, CgOptions};
+use crate::linalg::{cholesky_solve, hungarian_max, lstsq, matmul, matvec, Matrix, Trans};
 use crate::tensor::DenseTensor;
+use crate::util::rng::{counter_key, gaussian_from_key};
 use anyhow::{bail, Context, Result};
 
-/// Column-panel width of the streamed stacked solve: the only map-shaped
-/// allocation recovery makes is `2 × L×PANEL` scratch (plus the solve's own
-/// `dim×dim` Gram), never the `P·L × dim` stack.  The memory planner
-/// budgets recovery with this same constant.
-pub const RECOVERY_PANEL_COLS: usize = 256;
+/// Column-panel width of the streamed stacked solve (the historical
+/// constant, now the default of the `recovery_panel_cols` knob): the only
+/// map-shaped allocations recovery makes are `L×PANEL` scratch panels,
+/// never the `P·L × dim` stack.  The memory planner budgets recovery with
+/// the same knob.
+pub const RECOVERY_PANEL_COLS: usize = DEFAULT_RECOVERY_PANEL_COLS;
+
+/// How [`stacked_recover_opts`] solves each mode's stacked system.
+#[derive(Clone, Copy, Debug)]
+pub struct RecoveryOptions {
+    /// Resolved solver (the planner settles `Auto` before recovery runs).
+    pub solver: RecoverySolverKind,
+    /// Streamed map-panel width in columns.
+    pub panel_cols: usize,
+    /// CG knobs for the iterative solver and the sketch path's polish.
+    pub cg: CgOptions,
+}
+
+impl Default for RecoveryOptions {
+    fn default() -> Self {
+        Self {
+            solver: RecoverySolverKind::Cholesky,
+            panel_cols: DEFAULT_RECOVERY_PANEL_COLS,
+            // f32 panel arithmetic stalls below ~1e-6 relative residual on
+            // large systems; 1e-5 is comfortably inside the factors'
+            // differential tolerance while always reachable.
+            cg: CgOptions { tol: 1e-5, ..CgOptions::default() },
+        }
+    }
+}
+
+impl RecoveryOptions {
+    pub fn with_solver(solver: RecoverySolverKind) -> Self {
+        Self { solver, ..Self::default() }
+    }
+}
+
+/// Per-run counters [`stacked_recover_opts`] reports (the
+/// `recovery_cg_iters` metric).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RecoveryStats {
+    /// CG iterations summed over modes and right-hand-side columns
+    /// (iterative solver and sketch polish; 0 for pure Cholesky).
+    pub cg_iterations: u64,
+}
 
 /// Adds `b` into `m` at offset `(r0, c0)`.
 fn add_block(m: &mut Matrix, r0: usize, c0: usize, b: &Matrix) {
@@ -42,19 +86,29 @@ fn add_block_transposed(m: &mut Matrix, r0: usize, c0: usize, b: &Matrix) {
     }
 }
 
-/// One mode of the stacked solve, streamed: accumulates the normal
-/// equations `Gram = Σ_p U_pᵀU_p` (`dim×dim`) and `AᵀB = Σ_p U_pᵀA_p`
-/// (`dim×R`) from `L × ≤PANEL` column panels — generated or cut on demand —
-/// then solves by Cholesky.  Panel pairs cover the Gram's upper block
-/// triangle; the lower mirrors by symmetry.  The accumulation order (`p`
-/// outer, panels inner, single-threaded) is fixed, so the result is a pure
-/// function of the panel *values* — which is what makes the two map tiers
-/// bitwise interchangeable here.
+/// One mode of the stacked solve.  Validates identifiability, then
+/// dispatches on the resolved solver:
+///
+/// * `Cholesky`  — accumulate the normal equations `Gram = Σ_p U_pᵀU_p`
+///   (`dim×dim`) and `AᵀB = Σ_p U_pᵀA_p` (`dim×R`) from `L × ≤panel`
+///   column panels, one Cholesky solve.  The dense oracle.
+/// * `Iterative` — matrix-free CGNR: one panel pass for the Gram diagonal
+///   + `AᵀB`, then every matvec streams panels again; the Gram never
+///   exists and peak memory is `O(panel + dim×R)`.
+/// * `Sketch`    — counter-rng Gaussian sketch of the stacked system,
+///   small dense solve, CG polish from the sketched warm start.
+///
+/// In every path the accumulation order (`p` outer, panels inner,
+/// single-threaded) is fixed, so the result is a pure function of the
+/// panel *values* — which is what makes the two map tiers bitwise
+/// interchangeable per solver.
 fn recover_mode(
     aligned: &[CpModel],
     maps: &MapSource,
     mode: usize,
     factor: impl Fn(&CpModel) -> &Matrix,
+    opts: &RecoveryOptions,
+    stats: &mut RecoveryStats,
 ) -> Result<Matrix> {
     let dim = maps.dims()[mode];
     let l = maps.reduced()[mode];
@@ -64,7 +118,7 @@ fn recover_mode(
     }
     // Anchor rows repeat across replicas, so the stacked map's column rank
     // is at most S + P·(L−S), not P·L.  Reject rank deficiency up front:
-    // the damped Cholesky below would otherwise return a finite ridge
+    // the ridge-damped solvers below would otherwise return a finite ridge
     // solution instead of an error.  (Always ≥ L, so pass-through modes
     // with dim ≤ L are never rejected.)
     let s = maps.anchor_rows().min(l);
@@ -75,14 +129,65 @@ fn recover_mode(
              dim {dim} (anchors repeat across replicas); add replicas or shrink S"
         );
     }
-    let rank = factor(&aligned[0]).cols();
-    let w = RECOVERY_PANEL_COLS.min(dim).max(1);
+    let facs: Vec<&Matrix> = aligned.iter().map(|m| factor(m)).collect();
+    for (p, fac) in facs.iter().enumerate() {
+        assert_eq!(fac.rows(), l, "replica {p} factor rows ≠ reduced dim");
+    }
+    let w = opts.panel_cols.min(dim).max(1);
+    match opts.solver {
+        RecoverySolverKind::Cholesky => recover_mode_cholesky(&facs, maps, mode, dim, w),
+        RecoverySolverKind::Iterative => {
+            recover_mode_iterative(&facs, maps, mode, dim, w, opts, stats)
+        }
+        RecoverySolverKind::Sketch => {
+            recover_mode_sketch(&facs, maps, mode, dim, w, opts, stats)
+        }
+    }
+}
+
+/// Dense QR on the materialized stack — the last-resort fallback every
+/// solver shares when its result degenerates.  Procedural maps have no
+/// stack to materialize; failing loudly there is the design.
+fn dense_fallback(
+    facs: &[&Matrix],
+    maps: &MapSource,
+    mode: usize,
+    why: &str,
+) -> Result<Matrix> {
+    match maps.tier() {
+        MapTier::Materialized => {
+            let m = maps.materialized().expect("materialized tier");
+            let stack = match mode {
+                0 => m.stacked_u(),
+                1 => m.stacked_v(),
+                _ => m.stacked_w(),
+            };
+            let rhs = Matrix::vstack(facs);
+            crate::linalg::qr_solve(&stack, &rhs)
+                .context("stacked least squares (QR fallback)")
+        }
+        MapTier::Procedural => bail!(
+            "{why} for mode {mode} and the procedural tier has no dense fallback; \
+             rerun with map_tier=materialized or more replicas"
+        ),
+    }
+}
+
+/// The dense path: streamed Gram accumulation + one Cholesky solve.
+/// Panel pairs cover the Gram's upper block triangle; the lower mirrors
+/// by symmetry.
+fn recover_mode_cholesky(
+    facs: &[&Matrix],
+    maps: &MapSource,
+    mode: usize,
+    dim: usize,
+    w: usize,
+) -> Result<Matrix> {
+    let rank = facs[0].cols();
     let mut gram = Matrix::zeros(dim, dim);
     let mut atb = Matrix::zeros(dim, rank);
     let (mut buf_a, mut buf_b) = (Vec::new(), Vec::new());
-    for (p, model) in aligned.iter().enumerate() {
-        let fac = factor(model); // L × R
-        assert_eq!(fac.rows(), l, "replica {p} factor rows ≠ reduced dim");
+    for (p, fac) in facs.iter().enumerate() {
         let mut a0 = 0;
         while a0 < dim {
             let a1 = (a0 + w).min(dim);
@@ -106,38 +211,202 @@ fn recover_mode(
     match cholesky_solve(&gram, &atb) {
         Ok(x) if x.data().iter().all(|v| v.is_finite()) => Ok(x),
         // The Gaussian stacked map is well-conditioned with overwhelming
-        // probability, so this path is defensive.  Materialized tier:
-        // fall back to dense QR on the (small) stack.  Procedural tier:
-        // materializing a `P·L × dim` stack is exactly what this solver
-        // exists to avoid — fail loudly instead.
-        _ => match maps.tier() {
-            MapTier::Materialized => {
-                let m = maps.materialized().expect("materialized tier");
-                let stack = match mode {
-                    0 => m.stacked_u(),
-                    1 => m.stacked_v(),
-                    _ => m.stacked_w(),
-                };
-                let rhs = Matrix::vstack(&aligned.iter().map(&factor).collect::<Vec<_>>());
-                crate::linalg::qr_solve(&stack, &rhs)
-                    .context("stacked least squares (QR fallback)")
+        // probability, so this path is defensive.
+        _ => dense_fallback(facs, maps, mode, "stacked Gram not positive definite"),
+    }
+}
+
+/// One streamed pass accumulating what CGNR needs up front: the Gram
+/// diagonal (per-column norms² of the stacked map) and the right-hand
+/// side `AᵀB = Σ_p U_pᵀA_p`.
+fn accumulate_diag_atb(
+    facs: &[&Matrix],
+    maps: &MapSource,
+    mode: usize,
+    dim: usize,
+    w: usize,
+) -> (Vec<f32>, Matrix) {
+    let rank = facs[0].cols();
+    let mut diag = vec![0.0f32; dim];
+    let mut atb = Matrix::zeros(dim, rank);
+    let mut buf = Vec::new();
+    for (p, fac) in facs.iter().enumerate() {
+        let mut a0 = 0;
+        while a0 < dim {
+            let a1 = (a0 + w).min(dim);
+            let pan = maps.panel(p, mode, a0, a1, std::mem::take(&mut buf));
+            add_block(&mut atb, a0, 0, &matmul(&pan, Trans::Yes, fac, Trans::No));
+            for c in 0..pan.cols() {
+                diag[a0 + c] += pan.col(c).iter().map(|&v| v * v).sum::<f32>();
             }
-            MapTier::Procedural => bail!(
-                "stacked Gram not positive definite for mode {mode} and the \
-                 procedural tier has no dense fallback; rerun with \
-                 map_tier=materialized or more replicas"
-            ),
-        },
+            buf = pan.into_vec();
+            a0 = a1;
+        }
+    }
+    (diag, atb)
+}
+
+/// The matrix-free path: CGNR whose operator `y ← AᵀA·x` is two streamed
+/// panel passes per replica (`t_p = U_p·x` then `y += U_pᵀ·t_p`) — the
+/// `dim×dim` Gram never exists.
+fn recover_mode_iterative(
+    facs: &[&Matrix],
+    maps: &MapSource,
+    mode: usize,
+    dim: usize,
+    w: usize,
+    opts: &RecoveryOptions,
+    stats: &mut RecoveryStats,
+) -> Result<Matrix> {
+    let l = maps.reduced()[mode];
+    let (diag, atb) = accumulate_diag_atb(facs, maps, mode, dim, w);
+    let p_count = maps.p_count();
+    let mut buf = Vec::new();
+    let mut t = vec![0.0f32; l];
+    let mut apply = |x: &[f32], y: &mut [f32]| {
+        y.fill(0.0);
+        for p in 0..p_count {
+            t.fill(0.0);
+            let mut a0 = 0;
+            while a0 < dim {
+                let a1 = (a0 + w).min(dim);
+                let pan = maps.panel(p, mode, a0, a1, std::mem::take(&mut buf));
+                for (ti, v) in t.iter_mut().zip(matvec(&pan, Trans::No, &x[a0..a1])) {
+                    *ti += v;
+                }
+                buf = pan.into_vec();
+                a0 = a1;
+            }
+            let mut a0 = 0;
+            while a0 < dim {
+                let a1 = (a0 + w).min(dim);
+                let pan = maps.panel(p, mode, a0, a1, std::mem::take(&mut buf));
+                for (yi, v) in y[a0..a1].iter_mut().zip(matvec(&pan, Trans::Yes, &t)) {
+                    *yi += v;
+                }
+                buf = pan.into_vec();
+                a0 = a1;
+            }
+        }
+    };
+    let out = cg_normal_solve(&mut apply, &diag, &atb, None, &opts.cg)?;
+    stats.cg_iterations += out.iterations;
+    if out.x.data().iter().all(|v| v.is_finite()) {
+        Ok(out.x)
+    } else {
+        dense_fallback(facs, maps, mode, "CGNR produced non-finite iterates")
+    }
+}
+
+/// Dedicated keying domain for the recovery sketch (disjoint from the
+/// replica-map keys, which hash `(map seed, replica, mode, row, col)`).
+const SKETCH_SEED: u64 = 0x5ca1_ab1e_0f0e_7c31;
+
+/// The randomized path: sketch the stacked system with a counter-rng
+/// Gaussian `S (s × P·L)`, `s = dim + 4·rank + 16`, solve the small dense
+/// `min ‖(SA)·x − (SB)‖`, then polish with warm-started CG against the
+/// *unsketched* operator.  Peak memory is `O(s·dim)` — same order as the
+/// Gram, which is why `Auto` never resolves here (this is the refine /
+/// experimentation path, per Erichson et al.).
+fn recover_mode_sketch(
+    facs: &[&Matrix],
+    maps: &MapSource,
+    mode: usize,
+    dim: usize,
+    w: usize,
+    opts: &RecoveryOptions,
+    stats: &mut RecoveryStats,
+) -> Result<Matrix> {
+    let l = maps.reduced()[mode];
+    let rank = facs[0].cols();
+    let s_rows = MemoryPlanner::sketch_rows(dim, rank);
+    let scale = 1.0 / (s_rows as f32).sqrt();
+    let mut sa = Matrix::zeros(s_rows, dim);
+    let mut sb = Matrix::zeros(s_rows, rank);
+    let mut buf = Vec::new();
+    for (p, fac) in facs.iter().enumerate() {
+        // This replica's s×L sketch block, generated on demand and dropped
+        // after use — entry (i, row) keys on (replica, sketch row, map
+        // row, mode) so every tier and panel width sees the same sketch.
+        let s_blk = Matrix::from_fn(s_rows, l, |i, row| {
+            scale
+                * gaussian_from_key(counter_key(
+                    SKETCH_SEED,
+                    p as u64,
+                    i as u64,
+                    row as u64,
+                    mode as u64,
+                ))
+        });
+        add_block(&mut sb, 0, 0, &matmul(&s_blk, Trans::No, fac, Trans::No));
+        let mut a0 = 0;
+        while a0 < dim {
+            let a1 = (a0 + w).min(dim);
+            let pan = maps.panel(p, mode, a0, a1, std::mem::take(&mut buf));
+            add_block(&mut sa, 0, a0, &matmul(&s_blk, Trans::No, &pan, Trans::No));
+            buf = pan.into_vec();
+            a0 = a1;
+        }
+    }
+    let sketched = match lstsq(&sa, &sb) {
+        Ok(x) if x.data().iter().all(|v| v.is_finite()) => x,
+        _ => return dense_fallback(facs, maps, mode, "sketched solve degenerated"),
+    };
+    // Polish against the true operator: the sketch solution is within
+    // O(ε_sketch) of the minimizer, so warm-started CG needs few
+    // iterations to reach solver tolerance.
+    drop(sa);
+    let (diag, atb) = accumulate_diag_atb(facs, maps, mode, dim, w);
+    let p_count = maps.p_count();
+    let mut t = vec![0.0f32; l];
+    let mut apply = |x: &[f32], y: &mut [f32]| {
+        y.fill(0.0);
+        for p in 0..p_count {
+            t.fill(0.0);
+            let mut a0 = 0;
+            while a0 < dim {
+                let a1 = (a0 + w).min(dim);
+                let pan = maps.panel(p, mode, a0, a1, std::mem::take(&mut buf));
+                for (ti, v) in t.iter_mut().zip(matvec(&pan, Trans::No, &x[a0..a1])) {
+                    *ti += v;
+                }
+                buf = pan.into_vec();
+                a0 = a1;
+            }
+            let mut a0 = 0;
+            while a0 < dim {
+                let a1 = (a0 + w).min(dim);
+                let pan = maps.panel(p, mode, a0, a1, std::mem::take(&mut buf));
+                for (yi, v) in y[a0..a1].iter_mut().zip(matvec(&pan, Trans::Yes, &t)) {
+                    *yi += v;
+                }
+                buf = pan.into_vec();
+                a0 = a1;
+            }
+        }
+    };
+    let out = cg_normal_solve(&mut apply, &diag, &atb, Some(&sketched), &opts.cg)?;
+    stats.cg_iterations += out.iterations;
+    if out.x.data().iter().all(|v| v.is_finite()) {
+        Ok(out.x)
+    } else {
+        dense_fallback(facs, maps, mode, "sketch polish produced non-finite iterates")
     }
 }
 
 /// Solves the stacked least squares (Eq. 4) for all three modes by
 /// **streaming column panels** of the stacked maps — no `P·L × I` matrix is
-/// ever materialized, so recovery works unchanged for both map tiers.
+/// ever materialized, so recovery works unchanged for both map tiers.  The
+/// per-mode solver and panel width come from `opts`; returns the model plus
+/// per-run [`RecoveryStats`].
 ///
 /// `aligned` are the anchor-normalized, permutation-aligned replica models,
 /// one per kept replica of `maps` (same order).
-pub fn stacked_recover(aligned: &[CpModel], maps: &MapSource) -> Result<CpModel> {
+pub fn stacked_recover_opts(
+    aligned: &[CpModel],
+    maps: &MapSource,
+    opts: &RecoveryOptions,
+) -> Result<(CpModel, RecoveryStats)> {
     if aligned.is_empty() {
         bail!("no aligned replicas to recover from");
     }
@@ -148,10 +417,18 @@ pub fn stacked_recover(aligned: &[CpModel], maps: &MapSource) -> Result<CpModel>
             maps.p_count()
         );
     }
-    let a = recover_mode(aligned, maps, 0, |m| &m.a)?;
-    let b = recover_mode(aligned, maps, 1, |m| &m.b)?;
-    let c = recover_mode(aligned, maps, 2, |m| &m.c)?;
-    Ok(CpModel::new(a, b, c))
+    let mut stats = RecoveryStats::default();
+    let a = recover_mode(aligned, maps, 0, |m| &m.a, opts, &mut stats)?;
+    let b = recover_mode(aligned, maps, 1, |m| &m.b, opts, &mut stats)?;
+    let c = recover_mode(aligned, maps, 2, |m| &m.c, opts, &mut stats)?;
+    Ok((CpModel::new(a, b, c), stats))
+}
+
+/// [`stacked_recover_opts`] with the default (Cholesky) options — the
+/// historical entry point, kept so existing callers and the differential
+/// tests stay byte-for-byte unchanged.
+pub fn stacked_recover(aligned: &[CpModel], maps: &MapSource) -> Result<CpModel> {
+    stacked_recover_opts(aligned, maps, &RecoveryOptions::default()).map(|(m, _)| m)
 }
 
 /// The retired materializing solve — `vstack` the maps and factors, then
@@ -619,6 +896,151 @@ mod tests {
         assert_eq!(a.a.data(), b.a.data());
         assert_eq!(a.b.data(), b.b.data());
         assert_eq!(a.c.data(), b.c.data());
+    }
+
+    #[test]
+    fn iterative_recovery_matches_cholesky_and_oracle() {
+        // dim 300 > default panel 256 exercises multi-panel streaming in
+        // the CG matvec; exact replicas make the stacked system consistent,
+        // so CGNR and the dense solvers agree to solver tolerance.
+        let dims = [300, 40, 30];
+        let truth = truth_model(dims, 3, 320);
+        let maps = MapSource::generate(dims, [12, 10, 9], 40, 4, 321, MapTier::Materialized);
+        let models = exact_replica_models(&truth, &maps);
+        let opts = RecoveryOptions::with_solver(RecoverySolverKind::Iterative);
+        let (iter, stats) = stacked_recover_opts(&models, &maps, &opts).unwrap();
+        assert!(stats.cg_iterations > 0);
+        let chol = stacked_recover(&models, &maps).unwrap();
+        let oracle =
+            stacked_recover_vstack(&models, maps.materialized().unwrap()).unwrap();
+        for (got, want) in [(&iter.a, &chol.a), (&iter.b, &chol.b), (&iter.c, &chol.c)] {
+            let err = got.rel_error(want);
+            assert!(err < 1e-3, "iterative vs cholesky err {err}");
+        }
+        assert!(iter.a.rel_error(&oracle.a) < 1e-3);
+        assert!(iter.b.rel_error(&oracle.b) < 1e-3);
+        assert!(iter.c.rel_error(&oracle.c) < 1e-3);
+    }
+
+    #[test]
+    fn iterative_recovery_is_tier_bitwise_invariant() {
+        // Panels are bitwise identical across tiers, the accumulation order
+        // is fixed, and CG is deterministic — so the iterative path inherits
+        // the tier-interchangeability guarantee bit for bit.
+        let dims = [60, 50, 40];
+        let truth = truth_model(dims, 2, 322);
+        let mat = MapSource::generate(dims, [9, 9, 9], 12, 3, 323, MapTier::Materialized);
+        let proc_ = MapSource::generate(dims, [9, 9, 9], 12, 3, 323, MapTier::Procedural);
+        let models = exact_replica_models(&truth, &mat);
+        let opts = RecoveryOptions::with_solver(RecoverySolverKind::Iterative);
+        let (a, _) = stacked_recover_opts(&models, &mat, &opts).unwrap();
+        let (b, _) = stacked_recover_opts(&models, &proc_, &opts).unwrap();
+        assert_eq!(a.a.data(), b.a.data());
+        assert_eq!(a.b.data(), b.b.data());
+        assert_eq!(a.c.data(), b.c.data());
+    }
+
+    #[test]
+    fn iterative_recovery_is_panel_width_insensitive() {
+        // Different panel widths change the matvec accumulation splits (and
+        // so the f32 rounding), but the minimizer is the same.
+        let dims = [60, 50, 40];
+        let truth = truth_model(dims, 2, 322);
+        let maps = MapSource::generate(dims, [9, 9, 9], 12, 3, 323, MapTier::Materialized);
+        let models = exact_replica_models(&truth, &maps);
+        let narrow = RecoveryOptions {
+            panel_cols: 7,
+            ..RecoveryOptions::with_solver(RecoverySolverKind::Iterative)
+        };
+        let (a, _) = stacked_recover_opts(&models, &maps, &narrow).unwrap();
+        let (b, _) = stacked_recover_opts(
+            &models,
+            &maps,
+            &RecoveryOptions::with_solver(RecoverySolverKind::Iterative),
+        )
+        .unwrap();
+        assert!(a.a.rel_error(&b.a) < 1e-4, "A err {}", a.a.rel_error(&b.a));
+        assert!(a.b.rel_error(&b.b) < 1e-4);
+        assert!(a.c.rel_error(&b.c) < 1e-4);
+    }
+
+    #[test]
+    fn sketch_recovery_matches_cholesky() {
+        let dims = [80, 40, 30];
+        let truth = truth_model(dims, 3, 330);
+        let maps = MapSource::generate(dims, [12, 10, 9], 12, 4, 331, MapTier::Materialized);
+        let models = exact_replica_models(&truth, &maps);
+        let opts = RecoveryOptions::with_solver(RecoverySolverKind::Sketch);
+        let (sk, _) = stacked_recover_opts(&models, &maps, &opts).unwrap();
+        let chol = stacked_recover(&models, &maps).unwrap();
+        // The CG polish runs after the sketch, so agreement is at solver
+        // tolerance, not just sketch tolerance.
+        assert!(sk.a.rel_error(&chol.a) < 1e-3, "A err {}", sk.a.rel_error(&chol.a));
+        assert!(sk.b.rel_error(&chol.b) < 1e-3);
+        assert!(sk.c.rel_error(&chol.c) < 1e-3);
+    }
+
+    #[test]
+    fn near_square_recovery_agrees_across_solvers() {
+        // col_rank_bound = S + P(L−S) = 4 + 8·4 = 36 vs dim 34: barely
+        // overdetermined, the worst-conditioned regime the identifiability
+        // check admits.  All three solvers (and the vstack oracle) must
+        // still agree — the consistent system keeps CGNR's residual honest
+        // even when the Gram is nearly singular.
+        let dims = [34, 20, 20];
+        let truth = truth_model(dims, 2, 340);
+        let maps = MapSource::generate(dims, [8, 8, 8], 8, 4, 341, MapTier::Materialized);
+        let models = exact_replica_models(&truth, &maps);
+        let chol = stacked_recover(&models, &maps).unwrap();
+        let (iter, _) = stacked_recover_opts(
+            &models,
+            &maps,
+            &RecoveryOptions::with_solver(RecoverySolverKind::Iterative),
+        )
+        .unwrap();
+        let (sk, _) = stacked_recover_opts(
+            &models,
+            &maps,
+            &RecoveryOptions::with_solver(RecoverySolverKind::Sketch),
+        )
+        .unwrap();
+        let oracle =
+            stacked_recover_vstack(&models, maps.materialized().unwrap()).unwrap();
+        for m in [&chol, &iter, &sk] {
+            assert!(m.a.rel_error(&oracle.a) < 5e-2, "A err {}", m.a.rel_error(&oracle.a));
+            assert!(m.b.rel_error(&oracle.b) < 5e-2);
+            assert!(m.c.rel_error(&oracle.c) < 5e-2);
+        }
+    }
+
+    #[test]
+    fn recovery_stats_flag_solver_work() {
+        let dims = [30, 28, 26];
+        let truth = truth_model(dims, 3, 300);
+        let maps = MapSource::generate(dims, [8, 8, 8], 8, 4, 301, MapTier::Materialized);
+        let models = exact_replica_models(&truth, &maps);
+        let (_, chol_stats) =
+            stacked_recover_opts(&models, &maps, &RecoveryOptions::default()).unwrap();
+        assert_eq!(chol_stats.cg_iterations, 0);
+        let (_, iter_stats) = stacked_recover_opts(
+            &models,
+            &maps,
+            &RecoveryOptions::with_solver(RecoverySolverKind::Iterative),
+        )
+        .unwrap();
+        assert!(iter_stats.cg_iterations > 0);
+    }
+
+    #[test]
+    fn iterative_recovery_rejects_rank_deficiency_up_front() {
+        // The identifiability checks run before solver dispatch, so the
+        // ridge-damped CG can never paper over an underdetermined system.
+        let dims = [100, 10, 10];
+        let truth = truth_model(dims, 2, 302);
+        let maps = MapSource::generate(dims, [5, 5, 5], 2, 3, 303, MapTier::Materialized);
+        let models = exact_replica_models(&truth, &maps);
+        let opts = RecoveryOptions::with_solver(RecoverySolverKind::Iterative);
+        assert!(stacked_recover_opts(&models, &maps, &opts).is_err());
     }
 
     #[test]

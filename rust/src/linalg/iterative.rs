@@ -1,0 +1,352 @@
+//! Matrix-free iterative least-squares: preconditioned conjugate gradient
+//! on the (ridge-damped) normal equations — CGNR.
+//!
+//! The stacked recovery solve of Eq. (4) is `min ‖A·X − B‖_F` with
+//! `A ((P·L)×I)` never materialized: the tiered `MapSource` can synthesize
+//! any `L×w` panel of it on demand.  This module supplies the solver half
+//! of that bargain: [`cg_normal_solve`] needs only a closure computing
+//! `y ← AᵀA·x` (two streamed panel passes for the caller) plus the Gram
+//! diagonal (one panel pass: column norms²), so the `I×I` Gram itself is
+//! never formed and solver memory is `O(I)` per right-hand side.
+//!
+//! Conditioning is handled the same way the dense path handles it:
+//! a Tikhonov ridge `damp = max(damp_rel · tr(AᵀA)/n, 1e-10)` — the exact
+//! jitter `cholesky_factor` applies on a non-PD pivot — so the iterative
+//! and Cholesky solvers agree to solver tolerance even on rank-deficient
+//! systems (differential-tested in `coordinator/recovery.rs`).  The Jacobi
+//! preconditioner `M = diag(AᵀA) + damp` costs nothing extra (the diagonal
+//! is already required for the damp) and collapses the iteration count on
+//! the badly row-scaled systems sketching produces.
+
+use super::matrix::Matrix;
+use anyhow::{ensure, Result};
+
+/// Knobs for [`cg_normal_solve`].
+#[derive(Clone, Copy, Debug)]
+pub struct CgOptions {
+    /// Relative ridge: `damp = max(damp_rel · tr(AᵀA)/n, 1e-10)`.  The
+    /// default `1e-6` matches `cholesky_factor`'s non-PD jitter so the two
+    /// solvers regularize identically.
+    pub damp_rel: f32,
+    /// Convergence: stop column `j` when `‖r‖ ≤ tol·‖bⱼ‖` (with
+    /// `r = bⱼ − (AᵀA + damp·I)·x`).
+    pub tol: f32,
+    /// Per-column iteration cap; `0` means `2·n + 32`.
+    pub max_iters: usize,
+}
+
+impl Default for CgOptions {
+    fn default() -> Self {
+        Self { damp_rel: 1e-6, tol: 1e-6, max_iters: 0 }
+    }
+}
+
+/// What [`cg_normal_solve`] produced.
+#[derive(Debug)]
+pub struct CgOutcome {
+    /// The `n×k` solution.
+    pub x: Matrix,
+    /// Iterations summed over all `k` right-hand sides (the
+    /// `recovery_cg_iters` gauge).
+    pub iterations: u64,
+    /// Every column reached `tol` before its iteration cap.  A `false`
+    /// outcome still carries the best iterate — callers decide whether
+    /// that is fatal.
+    pub converged: bool,
+}
+
+/// Ridge damping derived from the Gram diagonal, matching the Cholesky
+/// jitter rule `max(damp_rel · tr/n, 1e-10)` (trace accumulated in f64
+/// like `cholesky_factor` does).
+pub fn normal_damp(diag: &[f32], damp_rel: f32) -> f32 {
+    let n = diag.len().max(1);
+    let tr: f64 = diag.iter().map(|&d| d as f64).sum();
+    (damp_rel as f64 * tr / n as f64).max(1e-10) as f32
+}
+
+/// f64-accumulated dot product: CG's recurrences are sensitive to rounding
+/// in the scalars even when the vectors stay f32.
+fn dot(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+}
+
+/// Preconditioned CG on the damped normal equations:
+/// solves `(AᵀA + damp·I)·X = B` column by column, where `AᵀA` is reached
+/// only through `apply` (`y ← AᵀA·x`, caller-owned, typically two streamed
+/// panel passes) and `diag` is its diagonal.
+///
+/// `x0`, when given, warm-starts every column (the sketch-and-solve polish
+/// path); its shape must match the solution.  Breakdown (a non-positive
+/// curvature `pᵀq`, impossible for an exactly-damped SPD operator but
+/// reachable through f32 rounding) stops that column at its best iterate
+/// rather than erroring.
+pub fn cg_normal_solve(
+    apply: &mut impl FnMut(&[f32], &mut [f32]),
+    diag: &[f32],
+    rhs: &Matrix,
+    x0: Option<&Matrix>,
+    opts: &CgOptions,
+) -> Result<CgOutcome> {
+    let n = diag.len();
+    let k = rhs.cols();
+    ensure!(rhs.rows() == n, "rhs rows {} != system size {}", rhs.rows(), n);
+    if let Some(w) = x0 {
+        ensure!(
+            w.rows() == n && w.cols() == k,
+            "warm start {}×{} does not match solution {}×{}",
+            w.rows(),
+            w.cols(),
+            n,
+            k
+        );
+    }
+    let damp = normal_damp(diag, opts.damp_rel);
+    // Jacobi preconditioner: damped-Gram diagonal, guarded so a zero
+    // column (exactly rank-deficient A) degrades to the identity there
+    // instead of poisoning the solve.
+    let m_inv: Vec<f32> = diag
+        .iter()
+        .map(|&d| {
+            let v = d + damp;
+            if v.is_finite() && v > 0.0 {
+                1.0 / v
+            } else {
+                1.0
+            }
+        })
+        .collect();
+    let max_iters = if opts.max_iters == 0 { 2 * n + 32 } else { opts.max_iters };
+
+    let mut x = Matrix::zeros(n, k);
+    let mut iterations: u64 = 0;
+    let mut converged = true;
+    let mut q = vec![0.0f32; n];
+    let mut r = vec![0.0f32; n];
+    let mut z = vec![0.0f32; n];
+    let mut p = vec![0.0f32; n];
+    for j in 0..k {
+        let b = rhs.col(j);
+        let bnorm = dot(b, b).sqrt();
+        if bnorm == 0.0 {
+            continue; // zero RHS → zero solution, exactly
+        }
+        let xj = x.col_mut(j);
+        if let Some(w) = x0 {
+            xj.copy_from_slice(w.col(j));
+            apply(xj, &mut q);
+            for i in 0..n {
+                r[i] = b[i] - q[i] - damp * xj[i];
+            }
+        } else {
+            r.copy_from_slice(b);
+        }
+        for i in 0..n {
+            z[i] = m_inv[i] * r[i];
+        }
+        p.copy_from_slice(&z);
+        let mut rz = dot(&r, &z);
+        let stop = opts.tol as f64 * bnorm;
+        for _ in 0..max_iters {
+            if dot(&r, &r).sqrt() <= stop {
+                break;
+            }
+            apply(&p, &mut q);
+            for i in 0..n {
+                q[i] += damp * p[i];
+            }
+            let pq = dot(&p, &q);
+            if !(pq.is_finite() && pq > 0.0) {
+                break; // rounding breakdown: keep the best iterate
+            }
+            let alpha = rz / pq;
+            for i in 0..n {
+                xj[i] += (alpha * p[i] as f64) as f32;
+                r[i] -= (alpha * q[i] as f64) as f32;
+            }
+            for i in 0..n {
+                z[i] = m_inv[i] * r[i];
+            }
+            let rz_new = dot(&r, &z);
+            let beta = rz_new / rz;
+            rz = rz_new;
+            for i in 0..n {
+                p[i] = z[i] + (beta * p[i] as f64) as f32;
+            }
+            iterations += 1;
+        }
+        if dot(&r, &r).sqrt() > stop {
+            converged = false;
+        }
+    }
+    Ok(CgOutcome { x, iterations, converged })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::{matmul, matvec, Trans};
+    use crate::linalg::cholesky::cholesky_solve;
+    use crate::util::rng::Xoshiro256;
+
+    /// Dense reference operator: y ← AᵀA·x via two matvecs (what the
+    /// streamed panel passes compute without materializing AᵀA).
+    fn dense_apply(a: &Matrix) -> impl FnMut(&[f32], &mut [f32]) + '_ {
+        move |x, y| {
+            let ax = matvec(a, Trans::No, x);
+            y.copy_from_slice(&matvec(a, Trans::Yes, &ax));
+        }
+    }
+
+    fn gram_diag(a: &Matrix) -> Vec<f32> {
+        (0..a.cols())
+            .map(|j| a.col(j).iter().map(|&v| v * v).sum())
+            .collect()
+    }
+
+    /// The dense oracle with the *same* ridge: `(AᵀA + damp·I)⁻¹·AᵀB`.
+    fn ridge_cholesky(a: &Matrix, atb: &Matrix, damp: f32) -> Matrix {
+        let mut gram = matmul(a, Trans::Yes, a, Trans::No);
+        for i in 0..gram.rows() {
+            gram.add_assign_at(i, i, damp);
+        }
+        cholesky_solve(&gram, atb).unwrap()
+    }
+
+    #[test]
+    fn cg_matches_lstsq_well_conditioned() {
+        let mut rng = Xoshiro256::seed_from_u64(60);
+        let a = Matrix::random_normal(120, 24, &mut rng);
+        let x_true = Matrix::random_normal(24, 3, &mut rng);
+        let b = matmul(&a, Trans::No, &x_true, Trans::No);
+        let atb = matmul(&a, Trans::Yes, &b, Trans::No);
+        let diag = gram_diag(&a);
+        let out = cg_normal_solve(
+            &mut dense_apply(&a),
+            &diag,
+            &atb,
+            None,
+            &CgOptions::default(),
+        )
+        .unwrap();
+        assert!(out.converged);
+        assert!(out.iterations > 0);
+        // The ridge bounds accuracy at ~damp_rel, not machine epsilon.
+        assert!(out.x.rel_error(&x_true) < 1e-3, "rel {}", out.x.rel_error(&x_true));
+    }
+
+    #[test]
+    fn cg_matches_ridge_cholesky_on_rank_deficient_system() {
+        // Duplicate column → exactly singular Gram.  Both solvers fall
+        // back on the identical ridge, so they must agree tightly.
+        let mut rng = Xoshiro256::seed_from_u64(61);
+        let base = Matrix::random_normal(80, 11, &mut rng);
+        let a = Matrix::from_fn(80, 12, |i, j| {
+            if j < 11 {
+                base.get(i, j)
+            } else {
+                base.get(i, 0) // copy of column 0
+            }
+        });
+        let b = Matrix::random_normal(80, 2, &mut rng);
+        let atb = matmul(&a, Trans::Yes, &b, Trans::No);
+        let diag = gram_diag(&a);
+        let opts = CgOptions::default();
+        let damp = normal_damp(&diag, opts.damp_rel);
+        let oracle = ridge_cholesky(&a, &atb, damp);
+        let out =
+            cg_normal_solve(&mut dense_apply(&a), &diag, &atb, None, &opts).unwrap();
+        assert!(out.x.data().iter().all(|v| v.is_finite()));
+        assert!(
+            out.x.rel_error(&oracle) < 1e-3,
+            "cg vs ridge-cholesky rel {}",
+            out.x.rel_error(&oracle)
+        );
+    }
+
+    #[test]
+    fn cg_matches_ridge_cholesky_near_singular() {
+        // Columns spanning 3 decades of scale: the Jacobi preconditioner
+        // is what keeps the iteration count sane here.
+        let mut rng = Xoshiro256::seed_from_u64(62);
+        let base = Matrix::random_normal(90, 10, &mut rng);
+        let a = Matrix::from_fn(90, 10, |i, j| {
+            let scale = if j >= 7 { 1e-3 } else { 1.0 };
+            base.get(i, j) * scale
+        });
+        let b = Matrix::random_normal(90, 2, &mut rng);
+        let atb = matmul(&a, Trans::Yes, &b, Trans::No);
+        let diag = gram_diag(&a);
+        let opts = CgOptions::default();
+        let damp = normal_damp(&diag, opts.damp_rel);
+        let oracle = ridge_cholesky(&a, &atb, damp);
+        let out =
+            cg_normal_solve(&mut dense_apply(&a), &diag, &atb, None, &opts).unwrap();
+        assert!(
+            out.x.rel_error(&oracle) < 5e-3,
+            "cg vs ridge-cholesky rel {}",
+            out.x.rel_error(&oracle)
+        );
+    }
+
+    #[test]
+    fn warm_start_cuts_iterations() {
+        let mut rng = Xoshiro256::seed_from_u64(63);
+        let a = Matrix::random_normal(150, 30, &mut rng);
+        let x_true = Matrix::random_normal(30, 2, &mut rng);
+        let b = matmul(&a, Trans::No, &x_true, Trans::No);
+        let atb = matmul(&a, Trans::Yes, &b, Trans::No);
+        let diag = gram_diag(&a);
+        let opts = CgOptions::default();
+        let cold =
+            cg_normal_solve(&mut dense_apply(&a), &diag, &atb, None, &opts).unwrap();
+        // Warm start from a mildly perturbed truth (what the sketch
+        // hand-off looks like) must converge in fewer iterations.
+        let warm0 = Matrix::from_fn(30, 2, |i, j| x_true.get(i, j) * 1.001);
+        let warm =
+            cg_normal_solve(&mut dense_apply(&a), &diag, &atb, Some(&warm0), &opts)
+                .unwrap();
+        assert!(warm.converged);
+        assert!(
+            warm.iterations < cold.iterations,
+            "warm {} !< cold {}",
+            warm.iterations,
+            cold.iterations
+        );
+        assert!(warm.x.rel_error(&x_true) < 1e-3);
+    }
+
+    #[test]
+    fn zero_rhs_and_shape_checks() {
+        let a = Matrix::from_fn(10, 4, |i, j| (i + j) as f32 / 10.0);
+        let diag = gram_diag(&a);
+        let zero = Matrix::zeros(4, 2);
+        let out = cg_normal_solve(
+            &mut dense_apply(&a),
+            &diag,
+            &zero,
+            None,
+            &CgOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(out.iterations, 0);
+        assert!(out.x.data().iter().all(|&v| v == 0.0));
+        let bad = Matrix::zeros(5, 2);
+        assert!(cg_normal_solve(
+            &mut dense_apply(&a),
+            &diag,
+            &bad,
+            None,
+            &CgOptions::default()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn damp_matches_cholesky_jitter_rule() {
+        let diag = vec![2.0f32, 4.0, 6.0];
+        // tr = 12, n = 3 → 1e-6 · 4 = 4e-6
+        assert!((normal_damp(&diag, 1e-6) - 4e-6).abs() < 1e-12);
+        // Floor kicks in on a zero trace.
+        assert_eq!(normal_damp(&[0.0, 0.0], 1e-6), 1e-10);
+    }
+}

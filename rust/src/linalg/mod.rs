@@ -16,6 +16,7 @@ pub mod cholesky;
 pub mod eig;
 pub mod hungarian;
 pub mod ista;
+pub mod iterative;
 pub mod lstsq;
 pub mod matmul;
 pub mod matrix;
@@ -31,6 +32,7 @@ pub use cholesky::{cholesky_factor, cholesky_solve};
 pub use eig::sym_eig;
 pub use hungarian::{hungarian_max, hungarian_min, Assignment};
 pub use ista::ista_l1;
+pub use iterative::{cg_normal_solve, normal_damp, CgOptions, CgOutcome};
 pub use lstsq::{lstsq, pinv, ridge_solve};
 pub use matmul::{gemm, matmul, matvec, mttkrp_fused, mttkrp_fused_acc, Trans};
 pub use matrix::Matrix;

@@ -18,7 +18,9 @@
 
 use exascale_tensor::apps::{run_cp_layer_experiment, run_gene_analysis, CpBackend, GeneConfig};
 use exascale_tensor::apps::nn::{train, Network, SyntheticImages, TrainConfig};
-use exascale_tensor::coordinator::{Backend, MapTierChoice, Pipeline, PipelineConfig};
+use exascale_tensor::coordinator::{
+    Backend, MapTierChoice, Pipeline, PipelineConfig, RecoverySolver,
+};
 use exascale_tensor::runtime::artifacts_dir;
 use exascale_tensor::tensor::{
     save_tensor_streamed, FileTensorSource, LowRankGenerator, TensorSource,
@@ -79,6 +81,12 @@ fn decompose_cmd() -> Command {
             "replica-map tier: auto | materialized | procedural (generate-on-slice)",
             Some("auto"),
         )
+        .opt(
+            "recovery-solver",
+            "stacked-solve solver: auto | cholesky | iterative (matrix-free CG) | sketch",
+            Some("auto"),
+        )
+        .opt("recovery-panel-cols", "streamed map-panel width in columns", Some("256"))
         .opt("seed", "random seed", Some("0"))
         .switch("mixed", "mixed-precision (split bf16) compression")
         .switch("help", "show help")
@@ -135,6 +143,9 @@ fn cmd_decompose(prog: &str, args: &[String]) -> i32 {
             builder = builder.checkpoint_dir(dir);
         }
         builder = builder.map_tier(MapTierChoice::parse(m.get("map-tier").unwrap_or("auto"))?);
+        builder = builder
+            .recovery_solver(RecoverySolver::parse(m.get("recovery-solver").unwrap_or("auto"))?)
+            .recovery_panel_cols(m.get_usize("recovery-panel-cols")?);
         let cfg = builder.build()?;
         let mut pipe = Pipeline::new(cfg);
         if backend == Backend::Xla {
@@ -164,14 +175,15 @@ fn cmd_decompose(prog: &str, args: &[String]) -> i32 {
         };
         println!(
             "plan: P={} block={:?} est bytes={} out_of_core={} prefetch_depth={} \
-             io_threads={} map_tier={}",
+             io_threads={} map_tier={} recovery_solver={}",
             result.plan.replicas,
             result.plan.block,
             result.plan.estimated_bytes,
             result.plan.out_of_core,
             result.plan.prefetch_depth,
             result.plan.io_threads,
-            result.plan.map_tier.as_str()
+            result.plan.map_tier.as_str(),
+            result.plan.recovery_solver.as_str()
         );
         println!("sampled MSE      : {:.3e}", result.diagnostics.sampled_mse);
         println!("sampled rel error: {:.3e}", result.diagnostics.rel_error);
@@ -448,6 +460,12 @@ fn client_cmd() -> Command {
     .opt("threads", "per-job worker threads", Some("2"))
     .opt("priority", "higher runs first", Some("0"))
     .opt("map-tier", "replica-map tier: auto | materialized | procedural", Some("auto"))
+    .opt(
+        "recovery-solver",
+        "stacked-solve solver: auto | cholesky | iterative | sketch",
+        Some("auto"),
+    )
+    .opt("recovery-panel-cols", "streamed map-panel width in columns", Some("256"))
     .opt("seed", "random seed", Some("0"))
     .opt("poll-ms", "--wait poll interval", Some("200"))
     .switch("wait", "block until the submitted job is terminal")
@@ -497,6 +515,10 @@ fn cmd_client(prog: &str, args: &[String]) -> i32 {
                     .threads(m.get_usize("threads")?)
                     .memory_budget(m.get_usize("memory-budget-mb")? * (1 << 20))
                     .map_tier(MapTierChoice::parse(m.get("map-tier").unwrap_or("auto"))?)
+                    .recovery_solver(RecoverySolver::parse(
+                        m.get("recovery-solver").unwrap_or("auto"),
+                    )?)
+                    .recovery_panel_cols(m.get_usize("recovery-panel-cols")?)
                     .seed(seed)
                     .build()?;
                 Request::Submit(JobSpec {

@@ -135,7 +135,19 @@ pub fn cache_key(spec: &JobSpec) -> Result<String> {
         // `map_tier` is execution-only too: both tiers produce bitwise
         // identical factors by construction (tests/map_tiers.rs), so a
         // procedural resubmission of a materialized job is a cache hit.
-        for k in ["threads", "io_threads", "prefetch_depth", "checkpoint_dir", "map_tier"] {
+        // `recovery_solver`/`recovery_panel_cols` follow the same policy:
+        // every solver converges to the same minimizer within the
+        // pipeline's own tolerance (tests in coordinator::recovery), so
+        // how the stacked solve executes must not split cache lines.
+        for k in [
+            "threads",
+            "io_threads",
+            "prefetch_depth",
+            "checkpoint_dir",
+            "map_tier",
+            "recovery_solver",
+            "recovery_panel_cols",
+        ] {
             m.remove(k);
         }
     }
@@ -329,6 +341,15 @@ mod tests {
         let mut tiered = spec(1, 2);
         tiered.config.map_tier = crate::coordinator::config::MapTierChoice::Procedural;
         assert_eq!(k1, cache_key(&tiered).unwrap(), "map tier must not split cache lines");
+        // Recovery solver + panel width are execution knobs too.
+        let mut solved = spec(1, 2);
+        solved.config.recovery_solver = crate::coordinator::config::RecoverySolver::Iterative;
+        solved.config.recovery_panel_cols = 64;
+        assert_eq!(
+            k1,
+            cache_key(&solved).unwrap(),
+            "recovery solver/panel must not split cache lines"
+        );
     }
 
     #[test]

@@ -17,7 +17,7 @@
 //! `<spool>/jobs/<id>.json`, committed by atomic rename, so the spool is
 //! never observed half-written.
 
-use crate::coordinator::config::PipelineConfig;
+use crate::coordinator::config::{PipelineConfig, RecoverySolverKind};
 use crate::tensor::{FileTensorSource, LowRankGenerator, TensorSource};
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
@@ -252,6 +252,10 @@ pub struct JobRecord {
     /// a flagged non-terminal record into `cancelled` instead of
     /// requeueing it.
     pub cancel_requested: bool,
+    /// The planner-resolved recovery solver (settled at admission, so
+    /// `STATUS` reports what will actually run even while the job queues).
+    /// `None` in records written before the field existed.
+    pub resolved_solver: Option<RecoverySolverKind>,
     pub error: Option<String>,
     pub outcome: Option<JobOutcome>,
 }
@@ -269,6 +273,9 @@ impl JobRecord {
         ];
         if self.cancel_requested {
             pairs.push(("cancel_requested", Json::Bool(true)));
+        }
+        if let Some(s) = self.resolved_solver {
+            pairs.push(("resolved_solver", Json::str(s.as_str())));
         }
         if let Some(e) = &self.error {
             pairs.push(("error", Json::str(e.clone())));
@@ -309,6 +316,10 @@ impl JobRecord {
                 .get("cancel_requested")
                 .and_then(|x| x.as_bool())
                 .unwrap_or(false),
+            resolved_solver: match v.get("resolved_solver").and_then(|x| x.as_str()) {
+                Some(s) => Some(RecoverySolverKind::parse(s)?),
+                None => None,
+            },
             error: v.get("error").and_then(|x| x.as_str()).map(str::to_string),
             outcome: match v.get("outcome") {
                 None | Some(Json::Null) => None,
@@ -426,6 +437,7 @@ mod tests {
             plan_bytes: 123_456,
             cache_key: "deadbeef".into(),
             cancel_requested: false,
+            resolved_solver: Some(RecoverySolverKind::Cholesky),
             error: None,
             outcome: Some(JobOutcome {
                 rel_error: 1e-3,
@@ -456,6 +468,14 @@ mod tests {
         assert_eq!(back.spec.priority, 3);
         assert_eq!(back.spec.source, rec.spec.source);
         assert_eq!(back.spec.config.reduced, [8, 8, 8]);
+        assert_eq!(back.resolved_solver, Some(RecoverySolverKind::Cholesky));
+        // Legacy records (no resolved_solver key) default to None.
+        let mut legacy = rec.to_json();
+        if let Json::Obj(m) = &mut legacy {
+            m.remove("resolved_solver");
+        }
+        let back = JobRecord::from_json(&legacy).unwrap();
+        assert_eq!(back.resolved_solver, None);
     }
 
     #[test]

@@ -237,6 +237,7 @@ impl Scheduler {
                 plan_bytes: plan.estimated_bytes,
                 cache_key: key,
                 cancel_requested: false,
+                resolved_solver: Some(plan.recovery_solver),
                 error: None,
                 outcome: None,
             };
@@ -577,8 +578,13 @@ impl Inner {
             // Fold the per-job pipeline counters into the daemon registry
             // (aggregate traffic: blocks_streamed, checkpoint resumes, …).
             // Gauge-style values must not be summed — last run wins.
+            const GAUGES: [&str; 3] = [
+                "compress_prefetch_depth",
+                "recovery_cg_iters",
+                "recovery_solver_iterative",
+            ];
             for (k, v) in pipe.metrics.snapshot() {
-                if k == "compress_prefetch_depth" {
+                if GAUGES.contains(&k.as_str()) {
                     self.metrics.set(&k, v);
                 } else {
                     self.metrics.incr(&k, v);
@@ -760,6 +766,7 @@ mod tests {
         let rec = s.submit(small_spec(11, 0)).unwrap();
         assert_eq!(rec.state, JobState::Queued);
         assert!(rec.plan_bytes > 0, "planner must price the job");
+        assert!(rec.resolved_solver.is_some(), "admission records the resolved solver");
         let done = s.wait(&rec.id, Duration::from_secs(120)).unwrap();
         assert_eq!(done.state, JobState::Done, "err: {:?}", done.error);
         let o1 = done.outcome.unwrap();

@@ -227,6 +227,7 @@ fn daemon_restart_recovers_spool_and_resumes_bitwise() {
         plan_bytes: plan.estimated_bytes,
         cache_key: cache_key(&job_spec).unwrap(),
         cancel_requested: false,
+        resolved_solver: None,
         error: None,
         outcome: None,
     };
