@@ -28,6 +28,7 @@
 
 use crate::tensor::{BlockRange, DenseTensor, TensorSource};
 use crate::util::threadpool::ThreadPool;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
@@ -98,6 +99,17 @@ pub struct StreamStats {
     pub aborted: bool,
     /// Whether the prefetched pipeline ran.
     pub prefetched: bool,
+    /// A source read failed irrecoverably (panic in `TensorSource::block`,
+    /// e.g. an exhausted retry budget): the pass stopped early with the
+    /// message recorded here.  The returned accumulator is still the
+    /// intact folded prefix of [`StreamStats::shards_done`] shards, so the
+    /// caller can checkpoint it before surfacing the failure.
+    pub failure: Option<String>,
+    /// Shards folded into the returned accumulator (== `shards` on a
+    /// complete pass).
+    pub shards_done: usize,
+    /// Blocks covered by the folded prefix (includes the resumed prefix).
+    pub blocks_done: u64,
 }
 
 /// A resumable prefix: the first `shards_done` shards' contributions are
@@ -132,6 +144,19 @@ pub trait BlockConsumer: Sync {
     /// Folds a completed shard accumulator into the running result.
     /// Called in strict shard-index order.
     fn merge(&self, into: &mut Self::Acc, from: Self::Acc);
+}
+
+/// Renders a caught panic payload as the failure message recorded in
+/// [`StreamStats::failure`] (sources signal irrecoverable reads by
+/// panicking with a formatted message — see `FileTensorSource::block`).
+fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "source read panicked".to_string()
+    }
 }
 
 /// In-order prefix folder over completed shards.
@@ -191,6 +216,8 @@ pub fn stream_blocks<C: BlockConsumer>(
         ..Default::default()
     };
     if blocks.is_empty() || resume_shards >= nshards {
+        stats.shards_done = resume_shards.min(nshards);
+        stats.blocks_done = resume_blocks as u64;
         return (acc0, stats);
     }
     debug_assert_eq!(
@@ -207,6 +234,21 @@ pub fn stream_blocks<C: BlockConsumer>(
     });
     let fold_advanced = std::sync::Condvar::new();
     let stop = AtomicBool::new(false);
+    let failure: Mutex<Option<String>> = Mutex::new(None);
+    // First source-read panic wins; later ones (other threads hitting the
+    // same dying source) are dropped.  Sets `stop` and wakes any worker
+    // throttled on the fold-prefix window so the pass winds down.
+    let record_failure = |p: Box<dyn std::any::Any + Send>| {
+        let msg = panic_message(p);
+        let mut slot = failure.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(msg);
+        }
+        drop(slot);
+        stop.store(true, Ordering::SeqCst);
+        let _wake = folder.lock().unwrap();
+        fold_advanced.notify_all();
+    };
     let io_ns = AtomicU64::new(0);
     let recv_stall_ns = AtomicU64::new(0);
     let send_stall_ns = AtomicU64::new(0);
@@ -273,12 +315,27 @@ pub fn stream_blocks<C: BlockConsumer>(
                     }
                     let (b0, b1) = shards[s];
                     let mut acc = consumer.zero_acc();
+                    let mut failed = false;
                     for pos in b0..b1 {
                         let t0 = Instant::now();
-                        let t = src.block(&blocks[pos]);
+                        let t = match catch_unwind(AssertUnwindSafe(|| src.block(&blocks[pos]))) {
+                            Ok(t) => t,
+                            Err(p) => {
+                                record_failure(p);
+                                failed = true;
+                                break;
+                            }
+                        };
                         io_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                         blocks_read.fetch_add(1, Ordering::Relaxed);
                         consumer.process(&mut ctx, &blocks[pos], t, &mut acc);
+                    }
+                    if failed {
+                        // The shard is incomplete: folding it would corrupt
+                        // the prefix, so abandon it and exit.  The folded
+                        // prefix (shards before this one, once their owners
+                        // finish) stays intact for checkpoint-then-fail.
+                        break;
                     }
                     complete_shard(s, acc);
                 }
@@ -331,6 +388,7 @@ pub fn stream_blocks<C: BlockConsumer>(
                     let shard_cursor = &shard_cursor;
                     let rr = &rr;
                     let shards = &shards;
+                    let record_failure = &record_failure;
                     scope.spawn(move || loop {
                         if stop.load(Ordering::SeqCst) {
                             break;
@@ -365,7 +423,13 @@ pub fn stream_blocks<C: BlockConsumer>(
                         };
                         let Some(pos) = claimed else { break };
                         let t0 = Instant::now();
-                        let t = src.block(&blocks[pos]);
+                        let t = match catch_unwind(AssertUnwindSafe(|| src.block(&blocks[pos]))) {
+                            Ok(t) => t,
+                            Err(p) => {
+                                record_failure(p);
+                                break;
+                            }
+                        };
                         let read_done = Instant::now();
                         io_ns.fetch_add(
                             (read_done - t0).as_nanos() as u64,
@@ -465,12 +529,15 @@ pub fn stream_blocks<C: BlockConsumer>(
     }
 
     let folder = folder.into_inner().unwrap();
+    stats.failure = failure.into_inner().unwrap();
     stats.aborted = stop.load(Ordering::SeqCst);
     assert!(
         stats.aborted || folder.next == nshards,
         "streaming pass ended with {} of {nshards} shards folded",
         folder.next
     );
+    stats.shards_done = folder.next;
+    stats.blocks_done = folder.blocks_done as u64;
     stats.blocks_read = blocks_read.load(Ordering::Relaxed);
     stats.io_seconds = io_ns.load(Ordering::Relaxed) as f64 * 1e-9;
     stats.io_stall_seconds = recv_stall_ns.load(Ordering::Relaxed) as f64 * 1e-9;
@@ -620,6 +687,47 @@ mod tests {
         assert!(!stats.aborted);
         assert_eq!(last.load(Ordering::SeqCst), stats.shards);
         assert!(calls.load(Ordering::SeqCst) >= 1);
+    }
+
+    /// Source whose `block` panics at one block index: models a read whose
+    /// retry budget is exhausted (`FileTensorSource::block` panics with the
+    /// formatted error after `read_at` gives up).
+    struct FailingSource {
+        inner: InMemorySource,
+        fail_at: usize,
+    }
+    impl TensorSource for FailingSource {
+        fn dims(&self) -> [usize; 3] {
+            self.inner.dims()
+        }
+        fn block(&self, r: &BlockRange) -> DenseTensor {
+            if r.index == self.fail_at {
+                panic!("simulated irrecoverable read at block {}", r.index);
+            }
+            self.inner.block(r)
+        }
+    }
+
+    #[test]
+    fn source_panic_is_captured_not_propagated() {
+        let (src, blocks) = setup([10, 10, 10], [4, 4, 4]);
+        let fail_at = blocks.len() - 1;
+        let failing = FailingSource { inner: src, fail_at };
+        for prefetch in [None, Some(PrefetchConfig { depth: 2, io_threads: 2 })] {
+            let opts = StreamOptions { threads: 3, prefetch, shard_parts: 6 };
+            let (_, stats) =
+                stream_blocks(&failing, &blocks, &opts, &SumConsumer, None, None);
+            assert!(stats.aborted, "failure must stop the pass");
+            let msg = stats.failure.expect("failure message recorded");
+            assert!(
+                msg.contains("simulated irrecoverable read"),
+                "panic payload surfaced: {msg}"
+            );
+            assert!(
+                stats.shards_done < stats.shards,
+                "failing final block means the last shard cannot fold"
+            );
+        }
     }
 
     #[test]

@@ -27,9 +27,22 @@
 //!   run.  Writes are generation-numbered and committed by an atomic
 //!   rename of `partial.json`, so a kill mid-write leaves the previous
 //!   complete generation in force.
+//!
+//! Incremental checkpoints are **integrity-checked**: `partial.json`
+//! records an FNV-1a digest of every partial proxy payload and of the
+//! shard bitmap, verified on load.  The previous generation's files (and
+//! its header, as `partial_prev.json`) are retained until the next commit,
+//! so a bit-rotted or torn newest generation falls back to the previous
+//! intact one — and if none survives, [`load_partial`] degrades to a clean
+//! cold start instead of resuming from corrupt state.  Only *corruption*
+//! falls back; a fingerprint or partition mismatch stays a loud error
+//! (those mean the caller asked for a different run, not that the disk
+//! lied).
 
 use crate::tensor::io::{load_tensor, save_tensor};
 use crate::tensor::DenseTensor;
+use crate::util::fault::{self, TRANSIENT_MARKER};
+use crate::util::hash::{fnv1a64, Fnv};
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 use std::path::Path;
@@ -312,10 +325,45 @@ fn partial_proxy_name(generation: u64, p: usize) -> String {
     format!("partial_{generation:08}_proxy_{p:04}.ext1")
 }
 
+/// Content digest of one tensor payload (dims + little-endian f32 bytes) —
+/// what `partial.json` records per partial proxy and verifies on load.
+fn tensor_digest(t: &DenseTensor) -> u64 {
+    let mut h = Fnv::new();
+    for d in t.dims() {
+        h.write_u64(d as u64);
+    }
+    for &x in t.data() {
+        h.write(&x.to_le_bytes());
+    }
+    h.finish()
+}
+
+/// Digests travel as 16-hex strings: JSON numbers are f64 and cannot hold
+/// a u64 exactly.
+fn digest_hex(d: u64) -> String {
+    format!("{d:016x}")
+}
+
+fn parse_digest_hex(s: &str) -> Option<u64> {
+    (s.len() == 16).then(|| u64::from_str_radix(s, 16).ok()).flatten()
+}
+
+/// The generation number a committed partial header points at, if the
+/// header is readable — used by the GC to know which previous-generation
+/// files are still referenced.
+fn header_generation(path: &Path) -> Option<u64> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let v = Json::parse(&text).ok()?;
+    v.get("progress")?.get("generation")?.as_usize().map(|g| g as u64)
+}
+
 /// Writes an incremental (mid-compression) checkpoint: the folded-prefix
-/// proxies under a fresh generation, then the `partial.json` header via an
-/// atomic rename, then garbage-collects older generations.  A kill at any
-/// point leaves a complete previous generation (or no partial at all).
+/// proxies under a fresh generation (each payload digested into the
+/// header), preserves the outgoing header as `partial_prev.json`, commits
+/// the new `partial.json` via an atomic rename, then garbage-collects
+/// every generation older than the two the headers reference.  A kill at
+/// any point leaves at least one complete generation (or no partial at
+/// all), and a corrupted newest generation still has an intact fallback.
 pub fn save_partial(
     dir: impl AsRef<Path>,
     fp: &Fingerprint,
@@ -325,31 +373,53 @@ pub fn save_partial(
     let dir = dir.as_ref();
     std::fs::create_dir_all(dir)?;
     let g = progress.generation;
+    let mut digests = Vec::with_capacity(proxies.len());
     for (p, y) in proxies.iter().enumerate() {
         save_tensor(y, dir.join(partial_proxy_name(g, p)))?;
+        digests.push(Json::str(digest_hex(tensor_digest(y))));
     }
+    let bitmap = prefix_bitmap_hex(progress.shards_done, progress.shards_total);
     let header = Json::obj(vec![
         ("version", Json::num(CHECKPOINT_VERSION as f64)),
         ("stage", Json::str("compressing")),
         ("fingerprint", fp.to_json()),
         ("proxy_count", Json::num(proxies.len() as f64)),
-        (
-            "progress",
-            progress.to_json(&prefix_bitmap_hex(progress.shards_done, progress.shards_total)),
-        ),
+        ("proxy_digests", Json::Arr(digests)),
+        ("bitmap_digest", Json::str(digest_hex(fnv1a64(bitmap.as_bytes())))),
+        ("progress", progress.to_json(&bitmap)),
     ]);
     let tmp = dir.join("partial.json.tmp");
     std::fs::write(&tmp, header.to_string_pretty())?;
-    std::fs::rename(&tmp, dir.join("partial.json")).context("committing partial.json")?;
-    // GC superseded generations (best-effort).
+    // Keep the outgoing generation reachable: copy (not rename — the
+    // current header must stay valid until the new one is committed) the
+    // live header aside before replacing it.
+    let current = dir.join("partial.json");
+    if current.exists() {
+        std::fs::copy(&current, dir.join("partial_prev.json"))
+            .context("preserving previous partial header")?;
+    }
+    if fault::should_fault(fault::Site::CheckpointCommit) {
+        std::fs::remove_file(&tmp).ok();
+        bail!("injected checkpoint commit fault {TRANSIENT_MARKER}");
+    }
+    std::fs::rename(&tmp, &current).context("committing partial.json")?;
+    // GC generations no longer referenced by either header (best-effort).
+    // The prev header's generation is parsed rather than assumed to be
+    // g−1: a failed commit consumes a generation number without updating
+    // the headers.
+    let prev_gen = header_generation(&dir.join("partial_prev.json"));
     if let Ok(entries) = std::fs::read_dir(dir) {
         for e in entries.flatten() {
             let name = e.file_name();
             let name = name.to_string_lossy();
-            if name.starts_with("partial_")
-                && name.ends_with(".ext1")
-                && !name.starts_with(&format!("partial_{g:08}_"))
-            {
+            if !name.starts_with("partial_") || !name.ends_with(".ext1") {
+                continue;
+            }
+            let keep = name.starts_with(&format!("partial_{g:08}_"))
+                || prev_gen
+                    .map(|pg| name.starts_with(&format!("partial_{pg:08}_")))
+                    .unwrap_or(true);
+            if !keep {
                 std::fs::remove_file(e.path()).ok();
             }
         }
@@ -357,29 +427,62 @@ pub fn save_partial(
     Ok(())
 }
 
-/// Loads an incremental checkpoint if present.  `Ok(None)` when absent;
-/// `Err` when one exists but was written under a different fingerprint or
-/// block-grid partition (resuming it would corrupt results — fail loudly,
-/// mirroring [`load_proxies`]).  `expected` carries the partition of the
-/// *current* run (its `shards_done`/`blocks_done`/`generation` are
-/// ignored).
-pub fn load_partial(
-    dir: impl AsRef<Path>,
+/// Result of [`load_partial`]: the resumable state if any intact
+/// generation exists, plus how many corrupt generations were skipped to
+/// find it (surfaced by the pipeline as the `checkpoint_fallbacks`
+/// metric).
+#[derive(Debug)]
+pub struct PartialLoad {
+    pub state: Option<(CompressionProgress, Vec<DenseTensor>)>,
+    pub fallbacks: u64,
+}
+
+/// One candidate header's verdict.  `Corrupt` means the disk lied (bad
+/// JSON, failed digest, unloadable payload) — recoverable by falling back
+/// a generation; genuine config mismatches are hard errors instead.
+enum Candidate {
+    Absent,
+    Corrupt(String),
+    Loaded(CompressionProgress, Vec<DenseTensor>),
+}
+
+/// Validates and loads the generation one header points at.  Every
+/// integrity failure returns `Candidate::Corrupt`; fingerprint and
+/// partition mismatches return `Err` (resuming under different parameters
+/// would silently corrupt results — corruption fallback must not mask
+/// that).
+fn load_partial_candidate(
+    dir: &Path,
+    header_path: &Path,
     fp: &Fingerprint,
     expected: &CompressionProgress,
-) -> Result<Option<(CompressionProgress, Vec<DenseTensor>)>> {
-    let dir = dir.as_ref();
-    let header_path = dir.join("partial.json");
+) -> Result<Candidate> {
     if !header_path.exists() {
-        return Ok(None);
+        return Ok(Candidate::Absent);
     }
-    let text = std::fs::read_to_string(&header_path)?;
-    let v = Json::parse(&text).context("partial.json parse")?;
+    let text = match std::fs::read_to_string(header_path) {
+        Ok(t) => t,
+        Err(e) => return Ok(Candidate::Corrupt(format!("unreadable header: {e}"))),
+    };
+    let v = match Json::parse(&text) {
+        Ok(v) => v,
+        Err(e) => return Ok(Candidate::Corrupt(format!("header parse: {e}"))),
+    };
     if v.get("version").and_then(|x| x.as_usize()) != Some(CHECKPOINT_VERSION) {
-        bail!("unsupported partial checkpoint version");
+        // Unlike `load_proxies`' loud version gate, a partial is
+        // engine-managed state: an unsupported (or bit-rotted) version
+        // degrades to recompressing, which is what the gate would demand
+        // anyway.
+        return Ok(Candidate::Corrupt("unsupported or damaged version".into()));
     }
-    let stored_fp =
-        Fingerprint::from_json(v.get("fingerprint").context("missing fingerprint")?)?;
+    let stored_fp = match v
+        .get("fingerprint")
+        .context("missing fingerprint")
+        .and_then(Fingerprint::from_json)
+    {
+        Ok(f) => f,
+        Err(e) => return Ok(Candidate::Corrupt(format!("fingerprint: {e:#}"))),
+    };
     if &stored_fp != fp {
         bail!(
             "partial checkpoint at {} was created with different parameters \
@@ -387,8 +490,14 @@ pub fn load_partial(
             dir.display()
         );
     }
-    let (progress, bitmap) =
-        CompressionProgress::from_json(v.get("progress").context("missing progress")?)?;
+    let (progress, bitmap) = match v
+        .get("progress")
+        .context("missing progress")
+        .and_then(CompressionProgress::from_json)
+    {
+        Ok(p) => p,
+        Err(e) => return Ok(Candidate::Corrupt(format!("progress: {e:#}"))),
+    };
     if progress.block != expected.block
         || progress.shard_parts != expected.shard_parts
         || progress.shards_total != expected.shards_total
@@ -401,60 +510,144 @@ pub fn load_partial(
             dir.display()
         );
     }
-    // Progress bounds: a tampered/corrupt header must fail loudly here,
-    // not panic later in the engine's resume assertions.
+    // Progress bounds: a tampered/corrupt header must be caught here, not
+    // panic later in the engine's resume assertions.
     if progress.shards_done > progress.shards_total {
-        bail!(
-            "partial checkpoint claims {} of {} shards done",
-            progress.shards_done,
-            progress.shards_total
-        );
+        return Ok(Candidate::Corrupt(format!(
+            "claims {} of {} shards done",
+            progress.shards_done, progress.shards_total
+        )));
     }
     let parts =
         crate::util::threadpool::ThreadPool::partition(progress.blocks_total, progress.shard_parts);
     if parts.len() != progress.shards_total {
-        bail!(
-            "partial checkpoint shard partition is inconsistent ({} parts for {} declared)",
+        return Ok(Candidate::Corrupt(format!(
+            "inconsistent shard partition ({} parts for {} declared)",
             parts.len(),
             progress.shards_total
-        );
+        )));
     }
     let prefix_blocks: usize = parts[..progress.shards_done].iter().map(|(a, b)| b - a).sum();
     if prefix_blocks != progress.blocks_done {
-        bail!(
-            "partial checkpoint blocks_done {} does not match its {}-shard prefix ({prefix_blocks})",
-            progress.blocks_done,
-            progress.shards_done
-        );
+        return Ok(Candidate::Corrupt(format!(
+            "blocks_done {} does not match its {}-shard prefix ({prefix_blocks})",
+            progress.blocks_done, progress.shards_done
+        )));
     }
-    check_prefix_bitmap(&bitmap, progress.shards_done, progress.shards_total)?;
-    let count = v
-        .get("proxy_count")
-        .and_then(|x| x.as_usize())
-        .context("missing proxy_count")?;
-    // A truncated/corrupt partial must fail loudly here: resuming with the
-    // wrong accumulator count would silently drop replicas in the merge.
+    if let Err(e) = check_prefix_bitmap(&bitmap, progress.shards_done, progress.shards_total) {
+        return Ok(Candidate::Corrupt(format!("{e:#}")));
+    }
+    match v.get("bitmap_digest").and_then(|x| x.as_str()).and_then(parse_digest_hex) {
+        Some(d) if d == fnv1a64(bitmap.as_bytes()) => {}
+        Some(_) => return Ok(Candidate::Corrupt("bitmap digest mismatch".into())),
+        None => return Ok(Candidate::Corrupt("missing bitmap digest".into())),
+    }
+    let count = match v.get("proxy_count").and_then(|x| x.as_usize()) {
+        Some(c) => c,
+        None => return Ok(Candidate::Corrupt("missing proxy_count".into())),
+    };
+    // A truncated partial (wrong accumulator count) would silently drop
+    // replicas in the merge — corruption, not a config mismatch.
     if count != fp.replicas {
-        bail!(
-            "partial checkpoint holds {count} proxies but the run expects {} replicas",
+        return Ok(Candidate::Corrupt(format!(
+            "holds {count} proxies but the run expects {} replicas",
             fp.replicas
-        );
+        )));
     }
+    let digests: Vec<Option<u64>> = match v.get("proxy_digests").and_then(|x| x.as_arr()) {
+        Some(a) if a.len() == count => {
+            a.iter().map(|d| d.as_str().and_then(parse_digest_hex)).collect()
+        }
+        _ => return Ok(Candidate::Corrupt("missing or short proxy_digests".into())),
+    };
     let mut proxies = Vec::with_capacity(count);
-    for p in 0..count {
+    for (p, want) in digests.iter().enumerate() {
         let path = dir.join(partial_proxy_name(progress.generation, p));
-        let t = load_tensor(&path).with_context(|| format!("loading {}", path.display()))?;
+        let t = match load_tensor(&path) {
+            Ok(t) => t,
+            Err(e) => {
+                return Ok(Candidate::Corrupt(format!("{}: {e:#}", path.display())));
+            }
+        };
         if t.dims() != fp.reduced {
-            bail!(
-                "{}: partial proxy dims {:?} do not match reduced dims {:?}",
+            return Ok(Candidate::Corrupt(format!(
+                "{}: proxy dims {:?} do not match reduced dims {:?}",
                 path.display(),
                 t.dims(),
                 fp.reduced
-            );
+            )));
+        }
+        if *want != Some(tensor_digest(&t)) {
+            return Ok(Candidate::Corrupt(format!(
+                "{}: payload digest mismatch",
+                path.display()
+            )));
         }
         proxies.push(t);
     }
-    Ok(Some((progress, proxies)))
+    Ok(Candidate::Loaded(progress, proxies))
+}
+
+/// Loads the newest intact incremental checkpoint generation.
+///
+/// Tries `partial.json`, then `partial_prev.json`.  Corrupt candidates are
+/// skipped (counted in [`PartialLoad::fallbacks`]); a fallback hit
+/// promotes the previous header back to `partial.json` and deletes the
+/// corrupt generation's files.  If no candidate survives, all partial
+/// state is cleared and the run cold-starts.  `expected` carries the
+/// partition of the *current* run (its `shards_done`/`blocks_done`/
+/// `generation` are ignored); a fingerprint or partition mismatch is still
+/// a hard `Err`, exactly as before.
+pub fn load_partial(
+    dir: impl AsRef<Path>,
+    fp: &Fingerprint,
+    expected: &CompressionProgress,
+) -> Result<PartialLoad> {
+    let dir = dir.as_ref();
+    let primary = dir.join("partial.json");
+    let prev = dir.join("partial_prev.json");
+    let mut fallbacks = 0u64;
+    for (is_prev, path) in [(false, &primary), (true, &prev)] {
+        match load_partial_candidate(dir, path, fp, expected)? {
+            Candidate::Absent => continue,
+            Candidate::Corrupt(why) => {
+                log::warn!(
+                    "partial checkpoint {}: {why}; falling back a generation",
+                    path.display()
+                );
+                fallbacks += 1;
+            }
+            Candidate::Loaded(pr, proxies) => {
+                if is_prev {
+                    // Promote the survivor so the directory invariant
+                    // (partial.json = newest intact generation) is
+                    // restored, and drop the corrupt newer files.
+                    std::fs::rename(&prev, &primary).ok();
+                    let keep = format!("partial_{:08}_", pr.generation);
+                    if let Ok(entries) = std::fs::read_dir(dir) {
+                        for e in entries.flatten() {
+                            let name = e.file_name();
+                            let name = name.to_string_lossy();
+                            if name.starts_with("partial_")
+                                && name.ends_with(".ext1")
+                                && !name.starts_with(&keep)
+                            {
+                                std::fs::remove_file(e.path()).ok();
+                            }
+                        }
+                    }
+                }
+                return Ok(PartialLoad { state: Some((pr, proxies)), fallbacks });
+            }
+        }
+    }
+    if fallbacks > 0 {
+        // No generation survived: clear the wreckage so the cold start is
+        // actually clean (and the next save doesn't resurrect it).
+        log::warn!("no intact partial checkpoint generation; cold-starting compression");
+        clear_partial(dir).ok();
+    }
+    Ok(PartialLoad { state: None, fallbacks })
 }
 
 /// Removes only the incremental checkpoint (after the final one lands).
@@ -464,6 +657,8 @@ pub fn clear_partial(dir: impl AsRef<Path>) -> Result<()> {
         return Ok(());
     }
     std::fs::remove_file(dir.join("partial.json")).ok();
+    std::fs::remove_file(dir.join("partial_prev.json")).ok();
+    std::fs::remove_file(dir.join("partial.json.tmp")).ok();
     for e in std::fs::read_dir(dir)?.flatten() {
         let name = e.file_name();
         let name = name.to_string_lossy();
@@ -533,6 +728,7 @@ mod tests {
 
     #[test]
     fn round_trip() {
+        let _no_faults = crate::util::fault::exclude_faults();
         let dir = tmpdir("rt");
         let mut rng = Xoshiro256::seed_from_u64(1);
         let proxies = vec![
@@ -550,6 +746,7 @@ mod tests {
 
     #[test]
     fn mismatched_fingerprint_rejected() {
+        let _no_faults = crate::util::fault::exclude_faults();
         let dir = tmpdir("mismatch");
         let mut rng = Xoshiro256::seed_from_u64(2);
         let proxies = vec![DenseTensor::random_normal([10, 10, 10], &mut rng)];
@@ -583,29 +780,36 @@ mod tests {
 
     #[test]
     fn partial_progress_bounds_validated() {
+        let _no_faults = crate::util::fault::exclude_faults();
         let dir = tmpdir("partial_bounds");
         let mut rng = Xoshiro256::seed_from_u64(8);
         let proxies = vec![
             DenseTensor::random_normal([10, 10, 10], &mut rng),
             DenseTensor::random_normal([10, 10, 10], &mut rng),
         ];
-        // blocks_done inconsistent with the shard prefix → loud failure.
+        // blocks_done inconsistent with the shard prefix → corrupt header:
+        // with no earlier generation to fall back to, the run cold-starts.
         let mut pr = progress(3, 0);
         pr.blocks_done = 35;
         save_partial(&dir, &fp(), &pr, &proxies).unwrap();
-        assert!(load_partial(&dir, &fp(), &progress(0, 0)).is_err());
+        let load = load_partial(&dir, &fp(), &progress(0, 0)).unwrap();
+        assert!(load.state.is_none());
+        assert_eq!(load.fallbacks, 1);
         clear(&dir).unwrap();
-        // shards_done beyond shards_total → loud failure, not a panic.
+        // shards_done beyond shards_total → caught, never a panic.
         let mut pr = progress(10, 0);
         pr.shards_done = 12;
         pr.blocks_done = 144;
         save_partial(&dir, &fp(), &pr, &proxies).unwrap();
-        assert!(load_partial(&dir, &fp(), &progress(0, 0)).is_err());
+        let load = load_partial(&dir, &fp(), &progress(0, 0)).unwrap();
+        assert!(load.state.is_none());
+        assert_eq!(load.fallbacks, 1);
         clear(&dir).unwrap();
     }
 
     #[test]
     fn partial_round_trip_and_gc() {
+        let _no_faults = crate::util::fault::exclude_faults();
         let dir = tmpdir("partial_rt");
         let mut rng = Xoshiro256::seed_from_u64(3);
         let proxies = vec![
@@ -618,19 +822,126 @@ mod tests {
             DenseTensor::random_normal([10, 10, 10], &mut rng),
         ];
         save_partial(&dir, &fp(), &progress(6, 1), &newer).unwrap();
-        let (pr, loaded) = load_partial(&dir, &fp(), &progress(0, 0)).unwrap().unwrap();
+        let load = load_partial(&dir, &fp(), &progress(0, 0)).unwrap();
+        let (pr, loaded) = load.state.unwrap();
+        assert_eq!(load.fallbacks, 0);
         assert_eq!(pr.shards_done, 6);
         assert_eq!(pr.blocks_done, 72);
         assert_eq!(loaded, newer, "latest generation wins");
-        // Generation-0 files were garbage-collected.
-        assert!(!dir.join(super::partial_proxy_name(0, 0)).exists());
+        // Generation 0 is retained as the fallback generation…
+        assert!(dir.join(super::partial_proxy_name(0, 0)).exists());
+        assert!(dir.join("partial_prev.json").exists());
+        // …until a third commit supersedes it.
+        let newest = vec![
+            DenseTensor::random_normal([10, 10, 10], &mut rng),
+            DenseTensor::random_normal([10, 10, 10], &mut rng),
+        ];
+        save_partial(&dir, &fp(), &progress(9, 2), &newest).unwrap();
+        assert!(!dir.join(super::partial_proxy_name(0, 0)).exists(), "gen 0 GC'd");
+        assert!(dir.join(super::partial_proxy_name(1, 0)).exists(), "gen 1 kept");
         clear_partial(&dir).unwrap();
-        assert!(load_partial(&dir, &fp(), &progress(0, 0)).unwrap().is_none());
+        assert!(load_partial(&dir, &fp(), &progress(0, 0)).unwrap().state.is_none());
+        assert!(!dir.join("partial_prev.json").exists());
+        clear(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupt_newest_generation_falls_back_to_previous() {
+        let _no_faults = crate::util::fault::exclude_faults();
+        let dir = tmpdir("partial_fallback");
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        let older = vec![
+            DenseTensor::random_normal([10, 10, 10], &mut rng),
+            DenseTensor::random_normal([10, 10, 10], &mut rng),
+        ];
+        save_partial(&dir, &fp(), &progress(3, 0), &older).unwrap();
+        let newer = vec![
+            DenseTensor::random_normal([10, 10, 10], &mut rng),
+            DenseTensor::random_normal([10, 10, 10], &mut rng),
+        ];
+        save_partial(&dir, &fp(), &progress(6, 1), &newer).unwrap();
+        // Bit-rot one byte of the newest generation's payload.
+        let victim = dir.join(super::partial_proxy_name(1, 1));
+        let mut bytes = std::fs::read(&victim).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x40;
+        std::fs::write(&victim, &bytes).unwrap();
+        let load = load_partial(&dir, &fp(), &progress(0, 0)).unwrap();
+        assert_eq!(load.fallbacks, 1, "one corrupt generation skipped");
+        let (pr, loaded) = load.state.expect("previous generation survives");
+        assert_eq!(pr.shards_done, 3);
+        assert_eq!(loaded, older, "fallback is bitwise the previous generation");
+        // The survivor was promoted: a second load is clean.
+        let again = load_partial(&dir, &fp(), &progress(0, 0)).unwrap();
+        assert_eq!(again.fallbacks, 0);
+        assert_eq!(again.state.unwrap().1, older);
+        assert!(!victim.exists(), "corrupt generation's files deleted");
+        clear(&dir).unwrap();
+    }
+
+    #[test]
+    fn all_generations_corrupt_cold_starts_clean() {
+        let _no_faults = crate::util::fault::exclude_faults();
+        let dir = tmpdir("partial_cold");
+        let mut rng = Xoshiro256::seed_from_u64(10);
+        let proxies = vec![
+            DenseTensor::random_normal([10, 10, 10], &mut rng),
+            DenseTensor::random_normal([10, 10, 10], &mut rng),
+        ];
+        save_partial(&dir, &fp(), &progress(3, 0), &proxies).unwrap();
+        save_partial(&dir, &fp(), &progress(6, 1), &proxies).unwrap();
+        std::fs::write(dir.join("partial.json"), "{torn").unwrap();
+        std::fs::write(dir.join("partial_prev.json"), "also torn").unwrap();
+        let load = load_partial(&dir, &fp(), &progress(0, 0)).unwrap();
+        assert!(load.state.is_none());
+        assert_eq!(load.fallbacks, 2, "both generations skipped");
+        assert!(!partial_exists(&dir), "wreckage cleared for a clean cold start");
+        assert!(!dir.join(super::partial_proxy_name(1, 0)).exists());
+        clear(&dir).unwrap();
+    }
+
+    #[test]
+    fn commit_fault_leaves_previous_generation_in_force() {
+        use crate::util::fault::{arm_scoped, FaultPlan, Site, SiteSpec};
+        let dir = tmpdir("partial_commit_fault");
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        let older = vec![
+            DenseTensor::random_normal([10, 10, 10], &mut rng),
+            DenseTensor::random_normal([10, 10, 10], &mut rng),
+        ];
+        save_partial(&dir, &fp(), &progress(3, 0), &older).unwrap();
+        let newer = vec![
+            DenseTensor::random_normal([10, 10, 10], &mut rng),
+            DenseTensor::random_normal([10, 10, 10], &mut rng),
+        ];
+        {
+            let g = arm_scoped(FaultPlan::new(2).site(
+                Site::CheckpointCommit,
+                SiteSpec { max: 1, ..Default::default() },
+            ));
+            let e = save_partial(&dir, &fp(), &progress(6, 1), &newer)
+                .expect_err("injected commit fault")
+                .to_string();
+            assert!(crate::util::fault::is_transient(&format!("{e:#}")));
+            assert_eq!(g.fired(Site::CheckpointCommit), 1);
+        }
+        // The failed commit must not have replaced the live header.
+        let load = load_partial(&dir, &fp(), &progress(0, 0)).unwrap();
+        let (pr, loaded) = load.state.expect("previous generation in force");
+        assert_eq!(pr.shards_done, 3);
+        assert_eq!(loaded, older);
+        // And a retried commit (disarmed) goes through.
+        save_partial(&dir, &fp(), &progress(6, 1), &newer).unwrap();
+        let (pr, loaded) =
+            load_partial(&dir, &fp(), &progress(0, 0)).unwrap().state.unwrap();
+        assert_eq!(pr.shards_done, 6);
+        assert_eq!(loaded, newer);
         clear(&dir).unwrap();
     }
 
     #[test]
     fn partial_partition_mismatch_rejected() {
+        let _no_faults = crate::util::fault::exclude_faults();
         let dir = tmpdir("partial_mismatch");
         let mut rng = Xoshiro256::seed_from_u64(4);
         let proxies = vec![DenseTensor::random_normal([10, 10, 10], &mut rng)];
@@ -649,6 +960,7 @@ mod tests {
 
     #[test]
     fn partial_absent_is_none_and_final_untouched() {
+        let _no_faults = crate::util::fault::exclude_faults();
         let dir = tmpdir("partial_absent");
         let mut rng = Xoshiro256::seed_from_u64(5);
         let proxies = vec![
@@ -657,7 +969,9 @@ mod tests {
         ];
         // A final checkpoint alone yields no partial.
         save_proxies(&dir, &fp(), &proxies).unwrap();
-        assert!(load_partial(&dir, &fp(), &progress(0, 0)).unwrap().is_none());
+        let load = load_partial(&dir, &fp(), &progress(0, 0)).unwrap();
+        assert!(load.state.is_none());
+        assert_eq!(load.fallbacks, 0, "absent is not corruption");
         // clear_partial must not disturb the final checkpoint.
         clear_partial(&dir).unwrap();
         assert!(load_proxies(&dir, &fp()).unwrap().is_some());
@@ -666,6 +980,7 @@ mod tests {
 
     #[test]
     fn proxy_count_and_dims_validated_on_load() {
+        let _no_faults = crate::util::fault::exclude_faults();
         let dir = tmpdir("count_dims");
         let mut rng = Xoshiro256::seed_from_u64(6);
         // One proxy where the fingerprint promises two → loud failure.
@@ -673,8 +988,13 @@ mod tests {
         save_proxies(&dir, &fp(), &short).unwrap();
         assert!(load_proxies(&dir, &fp()).is_err());
         clear(&dir).unwrap();
+        // A partial with the wrong replica count is treated as corruption:
+        // no intact generation remains, so the load cold-starts clean.
         save_partial(&dir, &fp(), &progress(2, 0), &short).unwrap();
-        assert!(load_partial(&dir, &fp(), &progress(0, 0)).is_err());
+        let load = load_partial(&dir, &fp(), &progress(0, 0)).unwrap();
+        assert!(load.state.is_none());
+        assert!(load.fallbacks >= 1, "count mismatch must count as a fallback");
+        assert!(!partial_exists(&dir), "cold start clears the corrupt partial");
         clear(&dir).unwrap();
         // Right count, wrong dims → loud failure.
         let wrong_dims = vec![
@@ -701,6 +1021,7 @@ mod tests {
 
     #[test]
     fn corrupt_header_rejected() {
+        let _no_faults = crate::util::fault::exclude_faults();
         let dir = tmpdir("corrupt");
         std::fs::create_dir_all(&dir).unwrap();
         std::fs::write(dir.join("checkpoint.json"), "{not json").unwrap();

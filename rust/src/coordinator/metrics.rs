@@ -158,13 +158,24 @@ mod tests {
         m.incr("jobs_queued", 3);
         m.set("admission_rejected_bytes", 1024);
         m.incr("cache_hits", 1);
+        // The failure-hardening counters ride the same snapshot plumbing.
+        m.incr("jobs_retried", 2);
+        m.incr("jobs_quarantined", 1);
+        m.incr("checkpoint_fallbacks", 1);
+        m.incr("conn_timeouts", 4);
+        m.incr("conn_rejected_over_capacity", 5);
         let snap = m.snapshot();
         assert_eq!(
             snap,
             vec![
                 ("admission_rejected_bytes".to_string(), 1024),
                 ("cache_hits".to_string(), 1),
+                ("checkpoint_fallbacks".to_string(), 1),
+                ("conn_rejected_over_capacity".to_string(), 5),
+                ("conn_timeouts".to_string(), 4),
+                ("jobs_quarantined".to_string(), 1),
                 ("jobs_queued".to_string(), 3),
+                ("jobs_retried".to_string(), 2),
             ]
         );
         let mut sorted = snap.clone();

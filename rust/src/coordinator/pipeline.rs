@@ -42,7 +42,7 @@ use crate::linalg::ista::IstaOptions;
 use crate::mixed::MixedPrecision;
 use crate::tensor::{DenseTensor, TensorSource};
 use crate::util::threadpool::ThreadPool;
-use anyhow::Result;
+use anyhow::{bail, Result};
 use std::sync::Arc;
 
 /// Pluggable proxy-tensor CP decomposition backend.
@@ -367,7 +367,13 @@ impl Pipeline {
                 // zero; the fixed reduction order makes the resumed result
                 // bitwise identical to an uninterrupted pass.
                 let partial = match &self.cfg.checkpoint_dir {
-                    Some(dir) => super::checkpoint::load_partial(dir, &fp, &partition)?,
+                    Some(dir) => {
+                        let load = super::checkpoint::load_partial(dir, &fp, &partition)?;
+                        if load.fallbacks > 0 {
+                            self.metrics.incr("checkpoint_fallbacks", load.fallbacks);
+                        }
+                        load.state
+                    }
                     None => None,
                 };
                 let (resume, start_gen) = match partial {
@@ -456,6 +462,10 @@ impl Pipeline {
                     }
                     true
                 };
+                let io_retries_before =
+                    crate::tensor::io::IO_RETRIES.load(std::sync::atomic::Ordering::SeqCst);
+                let io_gave_up_before =
+                    crate::tensor::io::IO_GAVE_UP.load(std::sync::atomic::Ordering::SeqCst);
                 let (p, stats) = self.metrics.time("compress", || {
                     let progress: Option<crate::compress::ProgressFn<'_, Vec<DenseTensor>>> =
                         if self.cfg.checkpoint_dir.is_some() { Some(&sink) } else { None };
@@ -476,8 +486,47 @@ impl Pipeline {
                     let _ = h.join();
                 }
                 record_stream_stats(&self.metrics, &stats);
+                self.metrics.incr(
+                    "io_retries",
+                    crate::tensor::io::IO_RETRIES.load(std::sync::atomic::Ordering::SeqCst)
+                        - io_retries_before,
+                );
+                self.metrics.incr(
+                    "io_gave_up",
+                    crate::tensor::io::IO_GAVE_UP.load(std::sync::atomic::Ordering::SeqCst)
+                        - io_gave_up_before,
+                );
                 self.metrics
                     .set("compress_prefetch_depth", plan.prefetch_depth as u64);
+                if let Some(msg) = &stats.failure {
+                    // Checkpoint-then-fail: the engine stopped on an
+                    // irrecoverable source read but handed back the intact
+                    // folded shard prefix — persist it so a retried job
+                    // resumes mid-stream instead of restarting Stage 1.
+                    // The error message keeps the transient marker from the
+                    // I/O layer, which is what the scheduler's retry policy
+                    // classifies on.
+                    if let Some(dir) = &self.cfg.checkpoint_dir {
+                        if stats.shards_done > 0 {
+                            let mut pr = partition.clone();
+                            pr.shards_done = stats.shards_done;
+                            pr.blocks_done = stats.blocks_done as usize;
+                            pr.generation = generation.load(Ordering::SeqCst);
+                            match super::checkpoint::save_partial(dir, &fp, &pr, &p) {
+                                Ok(()) => log::warn!(
+                                    "source failure after {}/{} shards; folded prefix \
+                                     checkpointed before failing",
+                                    pr.shards_done,
+                                    pr.shards_total
+                                ),
+                                Err(e) => log::warn!(
+                                    "source failure AND the failure checkpoint failed: {e:#}"
+                                ),
+                            }
+                        }
+                    }
+                    bail!("compression failed: {msg}");
+                }
                 if let Some(dir) = &self.cfg.checkpoint_dir {
                     super::checkpoint::save_proxies(dir, &fp, &p)?;
                     super::checkpoint::clear_partial(dir)?;

@@ -88,6 +88,13 @@ fn decompose_cmd() -> Command {
         )
         .opt("recovery-panel-cols", "streamed map-panel width in columns", Some("256"))
         .opt("seed", "random seed", Some("0"))
+        .opt(
+            "fault-plan",
+            "chaos testing: arm a deterministic fault plan, e.g. \
+             'seed=7;io_read:period=5,max=3' (sites: io_read io_write \
+             checkpoint_commit worker_panic conn_stall)",
+            None,
+        )
         .switch("mixed", "mixed-precision (split bf16) compression")
         .switch("help", "show help")
 }
@@ -106,6 +113,11 @@ fn cmd_decompose(prog: &str, args: &[String]) -> i32 {
         return 0;
     }
     let run = || -> anyhow::Result<()> {
+        if let Some(plan) = m.get("fault-plan") {
+            exascale_tensor::util::fault::arm(exascale_tensor::util::fault::FaultPlan::parse(
+                plan,
+            )?);
+        }
         let size = m.get_usize("size")?;
         let rank = m.get_usize("rank")?;
         let reduced = m.get_usize("reduced")?;
@@ -398,6 +410,34 @@ fn serve_cmd() -> Command {
              scheduler reserves the budget for it",
             Some("8"),
         )
+        .opt(
+            "max-retries",
+            "transient-failure requeues before a job is finally failed",
+            Some("2"),
+        )
+        .opt(
+            "poison-threshold",
+            "panicking runs (daemon crashes included) before a job is quarantined",
+            Some("2"),
+        )
+        .opt(
+            "conn-timeout-ms",
+            "per-request connection deadline in ms (reaps idle, half-open \
+             and slow-loris peers; 0 = no deadline)",
+            Some("30000"),
+        )
+        .opt(
+            "max-conns",
+            "concurrent connection bound (excess peers get a polite error; \
+             0 = unbounded)",
+            Some("256"),
+        )
+        .opt(
+            "fault-plan",
+            "chaos testing: arm a deterministic fault plan, e.g. \
+             'seed=7;worker_panic:period=1,max=1,key=3'",
+            None,
+        )
         .switch("help", "show help")
 }
 
@@ -415,6 +455,11 @@ fn cmd_serve(prog: &str, args: &[String]) -> i32 {
         return 0;
     }
     let run = || -> anyhow::Result<()> {
+        if let Some(plan) = m.get("fault-plan") {
+            exascale_tensor::util::fault::arm(exascale_tensor::util::fault::FaultPlan::parse(
+                plan,
+            )?);
+        }
         let cfg = exascale_tensor::serve::ServerConfig {
             addr: m.req("addr")?.to_string(),
             spool_dir: m.req("spool")?.into(),
@@ -423,7 +468,12 @@ fn cmd_serve(prog: &str, args: &[String]) -> i32 {
                 workers: m.get_usize("workers")?,
                 cache_bytes: m.get_usize("cache-mb")? * (1 << 20),
                 starvation_rounds: m.get_u64("starvation-rounds")?,
+                max_retries: m.get_usize("max-retries")? as u32,
+                poison_threshold: m.get_usize("poison-threshold")? as u32,
+                ..Default::default()
             },
+            conn_timeout_ms: m.get_u64("conn-timeout-ms")?,
+            max_conns: m.get_usize("max-conns")?,
         };
         let server = exascale_tensor::serve::Server::bind(&cfg)?;
         // The "listening" line is the readiness signal scripts wait for.

@@ -22,44 +22,10 @@ use std::collections::HashMap;
 use std::io::Read;
 use std::sync::{Arc, Mutex};
 
-/// 64-bit FNV-1a — tiny, dependency-free, stable across platforms.
-pub fn fnv1a64(bytes: &[u8]) -> u64 {
-    let mut h = Fnv::new();
-    h.write(bytes);
-    h.finish()
-}
-
-/// Incremental FNV-1a hasher.
-pub struct Fnv {
-    state: u64,
-}
-
-impl Fnv {
-    pub fn new() -> Self {
-        Self { state: 0xcbf2_9ce4_8422_2325 }
-    }
-
-    pub fn write(&mut self, bytes: &[u8]) {
-        for &b in bytes {
-            self.state ^= b as u64;
-            self.state = self.state.wrapping_mul(0x0000_0100_0000_01b3);
-        }
-    }
-
-    pub fn write_u64(&mut self, v: u64) {
-        self.write(&v.to_le_bytes());
-    }
-
-    pub fn finish(&self) -> u64 {
-        self.state
-    }
-}
-
-impl Default for Fnv {
-    fn default() -> Self {
-        Self::new()
-    }
-}
+/// FNV-1a lives in `util/hash.rs` since the checkpoint layer adopted it
+/// for payload digests; re-exported here because the cache is where it
+/// grew up and the serve code keys off this path.
+pub use crate::util::hash::{fnv1a64, Fnv};
 
 /// Digest of a CP model's factor bytes — the protocol's cheap bitwise-
 /// identity witness (resume-after-kill must reproduce it exactly).

@@ -6,7 +6,10 @@
 //!
 //! ```text
 //! submitted ──▶ queued ──▶ running ──▶ done
-//!     │            │           ├─────▶ failed
+//!     │            ▲           ├─────▶ failed       (permanent error, or
+//!     │            │           │                     transient retries spent)
+//!     │            └── retry ──┤
+//!     │            │           ├─────▶ quarantined  (panicked too often)
 //!     └────────────┴───────────┴─────▶ cancelled
 //! ```
 //!
@@ -157,6 +160,10 @@ pub enum JobState {
     Done,
     Failed,
     Cancelled,
+    /// The job's run panicked `poison_threshold` times: it is parked
+    /// terminally instead of being retried again, so one poison job cannot
+    /// eat the worker pool forever.
+    Quarantined,
 }
 
 impl JobState {
@@ -168,6 +175,7 @@ impl JobState {
             JobState::Done => "done",
             JobState::Failed => "failed",
             JobState::Cancelled => "cancelled",
+            JobState::Quarantined => "quarantined",
         }
     }
 
@@ -179,12 +187,16 @@ impl JobState {
             "done" => JobState::Done,
             "failed" => JobState::Failed,
             "cancelled" => JobState::Cancelled,
+            "quarantined" => JobState::Quarantined,
             other => bail!("unknown job state '{other}'"),
         })
     }
 
     pub fn is_terminal(&self) -> bool {
-        matches!(self, JobState::Done | JobState::Failed | JobState::Cancelled)
+        matches!(
+            self,
+            JobState::Done | JobState::Failed | JobState::Cancelled | JobState::Quarantined
+        )
     }
 }
 
@@ -256,6 +268,14 @@ pub struct JobRecord {
     /// `STATUS` reports what will actually run even while the job queues).
     /// `None` in records written before the field existed.
     pub resolved_solver: Option<RecoverySolverKind>,
+    /// Transient-failure retries consumed so far (persisted so the retry
+    /// budget survives a daemon restart; 0 in legacy records).
+    pub attempts: u32,
+    /// Runs of this job that ended in a panic — including runs cut short
+    /// by a daemon crash, which recovery counts as one panic because it
+    /// cannot tell them apart.  At the scheduler's `poison_threshold` the
+    /// job is quarantined.  0 in legacy records.
+    pub panics: u32,
     pub error: Option<String>,
     pub outcome: Option<JobOutcome>,
 }
@@ -276,6 +296,12 @@ impl JobRecord {
         }
         if let Some(s) = self.resolved_solver {
             pairs.push(("resolved_solver", Json::str(s.as_str())));
+        }
+        if self.attempts > 0 {
+            pairs.push(("attempts", Json::num(self.attempts as f64)));
+        }
+        if self.panics > 0 {
+            pairs.push(("panics", Json::num(self.panics as f64)));
         }
         if let Some(e) = &self.error {
             pairs.push(("error", Json::str(e.clone())));
@@ -320,6 +346,8 @@ impl JobRecord {
                 Some(s) => Some(RecoverySolverKind::parse(s)?),
                 None => None,
             },
+            attempts: v.get("attempts").and_then(|x| x.as_usize()).unwrap_or(0) as u32,
+            panics: v.get("panics").and_then(|x| x.as_usize()).unwrap_or(0) as u32,
             error: v.get("error").and_then(|x| x.as_str()).map(str::to_string),
             outcome: match v.get("outcome") {
                 None | Some(Json::Null) => None,
@@ -438,6 +466,8 @@ mod tests {
             cache_key: "deadbeef".into(),
             cancel_requested: false,
             resolved_solver: Some(RecoverySolverKind::Cholesky),
+            attempts: 0,
+            panics: 0,
             error: None,
             outcome: Some(JobOutcome {
                 rel_error: 1e-3,
@@ -476,6 +506,14 @@ mod tests {
         }
         let back = JobRecord::from_json(&legacy).unwrap();
         assert_eq!(back.resolved_solver, None);
+        // Legacy records also predate the retry counters.
+        assert_eq!((back.attempts, back.panics), (0, 0));
+        // Non-zero retry counters survive the round trip.
+        let mut retried = rec.clone();
+        retried.attempts = 2;
+        retried.panics = 1;
+        let back = JobRecord::from_json(&retried.to_json()).unwrap();
+        assert_eq!((back.attempts, back.panics), (2, 1));
     }
 
     #[test]
@@ -489,11 +527,18 @@ mod tests {
             JobState::Done,
             JobState::Failed,
             JobState::Cancelled,
+            JobState::Quarantined,
         ] {
             assert_eq!(JobState::parse(st.as_str()).unwrap(), st);
             assert_eq!(
                 st.is_terminal(),
-                matches!(st, JobState::Done | JobState::Failed | JobState::Cancelled)
+                matches!(
+                    st,
+                    JobState::Done
+                        | JobState::Failed
+                        | JobState::Cancelled
+                        | JobState::Quarantined
+                )
             );
         }
         assert!(JobState::parse("bogus").is_err());

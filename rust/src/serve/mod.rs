@@ -28,4 +28,4 @@ pub use cache::{cache_key, file_fingerprint, model_digest, CachedResult, ResultC
 pub use job::{JobId, JobOutcome, JobRecord, JobSource, JobSpec, JobState, Spool};
 pub use protocol::Request;
 pub use scheduler::{Scheduler, SchedulerConfig};
-pub use server::{Server, ServerConfig};
+pub use server::{Server, ServerConfig, DEFAULT_CONN_TIMEOUT_MS, DEFAULT_MAX_CONNS};

@@ -123,6 +123,74 @@ pub fn read_line_json(r: &mut impl BufRead) -> Result<Option<Json>> {
     }
 }
 
+/// Error text for a request-read deadline expiry — the server matches on
+/// this to count `conn_timeouts` (the vendored error type has no downcast).
+pub const TIMEOUT_MSG: &str = "timed out waiting for a complete request line";
+
+/// True if an error chain is the deadline expiry from
+/// [`read_line_json_deadline`].
+pub fn is_timeout_error(e: &anyhow::Error) -> bool {
+    format!("{e:#}").contains(TIMEOUT_MSG)
+}
+
+/// Deadline-based server-side variant of [`read_line_json`]: a complete
+/// request line must arrive before `deadline` no matter how slowly bytes
+/// trickle in.  A per-read socket timeout alone cannot stop a slow-loris
+/// peer that sends one byte per window — the caller sets a short socket
+/// read timeout (so reads surface as `WouldBlock`/`TimedOut` here) and
+/// this loop enforces the absolute deadline across them.  Blank keep-alive
+/// lines are skipped but do NOT extend the deadline: an idle or half-open
+/// connection is reaped once the deadline passes.
+pub fn read_line_json_deadline(
+    r: &mut impl BufRead,
+    deadline: std::time::Instant,
+) -> Result<Option<Json>> {
+    let mut line = String::new();
+    loop {
+        if line.len() as u64 >= MAX_LINE_BYTES {
+            bail!("message line exceeds {MAX_LINE_BYTES} bytes");
+        }
+        match r.by_ref().take(MAX_LINE_BYTES).read_line(&mut line) {
+            // EOF: parse a final unterminated line, else clean close.
+            Ok(0) => {
+                let trimmed = line.trim();
+                if trimmed.is_empty() {
+                    return Ok(None);
+                }
+                return Ok(Some(Json::parse(trimmed).context("parsing message")?));
+            }
+            Ok(_) => {
+                let complete = line.ends_with('\n');
+                if !complete && line.len() as u64 >= MAX_LINE_BYTES {
+                    bail!("message line exceeds {MAX_LINE_BYTES} bytes");
+                }
+                let trimmed = line.trim();
+                if trimmed.is_empty() {
+                    if !complete {
+                        return Ok(None); // EOF after blank keep-alives
+                    }
+                    line.clear();
+                    continue;
+                }
+                return Ok(Some(Json::parse(trimmed).context("parsing message")?));
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if std::time::Instant::now() >= deadline {
+                    bail!("{TIMEOUT_MSG}");
+                }
+                // Partial bytes stay accumulated in `line`; keep waiting.
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e).context("reading message line"),
+        }
+    }
+}
+
 /// One-shot client call: connect, send, read the single response.
 pub fn call(addr: &str, req: &Request) -> Result<Json> {
     let stream =
@@ -187,6 +255,61 @@ mod tests {
         let big = vec![b'x'; MAX_LINE_BYTES as usize + 16];
         let mut r = std::io::BufReader::new(&big[..]);
         assert!(read_line_json(&mut r).is_err(), "no-newline flood must error");
+    }
+
+    /// Mock stream: yields its chunks one `read` at a time; an empty chunk
+    /// models a socket read timeout (`WouldBlock`), like a slow-loris peer
+    /// pausing between bytes.
+    struct Trickle {
+        chunks: Vec<Vec<u8>>,
+        i: usize,
+    }
+    impl Read for Trickle {
+        fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+            let Some(c) = self.chunks.get(self.i) else { return Ok(0) };
+            self.i += 1;
+            if c.is_empty() {
+                return Err(std::io::Error::new(std::io::ErrorKind::WouldBlock, "tick"));
+            }
+            let n = c.len().min(out.len());
+            out[..n].copy_from_slice(&c[..n]);
+            Ok(n)
+        }
+    }
+
+    #[test]
+    fn deadline_reader_rides_out_timeouts_within_the_deadline() {
+        let r = Trickle {
+            chunks: vec![
+                b"{\"ok\"".to_vec(),
+                vec![], // timeout mid-line
+                vec![],
+                b":true}\n".to_vec(),
+            ],
+            i: 0,
+        };
+        let mut r = BufReader::new(r);
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+        let v = read_line_json_deadline(&mut r, deadline).unwrap().unwrap();
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)));
+    }
+
+    #[test]
+    fn deadline_reader_reaps_slow_loris_and_half_open_peers() {
+        // Half-open: nothing but timeouts, deadline already passed.
+        let r = Trickle { chunks: vec![vec![], vec![], vec![]], i: 0 };
+        let mut r = BufReader::new(r);
+        let deadline = std::time::Instant::now() - std::time::Duration::from_millis(1);
+        let e = read_line_json_deadline(&mut r, deadline).unwrap_err();
+        assert!(is_timeout_error(&e), "got: {e:#}");
+        // Slow-loris: a byte per window never completes the line either.
+        let r = Trickle {
+            chunks: vec![b"{".to_vec(), vec![], b"\"".to_vec(), vec![]],
+            i: 0,
+        };
+        let mut r = BufReader::new(r);
+        let e = read_line_json_deadline(&mut r, deadline).unwrap_err();
+        assert!(is_timeout_error(&e), "got: {e:#}");
     }
 
     #[test]

@@ -37,7 +37,7 @@ use std::collections::{BTreeMap, BTreeSet};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Scheduler construction knobs.
 #[derive(Clone, Debug)]
@@ -60,6 +60,22 @@ pub struct SchedulerConfig {
     /// briefly idling workers.  0 disables backfill entirely (strict
     /// priority/FIFO).
     pub starvation_rounds: u64,
+    /// **Retry policy**: how many times a job that failed *transiently*
+    /// (its error carries the I/O layer's transient marker — an exhausted
+    /// read-retry budget, an injected fault) is requeued before it is
+    /// finally `failed`.  Retried jobs re-enter the queue after an
+    /// exponential backoff and resume from their incremental checkpoint,
+    /// so a retry re-streams only the unfolded suffix.
+    pub max_retries: u32,
+    /// **Poison policy**: a job whose run *panics* this many times is
+    /// moved to the terminal `quarantined` state instead of being retried
+    /// again — one poison job must not eat the worker pool forever.  A
+    /// daemon crash while a job runs counts as one panic (recovery cannot
+    /// tell them apart).
+    pub poison_threshold: u32,
+    /// Base retry backoff in milliseconds (doubled per prior attempt,
+    /// capped at 5 s).
+    pub retry_backoff_ms: u64,
 }
 
 impl Default for SchedulerConfig {
@@ -69,6 +85,9 @@ impl Default for SchedulerConfig {
             workers: 2,
             cache_bytes: 64 << 20,
             starvation_rounds: 8,
+            max_retries: 2,
+            poison_threshold: 2,
+            retry_backoff_ms: 50,
         }
     }
 }
@@ -91,6 +110,10 @@ struct State {
     /// job and how many backfill jobs have been admitted past it.  Reset
     /// whenever the head changes or is admitted.
     head_block: Option<(JobId, u64)>,
+    /// Retry backoff: requeued jobs are not admissible before this
+    /// instant (in-memory only — a restart retries immediately, which is
+    /// correct: the daemon restart IS the backoff).
+    not_before: BTreeMap<JobId, Instant>,
     next_seq: u64,
     shutting_down: bool,
 }
@@ -101,6 +124,9 @@ struct Inner {
     metrics: Arc<Metrics>,
     budget: usize,
     starvation_rounds: u64,
+    max_retries: u32,
+    poison_threshold: u32,
+    retry_backoff_ms: u64,
     state: Mutex<State>,
     cv: Condvar,
 }
@@ -128,10 +154,11 @@ impl Scheduler {
             cancel_requested: BTreeSet::new(),
             deferred_seen: BTreeSet::new(),
             head_block: None,
+            not_before: BTreeMap::new(),
             next_seq: 1,
             shutting_down: false,
         };
-        let (mut requeued, mut resumable) = (0u64, 0u64);
+        let (mut requeued, mut resumable, mut quarantined) = (0u64, 0u64, 0u64);
         for mut rec in recovered {
             state.next_seq = state.next_seq.max(rec.seq + 1);
             match rec.state {
@@ -145,10 +172,30 @@ impl Scheduler {
                     checkpoint::clear(spool.checkpoint_dir(&rec.id)).ok();
                 }
                 JobState::Running | JobState::Submitted | JobState::Queued => {
+                    if rec.state == JobState::Running {
+                        // The daemon died while this job ran.  Recovery
+                        // cannot tell an unlucky crash from a job that
+                        // *causes* crashes, so it charges one panic — a
+                        // record repeatedly found `running` at startup
+                        // crosses the poison threshold and is quarantined
+                        // instead of crash-looping the daemon.
+                        rec.panics += 1;
+                        if rec.panics >= cfg.poison_threshold.max(1) {
+                            rec.state = JobState::Quarantined;
+                            rec.error = Some(format!(
+                                "quarantined: daemon died {} times while this job ran",
+                                rec.panics
+                            ));
+                            spool.save(&rec)?;
+                            quarantined += 1;
+                            state.records.insert(rec.id.clone(), rec);
+                            continue;
+                        }
+                    }
                     if checkpoint::partial_exists(spool.checkpoint_dir(&rec.id)) {
                         resumable += 1;
                     }
-                    if rec.state != JobState::Queued {
+                    if rec.state != JobState::Queued || rec.panics > 0 {
                         rec.state = JobState::Queued;
                         spool.save(&rec)?;
                     }
@@ -162,12 +209,18 @@ impl Scheduler {
         sort_queue(&mut state.queue, &state.records);
         metrics.set("jobs_recovered", requeued);
         metrics.set("jobs_resumable", resumable);
+        if quarantined > 0 {
+            metrics.incr("jobs_quarantined", quarantined);
+        }
         let inner = Arc::new(Inner {
             spool,
             cache: ResultCache::new(cfg.cache_bytes),
             metrics,
             budget: cfg.memory_budget,
             starvation_rounds: cfg.starvation_rounds,
+            max_retries: cfg.max_retries,
+            poison_threshold: cfg.poison_threshold.max(1),
+            retry_backoff_ms: cfg.retry_backoff_ms,
             state: Mutex::new(state),
             cv: Condvar::new(),
         });
@@ -238,6 +291,8 @@ impl Scheduler {
                 cache_key: key,
                 cancel_requested: false,
                 resolved_solver: Some(plan.recovery_solver),
+                attempts: 0,
+                panics: 0,
                 error: None,
                 outcome: None,
             };
@@ -342,6 +397,7 @@ impl Scheduler {
             JobState::Submitted | JobState::Queued => {
                 st.queue.retain(|q| q.as_str() != id);
                 st.deferred_seen.remove(id);
+                st.not_before.remove(id);
                 let snapshot = {
                     let r = st.records.get_mut(id).unwrap();
                     r.state = JobState::Cancelled;
@@ -444,7 +500,18 @@ fn worker_loop(inner: Arc<Inner>) {
                 if let Some(picked) = inner.pick_admissible(&mut st) {
                     break picked;
                 }
-                st = inner.cv.wait(st).unwrap();
+                // Sleep until woken — or until the earliest retry backoff
+                // expires, so requeued jobs don't wait for unrelated
+                // activity to re-trigger admission.
+                let now = Instant::now();
+                let timeout = st
+                    .not_before
+                    .values()
+                    .min()
+                    .map(|t| t.saturating_duration_since(now))
+                    .unwrap_or(Duration::from_secs(3600))
+                    .max(Duration::from_millis(1));
+                st = inner.cv.wait_timeout(st, timeout).unwrap().0;
             }
         };
         // Persist the queued→running transition off the state lock (the
@@ -481,7 +548,13 @@ impl Inner {
         let mut chosen = None;
         let mut deferred_bytes = 0u64;
         let mut reservation_hold = false;
+        let now = Instant::now();
         for (pos, id) in st.queue.iter().enumerate() {
+            if st.not_before.get(id).map_or(false, |t| *t > now) {
+                // Retry backoff pending: not eligible yet, and not a
+                // memory-pressure deferral either.
+                continue;
+            }
             let pb = st.records[id].plan_bytes;
             if self.budget == 0 || st.used_bytes + pb <= self.budget {
                 chosen = Some(pos);
@@ -530,6 +603,7 @@ impl Inner {
         }
         let id = st.queue.remove(pos);
         st.deferred_seen.remove(&id);
+        st.not_before.remove(&id);
         let pb = st.records[&id].plan_bytes;
         st.used_bytes += pb;
         st.used_bytes_peak = st.used_bytes_peak.max(st.used_bytes);
@@ -572,6 +646,14 @@ impl Inner {
 
         let started = Instant::now();
         let run = catch_unwind(AssertUnwindSafe(|| -> Result<(CpModel, JobOutcome)> {
+            // Fault site `worker_panic`, keyed by the job's sequence so a
+            // chaos plan can poison ONE job while its neighbors run clean.
+            if crate::util::fault::should_fault_keyed(
+                crate::util::fault::Site::WorkerPanic,
+                rec.seq,
+            ) {
+                panic!("injected worker panic (job {})", rec.id);
+            }
             let src = rec.spec.source.open()?;
             let mut pipe = Pipeline::new(rec.spec.config.clone());
             let res = pipe.run(src.as_ref())?;
@@ -603,9 +685,20 @@ impl Inner {
             ))
         }));
         self.metrics.record("job_run", started.elapsed().as_secs_f64());
+        let mut panicked = false;
         let run = match run {
             Ok(r) => r,
-            Err(_) => Err(anyhow::anyhow!("job panicked (see daemon log)")),
+            Err(p) => {
+                panicked = true;
+                let what = if let Some(s) = p.downcast_ref::<&str>() {
+                    (*s).to_string()
+                } else if let Some(s) = p.downcast_ref::<String>() {
+                    s.clone()
+                } else {
+                    "see daemon log".to_string()
+                };
+                Err(anyhow::anyhow!("job panicked: {what}"))
+            }
         };
         match run {
             Ok((model, outcome)) => {
@@ -637,9 +730,102 @@ impl Inner {
                 self.finalize(id, JobState::Done, Some(outcome), None);
             }
             Err(e) => {
-                self.finalize(id, JobState::Failed, None, Some(format!("{e:#}")));
+                let msg = format!("{e:#}");
+                let (cancelled, counters) = {
+                    let st = self.state.lock().unwrap();
+                    let r = st.records.get(id);
+                    (
+                        st.cancel_requested.contains(id),
+                        r.map(|r| (r.attempts, r.panics)).unwrap_or((0, 0)),
+                    )
+                };
+                if cancelled {
+                    checkpoint::clear(self.spool.checkpoint_dir(id)).ok();
+                    self.finalize(id, JobState::Cancelled, None, None);
+                } else if panicked {
+                    // Poison policy: charge one panic; quarantine at the
+                    // threshold, otherwise retry with backoff (the panic
+                    // may have been environmental).
+                    let panics = counters.1 + 1;
+                    if panics >= self.poison_threshold {
+                        self.bump_counters(id, None, Some(panics));
+                        self.finalize(id, JobState::Quarantined, None, Some(msg));
+                    } else {
+                        self.bump_counters(id, None, Some(panics));
+                        self.requeue_with_backoff(id, msg);
+                    }
+                } else if crate::util::fault::is_transient(&msg) {
+                    // Transient failure (exhausted I/O retries — the error
+                    // carries the marker, and checkpoint-then-fail already
+                    // persisted the folded prefix): requeue up to the
+                    // retry budget; the retry resumes mid-stream.
+                    let attempts = counters.0 + 1;
+                    self.bump_counters(id, Some(attempts), None);
+                    if attempts <= self.max_retries {
+                        self.requeue_with_backoff(id, msg);
+                    } else {
+                        self.finalize(
+                            id,
+                            JobState::Failed,
+                            None,
+                            Some(format!("{msg} ({} retries exhausted)", self.max_retries)),
+                        );
+                    }
+                } else {
+                    self.finalize(id, JobState::Failed, None, Some(msg));
+                }
             }
         }
+    }
+
+    /// Writes updated retry counters into the in-memory record (persisted
+    /// by the follow-up requeue/finalize save).
+    fn bump_counters(&self, id: &str, attempts: Option<u32>, panics: Option<u32>) {
+        let mut st = self.state.lock().unwrap();
+        if let Some(rec) = st.records.get_mut(id) {
+            if let Some(a) = attempts {
+                rec.attempts = a;
+            }
+            if let Some(p) = panics {
+                rec.panics = p;
+            }
+        }
+    }
+
+    /// Puts a failed-but-retryable job back in the queue behind an
+    /// exponential backoff, releasing its admission budget.
+    fn requeue_with_backoff(&self, id: &str, error: String) {
+        let snapshot = {
+            let mut st = self.state.lock().unwrap();
+            if let Some(pb) = st.running.remove(id) {
+                st.used_bytes -= pb;
+            }
+            let Some(rec) = st.records.get_mut(id) else { return };
+            rec.state = JobState::Queued;
+            // Keep the failure visible in STATUS while the retry waits.
+            rec.error = Some(error);
+            let tries = (rec.attempts + rec.panics).max(1).min(7);
+            let snap = rec.clone();
+            st.queue.push(id.to_string());
+            sort_queue(&mut st.queue, &st.records);
+            let delay =
+                Duration::from_millis((self.retry_backoff_ms << (tries - 1)).min(5_000));
+            st.not_before.insert(id.to_string(), Instant::now() + delay);
+            self.metrics.incr("jobs_retried", 1);
+            log::warn!(
+                "job {id} retrying in {} ms (attempts={}, panics={}): {}",
+                delay.as_millis(),
+                snap.attempts,
+                snap.panics,
+                snap.error.as_deref().unwrap_or("")
+            );
+            self.sync_gauges(&st);
+            snap
+        };
+        if let Err(e) = self.spool.save(&snapshot) {
+            log::warn!("spool: persisting {id} retry: {e:#}");
+        }
+        self.cv.notify_all();
     }
 
     fn finalize(
@@ -655,6 +841,7 @@ impl Inner {
                 st.used_bytes -= pb;
             }
             st.cancel_requested.remove(id);
+            st.not_before.remove(id);
             let snap = st.records.get_mut(id).map(|rec| {
                 rec.state = state;
                 rec.outcome = outcome;
@@ -664,6 +851,7 @@ impl Inner {
             let counter = match state {
                 JobState::Done => "jobs_done",
                 JobState::Failed => "jobs_failed",
+                JobState::Quarantined => "jobs_quarantined",
                 _ => "jobs_cancelled",
             };
             self.metrics.incr(counter, 1);
@@ -872,6 +1060,50 @@ mod tests {
         }
         s.shutdown();
         s.join();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn crashed_running_job_charges_a_panic_and_quarantines_at_threshold() {
+        let dir = tmpdir("quarantine");
+        let spool = Spool::open(&dir).unwrap();
+        // A record the previous daemon died holding in `running`, already
+        // carrying one persisted panic: recovery charges a second, which
+        // hits the default poison threshold (2) → terminal quarantine
+        // instead of another crash-loop iteration.
+        let rec = JobRecord {
+            id: "job-000001".into(),
+            seq: 1,
+            spec: small_spec(77, 0),
+            state: JobState::Running,
+            plan_bytes: 1_000,
+            cache_key: "qk".into(),
+            cancel_requested: false,
+            resolved_solver: None,
+            attempts: 0,
+            panics: 1,
+            error: None,
+            outcome: None,
+        };
+        spool.save(&rec).unwrap();
+        let s = sched(&dir, SchedulerConfig { workers: 1, ..Default::default() });
+        let st = s.status("job-000001").unwrap();
+        assert_eq!(st.state, JobState::Quarantined);
+        assert_eq!(st.panics, 2);
+        assert!(st.error.unwrap().contains("quarantined"));
+        assert_eq!(s.metrics().counter("jobs_quarantined"), 1);
+        // The quarantine is durable: a second daemon leaves it terminal.
+        s.shutdown();
+        s.join();
+        let s2 = sched(&dir, SchedulerConfig { workers: 1, ..Default::default() });
+        assert_eq!(s2.status("job-000001").unwrap().state, JobState::Quarantined);
+        assert_eq!(
+            s2.metrics().counter("jobs_quarantined"),
+            0,
+            "terminal records are not re-quarantined"
+        );
+        s2.shutdown();
+        s2.join();
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -8,19 +8,30 @@
 //! atomic rename and running jobs leave incremental pipeline checkpoints,
 //! so the next `bind` + `run` recovers the queue and resumes mid-
 //! compression work bitwise-identically.
+//!
+//! **Connection hardening** (multi-tenant daemons meet hostile peers):
+//! every connection must deliver a complete request line within
+//! [`ServerConfig::conn_timeout_ms`] — slow-loris peers (one byte per
+//! window) and half-open peers (connect, send nothing) are reaped on the
+//! same deadline (`conn_timeouts` counts them) — and at most
+//! [`ServerConfig::max_conns`] connections are served concurrently;
+//! excess peers get a polite `{"ok":false}` line and are dropped
+//! (`conn_rejected_over_capacity`).
 
 use super::job::Spool;
 use super::protocol::{self, Request};
 use super::scheduler::{Scheduler, SchedulerConfig};
 use crate::coordinator::Metrics;
+use crate::util::fault;
 use crate::util::json::Json;
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 /// Daemon construction knobs.
 #[derive(Clone, Debug)]
@@ -31,18 +42,47 @@ pub struct ServerConfig {
     /// Spool directory (job records, results, per-job checkpoints).
     pub spool_dir: PathBuf,
     pub scheduler: SchedulerConfig,
+    /// Per-request deadline in milliseconds: a connection that has not
+    /// delivered a complete request line within this window is closed
+    /// (covers idle, half-open, and slow-loris peers alike; blank
+    /// keep-alive lines do not extend it).  0 disables the deadline.
+    pub conn_timeout_ms: u64,
+    /// Concurrent-connection bound; peers over the cap receive a polite
+    /// error line and are dropped.  0 = unbounded.
+    pub max_conns: usize,
 }
+
+/// Default per-request connection deadline (30 s).
+pub const DEFAULT_CONN_TIMEOUT_MS: u64 = 30_000;
+/// Default concurrent-connection bound.
+pub const DEFAULT_MAX_CONNS: usize = 256;
 
 struct Shared {
     scheduler: Scheduler,
     metrics: Arc<Metrics>,
     shutting_down: AtomicBool,
     addr: SocketAddr,
+    conn_timeout_ms: u64,
+    conn_active: AtomicUsize,
+}
+
+/// Decrements the live-connection count (and gauge) when a handler exits,
+/// however it exits.
+struct ConnGuard {
+    shared: Arc<Shared>,
+}
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        let n = self.shared.conn_active.fetch_sub(1, Ordering::SeqCst) - 1;
+        self.shared.metrics.set("conn_active", n as u64);
+    }
 }
 
 /// A bound (but not yet serving) daemon.
 pub struct Server {
     listener: TcpListener,
+    max_conns: usize,
     shared: Arc<Shared>,
 }
 
@@ -58,11 +98,14 @@ impl Server {
         let addr = listener.local_addr().context("local_addr")?;
         Ok(Server {
             listener,
+            max_conns: cfg.max_conns,
             shared: Arc::new(Shared {
                 scheduler,
                 metrics,
                 shutting_down: AtomicBool::new(false),
                 addr,
+                conn_timeout_ms: cfg.conn_timeout_ms,
+                conn_active: AtomicUsize::new(0),
             }),
         })
     }
@@ -82,9 +125,38 @@ impl Server {
             }
             match stream {
                 Ok(s) => {
+                    // Over-capacity: answer politely on the acceptor (with
+                    // a write timeout so an unreading peer cannot wedge the
+                    // accept loop) and drop the socket.
+                    let active = self.shared.conn_active.load(Ordering::SeqCst);
+                    if self.max_conns > 0 && active >= self.max_conns {
+                        self.shared.metrics.incr("conn_rejected_over_capacity", 1);
+                        let mut w = s;
+                        let _ = w.set_write_timeout(Some(Duration::from_secs(1)));
+                        let _ = protocol::write_line(
+                            &mut w,
+                            &protocol::err(
+                                "server at connection capacity, retry later",
+                            ),
+                        );
+                        continue;
+                    }
+                    let n = self.shared.conn_active.fetch_add(1, Ordering::SeqCst) + 1;
+                    self.shared.metrics.set("conn_active", n as u64);
                     let shared = Arc::clone(&self.shared);
                     handles.push(std::thread::spawn(move || handle_conn(shared, s)));
-                    handles.retain(|h| !h.is_finished());
+                    // Reap (join) finished handlers so a long-lived daemon
+                    // does not accumulate one dead JoinHandle per past
+                    // connection.
+                    let mut live = Vec::with_capacity(handles.len());
+                    for h in handles {
+                        if h.is_finished() {
+                            let _ = h.join();
+                        } else {
+                            live.push(h);
+                        }
+                    }
+                    handles = live;
                 }
                 Err(e) => log::warn!("serve: accept: {e}"),
             }
@@ -108,8 +180,20 @@ impl Server {
     }
 }
 
-/// Answers requests on one connection until EOF (or `SHUTDOWN`).
+/// Answers requests on one connection until EOF, `SHUTDOWN`, or a
+/// deadline expiry (idle/half-open/slow-loris reap).
 fn handle_conn(shared: Arc<Shared>, stream: TcpStream) {
+    let _active = ConnGuard { shared: Arc::clone(&shared) };
+    let timeout = Duration::from_millis(shared.conn_timeout_ms);
+    if shared.conn_timeout_ms > 0 {
+        // Short per-read tick + absolute deadline in the reader: the tick
+        // alone cannot stop a peer trickling one byte per window.
+        let tick = (timeout / 8)
+            .max(Duration::from_millis(10))
+            .min(Duration::from_secs(1));
+        let _ = stream.set_read_timeout(Some(tick));
+        let _ = stream.set_write_timeout(Some(timeout));
+    }
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(e) => {
@@ -119,9 +203,26 @@ fn handle_conn(shared: Arc<Shared>, stream: TcpStream) {
     };
     let mut reader = BufReader::new(stream);
     loop {
-        let msg = match protocol::read_line_json(&mut reader) {
+        // Fault site `conn_stall`: act exactly as if this connection's
+        // request deadline expired (the reap path, minus the wait).
+        let read = if fault::should_fault(fault::Site::ConnStall) {
+            Err(anyhow::anyhow!("{}", protocol::TIMEOUT_MSG))
+        } else if shared.conn_timeout_ms > 0 {
+            protocol::read_line_json_deadline(&mut reader, Instant::now() + timeout)
+        } else {
+            protocol::read_line_json(&mut reader)
+        };
+        let msg = match read {
             Ok(Some(v)) => v,
             Ok(None) => return,
+            Err(e) if protocol::is_timeout_error(&e) => {
+                shared.metrics.incr("conn_timeouts", 1);
+                let _ = protocol::write_line(
+                    &mut writer,
+                    &protocol::err("request timed out, closing connection"),
+                );
+                return;
+            }
             Err(e) => {
                 let _ = protocol::write_line(&mut writer, &protocol::err(format!("{e:#}")));
                 return;

@@ -12,12 +12,38 @@ use super::block::BlockRange;
 use super::dense::DenseTensor;
 use super::generator::TensorSource;
 use crate::linalg::Matrix;
+use crate::util::fault::{self, TRANSIENT_MARKER};
 use anyhow::{bail, Context, Result};
 use std::fs::File;
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::{BufReader, BufWriter, ErrorKind, Read, Write};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 const MAGIC: &[u8; 4] = b"EXT1";
+
+/// Transient read failures retried before giving up (so a fault schedule
+/// with `period >= 2` can never exhaust a read's budget).
+const IO_MAX_RETRIES: u32 = 4;
+/// Capped exponential backoff between retries: 2, 4, 8, 16 ms.
+const IO_BACKOFF_BASE_MS: u64 = 2;
+const IO_BACKOFF_CAP_MS: u64 = 100;
+
+/// Process-wide I/O failure telemetry.  `read_at` has no metrics handle (it
+/// runs on source/producer threads deep under the engine), so the pipeline
+/// snapshots these before/after a run and reports the deltas as its
+/// `io_retries` / `io_gave_up` metrics.
+pub static IO_RETRIES: AtomicU64 = AtomicU64::new(0);
+pub static IO_GAVE_UP: AtomicU64 = AtomicU64::new(0);
+
+/// Transient I/O errors are worth retrying: the syscall was interrupted or
+/// the storage stack timed out.  Everything else (bad fd, truncation's
+/// `UnexpectedEof`, permission) is permanent — retrying can't help.
+fn transient_io(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        ErrorKind::Interrupted | ErrorKind::TimedOut | ErrorKind::WouldBlock
+    )
+}
 
 fn write_header(w: &mut impl Write, dims: &[u64]) -> Result<()> {
     w.write_all(MAGIC)?;
@@ -99,6 +125,13 @@ fn fix_endianness(data: &mut [f32]) {
 }
 
 fn write_f32s(w: &mut impl Write, data: &[f32]) -> Result<()> {
+    // Payload writes are not retried in place: `write_all` already resumes
+    // interrupted syscalls, and a mid-stream failure leaves the file torn —
+    // the recovery story is the caller's tmp+rename discipline plus the
+    // checkpoint generation fallback, which this site exists to exercise.
+    if fault::should_fault(fault::Site::IoWrite) {
+        bail!("injected write fault {TRANSIENT_MARKER}");
+    }
     if cfg!(target_endian = "big") {
         // Slow path for exotic targets: byte-swap through a bounce buffer.
         let mut buf = Vec::with_capacity(data.len() * 4);
@@ -249,16 +282,60 @@ impl FileTensorSource {
     }
 
     /// Positional read of `out.len()` f32s starting at element `elem_off`.
+    ///
+    /// Transient failures (interrupted/timed-out syscalls, or the `io_read`
+    /// fault site) are retried up to [`IO_MAX_RETRIES`] times with capped
+    /// exponential backoff; each retry bumps [`IO_RETRIES`].  An exhausted
+    /// budget bumps [`IO_GAVE_UP`] and surfaces a [`TRANSIENT_MARKER`]-tagged
+    /// error so callers up the stack (engine → pipeline → scheduler) can
+    /// classify the failure as retryable at job granularity.
     fn read_at(&self, elem_off: u64, out: &mut [f32]) -> Result<()> {
         let byte_off = self.data_offset + elem_off * 4;
+        let mut attempt = 0u32;
+        loop {
+            match self.read_at_once(byte_off, out) {
+                Ok(()) => {
+                    fix_endianness(out);
+                    return Ok(());
+                }
+                Err(e) if transient_io(&e) && attempt < IO_MAX_RETRIES => {
+                    attempt += 1;
+                    IO_RETRIES.fetch_add(1, Ordering::Relaxed);
+                    let delay = (IO_BACKOFF_BASE_MS << (attempt - 1)).min(IO_BACKOFF_CAP_MS);
+                    std::thread::sleep(std::time::Duration::from_millis(delay));
+                }
+                Err(e) => {
+                    let transient = transient_io(&e);
+                    if transient {
+                        IO_GAVE_UP.fetch_add(1, Ordering::Relaxed);
+                    }
+                    let marker =
+                        if transient { format!(" {TRANSIENT_MARKER}") } else { String::new() };
+                    return Err(e).with_context(|| {
+                        format!(
+                            "read of {} bytes at {byte_off} failed after {attempt} retries{marker}",
+                            out.len() * 4
+                        )
+                    });
+                }
+            }
+        }
+    }
+
+    /// One read attempt: the raw positional syscall, preceded by the
+    /// `io_read` fault probe (each attempt probes, so a retried read
+    /// re-consults the schedule at a new counter position).
+    fn read_at_once(&self, byte_off: u64, out: &mut [f32]) -> std::io::Result<()> {
+        if fault::should_fault(fault::Site::IoRead) {
+            return Err(std::io::Error::new(
+                ErrorKind::Interrupted,
+                "injected transient read fault",
+            ));
+        }
         #[cfg(unix)]
         {
             use std::os::unix::fs::FileExt;
-            self.file
-                .read_exact_at(as_bytes_mut(out), byte_off)
-                .with_context(|| {
-                    format!("pread {} bytes at {byte_off}", out.len() * 4)
-                })?;
+            self.file.read_exact_at(as_bytes_mut(out), byte_off)
         }
         #[cfg(not(unix))]
         {
@@ -267,10 +344,7 @@ impl FileTensorSource {
             let mut f = &self.file;
             f.seek(SeekFrom::Start(byte_off))?;
             f.read_exact(as_bytes_mut(out))
-                .with_context(|| format!("read {} bytes at {byte_off}", out.len() * 4))?;
         }
-        fix_endianness(out);
-        Ok(())
     }
 }
 
@@ -649,6 +723,36 @@ mod tests {
             index: 0,
         });
         assert_eq!(loaded, full);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn file_source_retries_injected_transient_faults_bitwise() {
+        use crate::util::fault::{arm_scoped, FaultPlan, Site, SiteSpec};
+        let mut rng = Xoshiro256::seed_from_u64(78);
+        let t = DenseTensor::random_normal([8, 8, 8], &mut rng);
+        let path = tmp("retry");
+        save_tensor(&t, &path).unwrap();
+        let fsrc = FileTensorSource::open(&path).unwrap();
+        let spec = BlockSpec3::new([8, 8, 8], [4, 4, 4]);
+        // period 2 ⇒ a faulted attempt's immediate retry always succeeds;
+        // bounded max keeps concurrently running tests unbothered (their
+        // reads at worst retry once too).
+        let g = arm_scoped(
+            FaultPlan::new(11)
+                .site(Site::IoRead, SiteSpec { period: 2, max: 6, ..Default::default() }),
+        );
+        let before = IO_RETRIES.load(Ordering::Relaxed);
+        for blk in spec.iter() {
+            let a = fsrc.block(&blk);
+            let b = t.subtensor(blk.i0, blk.i1, blk.j0, blk.j1, blk.k0, blk.k1);
+            assert_eq!(a, b, "retried read must be bitwise identical");
+        }
+        assert!(g.fired(Site::IoRead) >= 1, "plan must actually deliver faults");
+        assert!(
+            IO_RETRIES.load(Ordering::Relaxed) > before,
+            "retries must be visible in telemetry"
+        );
         std::fs::remove_file(&path).ok();
     }
 

@@ -1,0 +1,47 @@
+//! Stable content hashing (FNV-1a).
+//!
+//! Hoisted from `serve/cache.rs` once checkpoint integrity needed the same
+//! digest discipline: the serve-layer cache keys, the protocol's
+//! `model_digest` bitwise-identity witness, and the checkpoint payload
+//! digests must all agree on one tiny, dependency-free, cross-platform
+//! hash.  FNV-1a is not cryptographic — it detects bit rot and torn
+//! writes, not adversaries.
+
+/// 64-bit FNV-1a of `bytes`, one-shot.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = Fnv::new();
+    h.write(bytes);
+    h.finish()
+}
+
+/// Incremental FNV-1a hasher.
+pub struct Fnv {
+    state: u64,
+}
+
+impl Fnv {
+    pub fn new() -> Self {
+        Self { state: 0xcbf2_9ce4_8422_2325 }
+    }
+
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.state ^= b as u64;
+            self.state = self.state.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    pub fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.state
+    }
+}
+
+impl Default for Fnv {
+    fn default() -> Self {
+        Self::new()
+    }
+}

@@ -9,6 +9,8 @@
 pub mod alloc;
 pub mod cli;
 pub mod f16;
+pub mod fault;
+pub mod hash;
 pub mod json;
 pub mod logging;
 pub mod prop;

@@ -1,0 +1,569 @@
+//! Chaos suite: deterministic fault injection against the real stack.
+//!
+//! Every test arms a seeded [`FaultPlan`] (or explicitly excludes faults)
+//! and drives production code paths end to end — no mocks.  Across the
+//! suite every named site delivers at least one fault:
+//!
+//! * `io_read`            — retried bitwise + exhausted-retry checkpoint-then-fail
+//! * `io_write`           — transient error surfaced, retry lands the payload
+//! * `checkpoint_commit`  — failed commit is transient, fallback generation intact
+//! * `worker_panic`       — poison job quarantined while other tenants complete
+//! * `conn_stall`         — stalled connection reaped and counted
+//!
+//! Fault state is process-global, so every test serializes through
+//! [`lock`]; the suite supports a `CHAOS_QUICK=1` env (CI smoke mode) that
+//! shrinks problem sizes without dropping any site's coverage.
+
+use exascale_tensor::compress::{compress_source_batched_opts, MapSource, StreamOptions};
+use exascale_tensor::coordinator::checkpoint::{self, CompressionProgress};
+use exascale_tensor::coordinator::{MemoryPlanner, Pipeline, PipelineConfig};
+use exascale_tensor::serve::{
+    model_digest, protocol, JobRecord, JobSource, JobSpec, JobState, Request, Server,
+    ServerConfig, SchedulerConfig,
+};
+use exascale_tensor::tensor::{
+    io, save_tensor_streamed, BlockSpec3, DenseTensor, FileTensorSource, LowRankGenerator,
+};
+use exascale_tensor::util::fault::{
+    arm_scoped, exclude_faults, is_transient, should_fault, FaultPlan, Site, SiteSpec, ALL_SITES,
+};
+use exascale_tensor::util::threadpool::ThreadPool;
+use std::sync::atomic::Ordering;
+use std::sync::{Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// Serializes the whole suite: armed plans and the I/O telemetry statics
+/// are process-global, so concurrently running chaos tests would observe
+/// each other's faults.
+static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// CI smoke mode: smaller tensors, same site coverage.
+fn quick() -> bool {
+    std::env::var("CHAOS_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+fn size() -> usize {
+    if quick() { 16 } else { 24 }
+}
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("exatensor_chaos_{name}_{}", std::process::id()));
+    std::fs::remove_dir_all(&p).ok();
+    std::fs::create_dir_all(&p).unwrap();
+    p
+}
+
+/// The small deterministic pipeline config the whole suite uses.
+fn cfg(seed: u64, threads: usize) -> PipelineConfig {
+    PipelineConfig::builder()
+        .reduced_dims(8, 8, 8)
+        .rank(2)
+        .anchor_rows(4)
+        .block([8, 8, 8])
+        .als(if quick() { 80 } else { 120 }, 1e-10)
+        .threads(threads)
+        .seed(seed)
+        .build()
+        .unwrap()
+}
+
+/// Authors an `EXT1` tensor file for the file-backed (I/O-faulted) tests.
+/// Callers hold [`lock`] and have no plan armed yet (or hold an exclusion
+/// guard), so the write streams fault-free.
+fn tensor_file(dir: &std::path::Path, seed: u64) -> std::path::PathBuf {
+    let s = size();
+    let gen = LowRankGenerator::new(s, s, s, 2, seed);
+    let path = dir.join("input.ext1");
+    save_tensor_streamed(&gen, &path, 8).unwrap();
+    path
+}
+
+// ---------------------------------------------------------------- inertness
+
+/// Compiled-in fault sites must be provably inert when no plan is armed:
+/// identical digests run to run, zero retry telemetry, every probe false.
+#[test]
+fn unarmed_fault_sites_are_inert() {
+    let _t = lock();
+    let _no_faults = exclude_faults();
+    for site in ALL_SITES {
+        assert!(!should_fault(site), "{} probed true while unarmed", site.name());
+    }
+    let dir = tmpdir("inert");
+    let path = tensor_file(&dir, 3);
+    let retries_before = io::IO_RETRIES.load(Ordering::SeqCst);
+    let gave_up_before = io::IO_GAVE_UP.load(Ordering::SeqCst);
+    let digest = |_: usize| {
+        let src = FileTensorSource::open(&path).unwrap();
+        let res = Pipeline::new(cfg(3, 2)).run(&src).unwrap();
+        model_digest(&res.model)
+    };
+    assert_eq!(digest(0), digest(1), "unarmed runs must be bitwise identical");
+    assert_eq!(
+        io::IO_RETRIES.load(Ordering::SeqCst),
+        retries_before,
+        "unarmed runs must not retry"
+    );
+    assert_eq!(io::IO_GAVE_UP.load(Ordering::SeqCst), gave_up_before);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ------------------------------------------------------------------ io_read
+
+/// Transient read faults on a strict period are absorbed by the retry loop:
+/// the faulted run's model is bitwise identical to the clean run's, and the
+/// retries are visible in telemetry.
+#[test]
+fn injected_read_faults_retry_to_a_bitwise_identical_result() {
+    let _t = lock();
+    let dir = tmpdir("retry");
+    let path = tensor_file(&dir, 5);
+    // Single-threaded + no prefetch: the probe stream is sequential, so
+    // `period >= 2` guarantees every faulted read's immediate retry lands
+    // on a non-faulting schedule position.
+    let run = || {
+        let src = FileTensorSource::open(&path).unwrap();
+        let mut pipe = Pipeline::new({
+            let mut c = cfg(5, 1);
+            c.prefetch_depth = Some(0);
+            c
+        });
+        let res = pipe.run(&src).unwrap();
+        (model_digest(&res.model), pipe.metrics.counter("io_retries"))
+    };
+    let (clean, _) = {
+        let _no_faults = exclude_faults();
+        run()
+    };
+    let g = arm_scoped(
+        FaultPlan::new(11)
+            .site(Site::IoRead, SiteSpec { period: 3, max: 50, ..Default::default() }),
+    );
+    let (faulted, retries) = run();
+    assert!(g.fired(Site::IoRead) >= 1, "the plan must actually deliver read faults");
+    assert!(retries >= 1, "faults must surface as retries in the pipeline metrics");
+    assert_eq!(faulted, clean, "retried faults must be bitwise invisible");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A read whose retry budget is exhausted (every attempt faults) fails the
+/// run — but only after the engine hands back the intact folded shard
+/// prefix and the pipeline checkpoints it.  The surfaced error carries the
+/// transient marker (what the scheduler's retry policy classifies on), and
+/// a re-run resumes mid-stream to a bitwise-identical model.
+#[test]
+fn exhausted_read_retries_checkpoint_the_folded_prefix_then_resume_is_bitwise() {
+    let _t = lock();
+    let dir = tmpdir("giveup");
+    let path = tensor_file(&dir, 7);
+    let ckpt = dir.join("ckpt");
+
+    let clean = {
+        let _no_faults = exclude_faults();
+        let src = FileTensorSource::open(&path).unwrap();
+        let res = Pipeline::new(cfg(7, 2)).run(&src).unwrap();
+        model_digest(&res.model)
+    };
+
+    let mut run_cfg = cfg(7, 2);
+    run_cfg.checkpoint_dir = Some(ckpt.clone());
+
+    // Let roughly half of stage 1's block reads through, then fault every
+    // attempt: the next read exhausts its whole retry budget and gives up.
+    let s = size();
+    let block_reads = (s / 8) * (s / 8) * (s / 8) * 64;
+    let g = arm_scoped(FaultPlan::new(13).site(
+        Site::IoRead,
+        SiteSpec { period: 1, after: (block_reads / 2) as u64, ..Default::default() },
+    ));
+    let mut pipe1 = Pipeline::new(run_cfg.clone());
+    let src = FileTensorSource::open(&path).unwrap();
+    let err = match pipe1.run(&src) {
+        Ok(_) => panic!("an exhausted retry budget must fail the run"),
+        Err(e) => e,
+    };
+    let msg = format!("{err:#}");
+    assert!(is_transient(&msg), "exhausted retries must classify as transient: {msg}");
+    assert!(msg.contains("compression failed"), "unexpected failure shape: {msg}");
+    assert!(g.fired(Site::IoRead) >= 5, "4 retries + the giving-up attempt");
+    assert!(pipe1.metrics.counter("io_retries") >= 4);
+    assert!(pipe1.metrics.counter("io_gave_up") >= 1);
+    assert!(
+        checkpoint::partial_exists(&ckpt),
+        "the folded prefix must be checkpointed before the run fails"
+    );
+    drop(g);
+
+    // The "retry" (what the scheduler does for a transient job failure):
+    // same config, same checkpoint dir — resumes, does not restart.
+    let mut pipe2 = Pipeline::new(run_cfg);
+    let src = FileTensorSource::open(&path).unwrap();
+    let res = pipe2.run(&src).unwrap();
+    assert!(
+        pipe2.metrics.counter("checkpoint_partial_resumed_blocks") > 0,
+        "the retried run must resume the checkpointed prefix"
+    );
+    assert_eq!(model_digest(&res.model), clean, "faulted-then-retried must be bitwise clean");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ----------------------------------------------------------------- io_write
+
+/// A faulted payload write surfaces a transient error (the file is torn —
+/// that is the caller's tmp+rename / generation-fallback problem), and the
+/// retry round-trips bitwise.
+#[test]
+fn io_write_fault_surfaces_transiently_and_a_retry_lands_the_payload() {
+    let _t = lock();
+    let dir = tmpdir("write");
+    let t = DenseTensor::from_vec(
+        [4, 4, 4],
+        (0..64).map(|i| (i as f32 * 0.37).sin()).collect(),
+    );
+    let path = dir.join("out.ext1");
+    let g = arm_scoped(
+        FaultPlan::new(17)
+            .site(Site::IoWrite, SiteSpec { max: 1, ..Default::default() }),
+    );
+    let err = io::save_tensor(&t, &path).expect_err("armed write must fail");
+    assert!(is_transient(&format!("{err:#}")));
+    assert_eq!(g.fired(Site::IoWrite), 1);
+    // The fault budget is spent: the retry succeeds while still armed.
+    io::save_tensor(&t, &path).unwrap();
+    assert_eq!(io::load_tensor(&path).unwrap(), t);
+    drop(g);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// -------------------------------------------------------- checkpoint_commit
+
+/// A faulted checkpoint commit is transient and leaves no torn state: the
+/// retry commits, and the committed generation loads back clean.
+#[test]
+fn checkpoint_commit_fault_is_transient_and_a_retry_commits() {
+    let _t = lock();
+    let dir = tmpdir("commit");
+    let c = cfg(0, 2);
+    let dims = [size(); 3];
+    let fp = checkpoint::default_fingerprint(&c, dims, 2);
+    let progress = CompressionProgress {
+        block: [8, 8, 8],
+        shard_parts: 32,
+        shards_total: 4,
+        shards_done: 2,
+        blocks_done: 2,
+        blocks_total: 4,
+        path: "batched".to_string(),
+        generation: 0,
+    };
+    let proxies: Vec<DenseTensor> = (0..2)
+        .map(|p| {
+            DenseTensor::from_vec(
+                [8, 8, 8],
+                (0..512).map(|i| ((i + p * 512) as f32 * 0.11).cos()).collect(),
+            )
+        })
+        .collect();
+
+    let g = arm_scoped(
+        FaultPlan::new(19)
+            .site(Site::CheckpointCommit, SiteSpec { max: 1, ..Default::default() }),
+    );
+    let err = checkpoint::save_partial(&dir, &fp, &progress, &proxies)
+        .expect_err("armed commit must fail");
+    assert!(is_transient(&format!("{err:#}")));
+    assert_eq!(g.fired(Site::CheckpointCommit), 1);
+    assert!(!checkpoint::partial_exists(&dir), "a failed commit must not tear state");
+    // Budget spent: the retry commits while still armed.
+    checkpoint::save_partial(&dir, &fp, &progress, &proxies).unwrap();
+    drop(g);
+    let load = checkpoint::load_partial(&dir, &fp, &progress).unwrap();
+    let (pr, back) = load.state.expect("committed generation must load");
+    assert_eq!(load.fallbacks, 0);
+    assert_eq!(pr.shards_done, 2);
+    assert_eq!(back, proxies);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// End-to-end generation fallback: two committed generations, the newest
+/// corrupted on disk.  The pipeline must fall back to the previous intact
+/// generation, count it, and still finish bitwise identical to a clean run.
+#[test]
+fn corrupted_generation_falls_back_to_the_previous_and_resumes_bitwise() {
+    let _t = lock();
+    let _no_faults = exclude_faults();
+    let dir = tmpdir("fallback");
+    let ckpt = dir.join("ckpt");
+    let s = size();
+    let gen = LowRankGenerator::new(s, s, s, 2, 23);
+
+    let clean = {
+        let res = Pipeline::new(cfg(23, 2)).run(&gen).unwrap();
+        model_digest(&res.model)
+    };
+
+    // Author two checkpoint generations exactly the way the pipeline does
+    // (same plan, maps, fingerprint), aborting after the second commit.
+    let mut run_cfg = cfg(23, 2);
+    run_cfg.checkpoint_dir = Some(ckpt.clone());
+    let dims = [s; 3];
+    let plan = MemoryPlanner::plan(&run_cfg, dims).unwrap();
+    let maps = MapSource::generate(
+        dims,
+        run_cfg.reduced,
+        plan.replicas,
+        run_cfg.effective_anchor(),
+        run_cfg.seed,
+        plan.map_tier,
+    );
+    let fp = checkpoint::default_fingerprint(&run_cfg, dims, plan.replicas);
+    // One worker: in sync mode `stop` is honored between shards, so after
+    // the sink aborts no second worker can complete another shard and fire
+    // it a third time — exactly generations 0 and 1 land on disk.
+    let opts = StreamOptions { threads: 1, ..Default::default() };
+    let blocks_total = BlockSpec3::new(dims, plan.block).num_blocks();
+    let shards_total = ThreadPool::partition(blocks_total, opts.shard_parts).len();
+    let partition = CompressionProgress {
+        block: plan.block,
+        shard_parts: opts.shard_parts,
+        shards_total,
+        shards_done: 0,
+        blocks_done: 0,
+        blocks_total,
+        path: "batched".to_string(),
+        generation: 0,
+    };
+    let calls = std::sync::atomic::AtomicU64::new(0);
+    let sink = |acc: &Vec<DenseTensor>, shards_done: usize, blocks_done: usize| {
+        let n = calls.fetch_add(1, Ordering::SeqCst);
+        let mut pr = partition.clone();
+        pr.shards_done = shards_done;
+        pr.blocks_done = blocks_done;
+        pr.generation = n;
+        checkpoint::save_partial(&ckpt, &fp, &pr, acc).unwrap();
+        n == 0 // stop after the second committed generation
+    };
+    let (_, stats) =
+        compress_source_batched_opts(&gen, &maps, plan.block, &opts, None, Some(&sink));
+    assert!(stats.aborted, "the authored checkpoint must be mid-compression");
+    assert!(calls.load(Ordering::SeqCst) >= 2, "need two generations on disk");
+    assert!(ckpt.join("partial_prev.json").exists());
+
+    // Corrupt generation 1's first proxy payload (bit-rot in the newest
+    // generation; generation 0's files are untouched).
+    let victim = ckpt.join("partial_00000001_proxy_0000.ext1");
+    let mut bytes = std::fs::read(&victim).unwrap();
+    let mid = bytes.len() / 2;
+    for b in &mut bytes[mid..mid + 8] {
+        *b ^= 0xFF;
+    }
+    std::fs::write(&victim, &bytes).unwrap();
+
+    let mut pipe = Pipeline::new(run_cfg);
+    let res = pipe.run(&gen).unwrap();
+    assert!(
+        pipe.metrics.counter("checkpoint_fallbacks") >= 1,
+        "the corrupt newest generation must be detected and skipped"
+    );
+    assert!(
+        pipe.metrics.counter("checkpoint_partial_resumed_blocks") > 0,
+        "the previous generation must actually be resumed, not cold-started"
+    );
+    assert_eq!(
+        model_digest(&res.model),
+        clean,
+        "resuming the fallback generation must be bitwise invisible"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// -------------------------------------------------------------- daemon chaos
+
+fn spec(seed: u64) -> JobSpec {
+    let s = size();
+    JobSpec {
+        source: JobSource::Synthetic { size: s, rank: 2, noise: 0.0, seed },
+        config: cfg(seed, 2),
+        priority: 0,
+    }
+}
+
+fn start_server(
+    spool: &std::path::Path,
+    sched: SchedulerConfig,
+    conn_timeout_ms: u64,
+    max_conns: usize,
+) -> (String, std::thread::JoinHandle<anyhow::Result<()>>) {
+    let server = Server::bind(&ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        spool_dir: spool.to_path_buf(),
+        scheduler: sched,
+        conn_timeout_ms,
+        max_conns,
+    })
+    .unwrap();
+    let addr = server.local_addr().to_string();
+    let handle = std::thread::spawn(move || server.run());
+    (addr, handle)
+}
+
+fn submit(addr: &str, spec: &JobSpec) -> JobRecord {
+    let resp = protocol::call_ok(addr, &Request::Submit(spec.clone())).unwrap();
+    JobRecord::from_json(resp.get("job").unwrap()).unwrap()
+}
+
+fn wait_terminal(addr: &str, id: &str, timeout: Duration) -> JobRecord {
+    let start = Instant::now();
+    loop {
+        let resp = protocol::call_ok(addr, &Request::Status(id.to_string())).unwrap();
+        let rec = JobRecord::from_json(resp.get("job").unwrap()).unwrap();
+        if rec.state.is_terminal() {
+            return rec;
+        }
+        assert!(start.elapsed() < timeout, "timed out waiting for {id}");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+fn metric(addr: &str, key: &str) -> u64 {
+    let resp = protocol::call_ok(addr, &Request::Metrics).unwrap();
+    resp.get("metrics")
+        .and_then(|m| m.get(key))
+        .and_then(|v| v.as_f64())
+        .unwrap_or(0.0) as u64
+}
+
+/// The multi-tenant survival test: one poison job panics on every run
+/// attempt (keyed `worker_panic` faults) while a half-open peer squats on a
+/// connection.  The daemon must retry then quarantine the poison job, reap
+/// the stalled peer, and complete the honest tenant's job untouched.
+#[test]
+fn poison_job_is_quarantined_while_other_tenants_complete() {
+    let _t = lock();
+    let dir = tmpdir("poison");
+    // Short request deadline so the half-open peer is reaped mid-test.
+    let (addr, handle) = start_server(&dir, SchedulerConfig::default(), 1_200, 0);
+
+    // The poison job is the first submission (scheduler seq 1): the keyed
+    // plan aims every fault at it and at nothing else.
+    let g = arm_scoped(FaultPlan::new(29).site(
+        Site::WorkerPanic,
+        SiteSpec { max: 5, key: Some(1), ..Default::default() },
+    ));
+    let _half_open = std::net::TcpStream::connect(&addr).unwrap();
+    let poison = submit(&addr, &spec(31));
+    let honest = submit(&addr, &spec(32));
+
+    let bad = wait_terminal(&addr, &poison.id, Duration::from_secs(300));
+    assert_eq!(bad.state, JobState::Quarantined, "poison job must be parked: {:?}", bad.error);
+    assert_eq!(bad.panics, 2, "default poison threshold is two panicking runs");
+    assert!(bad.error.as_deref().unwrap_or("").contains("panicked"), "{:?}", bad.error);
+    assert!(g.fired(Site::WorkerPanic) >= 2);
+
+    let good = wait_terminal(&addr, &honest.id, Duration::from_secs(300));
+    assert_eq!(good.state, JobState::Done, "honest tenant must survive: {:?}", good.error);
+    drop(g);
+
+    assert!(metric(&addr, "jobs_retried") >= 1, "the first panic must requeue");
+    assert_eq!(metric(&addr, "jobs_quarantined"), 1);
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while metric(&addr, "conn_timeouts") < 1 {
+        assert!(Instant::now() < deadline, "half-open peer never reaped");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    // Quarantine is durable: a restarted daemon must not resurrect the job.
+    protocol::call_ok(&addr, &Request::Shutdown).unwrap();
+    handle.join().unwrap().unwrap();
+    let (addr, handle) = start_server(&dir, SchedulerConfig::default(), 30_000, 0);
+    let resp = protocol::call_ok(&addr, &Request::Status(poison.id.clone())).unwrap();
+    let rec = JobRecord::from_json(resp.get("job").unwrap()).unwrap();
+    assert_eq!(rec.state, JobState::Quarantined, "quarantine must survive restart");
+    protocol::call_ok(&addr, &Request::Shutdown).unwrap();
+    handle.join().unwrap().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// --------------------------------------------------------------- conn_stall
+
+/// The `conn_stall` site replays the reap path without the wait: the
+/// connection gets the timeout error line, `conn_timeouts` counts it, and
+/// later connections are unaffected once the budget is spent.
+#[test]
+fn conn_stall_fault_reaps_the_connection_and_counts_it() {
+    use std::io::{BufRead, BufReader};
+    let _t = lock();
+    let dir = tmpdir("stall");
+    let (addr, handle) = start_server(&dir, SchedulerConfig::default(), 30_000, 0);
+
+    let g = arm_scoped(
+        FaultPlan::new(37)
+            .site(Site::ConnStall, SiteSpec { max: 1, ..Default::default() }),
+    );
+    let s = std::net::TcpStream::connect(&addr).unwrap();
+    let mut r = BufReader::new(s);
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    assert!(line.contains("timed out"), "stalled connection must get the reap note: {line:?}");
+    assert_eq!(g.fired(Site::ConnStall), 1);
+    drop(g);
+
+    assert!(metric(&addr, "conn_timeouts") >= 1);
+    protocol::call_ok(&addr, &Request::Shutdown).unwrap();
+    handle.join().unwrap().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ----------------------------------------------------------------- capacity
+
+/// Over the concurrent-connection bound, new peers get a polite error line
+/// instead of silence, and capacity frees as soon as a holder disconnects.
+#[test]
+fn over_capacity_connections_get_a_polite_rejection() {
+    use std::io::{BufRead, BufReader};
+    let _t = lock();
+    let _no_faults = exclude_faults();
+    let dir = tmpdir("capacity");
+    let (addr, handle) = start_server(&dir, SchedulerConfig::default(), 60_000, 1);
+
+    let holder = std::net::TcpStream::connect(&addr).unwrap();
+    std::thread::sleep(Duration::from_millis(150)); // let the acceptor register it
+
+    let over = std::net::TcpStream::connect(&addr).unwrap();
+    let mut r = BufReader::new(over);
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    assert!(
+        line.contains("connection capacity"),
+        "over-capacity peer must get the polite line: {line:?}"
+    );
+    drop(r);
+    drop(holder);
+
+    // The holder's slot frees on EOF; normal service resumes.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let rejected = loop {
+        match protocol::call_ok(&addr, &Request::Metrics) {
+            Ok(resp) => {
+                break resp
+                    .get("metrics")
+                    .and_then(|m| m.get("conn_rejected_over_capacity"))
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(0.0) as u64
+            }
+            Err(_) => {
+                assert!(Instant::now() < deadline, "capacity never freed");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    };
+    assert!(rejected >= 1);
+    protocol::call_ok(&addr, &Request::Shutdown).unwrap();
+    handle.join().unwrap().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}

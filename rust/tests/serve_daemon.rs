@@ -51,10 +51,22 @@ fn plan_bytes(spec: &JobSpec) -> usize {
 }
 
 fn start_server(spool: &std::path::Path, sched: SchedulerConfig) -> (String, std::thread::JoinHandle<anyhow::Result<()>>) {
+    // A generous deadline: hardening must not perturb the happy paths.
+    start_server_hardened(spool, sched, 60_000, 0)
+}
+
+fn start_server_hardened(
+    spool: &std::path::Path,
+    sched: SchedulerConfig,
+    conn_timeout_ms: u64,
+    max_conns: usize,
+) -> (String, std::thread::JoinHandle<anyhow::Result<()>>) {
     let server = Server::bind(&ServerConfig {
         addr: "127.0.0.1:0".to_string(),
         spool_dir: spool.to_path_buf(),
         scheduler: sched,
+        conn_timeout_ms,
+        max_conns,
     })
     .unwrap();
     let addr = server.local_addr().to_string();
@@ -228,6 +240,8 @@ fn daemon_restart_recovers_spool_and_resumes_bitwise() {
         cache_key: cache_key(&job_spec).unwrap(),
         cancel_requested: false,
         resolved_solver: None,
+        attempts: 0,
+        panics: 0,
         error: None,
         outcome: None,
     };
@@ -323,6 +337,61 @@ fn protocol_handles_garbage_and_pipelining() {
         Some(false)
     );
     drop(r);
+
+    protocol::call_ok(&addr, &Request::Shutdown).unwrap();
+    handle.join().unwrap().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Connection hardening: a half-open peer (connect, send nothing) and a
+/// slow-loris peer (one byte per window, never a full line) are both
+/// reaped on the request deadline, counted in `conn_timeouts`, and never
+/// block well-behaved clients from doing real work in the meantime.
+#[test]
+fn slow_loris_and_half_open_peers_are_reaped_without_blocking_tenants() {
+    use std::io::{Read, Write};
+    let dir = tmpdir("loris");
+    // Short deadline so the reap happens within the test's patience.
+    let (addr, handle) = start_server_hardened(&dir, SchedulerConfig::default(), 600, 0);
+
+    // Half-open: connect and go silent.
+    let half_open = std::net::TcpStream::connect(&addr).unwrap();
+
+    // Slow-loris: trickle a valid-looking request one byte at a time with
+    // gaps longer than the per-read tick but never complete the line.
+    let mut loris = std::net::TcpStream::connect(&addr).unwrap();
+    let loris_feeder = std::thread::spawn(move || {
+        for b in b"{\"cmd\":\"METRICS\"" {
+            if loris.write_all(&[*b]).is_err() {
+                break; // reaped mid-trickle — exactly what we want
+            }
+            std::thread::sleep(Duration::from_millis(90));
+        }
+        loris
+    });
+
+    // While both attackers hold sockets, an honest tenant's job completes.
+    let rec = submit(&addr, &spec(11));
+    let done = wait_terminal(&addr, &rec.id, Duration::from_secs(300));
+    assert_eq!(done.state, JobState::Done, "honest tenant starved: {:?}", done.error);
+
+    // Both hostile connections are reaped on the deadline: the daemon
+    // sends a timeout error line (or just closes) and read returns EOF.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        if metric(&addr, "conn_timeouts") >= 2 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "peers never reaped");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    let mut buf = Vec::new();
+    let mut half_open = half_open;
+    half_open.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    half_open.read_to_end(&mut buf).unwrap();
+    let note = String::from_utf8_lossy(&buf);
+    assert!(note.contains("timed out"), "expected a polite reap note, got: {note:?}");
+    drop(loris_feeder.join().unwrap());
 
     protocol::call_ok(&addr, &Request::Shutdown).unwrap();
     handle.join().unwrap().unwrap();
