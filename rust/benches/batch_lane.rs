@@ -1,0 +1,198 @@
+//! `BENCH_batch_lane` — throughput of the scheduler's batched small-tensor
+//! fast lane versus the per-job solo path.
+//!
+//! Floods one scheduler with many small, sweep-compatible jobs twice:
+//!
+//! * **solo** arm — batch lane disabled (`batch_threshold_bytes = 0`), so
+//!   every job runs the ordinary one-job-per-worker path;
+//! * **batch** arm — lane enabled with an unlimited threshold, so queued
+//!   compatible jobs coalesce into shared fused-ALS sweeps.
+//!
+//! Both arms use one worker and submit the flood behind a high-priority
+//! blocker job so the queue is deep when the first lane tick fires.  The
+//! bench **asserts**:
+//!
+//! 1. every job's `model_digest` is bitwise identical across the two arms
+//!    (the lane's core guarantee — coalescing must not change results);
+//! 2. the batch arm actually coalesced (`batch_jobs_coalesced > 0`) and
+//!    the solo arm never did (`batch_sweeps == 0`);
+//! 3. in full mode, the 256-job flood finishes at least **2×** faster
+//!    through the lane.
+//!
+//! `--quick` shrinks the flood for the CI smoke job; the identity and
+//! coalescing asserts still run so a silent lane regression fails CI.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use exascale_tensor::bench_harness::{bench_once, speedup, Report};
+use exascale_tensor::coordinator::{Metrics, PipelineConfig};
+use exascale_tensor::serve::{JobSource, JobSpec, Scheduler, SchedulerConfig, Spool};
+
+/// One small, lane-eligible job.  `threads(1)` is the realistic tenant
+/// posture this lane exists for: a tiny job cannot profitably go wide on
+/// its own, so the solo arm runs it serially while the shared sweep packs
+/// every job's replicas onto the host's full width.  `als_tol = 0` pins
+/// every job to the full iteration budget so the measured work is
+/// identical across arms and runs (no data-dependent early convergence).
+fn small_spec(seed: u64, tenant: &str) -> JobSpec {
+    JobSpec {
+        source: JobSource::Synthetic { size: 20, rank: 2, noise: 0.0, seed },
+        config: PipelineConfig::builder()
+            .reduced_dims(10, 10, 10)
+            .rank(2)
+            .anchor_rows(4)
+            .block([10, 10, 10])
+            .als(320, 0.0)
+            .threads(1)
+            .seed(seed)
+            .build()
+            .unwrap(),
+        priority: 0,
+        tenant: tenant.to_string(),
+    }
+}
+
+/// High-priority job that occupies the lone worker while the flood is
+/// being submitted, so both arms admit from an equally deep queue.
+fn blocker_spec(iters: usize) -> JobSpec {
+    JobSpec {
+        source: JobSource::Synthetic { size: 40, rank: 2, noise: 0.0, seed: 7 },
+        config: PipelineConfig::builder()
+            .reduced_dims(12, 12, 12)
+            .rank(2)
+            .anchor_rows(4)
+            .block([12, 12, 12])
+            .als(iters, 1e-12)
+            .threads(2)
+            .seed(7)
+            .build()
+            .unwrap(),
+        priority: 10,
+        tenant: String::new(),
+    }
+}
+
+struct ArmResult {
+    digests: Vec<u64>,
+    sweeps: u64,
+    coalesced: u64,
+}
+
+/// Runs one full flood through a fresh scheduler and returns every job's
+/// digest (in submission order) plus the lane counters.
+fn run_arm(dir: &std::path::Path, lane_on: bool, jobs: usize, blocker_iters: usize) -> ArmResult {
+    let cfg = SchedulerConfig {
+        workers: 1,
+        batch_threshold_bytes: if lane_on { usize::MAX } else { 0 },
+        batch_max_jobs: jobs.max(2),
+        ..Default::default()
+    };
+    let metrics = Arc::new(Metrics::new());
+    let s = Scheduler::new(Spool::open(dir).unwrap(), cfg, metrics).unwrap();
+
+    // Park the worker on the blocker, then pile up the flood behind it.
+    let blocker = s.submit(blocker_spec(blocker_iters)).unwrap();
+    while matches!(
+        s.status(&blocker.id).unwrap().state,
+        exascale_tensor::serve::JobState::Submitted | exascale_tensor::serve::JobState::Queued
+    ) {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let ids: Vec<String> = (0..jobs)
+        .map(|i| {
+            let tenant = if i % 2 == 0 { "acme" } else { "beta" };
+            s.submit(small_spec(1000 + i as u64, tenant)).unwrap().id
+        })
+        .collect();
+
+    let mut digests = Vec::with_capacity(jobs);
+    for id in &ids {
+        let rec = s.wait(id, Duration::from_secs(600)).unwrap();
+        assert_eq!(
+            rec.state,
+            exascale_tensor::serve::JobState::Done,
+            "job {id} ended {:?} ({:?})",
+            rec.state,
+            rec.error
+        );
+        let out = rec.outcome.expect("done job has an outcome");
+        assert!(!out.from_cache, "flood seeds are distinct; no job may hit the cache");
+        digests.push(out.model_digest);
+    }
+    let sweeps = s.metrics().counter("batch_sweeps");
+    let coalesced = s.metrics().counter("batch_jobs_coalesced");
+    s.shutdown();
+    s.join();
+    ArmResult { digests, sweeps, coalesced }
+}
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("bench_batch_lane_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let jobs = if quick { 24 } else { 256 };
+    let blocker_iters = if quick { 200 } else { 600 };
+    let mut rep = Report::new(
+        "BENCH_batch_lane",
+        "Batched small-tensor lane: coalesced fused-ALS sweeps vs solo runs",
+    );
+
+    println!("flood: {jobs} jobs ({})", if quick { "quick" } else { "full" });
+
+    let solo_dir = tmpdir("solo");
+    let (solo_m, solo) = bench_once("solo_flood", || run_arm(&solo_dir, false, jobs, blocker_iters));
+    assert_eq!(solo.sweeps, 0, "lane disabled must never sweep");
+    let solo_s = solo_m.mean_s;
+    println!("  solo  : {solo_s:>8.3} s");
+    rep.push(solo_m.with_extra("jobs", jobs as f64));
+
+    let batch_dir = tmpdir("batch");
+    let (batch_m, batch) = bench_once("batch_flood", || run_arm(&batch_dir, true, jobs, blocker_iters));
+    let batch_s = batch_m.mean_s;
+    println!(
+        "  batch : {batch_s:>8.3} s  ({} sweeps, {} jobs coalesced)",
+        batch.sweeps, batch.coalesced
+    );
+    rep.push(
+        batch_m
+            .with_extra("jobs", jobs as f64)
+            .with_extra("batch_sweeps", batch.sweeps as f64)
+            .with_extra("batch_jobs_coalesced", batch.coalesced as f64),
+    );
+
+    // The lane's two contracts: it must actually coalesce, and coalescing
+    // must be invisible in the results.
+    assert!(
+        batch.coalesced > 0,
+        "lane enabled with a deep queue of compatible jobs but nothing coalesced"
+    );
+    assert!(batch.sweeps >= 1, "coalesced jobs must be counted in batch_sweeps");
+    assert_eq!(solo.digests.len(), batch.digests.len());
+    for (i, (s_d, b_d)) in solo.digests.iter().zip(&batch.digests).enumerate() {
+        assert_eq!(
+            s_d, b_d,
+            "job {i}: batched digest {b_d:016x} != solo digest {s_d:016x} — \
+             the lane broke bitwise identity"
+        );
+    }
+    println!("  digests: {} jobs bitwise identical across arms", solo.digests.len());
+
+    let sp = speedup(solo_s, batch_s);
+    println!("  speedup: {sp:.2}x");
+    if !quick {
+        assert!(
+            sp >= 2.0,
+            "batch lane speedup {sp:.2}x < 2x on the {jobs}-job flood"
+        );
+    }
+
+    std::fs::remove_dir_all(&solo_dir).ok();
+    std::fs::remove_dir_all(&batch_dir).ok();
+    rep.finish();
+}

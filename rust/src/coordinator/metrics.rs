@@ -164,11 +164,19 @@ mod tests {
         m.incr("checkpoint_fallbacks", 1);
         m.incr("conn_timeouts", 4);
         m.incr("conn_rejected_over_capacity", 5);
+        // Batch-lane counters and gauge ride it too.
+        m.incr("batch_sweeps", 2);
+        m.incr("batch_jobs_coalesced", 7);
+        m.set("batch_lane_depth", 3);
+        m.incr("tenant_quota_deferrals", 1);
         let snap = m.snapshot();
         assert_eq!(
             snap,
             vec![
                 ("admission_rejected_bytes".to_string(), 1024),
+                ("batch_jobs_coalesced".to_string(), 7),
+                ("batch_lane_depth".to_string(), 3),
+                ("batch_sweeps".to_string(), 2),
                 ("cache_hits".to_string(), 1),
                 ("checkpoint_fallbacks".to_string(), 1),
                 ("conn_rejected_over_capacity".to_string(), 5),
@@ -176,6 +184,7 @@ mod tests {
                 ("jobs_quarantined".to_string(), 1),
                 ("jobs_queued".to_string(), 3),
                 ("jobs_retried".to_string(), 2),
+                ("tenant_quota_deferrals".to_string(), 1),
             ]
         );
         let mut sorted = snap.clone();

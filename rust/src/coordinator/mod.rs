@@ -36,5 +36,7 @@ pub use config::{
     RecoverySolverKind, SensingConfig,
 };
 pub use metrics::{Metrics, StageStats};
-pub use pipeline::{Pipeline, PipelineResult, ProxyDecomposer, RustAlsDecomposer};
+pub use pipeline::{
+    run_batch_group, Pipeline, PipelineResult, ProxyDecomposer, RustAlsDecomposer,
+};
 pub use planner::{MemoryPlan, MemoryPlanner};

@@ -36,7 +36,7 @@ use crate::compress::{
     compress_source, BlockCompressor, MapSource, PrefetchConfig, ResumeState, RustCompressor,
     SparseSignMatrix, StreamOptions, DEFAULT_SHARD_PARTS,
 };
-use crate::cp::{als_decompose_with, sampled_mse, AlsOptions, CpModel};
+use crate::cp::{als_batch, als_decompose_with, sampled_mse, AlsBatchItem, AlsOptions, CpModel};
 use crate::linalg::backend::{cpu_backend, serial_backend, BackendHandle, SerialBackend};
 use crate::linalg::ista::IstaOptions;
 use crate::mixed::MixedPrecision;
@@ -129,6 +129,18 @@ pub struct PipelineResult {
     pub model: CpModel,
     pub plan: MemoryPlan,
     pub diagnostics: Diagnostics,
+}
+
+/// Stage-1 output of one job: the compressed proxies plus everything the
+/// post-compression stages need.  Produced by `Pipeline::compress_stage`,
+/// consumed by `Pipeline::finish_stage`; [`run_batch_group`] holds one per
+/// job while a shared sweep decomposes every job's proxies together.
+pub struct PreparedJob {
+    plan: MemoryPlan,
+    pool: ThreadPool,
+    anchor: usize,
+    maps: MapSource,
+    proxies: Vec<DenseTensor>,
 }
 
 /// The Exascale-Tensor coordinator.
@@ -283,6 +295,29 @@ impl Pipeline {
             return self.run_sensing(src, plan, &compute);
         }
 
+        let prep = self.compress_stage(src, plan, &compute)?;
+
+        // ── Stage 2: proxy decomposition (Alg. 2 lines 3–4) ──
+        let models = self.metrics.time("decompose", || {
+            self.decompose_proxies(&prep.proxies, &prep.pool, &compute)
+        })?;
+
+        self.finish_stage(src, prep, models)
+    }
+
+    /// Stage 1 (Alg. 2 lines 1–2, Fig. 2): replica maps + blocked
+    /// streaming compression, with the full checkpoint/resume machinery.
+    /// Returns a [`PreparedJob`] carrying everything the post-compression
+    /// stages need — the seam [`run_batch_group`] uses to run many jobs'
+    /// proxy ALS through one coalesced sweep between this stage and
+    /// [`Pipeline::finish_stage`].
+    fn compress_stage(
+        &self,
+        src: &dyn TensorSource,
+        plan: MemoryPlan,
+        compute: &BackendHandle,
+    ) -> Result<PreparedJob> {
+        let dims = src.dims();
         let pool = self.pool();
         let anchor = self.cfg.effective_anchor();
 
@@ -535,11 +570,31 @@ impl Pipeline {
             }
         };
         self.metrics.incr("replicas", proxies.len() as u64);
+        Ok(PreparedJob {
+            plan,
+            pool,
+            anchor,
+            maps,
+            proxies,
+        })
+    }
 
-        // ── Stage 2: proxy decomposition (Alg. 2 lines 3–4) ──
-        let models = self.metrics.time("decompose", || {
-            self.decompose_proxies(&proxies, &pool, &compute)
-        })?;
+    /// Stages 3–6 (Alg. 2 lines 5–13 + refinement): everything downstream
+    /// of the proxy models.  Counterpart of [`Pipeline::compress_stage`].
+    fn finish_stage(
+        &self,
+        src: &dyn TensorSource,
+        prep: PreparedJob,
+        models: Vec<(usize, CpModel)>,
+    ) -> Result<PipelineResult> {
+        let PreparedJob {
+            plan,
+            pool,
+            anchor,
+            maps,
+            proxies: _,
+        } = prep;
+        let dims = src.dims();
 
         // ── Stage 3: anchor normalization + Hungarian alignment (5–7) ──
         // Keep at least the identifiability minimum even if anchor scores
@@ -757,9 +812,7 @@ impl Pipeline {
         let results = pool.map_indexed(proxies.len(), |p| {
             let mut best: Option<(CpModel, f64)> = None;
             for attempt in 0..MAX_ATTEMPTS {
-                let s = seed
-                    ^ (p as u64).wrapping_mul(0x9E37)
-                    ^ (attempt as u64).wrapping_mul(0x1234_5601);
+                let s = attempt_seed(seed, p, attempt);
                 match decomposer.decompose(&proxies[p], rank, s) {
                     Ok((m, fit)) => {
                         let improved = best.as_ref().map(|(_, bf)| fit > *bf).unwrap_or(true);
@@ -775,32 +828,7 @@ impl Pipeline {
             }
             best
         });
-        let mut fits: Vec<f64> = results
-            .iter()
-            .flatten()
-            .map(|(_, f)| *f)
-            .collect();
-        if fits.is_empty() {
-            anyhow::bail!("every proxy decomposition failed");
-        }
-        fits.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let median = fits[fits.len() / 2];
-        let kept: Vec<(usize, CpModel)> = results
-            .into_iter()
-            .enumerate()
-            .filter_map(|(p, r)| {
-                let (m, fit) = r?;
-                if fit >= median - DROP_MARGIN {
-                    Some((p, m))
-                } else {
-                    log::warn!("dropping replica {p}: fit {fit:.4} ≪ median {median:.4}");
-                    None
-                }
-            })
-            .collect();
-        self.metrics
-            .incr("replicas_fit_dropped", (proxies.len() - kept.len()) as u64);
-        Ok(kept)
+        select_surviving(results, &self.metrics)
     }
 
     /// Surfaces the stacked solve's counters as gauges (set, not
@@ -826,6 +854,200 @@ impl Pipeline {
             max_factor_error: f64::NAN,
         }
     }
+}
+
+/// Deterministic per-(replica, attempt) init seed — the same value for the
+/// solo attempt loop and the batched sweep, which is half of the batch
+/// lane's bitwise-identity guarantee (the other half is [`als_batch`]'s
+/// untouched per-item operation sequence).
+fn attempt_seed(seed: u64, p: usize, attempt: usize) -> u64 {
+    seed ^ (p as u64).wrapping_mul(0x9E37) ^ (attempt as u64).wrapping_mul(0x1234_5601)
+}
+
+/// Shared fit-outlier policy (solo and batched decomposition): median of
+/// the surviving fits, drop anything more than `DROP_MARGIN` below it.
+/// `results[p]` is replica `p`'s best `(model, fit)` across attempts
+/// (`None` if every attempt failed).
+fn select_surviving(
+    results: Vec<Option<(CpModel, f64)>>,
+    metrics: &Metrics,
+) -> Result<Vec<(usize, CpModel)>> {
+    let total = results.len();
+    let mut fits: Vec<f64> = results.iter().flatten().map(|(_, f)| *f).collect();
+    if fits.is_empty() {
+        anyhow::bail!("every proxy decomposition failed");
+    }
+    fits.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = fits[fits.len() / 2];
+    let kept: Vec<(usize, CpModel)> = results
+        .into_iter()
+        .enumerate()
+        .filter_map(|(p, r)| {
+            let (m, fit) = r?;
+            if fit >= median - DROP_MARGIN {
+                Some((p, m))
+            } else {
+                log::warn!("dropping replica {p}: fit {fit:.4} ≪ median {median:.4}");
+                None
+            }
+        })
+        .collect();
+    metrics.incr("replicas_fit_dropped", (total - kept.len()) as u64);
+    Ok(kept)
+}
+
+/// Runs a group of compatible jobs with their proxy-ALS iterations
+/// coalesced into shared [`als_batch`] sweeps — the batch lane's engine.
+///
+/// Per job: the ordinary Stage-1 compression runs as usual (checkpoints,
+/// metrics, planner — all per job); then, instead of each job spinning up
+/// its own pool residency for Stage 2, every job's `(replica, attempt)`
+/// items join one coalesced sweep per retry wave; finally stages 3–6 run
+/// per job on its own pipeline.  Attempt seeds, the improve/retry policy
+/// (`RETRY_FIT`/`MAX_ATTEMPTS`), and the fit-outlier drop are exactly the
+/// solo path's, and `als_batch` preserves each item's operation sequence
+/// bit for bit — so every job's factors (and therefore its model digest)
+/// are identical to a solo [`Pipeline::run`].
+///
+/// Jobs the sweep cannot serve identically fall back to solo `run()`
+/// inline: the sensing variant, jobs with a custom or stage-hook proxy
+/// decomposer, and single-proxy jobs (whose lone solo ALS runs on the
+/// resolved kernel backend rather than the serial reference the
+/// replica-parallel path — and the sweep — use).
+///
+/// Items are grouped by `(rank, als_iters, als_tol)` within each wave, so
+/// mixed-config groups still work; the scheduler's lane feeds compatible
+/// jobs to keep each wave a single sweep.
+pub fn run_batch_group(
+    pipes: &mut [Pipeline],
+    sources: &[&dyn TensorSource],
+) -> Vec<Result<PipelineResult>> {
+    assert_eq!(pipes.len(), sources.len(), "run_batch_group: job/source mismatch");
+    let n = pipes.len();
+    let mut out: Vec<Option<Result<PipelineResult>>> = (0..n).map(|_| None).collect();
+    let mut preps: Vec<Option<PreparedJob>> = (0..n).map(|_| None).collect();
+
+    // Per-job prologue + Stage 1.
+    for i in 0..n {
+        let staged = (|| -> Result<Option<PreparedJob>> {
+            pipes[i].cfg.validate()?;
+            let compute = pipes[i].resolve_compute()?;
+            let dims = sources[i].dims();
+            let plan = MemoryPlanner::plan(&pipes[i].cfg, dims)?;
+            let batchable = pipes[i].cfg.sensing.is_none()
+                && pipes[i].decomposer.is_none()
+                && compute.proxy_decomposer().is_none()
+                && plan.replicas > 1;
+            if !batchable {
+                return Ok(None);
+            }
+            pipes[i].compress_stage(sources[i], plan, &compute).map(Some)
+        })();
+        match staged {
+            Ok(Some(prep)) => preps[i] = Some(prep),
+            Ok(None) => out[i] = Some(pipes[i].run(sources[i])),
+            Err(e) => out[i] = Some(Err(e)),
+        }
+    }
+
+    // Shared Stage 2: one coalesced sweep per retry wave over every
+    // still-unconverged (job, replica) item.
+    let mut best: Vec<Vec<Option<(CpModel, f64)>>> = (0..n)
+        .map(|i| {
+            let p = preps[i].as_ref().map(|pr| pr.proxies.len()).unwrap_or(0);
+            (0..p).map(|_| None).collect()
+        })
+        .collect();
+    // The sweep pool inherits the *aggregate* thread entitlement of its
+    // members, capped at the host: a lone small job is stuck with its own
+    // `cfg.threads`, but a coalesced wave has enough independent items to
+    // fill the width the whole group was admitted with.  Width never
+    // affects results — every item runs on a serial per-item kernel.
+    let host = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1);
+    let sweep_threads = (0..n)
+        .filter(|&i| preps[i].is_some())
+        .map(|i| pipes[i].cfg.threads.max(1))
+        .sum::<usize>()
+        .clamp(1, host);
+    let sweep = cpu_backend(sweep_threads);
+    let sweep_start = std::time::Instant::now();
+    for attempt in 0..MAX_ATTEMPTS {
+        // Items wanting this attempt, grouped by the (rank, iters, tol)
+        // config one `als_batch` call shares.
+        let mut groups: std::collections::BTreeMap<(usize, usize, u64), Vec<(usize, usize)>> =
+            std::collections::BTreeMap::new();
+        for i in 0..n {
+            if preps[i].is_none() {
+                continue;
+            }
+            for p in 0..best[i].len() {
+                let wants = match &best[i][p] {
+                    None => true,
+                    Some((_, f)) => *f < RETRY_FIT,
+                };
+                if wants {
+                    let cfg = &pipes[i].cfg;
+                    groups
+                        .entry((cfg.rank, cfg.als_iters, cfg.als_tol.to_bits()))
+                        .or_default()
+                        .push((i, p));
+                }
+            }
+        }
+        if groups.is_empty() {
+            break;
+        }
+        for ((rank, iters, tol_bits), members) in groups {
+            let items: Vec<AlsBatchItem<'_>> = members
+                .iter()
+                .map(|&(i, p)| AlsBatchItem {
+                    tensor: &preps[i].as_ref().unwrap().proxies[p],
+                    seed: attempt_seed(pipes[i].cfg.seed, p, attempt),
+                })
+                .collect();
+            let opts = AlsOptions {
+                rank,
+                max_iters: iters,
+                tol: f64::from_bits(tol_bits),
+                ..Default::default()
+            };
+            let results = als_batch(&items, &opts, &*sweep);
+            for (&(i, p), res) in members.iter().zip(results) {
+                match res {
+                    Ok((m, trace)) => {
+                        let fit = trace.fits.last().copied().unwrap_or(f64::NEG_INFINITY);
+                        let improved =
+                            best[i][p].as_ref().map(|(_, bf)| fit > *bf).unwrap_or(true);
+                        if improved {
+                            best[i][p] = Some((m, fit));
+                        }
+                    }
+                    Err(e) => log::warn!("replica {p} attempt {attempt} failed: {e}"),
+                }
+            }
+        }
+    }
+    let sweep_secs = sweep_start.elapsed().as_secs_f64();
+
+    // Per-job epilogue: fit-outlier policy + stages 3–6, each on its own
+    // pipeline and metrics.  The sweep's wall time is recorded under every
+    // participating job's "decompose" stage as-is (shared, not divided —
+    // the lane's amortization is exactly that the jobs overlap in it).
+    for i in 0..n {
+        let Some(prep) = preps[i].take() else { continue };
+        pipes[i].metrics.record("decompose", sweep_secs);
+        let models = select_surviving(std::mem::take(&mut best[i]), &pipes[i].metrics);
+        out[i] = Some(match models {
+            Ok(models) => pipes[i].finish_stage(sources[i], prep, models),
+            Err(e) => Err(e),
+        });
+    }
+
+    out.into_iter()
+        .map(|r| r.expect("every job settled"))
+        .collect()
 }
 
 #[cfg(test)]
@@ -955,6 +1177,40 @@ mod tests {
         assert!(t_chol.rel_error(&t_iter) < 1e-2, "err {}", t_chol.rel_error(&t_iter));
         assert!(pipe.metrics.counter("recovery_cg_iters") > 0);
         assert_eq!(pipe.metrics.counter("recovery_solver_iterative"), 1);
+    }
+
+    #[test]
+    fn batch_group_matches_solo_bitwise() {
+        let gens: Vec<LowRankGenerator> = (0..3u64)
+            .map(|i| LowRankGenerator::new(24, 24, 24, 2, 2000 + i))
+            .collect();
+        let solos: Vec<PipelineResult> = gens
+            .iter()
+            .map(|g| {
+                Pipeline::new(base_cfg().rank(2).build().unwrap())
+                    .run(g)
+                    .unwrap()
+            })
+            .collect();
+        let mut pipes: Vec<Pipeline> = (0..3)
+            .map(|_| Pipeline::new(base_cfg().rank(2).build().unwrap()))
+            .collect();
+        let sources: Vec<&dyn TensorSource> =
+            gens.iter().map(|g| g as &dyn TensorSource).collect();
+        let results = run_batch_group(&mut pipes, &sources);
+        for (i, (solo, batched)) in solos.iter().zip(results).enumerate() {
+            let b = batched.unwrap();
+            assert_eq!(
+                b.model.a, solo.model.a,
+                "job {i}: batched factor A must be bitwise solo"
+            );
+            assert_eq!(b.model.b, solo.model.b, "job {i}: factor B");
+            assert_eq!(b.model.c, solo.model.c, "job {i}: factor C");
+        }
+        // The shared sweep's time lands under each job's decompose stage.
+        for p in &pipes {
+            assert!(p.metrics.stage("decompose").is_some());
+        }
     }
 
     #[test]

@@ -137,6 +137,147 @@ fn fit_dense(norm_x: f64, x1: &Matrix, model: &CpModel, backend: &dyn ComputeBac
     1.0 - resid_sq.sqrt() / norm_x.max(1e-300)
 }
 
+/// One item of a coalesced ALS sweep: the (small) tensor plus its init
+/// seed.  Rank / iteration budget / tolerance are shared across the batch
+/// (the `opts` argument of [`als_batch`]) — that is the batch lane's
+/// compatibility contract; only the seed varies per item.
+pub struct AlsBatchItem<'a> {
+    pub tensor: &'a DenseTensor,
+    pub seed: u64,
+}
+
+/// ALS iterations per lockstep round of a batched sweep.  Coarse on
+/// purpose: each round costs one backend fan-out (one pool-scope thread
+/// residency for the *whole batch*), so a handful of iterations per round
+/// amortizes the wake-up while the per-item convergence mask still retires
+/// early-converged items within a round of their convergence sweep.
+const BATCH_ROUND_ITERS: usize = 8;
+
+/// Coalesced dense ALS over many small tensors — the batch lane's driver.
+///
+/// Every item runs **exactly** the solo sequence of
+/// [`als_decompose_with`]`(t, {seed: item.seed, ..opts}, &SerialBackend)`:
+/// same init draws, same per-sweep kernel calls in the same order, same
+/// convergence test.  The batching is purely *where* the items run — the
+/// `sweep` backend's [`ComputeBackend::for_each_item`] fans the
+/// independent items across one shared pool residency per round
+/// (`gemm_batch`-style dispatch, with each worker's thread-local
+/// `PackArena` reused across every item it picks up) instead of each job
+/// paying its own thread-pool wake-up and cold pack buffers.  Because the
+/// per-item operation sequence is untouched, each returned model and trace
+/// is bitwise identical to the solo run.
+///
+/// Items carry a per-item convergence mask: an item that converges (or
+/// errors) drops out of subsequent rounds without stalling the rest of the
+/// sweep.  Per-item errors come back as that item's `Err`; they do not
+/// poison the batch.
+pub fn als_batch(
+    items: &[AlsBatchItem<'_>],
+    opts: &AlsOptions,
+    sweep: &dyn ComputeBackend,
+) -> Vec<Result<(CpModel, AlsTrace)>> {
+    use std::sync::Mutex;
+    struct ItemState {
+        x1: Matrix,
+        x2: Matrix,
+        x3: Matrix,
+        norm_x: f64,
+        model: CpModel,
+        trace: AlsTrace,
+        prev_fit: f64,
+        done: bool,
+        error: Option<anyhow::Error>,
+    }
+    // One slot per item; each fan-out closure touches only its own slot,
+    // so the mutexes are uncontended — they exist to carry `&mut` state
+    // through the `Fn(usize)` fan-out surface.
+    let states: Vec<Mutex<Option<ItemState>>> =
+        items.iter().map(|_| Mutex::new(None)).collect();
+
+    // Init round: seeds, factor draws, unfoldings, norms — identical to
+    // the solo prologue, fanned out like everything else.
+    sweep.for_each_item(items.len(), &|i| {
+        let item = &items[i];
+        let mut rng = Xoshiro256::seed_from_u64(item.seed);
+        let (a0, b0, c0) = match opts.init {
+            InitMethod::Random => random_init(item.tensor.dims(), opts.rank, &mut rng),
+            InitMethod::Hosvd => hosvd_init(item.tensor, opts.rank, &mut rng),
+        };
+        *states[i].lock().unwrap() = Some(ItemState {
+            x1: unfold_1(item.tensor),
+            x2: unfold_2(item.tensor),
+            x3: unfold_3(item.tensor),
+            norm_x: item.tensor.frobenius_norm(),
+            model: CpModel::new(a0, b0, c0),
+            trace: AlsTrace::default(),
+            prev_fit: f64::NEG_INFINITY,
+            done: false,
+            error: None,
+        });
+    });
+
+    // Lockstep rounds over the still-active mask.
+    loop {
+        let active: Vec<usize> = states
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| !s.lock().unwrap().as_ref().unwrap().done)
+            .map(|(i, _)| i)
+            .collect();
+        if active.is_empty() {
+            break;
+        }
+        sweep.for_each_item(active.len(), &|k| {
+            let mut guard = states[active[k]].lock().unwrap();
+            let st = guard.as_mut().unwrap();
+            for _ in 0..BATCH_ROUND_ITERS {
+                let it = st.trace.fits.len();
+                if it >= opts.max_iters {
+                    st.done = true;
+                    break;
+                }
+                // Item kernels stay on the serial reference — the exact
+                // engine the solo path runs each small decomposition on —
+                // so batching changes no operand, order, or rounding.
+                let step = (|| -> Result<()> {
+                    st.model.a =
+                        mode_update(&st.x1, 1, &st.model.c, &st.model.b, opts.ridge, &SerialBackend)?;
+                    st.model.b =
+                        mode_update(&st.x2, 2, &st.model.c, &st.model.a, opts.ridge, &SerialBackend)?;
+                    st.model.c =
+                        mode_update(&st.x3, 3, &st.model.b, &st.model.a, opts.ridge, &SerialBackend)?;
+                    Ok(())
+                })();
+                if let Err(e) = step {
+                    st.error = Some(e);
+                    st.done = true;
+                    break;
+                }
+                let fit = fit_dense(st.norm_x, &st.x1, &st.model, &SerialBackend);
+                st.trace.fits.push(fit);
+                st.trace.iters = it + 1;
+                if (fit - st.prev_fit).abs() < opts.tol && it > 0 {
+                    st.trace.converged = true;
+                    st.done = true;
+                    break;
+                }
+                st.prev_fit = fit;
+            }
+        });
+    }
+
+    states
+        .into_iter()
+        .map(|m| {
+            let st = m.into_inner().unwrap().unwrap();
+            match st.error {
+                Some(e) => Err(e),
+                None => Ok((st.model, st.trace)),
+            }
+        })
+        .collect()
+}
+
 /// Sparse direct ALS on the serial reference backend.
 pub fn als_decompose_sparse(t: &SparseTensor, opts: &AlsOptions) -> Result<(CpModel, AlsTrace)> {
     als_decompose_sparse_with(t, opts, &SerialBackend)
@@ -322,6 +463,71 @@ mod tests {
         let (m_par, _) = als_decompose_with(&t, &opts, &be).unwrap();
         assert!(m_ser.to_tensor().rel_error(&t) < 1e-3);
         assert!(m_par.to_tensor().rel_error(&t) < 1e-3);
+    }
+
+    #[test]
+    fn batch_matches_solo_bitwise_across_sizes() {
+        use crate::linalg::CpuParallelBackend;
+        // Mixed difficulty on purpose: even items are exact low-rank
+        // (converge early), odd items carry noise (run longer) — the
+        // convergence mask must retire the early finishers without
+        // perturbing anyone else's floats.
+        for &n in &[1usize, 3, 16] {
+            let tensors: Vec<DenseTensor> = (0..n)
+                .map(|i| {
+                    let (mut t, _) = planted([8, 7, 6], 2, 200 + i as u64);
+                    if i % 2 == 1 {
+                        let mut rng = Xoshiro256::seed_from_u64(300 + i as u64);
+                        for x in t.data_mut() {
+                            *x += 0.05 * rng.next_gaussian() as f32;
+                        }
+                    }
+                    t
+                })
+                .collect();
+            let opts = AlsOptions {
+                rank: 2,
+                max_iters: 40,
+                tol: 1e-9,
+                ..Default::default()
+            };
+            let items: Vec<AlsBatchItem<'_>> = tensors
+                .iter()
+                .enumerate()
+                .map(|(i, t)| AlsBatchItem { tensor: t, seed: 77 + i as u64 })
+                .collect();
+            let pool_sweep = CpuParallelBackend::new(4).with_min_par_flops(0);
+            let batched = als_batch(&items, &opts, &pool_sweep);
+            let serial_sweep = als_batch(&items, &opts, &SerialBackend);
+            for (i, t) in tensors.iter().enumerate() {
+                let (solo_m, solo_tr) = als_decompose_with(
+                    t,
+                    &AlsOptions { seed: 77 + i as u64, ..opts.clone() },
+                    &SerialBackend,
+                )
+                .unwrap();
+                for arm in [&batched[i], &serial_sweep[i]] {
+                    let (m, tr) = arm.as_ref().unwrap();
+                    assert_eq!(m.a, solo_m.a, "n={n} item {i}: factor A must be bitwise solo");
+                    assert_eq!(m.b, solo_m.b, "n={n} item {i}: factor B must be bitwise solo");
+                    assert_eq!(m.c, solo_m.c, "n={n} item {i}: factor C must be bitwise solo");
+                    assert_eq!(tr.iters, solo_tr.iters, "n={n} item {i}");
+                    assert_eq!(tr.converged, solo_tr.converged, "n={n} item {i}");
+                    assert_eq!(tr.fits, solo_tr.fits, "n={n} item {i}");
+                }
+            }
+            // The mix really does finish at different sweeps (the mask ran).
+            if n >= 3 {
+                let iters: Vec<usize> = batched
+                    .iter()
+                    .map(|r| r.as_ref().unwrap().1.iters)
+                    .collect();
+                assert!(
+                    iters.iter().min() < iters.iter().max(),
+                    "expected mixed convergence, got {iters:?}"
+                );
+            }
+        }
     }
 
     #[test]

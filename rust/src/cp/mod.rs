@@ -9,8 +9,8 @@ pub mod model;
 pub mod tucker;
 
 pub use als::{
-    als_decompose, als_decompose_sparse, als_decompose_sparse_with, als_decompose_with,
-    AlsOptions, AlsTrace,
+    als_batch, als_decompose, als_decompose_sparse, als_decompose_sparse_with,
+    als_decompose_with, AlsBatchItem, AlsOptions, AlsTrace,
 };
 pub use error::{factor_congruence, model_congruence, sampled_mse, SampledError};
 pub use init::{hosvd_init, random_init, InitMethod};

@@ -166,6 +166,20 @@ pub trait ComputeBackend: Send + Sync {
         hadamard(&self.gram(slow), &self.gram(fast))
     }
 
+    /// Fans `n` **independent** work items out across the backend's
+    /// residency: `f(i)` runs exactly once for every `i in 0..n`.  This is
+    /// the batched-ALS sweep's coalescing primitive — one pool scope (one
+    /// thread wake-up) covers a whole batch of small decompositions instead
+    /// of each job paying its own.  Items must not depend on each other:
+    /// the serial default runs them in index order, parallel backends in
+    /// any order — item-local results are identical either way, which is
+    /// what the batch lane's bitwise-identity guarantee rests on.
+    fn for_each_item(&self, n: usize, f: &(dyn Fn(usize) + Sync)) {
+        for i in 0..n {
+            f(i);
+        }
+    }
+
     /// Stage hook: a backend owning a fused block-compression kernel (the
     /// XLA `ttm_chain` artifact) exposes it here; CPU backends return
     /// `None` and the pipeline composes the generic chain from `gemm`.
@@ -435,6 +449,23 @@ impl ComputeBackend for CpuParallelBackend {
             }
         });
     }
+
+    /// One pool scope for the whole batch: items drain the shared queue
+    /// across the pool's workers, so each worker's thread-local pack arena
+    /// is reused across every item it picks up.
+    fn for_each_item(&self, n: usize, f: &(dyn Fn(usize) + Sync)) {
+        if self.pool.size() == 1 || n <= 1 {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        self.pool.scope(|scope| {
+            for i in 0..n {
+                scope.spawn(move || f(i));
+            }
+        });
+    }
 }
 
 /// Backend handle threaded through the pipeline stages.
@@ -538,6 +569,24 @@ mod tests {
         for (a, c) in a_list.iter().zip(&batch) {
             let want = SerialBackend.matmul(a, Trans::No, &b, Trans::No);
             close(c, &want, 1e-6);
+        }
+    }
+
+    #[test]
+    fn for_each_item_covers_every_index_once_serial_and_parallel() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        for be in [&SerialBackend as &dyn ComputeBackend, &par()] {
+            for n in [0usize, 1, 2, 7, 33] {
+                let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+                be.for_each_item(n, &|i| {
+                    hits[i].fetch_add(1, Ordering::SeqCst);
+                });
+                assert!(
+                    hits.iter().all(|h| h.load(Ordering::SeqCst) == 1),
+                    "{} n={n}",
+                    be.name()
+                );
+            }
         }
     }
 

@@ -438,6 +438,19 @@ fn serve_cmd() -> Command {
              'seed=7;worker_panic:period=1,max=1,key=3'",
             None,
         )
+        .opt(
+            "batch-threshold-mb",
+            "batch lane: jobs whose plan costs at most this coalesce into \
+             shared ALS sweeps (0 = lane off)",
+            Some("0"),
+        )
+        .opt("batch-max-jobs", "max jobs per coalesced sweep", Some("32"))
+        .opt(
+            "tenant-quota",
+            "per-tenant concurrent-job cap enforced by the batch lane \
+             (0 = unlimited)",
+            Some("0"),
+        )
         .switch("help", "show help")
 }
 
@@ -470,6 +483,9 @@ fn cmd_serve(prog: &str, args: &[String]) -> i32 {
                 starvation_rounds: m.get_u64("starvation-rounds")?,
                 max_retries: m.get_usize("max-retries")? as u32,
                 poison_threshold: m.get_usize("poison-threshold")? as u32,
+                batch_threshold_bytes: m.get_usize("batch-threshold-mb")? * (1 << 20),
+                batch_max_jobs: m.get_usize("batch-max-jobs")?,
+                tenant_quota: m.get_usize("tenant-quota")?,
                 ..Default::default()
             },
             conn_timeout_ms: m.get_u64("conn-timeout-ms")?,
@@ -495,10 +511,11 @@ fn cmd_serve(prog: &str, args: &[String]) -> i32 {
 fn client_cmd() -> Command {
     Command::new(
         "client",
-        "talk to a running daemon: submit|status|result|cancel|metrics|shutdown",
+        "talk to a running daemon: submit|status|result|cancel|list|metrics|shutdown",
     )
     .opt("addr", "daemon address", Some("127.0.0.1:7077"))
     .opt("id", "job id (status/result/cancel)", None)
+    .opt("tenant", "owning tenant for fair-share accounting (submit)", None)
     .opt("size", "synthetic tensor side I=J=K", Some("200"))
     .opt("source-rank", "planted generator rank (default: --rank)", None)
     .opt("noise", "synthetic additive noise sigma", Some("0"))
@@ -575,11 +592,13 @@ fn cmd_client(prog: &str, args: &[String]) -> i32 {
                     source,
                     config,
                     priority: m.get_f64("priority")? as i64,
+                    tenant: m.get("tenant").unwrap_or("").to_string(),
                 })
             }
             "status" => Request::Status(want_id()?),
             "result" => Request::Result(want_id()?),
             "cancel" => Request::Cancel(want_id()?),
+            "list" => Request::List,
             "metrics" => Request::Metrics,
             "shutdown" => Request::Shutdown,
             other => anyhow::bail!("unknown client verb '{other}'"),

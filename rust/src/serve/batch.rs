@@ -1,0 +1,239 @@
+//! Batch-lane policy: which jobs may coalesce, what "compatible" means,
+//! and the multi-tenant fair-share state that keeps one flooding tenant
+//! from monopolizing the lane.
+//!
+//! The lane itself lives in [`super::scheduler`]: per admission tick it
+//! gathers compatible small jobs into one shared sweep
+//! ([`crate::coordinator::run_batch_group`]), which runs their ALS
+//! iterations through a single coalesced `als_batch` dispatch.  This
+//! module holds the pure policy pieces so they can be property-tested
+//! without a daemon:
+//!
+//! * [`lane_eligible`] — the threshold rule: a job rides the lane iff the
+//!   lane is on (`--batch-threshold-mb > 0`), its planner-priced
+//!   `plan_bytes` fits under the cutoff, and it runs the plain dense
+//!   pipeline (no sensing variant, no XLA stage hooks).  Everything else
+//!   keeps the existing per-job admission path untouched.
+//! * [`compat_key`] — jobs coalesce only when their ALS sweeps are
+//!   config-identical: same rank, same iteration budget, same tolerance
+//!   (bit pattern, so `compat_key` equality is exact).
+//! * [`DrrState`] — deficit-round-robin fair share across tenants with
+//!   capped aging, so a tenant flooding thousands of small jobs shares the
+//!   lane ~evenly with every other tenant that has work waiting, and a
+//!   briefly-absent tenant re-enters within [`DRR_DEFICIT_CAP`] slots.
+
+use super::job::JobRecord;
+use crate::coordinator::config::Backend;
+use std::collections::BTreeMap;
+
+/// Compatibility key for coalescing: two jobs may share one sweep iff
+/// their `(rank, als_iters, als_tol)` agree exactly (tolerance compared by
+/// bit pattern).  Tensor dims may differ — each item keeps its own
+/// unfoldings — only the sweep-shaping config must match.
+pub fn compat_key(rec: &JobRecord) -> (usize, usize, u64) {
+    let c = &rec.spec.config;
+    (c.rank, c.als_iters, c.als_tol.to_bits())
+}
+
+/// The threshold rule: may this job ride the batch lane at all?
+///
+/// `threshold_bytes == 0` means the lane is off (the default), so every
+/// job keeps the existing per-job path.  Jobs above the cutoff, sensing
+/// jobs, and XLA-backend jobs (whose proxy ALS goes through the backend's
+/// stage hook, not the in-crate sweep) are likewise solo.
+pub fn lane_eligible(rec: &JobRecord, threshold_bytes: usize) -> bool {
+    threshold_bytes > 0
+        && rec.plan_bytes <= threshold_bytes
+        && rec.spec.config.sensing.is_none()
+        && !matches!(rec.spec.config.backend, Backend::Xla)
+}
+
+/// Credit a tenant earns per admission slot in which it has work waiting.
+pub const DRR_QUANTUM: u64 = 1;
+
+/// Deficit cap — the aging bound.  A tenant's banked credit never exceeds
+/// this, so (a) no tenant can hoard unbounded priority, and (b) any tenant
+/// with work waiting is served within `DRR_DEFICIT_CAP` slots of the
+/// fair-share schedule no matter how large a competitor's flood is.
+pub const DRR_DEFICIT_CAP: u64 = 8;
+
+/// Deficit-round-robin state across tenants (classic DRR with unit-cost
+/// jobs): every tenant with waiting work earns [`DRR_QUANTUM`] per slot
+/// (capped at [`DRR_DEFICIT_CAP`]), the largest deficit is served and
+/// charged one unit, and — as in textbook DRR — a tenant's deficit resets
+/// when it has nothing queued.
+///
+/// Deficit ties are broken **least-recently-served first**, not by queue
+/// order.  The distinction is load-bearing: two tenants both pinned at
+/// the deficit cap tie on *every* slot (the winner's one-unit charge is
+/// re-credited next slot), so a queue-order tie-break would hand every
+/// saturated slot to whichever tenant holds the queue front — the
+/// flooding tenant — and starve the rest.  LRS ties make saturated
+/// tenants strictly alternate.
+#[derive(Debug, Default)]
+pub struct DrrState {
+    deficits: BTreeMap<String, u64>,
+    /// Virtual timestamp of each tenant's last admission (0 = never):
+    /// the tie-break rank.  Pruned with `deficits` when a tenant has
+    /// nothing waiting, so a returning tenant re-enters as "never
+    /// served" and wins its first saturated tie immediately.
+    last_served: BTreeMap<String, u64>,
+    clock: u64,
+}
+
+impl DrrState {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Picks which of `tenants` (the queued candidates' tenants, in queue
+    /// order) to admit next, returning the winning candidate's index.
+    ///
+    /// Every distinct tenant present is credited one quantum first; the
+    /// largest deficit wins, ties going to the least recently served
+    /// tenant (never-served first, then queue order).  The winner is
+    /// charged one unit, and tenants with nothing waiting are forgotten —
+    /// their deficit restarts from zero when they return.
+    pub fn pick(&mut self, tenants: &[&str]) -> Option<usize> {
+        if tenants.is_empty() {
+            return None;
+        }
+        let mut distinct: Vec<&str> = Vec::new();
+        for &t in tenants {
+            if !distinct.contains(&t) {
+                distinct.push(t);
+            }
+        }
+        self.deficits.retain(|t, _| distinct.contains(&t.as_str()));
+        self.last_served.retain(|t, _| distinct.contains(&t.as_str()));
+        for &t in &distinct {
+            let d = self.deficits.entry(t.to_string()).or_insert(0);
+            *d = (*d + DRR_QUANTUM).min(DRR_DEFICIT_CAP);
+        }
+        let mut winner = distinct[0];
+        for &t in &distinct[1..] {
+            let (d, ls) = (self.deficits[t], self.last_served.get(t).copied().unwrap_or(0));
+            let (bd, bls) = (
+                self.deficits[winner],
+                self.last_served.get(winner).copied().unwrap_or(0),
+            );
+            if d > bd || (d == bd && ls < bls) {
+                winner = t;
+            }
+        }
+        self.clock += 1;
+        self.last_served.insert(winner.to_string(), self.clock);
+        let d = self.deficits.get_mut(winner).unwrap();
+        *d = d.saturating_sub(1);
+        tenants.iter().position(|&t| t == winner)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::PipelineConfig;
+    use crate::serve::job::{JobSource, JobSpec, JobState};
+
+    fn rec(plan_bytes: usize, rank: usize) -> JobRecord {
+        JobRecord {
+            id: "job-000001".into(),
+            seq: 1,
+            spec: JobSpec {
+                source: JobSource::Synthetic { size: 16, rank: 2, noise: 0.0, seed: 1 },
+                config: PipelineConfig::builder()
+                    .reduced_dims(8, 8, 8)
+                    .rank(rank)
+                    .anchor_rows(4)
+                    .build()
+                    .unwrap(),
+                priority: 0,
+                tenant: String::new(),
+            },
+            state: JobState::Queued,
+            plan_bytes,
+            cache_key: String::new(),
+            cancel_requested: false,
+            resolved_solver: None,
+            attempts: 0,
+            panics: 0,
+            error: None,
+            outcome: None,
+        }
+    }
+
+    #[test]
+    fn eligibility_follows_threshold_rule() {
+        let r = rec(1 << 20, 2);
+        assert!(!lane_eligible(&r, 0), "lane off by default");
+        assert!(lane_eligible(&r, 2 << 20));
+        assert!(!lane_eligible(&r, 1 << 19), "over the cutoff");
+        let mut sensing = rec(1 << 20, 2);
+        sensing.spec.config.sensing = Some(crate::coordinator::SensingConfig {
+            alpha: 2.0,
+            nnz_per_col: 8,
+            lambda: 0.01,
+        });
+        assert!(!lane_eligible(&sensing, 2 << 20), "sensing jobs stay solo");
+        let mut xla = rec(1 << 20, 2);
+        xla.spec.config.backend = Backend::Xla;
+        assert!(!lane_eligible(&xla, 2 << 20), "XLA jobs stay solo");
+    }
+
+    #[test]
+    fn compat_key_separates_sweep_configs() {
+        assert_eq!(compat_key(&rec(1, 2)), compat_key(&rec(999, 2)));
+        assert_ne!(compat_key(&rec(1, 2)), compat_key(&rec(1, 3)));
+        let mut other_tol = rec(1, 2);
+        other_tol.spec.config.als_tol *= 2.0;
+        assert_ne!(compat_key(&rec(1, 2)), compat_key(&other_tol));
+    }
+
+    #[test]
+    fn lone_tenant_always_served() {
+        let mut drr = DrrState::new();
+        for _ in 0..100 {
+            assert_eq!(drr.pick(&["solo", "solo", "solo"]), Some(0));
+        }
+        assert_eq!(drr.pick(&[]), None);
+    }
+
+    /// The satellite property test: a 1000-job flood from tenant A cannot
+    /// starve tenant B beyond the aging bound — B's i-th admission happens
+    /// within `2·i + DRR_DEFICIT_CAP` slots of B having work queued.
+    #[test]
+    fn flood_cannot_starve_minority_tenant_beyond_aging_bound() {
+        let mut drr = DrrState::new();
+        // Both tenants keep work queued for all 200 measured slots (a
+        // drained tenant rightly stops competing), so the even-share
+        // assertion below is about fairness, not queue exhaustion.
+        let mut queue: Vec<&str> = vec!["A"; 1000];
+        queue.extend(std::iter::repeat("B").take(200));
+        let mut b_admitted = 0usize;
+        for slot in 1..=200usize {
+            let idx = drr.pick(&queue).unwrap();
+            let picked = queue.remove(idx);
+            if picked == "B" {
+                b_admitted += 1;
+                assert!(
+                    slot <= 2 * b_admitted + DRR_DEFICIT_CAP as usize,
+                    "B admission #{b_admitted} only came at slot {slot}"
+                );
+            }
+        }
+        // Two tenants with work waiting share the lane ~evenly.
+        assert!(
+            (90..=110).contains(&(200 - b_admitted)),
+            "A got {} of 200 slots",
+            200 - b_admitted
+        );
+        // Aging is capped: a tenant absent for ages re-enters with at most
+        // DRR_DEFICIT_CAP banked credit, not one per missed slot.
+        let mut drr = DrrState::new();
+        for _ in 0..100 {
+            drr.pick(&["A", "C"]); // C waits un-served only if A out-deficits it
+        }
+        let banked = drr.deficits.get("C").copied().unwrap_or(0);
+        assert!(banked <= DRR_DEFICIT_CAP, "banked {banked}");
+    }
+}

@@ -281,6 +281,7 @@ mod tests {
                 .build()
                 .unwrap(),
             priority: 0,
+            tenant: String::new(),
         }
     }
 

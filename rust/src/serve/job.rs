@@ -131,15 +131,25 @@ pub struct JobSpec {
     pub config: PipelineConfig,
     /// Higher runs first; ties break FIFO by submission order.
     pub priority: i64,
+    /// Owning tenant for fair-share accounting (batch-lane quotas and
+    /// deficit-round-robin aging).  Empty means the anonymous default
+    /// tenant.  Like `priority`, this is scheduling metadata: it is NOT
+    /// part of the result-cache key, so identical work from different
+    /// tenants still shares cache entries.
+    pub tenant: String,
 }
 
 impl JobSpec {
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("source", self.source.to_json()),
             ("config", self.config.to_json()),
             ("priority", Json::num(self.priority as f64)),
-        ])
+        ];
+        if !self.tenant.is_empty() {
+            pairs.push(("tenant", Json::str(self.tenant.clone())));
+        }
+        Json::obj(pairs)
     }
 
     pub fn from_json(v: &Json) -> Result<JobSpec> {
@@ -147,6 +157,11 @@ impl JobSpec {
             source: JobSource::from_json(v.get("source").context("spec missing source")?)?,
             config: PipelineConfig::from_json(v.get("config").context("spec missing config")?)?,
             priority: v.get("priority").and_then(|x| x.as_f64()).unwrap_or(0.0) as i64,
+            tenant: v
+                .get("tenant")
+                .and_then(|x| x.as_str())
+                .unwrap_or("")
+                .to_string(),
         })
     }
 }
@@ -453,6 +468,7 @@ mod tests {
                 .build()
                 .unwrap(),
             priority: 3,
+            tenant: "acme".into(),
         }
     }
 
@@ -496,8 +512,16 @@ mod tests {
         assert!(back.cancel_requested, "cancel flag survives the round trip");
         assert_eq!(back.outcome, rec.outcome);
         assert_eq!(back.spec.priority, 3);
+        assert_eq!(back.spec.tenant, "acme", "tenant survives the round trip");
         assert_eq!(back.spec.source, rec.spec.source);
         assert_eq!(back.spec.config.reduced, [8, 8, 8]);
+        // Legacy specs (no tenant key) default to the anonymous tenant, and
+        // the anonymous tenant is not emitted at all.
+        let mut anon = rec.spec.clone();
+        anon.tenant = String::new();
+        let spec_json = anon.to_json();
+        assert!(spec_json.get("tenant").is_none(), "empty tenant stays implicit");
+        assert_eq!(JobSpec::from_json(&spec_json).unwrap().tenant, "");
         assert_eq!(back.resolved_solver, Some(RecoverySolverKind::Cholesky));
         // Legacy records (no resolved_solver key) default to None.
         let mut legacy = rec.to_json();

@@ -12,18 +12,24 @@
 //! Module map:
 //!
 //! * [`job`]       — job model + lifecycle + the crash-safe JSON spool.
-//! * [`scheduler`] — priority/FIFO queue, admission control, worker pool.
+//! * [`scheduler`] — priority/FIFO queue, admission control, worker pool,
+//!   and the batch lane that coalesces compatible small jobs into one
+//!   shared ALS sweep.
+//! * [`batch`]     — batch-lane policy: eligibility threshold, sweep
+//!   compatibility key, deficit-round-robin tenant fair share.
 //! * [`cache`]     — tensor fingerprinting + LRU byte-budget result cache.
 //! * [`protocol`]  — the wire format (`SUBMIT`/`STATUS`/`RESULT`/`CANCEL`/
-//!   `METRICS`/`SHUTDOWN`) and the one-shot client.
+//!   `LIST`/`METRICS`/`SHUTDOWN`) and the one-shot client.
 //! * [`server`]    — the TCP accept loop + graceful drain.
 
+pub mod batch;
 pub mod cache;
 pub mod job;
 pub mod protocol;
 pub mod scheduler;
 pub mod server;
 
+pub use batch::{compat_key, lane_eligible, DrrState};
 pub use cache::{cache_key, file_fingerprint, model_digest, CachedResult, ResultCache};
 pub use job::{JobId, JobOutcome, JobRecord, JobSource, JobSpec, JobState, Spool};
 pub use protocol::Request;

@@ -2,8 +2,11 @@
 //!
 //! One request per line, one response per line; a connection may carry any
 //! number of request/response pairs.  Requests are objects with a `cmd`
-//! field (`SUBMIT`, `STATUS`, `RESULT`, `CANCEL`, `METRICS`, `SHUTDOWN`);
-//! responses always carry `"ok": true|false` and, on failure, `"error"`.
+//! field (`SUBMIT`, `STATUS`, `RESULT`, `CANCEL`, `LIST`, `METRICS`,
+//! `SHUTDOWN`); responses always carry `"ok": true|false` and, on failure,
+//! `"error"`.  `LIST` returns a one-line summary per known job —
+//! id/state/tenant/priority — for fleet dashboards that must not pull
+//! every record's full spec.
 //!
 //! ```text
 //! → {"cmd":"SUBMIT","spec":{"source":{...},"config":{...},"priority":0}}
@@ -25,6 +28,8 @@ pub enum Request {
     Status(JobId),
     Result(JobId),
     Cancel(JobId),
+    /// Summaries of every known job (id, state, tenant, priority).
+    List,
     Metrics,
     Shutdown,
 }
@@ -45,6 +50,7 @@ impl Request {
             Request::Cancel(id) => {
                 Json::obj(vec![("cmd", Json::str("CANCEL")), ("id", Json::str(id.clone()))])
             }
+            Request::List => Json::obj(vec![("cmd", Json::str("LIST"))]),
             Request::Metrics => Json::obj(vec![("cmd", Json::str("METRICS"))]),
             Request::Shutdown => Json::obj(vec![("cmd", Json::str("SHUTDOWN"))]),
         }
@@ -64,6 +70,7 @@ impl Request {
             Some("STATUS") => Ok(Request::Status(id()?)),
             Some("RESULT") => Ok(Request::Result(id()?)),
             Some("CANCEL") => Ok(Request::Cancel(id()?)),
+            Some("LIST") => Ok(Request::List),
             Some("METRICS") => Ok(Request::Metrics),
             Some("SHUTDOWN") => Ok(Request::Shutdown),
             other => bail!("unknown cmd {other:?}"),
@@ -230,12 +237,14 @@ mod tests {
                 .build()
                 .unwrap(),
             priority: 1,
+            tenant: "acme".into(),
         };
         for req in [
             Request::Submit(spec),
             Request::Status("job-000001".into()),
             Request::Result("job-000002".into()),
             Request::Cancel("job-000003".into()),
+            Request::List,
             Request::Metrics,
             Request::Shutdown,
         ] {

@@ -76,6 +76,18 @@ pub struct SchedulerConfig {
     /// Base retry backoff in milliseconds (doubled per prior attempt,
     /// capped at 5 s).
     pub retry_backoff_ms: u64,
+    /// **Batch lane** threshold in bytes: when an admitted job's plan
+    /// costs at most this, compatible queued jobs (same
+    /// [`compat_key`](super::batch::compat_key)) coalesce with it into one
+    /// shared ALS sweep occupying a single worker.  0 disables the lane
+    /// (the default): every job keeps the per-job path.
+    pub batch_threshold_bytes: usize,
+    /// Max jobs per coalesced sweep (values below 2 disable coalescing).
+    pub batch_max_jobs: usize,
+    /// Per-tenant cap on concurrently running jobs enforced by the lane
+    /// extension (0 = unlimited).  Candidates deferred by the cap stay
+    /// queued and are counted in `tenant_quota_deferrals`.
+    pub tenant_quota: usize,
 }
 
 impl Default for SchedulerConfig {
@@ -88,6 +100,9 @@ impl Default for SchedulerConfig {
             max_retries: 2,
             poison_threshold: 2,
             retry_backoff_ms: 50,
+            batch_threshold_bytes: 0,
+            batch_max_jobs: 32,
+            tenant_quota: 0,
         }
     }
 }
@@ -114,6 +129,10 @@ struct State {
     /// instant (in-memory only — a restart retries immediately, which is
     /// correct: the daemon restart IS the backoff).
     not_before: BTreeMap<JobId, Instant>,
+    /// Batch-lane fair share across tenants (in-memory: fairness restarts
+    /// clean with the daemon, which is fine — deficits only age within a
+    /// contention episode).
+    drr: super::batch::DrrState,
     next_seq: u64,
     shutting_down: bool,
 }
@@ -127,6 +146,9 @@ struct Inner {
     max_retries: u32,
     poison_threshold: u32,
     retry_backoff_ms: u64,
+    batch_threshold_bytes: usize,
+    batch_max_jobs: usize,
+    tenant_quota: usize,
     state: Mutex<State>,
     cv: Condvar,
 }
@@ -155,6 +177,7 @@ impl Scheduler {
             deferred_seen: BTreeSet::new(),
             head_block: None,
             not_before: BTreeMap::new(),
+            drr: super::batch::DrrState::new(),
             next_seq: 1,
             shutting_down: false,
         };
@@ -221,6 +244,9 @@ impl Scheduler {
             max_retries: cfg.max_retries,
             poison_threshold: cfg.poison_threshold.max(1),
             retry_backoff_ms: cfg.retry_backoff_ms,
+            batch_threshold_bytes: cfg.batch_threshold_bytes,
+            batch_max_jobs: cfg.batch_max_jobs,
+            tenant_quota: cfg.tenant_quota,
             state: Mutex::new(state),
             cv: Condvar::new(),
         });
@@ -285,6 +311,7 @@ impl Scheduler {
                     source: spec.source,
                     config: cfg,
                     priority: spec.priority,
+                    tenant: spec.tenant,
                 },
                 state: JobState::Submitted,
                 plan_bytes: plan.estimated_bytes,
@@ -481,6 +508,26 @@ impl Scheduler {
     }
 }
 
+/// Splits a `catch_unwind` result into the run's own outcome plus a
+/// did-it-panic flag, rendering the panic payload into the job error.
+fn unwrap_panic<T>(
+    r: std::thread::Result<Result<T>>,
+) -> (Result<T>, bool) {
+    match r {
+        Ok(r) => (r, false),
+        Err(p) => {
+            let what = if let Some(s) = p.downcast_ref::<&str>() {
+                (*s).to_string()
+            } else if let Some(s) = p.downcast_ref::<String>() {
+                s.clone()
+            } else {
+                "see daemon log".to_string()
+            };
+            (Err(anyhow::anyhow!("job panicked: {what}")), true)
+        }
+    }
+}
+
 /// Priority desc, then FIFO by sequence.
 fn sort_queue(queue: &mut [JobId], records: &BTreeMap<JobId, JobRecord>) {
     queue.sort_by_key(|id| {
@@ -489,9 +536,16 @@ fn sort_queue(queue: &mut [JobId], records: &BTreeMap<JobId, JobRecord>) {
     });
 }
 
+/// What one worker wakeup admitted: a single job, or a coalesced batch of
+/// compatible small jobs that will share one ALS sweep on this worker.
+enum Picked {
+    Solo(JobId, JobRecord),
+    Batch(Vec<(JobId, JobRecord)>),
+}
+
 fn worker_loop(inner: Arc<Inner>) {
     loop {
-        let (id, snapshot) = {
+        let picked = {
             let mut st = inner.state.lock().unwrap();
             loop {
                 if st.shutting_down {
@@ -514,13 +568,25 @@ fn worker_loop(inner: Arc<Inner>) {
                 st = inner.cv.wait_timeout(st, timeout).unwrap().0;
             }
         };
-        // Persist the queued→running transition off the state lock (the
+        // Persist the queued→running transitions off the state lock (the
         // in-memory record is authoritative; spool writes must not stall
         // protocol reads or peer admissions).
-        if let Err(e) = inner.spool.save(&snapshot) {
-            log::warn!("spool: persisting {id} running: {e:#}");
+        match picked {
+            Picked::Solo(id, snapshot) => {
+                if let Err(e) = inner.spool.save(&snapshot) {
+                    log::warn!("spool: persisting {id} running: {e:#}");
+                }
+                inner.run_job(&id);
+            }
+            Picked::Batch(members) => {
+                for (id, snapshot) in &members {
+                    if let Err(e) = inner.spool.save(snapshot) {
+                        log::warn!("spool: persisting {id} running: {e:#}");
+                    }
+                }
+                inner.run_batch(&members);
+            }
         }
-        inner.run_job(&id);
         // A completion frees budget: wake peers blocked on admission.
         inner.cv.notify_all();
     }
@@ -542,9 +608,17 @@ impl Inner {
     /// (the documented PR 4 trade-off, now bounded).  Safe from deadlock:
     /// submission clamps every plan to the global budget, so the head
     /// always fits an empty budget, which the drain reaches.
-    /// Returns the picked id plus a record snapshot for the caller to
+    /// **Batch lane**: when the anchor pick is lane-eligible (see
+    /// [`super::batch::lane_eligible`]) and no blocked head holds an
+    /// anti-starvation reservation, compatible queued jobs are coalesced
+    /// with it — budget-checked, per-tenant-quota-checked, ordered by
+    /// deficit-round-robin fair share — into one [`Picked::Batch`] that a
+    /// single worker runs as one shared sweep.  Big jobs and backfill
+    /// admissions keep the per-job path untouched.
+    ///
+    /// Returns the picked id(s) plus record snapshots for the caller to
     /// persist off-lock.
-    fn pick_admissible(&self, st: &mut State) -> Option<(JobId, JobRecord)> {
+    fn pick_admissible(&self, st: &mut State) -> Option<Picked> {
         let mut chosen = None;
         let mut deferred_bytes = 0u64;
         let mut reservation_hold = false;
@@ -612,8 +686,110 @@ impl Inner {
         let rec = st.records.get_mut(&id).unwrap();
         rec.state = JobState::Running;
         let snapshot = rec.clone();
+        let members = self.extend_batch(st, &id, &snapshot, now);
         self.sync_gauges(st);
-        Some((id, snapshot))
+        match members {
+            Some(members) => Some(Picked::Batch(members)),
+            None => Some(Picked::Solo(id, snapshot)),
+        }
+    }
+
+    /// Tries to grow the freshly admitted anchor job into a coalesced
+    /// batch.  Returns `Some(members)` (anchor first, all already marked
+    /// running and budget-charged) when at least one compatible job
+    /// joined, `None` to run the anchor solo.
+    ///
+    /// Constraints honored per extension member:
+    /// * lane on, anchor and member lane-eligible, identical `compat_key`;
+    /// * no anti-starvation reservation in progress (`head_block` empty:
+    ///   extending past a blocked head would spend backfill rounds the
+    ///   reservation accounting never sees);
+    /// * member's plan fits the remaining admission budget;
+    /// * member's tenant below the in-flight quota (deferrals counted in
+    ///   `tenant_quota_deferrals`);
+    /// * member not waiting out a retry backoff;
+    /// * candidate order decided by deficit-round-robin fair share, so a
+    ///   tenant flooding small jobs shares the lane with everyone else.
+    fn extend_batch(
+        &self,
+        st: &mut State,
+        anchor_id: &JobId,
+        anchor: &JobRecord,
+        now: Instant,
+    ) -> Option<Vec<(JobId, JobRecord)>> {
+        if self.batch_threshold_bytes == 0
+            || self.batch_max_jobs < 2
+            || st.head_block.is_some()
+            || !super::batch::lane_eligible(anchor, self.batch_threshold_bytes)
+        {
+            return None;
+        }
+        let key = super::batch::compat_key(anchor);
+        // Per-tenant in-flight counts (the anchor is already in `running`).
+        let mut in_flight: BTreeMap<String, usize> = BTreeMap::new();
+        for rid in st.running.keys() {
+            *in_flight
+                .entry(st.records[rid].spec.tenant.clone())
+                .or_insert(0) += 1;
+        }
+        // The compatible candidate pool, in queue (priority/FIFO) order.
+        let mut pool: Vec<JobId> = st
+            .queue
+            .iter()
+            .filter(|qid| {
+                !st.not_before.get(*qid).map_or(false, |t| *t > now)
+                    && super::batch::lane_eligible(&st.records[*qid], self.batch_threshold_bytes)
+                    && super::batch::compat_key(&st.records[*qid]) == key
+            })
+            .cloned()
+            .collect();
+        let mut members = vec![(anchor_id.clone(), anchor.clone())];
+        while members.len() < self.batch_max_jobs && !pool.is_empty() {
+            // Tenants at their in-flight quota sit the sweep out; each
+            // deferred candidate is counted once (it stays queued and will
+            // anchor or join a later sweep).
+            if self.tenant_quota > 0 {
+                let before = pool.len();
+                pool.retain(|qid| {
+                    in_flight
+                        .get(&st.records[qid].spec.tenant)
+                        .map_or(true, |n| *n < self.tenant_quota)
+                });
+                let deferred = before - pool.len();
+                if deferred > 0 {
+                    self.metrics.incr("tenant_quota_deferrals", deferred as u64);
+                }
+            }
+            if self.budget > 0 {
+                pool.retain(|qid| st.used_bytes + st.records[qid].plan_bytes <= self.budget);
+            }
+            if pool.is_empty() {
+                break;
+            }
+            let tenants: Vec<&str> = pool
+                .iter()
+                .map(|qid| st.records[qid].spec.tenant.as_str())
+                .collect();
+            let Some(k) = st.drr.pick(&tenants) else { break };
+            let qid = pool.remove(k);
+            st.queue.retain(|x| x != &qid);
+            st.deferred_seen.remove(&qid);
+            st.not_before.remove(&qid);
+            let pb = st.records[&qid].plan_bytes;
+            st.used_bytes += pb;
+            st.used_bytes_peak = st.used_bytes_peak.max(st.used_bytes);
+            st.running.insert(qid.clone(), pb);
+            st.running_peak = st.running_peak.max(st.running.len());
+            let rec = st.records.get_mut(&qid).unwrap();
+            rec.state = JobState::Running;
+            *in_flight.entry(rec.spec.tenant.clone()).or_insert(0) += 1;
+            members.push((qid.clone(), rec.clone()));
+        }
+        if members.len() > 1 {
+            Some(members)
+        } else {
+            None
+        }
     }
 
     fn run_job(&self, id: &str) {
@@ -657,21 +833,7 @@ impl Inner {
             let src = rec.spec.source.open()?;
             let mut pipe = Pipeline::new(rec.spec.config.clone());
             let res = pipe.run(src.as_ref())?;
-            // Fold the per-job pipeline counters into the daemon registry
-            // (aggregate traffic: blocks_streamed, checkpoint resumes, …).
-            // Gauge-style values must not be summed — last run wins.
-            const GAUGES: [&str; 3] = [
-                "compress_prefetch_depth",
-                "recovery_cg_iters",
-                "recovery_solver_iterative",
-            ];
-            for (k, v) in pipe.metrics.snapshot() {
-                if GAUGES.contains(&k.as_str()) {
-                    self.metrics.set(&k, v);
-                } else {
-                    self.metrics.incr(&k, v);
-                }
-            }
+            self.fold_pipeline_metrics(&pipe);
             let digest = model_digest(&res.model);
             Ok((
                 res.model,
@@ -685,11 +847,119 @@ impl Inner {
             ))
         }));
         self.metrics.record("job_run", started.elapsed().as_secs_f64());
-        let mut panicked = false;
-        let run = match run {
-            Ok(r) => r,
+        let (run, panicked) = unwrap_panic(run);
+        self.settle(id, &rec.cache_key, run, panicked);
+    }
+
+    /// Runs a coalesced batch of admitted jobs as one shared ALS sweep on
+    /// this worker thread.  Every member settles through the same paths a
+    /// solo run uses (cancel, cache twin, retry/poison policy), so results
+    /// — factors and `model_digest` — are bitwise identical to running each
+    /// job alone; only the wall-clock cost is shared.
+    ///
+    /// If the shared sweep *panics*, the panic cannot be attributed to one
+    /// member, so the whole batch falls back to solo runs: the genuinely
+    /// poisonous job is charged its panic there (and quarantined at the
+    /// threshold) while its peers complete normally.
+    fn run_batch(&self, members: &[(JobId, JobRecord)]) {
+        // Per-job prologue identical to run_job: cancelled jobs and
+        // cache-twin hits settle immediately and drop out of the sweep.
+        let mut live: Vec<(JobId, JobRecord)> = Vec::new();
+        for (id, _) in members {
+            let (rec, cancelled) = {
+                let st = self.state.lock().unwrap();
+                (
+                    st.records.get(id).cloned().expect("running job has a record"),
+                    st.cancel_requested.contains(id),
+                )
+            };
+            if cancelled {
+                self.finalize(id, JobState::Cancelled, None, None);
+                continue;
+            }
+            if let Some(hit) = self.cache.get(&rec.cache_key) {
+                let outcome = JobOutcome {
+                    rel_error: hit.rel_error,
+                    sampled_mse: hit.sampled_mse,
+                    dropped_replicas: hit.dropped_replicas,
+                    model_digest: hit.model_digest,
+                    from_cache: true,
+                };
+                if let Err(e) = save_model(&self.spool.result_dir(id), &hit.model) {
+                    log::warn!("persisting cached factors for {id}: {e:#}");
+                }
+                self.finalize(id, JobState::Done, Some(outcome), None);
+                continue;
+            }
+            live.push((id.clone(), rec));
+        }
+        match live.len() {
+            0 => return,
+            1 => return self.run_job(&live[0].0), // degenerate batch
+            _ => {}
+        }
+        self.metrics.incr("batch_sweeps", 1);
+        self.metrics.incr("batch_jobs_coalesced", live.len() as u64);
+        let started = Instant::now();
+        type PerJob = Vec<Result<(CpModel, JobOutcome)>>;
+        let run = catch_unwind(AssertUnwindSafe(|| -> PerJob {
+            // Per-job fault probes, same site/key as the solo path, so a
+            // chaos plan can poison ONE member while its peers run clean
+            // (via the solo fallback below).
+            for (id, rec) in &live {
+                if crate::util::fault::should_fault_keyed(
+                    crate::util::fault::Site::WorkerPanic,
+                    rec.seq,
+                ) {
+                    panic!("injected worker panic (job {id})");
+                }
+            }
+            // Open every input; a job whose source fails to open settles
+            // through its own error without failing its batch peers.
+            let mut out: Vec<Option<Result<(CpModel, JobOutcome)>>> =
+                live.iter().map(|_| None).collect();
+            let mut pipes: Vec<Pipeline> = Vec::new();
+            let mut srcs = Vec::new();
+            let mut swept: Vec<usize> = Vec::new();
+            for (i, (_, rec)) in live.iter().enumerate() {
+                match rec.spec.source.open() {
+                    Ok(s) => {
+                        pipes.push(Pipeline::new(rec.spec.config.clone()));
+                        srcs.push(s);
+                        swept.push(i);
+                    }
+                    Err(e) => out[i] = Some(Err(e)),
+                }
+            }
+            let src_refs: Vec<&dyn crate::tensor::TensorSource> =
+                srcs.iter().map(|b| b.as_ref()).collect();
+            let results = crate::coordinator::run_batch_group(&mut pipes, &src_refs);
+            for ((i, pipe), res) in swept.iter().zip(&pipes).zip(results) {
+                out[*i] = Some(res.map(|res| {
+                    self.fold_pipeline_metrics(pipe);
+                    let digest = model_digest(&res.model);
+                    (
+                        res.model,
+                        JobOutcome {
+                            rel_error: res.diagnostics.rel_error,
+                            sampled_mse: res.diagnostics.sampled_mse,
+                            dropped_replicas: res.diagnostics.dropped_replicas,
+                            model_digest: digest,
+                            from_cache: false,
+                        },
+                    )
+                }));
+            }
+            out.into_iter().map(|o| o.expect("every member settled")).collect()
+        }));
+        self.metrics.record("job_run", started.elapsed().as_secs_f64());
+        match run {
+            Ok(per_job) => {
+                for ((id, rec), res) in live.iter().zip(per_job) {
+                    self.settle(id, &rec.cache_key, res, false);
+                }
+            }
             Err(p) => {
-                panicked = true;
                 let what = if let Some(s) = p.downcast_ref::<&str>() {
                     (*s).to_string()
                 } else if let Some(s) = p.downcast_ref::<String>() {
@@ -697,9 +967,47 @@ impl Inner {
                 } else {
                     "see daemon log".to_string()
                 };
-                Err(anyhow::anyhow!("job panicked: {what}"))
+                log::warn!(
+                    "batch sweep of {} jobs panicked ({what}); falling back to solo runs",
+                    live.len()
+                );
+                self.metrics.incr("batch_sweep_panics", 1);
+                for (id, _) in &live {
+                    self.run_job(id);
+                }
             }
-        };
+        }
+    }
+
+    /// Folds one finished pipeline's metrics into the daemon registry
+    /// (aggregate traffic: blocks_streamed, checkpoint resumes, …).
+    /// Gauge-style values must not be summed — last run wins.
+    fn fold_pipeline_metrics(&self, pipe: &Pipeline) {
+        const GAUGES: [&str; 4] = [
+            "compress_prefetch_depth",
+            "recovery_cg_iters",
+            "recovery_solver_iterative",
+            "batch_lane_depth",
+        ];
+        for (k, v) in pipe.metrics.snapshot() {
+            if GAUGES.contains(&k.as_str()) {
+                self.metrics.set(&k, v);
+            } else {
+                self.metrics.incr(&k, v);
+            }
+        }
+    }
+
+    /// Transitions a finished run — solo or one member of a batch — into
+    /// its terminal (or retry) state: the cancel/cache/retry/poison policy
+    /// shared by both execution paths.
+    fn settle(
+        &self,
+        id: &str,
+        cache_key: &str,
+        run: Result<(CpModel, JobOutcome)>,
+        panicked: bool,
+    ) {
         match run {
             Ok((model, outcome)) => {
                 let cancelled = {
@@ -715,7 +1023,7 @@ impl Inner {
                     log::warn!("persisting result factors for {id}: {e:#}");
                 }
                 self.cache.insert(
-                    rec.cache_key.clone(),
+                    cache_key.to_string(),
                     CachedResult {
                         model: Arc::new(model),
                         rel_error: outcome.rel_error,
@@ -873,6 +1181,14 @@ impl Inner {
     fn sync_gauges(&self, st: &State) {
         self.metrics.set("jobs_queued", st.queue.len() as u64);
         self.metrics.set("jobs_running", st.running.len() as u64);
+        // Lane depth: queued jobs currently eligible to coalesce (0 both
+        // when the queue drains and when the lane is off).
+        let lane_depth = st
+            .queue
+            .iter()
+            .filter(|id| super::batch::lane_eligible(&st.records[*id], self.batch_threshold_bytes))
+            .count();
+        self.metrics.set("batch_lane_depth", lane_depth as u64);
         self.metrics.set("jobs_running_peak", st.running_peak as u64);
         self.metrics.set("admission_used_bytes", st.used_bytes as u64);
         self.metrics
@@ -923,6 +1239,7 @@ mod tests {
                 .build()
                 .unwrap(),
             priority,
+            tenant: String::new(),
         }
     }
 
@@ -940,6 +1257,7 @@ mod tests {
                 .build()
                 .unwrap(),
             priority,
+            tenant: String::new(),
         }
     }
 
@@ -1138,6 +1456,126 @@ mod tests {
         let fb = s.wait(&b.id, Duration::from_secs(120)).unwrap();
         assert!(matches!(fb.state, JobState::Cancelled | JobState::Done));
         s.wait(&a.id, Duration::from_secs(120)).unwrap();
+        s.shutdown();
+        s.join();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The tentpole guarantee at daemon level: jobs run through a
+    /// coalesced batch sweep produce bitwise the same `model_digest` as
+    /// the same specs run solo, and the lane actually coalesces.
+    #[test]
+    fn batch_lane_matches_solo_digests_and_coalesces() {
+        let specs: Vec<JobSpec> = (0..4)
+            .map(|i| {
+                let mut sp = small_spec(60 + i, 0);
+                sp.tenant = if i % 2 == 0 { "even".into() } else { "odd".into() };
+                sp
+            })
+            .collect();
+
+        // Arm 1: lane off — the per-job path prices and runs each alone.
+        let dir = tmpdir("lane_off");
+        let s = sched(&dir, SchedulerConfig { workers: 1, ..Default::default() });
+        let mut solo_digests = Vec::new();
+        for sp in &specs {
+            let rec = s.submit(sp.clone()).unwrap();
+            let done = s.wait(&rec.id, Duration::from_secs(120)).unwrap();
+            assert_eq!(done.state, JobState::Done, "err: {:?}", done.error);
+            solo_digests.push(done.outcome.unwrap().model_digest);
+        }
+        assert_eq!(s.metrics().counter("batch_sweeps"), 0, "lane off must not sweep");
+        s.shutdown();
+        s.join();
+        std::fs::remove_dir_all(&dir).ok();
+
+        // Arm 2: lane on, single worker.  A higher-priority blocker
+        // occupies the worker while the small jobs queue up, so when it
+        // finishes the whole flood is visible to one admission tick and
+        // coalesces deterministically.
+        let dir = tmpdir("lane_on");
+        let s = sched(
+            &dir,
+            SchedulerConfig {
+                workers: 1,
+                batch_threshold_bytes: usize::MAX,
+                ..Default::default()
+            },
+        );
+        let blocker = s.submit(big_spec(90, 10)).unwrap();
+        let t0 = Instant::now();
+        while s.status(&blocker.id).unwrap().state == JobState::Queued {
+            assert!(t0.elapsed() < Duration::from_secs(60), "blocker never started");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let ids: Vec<_> = specs.iter().map(|sp| s.submit(sp.clone()).unwrap().id).collect();
+        assert!(
+            s.metrics().counter("batch_lane_depth") >= specs.len() as u64,
+            "queued smalls must show up as lane depth"
+        );
+        for (i, id) in ids.iter().enumerate() {
+            let done = s.wait(id, Duration::from_secs(120)).unwrap();
+            assert_eq!(done.state, JobState::Done, "err: {:?}", done.error);
+            let o = done.outcome.unwrap();
+            assert!(!o.from_cache, "distinct specs must not alias in the cache");
+            assert_eq!(
+                o.model_digest, solo_digests[i],
+                "job {i}: batched digest differs from solo"
+            );
+        }
+        assert!(s.metrics().counter("batch_sweeps") >= 1, "no sweep coalesced");
+        assert!(
+            s.metrics().counter("batch_jobs_coalesced") >= 2,
+            "coalesced {} jobs",
+            s.metrics().counter("batch_jobs_coalesced")
+        );
+        s.shutdown();
+        s.join();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// With a per-tenant in-flight quota of 1, a single tenant's flood
+    /// cannot coalesce with itself: extension candidates are deferred (and
+    /// counted), every job still completes through the solo path.
+    #[test]
+    fn tenant_quota_defers_lane_extension() {
+        let dir = tmpdir("quota");
+        let s = sched(
+            &dir,
+            SchedulerConfig {
+                workers: 1,
+                batch_threshold_bytes: usize::MAX,
+                tenant_quota: 1,
+                ..Default::default()
+            },
+        );
+        let blocker = s.submit(big_spec(91, 10)).unwrap();
+        let t0 = Instant::now();
+        while s.status(&blocker.id).unwrap().state == JobState::Queued {
+            assert!(t0.elapsed() < Duration::from_secs(60), "blocker never started");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let ids: Vec<_> = (0..3)
+            .map(|i| {
+                let mut sp = small_spec(70 + i, 0);
+                sp.tenant = "flood".into();
+                s.submit(sp).unwrap().id
+            })
+            .collect();
+        for id in &ids {
+            let done = s.wait(id, Duration::from_secs(120)).unwrap();
+            assert_eq!(done.state, JobState::Done, "err: {:?}", done.error);
+        }
+        assert_eq!(
+            s.metrics().counter("batch_sweeps"),
+            0,
+            "quota 1 must keep a single tenant's jobs from coalescing"
+        );
+        assert!(
+            s.metrics().counter("tenant_quota_deferrals") >= 2,
+            "deferrals: {}",
+            s.metrics().counter("tenant_quota_deferrals")
+        );
         s.shutdown();
         s.join();
         std::fs::remove_dir_all(&dir).ok();

@@ -304,6 +304,25 @@ fn dispatch(shared: &Shared, req: Request) -> (Json, bool) {
             Ok(rec) => (protocol::ok(vec![("job", rec.to_json())]), false),
             Err(e) => (protocol::err(format!("{e:#}")), false),
         },
+        Request::List => {
+            // One summary line per job (submission order) — deliberately
+            // not the full record: a fleet dashboard polling LIST must not
+            // drag every job's spec/config over the wire.
+            let jobs: Vec<Json> = shared
+                .scheduler
+                .jobs()
+                .into_iter()
+                .map(|rec| {
+                    Json::obj(vec![
+                        ("id", Json::str(rec.id.clone())),
+                        ("state", Json::str(rec.state.as_str())),
+                        ("tenant", Json::str(rec.spec.tenant.clone())),
+                        ("priority", Json::num(rec.spec.priority as f64)),
+                    ])
+                })
+                .collect();
+            (protocol::ok(vec![("jobs", Json::Arr(jobs))]), false)
+        }
         Request::Metrics => {
             let snap: BTreeMap<String, Json> = shared
                 .metrics

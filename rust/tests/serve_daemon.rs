@@ -37,6 +37,7 @@ fn spec(seed: u64) -> JobSpec {
             .build()
             .unwrap(),
         priority: 0,
+        tenant: String::new(),
     }
 }
 
@@ -139,13 +140,33 @@ fn daemon_admission_cache_and_graceful_shutdown() {
     assert_eq!(metric(&addr, "jobs_done"), 3);
     assert_eq!(metric(&addr, "jobs_queued"), 0);
 
-    // Identical resubmission: served from cache, bitwise-identical digest.
-    let rec = submit(&addr, &spec(1));
+    // Identical resubmission — from a *different tenant*: tenant is
+    // scheduling metadata, not part of the cache key, so this is still a
+    // hit with a bitwise-identical digest.
+    let mut resub = spec(1);
+    resub.tenant = "acme".into();
+    let rec = submit(&addr, &resub);
     assert_eq!(rec.state, JobState::Done, "cache hit completes at submit");
     let o = rec.outcome.clone().unwrap();
     assert!(o.from_cache);
     assert_eq!(o.model_digest, digests[0]);
     assert!(metric(&addr, "cache_hits") >= 1);
+
+    // LIST: one summary per job (id/state/tenant/priority), no full specs.
+    let resp = protocol::call_ok(&addr, &Request::List).unwrap();
+    let jobs = match resp.get("jobs") {
+        Some(Json::Arr(v)) => v.clone(),
+        other => panic!("LIST must return a jobs array, got {other:?}"),
+    };
+    assert_eq!(jobs.len(), 4, "3 runs + 1 cached resubmission");
+    let mine = jobs
+        .iter()
+        .find(|j| j.get("id").and_then(|x| x.as_str()) == Some(rec.id.as_str()))
+        .expect("resubmitted job listed");
+    assert_eq!(mine.get("state").and_then(|x| x.as_str()), Some("done"));
+    assert_eq!(mine.get("tenant").and_then(|x| x.as_str()), Some("acme"));
+    assert_eq!(mine.get("priority").and_then(|x| x.as_f64()), Some(0.0));
+    assert!(mine.get("spec").is_none(), "LIST summaries must stay slim");
 
     // RESULT returns the outcome and the spooled factor files exist.
     let resp = protocol::call_ok(&addr, &Request::Result(recs[0].id.clone())).unwrap();
@@ -234,7 +255,12 @@ fn daemon_restart_recovers_spool_and_resumes_bitwise() {
     let rec = JobRecord {
         id: "job-000001".to_string(),
         seq: 1,
-        spec: JobSpec { source: job_spec.source.clone(), config: run_cfg, priority: 0 },
+        spec: JobSpec {
+            source: job_spec.source.clone(),
+            config: run_cfg,
+            priority: 0,
+            tenant: String::new(),
+        },
         state: JobState::Running,
         plan_bytes: plan.estimated_bytes,
         cache_key: cache_key(&job_spec).unwrap(),
