@@ -50,6 +50,7 @@ fn small_spec(seed: u64, tenant: &str) -> JobSpec {
             .unwrap(),
         priority: 0,
         tenant: tenant.to_string(),
+        sharded: false,
     }
 }
 
@@ -70,6 +71,7 @@ fn blocker_spec(iters: usize) -> JobSpec {
             .unwrap(),
         priority: 10,
         tenant: String::new(),
+        sharded: false,
     }
 }
 

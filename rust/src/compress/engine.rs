@@ -21,13 +21,18 @@
 //!   `depth` slots) while compute workers drain it; block reads overlap
 //!   with the TTM chains, which is where file-backed sources win.  An
 //!   ordered-commit step per shard (late blocks park in a small pending
-//!   list) preserves the deterministic reduction.
+//!   list) preserves the deterministic reduction.  Producers commit reads
+//!   through a claim-order reorder buffer and claims are gated on a
+//!   live-block budget, so at most `depth + io_threads + threads` blocks
+//!   are ever resident at once — the exact bound the memory planner
+//!   prices ([`StreamStats::max_live_blocks`] witnesses it).
 //!
 //! Stall time on both sides of the queue is counted ([`StreamStats`]) and
 //! surfaced through `coordinator::metrics` by the pipeline.
 
 use crate::tensor::{BlockRange, DenseTensor, TensorSource};
 use crate::util::threadpool::ThreadPool;
+use std::collections::BTreeMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -110,6 +115,13 @@ pub struct StreamStats {
     pub shards_done: usize,
     /// Blocks covered by the folded prefix (includes the resumed prefix).
     pub blocks_done: u64,
+    /// Peak number of blocks simultaneously live (claimed by a producer
+    /// but not yet processed by a consumer) in prefetched mode — the
+    /// live-block budget guarantees this never exceeds
+    /// `depth + io_threads + threads`, which is exactly what the memory
+    /// planner prices.  0 in synchronous mode (reads are inline, so at
+    /// most one block per worker is ever live).
+    pub max_live_blocks: usize,
 }
 
 /// A resumable prefix: the first `shards_done` shards' contributions are
@@ -180,9 +192,35 @@ struct ShardState<A> {
     acc: Option<A>,
     /// A consumer is currently processing this shard's in-order run.
     busy: bool,
-    /// Blocks that arrived before their turn (bounded by the fold-prefix
-    /// window: producers only claim blocks of in-window shards).
+    /// Blocks that arrived before their turn.  The reorder buffer delivers
+    /// reads in claim order (ascending block order within a shard), so a
+    /// block only parks here while another consumer owns the shard, and
+    /// the total parked anywhere is capped by the live-block budget.
     pending: Vec<(usize, DenseTensor)>,
+}
+
+/// Live-block accounting for the prefetched mode's claim gate: a block is
+/// "live" from position claim until a consumer finishes processing it
+/// (being read, parked in the reorder buffer, queued in the channel,
+/// parked in a shard's pending list, or in a worker's hands).  Claims
+/// wait while `live` is at the cap, making the planner's
+/// `depth + io_threads + threads` block budget an exact bound.
+struct ClaimState {
+    /// Next claim ticket (the reorder buffer sends in ticket order).
+    seq: usize,
+    live: usize,
+    peak: usize,
+}
+
+/// In-claim-order send commit: producer reads finish out of order, so
+/// completed reads park here keyed by their claim ticket and are released
+/// into the channel strictly by ticket.  `draining` marks the one producer
+/// currently sending (the channel send blocks on backpressure and must run
+/// outside this lock).
+struct Reorder {
+    next_send: usize,
+    parked: BTreeMap<usize, (usize, DenseTensor)>,
+    draining: bool,
 }
 
 /// Streams `blocks` from `src` through `consumer`, returning the folded
@@ -233,6 +271,9 @@ pub fn stream_blocks<C: BlockConsumer>(
         acc: acc0,
     });
     let fold_advanced = std::sync::Condvar::new();
+    // Prefetched-mode live-block budget (unused in sync mode).
+    let claim = Mutex::new(ClaimState { seq: 0, live: 0, peak: 0 });
+    let claim_freed = std::sync::Condvar::new();
     let stop = AtomicBool::new(false);
     let failure: Mutex<Option<String>> = Mutex::new(None);
     // First source-read panic wins; later ones (other threads hitting the
@@ -354,6 +395,14 @@ pub fn stream_blocks<C: BlockConsumer>(
             // shard-level interleaving is what lets `threads` consumers
             // compute concurrently instead of convoying behind one shard.
             let window = opts.threads.max(2);
+            // Exact live-block cap the memory planner prices: queue slots,
+            // one read per I/O thread, one block per consumer.
+            let cap = depth + io_threads + consumers;
+            let reorder = Mutex::new(Reorder {
+                next_send: 0,
+                parked: BTreeMap::new(),
+                draining: false,
+            });
             let (tx, rx) = mpsc::sync_channel::<(usize, DenseTensor)>(depth);
             let rx = Arc::new(Mutex::new(rx));
             let states: Vec<Mutex<ShardState<C::Acc>>> = shards
@@ -385,34 +434,58 @@ pub fn stream_blocks<C: BlockConsumer>(
                     let blocks_read = &blocks_read;
                     let folder = &folder;
                     let fold_advanced = &fold_advanced;
+                    let claim = &claim;
+                    let claim_freed = &claim_freed;
+                    let reorder = &reorder;
                     let shard_cursor = &shard_cursor;
                     let rr = &rr;
                     let shards = &shards;
                     let record_failure = &record_failure;
-                    scope.spawn(move || loop {
+                    scope.spawn(move || 'producer: loop {
                         if stop.load(Ordering::SeqCst) {
                             break;
                         }
-                        // Claim the next block: scan the current fold
-                        // window round-robin for an unclaimed position;
-                        // when the whole window is claimed, wait for the
-                        // prefix to advance (waiting is producer-only and
-                        // safe — every in-window position was claimed by a
-                        // non-waiting producer, so folds keep coming).
+                        // Claim the next block: wait out the live-block
+                        // budget, then scan the current fold window
+                        // round-robin for an unclaimed position.  The claim
+                        // lock is held across the scan so ticket order ==
+                        // claim order (within a shard, ascending block
+                        // order).  When the whole window is claimed, wait
+                        // for the prefix to advance (waiting is
+                        // producer-only and safe — every in-window position
+                        // was claimed by a non-waiting producer, so folds
+                        // keep coming).
                         let claimed = 'claim: loop {
+                            let mut c = claim.lock().unwrap();
+                            while !stop.load(Ordering::SeqCst) && c.live >= cap {
+                                c = claim_freed.wait(c).unwrap();
+                            }
+                            if stop.load(Ordering::SeqCst) {
+                                break 'claim None;
+                            }
                             let wstart = folder.lock().unwrap().next;
                             if wstart >= nshards {
                                 break 'claim None;
                             }
                             let span = (wstart + window).min(nshards) - wstart;
                             let first = rr.fetch_add(1, Ordering::Relaxed) % span;
+                            let mut found = None;
                             for k in 0..span {
                                 let s = wstart + (first + k) % span;
                                 let pos = shard_cursor[s].fetch_add(1, Ordering::SeqCst);
                                 if pos < shards[s].1 {
-                                    break 'claim Some(pos);
+                                    found = Some(pos);
+                                    break;
                                 }
                             }
+                            if let Some(pos) = found {
+                                c.live += 1;
+                                c.peak = c.peak.max(c.live);
+                                let seq = c.seq;
+                                c.seq += 1;
+                                break 'claim Some((pos, seq));
+                            }
+                            drop(c);
                             let mut f = folder.lock().unwrap();
                             while !stop.load(Ordering::SeqCst) && f.next == wstart {
                                 f = fold_advanced.wait(f).unwrap();
@@ -421,12 +494,17 @@ pub fn stream_blocks<C: BlockConsumer>(
                                 break 'claim None;
                             }
                         };
-                        let Some(pos) = claimed else { break };
+                        let Some((pos, seq)) = claimed else { break };
                         let t0 = Instant::now();
                         let t = match catch_unwind(AssertUnwindSafe(|| src.block(&blocks[pos]))) {
                             Ok(t) => t,
                             Err(p) => {
                                 record_failure(p);
+                                // Wake budget waiters so they observe stop
+                                // and exit (this read's ticket will never
+                                // commit).
+                                let _g = claim.lock().unwrap();
+                                claim_freed.notify_all();
                                 break;
                             }
                         };
@@ -436,13 +514,36 @@ pub fn stream_blocks<C: BlockConsumer>(
                             Ordering::Relaxed,
                         );
                         blocks_read.fetch_add(1, Ordering::Relaxed);
-                        // Blocking send = backpressure from the bounded
-                        // queue; an Err means every consumer exited (abort).
-                        if tx.send((pos, t)).is_err() {
-                            break;
+                        // Commit the read in ticket order: park it, then —
+                        // unless another producer is mid-send — drain every
+                        // consecutive ticket into the channel.  The blocking
+                        // send (backpressure from the bounded queue) runs
+                        // outside the reorder lock; an Err means every
+                        // consumer exited (abort).  Re-checking the head
+                        // after each send, under the same lock that clears
+                        // `draining`, means a ticket parked during the send
+                        // cannot be stranded.
+                        let mut ro = reorder.lock().unwrap();
+                        ro.parked.insert(seq, (pos, t));
+                        while !ro.draining {
+                            let Some((&head, _)) = ro.parked.iter().next() else { break };
+                            if head != ro.next_send {
+                                break;
+                            }
+                            let (p, t) = ro.parked.remove(&head).unwrap();
+                            ro.draining = true;
+                            drop(ro);
+                            let send_t0 = Instant::now();
+                            let sent = tx.send((p, t)).is_ok();
+                            send_stall_ns
+                                .fetch_add(send_t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                            ro = reorder.lock().unwrap();
+                            ro.next_send += 1;
+                            ro.draining = false;
+                            if !sent {
+                                break 'producer;
+                            }
                         }
-                        send_stall_ns
-                            .fetch_add(read_done.elapsed().as_nanos() as u64, Ordering::Relaxed);
                     });
                 }
                 // The scope's own sender must drop so the channel closes
@@ -456,6 +557,8 @@ pub fn stream_blocks<C: BlockConsumer>(
                     let recv_stall_ns = &recv_stall_ns;
                     let complete_shard = &complete_shard;
                     let shard_of = &shard_of;
+                    let claim = &claim;
+                    let claim_freed = &claim_freed;
                     scope.spawn(move || {
                         let mut ctx = consumer.make_ctx();
                         loop {
@@ -497,6 +600,13 @@ pub fn stream_blocks<C: BlockConsumer>(
                             // pick up parked successors.
                             while let Some((p, tensor, mut acc)) = work.take() {
                                 consumer.process(&mut ctx, &blocks[p], tensor, &mut acc);
+                                // The block is no longer live: free a
+                                // budget slot for the producers.
+                                {
+                                    let mut c = claim.lock().unwrap();
+                                    c.live -= 1;
+                                    claim_freed.notify_one();
+                                }
                                 let mut st = states[s].lock().unwrap();
                                 st.next_pos = p + 1;
                                 let nxt = st.next_pos;
@@ -516,7 +626,11 @@ pub fn stream_blocks<C: BlockConsumer>(
                             }
                         }
                         // Dropping our rx clone lets blocked producers
-                        // observe the closed channel and exit on abort.
+                        // observe the closed channel and exit on abort; a
+                        // final wakeup frees any producer parked on the
+                        // live-block budget so it can observe stop too.
+                        let _g = claim.lock().unwrap();
+                        claim_freed.notify_all();
                     });
                 }
                 // The scope's own receiver handle must drop too — otherwise
@@ -529,6 +643,7 @@ pub fn stream_blocks<C: BlockConsumer>(
     }
 
     let folder = folder.into_inner().unwrap();
+    stats.max_live_blocks = claim.into_inner().unwrap().peak;
     stats.failure = failure.into_inner().unwrap();
     stats.aborted = stop.load(Ordering::SeqCst);
     assert!(
@@ -543,6 +658,32 @@ pub fn stream_blocks<C: BlockConsumer>(
     stats.io_stall_seconds = recv_stall_ns.load(Ordering::Relaxed) as f64 * 1e-9;
     stats.send_stall_seconds = send_stall_ns.load(Ordering::Relaxed) as f64 * 1e-9;
     (folder.acc, stats)
+}
+
+/// Computes one shard's raw accumulator exactly as the engine does: a
+/// fresh `zero_acc` folded over blocks `b0..b1` in ascending block-index
+/// order.  This is the worker-side seam of the shard-lease subsystem
+/// (`serve/shard.rs`): a remote worker returns this accumulator verbatim
+/// — NOT merged into another zero (`merge` is not guaranteed to be an
+/// identity bit for bit, e.g. `0.0 + (-0.0)`) — and the coordinator folds
+/// it in shard-index order, reproducing the single-process result
+/// bitwise.  Panics from `TensorSource::block` propagate to the caller
+/// (workers surface them as lease failures).
+pub fn run_shard<C: BlockConsumer>(
+    src: &dyn TensorSource,
+    blocks: &[BlockRange],
+    consumer: &C,
+    b0: usize,
+    b1: usize,
+) -> C::Acc {
+    assert!(b0 <= b1 && b1 <= blocks.len(), "shard range {b0}..{b1} out of bounds");
+    let mut ctx = consumer.make_ctx();
+    let mut acc = consumer.zero_acc();
+    for pos in b0..b1 {
+        let t = src.block(&blocks[pos]);
+        consumer.process(&mut ctx, &blocks[pos], t, &mut acc);
+    }
+    acc
 }
 
 #[cfg(test)]
@@ -726,6 +867,50 @@ mod tests {
             assert!(
                 stats.shards_done < stats.shards,
                 "failing final block means the last shard cannot fold"
+            );
+        }
+    }
+
+    #[test]
+    fn run_shard_fold_matches_stream_blocks_bitwise() {
+        // Computing every shard independently with `run_shard` and merging
+        // in shard order must reproduce the engine's result bit for bit —
+        // the invariant the shard-lease coordinator relies on when folding
+        // worker partials.
+        let (src, blocks) = setup([12, 11, 10], [5, 4, 3]);
+        let opts = StreamOptions { threads: 3, prefetch: None, shard_parts: 8 };
+        let reference = run(&src, &blocks, &opts);
+        let shards = ThreadPool::partition(blocks.len(), 8);
+        let mut acc = SumConsumer.zero_acc();
+        for &(b0, b1) in &shards {
+            let part = run_shard(&src, &blocks, &SumConsumer, b0, b1);
+            SumConsumer.merge(&mut acc, part);
+        }
+        assert_eq!(acc[0].to_bits(), reference.to_bits());
+    }
+
+    #[test]
+    fn prefetch_live_blocks_bounded_by_depth_io_threads() {
+        // The live-block budget must hold exactly: never more than
+        // depth + io_threads + threads blocks claimed-but-unprocessed,
+        // which is precisely the planner's queue term.
+        let (src, blocks) = setup([12, 12, 12], [3, 3, 3]);
+        for (threads, depth, io) in [(1, 1, 1), (2, 3, 2), (4, 2, 3), (3, 5, 1)] {
+            let opts = StreamOptions {
+                threads,
+                prefetch: Some(PrefetchConfig { depth, io_threads: io }),
+                shard_parts: 8,
+            };
+            let (_, stats) = stream_blocks(&src, &blocks, &opts, &SumConsumer, None, None);
+            assert!(!stats.aborted);
+            assert!(stats.max_live_blocks >= 1, "at least one block was live");
+            assert!(
+                stats.max_live_blocks <= depth + io + threads,
+                "live blocks {} exceeded the {}+{}+{} budget",
+                stats.max_live_blocks,
+                depth,
+                io,
+                threads
             );
         }
     }

@@ -29,13 +29,14 @@ pub use comp::{
     ttm_mode3_with,
 };
 pub use engine::{
-    stream_blocks, BlockConsumer, PrefetchConfig, ProgressFn, ResumeState, StreamOptions,
-    StreamStats, DEFAULT_SHARD_PARTS,
+    run_shard, stream_blocks, BlockConsumer, PrefetchConfig, ProgressFn, ResumeState,
+    StreamOptions, StreamStats, DEFAULT_SHARD_PARTS,
 };
 pub use maps::{CompressionMaps, MapSource, MapSpec, MapTier, ProceduralMaps, ReplicaMaps};
 pub use sparse_proj::SparseSignMatrix;
 pub use stream::{
-    compress_source, compress_source_batched, compress_source_batched_opts, compress_source_opts,
-    compress_source_sparse, compress_source_sparse_opts, BlockCompressor, ProxyResume,
-    RustCompressor,
+    compress_shard, compress_shard_batched, compress_source, compress_source_batched,
+    compress_source_batched_opts, compress_source_opts, compress_source_sparse,
+    compress_source_sparse_opts, fold_shard_proxies, zero_shard_proxies, BlockCompressor,
+    ProxyResume, RustCompressor,
 };

@@ -22,7 +22,7 @@
 
 use super::comp::comp_dense_with;
 use super::engine::{
-    stream_blocks, BlockConsumer, ProgressFn, ResumeState, StreamOptions, StreamStats,
+    run_shard, stream_blocks, BlockConsumer, ProgressFn, ResumeState, StreamOptions, StreamStats,
 };
 use super::maps::MapSource;
 use crate::linalg::backend::{ComputeBackend, SerialBackend};
@@ -361,6 +361,49 @@ pub fn compress_source_batched_opts(
     stream_blocks(src, &blocks, opts, &consumer, resume, on_progress)
 }
 
+/// One shard's **raw** batched-path accumulator over blocks `b0..b1` of
+/// the deterministic grid — the worker-side export of the shard-lease
+/// subsystem (`serve/shard.rs`).  The returned proxies are exactly what
+/// the engine would fold for this shard: a fresh zero accumulator folded
+/// in ascending block order, with no extra merge.
+pub fn compress_shard_batched(
+    src: &dyn TensorSource,
+    maps: &MapSource,
+    block: [usize; 3],
+    b0: usize,
+    b1: usize,
+) -> Vec<DenseTensor> {
+    let blocks = block_grid(maps.dims(), block);
+    run_shard(src, &blocks, &BatchedConsumer { maps }, b0, b1)
+}
+
+/// [`compress_shard_batched`] for the pluggable-compressor (plain) path.
+pub fn compress_shard(
+    src: &dyn TensorSource,
+    maps: &MapSource,
+    block: [usize; 3],
+    compressor: &dyn BlockCompressor,
+    b0: usize,
+    b1: usize,
+) -> Vec<DenseTensor> {
+    let blocks = block_grid(maps.dims(), block);
+    run_shard(src, &blocks, &CompressConsumer { maps, compressor }, b0, b1)
+}
+
+/// Zeroed proxy accumulators — the coordinator-side fold base for
+/// [`fold_shard_proxies`] (identical to the engine's `zero_acc`).
+pub fn zero_shard_proxies(maps: &MapSource) -> Vec<DenseTensor> {
+    zero_proxies(maps)
+}
+
+/// Folds one completed shard accumulator into the running proxies — the
+/// exact elementwise-add `merge` the engine applies, exposed so the
+/// shard-lease coordinator reproduces the single-process reduction bit
+/// for bit when folding worker partials in shard order.
+pub fn fold_shard_proxies(into: &mut [DenseTensor], from: Vec<DenseTensor>) {
+    merge_proxies(into, from);
+}
+
 /// First-stage **sparse** compression consumer (±1 maps; §IV-D).
 struct SparseConsumer<'a> {
     u: &'a crate::compress::SparseSignMatrix,
@@ -638,6 +681,37 @@ mod tests {
             None,
         );
         assert_eq!(reference, pref);
+    }
+
+    #[test]
+    fn shard_exports_fold_to_bitwise_identical_proxies() {
+        // The shard-lease invariant end to end at this layer: computing
+        // every shard with the public per-shard exports (as a remote
+        // worker would) and folding them in shard order reproduces the
+        // engine's proxies bit for bit, on both compression paths.
+        let gen = LowRankGenerator::new(16, 14, 12, 2, 163);
+        let maps = MapSource::generate([16, 14, 12], [5, 4, 4], 3, 2, 164, MapTier::Materialized);
+        let block = [5, 5, 5];
+        let nblocks = BlockSpec3::new([16, 14, 12], block).num_blocks();
+        let shards = ThreadPool::partition(nblocks, 6);
+
+        let reference = compress_source_batched(&gen, &maps, block, &ThreadPool::new(4));
+        let mut folded = zero_shard_proxies(&maps);
+        for &(b0, b1) in &shards {
+            fold_shard_proxies(&mut folded, compress_shard_batched(&gen, &maps, block, b0, b1));
+        }
+        assert_eq!(folded, reference, "batched path");
+
+        let comp = RustCompressor { precision: MixedPrecision::Full };
+        let reference = compress_source(&gen, &maps, block, &comp, &ThreadPool::new(4));
+        let mut folded = zero_shard_proxies(&maps);
+        for &(b0, b1) in &shards {
+            fold_shard_proxies(
+                &mut folded,
+                compress_shard(&gen, &maps, block, &comp, b0, b1),
+            );
+        }
+        assert_eq!(folded, reference, "plain path");
     }
 
     #[test]

@@ -169,6 +169,11 @@ mod tests {
         m.incr("batch_jobs_coalesced", 7);
         m.set("batch_lane_depth", 3);
         m.incr("tenant_quota_deferrals", 1);
+        // Shard-lease counters (sharded multi-worker execution) too.
+        m.incr("leases_granted", 6);
+        m.incr("leases_relet", 1);
+        m.incr("partials_folded", 8);
+        m.incr("workers_connected", 2);
         let snap = m.snapshot();
         assert_eq!(
             snap,
@@ -184,7 +189,11 @@ mod tests {
                 ("jobs_quarantined".to_string(), 1),
                 ("jobs_queued".to_string(), 3),
                 ("jobs_retried".to_string(), 2),
+                ("leases_granted".to_string(), 6),
+                ("leases_relet".to_string(), 1),
+                ("partials_folded".to_string(), 8),
                 ("tenant_quota_deferrals".to_string(), 1),
+                ("workers_connected".to_string(), 2),
             ]
         );
         let mut sorted = snap.clone();

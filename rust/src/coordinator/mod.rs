@@ -37,6 +37,6 @@ pub use config::{
 };
 pub use metrics::{Metrics, StageStats};
 pub use pipeline::{
-    run_batch_group, Pipeline, PipelineResult, ProxyDecomposer, RustAlsDecomposer,
+    run_batch_group, Pipeline, PipelineResult, ProxyDecomposer, RustAlsDecomposer, ShardedGrid,
 };
 pub use planner::{MemoryPlan, MemoryPlanner};

@@ -33,8 +33,8 @@ use super::recovery::{
     stacked_recover_opts, RecoveryOptions,
 };
 use crate::compress::{
-    compress_source, BlockCompressor, MapSource, PrefetchConfig, ResumeState, RustCompressor,
-    SparseSignMatrix, StreamOptions, DEFAULT_SHARD_PARTS,
+    compress_source, BlockCompressor, MapSource, MapTier, PrefetchConfig, ResumeState,
+    RustCompressor, SparseSignMatrix, StreamOptions, DEFAULT_SHARD_PARTS,
 };
 use crate::cp::{als_batch, als_decompose_with, sampled_mse, AlsBatchItem, AlsOptions, CpModel};
 use crate::linalg::backend::{cpu_backend, serial_backend, BackendHandle, SerialBackend};
@@ -141,6 +141,29 @@ pub struct PreparedJob {
     anchor: usize,
     maps: MapSource,
     proxies: Vec<DenseTensor>,
+}
+
+/// The Stage-1 grid facts a sharded run is built from: the deterministic
+/// block grid and shard partition a solo run of this config would stream,
+/// plus the map-generation parameters a remote worker needs to rebuild the
+/// exact replica maps.  Self-contained on purpose — a worker process that
+/// receives these fields (over the serve protocol's LEASE grant) can
+/// recompute any shard range bit-for-bit without access to the
+/// coordinator's planner or config machinery.
+#[derive(Clone, Debug)]
+pub struct ShardedGrid {
+    pub dims: [usize; 3],
+    pub reduced: [usize; 3],
+    pub replicas: usize,
+    pub anchor: usize,
+    pub seed: u64,
+    pub map_tier: MapTier,
+    pub block: [usize; 3],
+    pub blocks_total: usize,
+    pub shard_parts: usize,
+    /// Compression-path identity, same namespace as the checkpoint's
+    /// `CompressionProgress::path`.  Only `"batched"` is shardable today.
+    pub path: String,
 }
 
 /// The Exascale-Tensor coordinator.
@@ -302,6 +325,90 @@ impl Pipeline {
             self.decompose_proxies(&prep.proxies, &prep.pool, &compute)
         })?;
 
+        self.finish_stage(src, prep, models)
+    }
+
+    /// Resolves the Stage-1 grid a sharded execution of this config would
+    /// stream — the coordinator's half of the shard-lease seam.  Fails on
+    /// configurations whose compression path sharded workers cannot
+    /// reproduce bitwise: the sensing variant, mixed precision, and custom
+    /// / backend-hook compressors all run the plain trait path, which is
+    /// only exercised in-process.
+    pub fn sharded_grid(&mut self, src: &dyn TensorSource) -> Result<ShardedGrid> {
+        self.cfg.validate()?;
+        if self.cfg.sensing.is_some() {
+            bail!("sharded execution does not support the sensing variant");
+        }
+        let compute = self.resolve_compute()?;
+        let use_batched = self.compressor.is_none()
+            && compute.block_compressor().is_none()
+            && !self.cfg.mixed_precision;
+        if !use_batched {
+            bail!(
+                "sharded execution supports only the batched plain-f32 compression path \
+                 (mixed precision / custom compressors must run single-process)"
+            );
+        }
+        let dims = src.dims();
+        let plan = MemoryPlanner::plan(&self.cfg, dims)?;
+        let blocks_total = crate::tensor::BlockSpec3::new(dims, plan.block).num_blocks();
+        Ok(ShardedGrid {
+            dims,
+            reduced: self.cfg.reduced,
+            replicas: plan.replicas,
+            anchor: self.cfg.effective_anchor(),
+            seed: self.cfg.seed,
+            map_tier: plan.map_tier,
+            block: plan.block,
+            blocks_total,
+            shard_parts: DEFAULT_SHARD_PARTS,
+            path: "batched".to_string(),
+        })
+    }
+
+    /// Runs stages 2–6 on proxies produced elsewhere — the second half of
+    /// the shard-lease seam.  The caller (the sharded executor) is
+    /// responsible for having folded per-shard accumulators in the engine's
+    /// deterministic shard order; from here on the run is exactly the solo
+    /// path's post-compression tail, so factors and digest match a solo
+    /// [`Pipeline::run`] bit for bit.
+    pub fn run_with_proxies(
+        &mut self,
+        src: &dyn TensorSource,
+        proxies: Vec<DenseTensor>,
+    ) -> Result<PipelineResult> {
+        self.cfg.validate()?;
+        let compute = self.resolve_compute()?;
+        let dims = src.dims();
+        let plan = MemoryPlanner::plan(&self.cfg, dims)?;
+        if proxies.len() != plan.replicas {
+            bail!(
+                "sharded fold delivered {} proxies but the plan expects {} replicas",
+                proxies.len(),
+                plan.replicas
+            );
+        }
+        let pool = self.pool();
+        let anchor = self.cfg.effective_anchor();
+        let maps = MapSource::generate(
+            dims,
+            self.cfg.reduced,
+            plan.replicas,
+            anchor,
+            self.cfg.seed,
+            plan.map_tier,
+        );
+        self.metrics.incr("replicas", proxies.len() as u64);
+        let prep = PreparedJob {
+            plan,
+            pool,
+            anchor,
+            maps,
+            proxies,
+        };
+        let models = self.metrics.time("decompose", || {
+            self.decompose_proxies(&prep.proxies, &prep.pool, &compute)
+        })?;
         self.finish_stage(src, prep, models)
     }
 
@@ -1211,6 +1318,38 @@ mod tests {
         for p in &pipes {
             assert!(p.metrics.stage("decompose").is_some());
         }
+    }
+
+    #[test]
+    fn sharded_seam_matches_solo_bitwise() {
+        use crate::compress::{compress_shard_batched, fold_shard_proxies, zero_shard_proxies};
+        let gen = LowRankGenerator::new(30, 30, 30, 2, 1007);
+        let cfg = base_cfg().rank(2).build().unwrap();
+        let solo = Pipeline::new(cfg.clone()).run(&gen).unwrap();
+
+        // Coordinator half: resolve the grid, simulate remote workers by
+        // running each shard range independently, fold in shard order.
+        let mut pipe = Pipeline::new(cfg);
+        let grid = pipe.sharded_grid(&gen).unwrap();
+        assert_eq!(grid.path, "batched");
+        let maps = MapSource::generate(
+            grid.dims,
+            grid.reduced,
+            grid.replicas,
+            grid.anchor,
+            grid.seed,
+            grid.map_tier,
+        );
+        let shards = ThreadPool::partition(grid.blocks_total, grid.shard_parts);
+        let mut folded = zero_shard_proxies(&maps);
+        for (b0, b1) in shards {
+            let acc = compress_shard_batched(&gen, &maps, grid.block, b0, b1);
+            fold_shard_proxies(&mut folded, acc);
+        }
+        let res = pipe.run_with_proxies(&gen, folded).unwrap();
+        assert_eq!(res.model.a, solo.model.a, "factor A must be bitwise solo");
+        assert_eq!(res.model.b, solo.model.b, "factor B");
+        assert_eq!(res.model.c, solo.model.c, "factor C");
     }
 
     #[test]

@@ -165,9 +165,11 @@ impl MemoryPlanner {
     ///
     /// When prefetching, raw blocks live in the queue (`prefetch_depth`),
     /// in producer reads (`io_threads`), and in consumers' hands
-    /// (`threads`) — all budgeted.  (Blocks parked out-of-order in a
-    /// shard's pending list are bounded by the engine's fold-prefix window
-    /// but not individually modeled; see ROADMAP.)  `batched = true`
+    /// (`threads`) — all budgeted.  (Blocks parked out-of-order at the
+    /// engine's in-position-order send stage are bounded by that same
+    /// `depth + io + threads` window — a producer only admits a new block
+    /// once the in-order prefix advances — so the queue term covers them;
+    /// no separate parked-block term exists.)  `batched = true`
     /// models the replica-batched f32 chain, whose mode-1 intermediate
     /// stacks all `P` replicas (`P·L × dj·dk` per worker) — the term that
     /// actually dominates tight out-of-core budgets.  `tier` picks the
@@ -230,6 +232,32 @@ impl MemoryPlanner {
             .max()
             .unwrap_or(0);
         proxies + maps + workers + shard_accs + queue + recovery
+    }
+
+    /// Peak bytes one shard-lease **worker process** pins while serving a
+    /// lease (see `serve/worker.rs`): the replica maps in their tier, one
+    /// in-flight block with its batched mode-1 intermediate and map
+    /// panels (`compress_shard_batched` runs the shard serially, so
+    /// exactly one block is live), one raw shard-accumulator set
+    /// (`P·L·M·N` floats — shards ship before the next begins, so the
+    /// count does not scale with `lease_shards`), and the hex wire buffer
+    /// for the replica currently streaming back (8 bytes per f32).
+    pub fn worker_residency(
+        dims: [usize; 3],
+        reduced: [usize; 3],
+        replicas: usize,
+        block: [usize; 3],
+        tier: MapTier,
+    ) -> usize {
+        let f = std::mem::size_of::<f32>();
+        let [l, m, n] = reduced;
+        let maps = Self::replica_map_bytes(dims, reduced, replicas, tier);
+        let blk = block[0] * block[1] * block[2];
+        let interm = replicas * l * block[1] * block[2];
+        let panels = replicas * l * block[0] + m * block[1] + n * block[2];
+        let acc = replicas * l * m * n * f;
+        let wire = l * m * n * 2 * f;
+        maps + (blk + interm + panels) * f + acc + wire
     }
 
     /// Resolves the plan for `dims` under `cfg`, shrinking blocks to satisfy
@@ -756,6 +784,41 @@ mod tests {
         c.memory_budget = 0;
         let plan = MemoryPlanner::plan(&c, [2000, 2000, 2000]).unwrap();
         assert_eq!(plan.map_tier, MapTier::Procedural);
+    }
+
+    #[test]
+    fn worker_residency_hand_computed() {
+        // Same shapes as the tier test: dims [100,80,60], reduced 10³,
+        // P=3, block [20,20,20].  By hand:
+        //   maps (mat) = 3·(10·100 + 10·80 + 10·60)·4    = 28 800
+        //   block path = (20³ + 3·10·20·20
+        //                 + (3·10·20 + 10·20 + 10·20))·4 = 84 000
+        //   accumulator= 3·10³·4                         = 12 000
+        //   wire (hex) = 10³·8                           =  8 000
+        //   total (materialized)                         = 132 800
+        //   total (procedural) = same − 28 800           = 104 000
+        let res = |tier| {
+            MemoryPlanner::worker_residency([100, 80, 60], [10; 3], 3, [20; 3], tier)
+        };
+        assert_eq!(res(MapTier::Materialized), 132_800);
+        assert_eq!(res(MapTier::Procedural), 104_000);
+        // A worker is strictly cheaper than the coordinator's own full
+        // estimate at the same shapes — the point of sharding out.
+        let full = MemoryPlanner::estimate_bytes(
+            [100, 80, 60],
+            [10; 3],
+            3,
+            [20; 3],
+            2,
+            4,
+            0,
+            1,
+            true,
+            MapTier::Materialized,
+            256,
+            RecoverySolverKind::Cholesky,
+        );
+        assert!(res(MapTier::Materialized) < full);
     }
 
     #[test]

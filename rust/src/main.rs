@@ -13,6 +13,9 @@
 //! * `serve`      — the multi-tenant decomposition daemon (job scheduler
 //!   with memory-budget admission control, result cache, crash-safe job
 //!   spool; line-delimited JSON protocol over TCP).
+//! * `worker`     — join a running daemon as a shard-lease worker: pulls
+//!   leased shard ranges of `--sharded` jobs, streams raw accumulators
+//!   back, exits when the coordinator drains.
 //! * `client`     — talk to a running daemon
 //!   (`submit|status|result|cancel|metrics|shutdown`).
 
@@ -41,6 +44,7 @@ fn main() {
         "cp-layer" => cmd_cp_layer(&prog, &rest),
         "artifacts" => cmd_artifacts(),
         "serve" => cmd_serve(&prog, &rest),
+        "worker" => cmd_worker(&prog, &rest),
         "client" => cmd_client(&prog, &rest),
         _ => {
             print_help(&prog);
@@ -58,7 +62,7 @@ fn main() {
 fn print_help(prog: &str) {
     println!(
         "exatensor — compressed CP tensor decomposition (Exascale-Tensor)\n\n\
-         USAGE: {prog} <decompose|gen-tensor|gene|cp-layer|artifacts|serve|client> [OPTIONS]\n\n\
+         USAGE: {prog} <decompose|gen-tensor|gene|cp-layer|artifacts|serve|worker|client> [OPTIONS]\n\n\
          Run `{prog} <subcommand> --help` for options."
     );
 }
@@ -439,6 +443,17 @@ fn serve_cmd() -> Command {
             None,
         )
         .opt(
+            "lease-timeout-ms",
+            "sharded jobs: worker lease deadline in ms (an expired lease's \
+             unfinished shards are re-leased)",
+            Some("5000"),
+        )
+        .opt(
+            "lease-shards",
+            "sharded jobs: contiguous shards per lease grant",
+            Some("4"),
+        )
+        .opt(
             "batch-threshold-mb",
             "batch lane: jobs whose plan costs at most this coalesce into \
              shared ALS sweeps (0 = lane off)",
@@ -486,6 +501,8 @@ fn cmd_serve(prog: &str, args: &[String]) -> i32 {
                 batch_threshold_bytes: m.get_usize("batch-threshold-mb")? * (1 << 20),
                 batch_max_jobs: m.get_usize("batch-max-jobs")?,
                 tenant_quota: m.get_usize("tenant-quota")?,
+                lease_timeout_ms: m.get_u64("lease-timeout-ms")?,
+                lease_shards: m.get_usize("lease-shards")?,
                 ..Default::default()
             },
             conn_timeout_ms: m.get_u64("conn-timeout-ms")?,
@@ -498,6 +515,67 @@ fn cmd_serve(prog: &str, args: &[String]) -> i32 {
         use std::io::Write as _;
         std::io::stdout().flush().ok();
         server.run()
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+fn worker_cmd() -> Command {
+    Command::new("worker", "join a daemon as a shard-lease worker")
+        .opt("addr", "coordinator address", Some("127.0.0.1:7077"))
+        .opt("name", "worker name shown by LIST", Some("worker"))
+        .opt("backoff-ms", "idle backoff when no lease is available", Some("50"))
+        .opt(
+            "fault-plan",
+            "chaos testing: arm a deterministic fault plan, e.g. \
+             'seed=7;worker_panic:period=1,max=1'",
+            None,
+        )
+        .opt(
+            "key",
+            "fault key matched by worker_panic:…,key=K schedules, so a \
+             plan kills exactly one worker of a fleet",
+            Some("0"),
+        )
+        .switch("help", "show help")
+}
+
+fn cmd_worker(prog: &str, args: &[String]) -> i32 {
+    let cmd = worker_cmd();
+    let m = match cmd.parse(args) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}\n{}", cmd.usage(prog));
+            return 2;
+        }
+    };
+    if m.get_bool("help") {
+        println!("{}", cmd.usage(prog));
+        return 0;
+    }
+    let run = || -> anyhow::Result<()> {
+        if let Some(plan) = m.get("fault-plan") {
+            exascale_tensor::util::fault::arm(exascale_tensor::util::fault::FaultPlan::parse(
+                plan,
+            )?);
+        }
+        let cfg = exascale_tensor::serve::WorkerConfig {
+            addr: m.req("addr")?.to_string(),
+            name: m.req("name")?.to_string(),
+            backoff_ms: m.get_u64("backoff-ms")?,
+            fault_key: m.get_u64("key")?,
+        };
+        let report = exascale_tensor::serve::run_worker(&cfg)?;
+        println!(
+            "worker {}: coordinator drained after {} leases, {} shards served",
+            cfg.name, report.leases, report.shards
+        );
+        Ok(())
     };
     match run() {
         Ok(()) => 0,
@@ -535,6 +613,11 @@ fn client_cmd() -> Command {
     .opt("recovery-panel-cols", "streamed map-panel width in columns", Some("256"))
     .opt("seed", "random seed", Some("0"))
     .opt("poll-ms", "--wait poll interval", Some("200"))
+    .switch(
+        "sharded",
+        "run the compression stage across connected shard-lease workers \
+         (results stay bitwise identical to a solo run)",
+    )
     .switch("wait", "block until the submitted job is terminal")
     .switch("help", "show help")
 }
@@ -593,6 +676,7 @@ fn cmd_client(prog: &str, args: &[String]) -> i32 {
                     config,
                     priority: m.get_f64("priority")? as i64,
                     tenant: m.get("tenant").unwrap_or("").to_string(),
+                    sharded: m.get_bool("sharded"),
                 })
             }
             "status" => Request::Status(want_id()?),

@@ -149,6 +149,7 @@ mod tests {
                     .unwrap(),
                 priority: 0,
                 tenant: String::new(),
+                sharded: false,
             },
             state: JobState::Queued,
             plan_bytes,

@@ -282,6 +282,7 @@ mod tests {
                 .unwrap(),
             priority: 0,
             tenant: String::new(),
+            sharded: false,
         }
     }
 

@@ -137,6 +137,13 @@ pub struct JobSpec {
     /// part of the result-cache key, so identical work from different
     /// tenants still shares cache entries.
     pub tenant: String,
+    /// Run the compression stage in sharded mode: the daemon partitions
+    /// the deterministic shard grid into lease ranges and farms them out
+    /// to `worker` processes over the serve protocol, folding the
+    /// returned shard accumulators in shard order so the result is
+    /// bitwise identical to a solo run.  Like `tenant`/`priority` this is
+    /// execution metadata and is NOT part of the result-cache key.
+    pub sharded: bool,
 }
 
 impl JobSpec {
@@ -148,6 +155,9 @@ impl JobSpec {
         ];
         if !self.tenant.is_empty() {
             pairs.push(("tenant", Json::str(self.tenant.clone())));
+        }
+        if self.sharded {
+            pairs.push(("sharded", Json::Bool(true)));
         }
         Json::obj(pairs)
     }
@@ -162,6 +172,7 @@ impl JobSpec {
                 .and_then(|x| x.as_str())
                 .unwrap_or("")
                 .to_string(),
+            sharded: v.get("sharded").and_then(|x| x.as_bool()).unwrap_or(false),
         })
     }
 }
@@ -469,6 +480,7 @@ mod tests {
                 .unwrap(),
             priority: 3,
             tenant: "acme".into(),
+            sharded: false,
         }
     }
 
@@ -522,6 +534,13 @@ mod tests {
         let spec_json = anon.to_json();
         assert!(spec_json.get("tenant").is_none(), "empty tenant stays implicit");
         assert_eq!(JobSpec::from_json(&spec_json).unwrap().tenant, "");
+        // Like the tenant, `sharded` is implicit when off and survives the
+        // round trip when on (legacy specs default to unsharded).
+        assert!(spec_json.get("sharded").is_none(), "unsharded stays implicit");
+        assert!(!JobSpec::from_json(&spec_json).unwrap().sharded);
+        let mut shd = rec.spec.clone();
+        shd.sharded = true;
+        assert!(JobSpec::from_json(&shd.to_json()).unwrap().sharded);
         assert_eq!(back.resolved_solver, Some(RecoverySolverKind::Cholesky));
         // Legacy records (no resolved_solver key) default to None.
         let mut legacy = rec.to_json();

@@ -19,8 +19,14 @@
 //!   compatibility key, deficit-round-robin tenant fair share.
 //! * [`cache`]     — tensor fingerprinting + LRU byte-budget result cache.
 //! * [`protocol`]  — the wire format (`SUBMIT`/`STATUS`/`RESULT`/`CANCEL`/
-//!   `LIST`/`METRICS`/`SHUTDOWN`) and the one-shot client.
+//!   `LIST`/`METRICS`/`SHUTDOWN`, plus the worker plane `WORKER_HELLO`/
+//!   `LEASE`/`PARTIAL`/`RENEW`) and the one-shot client.
 //! * [`server`]    — the TCP accept loop + graceful drain.
+//! * [`shard`]     — the coordinator's lease ledger for sharded jobs:
+//!   shard slots, deadlines, digest-checked partial ingestion, and the
+//!   in-shard-order fold that keeps results bitwise identical.
+//! * [`worker`]    — the thin worker-process loop that joins a
+//!   coordinator and executes leased shard ranges.
 
 pub mod batch;
 pub mod cache;
@@ -28,6 +34,8 @@ pub mod job;
 pub mod protocol;
 pub mod scheduler;
 pub mod server;
+pub mod shard;
+pub mod worker;
 
 pub use batch::{compat_key, lane_eligible, DrrState};
 pub use cache::{cache_key, file_fingerprint, model_digest, CachedResult, ResultCache};
@@ -35,3 +43,5 @@ pub use job::{JobId, JobOutcome, JobRecord, JobSource, JobSpec, JobState, Spool}
 pub use protocol::Request;
 pub use scheduler::{Scheduler, SchedulerConfig};
 pub use server::{Server, ServerConfig, DEFAULT_CONN_TIMEOUT_MS, DEFAULT_MAX_CONNS};
+pub use shard::{LeaseGrant, ShardConfig, ShardRegistry};
+pub use worker::{run_worker, WorkerConfig, WorkerReport};

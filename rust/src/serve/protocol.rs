@@ -3,10 +3,12 @@
 //! One request per line, one response per line; a connection may carry any
 //! number of request/response pairs.  Requests are objects with a `cmd`
 //! field (`SUBMIT`, `STATUS`, `RESULT`, `CANCEL`, `LIST`, `METRICS`,
-//! `SHUTDOWN`); responses always carry `"ok": true|false` and, on failure,
-//! `"error"`.  `LIST` returns a one-line summary per known job —
-//! id/state/tenant/priority — for fleet dashboards that must not pull
-//! every record's full spec.
+//! `SHUTDOWN`, plus the worker-plane verbs `WORKER_HELLO`, `LEASE`,
+//! `PARTIAL`, `RENEW` used by shard workers — see `serve/shard.rs`);
+//! responses always carry `"ok": true|false` and, on failure, `"error"`.
+//! `LIST` returns a one-line summary per known job —
+//! id/state/tenant/priority (+ active shard workers) — for fleet
+//! dashboards that must not pull every record's full spec.
 //!
 //! ```text
 //! → {"cmd":"SUBMIT","spec":{"source":{...},"config":{...},"priority":0}}
@@ -21,6 +23,76 @@ use anyhow::{bail, Context, Result};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
 
+/// One replica of one shard-local accumulator, streamed back from a
+/// worker (`PARTIAL`).  Replicas are sent one per message so every line
+/// stays under [`MAX_LINE_BYTES`] for serve-sized grids; `data` is the
+/// hex-encoded little-endian `f32` bytes and `digest` their FNV-1a hash,
+/// verified by the coordinator before the payload enters the fold.
+#[derive(Clone, Debug)]
+pub struct PartialMsg {
+    pub worker: String,
+    pub job: JobId,
+    /// The lease this payload was computed under; a stale id (the range
+    /// was re-leased after a timeout) is answered with `abandoned`.
+    pub lease: u64,
+    /// Global shard index in the deterministic partition.
+    pub shard: usize,
+    /// Replica index within the shard accumulator (`0..replicas`).
+    pub replica: usize,
+    pub data: String,
+    pub digest: u64,
+}
+
+impl PartialMsg {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("cmd", Json::str("PARTIAL")),
+            ("worker", Json::str(self.worker.clone())),
+            ("job", Json::str(self.job.clone())),
+            ("lease", Json::num(self.lease as f64)),
+            ("shard", Json::num(self.shard as f64)),
+            ("replica", Json::num(self.replica as f64)),
+            ("data", Json::str(self.data.clone())),
+            ("digest", Json::str(format!("{:016x}", self.digest))),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<PartialMsg> {
+        let field = |k: &str| -> Result<usize> {
+            v.get(k)
+                .and_then(|x| x.as_usize())
+                .with_context(|| format!("PARTIAL missing {k}"))
+        };
+        Ok(PartialMsg {
+            worker: v
+                .get("worker")
+                .and_then(|x| x.as_str())
+                .context("PARTIAL missing worker")?
+                .to_string(),
+            job: v
+                .get("job")
+                .and_then(|x| x.as_str())
+                .context("PARTIAL missing job")?
+                .to_string(),
+            lease: field("lease")? as u64,
+            shard: field("shard")?,
+            replica: field("replica")?,
+            data: v
+                .get("data")
+                .and_then(|x| x.as_str())
+                .context("PARTIAL missing data")?
+                .to_string(),
+            digest: u64::from_str_radix(
+                v.get("digest")
+                    .and_then(|x| x.as_str())
+                    .context("PARTIAL missing digest")?,
+                16,
+            )
+            .context("bad PARTIAL digest")?,
+        })
+    }
+}
+
 /// A parsed client request.
 #[derive(Debug)]
 pub enum Request {
@@ -32,6 +104,15 @@ pub enum Request {
     List,
     Metrics,
     Shutdown,
+    /// A shard worker announcing itself to the coordinator.
+    WorkerHello { worker: String },
+    /// A worker pulling its next lease; the response is a grant, an idle
+    /// backoff hint, or a shutdown signal.
+    Lease { worker: String },
+    /// One replica of one shard accumulator computed under a lease.
+    Partial(PartialMsg),
+    /// Heartbeat extending a lease's deadline mid-computation.
+    Renew { worker: String, job: JobId, lease: u64 },
 }
 
 impl Request {
@@ -53,6 +134,21 @@ impl Request {
             Request::List => Json::obj(vec![("cmd", Json::str("LIST"))]),
             Request::Metrics => Json::obj(vec![("cmd", Json::str("METRICS"))]),
             Request::Shutdown => Json::obj(vec![("cmd", Json::str("SHUTDOWN"))]),
+            Request::WorkerHello { worker } => Json::obj(vec![
+                ("cmd", Json::str("WORKER_HELLO")),
+                ("worker", Json::str(worker.clone())),
+            ]),
+            Request::Lease { worker } => Json::obj(vec![
+                ("cmd", Json::str("LEASE")),
+                ("worker", Json::str(worker.clone())),
+            ]),
+            Request::Partial(msg) => msg.to_json(),
+            Request::Renew { worker, job, lease } => Json::obj(vec![
+                ("cmd", Json::str("RENEW")),
+                ("worker", Json::str(worker.clone())),
+                ("job", Json::str(job.clone())),
+                ("lease", Json::num(*lease as f64)),
+            ]),
         }
     }
 
@@ -73,6 +169,37 @@ impl Request {
             Some("LIST") => Ok(Request::List),
             Some("METRICS") => Ok(Request::Metrics),
             Some("SHUTDOWN") => Ok(Request::Shutdown),
+            Some("WORKER_HELLO") => Ok(Request::WorkerHello {
+                worker: v
+                    .get("worker")
+                    .and_then(|x| x.as_str())
+                    .context("WORKER_HELLO missing worker")?
+                    .to_string(),
+            }),
+            Some("LEASE") => Ok(Request::Lease {
+                worker: v
+                    .get("worker")
+                    .and_then(|x| x.as_str())
+                    .context("LEASE missing worker")?
+                    .to_string(),
+            }),
+            Some("PARTIAL") => Ok(Request::Partial(PartialMsg::from_json(v)?)),
+            Some("RENEW") => Ok(Request::Renew {
+                worker: v
+                    .get("worker")
+                    .and_then(|x| x.as_str())
+                    .context("RENEW missing worker")?
+                    .to_string(),
+                job: v
+                    .get("job")
+                    .and_then(|x| x.as_str())
+                    .context("RENEW missing job")?
+                    .to_string(),
+                lease: v
+                    .get("lease")
+                    .and_then(|x| x.as_usize())
+                    .context("RENEW missing lease")? as u64,
+            }),
             other => bail!("unknown cmd {other:?}"),
         }
     }
@@ -238,6 +365,7 @@ mod tests {
                 .unwrap(),
             priority: 1,
             tenant: "acme".into(),
+            sharded: true,
         };
         for req in [
             Request::Submit(spec),
@@ -247,6 +375,18 @@ mod tests {
             Request::List,
             Request::Metrics,
             Request::Shutdown,
+            Request::WorkerHello { worker: "w0-123".into() },
+            Request::Lease { worker: "w0-123".into() },
+            Request::Partial(PartialMsg {
+                worker: "w0-123".into(),
+                job: "job-000004".into(),
+                lease: 9,
+                shard: 5,
+                replica: 2,
+                data: "0000803f".into(),
+                digest: 0x1234_5678_9abc_def0,
+            }),
+            Request::Renew { worker: "w0-123".into(), job: "job-000004".into(), lease: 9 },
         ] {
             let v = Json::parse(&req.to_json().to_string_compact()).unwrap();
             let back = Request::from_json(&v).unwrap();

@@ -30,8 +30,12 @@
 
 use super::cache::{cache_key, model_digest, CachedResult, ResultCache};
 use super::job::{JobId, JobOutcome, JobRecord, JobSpec, JobState, Spool};
-use crate::coordinator::{checkpoint, MemoryPlanner, Metrics, Pipeline};
+use super::protocol::PartialMsg;
+use super::shard::{ShardConfig, ShardRegistry};
+use crate::coordinator::{checkpoint, MemoryPlanner, Metrics, Pipeline, PipelineResult};
 use crate::cp::CpModel;
+use crate::tensor::TensorSource;
+use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 use std::collections::{BTreeMap, BTreeSet};
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -88,6 +92,11 @@ pub struct SchedulerConfig {
     /// extension (0 = unlimited).  Candidates deferred by the cap stay
     /// queued and are counted in `tenant_quota_deferrals`.
     pub tenant_quota: usize,
+    /// **Shard leases**: a sharded job's lease with no PARTIAL/RENEW
+    /// activity for this long is abandoned and its shards re-leased.
+    pub lease_timeout_ms: u64,
+    /// Max contiguous shards granted per lease to one worker.
+    pub lease_shards: usize,
 }
 
 impl Default for SchedulerConfig {
@@ -103,6 +112,8 @@ impl Default for SchedulerConfig {
             batch_threshold_bytes: 0,
             batch_max_jobs: 32,
             tenant_quota: 0,
+            lease_timeout_ms: 5_000,
+            lease_shards: 4,
         }
     }
 }
@@ -149,6 +160,8 @@ struct Inner {
     batch_threshold_bytes: usize,
     batch_max_jobs: usize,
     tenant_quota: usize,
+    /// Lease ledger for sharded jobs (worker-plane verbs route here).
+    shards: ShardRegistry,
     state: Mutex<State>,
     cv: Condvar,
 }
@@ -238,6 +251,14 @@ impl Scheduler {
         let inner = Arc::new(Inner {
             spool,
             cache: ResultCache::new(cfg.cache_bytes),
+            shards: ShardRegistry::new(
+                ShardConfig {
+                    lease_timeout_ms: cfg.lease_timeout_ms,
+                    lease_shards: cfg.lease_shards,
+                    ..ShardConfig::default()
+                },
+                Arc::clone(&metrics),
+            ),
             metrics,
             budget: cfg.memory_budget,
             starvation_rounds: cfg.starvation_rounds,
@@ -312,6 +333,7 @@ impl Scheduler {
                     config: cfg,
                     priority: spec.priority,
                     tenant: spec.tenant,
+                    sharded: spec.sharded,
                 },
                 state: JobState::Submitted,
                 plan_bytes: plan.estimated_bytes,
@@ -458,10 +480,14 @@ impl Scheduler {
     }
 
     /// Begins the graceful drain: stop admitting, let running jobs finish.
+    /// Workers pulling LEASE are told to shut down; a running sharded job
+    /// still completes — the registry's self-drain finishes any shards
+    /// its departing workers abandoned.
     pub fn shutdown(&self) {
         let mut st = self.inner.state.lock().unwrap();
         st.shutting_down = true;
         drop(st);
+        self.inner.shards.shutdown();
         self.inner.cv.notify_all();
     }
 
@@ -483,6 +509,34 @@ impl Scheduler {
 
     pub fn metrics(&self) -> &Metrics {
         &self.inner.metrics
+    }
+
+    /// Worker plane: `WORKER_HELLO` — registers a shard worker.
+    pub fn worker_hello(&self, worker: &str) -> Json {
+        self.inner.shards.hello(worker)
+    }
+
+    /// Worker plane: `LEASE` — grants a shard range or answers
+    /// idle/shutdown.
+    pub fn lease(&self, worker: &str) -> Json {
+        self.inner.shards.lease(worker)
+    }
+
+    /// Worker plane: `PARTIAL` — ingests one replica of one shard
+    /// accumulator.
+    pub fn partial(&self, msg: &PartialMsg) -> Json {
+        self.inner.shards.partial(msg)
+    }
+
+    /// Worker plane: `RENEW` — extends a live lease's deadline.
+    pub fn renew(&self, worker: &str, job: &str, lease: u64) -> Json {
+        self.inner.shards.renew(worker, job, lease)
+    }
+
+    /// Workers currently holding leases on `job` (`LIST`'s per-job
+    /// assignment column).
+    pub fn workers_for(&self, job: &str) -> Vec<String> {
+        self.inner.shards.workers_for(job)
     }
 
     /// Where a finished job's factor files land in the spool.
@@ -832,7 +886,11 @@ impl Inner {
             }
             let src = rec.spec.source.open()?;
             let mut pipe = Pipeline::new(rec.spec.config.clone());
-            let res = pipe.run(src.as_ref())?;
+            let res = if rec.spec.sharded {
+                self.run_sharded(&rec, &mut pipe, src.as_ref())?
+            } else {
+                pipe.run(src.as_ref())?
+            };
             self.fold_pipeline_metrics(&pipe);
             let digest = model_digest(&res.model);
             Ok((
@@ -849,6 +907,49 @@ impl Inner {
         self.metrics.record("job_run", started.elapsed().as_secs_f64());
         let (run, panicked) = unwrap_panic(run);
         self.settle(id, &rec.cache_key, run, panicked);
+    }
+
+    /// Runs a sharded job: the compression stage executes on leased
+    /// workers through the [`ShardRegistry`] (or the registry's own
+    /// self-drain when none are live), and the decomposition/recovery
+    /// stages run locally on the folded proxies.  The fold order makes
+    /// the result bitwise identical to `pipe.run(src)`.
+    ///
+    /// Completed compressions are promoted to a full proxy checkpoint and
+    /// the partial is cleared — the same handoff the solo compress stage
+    /// performs — so a crash after compression resumes without re-leasing
+    /// anything, and a transient-failure retry re-enters here and picks
+    /// the proxies straight up.
+    fn run_sharded(
+        &self,
+        rec: &JobRecord,
+        pipe: &mut Pipeline,
+        src: &dyn TensorSource,
+    ) -> Result<PipelineResult> {
+        let grid = pipe.sharded_grid(src)?;
+        let dir = rec
+            .spec
+            .config
+            .checkpoint_dir
+            .clone()
+            .context("sharded job has no checkpoint dir")?;
+        let fp = checkpoint::default_fingerprint(&rec.spec.config, grid.dims, grid.replicas);
+        let proxies = match checkpoint::load_proxies(&dir, &fp)? {
+            Some(p) => p,
+            None => {
+                let p = self.shards.run_sharded(
+                    &rec.id,
+                    rec.spec.source.clone(),
+                    grid,
+                    &dir,
+                    fp.clone(),
+                )?;
+                checkpoint::save_proxies(&dir, &fp, &p)?;
+                checkpoint::clear_partial(&dir)?;
+                p
+            }
+        };
+        pipe.run_with_proxies(src, proxies)
     }
 
     /// Runs a coalesced batch of admitted jobs as one shared ALS sweep on
@@ -1240,6 +1341,7 @@ mod tests {
                 .unwrap(),
             priority,
             tenant: String::new(),
+            sharded: false,
         }
     }
 
@@ -1258,6 +1360,7 @@ mod tests {
                 .unwrap(),
             priority,
             tenant: String::new(),
+            sharded: false,
         }
     }
 

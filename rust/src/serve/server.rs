@@ -3,7 +3,10 @@
 //! One thread per connection, newline-delimited JSON request/response
 //! pairs (see [`super::protocol`]).  `SHUTDOWN` answers, then starts the
 //! graceful drain: the acceptor stops taking connections, running jobs
-//! complete, queued jobs stay spooled for the next start.  A hard kill
+//! complete, queued jobs stay spooled for the next start.  Worker-plane
+//! verbs (`WORKER_HELLO`/`LEASE`/`PARTIAL`/`RENEW`) stay live through the
+//! drain so a running sharded job can finish folding its partials while
+//! `LEASE` tells the worker fleet to shut down.  A hard kill
 //! (SIGKILL / power loss) is also safe: job records are committed by
 //! atomic rename and running jobs leave incremental pipeline checkpoints,
 //! so the next `bind` + `run` recovers the queue and resumes mid-
@@ -228,16 +231,25 @@ fn handle_conn(shared: Arc<Shared>, stream: TcpStream) {
                 return;
             }
         };
+        let req = match Request::from_json(&msg) {
+            Ok(req) => req,
+            Err(e) => {
+                if protocol::write_line(&mut writer, &protocol::err(format!("{e:#}"))).is_err() {
+                    return;
+                }
+                continue;
+            }
+        };
         // During the drain, answer with an error and close: open
-        // connections must not keep the daemon serving.
-        if shared.shutting_down.load(Ordering::SeqCst) {
+        // connections must not keep the daemon serving.  The worker plane
+        // is exempt — a draining daemon's *running* sharded job still
+        // needs its partials folded, and `LEASE` is precisely how workers
+        // learn to shut down (the shard registry answers `shutdown`).
+        if shared.shutting_down.load(Ordering::SeqCst) && !is_worker_plane(&req) {
             let _ = protocol::write_line(&mut writer, &protocol::err("daemon is draining"));
             return;
         }
-        let (resp, shutdown) = match Request::from_json(&msg) {
-            Ok(req) => dispatch(&shared, req),
-            Err(e) => (protocol::err(format!("{e:#}")), false),
-        };
+        let (resp, shutdown) = dispatch(&shared, req);
         if protocol::write_line(&mut writer, &resp).is_err() {
             return;
         }
@@ -264,6 +276,17 @@ fn trigger_shutdown(shared: &Shared) {
         }
         let _ = TcpStream::connect(target);
     }
+}
+
+/// Worker-plane verbs keep working during the drain (see `handle_conn`).
+fn is_worker_plane(req: &Request) -> bool {
+    matches!(
+        req,
+        Request::WorkerHello { .. }
+            | Request::Lease { .. }
+            | Request::Partial(_)
+            | Request::Renew { .. }
+    )
 }
 
 fn dispatch(shared: &Shared, req: Request) -> (Json, bool) {
@@ -313,11 +336,18 @@ fn dispatch(shared: &Shared, req: Request) -> (Json, bool) {
                 .jobs()
                 .into_iter()
                 .map(|rec| {
+                    let workers: Vec<Json> = shared
+                        .scheduler
+                        .workers_for(&rec.id)
+                        .into_iter()
+                        .map(Json::str)
+                        .collect();
                     Json::obj(vec![
                         ("id", Json::str(rec.id.clone())),
                         ("state", Json::str(rec.state.as_str())),
                         ("tenant", Json::str(rec.spec.tenant.clone())),
                         ("priority", Json::num(rec.spec.priority as f64)),
+                        ("workers", Json::Arr(workers)),
                     ])
                 })
                 .collect();
@@ -331,6 +361,12 @@ fn dispatch(shared: &Shared, req: Request) -> (Json, bool) {
                 .map(|(k, v)| (k, Json::num(v as f64)))
                 .collect();
             (protocol::ok(vec![("metrics", Json::Obj(snap))]), false)
+        }
+        Request::WorkerHello { worker } => (shared.scheduler.worker_hello(&worker), false),
+        Request::Lease { worker } => (shared.scheduler.lease(&worker), false),
+        Request::Partial(msg) => (shared.scheduler.partial(&msg), false),
+        Request::Renew { worker, job, lease } => {
+            (shared.scheduler.renew(&worker, &job, lease), false)
         }
         Request::Shutdown => (protocol::ok(vec![("draining", Json::Bool(true))]), true),
     }

@@ -1,0 +1,1121 @@
+//! Shard-lease execution: the coordinator side of sharded multi-worker
+//! runs (PR 9).
+//!
+//! A job submitted with `"sharded": true` does not stream its blocks in
+//! the daemon process.  Instead the scheduler registers the job's
+//! deterministic shard grid (the same fixed
+//! [`ThreadPool::partition`] over the block grid the single-process
+//! engine uses) with the [`ShardRegistry`], and worker processes pull
+//! **leases** — contiguous shard ranges — over the serve protocol:
+//!
+//! ```text
+//!   worker                    coordinator
+//!   WORKER_HELLO  ─────────▶  register worker
+//!   LEASE         ─────────▶  grant {job, lease, shard0..shard1, grid}
+//!   (runs the engine on its range, one shard at a time)
+//!   PARTIAL ×P    ─────────▶  verify digest, assemble replicas
+//!   RENEW         ─────────▶  extend the lease deadline
+//! ```
+//!
+//! Each completed shard arrives as `P` raw shard-local accumulators —
+//! **never** a worker-side fold across shards, because float addition is
+//! not associative and the single-process engine folds shard
+//! accumulators into the proxies in strict shard-index order.  The
+//! registry parks complete shards that arrive out of order and folds the
+//! contiguous prefix with [`fold_shard_proxies`], so the final proxies —
+//! and therefore the factors and `model_digest` downstream — are bitwise
+//! identical to the unsharded run.
+//!
+//! The folded prefix doubles as the job's incremental checkpoint: it is
+//! persisted with [`checkpoint::save_partial`] under the job's
+//! checkpoint dir, so a restarted coordinator resumes from `shards_done`
+//! exactly like the solo engine resumes mid-compression.  Leases that
+//! miss their deadline (worker death, stalled connection) return their
+//! unfinished shards to the pending set (`leases_relet`); and when no
+//! live worker is pulling — none ever connected, all died, or the daemon
+//! is draining — the coordinator drains pending shards itself with
+//! [`compress_shard_batched`], so a sharded job always terminates with
+//! the same bits, workers or not.
+
+use super::job::{JobId, JobSource};
+use super::protocol::{self, PartialMsg};
+use crate::compress::{compress_shard_batched, fold_shard_proxies, MapSource, MapTier};
+use crate::coordinator::checkpoint::{self, CompressionProgress, Fingerprint};
+use crate::coordinator::{Metrics, ShardedGrid};
+use crate::tensor::{DenseTensor, TensorSource};
+use crate::util::hash::fnv1a64;
+use crate::util::json::Json;
+use crate::util::threadpool::ThreadPool;
+use anyhow::{bail, Context, Result};
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Registry knobs, lifted from the scheduler config.
+#[derive(Clone, Debug)]
+pub struct ShardConfig {
+    /// A lease with no PARTIAL/RENEW activity for this long is abandoned
+    /// and its unfinished shards re-leased.
+    pub lease_timeout_ms: u64,
+    /// Max contiguous shards granted per lease.
+    pub lease_shards: usize,
+    /// Idle-poll backoff hint returned to workers when no work is ready.
+    pub backoff_ms: u64,
+    /// Persist the folded prefix every this many newly folded shards.
+    pub checkpoint_every: usize,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        Self {
+            lease_timeout_ms: 5_000,
+            lease_shards: 4,
+            backoff_ms: 50,
+            checkpoint_every: 8,
+        }
+    }
+}
+
+/// Hex-encodes `data` as little-endian `f32` bytes — the PARTIAL payload
+/// encoding.  Hex doubles the bytes but keeps the wire format
+/// line-delimited JSON like every other verb; a shard accumulator is
+/// `L·M·N` floats, far under [`protocol::MAX_LINE_BYTES`].
+pub fn encode_f32_hex(data: &[f32]) -> String {
+    const HEX: &[u8; 16] = b"0123456789abcdef";
+    let mut out = String::with_capacity(data.len() * 8);
+    for v in data {
+        for b in v.to_le_bytes() {
+            out.push(HEX[(b >> 4) as usize] as char);
+            out.push(HEX[(b & 0xf) as usize] as char);
+        }
+    }
+    out
+}
+
+/// Inverse of [`encode_f32_hex`].
+pub fn decode_f32_hex(s: &str) -> Result<Vec<f32>> {
+    let bytes = s.as_bytes();
+    if bytes.len() % 8 != 0 {
+        bail!("payload hex length {} is not a multiple of 8", bytes.len());
+    }
+    let nib = |c: u8| -> Result<u8> {
+        match c {
+            b'0'..=b'9' => Ok(c - b'0'),
+            b'a'..=b'f' => Ok(c - b'a' + 10),
+            b'A'..=b'F' => Ok(c - b'A' + 10),
+            _ => bail!("invalid hex byte {c:#x} in payload"),
+        }
+    };
+    let mut out = Vec::with_capacity(bytes.len() / 8);
+    for ch in bytes.chunks_exact(8) {
+        let mut le = [0u8; 4];
+        for (i, p) in ch.chunks_exact(2).enumerate() {
+            le[i] = (nib(p[0])? << 4) | nib(p[1])?;
+        }
+        out.push(f32::from_le_bytes(le));
+    }
+    Ok(out)
+}
+
+/// FNV-1a over the little-endian bytes of one accumulator payload — the
+/// PARTIAL integrity check (same hash family as the checkpoint digests).
+pub fn payload_digest(data: &[f32]) -> u64 {
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    fnv1a64(&bytes)
+}
+
+/// One granted lease, as carried in the LEASE response.  Self-contained:
+/// a worker rebuilds the maps and the block grid from these fields alone
+/// and produces bit-identical shard accumulators.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LeaseGrant {
+    pub job: JobId,
+    pub lease: u64,
+    /// Granted shard range `[shard0, shard1)` in the fixed partition.
+    pub shard0: usize,
+    pub shard1: usize,
+    /// Lease deadline budget; a worker should RENEW well inside it.
+    pub deadline_ms: u64,
+    pub source: JobSource,
+    pub grid: ShardedGrid,
+}
+
+fn grid_to_json(g: &ShardedGrid) -> Json {
+    Json::obj(vec![
+        ("dims", Json::arr_usize(&g.dims)),
+        ("reduced", Json::arr_usize(&g.reduced)),
+        ("replicas", Json::num(g.replicas as f64)),
+        ("anchor", Json::num(g.anchor as f64)),
+        ("seed", Json::num(g.seed as f64)),
+        ("map_tier", Json::str(g.map_tier.as_str())),
+        ("block", Json::arr_usize(&g.block)),
+        ("blocks_total", Json::num(g.blocks_total as f64)),
+        ("shard_parts", Json::num(g.shard_parts as f64)),
+        ("path", Json::str(g.path.clone())),
+    ])
+}
+
+fn usize3(v: &Json, key: &str) -> Result<[usize; 3]> {
+    let arr = v
+        .get(key)
+        .and_then(|x| x.as_arr())
+        .with_context(|| format!("grant missing {key}"))?;
+    if arr.len() != 3 {
+        bail!("grant {key} must have 3 entries");
+    }
+    let mut out = [0usize; 3];
+    for (o, x) in out.iter_mut().zip(arr) {
+        *o = x.as_usize().with_context(|| format!("bad {key} entry"))?;
+    }
+    Ok(out)
+}
+
+fn field_usize(v: &Json, key: &str) -> Result<usize> {
+    v.get(key)
+        .and_then(|x| x.as_usize())
+        .with_context(|| format!("grant missing {key}"))
+}
+
+fn grid_from_json(v: &Json) -> Result<ShardedGrid> {
+    let tier = match v.get("map_tier").and_then(|x| x.as_str()) {
+        Some("materialized") => MapTier::Materialized,
+        Some("procedural") => MapTier::Procedural,
+        other => bail!("grant has unknown map_tier {other:?}"),
+    };
+    Ok(ShardedGrid {
+        dims: usize3(v, "dims")?,
+        reduced: usize3(v, "reduced")?,
+        replicas: field_usize(v, "replicas")?,
+        anchor: field_usize(v, "anchor")?,
+        seed: field_usize(v, "seed")? as u64,
+        map_tier: tier,
+        block: usize3(v, "block")?,
+        blocks_total: field_usize(v, "blocks_total")?,
+        shard_parts: field_usize(v, "shard_parts")?,
+        path: v
+            .get("path")
+            .and_then(|x| x.as_str())
+            .context("grant missing path")?
+            .to_string(),
+    })
+}
+
+impl LeaseGrant {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("job", Json::str(self.job.clone())),
+            ("lease", Json::num(self.lease as f64)),
+            ("shard0", Json::num(self.shard0 as f64)),
+            ("shard1", Json::num(self.shard1 as f64)),
+            ("deadline_ms", Json::num(self.deadline_ms as f64)),
+            ("source", self.source.to_json()),
+            ("grid", grid_to_json(&self.grid)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<LeaseGrant> {
+        Ok(LeaseGrant {
+            job: v
+                .get("job")
+                .and_then(|x| x.as_str())
+                .context("grant missing job")?
+                .to_string(),
+            lease: field_usize(v, "lease")? as u64,
+            shard0: field_usize(v, "shard0")?,
+            shard1: field_usize(v, "shard1")?,
+            deadline_ms: field_usize(v, "deadline_ms")? as u64,
+            source: JobSource::from_json(v.get("source").context("grant missing source")?)?,
+            grid: grid_from_json(v.get("grid").context("grant missing grid")?)?,
+        })
+    }
+}
+
+/// Lifecycle of one shard in the fixed partition.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Slot {
+    Pending,
+    Leased(u64),
+    Done,
+}
+
+struct Lease {
+    worker: String,
+    shard0: usize,
+    shard1: usize,
+    deadline: Instant,
+}
+
+/// Worker name the registry uses for its own self-drain "leases" — never
+/// granted over the wire, exempt from the deadline sweep by construction
+/// (the deadline is set far in the future; the compute happens inline).
+const LOCAL_WORKER: &str = "coordinator";
+
+struct ShardJob {
+    grid: ShardedGrid,
+    source: JobSource,
+    /// Per-shard block ranges `[b0, b1)` of the fixed partition.
+    shards: Vec<(usize, usize)>,
+    slots: Vec<Slot>,
+    /// Replica assembly for shards mid-delivery: one slot per replica.
+    assembling: BTreeMap<usize, Vec<Option<DenseTensor>>>,
+    /// Complete shards waiting for their fold turn (arrived out of order).
+    parked: BTreeMap<usize, Vec<DenseTensor>>,
+    /// Folded prefix — shards `0..next_fold` — over the zero (or resumed)
+    /// base, in strict shard order.
+    folded: Vec<DenseTensor>,
+    next_fold: usize,
+    blocks_done: usize,
+    leases: BTreeMap<u64, Lease>,
+    ckpt_dir: PathBuf,
+    fp: Fingerprint,
+    /// Next `save_partial` generation (monotone across coordinator
+    /// restarts: resumes start one past the loaded generation).
+    generation: u64,
+    /// `next_fold` at the last persisted checkpoint.
+    last_saved: usize,
+}
+
+impl ShardJob {
+    fn progress(&self) -> CompressionProgress {
+        CompressionProgress {
+            block: self.grid.block,
+            shard_parts: self.grid.shard_parts,
+            shards_total: self.shards.len(),
+            shards_done: self.next_fold,
+            blocks_done: self.blocks_done,
+            blocks_total: self.grid.blocks_total,
+            path: self.grid.path.clone(),
+            generation: self.generation,
+        }
+    }
+
+    fn done(&self) -> bool {
+        self.next_fold == self.shards.len()
+    }
+}
+
+struct RegState {
+    jobs: BTreeMap<JobId, ShardJob>,
+    workers: BTreeSet<String>,
+    next_lease: u64,
+    /// Last time any worker pulled a LEASE (or said hello; seeded with
+    /// the registry's creation time) — the liveness signal the
+    /// self-drain gate watches.
+    last_pull: Instant,
+    shutdown: bool,
+}
+
+/// The coordinator's lease ledger: shard slots, active leases, replica
+/// assembly, the in-order fold, and the partial-checkpoint writer.
+///
+/// All methods that answer protocol verbs return the response [`Json`]
+/// directly — the server's dispatch forwards them verbatim.
+pub struct ShardRegistry {
+    state: Mutex<RegState>,
+    cv: Condvar,
+    metrics: Arc<Metrics>,
+    cfg: ShardConfig,
+}
+
+impl ShardRegistry {
+    pub fn new(cfg: ShardConfig, metrics: Arc<Metrics>) -> Self {
+        Self {
+            state: Mutex::new(RegState {
+                jobs: BTreeMap::new(),
+                workers: BTreeSet::new(),
+                next_lease: 1,
+                last_pull: Instant::now(),
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+            metrics,
+            cfg,
+        }
+    }
+
+    fn timeout(&self) -> Duration {
+        Duration::from_millis(self.cfg.lease_timeout_ms.max(1))
+    }
+
+    fn note_worker(&self, st: &mut RegState, worker: &str) {
+        if st.workers.insert(worker.to_string()) {
+            self.metrics.incr("workers_connected", 1);
+        }
+    }
+
+    /// WORKER_HELLO: registers the worker name.
+    pub fn hello(&self, worker: &str) -> Json {
+        let mut st = self.state.lock().unwrap();
+        self.note_worker(&mut st, worker);
+        st.last_pull = Instant::now(); // a hello'd worker is about to pull
+        protocol::ok(vec![("workers", Json::num(st.workers.len() as f64))])
+    }
+
+    /// Returns every expired lease's unfinished shards to the pending
+    /// set.  Counts one `leases_relet` per abandoned lease.
+    fn sweep_expired(&self, st: &mut RegState, now: Instant) {
+        let mut relet = 0u64;
+        for job in st.jobs.values_mut() {
+            let expired: Vec<u64> = job
+                .leases
+                .iter()
+                .filter(|(_, l)| l.deadline <= now)
+                .map(|(id, _)| *id)
+                .collect();
+            for id in expired {
+                let l = job.leases.remove(&id).unwrap();
+                for s in l.shard0..l.shard1 {
+                    if job.slots[s] == Slot::Leased(id) {
+                        job.slots[s] = Slot::Pending;
+                        job.assembling.remove(&s);
+                    }
+                }
+                relet += 1;
+            }
+        }
+        if relet > 0 {
+            self.metrics.incr("leases_relet", relet);
+            self.cv.notify_all();
+        }
+    }
+
+    /// LEASE: grants the lowest contiguous run of pending shards (first
+    /// job in submission order with work), or an idle/shutdown reply.
+    pub fn lease(&self, worker: &str) -> Json {
+        let now = Instant::now();
+        let mut st = self.state.lock().unwrap();
+        self.note_worker(&mut st, worker);
+        st.last_pull = now;
+        if st.shutdown {
+            return protocol::ok(vec![("shutdown", Json::Bool(true))]);
+        }
+        self.sweep_expired(&mut st, now);
+        let deadline = now + self.timeout();
+        let lease_id = st.next_lease;
+        let mut grant: Option<LeaseGrant> = None;
+        for (id, job) in st.jobs.iter_mut() {
+            let Some(s0) = job.slots.iter().position(|s| *s == Slot::Pending) else {
+                continue;
+            };
+            let mut s1 = s0;
+            while s1 < job.slots.len()
+                && job.slots[s1] == Slot::Pending
+                && s1 - s0 < self.cfg.lease_shards.max(1)
+            {
+                job.slots[s1] = Slot::Leased(lease_id);
+                s1 += 1;
+            }
+            job.leases.insert(
+                lease_id,
+                Lease {
+                    worker: worker.to_string(),
+                    shard0: s0,
+                    shard1: s1,
+                    deadline,
+                },
+            );
+            grant = Some(LeaseGrant {
+                job: id.clone(),
+                lease: lease_id,
+                shard0: s0,
+                shard1: s1,
+                deadline_ms: self.cfg.lease_timeout_ms,
+                source: job.source.clone(),
+                grid: job.grid.clone(),
+            });
+            break;
+        }
+        match grant {
+            Some(g) => {
+                st.next_lease += 1;
+                self.metrics.incr("leases_granted", 1);
+                protocol::ok(vec![("grant", g.to_json())])
+            }
+            None => protocol::ok(vec![
+                ("idle", Json::Bool(true)),
+                ("backoff_ms", Json::num(self.cfg.backoff_ms as f64)),
+            ]),
+        }
+    }
+
+    /// RENEW: extends the lease deadline if it is still live.
+    pub fn renew(&self, worker: &str, job: &str, lease: u64) -> Json {
+        let now = Instant::now();
+        let mut st = self.state.lock().unwrap();
+        let timeout = self.timeout();
+        let live = st
+            .jobs
+            .get_mut(job)
+            .and_then(|j| j.leases.get_mut(&lease))
+            .filter(|l| l.worker == worker && l.deadline > now);
+        match live {
+            Some(l) => {
+                l.deadline = now + timeout;
+                protocol::ok(vec![("extended", Json::Bool(true))])
+            }
+            None => protocol::ok(vec![("abandoned", Json::Bool(true))]),
+        }
+    }
+
+    /// PARTIAL: verifies and ingests one replica of one shard
+    /// accumulator.  A stale lease (expired, re-leased, job finished)
+    /// gets `abandoned` — the worker drops the rest of its lease and
+    /// pulls a new one; malformed payloads are protocol errors.
+    pub fn partial(&self, msg: &PartialMsg) -> Json {
+        let data = match decode_f32_hex(&msg.data) {
+            Ok(d) => d,
+            Err(e) => return protocol::err(format!("partial payload: {e}")),
+        };
+        if payload_digest(&data) != msg.digest {
+            return protocol::err("partial digest mismatch");
+        }
+        let now = Instant::now();
+        let timeout = self.timeout();
+        let mut st = self.state.lock().unwrap();
+        let Some(job) = st.jobs.get_mut(&msg.job) else {
+            return protocol::ok(vec![("abandoned", Json::Bool(true))]);
+        };
+        let stale = match job.leases.get_mut(&msg.lease) {
+            Some(l)
+                if l.worker == msg.worker
+                    && l.deadline > now
+                    && (l.shard0..l.shard1).contains(&msg.shard)
+                    && job.slots[msg.shard] == Slot::Leased(msg.lease) =>
+            {
+                l.deadline = now + timeout; // delivery is liveness
+                false
+            }
+            _ => true,
+        };
+        if stale {
+            return protocol::ok(vec![("abandoned", Json::Bool(true))]);
+        }
+        let [l, m, n] = job.grid.reduced;
+        if msg.replica >= job.grid.replicas {
+            return protocol::err(format!(
+                "replica {} out of range (P={})",
+                msg.replica, job.grid.replicas
+            ));
+        }
+        if data.len() != l * m * n {
+            return protocol::err(format!(
+                "payload has {} floats, shard accumulator needs {}",
+                data.len(),
+                l * m * n
+            ));
+        }
+        let replicas = job.grid.replicas;
+        let slots = job
+            .assembling
+            .entry(msg.shard)
+            .or_insert_with(|| vec![None; replicas]);
+        slots[msg.replica] = Some(DenseTensor::from_vec([l, m, n], data));
+        let ckpt = if slots.iter().all(|s| s.is_some()) {
+            let acc: Vec<DenseTensor> = job
+                .assembling
+                .remove(&msg.shard)
+                .unwrap()
+                .into_iter()
+                .map(|s| s.unwrap())
+                .collect();
+            self.complete_shard(job, msg.shard, acc)
+        } else {
+            None
+        };
+        drop(st);
+        self.write_checkpoint(&msg.job, ckpt);
+        protocol::ok(vec![("accepted", Json::Bool(true))])
+    }
+
+    /// Marks `shard` done, parks its accumulator, folds the contiguous
+    /// prefix in shard order, and retires leases with no outstanding
+    /// shards.  Returns a checkpoint snapshot when the fold advance hits
+    /// the persistence cadence — the caller writes it *after* releasing
+    /// the registry lock, so lease traffic never queues behind file I/O.
+    fn complete_shard(
+        &self,
+        job: &mut ShardJob,
+        shard: usize,
+        acc: Vec<DenseTensor>,
+    ) -> Option<CkptSnapshot> {
+        job.slots[shard] = Slot::Done;
+        job.parked.insert(shard, acc);
+        let mut folded_now = 0u64;
+        while let Some(next) = job.parked.remove(&job.next_fold) {
+            fold_shard_proxies(&mut job.folded, next);
+            let (b0, b1) = job.shards[job.next_fold];
+            job.blocks_done += b1 - b0;
+            job.next_fold += 1;
+            folded_now += 1;
+        }
+        if folded_now > 0 {
+            self.metrics.incr("partials_folded", folded_now);
+        }
+        let slots = &job.slots;
+        job.leases
+            .retain(|lid, l| (l.shard0..l.shard1).any(|s| slots[s] == Slot::Leased(*lid)));
+        if job.done() {
+            self.cv.notify_all();
+        }
+        let due = job.next_fold - job.last_saved >= self.cfg.checkpoint_every.max(1);
+        if folded_now > 0 && (due || job.done()) {
+            // Claim the save under the lock (bump the generation and the
+            // saved watermark) so concurrent completions never race for
+            // the same generation.
+            job.last_saved = job.next_fold;
+            job.generation += 1;
+            return Some(CkptSnapshot {
+                dir: job.ckpt_dir.clone(),
+                fp: job.fp.clone(),
+                progress: job.progress(),
+                proxies: job.folded.clone(),
+            });
+        }
+        None
+    }
+
+    /// Best-effort partial-checkpoint write (outside the registry lock).
+    fn write_checkpoint(&self, id: &str, ckpt: Option<CkptSnapshot>) {
+        if let Some(c) = ckpt {
+            if let Err(e) = checkpoint::save_partial(&c.dir, &c.fp, &c.progress, &c.proxies) {
+                eprintln!("exatensor serve: shard checkpoint for {id} failed: {e:#}");
+            }
+        }
+    }
+
+    /// Workers holding live leases on `job` — the `LIST` verb's
+    /// per-job assignment column.
+    pub fn workers_for(&self, job: &str) -> Vec<String> {
+        let st = self.state.lock().unwrap();
+        let Some(j) = st.jobs.get(job) else {
+            return Vec::new();
+        };
+        let names: BTreeSet<String> = j.leases.values().map(|l| l.worker.clone()).collect();
+        names.into_iter().collect()
+    }
+
+    /// Drain: LEASE now answers `shutdown` so workers exit, and the
+    /// self-drain gate opens so running sharded jobs still finish with
+    /// identical bits.
+    pub fn shutdown(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.shutdown = true;
+        self.cv.notify_all();
+    }
+
+    /// Runs `id` to completion under the lease protocol and returns the
+    /// folded proxies — bitwise identical to the single-process engine's.
+    ///
+    /// Called from the scheduler's job runner thread; blocks until every
+    /// shard is folded.  Resumes the folded prefix from a prior partial
+    /// checkpoint in `ckpt_dir` if one matches.  While no live worker is
+    /// pulling leases, the runner drains pending shards itself, one at a
+    /// time, with [`compress_shard_batched`] — the no-worker daemon and a
+    /// fully worker-served run produce the same bits.
+    pub fn run_sharded(
+        &self,
+        id: &JobId,
+        source: JobSource,
+        grid: ShardedGrid,
+        ckpt_dir: &Path,
+        fp: Fingerprint,
+    ) -> Result<Vec<DenseTensor>> {
+        let shards = ThreadPool::partition(grid.blocks_total, grid.shard_parts);
+        let [l, m, n] = grid.reduced;
+        // Zero fold base — the same `+0.0` start as the engine's
+        // zero-initialized proxies.
+        let mut folded: Vec<DenseTensor> =
+            (0..grid.replicas).map(|_| DenseTensor::zeros(l, m, n)).collect();
+        let mut next_fold = 0usize;
+        let mut blocks_done = 0usize;
+        let mut generation = 0u64;
+        let template = CompressionProgress {
+            block: grid.block,
+            shard_parts: grid.shard_parts,
+            shards_total: shards.len(),
+            shards_done: 0,
+            blocks_done: 0,
+            blocks_total: grid.blocks_total,
+            path: grid.path.clone(),
+            generation: 0,
+        };
+        let loaded = checkpoint::load_partial(ckpt_dir, &fp, &template)
+            .context("loading sharded partial checkpoint")?;
+        if loaded.fallbacks > 0 {
+            self.metrics.incr("checkpoint_fallbacks", loaded.fallbacks);
+        }
+        if let Some((progress, proxies)) = loaded.state {
+            next_fold = progress.shards_done;
+            blocks_done = progress.blocks_done;
+            generation = progress.generation + 1;
+            folded = proxies;
+        }
+        {
+            let mut st = self.state.lock().unwrap();
+            let mut slots = vec![Slot::Pending; shards.len()];
+            for s in slots.iter_mut().take(next_fold) {
+                *s = Slot::Done;
+            }
+            st.jobs.insert(
+                id.clone(),
+                ShardJob {
+                    grid: grid.clone(),
+                    source: source.clone(),
+                    shards,
+                    slots,
+                    assembling: BTreeMap::new(),
+                    parked: BTreeMap::new(),
+                    folded,
+                    next_fold,
+                    blocks_done,
+                    leases: BTreeMap::new(),
+                    ckpt_dir: ckpt_dir.to_path_buf(),
+                    fp,
+                    generation,
+                    last_saved: next_fold,
+                },
+            );
+            self.cv.notify_all();
+        }
+        // Lazy local engine for the self-drain path.
+        let mut local: Option<(Box<dyn TensorSource>, MapSource)> = None;
+        let tick = Duration::from_millis((self.cfg.lease_timeout_ms / 4).clamp(10, 250));
+        let mut st = self.state.lock().unwrap();
+        loop {
+            let now = Instant::now();
+            self.sweep_expired(&mut st, now);
+            if st.jobs.get(id).map(|j| j.done()) != Some(false) {
+                break;
+            }
+            // Destructure once: field-precise borrows don't reach
+            // through the guard's DerefMut.
+            let inner = &mut *st;
+            let workers_quiet = inner.shutdown
+                || inner.workers.is_empty()
+                || now.duration_since(inner.last_pull) > self.timeout();
+            let job = inner.jobs.get_mut(id).unwrap();
+            let drain = if workers_quiet && job.leases.is_empty() {
+                job.slots.iter().position(|s| *s == Slot::Pending)
+            } else {
+                None
+            };
+            let Some(shard) = drain else {
+                st = self.cv.wait_timeout(st, tick).unwrap().0;
+                continue;
+            };
+            // Reserve the shard with a far-future local lease so the
+            // sweep and concurrent grants leave it alone, then compute
+            // it inline with the lock released.
+            let lease_id = inner.next_lease;
+            inner.next_lease += 1;
+            job.slots[shard] = Slot::Leased(lease_id);
+            job.leases.insert(
+                lease_id,
+                Lease {
+                    worker: LOCAL_WORKER.to_string(),
+                    shard0: shard,
+                    shard1: shard + 1,
+                    deadline: now + Duration::from_secs(24 * 3600),
+                },
+            );
+            let (b0, b1) = job.shards[shard];
+            drop(st);
+            if local.is_none() {
+                let src = source.open().context("opening source for self-drain")?;
+                let maps = MapSource::generate(
+                    grid.dims,
+                    grid.reduced,
+                    grid.replicas,
+                    grid.anchor,
+                    grid.seed,
+                    grid.map_tier,
+                );
+                local = Some((src, maps));
+            }
+            let (src, maps) = local.as_ref().unwrap();
+            let acc = compress_shard_batched(src.as_ref(), maps, grid.block, b0, b1);
+            st = self.state.lock().unwrap();
+            let ckpt = match st.jobs.get_mut(id) {
+                Some(job) => {
+                    job.leases.remove(&lease_id);
+                    self.complete_shard(job, shard, acc)
+                }
+                None => None,
+            };
+            drop(st);
+            self.write_checkpoint(id, ckpt);
+            st = self.state.lock().unwrap();
+        }
+        let job = st.jobs.remove(id).context("sharded job vanished mid-run")?;
+        Ok(job.folded)
+    }
+}
+
+/// A claimed partial-checkpoint write, performed outside the lock.
+struct CkptSnapshot {
+    dir: PathBuf,
+    fp: Fingerprint,
+    progress: CompressionProgress,
+    proxies: Vec<DenseTensor>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::checkpoint::partial_exists;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("exatensor_shard_{name}_{}", std::process::id()));
+        std::fs::remove_dir_all(&p).ok();
+        p
+    }
+
+    fn test_grid() -> (JobSource, ShardedGrid) {
+        let source = JobSource::Synthetic {
+            size: 12,
+            rank: 2,
+            noise: 0.0,
+            seed: 77,
+        };
+        let dims = [12, 12, 12];
+        let block = [5, 5, 5];
+        let blocks_total = crate::tensor::BlockSpec3::new(dims, block).num_blocks();
+        let grid = ShardedGrid {
+            dims,
+            reduced: [4, 4, 4],
+            replicas: 3,
+            anchor: 2,
+            seed: 9,
+            map_tier: MapTier::Materialized,
+            block,
+            blocks_total,
+            shard_parts: 8,
+            path: "batched".to_string(),
+        };
+        (source, grid)
+    }
+
+    /// The single-process reduction: zero base, shard accumulators
+    /// folded in strict shard order.
+    fn solo_fold(source: &JobSource, grid: &ShardedGrid) -> Vec<DenseTensor> {
+        let src = source.open().unwrap();
+        let maps = MapSource::generate(
+            grid.dims,
+            grid.reduced,
+            grid.replicas,
+            grid.anchor,
+            grid.seed,
+            grid.map_tier,
+        );
+        let [l, m, n] = grid.reduced;
+        let mut folded: Vec<DenseTensor> =
+            (0..grid.replicas).map(|_| DenseTensor::zeros(l, m, n)).collect();
+        for &(b0, b1) in &ThreadPool::partition(grid.blocks_total, grid.shard_parts) {
+            let acc = compress_shard_batched(src.as_ref(), &maps, grid.block, b0, b1);
+            fold_shard_proxies(&mut folded, acc);
+        }
+        folded
+    }
+
+    /// Plays one worker: computes the granted range and delivers every
+    /// replica of every shard as PARTIAL messages.
+    fn serve_grant(reg: &ShardRegistry, worker: &str, grant: &LeaseGrant) {
+        let src = grant.source.open().unwrap();
+        let g = &grant.grid;
+        let maps = MapSource::generate(g.dims, g.reduced, g.replicas, g.anchor, g.seed, g.map_tier);
+        let shards = ThreadPool::partition(g.blocks_total, g.shard_parts);
+        for s in grant.shard0..grant.shard1 {
+            let (b0, b1) = shards[s];
+            let acc = compress_shard_batched(src.as_ref(), &maps, g.block, b0, b1);
+            for (r, t) in acc.iter().enumerate() {
+                let msg = PartialMsg {
+                    worker: worker.to_string(),
+                    job: grant.job.clone(),
+                    lease: grant.lease,
+                    shard: s,
+                    replica: r,
+                    data: encode_f32_hex(t.data()),
+                    digest: payload_digest(t.data()),
+                };
+                let resp = reg.partial(&msg);
+                if resp.get("abandoned").is_some() {
+                    return; // lease expired under us; pull a fresh one
+                }
+                assert_eq!(
+                    resp.get("accepted").and_then(|x| x.as_bool()),
+                    Some(true),
+                    "partial rejected: {resp:?}"
+                );
+            }
+        }
+    }
+
+    /// Pulls and serves leases until the registry reports idle/shutdown.
+    fn serve_until_idle(reg: &ShardRegistry, worker: &str) {
+        loop {
+            let resp = reg.lease(worker);
+            if resp.get("shutdown").is_some() || resp.get("idle").is_some() {
+                return;
+            }
+            let grant = LeaseGrant::from_json(resp.get("grant").unwrap()).unwrap();
+            serve_grant(reg, worker, &grant);
+        }
+    }
+
+    #[test]
+    fn hex_payload_round_trips_bitwise() {
+        let data = vec![0.0f32, -0.0, 1.5, -2.25e-3, f32::MIN_POSITIVE, 1e30];
+        let hex = encode_f32_hex(&data);
+        let back = decode_f32_hex(&hex).unwrap();
+        assert_eq!(data.len(), back.len());
+        for (a, b) in data.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(payload_digest(&data), payload_digest(&back));
+        assert!(decode_f32_hex("0102").is_err(), "truncated payload must fail");
+        assert!(decode_f32_hex("zz000000zz000000").is_err());
+    }
+
+    #[test]
+    fn lease_grant_round_trips_json() {
+        let (source, grid) = test_grid();
+        let grant = LeaseGrant {
+            job: "job-000007".to_string(),
+            lease: 42,
+            shard0: 3,
+            shard1: 6,
+            deadline_ms: 5_000,
+            source,
+            grid,
+        };
+        let wire = grant.to_json().to_string_compact();
+        let back = LeaseGrant::from_json(&Json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back.job, grant.job);
+        assert_eq!(back.lease, grant.lease);
+        assert_eq!((back.shard0, back.shard1), (3, 6));
+        assert_eq!(back.source, grant.source);
+        assert_eq!(back.grid.dims, grant.grid.dims);
+        assert_eq!(back.grid.map_tier, grant.grid.map_tier);
+        assert_eq!(back.grid.blocks_total, grant.grid.blocks_total);
+        assert_eq!(back.grid.path, "batched");
+    }
+
+    #[test]
+    fn worker_served_run_folds_bitwise_identical() {
+        let _no_faults = crate::util::fault::exclude_faults();
+        let (source, grid) = test_grid();
+        let expected = solo_fold(&source, &grid);
+        let dir = tmpdir("worker_served");
+        let metrics = Arc::new(Metrics::new());
+        let reg = Arc::new(ShardRegistry::new(
+            ShardConfig {
+                checkpoint_every: 2,
+                ..ShardConfig::default()
+            },
+            metrics.clone(),
+        ));
+        let fp = Fingerprint {
+            dims: grid.dims,
+            reduced: grid.reduced,
+            rank: 2,
+            replicas: grid.replicas,
+            anchor_rows: grid.anchor,
+            seed: grid.seed,
+            mixed_precision: false,
+        };
+        reg.hello("w1");
+        let runner = {
+            let reg = reg.clone();
+            let (source, grid, dir, fp) = (source.clone(), grid.clone(), dir.clone(), fp);
+            std::thread::spawn(move || {
+                reg.run_sharded(&"job-000001".to_string(), source, grid, &dir, fp)
+            })
+        };
+        // Poll until the job is registered, then serve every lease.
+        loop {
+            let resp = reg.lease("w1");
+            if let Some(g) = resp.get("grant") {
+                let grant = LeaseGrant::from_json(g).unwrap();
+                serve_grant(&reg, "w1", &grant);
+                serve_until_idle(&reg, "w1");
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let folded = runner.join().unwrap().unwrap();
+        assert_eq!(folded, expected, "sharded fold must be bitwise identical");
+        assert!(metrics.counter("leases_granted") >= 1);
+        assert_eq!(
+            metrics.counter("partials_folded"),
+            ThreadPool::partition(grid.blocks_total, grid.shard_parts).len() as u64
+        );
+        assert_eq!(metrics.counter("workers_connected"), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn expired_lease_is_relet_and_still_bitwise() {
+        let _no_faults = crate::util::fault::exclude_faults();
+        let (source, grid) = test_grid();
+        let expected = solo_fold(&source, &grid);
+        let dir = tmpdir("relet");
+        let metrics = Arc::new(Metrics::new());
+        let reg = Arc::new(ShardRegistry::new(
+            ShardConfig {
+                lease_timeout_ms: 60,
+                lease_shards: 2,
+                backoff_ms: 5,
+                checkpoint_every: 100,
+            },
+            metrics.clone(),
+        ));
+        let fp = checkpoint_fingerprint(&grid);
+        reg.hello("flaky");
+        let runner = {
+            let reg = reg.clone();
+            let (source, grid, dir, fp) = (source.clone(), grid.clone(), dir.clone(), fp);
+            std::thread::spawn(move || {
+                reg.run_sharded(&"job-000002".to_string(), source, grid, &dir, fp)
+            })
+        };
+        // Take the first lease and abandon it (simulated worker death):
+        // never deliver, let the deadline pass.
+        loop {
+            let resp = reg.lease("flaky");
+            if resp.get("grant").is_some() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        std::thread::sleep(Duration::from_millis(120));
+        // An honest worker picks up the re-leased range and finishes.
+        loop {
+            let resp = reg.lease("honest");
+            if let Some(g) = resp.get("grant") {
+                let grant = LeaseGrant::from_json(g).unwrap();
+                serve_grant(&reg, "honest", &grant);
+            } else {
+                if runner.is_finished() {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+        let folded = runner.join().unwrap().unwrap();
+        assert_eq!(folded, expected, "relet run must stay bitwise identical");
+        assert!(
+            metrics.counter("leases_relet") >= 1,
+            "abandoned lease must be re-leased"
+        );
+        assert_eq!(metrics.counter("workers_connected"), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn no_worker_run_self_drains_bitwise_and_checkpoints() {
+        let _no_faults = crate::util::fault::exclude_faults();
+        let (source, grid) = test_grid();
+        let expected = solo_fold(&source, &grid);
+        let dir = tmpdir("selfdrain");
+        let metrics = Arc::new(Metrics::new());
+        let reg = ShardRegistry::new(
+            ShardConfig {
+                lease_timeout_ms: 20,
+                checkpoint_every: 2,
+                ..ShardConfig::default()
+            },
+            metrics.clone(),
+        );
+        let fp = checkpoint_fingerprint(&grid);
+        let folded = reg
+            .run_sharded(&"job-000003".to_string(), source, grid, &dir, fp)
+            .unwrap();
+        assert_eq!(folded, expected, "self-drain must be bitwise identical");
+        assert_eq!(metrics.counter("leases_granted"), 0, "no worker ever leased");
+        assert!(
+            partial_exists(&dir),
+            "self-drain must leave a resumable partial checkpoint"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn restart_resumes_fold_from_partial_checkpoint() {
+        let _no_faults = crate::util::fault::exclude_faults();
+        let (source, grid) = test_grid();
+        let expected = solo_fold(&source, &grid);
+        let dir = tmpdir("resume");
+        let fp = checkpoint_fingerprint(&grid);
+        // First "coordinator": fold a three-shard prefix by hand and
+        // persist it the way the registry would.
+        {
+            let src = source.open().unwrap();
+            let maps = MapSource::generate(
+                grid.dims,
+                grid.reduced,
+                grid.replicas,
+                grid.anchor,
+                grid.seed,
+                grid.map_tier,
+            );
+            let [l, m, n] = grid.reduced;
+            let mut folded: Vec<DenseTensor> =
+                (0..grid.replicas).map(|_| DenseTensor::zeros(l, m, n)).collect();
+            let shards = ThreadPool::partition(grid.blocks_total, grid.shard_parts);
+            let mut blocks_done = 0;
+            for &(b0, b1) in shards.iter().take(3) {
+                let acc = compress_shard_batched(src.as_ref(), &maps, grid.block, b0, b1);
+                fold_shard_proxies(&mut folded, acc);
+                blocks_done += b1 - b0;
+            }
+            let progress = CompressionProgress {
+                block: grid.block,
+                shard_parts: grid.shard_parts,
+                shards_total: shards.len(),
+                shards_done: 3,
+                blocks_done,
+                blocks_total: grid.blocks_total,
+                path: grid.path.clone(),
+                generation: 1,
+            };
+            checkpoint::save_partial(&dir, &fp, &progress, &folded).unwrap();
+        }
+        // Restarted coordinator: resumes the folded prefix and drains
+        // the remaining shards itself.
+        let metrics = Arc::new(Metrics::new());
+        let reg = ShardRegistry::new(
+            ShardConfig {
+                lease_timeout_ms: 20,
+                ..ShardConfig::default()
+            },
+            metrics.clone(),
+        );
+        let folded = reg
+            .run_sharded(&"job-000004".to_string(), source, grid, &dir, fp)
+            .unwrap();
+        assert_eq!(folded, expected, "resumed fold must be bitwise identical");
+        assert_eq!(
+            metrics.counter("partials_folded"),
+            5,
+            "only the five unfolded shards are recomputed"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    fn checkpoint_fingerprint(grid: &ShardedGrid) -> Fingerprint {
+        Fingerprint {
+            dims: grid.dims,
+            reduced: grid.reduced,
+            rank: 2,
+            replicas: grid.replicas,
+            anchor_rows: grid.anchor,
+            seed: grid.seed,
+            mixed_precision: false,
+        }
+    }
+}

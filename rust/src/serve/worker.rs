@@ -1,0 +1,150 @@
+//! Shard-lease worker: the process that joins a coordinator and executes
+//! leased shard ranges (PR 9).
+//!
+//! A worker is deliberately thin: it owns no queue, no checkpoint, and no
+//! job state.  It polls `LEASE`, and each grant is **self-contained** —
+//! the [`LeaseGrant`] carries the source descriptor and the full
+//! [`ShardedGrid`](crate::coordinator::ShardedGrid), so the worker
+//! rebuilds the replica maps and the fixed block partition locally and
+//! runs [`compress_shard_batched`] over its range, one shard at a time.
+//! Every replica of every finished shard streams back as a
+//! digest-checked `PARTIAL`; the coordinator owns ordering, folding, and
+//! retry.  If the coordinator answers `abandoned` (the lease deadline
+//! passed and the range was re-leased), the worker simply drops the rest
+//! of the range and pulls a fresh lease — at-least-once delivery is safe
+//! because the registry ignores shards it has already completed.
+//!
+//! Worker death is injectable for chaos tests: a
+//! [`FaultPlan`](crate::util::fault::FaultPlan) `worker_panic` schedule,
+//! keyed by [`WorkerConfig::fault_key`], makes the worker die between
+//! shards, which is exactly the failure the lease deadline exists to
+//! absorb.
+
+use super::protocol::{self, PartialMsg, Request};
+use super::shard::{encode_f32_hex, payload_digest, LeaseGrant};
+use crate::compress::{compress_shard_batched, MapSource};
+use crate::util::fault::{should_fault_keyed, Site};
+use crate::util::threadpool::ThreadPool;
+use anyhow::{bail, Context, Result};
+use std::time::Duration;
+
+/// How a worker process joins a coordinator.
+#[derive(Clone, Debug)]
+pub struct WorkerConfig {
+    /// Coordinator address (`host:port`).
+    pub addr: String,
+    /// Worker name reported in `WORKER_HELLO` and shown by `LIST`.
+    pub name: String,
+    /// Idle backoff when the coordinator does not hint one.
+    pub backoff_ms: u64,
+    /// Key matched by `worker_panic:…,key=K` fault schedules, so a plan
+    /// can kill exactly one worker of a fleet.
+    pub fault_key: u64,
+}
+
+impl Default for WorkerConfig {
+    fn default() -> Self {
+        Self {
+            addr: String::new(),
+            name: "worker".to_string(),
+            backoff_ms: 50,
+            fault_key: 0,
+        }
+    }
+}
+
+/// What a worker did before the coordinator told it to stop.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WorkerReport {
+    pub leases: u64,
+    pub shards: u64,
+}
+
+/// Joins the coordinator at `cfg.addr` and serves leases until it
+/// answers `shutdown`.  Returns the tally for the CLI to print.
+pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerReport> {
+    protocol::call_ok(
+        &cfg.addr,
+        &Request::WorkerHello {
+            worker: cfg.name.clone(),
+        },
+    )
+    .with_context(|| format!("joining coordinator at {}", cfg.addr))?;
+    let mut report = WorkerReport::default();
+    loop {
+        let resp = protocol::call_ok(
+            &cfg.addr,
+            &Request::Lease {
+                worker: cfg.name.clone(),
+            },
+        )?;
+        if resp.get("shutdown").and_then(|x| x.as_bool()) == Some(true) {
+            return Ok(report);
+        }
+        if let Some(g) = resp.get("grant") {
+            let grant = LeaseGrant::from_json(g).context("parsing lease grant")?;
+            report.leases += 1;
+            report.shards += serve_lease(cfg, &grant)?;
+            continue;
+        }
+        let backoff = resp
+            .get("backoff_ms")
+            .and_then(|x| x.as_usize())
+            .map_or(cfg.backoff_ms, |b| b as u64);
+        std::thread::sleep(Duration::from_millis(backoff.max(1)));
+    }
+}
+
+/// Executes one granted range shard by shard.  Returns how many shards
+/// were fully delivered; stops early (without error) when the
+/// coordinator reports the lease abandoned.
+fn serve_lease(cfg: &WorkerConfig, grant: &LeaseGrant) -> Result<u64> {
+    let g = &grant.grid;
+    let src = grant.source.open().context("opening job source")?;
+    let maps = MapSource::generate(g.dims, g.reduced, g.replicas, g.anchor, g.seed, g.map_tier);
+    let shards = ThreadPool::partition(g.blocks_total, g.shard_parts);
+    let mut served = 0u64;
+    for s in grant.shard0..grant.shard1 {
+        // Injected death, keyed so a FaultPlan targets one worker of a
+        // fleet.  Dying *between* shards models the common crash window:
+        // work lost mid-lease, nothing half-delivered.
+        if should_fault_keyed(Site::WorkerPanic, cfg.fault_key) {
+            bail!("injected worker death before shard {s} (transient)");
+        }
+        let &(b0, b1) = shards
+            .get(s)
+            .with_context(|| format!("granted shard {s} outside the {} partition", shards.len()))?;
+        let acc = compress_shard_batched(src.as_ref(), &maps, g.block, b0, b1);
+        for (replica, t) in acc.iter().enumerate() {
+            let msg = PartialMsg {
+                worker: cfg.name.clone(),
+                job: grant.job.clone(),
+                lease: grant.lease,
+                shard: s,
+                replica,
+                data: encode_f32_hex(t.data()),
+                digest: payload_digest(t.data()),
+            };
+            let resp = protocol::call_ok(&cfg.addr, &Request::Partial(msg))?;
+            if resp.get("abandoned").and_then(|x| x.as_bool()) == Some(true) {
+                return Ok(served);
+            }
+        }
+        served += 1;
+        // Heartbeat between shards so a long range outlives its deadline.
+        if s + 1 < grant.shard1 {
+            let resp = protocol::call_ok(
+                &cfg.addr,
+                &Request::Renew {
+                    worker: cfg.name.clone(),
+                    job: grant.job.clone(),
+                    lease: grant.lease,
+                },
+            )?;
+            if resp.get("abandoned").and_then(|x| x.as_bool()) == Some(true) {
+                return Ok(served);
+            }
+        }
+    }
+    Ok(served)
+}

@@ -390,6 +390,8 @@ fn spec(seed: u64) -> JobSpec {
         source: JobSource::Synthetic { size: s, rank: 2, noise: 0.0, seed },
         config: cfg(seed, 2),
         priority: 0,
+        tenant: String::new(),
+        sharded: false,
     }
 }
 

@@ -38,6 +38,7 @@ fn spec(seed: u64) -> JobSpec {
             .unwrap(),
         priority: 0,
         tenant: String::new(),
+        sharded: false,
     }
 }
 
@@ -260,6 +261,7 @@ fn daemon_restart_recovers_spool_and_resumes_bitwise() {
             config: run_cfg,
             priority: 0,
             tenant: String::new(),
+            sharded: false,
         },
         state: JobState::Running,
         plan_bytes: plan.estimated_bytes,

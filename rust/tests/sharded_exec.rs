@@ -1,0 +1,359 @@
+//! Integration tests for sharded multi-worker execution: a daemon job in
+//! `sharded` mode farms leased shard ranges out to worker processes (here,
+//! worker *loops* on threads speaking the real TCP protocol) and folds the
+//! returned raw accumulators in shard order.  Every test pins the headline
+//! guarantee: factors and `model_digest` are **bitwise identical** to a
+//! single-process run — through worker fleets, injected worker death and
+//! re-leasing, a workerless coordinator draining its own shard grid, and a
+//! coordinator restart that resumes the fold from a partial checkpoint.
+//!
+//! Sharded submissions run with the result cache OFF (`cache_bytes: 0`):
+//! `sharded` is execution metadata outside the cache key, so a cached solo
+//! twin would otherwise satisfy the submission without exercising the
+//! lease protocol at all.
+
+use exascale_tensor::compress::{
+    compress_shard_batched, fold_shard_proxies, zero_shard_proxies, MapSource,
+    DEFAULT_SHARD_PARTS,
+};
+use exascale_tensor::coordinator::checkpoint::{self, CompressionProgress};
+use exascale_tensor::coordinator::{MemoryPlanner, Pipeline, PipelineConfig};
+use exascale_tensor::serve::{
+    cache_key, model_digest, protocol, run_worker, JobRecord, JobSource, JobSpec, JobState,
+    Request, SchedulerConfig, Server, ServerConfig, Spool, WorkerConfig, WorkerReport,
+};
+use exascale_tensor::tensor::BlockSpec3;
+use exascale_tensor::util::fault::{self, FaultPlan};
+use exascale_tensor::util::json::Json;
+use exascale_tensor::util::threadpool::ThreadPool;
+use std::time::{Duration, Instant};
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("exatensor_shardexec_{name}_{}", std::process::id()));
+    std::fs::remove_dir_all(&p).ok();
+    p
+}
+
+/// The deterministic job every test shards (seed varies the input):
+/// 24³ at block 8³ → 27 blocks → 27 one-block shards under the fixed
+/// [`DEFAULT_SHARD_PARTS`] partition.
+fn spec(seed: u64, sharded: bool) -> JobSpec {
+    JobSpec {
+        source: JobSource::Synthetic { size: 24, rank: 2, noise: 0.0, seed },
+        config: PipelineConfig::builder()
+            .reduced_dims(8, 8, 8)
+            .rank(2)
+            .anchor_rows(4)
+            .block([8, 8, 8])
+            .als(120, 1e-10)
+            .threads(2)
+            .seed(seed)
+            .build()
+            .unwrap(),
+        priority: 0,
+        tenant: String::new(),
+        sharded,
+    }
+}
+
+/// Reference digest: the same job, solo, in-process.
+fn solo_digest(seed: u64) -> u64 {
+    let s = spec(seed, false);
+    let src = s.source.open().unwrap();
+    let res = Pipeline::new(s.config).run(src.as_ref()).unwrap();
+    model_digest(&res.model)
+}
+
+fn sharded_sched(lease_timeout_ms: u64) -> SchedulerConfig {
+    SchedulerConfig {
+        workers: 1,
+        cache_bytes: 0,
+        lease_timeout_ms,
+        ..Default::default()
+    }
+}
+
+fn start_server(
+    spool: &std::path::Path,
+    sched: SchedulerConfig,
+) -> (String, std::thread::JoinHandle<anyhow::Result<()>>) {
+    let server = Server::bind(&ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        spool_dir: spool.to_path_buf(),
+        scheduler: sched,
+        conn_timeout_ms: 60_000,
+        max_conns: 0,
+    })
+    .unwrap();
+    let addr = server.local_addr().to_string();
+    let handle = std::thread::spawn(move || server.run());
+    (addr, handle)
+}
+
+/// A worker loop on a thread, speaking the daemon's real TCP protocol.
+/// Joins with `Err` if the worker "dies" (injected fault) or the drained
+/// daemon stops answering — both are expected ends in these tests.
+fn spawn_worker(
+    addr: &str,
+    name: &str,
+    fault_key: u64,
+) -> std::thread::JoinHandle<anyhow::Result<WorkerReport>> {
+    let cfg = WorkerConfig {
+        addr: addr.to_string(),
+        name: name.to_string(),
+        backoff_ms: 25,
+        fault_key,
+    };
+    std::thread::spawn(move || run_worker(&cfg))
+}
+
+fn submit(addr: &str, spec: &JobSpec) -> JobRecord {
+    let resp = protocol::call_ok(addr, &Request::Submit(spec.clone())).unwrap();
+    JobRecord::from_json(resp.get("job").unwrap()).unwrap()
+}
+
+fn wait_terminal(addr: &str, id: &str, timeout: Duration) -> JobRecord {
+    let start = Instant::now();
+    loop {
+        let resp = protocol::call_ok(addr, &Request::Status(id.to_string())).unwrap();
+        let rec = JobRecord::from_json(resp.get("job").unwrap()).unwrap();
+        if rec.state.is_terminal() {
+            return rec;
+        }
+        assert!(start.elapsed() < timeout, "timed out waiting for {id}");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+fn metric(addr: &str, key: &str) -> u64 {
+    let resp = protocol::call_ok(addr, &Request::Metrics).unwrap();
+    resp.get("metrics")
+        .and_then(|m| m.get(key))
+        .and_then(|v| v.as_f64())
+        .unwrap_or(0.0) as u64
+}
+
+fn wait_metric_at_least(addr: &str, key: &str, want: u64) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while metric(addr, key) < want {
+        assert!(Instant::now() < deadline, "{key} never reached {want}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Two live workers serve a sharded job over the real protocol; the
+/// digest is bitwise identical to a solo in-process run, the shard-lease
+/// counters export through `METRICS`, and `LIST` carries the per-job
+/// worker-assignment field.
+#[test]
+fn two_workers_serve_sharded_job_bitwise_identical_to_solo() {
+    let _guard = fault::exclude_faults();
+    let dir = tmpdir("two");
+    let expected = solo_digest(31);
+    let (addr, handle) = start_server(&dir, sharded_sched(5_000));
+    let w1 = spawn_worker(&addr, "w1", 0);
+    let w2 = spawn_worker(&addr, "w2", 0);
+    // Both workers must be registered before the job starts, or the
+    // coordinator rightly treats the fleet as absent and self-drains.
+    wait_metric_at_least(&addr, "workers_connected", 2);
+
+    let rec = submit(&addr, &spec(31, true));
+    let done = wait_terminal(&addr, &rec.id, Duration::from_secs(300));
+    assert_eq!(done.state, JobState::Done, "sharded job failed: {:?}", done.error);
+    let o = done.outcome.unwrap();
+    assert!(!o.from_cache, "sharded runs must execute, not hit the cache");
+    assert_eq!(
+        o.model_digest, expected,
+        "worker-served sharded run must be bitwise identical to solo"
+    );
+
+    // 24³ at block 8³ → 27 shards, every one folded exactly once.
+    assert_eq!(metric(&addr, "partials_folded"), 27);
+    assert!(metric(&addr, "leases_granted") >= 1);
+    assert_eq!(metric(&addr, "workers_connected"), 2);
+    assert_eq!(metric(&addr, "leases_relet"), 0, "healthy fleet never re-leases");
+
+    // LIST carries the worker-assignment field (empty once the job's
+    // lease ledger is retired, but always present).
+    let resp = protocol::call_ok(&addr, &Request::List).unwrap();
+    let jobs = match resp.get("jobs") {
+        Some(Json::Arr(v)) => v.clone(),
+        other => panic!("LIST must return a jobs array, got {other:?}"),
+    };
+    let mine = jobs
+        .iter()
+        .find(|j| j.get("id").and_then(|x| x.as_str()) == Some(rec.id.as_str()))
+        .expect("sharded job listed");
+    assert!(
+        matches!(mine.get("workers"), Some(Json::Arr(_))),
+        "LIST entries must carry the workers array"
+    );
+
+    protocol::call_ok(&addr, &Request::Shutdown).unwrap();
+    handle.join().unwrap().unwrap();
+    // Drained workers exit on their own — via the LEASE shutdown answer
+    // or the closed listener; either way the threads end.
+    let _ = w1.join().unwrap();
+    let _ = w2.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Chaos: a FaultPlan-injected worker death mid-lease.  The flaky worker
+/// takes the first lease and dies before its first shard; the deadline
+/// sweep re-leases the abandoned range (`leases_relet`), a healthy worker
+/// finishes the job, and the digest is still bitwise identical.
+#[test]
+fn injected_worker_death_releases_lease_and_stays_bitwise() {
+    // `key=77` aims the schedule at the flaky worker alone: the
+    // scheduler's own worker_panic probes (keyed by job sequence) and the
+    // honest worker (key 0) never match.
+    let guard = fault::arm_scoped(
+        FaultPlan::parse("seed=9;worker_panic:period=1,max=1,key=77").unwrap(),
+    );
+    let dir = tmpdir("death");
+    let expected = solo_digest(47);
+    let (addr, handle) = start_server(&dir, sharded_sched(300));
+    let flaky = spawn_worker(&addr, "flaky", 77);
+    wait_metric_at_least(&addr, "workers_connected", 1);
+
+    let rec = submit(&addr, &spec(47, true));
+    // The flaky worker dies on the first shard of its first lease; its
+    // thread ending IS the crash the lease deadline exists to absorb.
+    let death = flaky.join().unwrap();
+    assert!(death.is_err(), "the armed plan must kill the flaky worker");
+    assert_eq!(guard.fired(fault::Site::WorkerPanic), 1, "exactly one injected death");
+
+    let honest = spawn_worker(&addr, "honest", 0);
+    let done = wait_terminal(&addr, &rec.id, Duration::from_secs(300));
+    assert_eq!(done.state, JobState::Done, "job must survive the death: {:?}", done.error);
+    assert_eq!(
+        done.outcome.unwrap().model_digest,
+        expected,
+        "worker death + re-lease must be bitwise invisible"
+    );
+    assert!(
+        metric(&addr, "leases_relet") >= 1,
+        "the dead worker's lease must have been re-let"
+    );
+    assert_eq!(metric(&addr, "partials_folded"), 27);
+    assert_eq!(metric(&addr, "workers_connected"), 2);
+
+    protocol::call_ok(&addr, &Request::Shutdown).unwrap();
+    handle.join().unwrap().unwrap();
+    let _ = honest.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A coordinator with no fleet at all serves the sharded job itself (the
+/// self-drain path): same bits, no lease grants.
+#[test]
+fn workerless_coordinator_self_drains_bitwise_identical() {
+    let _guard = fault::exclude_faults();
+    let dir = tmpdir("selfdrain");
+    let expected = solo_digest(53);
+    let (addr, handle) = start_server(&dir, sharded_sched(100));
+    let rec = submit(&addr, &spec(53, true));
+    let done = wait_terminal(&addr, &rec.id, Duration::from_secs(300));
+    assert_eq!(done.state, JobState::Done, "self-drain failed: {:?}", done.error);
+    assert_eq!(
+        done.outcome.unwrap().model_digest,
+        expected,
+        "the workerless coordinator must produce the same bits"
+    );
+    assert_eq!(metric(&addr, "workers_connected"), 0);
+    assert_eq!(metric(&addr, "leases_granted"), 0, "self-drain is not a grant");
+    assert_eq!(metric(&addr, "partials_folded"), 27);
+
+    protocol::call_ok(&addr, &Request::Shutdown).unwrap();
+    handle.join().unwrap().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Coordinator restart mid-sharded-job: a daemon "killed" with three
+/// shards folded (simulated by authoring its spool record and partial
+/// checkpoint) restarts, resumes the fold prefix instead of re-leasing
+/// it, and finishes bitwise identical to an uninterrupted run.
+#[test]
+fn coordinator_restart_resumes_sharded_fold_from_checkpoint() {
+    let _guard = fault::exclude_faults();
+    let dir = tmpdir("restart");
+    let job_spec = spec(61, true);
+    let expected = solo_digest(61);
+
+    // Author the killed coordinator's on-disk state: a `running` sharded
+    // job record plus a partial checkpoint holding the first 3 shards
+    // folded — exactly what the lease ledger checkpoints as it goes.
+    let spool = Spool::open(&dir).unwrap();
+    let ckpt = spool.checkpoint_dir("job-000001");
+    let mut run_cfg = job_spec.config.clone();
+    run_cfg.checkpoint_dir = Some(ckpt.clone());
+    let dims = job_spec.source.dims().unwrap();
+    let plan = MemoryPlanner::plan(&run_cfg, dims).unwrap();
+    let maps = MapSource::generate(
+        dims,
+        run_cfg.reduced,
+        plan.replicas,
+        run_cfg.effective_anchor(),
+        run_cfg.seed,
+        plan.map_tier,
+    );
+    let fp = checkpoint::default_fingerprint(&run_cfg, dims, plan.replicas);
+    let blocks_total = BlockSpec3::new(dims, plan.block).num_blocks();
+    let shards = ThreadPool::partition(blocks_total, DEFAULT_SHARD_PARTS);
+    let src = job_spec.source.open().unwrap();
+    let prefix = 3usize;
+    let mut folded = zero_shard_proxies(&maps);
+    let mut blocks_done = 0usize;
+    for &(b0, b1) in &shards[..prefix] {
+        let acc = compress_shard_batched(src.as_ref(), &maps, plan.block, b0, b1);
+        fold_shard_proxies(&mut folded, acc);
+        blocks_done += b1 - b0;
+    }
+    let progress = CompressionProgress {
+        block: plan.block,
+        shard_parts: DEFAULT_SHARD_PARTS,
+        shards_total: shards.len(),
+        shards_done: prefix,
+        blocks_done,
+        blocks_total,
+        path: "batched".to_string(),
+        generation: 1,
+    };
+    checkpoint::save_partial(&ckpt, &fp, &progress, &folded).unwrap();
+    let rec = JobRecord {
+        id: "job-000001".to_string(),
+        seq: 1,
+        spec: JobSpec { config: run_cfg, ..job_spec.clone() },
+        state: JobState::Running,
+        plan_bytes: plan.estimated_bytes,
+        cache_key: cache_key(&job_spec).unwrap(),
+        cancel_requested: false,
+        resolved_solver: None,
+        attempts: 0,
+        panics: 0,
+        error: None,
+        outcome: None,
+    };
+    spool.save(&rec).unwrap();
+    drop(spool);
+
+    // "Restart" the coordinator on the crashed spool; no workers connect,
+    // so the remaining shards self-drain.
+    let (addr, handle) = start_server(&dir, sharded_sched(100));
+    assert_eq!(metric(&addr, "jobs_recovered"), 1);
+    let done = wait_terminal(&addr, "job-000001", Duration::from_secs(300));
+    assert_eq!(done.state, JobState::Done, "recovered job failed: {:?}", done.error);
+    assert_eq!(
+        done.outcome.unwrap().model_digest,
+        expected,
+        "restart mid-sharded-fold must be bitwise invisible"
+    );
+    // Only the 24 shards beyond the checkpointed prefix were folded after
+    // the restart: the prefix was resumed, not recomputed.
+    assert_eq!(metric(&addr, "partials_folded"), (shards.len() - prefix) as u64);
+
+    protocol::call_ok(&addr, &Request::Shutdown).unwrap();
+    handle.join().unwrap().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
