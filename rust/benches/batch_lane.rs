@@ -51,6 +51,7 @@ fn small_spec(seed: u64, tenant: &str) -> JobSpec {
         priority: 0,
         tenant: tenant.to_string(),
         sharded: false,
+        no_cache: false,
     }
 }
 
@@ -72,6 +73,7 @@ fn blocker_spec(iters: usize) -> JobSpec {
         priority: 10,
         tenant: String::new(),
         sharded: false,
+        no_cache: false,
     }
 }
 

@@ -174,11 +174,22 @@ mod tests {
         m.incr("leases_relet", 1);
         m.incr("partials_folded", 8);
         m.incr("workers_connected", 2);
+        // Artifact-store counters and gauges ride it too.
+        m.incr("admission_warm_priced", 1);
+        m.set("store_bytes", 4096);
+        m.incr("store_corrupt", 1);
+        m.set("store_entries", 5);
+        m.incr("store_evictions", 2);
+        m.incr("store_hits_compress", 4);
+        m.incr("store_hits_factors", 3);
+        m.incr("store_hits_shards", 9);
+        m.incr("store_publishes", 6);
         let snap = m.snapshot();
         assert_eq!(
             snap,
             vec![
                 ("admission_rejected_bytes".to_string(), 1024),
+                ("admission_warm_priced".to_string(), 1),
                 ("batch_jobs_coalesced".to_string(), 7),
                 ("batch_lane_depth".to_string(), 3),
                 ("batch_sweeps".to_string(), 2),
@@ -192,6 +203,14 @@ mod tests {
                 ("leases_granted".to_string(), 6),
                 ("leases_relet".to_string(), 1),
                 ("partials_folded".to_string(), 8),
+                ("store_bytes".to_string(), 4096),
+                ("store_corrupt".to_string(), 1),
+                ("store_entries".to_string(), 5),
+                ("store_evictions".to_string(), 2),
+                ("store_hits_compress".to_string(), 4),
+                ("store_hits_factors".to_string(), 3),
+                ("store_hits_shards".to_string(), 9),
+                ("store_publishes".to_string(), 6),
                 ("tenant_quota_deferrals".to_string(), 1),
                 ("workers_connected".to_string(), 2),
             ]

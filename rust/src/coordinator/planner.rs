@@ -240,8 +240,9 @@ impl MemoryPlanner {
     /// panels (`compress_shard_batched` runs the shard serially, so
     /// exactly one block is live), one raw shard-accumulator set
     /// (`P·L·M·N` floats — shards ship before the next begins, so the
-    /// count does not scale with `lease_shards`), and the hex wire buffer
-    /// for the replica currently streaming back (8 bytes per f32).
+    /// count does not scale with `lease_shards`), and the base64 wire
+    /// buffer for the replica currently streaming back (4 encoded bytes
+    /// per 3 payload bytes).
     pub fn worker_residency(
         dims: [usize; 3],
         reduced: [usize; 3],
@@ -256,8 +257,45 @@ impl MemoryPlanner {
         let interm = replicas * l * block[1] * block[2];
         let panels = replicas * l * block[0] + m * block[1] + n * block[2];
         let acc = replicas * l * m * n * f;
-        let wire = l * m * n * 2 * f;
+        let wire = (l * m * n * f).div_ceil(3) * 4;
         maps + (blk + interm + panels) * f + acc + wire
+    }
+
+    /// Byte estimate for a job admitted **warm**: its Stage-1 proxy
+    /// artifact is resident in the artifact store, so no source block
+    /// ever streams — the per-worker block/intermediate/panel terms, the
+    /// prefetch queue, the shard-accumulator window, and the checkpoint
+    /// snapshots all vanish.  What remains is the proxy set itself, the
+    /// replica maps in their tier (recovery still slices them), and the
+    /// streamed recovery solve.  This is the price the scheduler charges
+    /// when admission finds the proxies already in the store.
+    pub fn warm_estimate(
+        dims: [usize; 3],
+        reduced: [usize; 3],
+        replicas: usize,
+        rank: usize,
+        tier: MapTier,
+        panel_cols: usize,
+        solver: RecoverySolverKind,
+    ) -> usize {
+        let f = std::mem::size_of::<f32>();
+        let [l, m, n] = reduced;
+        let proxies = replicas * l * m * n * f;
+        let maps = Self::replica_map_bytes(dims, reduced, replicas, tier);
+        let recovery = (0..3)
+            .map(|mode| {
+                Self::recovery_mode_bytes(
+                    dims[mode],
+                    reduced[mode],
+                    replicas,
+                    rank,
+                    panel_cols,
+                    solver,
+                )
+            })
+            .max()
+            .unwrap_or(0);
+        proxies + maps + recovery
     }
 
     /// Resolves the plan for `dims` under `cfg`, shrinking blocks to satisfy
@@ -794,14 +832,14 @@ mod tests {
         //   block path = (20³ + 3·10·20·20
         //                 + (3·10·20 + 10·20 + 10·20))·4 = 84 000
         //   accumulator= 3·10³·4                         = 12 000
-        //   wire (hex) = 10³·8                           =  8 000
-        //   total (materialized)                         = 132 800
-        //   total (procedural) = same − 28 800           = 104 000
+        //   wire (b64) = ⌈10³·4 / 3⌉·4 = 1 334·4         =  5 336
+        //   total (materialized)                         = 130 136
+        //   total (procedural) = same − 28 800           = 101 336
         let res = |tier| {
             MemoryPlanner::worker_residency([100, 80, 60], [10; 3], 3, [20; 3], tier)
         };
-        assert_eq!(res(MapTier::Materialized), 132_800);
-        assert_eq!(res(MapTier::Procedural), 104_000);
+        assert_eq!(res(MapTier::Materialized), 130_136);
+        assert_eq!(res(MapTier::Procedural), 101_336);
         // A worker is strictly cheaper than the coordinator's own full
         // estimate at the same shapes — the point of sharding out.
         let full = MemoryPlanner::estimate_bytes(
@@ -819,6 +857,43 @@ mod tests {
             RecoverySolverKind::Cholesky,
         );
         assert!(res(MapTier::Materialized) < full);
+    }
+
+    #[test]
+    fn warm_estimate_hand_computed_and_cheaper_than_cold() {
+        // Same shapes as the tier test: dims [100,80,60], reduced 10³,
+        // P=3, rank 4, Cholesky.  By hand:
+        //   proxies    = 3·10³·4       = 12 000
+        //   maps (mat) = 28 800
+        //   recovery   = 50 080 (mode 0, as above)
+        //   total      = 90 880
+        let warm = MemoryPlanner::warm_estimate(
+            [100, 80, 60],
+            [10; 3],
+            3,
+            4,
+            MapTier::Materialized,
+            256,
+            RecoverySolverKind::Cholesky,
+        );
+        assert_eq!(warm, 90_880);
+        // Warm admission must always price below the cold estimate at the
+        // same shapes — that headroom is what lets more warm jobs coexist.
+        let cold = MemoryPlanner::estimate_bytes(
+            [100, 80, 60],
+            [10; 3],
+            3,
+            [20; 3],
+            2,
+            4,
+            0,
+            1,
+            false,
+            MapTier::Materialized,
+            256,
+            RecoverySolverKind::Cholesky,
+        );
+        assert!(warm < cold);
     }
 
     #[test]

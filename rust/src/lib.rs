@@ -44,6 +44,7 @@ pub mod linalg;
 pub mod mixed;
 pub mod runtime;
 pub mod serve;
+pub mod store;
 pub mod tensor;
 pub mod util;
 

@@ -407,7 +407,13 @@ fn serve_cmd() -> Command {
             Some("0"),
         )
         .opt("workers", "concurrent jobs", Some("2"))
-        .opt("cache-mb", "result-cache budget in MiB", Some("64"))
+        .opt("cache-mb", "result-cache toggle in MiB (0 = off)", Some("64"))
+        .opt(
+            "store-mb",
+            "artifact-store budget in MiB (proxy sets, shard accumulators, \
+             cached factors; 0 = store off, no stage reuse)",
+            Some("256"),
+        )
         .opt(
             "starvation-rounds",
             "backfill admissions a blocked head job tolerates before the \
@@ -495,6 +501,7 @@ fn cmd_serve(prog: &str, args: &[String]) -> i32 {
                 memory_budget: m.get_usize("memory-budget-mb")? * (1 << 20),
                 workers: m.get_usize("workers")?,
                 cache_bytes: m.get_usize("cache-mb")? * (1 << 20),
+                store_bytes: m.get_usize("store-mb")? * (1 << 20),
                 starvation_rounds: m.get_u64("starvation-rounds")?,
                 max_retries: m.get_usize("max-retries")? as u32,
                 poison_threshold: m.get_usize("poison-threshold")? as u32,
@@ -611,12 +618,24 @@ fn client_cmd() -> Command {
         Some("auto"),
     )
     .opt("recovery-panel-cols", "streamed map-panel width in columns", Some("256"))
+    .opt(
+        "anchor-rows",
+        "anchor rows S (default rank+2; pin it so a rank sweep shares one \
+         Stage-1 artifact across ranks)",
+        None,
+    )
+    .opt("replicas", "replica count P (default: planner's replica rule)", None)
     .opt("seed", "random seed", Some("0"))
     .opt("poll-ms", "--wait poll interval", Some("200"))
     .switch(
         "sharded",
         "run the compression stage across connected shard-lease workers \
          (results stay bitwise identical to a solo run)",
+    )
+    .switch(
+        "no-cache",
+        "bypass the daemon's artifact store for this job: no result-cache \
+         fast path, no stage reuse, nothing published (cold-baseline runs)",
     )
     .switch("wait", "block until the submitted job is terminal")
     .switch("help", "show help")
@@ -658,11 +677,18 @@ fn cmd_client(prog: &str, args: &[String]) -> i32 {
                 };
                 let reduced = m.get_usize("reduced")?;
                 let block = m.get_usize("block")?;
-                let config = PipelineConfig::builder()
+                let mut builder = PipelineConfig::builder()
                     .reduced_dims(reduced, reduced, reduced)
                     .rank(rank)
                     .block([block, block, block])
-                    .threads(m.get_usize("threads")?)
+                    .threads(m.get_usize("threads")?);
+                if m.get("anchor-rows").is_some() {
+                    builder = builder.anchor_rows(m.get_usize("anchor-rows")?);
+                }
+                if m.get("replicas").is_some() {
+                    builder = builder.replicas(m.get_usize("replicas")?);
+                }
+                let config = builder
                     .memory_budget(m.get_usize("memory-budget-mb")? * (1 << 20))
                     .map_tier(MapTierChoice::parse(m.get("map-tier").unwrap_or("auto"))?)
                     .recovery_solver(RecoverySolver::parse(
@@ -677,6 +703,7 @@ fn cmd_client(prog: &str, args: &[String]) -> i32 {
                     priority: m.get_f64("priority")? as i64,
                     tenant: m.get("tenant").unwrap_or("").to_string(),
                     sharded: m.get_bool("sharded"),
+                    no_cache: m.get_bool("no-cache"),
                 })
             }
             "status" => Request::Status(want_id()?),

@@ -150,6 +150,7 @@ mod tests {
                 priority: 0,
                 tenant: String::new(),
                 sharded: false,
+                no_cache: false,
             },
             state: JobState::Queued,
             plan_bytes,

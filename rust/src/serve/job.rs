@@ -144,6 +144,12 @@ pub struct JobSpec {
     /// bitwise identical to a solo run.  Like `tenant`/`priority` this is
     /// execution metadata and is NOT part of the result-cache key.
     pub sharded: bool,
+    /// Bypass the artifact store entirely for this job: no result-cache
+    /// fast path, no Stage-1 proxy reuse, and nothing published for later
+    /// jobs.  The control knob for cold-baseline runs (benchmarks, the
+    /// CI control sweep) on a warm daemon.  NOT part of the cache key —
+    /// it changes policy, never the result.
+    pub no_cache: bool,
 }
 
 impl JobSpec {
@@ -159,6 +165,9 @@ impl JobSpec {
         if self.sharded {
             pairs.push(("sharded", Json::Bool(true)));
         }
+        if self.no_cache {
+            pairs.push(("no_cache", Json::Bool(true)));
+        }
         Json::obj(pairs)
     }
 
@@ -173,6 +182,7 @@ impl JobSpec {
                 .unwrap_or("")
                 .to_string(),
             sharded: v.get("sharded").and_then(|x| x.as_bool()).unwrap_or(false),
+            no_cache: v.get("no_cache").and_then(|x| x.as_bool()).unwrap_or(false),
         })
     }
 }
@@ -403,6 +413,12 @@ impl Spool {
         &self.dir
     }
 
+    /// Artifact-store root: content-addressed blobs (proxy sets, shard
+    /// accumulators, cached factors) shared across jobs and daemons.
+    pub fn store_dir(&self) -> PathBuf {
+        self.dir.join("store")
+    }
+
     /// Per-job pipeline checkpoint directory — a killed daemon's running
     /// jobs resume mid-compression from here on restart.
     pub fn checkpoint_dir(&self, id: &str) -> PathBuf {
@@ -481,6 +497,7 @@ mod tests {
             priority: 3,
             tenant: "acme".into(),
             sharded: false,
+            no_cache: false,
         }
     }
 
@@ -541,6 +558,12 @@ mod tests {
         let mut shd = rec.spec.clone();
         shd.sharded = true;
         assert!(JobSpec::from_json(&shd.to_json()).unwrap().sharded);
+        // `no_cache` follows the same implicit-default pattern.
+        assert!(spec_json.get("no_cache").is_none(), "cached stays implicit");
+        assert!(!JobSpec::from_json(&spec_json).unwrap().no_cache);
+        let mut bypass = rec.spec.clone();
+        bypass.no_cache = true;
+        assert!(JobSpec::from_json(&bypass.to_json()).unwrap().no_cache);
         assert_eq!(back.resolved_solver, Some(RecoverySolverKind::Cholesky));
         // Legacy records (no resolved_solver key) default to None.
         let mut legacy = rec.to_json();

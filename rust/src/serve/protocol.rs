@@ -26,8 +26,8 @@ use std::net::TcpStream;
 /// One replica of one shard-local accumulator, streamed back from a
 /// worker (`PARTIAL`).  Replicas are sent one per message so every line
 /// stays under [`MAX_LINE_BYTES`] for serve-sized grids; `data` is the
-/// hex-encoded little-endian `f32` bytes and `digest` their FNV-1a hash,
-/// verified by the coordinator before the payload enters the fold.
+/// base64-encoded little-endian `f32` bytes and `digest` their FNV-1a
+/// hash, verified by the coordinator before the payload enters the fold.
 #[derive(Clone, Debug)]
 pub struct PartialMsg {
     pub worker: String,
@@ -366,6 +366,7 @@ mod tests {
             priority: 1,
             tenant: "acme".into(),
             sharded: true,
+            no_cache: false,
         };
         for req in [
             Request::Submit(spec),

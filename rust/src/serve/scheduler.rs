@@ -28,12 +28,13 @@
 //! Shutdown is a graceful drain: no new admissions, running jobs complete,
 //! queued jobs stay spooled for the next start.
 
-use super::cache::{cache_key, model_digest, CachedResult, ResultCache};
+use super::cache::{cache_key, model_digest, source_fingerprint, CachedResult, ResultCache};
 use super::job::{JobId, JobOutcome, JobRecord, JobSpec, JobState, Spool};
 use super::protocol::PartialMsg;
 use super::shard::{ShardConfig, ShardRegistry};
 use crate::coordinator::{checkpoint, MemoryPlanner, Metrics, Pipeline, PipelineResult};
 use crate::cp::CpModel;
+use crate::store::{ArtifactStore, PinGuard, StageKey};
 use crate::tensor::TensorSource;
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
@@ -52,8 +53,15 @@ pub struct SchedulerConfig {
     pub memory_budget: usize,
     /// Concurrent jobs (worker threads).
     pub workers: usize,
-    /// Result-cache byte budget.
+    /// Result-cache toggle, kept as a byte count for CLI compatibility:
+    /// 0 disables caching of final factor sets; any other value enables
+    /// it.  Cached factors live in the artifact store and are bounded by
+    /// `store_bytes`, not by this knob.
     pub cache_bytes: usize,
+    /// Artifact-store byte budget (proxies + shard accumulators + cached
+    /// factors, LRU-evicted together).  0 disables the store entirely:
+    /// no stage reuse, no warm admission, no result cache persistence.
+    pub store_bytes: usize,
     /// **Anti-starvation reservation**: how many backfill admissions the
     /// head-of-queue job tolerates while it does not fit the budget.
     /// Once a blocked head has been passed over this many times, no
@@ -105,6 +113,7 @@ impl Default for SchedulerConfig {
             memory_budget: 0,
             workers: 2,
             cache_bytes: 64 << 20,
+            store_bytes: 256 << 20,
             starvation_rounds: 8,
             max_retries: 2,
             poison_threshold: 2,
@@ -150,7 +159,15 @@ struct State {
 
 struct Inner {
     spool: Spool,
+    /// Content-addressed artifact store under the spool dir: compressed
+    /// proxy sets, sharded-run accumulators, and cached factor sets.
+    store: Arc<ArtifactStore>,
     cache: ResultCache,
+    /// Store pins held for admitted warm jobs: a job priced with
+    /// [`MemoryPlanner::warm_estimate`] must find its proxy artifact
+    /// still resident when it runs, so the artifact is pinned from
+    /// admission until the job settles ([`Inner::finalize`]).
+    warm_pins: Mutex<BTreeMap<JobId, PinGuard>>,
     metrics: Arc<Metrics>,
     budget: usize,
     starvation_rounds: u64,
@@ -248,9 +265,13 @@ impl Scheduler {
         if quarantined > 0 {
             metrics.incr("jobs_quarantined", quarantined);
         }
+        let store = Arc::new(
+            ArtifactStore::open(spool.store_dir(), cfg.store_bytes, Arc::clone(&metrics))
+                .context("opening the artifact store")?,
+        );
         let inner = Arc::new(Inner {
             spool,
-            cache: ResultCache::new(cfg.cache_bytes),
+            cache: ResultCache::over(Arc::clone(&store), cfg.cache_bytes > 0),
             shards: ShardRegistry::new(
                 ShardConfig {
                     lease_timeout_ms: cfg.lease_timeout_ms,
@@ -258,7 +279,10 @@ impl Scheduler {
                     ..ShardConfig::default()
                 },
                 Arc::clone(&metrics),
-            ),
+            )
+            .with_store(Arc::clone(&store)),
+            store,
+            warm_pins: Mutex::new(BTreeMap::new()),
             metrics,
             budget: cfg.memory_budget,
             starvation_rounds: cfg.starvation_rounds,
@@ -296,6 +320,7 @@ impl Scheduler {
     /// directly — no job record is created.
     pub fn submit(&self, spec: JobSpec) -> Result<JobRecord> {
         let key = cache_key(&spec)?;
+        let source_fp = source_fingerprint(&spec.source)?;
         let dims = spec.source.dims()?;
         let mut cfg = spec.config.clone();
         // The daemon's global budget caps every per-job plan: a job either
@@ -313,6 +338,46 @@ impl Scheduler {
         cfg.checkpoint_dir = Some(self.inner.spool.checkpoint_dir("pending"));
         let plan = MemoryPlanner::plan(&cfg, dims)
             .context("admission: resolving the job's memory plan")?;
+
+        // Warm pricing: when the job's Stage-1 proxy artifact is already
+        // resident, the run will never stream a block, so admission
+        // charges only the remaining stages (proxies + maps + recovery).
+        // The artifact is pinned so LRU eviction cannot invalidate the
+        // discount between admission and the run; the pin is released
+        // when the job settles.  `refine_sweeps > 0` re-streams the
+        // input, and mixed precision takes the non-"batched" partition,
+        // so both keep the cold price.
+        let mut plan_bytes = plan.estimated_bytes;
+        let mut warm_pin: Option<PinGuard> = None;
+        if !spec.no_cache && cfg.refine_sweeps == 0 && !cfg.mixed_precision {
+            let pkey = StageKey::proxies(
+                source_fp,
+                dims,
+                cfg.reduced,
+                plan.replicas,
+                cfg.effective_anchor(),
+                cfg.seed,
+                cfg.mixed_precision,
+                plan.block,
+                "batched",
+            );
+            if let Some(pin) = self.inner.store.pin(&pkey) {
+                let warm = MemoryPlanner::warm_estimate(
+                    dims,
+                    cfg.reduced,
+                    plan.replicas,
+                    cfg.rank,
+                    plan.map_tier,
+                    cfg.recovery_panel_cols,
+                    plan.recovery_solver,
+                );
+                if warm < plan_bytes {
+                    plan_bytes = warm;
+                    warm_pin = Some(pin);
+                    self.inner.metrics.incr("admission_warm_priced", 1);
+                }
+            }
+        }
 
         // Phase 1 (locked): allocate the id and publish the record in
         // `submitted` state — visible to STATUS, not yet runnable.
@@ -334,9 +399,10 @@ impl Scheduler {
                     priority: spec.priority,
                     tenant: spec.tenant,
                     sharded: spec.sharded,
+                    no_cache: spec.no_cache,
                 },
                 state: JobState::Submitted,
-                plan_bytes: plan.estimated_bytes,
+                plan_bytes,
                 cache_key: key,
                 cancel_requested: false,
                 resolved_solver: Some(plan.recovery_solver),
@@ -348,10 +414,19 @@ impl Scheduler {
             st.records.insert(id, rec.clone());
             rec
         };
+        if let Some(pin) = warm_pin {
+            self.inner.warm_pins.lock().unwrap().insert(rec.id.clone(), pin);
+        }
 
         // Cache fast path: completes instantly, no queue involvement.
+        // `no_cache` jobs bypass it — they exist to measure cold runs.
         let mut hit_model = None;
-        if let Some(hit) = self.inner.cache.get(&rec.cache_key) {
+        let cached = if rec.spec.no_cache {
+            None
+        } else {
+            self.inner.cache.get(&rec.cache_key)
+        };
+        if let Some(hit) = cached {
             rec.state = JobState::Done;
             rec.outcome = Some(JobOutcome {
                 rel_error: hit.rel_error,
@@ -372,6 +447,8 @@ impl Scheduler {
             let mut st = self.inner.state.lock().unwrap();
             st.records.remove(&rec.id);
             self.inner.sync_gauges(&st);
+            drop(st);
+            self.inner.warm_pins.lock().unwrap().remove(&rec.id);
             return Err(e);
         }
 
@@ -455,6 +532,7 @@ impl Scheduler {
                 self.inner.metrics.incr("jobs_cancelled", 1);
                 self.inner.sync_gauges(&st);
                 drop(st);
+                self.inner.warm_pins.lock().unwrap().remove(id);
                 if let Err(e) = self.inner.spool.save(&snapshot) {
                     log::warn!("spool: persisting cancel for {id}: {e:#}");
                 }
@@ -859,19 +937,21 @@ impl Inner {
             return;
         }
         // A twin job may have finished while this one sat queued.
-        if let Some(hit) = self.cache.get(&rec.cache_key) {
-            let outcome = JobOutcome {
-                rel_error: hit.rel_error,
-                sampled_mse: hit.sampled_mse,
-                dropped_replicas: hit.dropped_replicas,
-                model_digest: hit.model_digest,
-                from_cache: true,
-            };
-            if let Err(e) = save_model(&self.spool.result_dir(id), &hit.model) {
-                log::warn!("persisting cached factors for {id}: {e:#}");
+        if !rec.spec.no_cache {
+            if let Some(hit) = self.cache.get(&rec.cache_key) {
+                let outcome = JobOutcome {
+                    rel_error: hit.rel_error,
+                    sampled_mse: hit.sampled_mse,
+                    dropped_replicas: hit.dropped_replicas,
+                    model_digest: hit.model_digest,
+                    from_cache: true,
+                };
+                if let Err(e) = save_model(&self.spool.result_dir(id), &hit.model) {
+                    log::warn!("persisting cached factors for {id}: {e:#}");
+                }
+                self.finalize(id, JobState::Done, Some(outcome), None);
+                return;
             }
-            self.finalize(id, JobState::Done, Some(outcome), None);
-            return;
         }
 
         let started = Instant::now();
@@ -886,6 +966,15 @@ impl Inner {
             }
             let src = rec.spec.source.open()?;
             let mut pipe = Pipeline::new(rec.spec.config.clone());
+            if !rec.spec.no_cache {
+                // Wire the artifact store through the pipeline's stage
+                // seams: Stage 1 is looked up before any block streams
+                // and published after the fold.
+                match source_fingerprint(&rec.spec.source) {
+                    Ok(fp) => pipe = pipe.with_store(Arc::clone(&self.store), fp),
+                    Err(e) => log::warn!("source fingerprint for {}: {e:#}", rec.id),
+                }
+            }
             let res = if rec.spec.sharded {
                 self.run_sharded(&rec, &mut pipe, src.as_ref())?
             } else {
@@ -934,16 +1023,54 @@ impl Inner {
             .clone()
             .context("sharded job has no checkpoint dir")?;
         let fp = checkpoint::default_fingerprint(&rec.spec.config, grid.dims, grid.replicas);
+        // The sharded grid carries the same (block, replicas, anchor)
+        // the solo planner resolves, so this key matches the artifact a
+        // solo run of the same spec would publish — and vice versa.
+        let proxy_key = if rec.spec.no_cache {
+            None
+        } else {
+            source_fingerprint(&rec.spec.source).ok().map(|sfp| {
+                StageKey::proxies(
+                    sfp,
+                    grid.dims,
+                    grid.reduced,
+                    grid.replicas,
+                    grid.anchor,
+                    grid.seed,
+                    rec.spec.config.mixed_precision,
+                    grid.block,
+                    &grid.path,
+                )
+            })
+        };
         let proxies = match checkpoint::load_proxies(&dir, &fp)? {
             Some(p) => p,
             None => {
-                let p = self.shards.run_sharded(
-                    &rec.id,
-                    rec.spec.source.clone(),
-                    grid,
-                    &dir,
-                    fp.clone(),
-                )?;
+                // Whole-set store hit: an earlier run of this grid left
+                // its folded proxies — skip the lease protocol entirely.
+                let resident = proxy_key
+                    .as_ref()
+                    .and_then(|k| self.store.get(k))
+                    .filter(|p| p.len() == grid.replicas);
+                let p = match resident {
+                    Some(p) => p,
+                    None => {
+                        let p = self.shards.run_sharded(
+                            &rec.id,
+                            rec.spec.source.clone(),
+                            grid,
+                            &dir,
+                            fp.clone(),
+                            proxy_key.clone(),
+                        )?;
+                        if let Some(k) = &proxy_key {
+                            if let Err(e) = self.store.publish(k, &p, &Json::Null) {
+                                log::warn!("proxy publish {} failed: {e:#}", k.id());
+                            }
+                        }
+                        p
+                    }
+                };
                 checkpoint::save_proxies(&dir, &fp, &p)?;
                 checkpoint::clear_partial(&dir)?;
                 p
@@ -978,7 +1105,12 @@ impl Inner {
                 self.finalize(id, JobState::Cancelled, None, None);
                 continue;
             }
-            if let Some(hit) = self.cache.get(&rec.cache_key) {
+            let hit = if rec.spec.no_cache {
+                None
+            } else {
+                self.cache.get(&rec.cache_key)
+            };
+            if let Some(hit) = hit {
                 let outcome = JobOutcome {
                     rel_error: hit.rel_error,
                     sampled_mse: hit.sampled_mse,
@@ -1025,7 +1157,18 @@ impl Inner {
             for (i, (_, rec)) in live.iter().enumerate() {
                 match rec.spec.source.open() {
                     Ok(s) => {
-                        pipes.push(Pipeline::new(rec.spec.config.clone()));
+                        let mut pipe = Pipeline::new(rec.spec.config.clone());
+                        if !rec.spec.no_cache {
+                            match source_fingerprint(&rec.spec.source) {
+                                Ok(fp) => {
+                                    pipe = pipe.with_store(Arc::clone(&self.store), fp);
+                                }
+                                Err(e) => {
+                                    log::warn!("source fingerprint for {}: {e:#}", rec.id);
+                                }
+                            }
+                        }
+                        pipes.push(pipe);
                         srcs.push(s);
                         swept.push(i);
                     }
@@ -1111,9 +1254,12 @@ impl Inner {
     ) {
         match run {
             Ok((model, outcome)) => {
-                let cancelled = {
+                let (cancelled, no_cache) = {
                     let st = self.state.lock().unwrap();
-                    st.cancel_requested.contains(id)
+                    (
+                        st.cancel_requested.contains(id),
+                        st.records.get(id).is_some_and(|r| r.spec.no_cache),
+                    )
                 };
                 if cancelled {
                     checkpoint::clear(self.spool.checkpoint_dir(id)).ok();
@@ -1123,16 +1269,18 @@ impl Inner {
                 if let Err(e) = save_model(&self.spool.result_dir(id), &model) {
                     log::warn!("persisting result factors for {id}: {e:#}");
                 }
-                self.cache.insert(
-                    cache_key.to_string(),
-                    CachedResult {
-                        model: Arc::new(model),
-                        rel_error: outcome.rel_error,
-                        sampled_mse: outcome.sampled_mse,
-                        dropped_replicas: outcome.dropped_replicas,
-                        model_digest: outcome.model_digest,
-                    },
-                );
+                if !no_cache {
+                    self.cache.insert(
+                        cache_key.to_string(),
+                        CachedResult {
+                            model: Arc::new(model),
+                            rel_error: outcome.rel_error,
+                            sampled_mse: outcome.sampled_mse,
+                            dropped_replicas: outcome.dropped_replicas,
+                            model_digest: outcome.model_digest,
+                        },
+                    );
+                }
                 // The job is complete: its pipeline checkpoints are dead
                 // weight (the spooled factors are the durable artifact).
                 checkpoint::clear(self.spool.checkpoint_dir(id)).ok();
@@ -1267,6 +1415,10 @@ impl Inner {
             self.sync_gauges(&st);
             snap
         };
+        // A warm-priced job's proxy pin is released once the job settles
+        // (whatever the terminal state): the artifact returns to plain
+        // LRU standing.
+        self.warm_pins.lock().unwrap().remove(id);
         // Off-lock persistence: the in-memory record is authoritative.  A
         // crash between the transition and this write re-runs the job on
         // restart — idempotent, and usually a cache hit.
@@ -1342,6 +1494,7 @@ mod tests {
             priority,
             tenant: String::new(),
             sharded: false,
+            no_cache: false,
         }
     }
 
@@ -1361,6 +1514,7 @@ mod tests {
             priority,
             tenant: String::new(),
             sharded: false,
+            no_cache: false,
         }
     }
 

@@ -21,7 +21,7 @@
 //! absorb.
 
 use super::protocol::{self, PartialMsg, Request};
-use super::shard::{encode_f32_hex, payload_digest, LeaseGrant};
+use super::shard::{encode_f32_b64, payload_digest, LeaseGrant};
 use crate::compress::{compress_shard_batched, MapSource};
 use crate::util::fault::{should_fault_keyed, Site};
 use crate::util::threadpool::ThreadPool;
@@ -122,7 +122,7 @@ fn serve_lease(cfg: &WorkerConfig, grant: &LeaseGrant) -> Result<u64> {
                 lease: grant.lease,
                 shard: s,
                 replica,
-                data: encode_f32_hex(t.data()),
+                data: encode_f32_b64(t.data()),
                 digest: payload_digest(t.data()),
             };
             let resp = protocol::call_ok(&cfg.addr, &Request::Partial(msg))?;

@@ -1,0 +1,225 @@
+//! On-disk blob format + atomic publish for the artifact store.
+//!
+//! A blob is self-describing:
+//!
+//! ```text
+//! EXBLOB1\n
+//! {"class":"proxies","key":"<16hex>","digest":"<16hex>","tensors":N,"meta":{…}}\n
+//! <payload: per tensor, 3 × u64-LE dims then l·m·n × f32-LE>
+//! ```
+//!
+//! `digest` is FNV-1a over the payload bytes exactly as written, so a
+//! torn write, a flipped bit, or a foreign file under the right name is
+//! detected on read — the store quarantines such blobs and reports a
+//! miss, and the pipeline recomputes (the bitwise-reuse contract would
+//! otherwise be silently broken).
+//!
+//! Publish is write-to-temp + `rename` onto the final path: readers only
+//! ever observe complete blobs, and two publishers racing on one key
+//! both succeed — the last rename wins and the loser's identical bytes
+//! are simply replaced.
+
+use super::key::StageKey;
+use crate::tensor::DenseTensor;
+use crate::util::hash::Fnv;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::io::{BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &str = "EXBLOB1";
+
+fn payload_bytes(tensors: &[DenseTensor]) -> Vec<u8> {
+    let total: usize = tensors.iter().map(|t| 24 + t.data().len() * 4).sum();
+    let mut out = Vec::with_capacity(total);
+    for t in tensors {
+        for d in t.dims() {
+            out.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        for v in t.data() {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    out
+}
+
+fn digest(payload: &[u8]) -> u64 {
+    let mut h = Fnv::new();
+    h.write(payload);
+    h.finish()
+}
+
+/// Serializes `tensors` (+ free-form `meta`) into `tmp`, then atomically
+/// renames it onto `path`.  Returns the published byte size.
+pub fn publish_blob(
+    tmp: &Path,
+    path: &Path,
+    key: &StageKey,
+    tensors: &[DenseTensor],
+    meta: &Json,
+) -> Result<u64> {
+    let payload = payload_bytes(tensors);
+    let header = Json::obj(vec![
+        ("class", Json::str(key.class.dir_name())),
+        ("key", Json::str(key.hash.clone())),
+        ("digest", Json::str(format!("{:016x}", digest(&payload)))),
+        ("tensors", Json::num(tensors.len() as f64)),
+        ("meta", meta.clone()),
+    ]);
+    let mut bytes = 0u64;
+    {
+        let f = std::fs::File::create(tmp)
+            .with_context(|| format!("creating blob temp {}", tmp.display()))?;
+        let mut w = BufWriter::new(f);
+        let head = format!("{MAGIC}\n{}\n", header.to_string_compact());
+        w.write_all(head.as_bytes()).context("writing blob header")?;
+        w.write_all(&payload).context("writing blob payload")?;
+        bytes += head.len() as u64 + payload.len() as u64;
+        w.flush().context("flushing blob")?;
+    }
+    std::fs::rename(tmp, path)
+        .with_context(|| format!("publishing blob {}", path.display()))?;
+    Ok(bytes)
+}
+
+/// Reads and fully verifies a blob: magic, class, key, and payload
+/// digest.  Any mismatch is an error — the caller treats it as
+/// corruption, quarantines the file, and recomputes.
+pub fn read_blob(path: &Path, key: &StageKey) -> Result<(Vec<DenseTensor>, Json)> {
+    let mut raw = Vec::new();
+    std::fs::File::open(path)
+        .and_then(|mut f| f.read_to_end(&mut raw))
+        .with_context(|| format!("reading blob {}", path.display()))?;
+    let magic_end = MAGIC.len();
+    if raw.len() < magic_end + 1 || &raw[..magic_end] != MAGIC.as_bytes() || raw[magic_end] != b'\n'
+    {
+        bail!("blob {}: bad magic", path.display());
+    }
+    let header_end = raw[magic_end + 1..]
+        .iter()
+        .position(|&b| b == b'\n')
+        .map(|p| magic_end + 1 + p)
+        .with_context(|| format!("blob {}: truncated header", path.display()))?;
+    let header_text = std::str::from_utf8(&raw[magic_end + 1..header_end])
+        .with_context(|| format!("blob {}: non-UTF8 header", path.display()))?;
+    let header = Json::parse(header_text)
+        .with_context(|| format!("blob {}: unparseable header", path.display()))?;
+    let claim = |k: &str| -> Result<String> {
+        Ok(header
+            .get(k)
+            .and_then(|x| x.as_str())
+            .with_context(|| format!("blob header missing {k}"))?
+            .to_string())
+    };
+    if claim("class")? != key.class.dir_name() || claim("key")? != key.hash {
+        bail!("blob {}: addressed as {} but claims another key", path.display(), key.id());
+    }
+    let want = u64::from_str_radix(&claim("digest")?, 16).context("blob header digest")?;
+    let payload = &raw[header_end + 1..];
+    if digest(payload) != want {
+        bail!("blob {}: payload digest mismatch", path.display());
+    }
+    let count = header
+        .get("tensors")
+        .and_then(|x| x.as_usize())
+        .context("blob header missing tensors")?;
+    let meta = header.get("meta").cloned().unwrap_or(Json::Null);
+    let mut tensors = Vec::with_capacity(count);
+    let mut off = 0usize;
+    for _ in 0..count {
+        if payload.len() < off + 24 {
+            bail!("blob {}: truncated tensor dims", path.display());
+        }
+        let mut dims = [0usize; 3];
+        for d in dims.iter_mut() {
+            let mut le = [0u8; 8];
+            le.copy_from_slice(&payload[off..off + 8]);
+            *d = u64::from_le_bytes(le) as usize;
+            off += 8;
+        }
+        let n = dims[0]
+            .checked_mul(dims[1])
+            .and_then(|x| x.checked_mul(dims[2]))
+            .context("blob tensor dims overflow")?;
+        if payload.len() < off + n * 4 {
+            bail!("blob {}: truncated tensor payload", path.display());
+        }
+        let mut data = Vec::with_capacity(n);
+        for ch in payload[off..off + n * 4].chunks_exact(4) {
+            data.push(f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]));
+        }
+        off += n * 4;
+        tensors.push(DenseTensor::from_vec(dims, data));
+    }
+    if off != payload.len() {
+        bail!("blob {}: {} trailing payload bytes", path.display(), payload.len() - off);
+    }
+    Ok((tensors, meta))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("exatensor_blob_{name}_{}", std::process::id()));
+        std::fs::remove_dir_all(&p).ok();
+        std::fs::create_dir_all(&p).unwrap();
+        p
+    }
+
+    fn key() -> StageKey {
+        StageKey::proxies(1, [4, 4, 4], [2, 2, 2], 2, 2, 0, false, [2, 2, 2], "batched")
+    }
+
+    fn tensors() -> Vec<DenseTensor> {
+        vec![
+            DenseTensor::from_vec([2, 2, 2], vec![1.0, -0.0, 2.5, -3.0, 1e-30, 4.0, 5.0, 6.0]),
+            DenseTensor::from_vec([1, 2, 3], vec![0.5; 6]),
+        ]
+    }
+
+    #[test]
+    fn round_trips_bitwise_with_meta() {
+        let dir = tmpdir("roundtrip");
+        let k = key();
+        let meta = Json::obj(vec![("rel_error", Json::num(0.25))]);
+        let path = dir.join("x.blob");
+        publish_blob(&dir.join("x.tmp"), &path, &k, &tensors(), &meta).unwrap();
+        let (back, m) = read_blob(&path, &k).unwrap();
+        assert_eq!(back.len(), 2);
+        for (a, b) in tensors().iter().zip(&back) {
+            assert_eq!(a.dims(), b.dims());
+            for (x, y) in a.data().iter().zip(b.data()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "payload must round-trip bitwise");
+            }
+        }
+        assert_eq!(m.get("rel_error").and_then(|x| x.as_f64()), Some(0.25));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corruption_and_wrong_key_are_loud() {
+        let dir = tmpdir("corrupt");
+        let k = key();
+        let path = dir.join("x.blob");
+        publish_blob(&dir.join("x.tmp"), &path, &k, &tensors(), &Json::Null).unwrap();
+        // A flipped payload byte fails the digest.
+        let mut raw = std::fs::read(&path).unwrap();
+        let last = raw.len() - 1;
+        raw[last] ^= 0x40;
+        std::fs::write(&path, &raw).unwrap();
+        assert!(read_blob(&path, &k).is_err(), "bit flip must be detected");
+        // Reading under the wrong key fails even with intact bytes.
+        publish_blob(&dir.join("x.tmp"), &path, &k, &tensors(), &Json::Null).unwrap();
+        let other = StageKey::shard_accum(&k, 0, 0);
+        assert!(read_blob(&path, &other).is_err(), "key mismatch must be detected");
+        // Truncation fails.
+        let raw = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &raw[..raw.len() - 2]).unwrap();
+        assert!(read_blob(&path, &k).is_err(), "truncation must be detected");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

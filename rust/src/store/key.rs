@@ -1,0 +1,176 @@
+//! Typed stage keys for the artifact store.
+//!
+//! Salsa-style: an artifact is addressed by the FNV-1a digest of *(input
+//! digest, stage-config subset)* — only the fields that can change the
+//! artifact's bits enter the key.  Execution-only knobs (threads, I/O
+//! depth, map tier, recovery solver, …) are excluded by construction, so
+//! a resubmit that differs only in how the work executes lands on the
+//! same artifact.
+//!
+//! Three classes exist:
+//!
+//! * [`ArtifactClass::Proxies`] — a compressed proxy set (Stage 1 output).
+//!   Keyed by the source fingerprint plus everything that shapes the
+//!   compression sum: dims, reduced dims, replica count, anchor rows, map
+//!   seed, precision, the block grid (the fold order of float addition),
+//!   and the compressor path.  **Rank is deliberately absent** — rank only
+//!   enters the proxy ALS, so a rank sweep shares one proxy artifact.
+//! * [`ArtifactClass::ShardAccum`] — one replica of one raw shard
+//!   accumulator from the sharded plane, keyed by the owning proxy key
+//!   plus (shard, replica).
+//! * [`ArtifactClass::Factors`] — a final factor set, keyed by the serve
+//!   plane's whole-job cache key (`serve::cache::cache_key`).
+
+use crate::util::hash::Fnv;
+
+/// Which kind of artifact a key addresses.  Each class lives in its own
+/// subdirectory of the store root so digests can never collide across
+/// classes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactClass {
+    Proxies,
+    ShardAccum,
+    Factors,
+}
+
+impl ArtifactClass {
+    pub fn dir_name(&self) -> &'static str {
+        match self {
+            ArtifactClass::Proxies => "proxies",
+            ArtifactClass::ShardAccum => "shards",
+            ArtifactClass::Factors => "factors",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ArtifactClass> {
+        Some(match s {
+            "proxies" => ArtifactClass::Proxies,
+            "shards" => ArtifactClass::ShardAccum,
+            "factors" => ArtifactClass::Factors,
+            _ => None,
+        })
+    }
+}
+
+/// A fully derived store address: class + 16-hex content key.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct StageKey {
+    pub class: ArtifactClass,
+    pub hash: String,
+}
+
+impl StageKey {
+    /// The index/display form, e.g. `proxies/0123456789abcdef`.
+    pub fn id(&self) -> String {
+        format!("{}/{}", self.class.dir_name(), self.hash)
+    }
+
+    /// Key for a compressed proxy set.  `path` is the pipeline's
+    /// compressor partition tag (`"batched"`, `"plain:<name>"`): two
+    /// compressors may sum blocks in different orders, so their proxies
+    /// are distinct artifacts even on the same input.
+    #[allow(clippy::too_many_arguments)]
+    pub fn proxies(
+        source_fp: u64,
+        dims: [usize; 3],
+        reduced: [usize; 3],
+        replicas: usize,
+        anchor: usize,
+        seed: u64,
+        mixed_precision: bool,
+        block: [usize; 3],
+        path: &str,
+    ) -> StageKey {
+        let mut h = Fnv::new();
+        h.write(b"proxies-v1");
+        h.write_u64(source_fp);
+        for d in dims.iter().chain(&reduced).chain(&block) {
+            h.write_u64(*d as u64);
+        }
+        h.write_u64(replicas as u64);
+        h.write_u64(anchor as u64);
+        h.write_u64(seed);
+        h.write_u64(mixed_precision as u64);
+        h.write(path.as_bytes());
+        StageKey {
+            class: ArtifactClass::Proxies,
+            hash: format!("{:016x}", h.finish()),
+        }
+    }
+
+    /// Key for one replica of one raw shard accumulator.  Derived from
+    /// the owning proxy key so every compression-shaping field is
+    /// inherited for free.
+    pub fn shard_accum(proxy: &StageKey, shard: usize, replica: usize) -> StageKey {
+        debug_assert_eq!(proxy.class, ArtifactClass::Proxies);
+        let mut h = Fnv::new();
+        h.write(b"shard-v1");
+        h.write(proxy.hash.as_bytes());
+        h.write_u64(shard as u64);
+        h.write_u64(replica as u64);
+        StageKey {
+            class: ArtifactClass::ShardAccum,
+            hash: format!("{:016x}", h.finish()),
+        }
+    }
+
+    /// Key for a final factor set — the serve plane's whole-job cache key
+    /// verbatim (already a 16-hex FNV digest over source + result-relevant
+    /// config).
+    pub fn factors(cache_key: &str) -> StageKey {
+        StageKey {
+            class: ArtifactClass::Factors,
+            hash: cache_key.to_string(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> StageKey {
+        StageKey::proxies(7, [40, 40, 40], [8, 8, 8], 5, 6, 3, false, [16, 16, 16], "batched")
+    }
+
+    #[test]
+    fn proxy_key_ignores_nothing_it_hashes() {
+        let k = base();
+        assert_eq!(k, base(), "derivation is deterministic");
+        // Every hashed field must split the key.
+        let variants = [
+            StageKey::proxies(8, [40, 40, 40], [8, 8, 8], 5, 6, 3, false, [16, 16, 16], "batched"),
+            StageKey::proxies(7, [41, 40, 40], [8, 8, 8], 5, 6, 3, false, [16, 16, 16], "batched"),
+            StageKey::proxies(7, [40, 40, 40], [9, 8, 8], 5, 6, 3, false, [16, 16, 16], "batched"),
+            StageKey::proxies(7, [40, 40, 40], [8, 8, 8], 6, 6, 3, false, [16, 16, 16], "batched"),
+            StageKey::proxies(7, [40, 40, 40], [8, 8, 8], 5, 7, 3, false, [16, 16, 16], "batched"),
+            StageKey::proxies(7, [40, 40, 40], [8, 8, 8], 5, 6, 4, false, [16, 16, 16], "batched"),
+            StageKey::proxies(7, [40, 40, 40], [8, 8, 8], 5, 6, 3, true, [16, 16, 16], "batched"),
+            StageKey::proxies(7, [40, 40, 40], [8, 8, 8], 5, 6, 3, false, [8, 16, 16], "batched"),
+            StageKey::proxies(7, [40, 40, 40], [8, 8, 8], 5, 6, 3, false, [16, 16, 16], "plain:x"),
+        ];
+        for (i, v) in variants.iter().enumerate() {
+            assert_ne!(&k, v, "variant {i} must change the key");
+        }
+    }
+
+    #[test]
+    fn shard_keys_are_distinct_per_slot() {
+        let p = base();
+        let a = StageKey::shard_accum(&p, 0, 0);
+        assert_eq!(a.class, ArtifactClass::ShardAccum);
+        assert_ne!(a, StageKey::shard_accum(&p, 1, 0));
+        assert_ne!(a, StageKey::shard_accum(&p, 0, 1));
+        assert_eq!(a, StageKey::shard_accum(&p, 0, 0));
+    }
+
+    #[test]
+    fn ids_namespace_by_class() {
+        let p = base();
+        assert!(p.id().starts_with("proxies/"));
+        assert!(StageKey::factors(&p.hash).id().starts_with("factors/"));
+        assert_ne!(p.id(), StageKey::factors(&p.hash).id());
+        assert_eq!(ArtifactClass::parse("shards"), Some(ArtifactClass::ShardAccum));
+        assert_eq!(ArtifactClass::parse("bogus"), None);
+    }
+}

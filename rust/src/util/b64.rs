@@ -1,0 +1,123 @@
+//! Standard base64 (RFC 4648, with `=` padding), hand-rolled because the
+//! build environment is offline (see `util/mod.rs`).  Used for the
+//! sharded plane's `PARTIAL` payloads: base64 costs 4 bytes per 3 input
+//! bytes where the old hex codec cost 2 per 1 — a 1.5× wire-byte saving
+//! on every shard accumulator crossing the serve protocol.
+
+use anyhow::{bail, Result};
+
+const ALPHABET: &[u8; 64] = b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
+
+/// Encodes `data` as standard padded base64.
+pub fn encode(data: &[u8]) -> String {
+    let mut out = String::with_capacity(data.len().div_ceil(3) * 4);
+    let mut chunks = data.chunks_exact(3);
+    for c in &mut chunks {
+        let v = ((c[0] as u32) << 16) | ((c[1] as u32) << 8) | c[2] as u32;
+        out.push(ALPHABET[(v >> 18) as usize & 63] as char);
+        out.push(ALPHABET[(v >> 12) as usize & 63] as char);
+        out.push(ALPHABET[(v >> 6) as usize & 63] as char);
+        out.push(ALPHABET[v as usize & 63] as char);
+    }
+    match chunks.remainder() {
+        [] => {}
+        [a] => {
+            let v = (*a as u32) << 16;
+            out.push(ALPHABET[(v >> 18) as usize & 63] as char);
+            out.push(ALPHABET[(v >> 12) as usize & 63] as char);
+            out.push('=');
+            out.push('=');
+        }
+        [a, b] => {
+            let v = ((*a as u32) << 16) | ((*b as u32) << 8);
+            out.push(ALPHABET[(v >> 18) as usize & 63] as char);
+            out.push(ALPHABET[(v >> 12) as usize & 63] as char);
+            out.push(ALPHABET[(v >> 6) as usize & 63] as char);
+            out.push('=');
+        }
+        _ => unreachable!("chunks_exact(3) remainder is < 3"),
+    }
+    out
+}
+
+fn sextet(c: u8) -> Result<u32> {
+    Ok(match c {
+        b'A'..=b'Z' => (c - b'A') as u32,
+        b'a'..=b'z' => (c - b'a' + 26) as u32,
+        b'0'..=b'9' => (c - b'0' + 52) as u32,
+        b'+' => 62,
+        b'/' => 63,
+        _ => bail!("invalid base64 byte {c:#04x}"),
+    })
+}
+
+/// Inverse of [`encode`].  Rejects unpadded, mis-padded, and non-alphabet
+/// input loudly — a truncated wire payload must fail, not silently decode
+/// to a short accumulator.
+pub fn decode(s: &str) -> Result<Vec<u8>> {
+    let bytes = s.as_bytes();
+    if bytes.len() % 4 != 0 {
+        bail!("base64 length {} is not a multiple of 4", bytes.len());
+    }
+    let mut out = Vec::with_capacity(bytes.len() / 4 * 3);
+    for (i, q) in bytes.chunks_exact(4).enumerate() {
+        let last = (i + 1) * 4 == bytes.len();
+        let pad = q.iter().filter(|&&c| c == b'=').count();
+        if pad > 2 || (!last && pad > 0) || (pad >= 1 && q[3] != b'=') || (pad == 2 && q[2] != b'=')
+        {
+            bail!("malformed base64 padding");
+        }
+        let v = (sextet(q[0])? << 18)
+            | (sextet(q[1])? << 12)
+            | (if pad == 2 { 0 } else { sextet(q[2])? << 6 })
+            | (if pad >= 1 { 0 } else { sextet(q[3])? });
+        out.push((v >> 16) as u8);
+        if pad < 2 {
+            out.push((v >> 8) as u8);
+        }
+        if pad < 1 {
+            out.push(v as u8);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rfc4648_vectors() {
+        // The canonical test vectors from RFC 4648 §10.
+        for (plain, enc) in [
+            ("", ""),
+            ("f", "Zg=="),
+            ("fo", "Zm8="),
+            ("foo", "Zm9v"),
+            ("foob", "Zm9vYg=="),
+            ("fooba", "Zm9vYmE="),
+            ("foobar", "Zm9vYmFy"),
+        ] {
+            assert_eq!(encode(plain.as_bytes()), enc);
+            assert_eq!(decode(enc).unwrap(), plain.as_bytes());
+        }
+    }
+
+    #[test]
+    fn round_trips_all_byte_values() {
+        let data: Vec<u8> = (0..=255u8).collect();
+        for len in [0, 1, 2, 3, 4, 100, 255, 256] {
+            let slice = &data[..len.min(data.len())];
+            assert_eq!(decode(&encode(slice)).unwrap(), slice, "len {len}");
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_input() {
+        assert!(decode("Zg=").is_err(), "length not a multiple of 4");
+        assert!(decode("Z===").is_err(), "three pad chars");
+        assert!(decode("Zg==Zm8=").is_err(), "padding mid-stream");
+        assert!(decode("Zm 9").is_err(), "non-alphabet byte");
+        assert!(decode("=m9v").is_err(), "pad in the wrong slot");
+    }
+}

@@ -7,6 +7,7 @@
 //! implementation — see DESIGN.md "Offline-crate substitutions".
 
 pub mod alloc;
+pub mod b64;
 pub mod cli;
 pub mod f16;
 pub mod fault;

@@ -392,6 +392,7 @@ fn spec(seed: u64) -> JobSpec {
         priority: 0,
         tenant: String::new(),
         sharded: false,
+        no_cache: false,
     }
 }
 

@@ -39,6 +39,7 @@ fn spec(seed: u64) -> JobSpec {
         priority: 0,
         tenant: String::new(),
         sharded: false,
+        no_cache: false,
     }
 }
 
@@ -262,6 +263,7 @@ fn daemon_restart_recovers_spool_and_resumes_bitwise() {
             priority: 0,
             tenant: String::new(),
             sharded: false,
+            no_cache: false,
         },
         state: JobState::Running,
         plan_bytes: plan.estimated_bytes,

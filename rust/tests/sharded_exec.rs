@@ -54,6 +54,7 @@ fn spec(seed: u64, sharded: bool) -> JobSpec {
         priority: 0,
         tenant: String::new(),
         sharded,
+        no_cache: false,
     }
 }
 

@@ -1,0 +1,230 @@
+//! Integration tests for the content-addressed artifact store: a rank
+//! sweep over one source runs Stage 1 exactly once (the proxy key
+//! deliberately excludes rank), reused runs are bitwise identical to
+//! cold ones, `no_cache` bypasses both the result cache and the store,
+//! and artifacts survive a daemon restart because the store lives in
+//! the spool.
+
+use exascale_tensor::coordinator::PipelineConfig;
+use exascale_tensor::serve::{
+    protocol, JobRecord, JobSource, JobSpec, JobState, Request, SchedulerConfig, Server,
+    ServerConfig,
+};
+use std::time::{Duration, Instant};
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("exatensor_store_{name}_{}", std::process::id()));
+    std::fs::remove_dir_all(&p).ok();
+    p
+}
+
+/// One member of the rank sweep.  Everything the proxy stage key hashes
+/// — source, reduced dims, replicas, anchor, map seed, block — is held
+/// identical across members; only `rank` (and with it the ALS solve)
+/// varies.  The anchor must be pinned explicitly: its default derives
+/// from rank, which would silently split the sweep across three keys.
+/// Replicas stay unpinned — the planner derives them from dims, reduced
+/// and anchor alone, all constant here.
+fn sweep_spec(rank: usize, als_iters: usize, no_cache: bool) -> JobSpec {
+    JobSpec {
+        source: JobSource::Synthetic { size: 24, rank: 2, noise: 0.0, seed: 77 },
+        config: PipelineConfig::builder()
+            .reduced_dims(8, 8, 8)
+            .rank(rank)
+            .anchor_rows(6)
+            .block([8, 8, 8])
+            .als(als_iters, 1e-10)
+            .threads(2)
+            .seed(7)
+            .build()
+            .unwrap(),
+        priority: 0,
+        tenant: String::new(),
+        sharded: false,
+        no_cache,
+    }
+}
+
+fn start_server(
+    spool: &std::path::Path,
+    sched: SchedulerConfig,
+) -> (String, std::thread::JoinHandle<anyhow::Result<()>>) {
+    let server = Server::bind(&ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        spool_dir: spool.to_path_buf(),
+        scheduler: sched,
+        conn_timeout_ms: 60_000,
+        max_conns: 0,
+    })
+    .unwrap();
+    let addr = server.local_addr().to_string();
+    let handle = std::thread::spawn(move || server.run());
+    (addr, handle)
+}
+
+fn submit(addr: &str, spec: &JobSpec) -> JobRecord {
+    let resp = protocol::call_ok(addr, &Request::Submit(spec.clone())).unwrap();
+    JobRecord::from_json(resp.get("job").unwrap()).unwrap()
+}
+
+fn wait_terminal(addr: &str, id: &str, timeout: Duration) -> JobRecord {
+    let start = Instant::now();
+    loop {
+        let resp = protocol::call_ok(addr, &Request::Status(id.to_string())).unwrap();
+        let rec = JobRecord::from_json(resp.get("job").unwrap()).unwrap();
+        if rec.state.is_terminal() {
+            return rec;
+        }
+        assert!(start.elapsed() < timeout, "timed out waiting for {id}");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+fn run_to_done(addr: &str, spec: &JobSpec) -> JobRecord {
+    let rec = submit(addr, spec);
+    let done = wait_terminal(addr, &rec.id, Duration::from_secs(300));
+    assert_eq!(done.state, JobState::Done, "job {}: {:?}", rec.id, done.error);
+    done
+}
+
+fn metric(addr: &str, key: &str) -> u64 {
+    let resp = protocol::call_ok(addr, &Request::Metrics).unwrap();
+    resp.get("metrics")
+        .and_then(|m| m.get(key))
+        .and_then(|v| v.as_f64())
+        .unwrap_or(0.0) as u64
+}
+
+/// The headline acceptance check: a 3-rank sweep over one source runs
+/// Stage 1 once.  Cold truth comes from `no_cache` runs of the same
+/// specs on the same daemon (they neither read nor write the store), so
+/// every store-reused digest has a storeless twin to match bitwise.
+#[test]
+fn rank_sweep_runs_stage1_once_and_matches_cold_digests() {
+    let dir = tmpdir("sweep");
+    let (addr, handle) = start_server(
+        &dir,
+        SchedulerConfig { cache_bytes: 64 << 20, ..Default::default() },
+    );
+
+    // Cold control first: the store must stay untouched.
+    let mut cold = std::collections::BTreeMap::new();
+    for rank in [2usize, 3, 4] {
+        let done = run_to_done(&addr, &sweep_spec(rank, 120, true));
+        cold.insert(rank, done.outcome.unwrap().model_digest);
+    }
+    assert_eq!(metric(&addr, "store_publishes"), 0, "no_cache must not publish");
+    assert_eq!(metric(&addr, "store_hits_compress"), 0, "no_cache must not read");
+    assert_ne!(cold[&2], cold[&3], "different ranks ⇒ different models");
+
+    // The sweep proper.  Rank 2 streams and publishes; ranks 3 and 4
+    // must fetch the resident proxy set instead of streaming.
+    let first = run_to_done(&addr, &sweep_spec(2, 120, false));
+    assert!(!first.outcome.as_ref().unwrap().from_cache);
+    let streamed_after_first = metric(&addr, "blocks_streamed");
+    assert!(streamed_after_first > 0, "the first cached run streams");
+    assert!(metric(&addr, "store_publishes") >= 1, "stage 1 must be published");
+
+    let mut warm = std::collections::BTreeMap::new();
+    warm.insert(2, first.outcome.unwrap().model_digest);
+    for rank in [3usize, 4] {
+        let done = run_to_done(&addr, &sweep_spec(rank, 120, false));
+        let o = done.outcome.unwrap();
+        assert!(!o.from_cache, "rank {rank}: stage reuse is not a result-cache hit");
+        warm.insert(rank, o.model_digest);
+    }
+    assert_eq!(
+        metric(&addr, "store_hits_compress"),
+        2,
+        "ranks 3 and 4 must both reuse the rank-2 proxy artifact"
+    );
+    assert_eq!(
+        metric(&addr, "blocks_streamed"),
+        streamed_after_first,
+        "stage 1 ran once: no block streams after the first sweep member"
+    );
+    for rank in [2usize, 3, 4] {
+        assert_eq!(warm[&rank], cold[&rank], "rank {rank}: reuse must be bitwise invisible");
+    }
+
+    protocol::call_ok(&addr, &Request::Shutdown).unwrap();
+    handle.join().unwrap().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `no_cache` also defeats the result cache: an identical resubmission
+/// with the flag recomputes (same digest, fresh run), while one without
+/// it is served from the store-backed factor blobs at submit time.
+#[test]
+fn no_cache_resubmission_recomputes_while_cached_twin_hits() {
+    let dir = tmpdir("nocache");
+    let (addr, handle) = start_server(
+        &dir,
+        SchedulerConfig { cache_bytes: 64 << 20, ..Default::default() },
+    );
+
+    let first = run_to_done(&addr, &sweep_spec(2, 120, false));
+    let digest = first.outcome.unwrap().model_digest;
+    let streamed = metric(&addr, "blocks_streamed");
+
+    // Cached twin: terminal at submit, no new work.
+    let rec = submit(&addr, &sweep_spec(2, 120, false));
+    assert_eq!(rec.state, JobState::Done, "identical resubmission hits the cache");
+    let o = rec.outcome.unwrap();
+    assert!(o.from_cache);
+    assert_eq!(o.model_digest, digest);
+    assert_eq!(metric(&addr, "blocks_streamed"), streamed);
+
+    // `no_cache` twin: recomputes end to end — not a cache hit, not a
+    // store hit, streams its own blocks — yet lands on the same bits.
+    let hits_before = metric(&addr, "store_hits_compress");
+    let done = run_to_done(&addr, &sweep_spec(2, 120, true));
+    let o = done.outcome.unwrap();
+    assert!(!o.from_cache, "no_cache must bypass the result cache");
+    assert_eq!(metric(&addr, "store_hits_compress"), hits_before, "and the store");
+    assert!(metric(&addr, "blocks_streamed") > streamed, "it streams for itself");
+    assert_eq!(o.model_digest, digest, "determinism: same bits either way");
+
+    protocol::call_ok(&addr, &Request::Shutdown).unwrap();
+    handle.join().unwrap().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Artifacts outlive the daemon: a restart on the same spool serves
+/// Stage 1 from disk for a job whose *result* was never cached (its ALS
+/// budget differs, so its cache key is fresh while its proxy key is
+/// shared).  Stage-level reuse is strictly finer than result-level.
+#[test]
+fn store_survives_daemon_restart_and_outlives_the_result_cache() {
+    let dir = tmpdir("restart");
+    {
+        let (addr, handle) = start_server(
+            &dir,
+            SchedulerConfig { cache_bytes: 64 << 20, ..Default::default() },
+        );
+        run_to_done(&addr, &sweep_spec(2, 120, false));
+        assert!(metric(&addr, "store_publishes") >= 1);
+        protocol::call_ok(&addr, &Request::Shutdown).unwrap();
+        handle.join().unwrap().unwrap();
+    }
+
+    let (addr, handle) = start_server(
+        &dir,
+        SchedulerConfig { cache_bytes: 64 << 20, ..Default::default() },
+    );
+    // Fresh registry on the restarted daemon: any streaming would show.
+    assert_eq!(metric(&addr, "blocks_streamed"), 0);
+    // Same proxy key (ALS iteration cap is not a Stage-1 input), fresh
+    // cache key (it *is* a result input): store hit, cache miss.
+    let done = run_to_done(&addr, &sweep_spec(3, 110, false));
+    let o = done.outcome.unwrap();
+    assert!(!o.from_cache);
+    assert_eq!(metric(&addr, "store_hits_compress"), 1, "proxies served from disk");
+    assert_eq!(metric(&addr, "blocks_streamed"), 0, "no source block ever streamed");
+    assert!(o.rel_error < 0.05, "rel {}", o.rel_error);
+
+    protocol::call_ok(&addr, &Request::Shutdown).unwrap();
+    handle.join().unwrap().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
